@@ -1,0 +1,93 @@
+//! END-TO-END DRIVER — the paper's §IV scalability study on real data.
+//!
+//! This is the repo's full-stack validation (EXPERIMENTS.md records a
+//! run): all three layers compose on a real workload.
+//!
+//! 1. generate a real dataset: MATLIST files of square matrices, the
+//!    exact workload of §IV ("a MATLAB code that reads in a list of
+//!    square matrices and multiplies the matrices");
+//! 2. run REAL map-reduce jobs through the LLMapReduce pipeline on the
+//!    local engine — every file goes PPM-style through the AOT-compiled
+//!    `matmul_chain` XLA artifact (L2 JAX + L1 Pallas), with the
+//!    Frobenius-sum reducer;
+//! 3. measure BLOCK vs MIMO for the headline speed-up, calibrate the
+//!    cost model from the same run, and produce the Fig 18/19 sweep on
+//!    the calibrated simulator (this container has one core; the paper's
+//!    cluster had hundreds — DESIGN.md §3).
+//!
+//! ```text
+//! make artifacts && cargo run --release --example matmul_scaling [nfiles]
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use llmapreduce::bench::experiments::{block_vs_mimo, fig18_19_sweep, PAPER_WIDTHS};
+use llmapreduce::metrics::report::{overhead_series, speedup_series};
+use llmapreduce::prelude::*;
+use llmapreduce::scheduler::cost::Calibration;
+use llmapreduce::workload::matrices::generate_matrix_lists;
+
+fn main() -> Result<()> {
+    let nfiles: usize = std::env::args()
+        .nth(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(48); // full paper size 512 also works; 48 keeps CI fast
+
+    let root = std::env::temp_dir().join("llmr-example-matmul");
+    let _ = std::fs::remove_dir_all(&root);
+    let input = root.join("input");
+    let output = root.join("output");
+
+    let manifest = Manifest::discover()?;
+    let mapper = MatmulChainApp::new(&manifest)?;
+    let (l, n) = mapper.static_shape();
+    println!("generating {nfiles} MATLIST files ({l} chained {n}x{n} matrices each)...");
+    let paths = generate_matrix_lists(&input, nfiles, l, n, 1)?;
+
+    // --- Step 1: the real BLOCK vs MIMO measurement (Table I style) ----
+    let np = 4;
+    let opts = Options::new(&input, &output, "matmulchain")
+        .np(np)
+        .reducer("frobsum-reducer");
+    let apps = Apps {
+        mapper: mapper.clone(),
+        reducer: Some(Arc::new(FrobeniusSumReducer)),
+    };
+    let mut engine = LocalEngine::new(np);
+    let result = block_vs_mimo("matmul pipeline", &opts, &apps, &mut engine)?;
+    println!("\n{}", result.table());
+    println!("headline: MIMO {:.2}x over BLOCK on real execution\n", result.speedup());
+
+    // The reduce output proves the numerics flowed end to end.
+    let redout = output.join("llmapreduce.out");
+    let red_text = std::fs::read_to_string(&redout)
+        .map_err(|e| llmapreduce::Error::io(redout.clone(), e))?;
+    println!("reduce output: {}", red_text.trim());
+
+    // --- Step 2: calibrate the simulator from this same app ------------
+    let sample: Vec<_> = paths
+        .iter()
+        .take(4)
+        .map(|p| (p.clone(), p.with_extension("calib.out")))
+        .collect();
+    let cal = Calibration::measure(mapper.as_ref(), &sample, 3)?;
+    println!(
+        "\ncalibration: startup={} per-file={} (ratio {:.1})",
+        llmapreduce::util::fmt_duration(cal.hint.startup),
+        llmapreduce::util::fmt_duration(cal.hint.per_item),
+        cal.startup_ratio(),
+    );
+    println!(
+        "predicted MIMO ceiling at {} files/task: {:.2}x",
+        nfiles / np,
+        cal.predicted_mimo_speedup(nfiles / np),
+    );
+
+    // --- Step 3: the paper's 512-file sweep on the calibrated DES ------
+    let sweep =
+        fig18_19_sweep(512, &PAPER_WIDTHS, cal.hint, Duration::from_millis(1))?;
+    println!("\nFig 18 (overhead per concurrent task):\n{}", overhead_series(&sweep));
+    println!("Fig 19 (speed-up vs DEFAULT@1):\n{}", speedup_series(&sweep));
+    Ok(())
+}

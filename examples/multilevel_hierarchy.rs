@@ -1,0 +1,93 @@
+//! Multi-level map-reduce over a directory hierarchy (§II / §II-A).
+//!
+//! Demonstrates the paper's title feature two ways:
+//!
+//! 1. `--subdir=true`: one LLMapReduce invocation over a nested input
+//!    tree, with the directory structure replicated to the output
+//!    (Fig 3);
+//! 2. nested LLMapReduce: one *inner* map-reduce per top-level
+//!    subdirectory plus an outer reducer merging the per-directory
+//!    results — the pattern §II recommends "for processing whole
+//!    hierarchies of data" when directories get large.
+//!
+//! ```text
+//! cargo run --release --example multilevel_hierarchy
+//! ```
+
+use std::sync::Arc;
+
+use llmapreduce::apps::wordcount::read_counts;
+use llmapreduce::mapreduce::multilevel::run_nested;
+use llmapreduce::prelude::*;
+use llmapreduce::workload::text::generate_corpus;
+
+fn main() -> Result<()> {
+    let root = std::env::temp_dir().join("llmr-example-multilevel");
+    let _ = std::fs::remove_dir_all(&root);
+    let input = root.join("input");
+
+    // A hierarchy: three "sensor" directories of documents.
+    println!("generating hierarchy (3 sensors x 8 docs)...");
+    for (k, sensor) in ["sensor-a", "sensor-b", "sensor-c"].iter().enumerate()
+    {
+        generate_corpus(&input.join(sensor), 8, 500, 100, k as u64)?;
+    }
+
+    // --- Variant 1: --subdir=true, one flat invocation ------------------
+    let out1 = root.join("output-subdir");
+    let opts = Options::new(&input, &out1, "wordcount").subdir(true).np(4);
+    let apps = Apps {
+        mapper: WordCountApp::new(None),
+        reducer: None,
+    };
+    let mut engine = LocalEngine::new(4);
+    let report = llmapreduce::mapreduce::run(&opts, &apps, &mut engine)?;
+    println!(
+        "--subdir=true: {} files mapped, tree replicated:",
+        report.map.total_items()
+    );
+    for sensor in ["sensor-a", "sensor-b", "sensor-c"] {
+        let n = std::fs::read_dir(out1.join(sensor))
+            .map(|d| d.count())
+            .unwrap_or(0);
+        println!("  {}/{sensor}: {n} outputs", out1.display());
+        assert!(n > 0, "output tree must mirror the input tree");
+    }
+
+    // --- Variant 2: nested map-reduce with an outer reducer -------------
+    let out2 = root.join("output-nested");
+    let opts = Options::new(&input, &out2, "wordcount")
+        .np(2)
+        .reducer("wordcount-reducer");
+    let apps = Apps {
+        mapper: WordCountApp::new(None),
+        reducer: Some(Arc::new(WordCountReducer)),
+    };
+    let mut engine = LocalEngine::new(2);
+    let nested = run_nested(
+        &opts,
+        &apps,
+        Some(Arc::new(WordCountReducer)),
+        &mut engine,
+    )?;
+    println!(
+        "\nnested: {} inner jobs, {} files total",
+        nested.inner.len(),
+        nested.total_items()
+    );
+    for (name, inner) in &nested.inner {
+        println!(
+            "  {name}: {} files -> {}",
+            inner.map.total_items(),
+            inner.redout_path.as_ref().expect("inner redout").display()
+        );
+    }
+    let final_out = nested.final_out.expect("outer reducer ran");
+    let counts = read_counts(&final_out)?;
+    println!(
+        "final merge {}: {} distinct words",
+        final_out.display(),
+        counts.len()
+    );
+    Ok(())
+}

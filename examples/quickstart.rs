@@ -1,0 +1,68 @@
+//! Quickstart — the paper's Fig 7 one-liner as a library call.
+//!
+//! Generates six synthetic RGB images (the Table I toy size), then runs
+//!
+//! ```text
+//! LLMapReduce --mapper imageconvert --input input --output output --np 2
+//! ```
+//!
+//! on the local engine: two array tasks, each converting three images to
+//! grayscale through the AOT-compiled XLA artifact (L2 JAX graph over the
+//! L1 Pallas kernel).  Run with:
+//!
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use llmapreduce::prelude::*;
+use llmapreduce::workload::images::generate_images;
+
+fn main() -> Result<()> {
+    let root = std::env::temp_dir().join("llmr-example-quickstart");
+    let _ = std::fs::remove_dir_all(&root);
+    let input = root.join("input");
+    let output = root.join("output");
+
+    // The artifacts fix the image shape (manifest-driven).
+    let manifest = Manifest::discover()?;
+    let mapper = ImageConvertApp::new(&manifest)?;
+    let (h, w) = mapper.image_shape();
+
+    println!("generating 6 synthetic {h}x{w} images...");
+    generate_images(&input, 6, h, w, 42)?;
+
+    // Fig 7: each input image becomes part of an array job; --np=2 gives
+    // two array tasks of three images each.
+    let opts = Options::new(&input, &output, "imageconvert").np(2);
+    let apps = Apps {
+        mapper,
+        reducer: None,
+    };
+    let mut engine = LocalEngine::new(2);
+    let report = llmapreduce::mapreduce::run(&opts, &apps, &mut engine)?;
+
+    println!(
+        "converted {} images in {} ({} app launches, startup total {})",
+        report.map.total_items(),
+        llmapreduce::util::fmt_duration(report.elapsed()),
+        report.map.total_launches(),
+        llmapreduce::util::fmt_duration(report.map.total_startup()),
+    );
+    for entry in std::fs::read_dir(&output).expect("output dir") {
+        println!("  {}", entry.expect("entry").path().display());
+    }
+
+    // Same job with --apptype=mimo: one launch per task instead of one
+    // per image — the paper's headline feature.
+    let mimo_opts = opts.clone().apptype(AppType::Mimo).ext("gray");
+    let mut engine = LocalEngine::new(2);
+    let mimo = llmapreduce::mapreduce::run(&mimo_opts, &apps, &mut engine)?;
+    println!(
+        "MIMO: {} launches (was {}), elapsed {} (was {})",
+        mimo.map.total_launches(),
+        report.map.total_launches(),
+        llmapreduce::util::fmt_duration(mimo.elapsed()),
+        llmapreduce::util::fmt_duration(report.elapsed()),
+    );
+    Ok(())
+}

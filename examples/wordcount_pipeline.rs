@@ -1,0 +1,74 @@
+//! Word-frequency map-reduce — the paper's Java use case (Figs 15/16).
+//!
+//! Generates a 21-file Zipf corpus plus `textignore.txt`, then runs the
+//! full Fig 1 pipeline: a 3-task cyclic mapper array job and a dependent
+//! reducer that merges the per-file counts — first SISO (Fig 15), then
+//! MIMO (Fig 16), comparing launch counts and elapsed time.
+//!
+//! ```text
+//! cargo run --release --example wordcount_pipeline
+//! ```
+
+use std::sync::Arc;
+
+use llmapreduce::apps::wordcount::read_counts;
+use llmapreduce::prelude::*;
+use llmapreduce::workload::text::generate_corpus;
+
+fn main() -> Result<()> {
+    let root = std::env::temp_dir().join("llmr-example-wordcount");
+    let _ = std::fs::remove_dir_all(&root);
+    let input = root.join("input");
+    let output = root.join("output");
+
+    println!("generating 21 documents + textignore.txt...");
+    let (_docs, ignore) = generate_corpus(&input, 21, 2_000, 500, 7)?;
+
+    // Fig 15: --np 3 --distribution cyclic, with mapper AND reducer.
+    let opts = Options::new(&input, &output, "wordcount")
+        .np(3)
+        .distribution(Distribution::Cyclic)
+        .reducer("wordcount-reducer");
+    // JVM-boot stand-in so repeated launches are visible in the timings.
+    let mapper = WordCountApp::with_startup_spin(
+        Some(ignore),
+        std::time::Duration::from_millis(5),
+    );
+    let apps = Apps {
+        mapper,
+        reducer: Some(Arc::new(WordCountReducer)),
+    };
+
+    let mut engine = LocalEngine::new(3);
+    let siso = llmapreduce::mapreduce::run(&opts, &apps, &mut engine)?;
+    println!(
+        "SISO (Fig 15): {} launches over {} files, elapsed {}",
+        siso.map.total_launches(),
+        siso.map.total_items(),
+        llmapreduce::util::fmt_duration(siso.elapsed()),
+    );
+
+    // Fig 16: the same pipeline with --apptype mimo.
+    let mimo_opts = opts.clone().apptype(AppType::Mimo);
+    let mut engine = LocalEngine::new(3);
+    let mimo = llmapreduce::mapreduce::run(&mimo_opts, &apps, &mut engine)?;
+    println!(
+        "MIMO (Fig 16): {} launches, elapsed {}  (speed-up {:.2}x)",
+        mimo.map.total_launches(),
+        llmapreduce::util::fmt_duration(mimo.elapsed()),
+        siso.elapsed().as_secs_f64() / mimo.elapsed().as_secs_f64(),
+    );
+
+    // The reduce output (default name llmapreduce.out).
+    let redout = mimo.redout_path.expect("reducer ran");
+    let counts = read_counts(&redout)?;
+    let mut top: Vec<_> = counts.iter().collect();
+    top.sort_by(|a, b| b.1.cmp(a.1).then(a.0.cmp(b.0)));
+    println!("top words in {}:", redout.display());
+    for (w, c) in top.iter().take(5) {
+        println!("  {w:>8}  {c}");
+    }
+    // Stopwords were ignored per textignore.txt.
+    assert!(!counts.contains_key("the"), "ignore list applied");
+    Ok(())
+}

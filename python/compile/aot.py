@@ -1,0 +1,81 @@
+"""AOT compiler: lower every L2 model function to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).  The HLO text
+parser on the Rust side reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Run once at build time (``make artifacts``):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Outputs, per registry entry:
+    artifacts/<name>.hlo.txt      — the HLO module
+    artifacts/manifest.json       — shapes/dtypes for Rust-side validation
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import registry
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (with return_tuple=True).
+
+    return_tuple=True means every artifact's output is a tuple; the Rust
+    loader unwraps with to_tuple1().
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def build(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "entries": {}}
+    for name, (fn, args) in sorted(registry().items()):
+        text = lower_entry(fn, args)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": [
+                {"shape": list(a.shape), "dtype": str(a.dtype)} for a in args
+            ],
+            "outputs": "tuple",  # return_tuple=True; unwrap with to_tuple1
+        }
+        print(f"  {name}: {len(text)} chars -> {path}")
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"  manifest -> {manifest_path}")
+    return manifest
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts",
+                        help="artifact output directory")
+    args = parser.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

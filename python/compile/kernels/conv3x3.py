@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: 3x3 single-channel convolution (same padding).
+
+The Table II workload is "a real user MATLAB application [that] does
+image processing" — more than a grayscale map.  This kernel is the second
+stage of the richer `image_pipeline` artifact: a 3x3 stencil (blur,
+sharpen, edge ...) applied to the grayscale plane.
+
+TPU shaping: the stencil is computed as nine shifted multiply-accumulates
+over a zero-padded plane — pure elementwise VPU work, no gathers.  The
+whole padded plane lives in one VMEM block: at the pipeline's static
+shape (256x256 f32 ≈ 258 KiB padded) that is ~1.6% of a TPU core's
+16 MiB VMEM, so halo tiling is unnecessary; for larger planes the block
+would split over rows with a one-row halo (overlapping blocks are not
+expressible in Pallas blocked indexing, so that variant would pass the
+halo explicitly as extra operands).  DESIGN.md §4 records the budget.
+
+interpret=True as everywhere: CPU PJRT cannot run Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(x_ref, o_ref, *, taps, h, w):
+    """(H+2, W+2) padded plane in VMEM -> (H, W) output plane.
+
+    taps: ((dy, dx, weight), ...) static 3x3 stencil description; the
+    loop unrolls at trace time into nine shifted fused multiply-adds.
+    """
+    x = x_ref[...]
+    acc = jnp.zeros((h, w), x.dtype)
+    for dy, dx, weight in taps:
+        if weight == 0.0:
+            continue
+        acc = acc + weight * jax.lax.dynamic_slice(x, (dy, dx), (h, w))
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("kernel3x3",))
+def conv3x3(x: jax.Array, *, kernel3x3: tuple) -> jax.Array:
+    """'same' 3x3 convolution of an (H, W) plane with zero padding.
+
+    kernel3x3: a 3x3 tuple-of-tuples of python floats (static — baked
+    into the stencil at compile time, like the paper's fixed MATLAB
+    filters).
+    """
+    h, w = x.shape
+    taps = tuple(
+        (dy, dx, float(kernel3x3[dy][dx]))
+        for dy in range(3)
+        for dx in range(3)
+    )
+    xp = jnp.pad(x, ((1, 1), (1, 1)))
+    return pl.pallas_call(
+        functools.partial(_conv_kernel, taps=taps, h=h, w=w),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((h + 2, w + 2), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((h, w), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), x.dtype),
+        interpret=True,
+    )(xp)
+
+
+# Common stencils (MATLAB fspecial analogues).
+BOX_BLUR = tuple(tuple(1.0 / 9.0 for _ in range(3)) for _ in range(3))
+SHARPEN = ((0.0, -1.0, 0.0), (-1.0, 5.0, -1.0), (0.0, -1.0, 0.0))
+SOBEL_X = ((-1.0, 0.0, 1.0), (-2.0, 0.0, 2.0), (-1.0, 0.0, 1.0))

@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: RGB -> grayscale conversion.
+
+This is the compute of the paper's Section III-A use case: the MATLAB
+``imageConvert()`` function (``imread`` -> ``rgb2gray`` -> write).  MATLAB's
+``rgb2gray`` uses the ITU-R BT.601 luma coefficients, which we reproduce
+exactly:
+
+    Y = 0.298936021293775 * R + 0.587043074451121 * G + 0.114020904255103 * B
+
+(the coefficients MATLAB documents for rgb2gray).
+
+TPU shaping: the image is streamed through VMEM in row blocks.  Each grid
+step holds a ``(bh, W)`` tile per channel; the weighted sum is a pure VPU
+(vector unit) elementwise op over the lane dimension W.  Channels arrive as
+three separate refs (planar layout) so each tile is a clean 2-D VMEM block
+instead of a strided 3-D slice.
+
+interpret=True: see matmul.py — CPU PJRT cannot run Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MATLAB rgb2gray / ITU-R BT.601 luma weights.
+WEIGHT_R = 0.298936021293775
+WEIGHT_G = 0.587043074451121
+WEIGHT_B = 0.114020904255103
+
+
+def _grayscale_kernel(r_ref, g_ref, b_ref, o_ref):
+    """One (bh, W) row block: weighted channel sum on the VPU."""
+    o_ref[...] = (
+        WEIGHT_R * r_ref[...]
+        + WEIGHT_G * g_ref[...]
+        + WEIGHT_B * b_ref[...]
+    )
+
+
+def _pick_block(dim: int, want: int) -> int:
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bh",))
+def grayscale(rgb: jax.Array, *, bh: int = 128) -> jax.Array:
+    """Convert an (H, W, 3) f32 image in [0, 1] to an (H, W) gray image.
+
+    The HWC input is split into planar channels outside the kernel (a
+    layout change XLA fuses away) so each Pallas block is a contiguous
+    (bh, W) VMEM tile.
+    """
+    h, w, c = rgb.shape
+    assert c == 3, f"expected RGB (H, W, 3), got {rgb.shape}"
+    bh = _pick_block(h, bh)
+
+    r = rgb[:, :, 0]
+    g = rgb[:, :, 1]
+    b = rgb[:, :, 2]
+    spec = pl.BlockSpec((bh, w), lambda i: (i, 0))
+    return pl.pallas_call(
+        _grayscale_kernel,
+        grid=(h // bh,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((h, w), rgb.dtype),
+        interpret=True,
+    )(r, g, b)

@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: tiled matrix multiply.
+
+This is the compute hot-spot of the paper's scalability study (Section IV):
+"a MATLAB code that reads in a list of square matrices and multiplies the
+matrices".  Each map task chain-multiplies the matrices in its assigned
+list file; the inner product is this kernel.
+
+TPU shaping (see DESIGN.md section 4, Hardware adaptation):
+  * grid = (M/bm, N/bn, K/bk) with K innermost so the VMEM accumulator
+    scratch stays resident across the K loop (double-buffered HBM->VMEM
+    streaming of the A and B tiles is expressed by the BlockSpecs).
+  * default tiles 128x128x128 match the MXU systolic array;
+    f32 accumulate regardless of input dtype.
+  * interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+    custom-calls, so the kernel is lowered through the interpreter to plain
+    HLO.  Real-TPU performance is estimated from the VMEM footprint and
+    MXU utilization in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    """One (bm, bn) output tile; accumulates over the K grid dimension.
+
+    a_ref: (bm, bk) VMEM tile of A
+    b_ref: (bk, bn) VMEM tile of B
+    o_ref: (bm, bn) output tile (written on the last K step)
+    acc_ref: (bm, bn) f32 VMEM scratch accumulator
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU-shaped contraction: always accumulate in f32.
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pick_block(dim: int, want: int) -> int:
+    """Largest block <= want that divides dim (dims are padded upstream)."""
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
+           bk: int = 128) -> jax.Array:
+    """Tiled Pallas matmul: (M, K) @ (K, N) -> (M, N).
+
+    Shapes need not be multiples of the tile size; blocks are shrunk to the
+    largest divisor (callers in model.py use MXU-friendly sizes anyway).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch: {a.shape} @ {b.shape}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    n_k = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(a, b)

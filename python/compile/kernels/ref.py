@@ -1,0 +1,53 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These are the ground truth every kernel is checked against (pytest +
+hypothesis in python/tests/).  They must stay dead simple — no pallas, no
+tiling, just the textbook math.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Keep the weights in one place: ref and kernel must agree bit-for-bit on
+# the constants (the tolerance in tests covers accumulation-order drift).
+from .grayscale import WEIGHT_B, WEIGHT_G, WEIGHT_R
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """(M, K) @ (K, N) with f32 accumulation, like the kernel."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def matmul_chain_ref(mats: jax.Array) -> jax.Array:
+    """Left-to-right product of a (L, N, N) stack of square matrices."""
+    out = mats[0]
+    for i in range(1, mats.shape[0]):
+        out = matmul_ref(out, mats[i])
+    return out
+
+
+def grayscale_ref(rgb: jax.Array) -> jax.Array:
+    """(H, W, 3) -> (H, W) ITU-R BT.601 luma."""
+    return (
+        WEIGHT_R * rgb[:, :, 0]
+        + WEIGHT_G * rgb[:, :, 1]
+        + WEIGHT_B * rgb[:, :, 2]
+    )
+
+
+def conv3x3_ref(x: jax.Array, kernel3x3) -> jax.Array:
+    """'same' 3x3 convolution with zero padding — nine shifted MACs."""
+    h, w = x.shape
+    xp = jnp.pad(x, ((1, 1), (1, 1)))
+    acc = jnp.zeros_like(x)
+    for dy in range(3):
+        for dx in range(3):
+            acc = acc + float(kernel3x3[dy][dx]) * xp[dy:dy + h, dx:dx + w]
+    return acc
+
+
+def image_pipeline_ref(rgb: jax.Array, kernel3x3) -> jax.Array:
+    """Grayscale -> 3x3 stencil -> clip, the Table II-style pipeline."""
+    return jnp.clip(conv3x3_ref(grayscale_ref(rgb), kernel3x3), 0.0, 1.0)

@@ -1,0 +1,116 @@
+"""L2: the map applications' compute graphs, written in JAX.
+
+These are the JAX analogues of the paper's map applications:
+
+  * ``image_convert``  — Section III-A: MATLAB ``imageConvert()``
+    (RGB image -> grayscale image), built on the L1 grayscale kernel.
+  * ``matmul_chain``   — Section IV scalability study: "a MATLAB code that
+    reads in a list of square matrices and multiplies the matrices",
+    built on the L1 tiled matmul kernel.
+  * ``matmul_pair``    — single product, used by tests and as a smaller
+    artifact for runtime unit tests.
+
+Each function is pure and shape-static so it can be AOT-lowered once by
+``aot.py`` into HLO text that the Rust runtime loads at startup.  Python is
+never on the request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.conv3x3 import conv3x3, BOX_BLUR
+from .kernels.grayscale import grayscale
+from .kernels.matmul import matmul
+
+# Canonical artifact shapes.  The Rust side (runtime/artifacts.rs) and the
+# workload generators (workload/images.rs, workload/matrices.rs) are pinned
+# to these; keep in sync with the manifest aot.py emits.
+IMAGE_H = 256
+IMAGE_W = 256
+CHAIN_LEN = 4
+MATRIX_N = 128
+
+
+def image_convert(rgb: jax.Array) -> tuple[jax.Array]:
+    """(H, W, 3) f32 in [0,1] -> (H, W) f32 grayscale (BT.601 luma).
+
+    The L1 kernel does the weighted reduction; clamping keeps the output a
+    valid image even for slightly out-of-range inputs (PPM decode jitter).
+    """
+    gray = grayscale(rgb)
+    return (jnp.clip(gray, 0.0, 1.0),)
+
+
+def image_pipeline(rgb: jax.Array) -> tuple[jax.Array]:
+    """(H, W, 3) -> (H, W): grayscale + 3x3 box blur + clip.
+
+    The Table II regime: "a real user MATLAB application [that] does
+    image processing" — a multi-stage per-file pipeline, composing BOTH
+    L1 kernels inside one lowered module so XLA fuses the plumbing.
+    """
+    gray = grayscale(rgb)
+    blurred = conv3x3(gray, kernel3x3=BOX_BLUR)
+    return (jnp.clip(blurred, 0.0, 1.0),)
+
+
+def matmul_pair(a: jax.Array, b: jax.Array) -> tuple[jax.Array]:
+    """(N, N) @ (N, N) via the tiled Pallas kernel."""
+    return (matmul(a, b),)
+
+
+def matmul_chain(mats: jax.Array) -> tuple[jax.Array]:
+    """(L, N, N) -> (N, N): left-to-right chain product.
+
+    L is static and small, so the chain is unrolled; every product goes
+    through the L1 kernel and XLA fuses the inter-product plumbing.
+    """
+    out = mats[0]
+    for i in range(1, mats.shape[0]):
+        out = matmul(out, mats[i])
+    return (out,)
+
+
+def frobenius_reduce(mats: jax.Array) -> tuple[jax.Array]:
+    """(B, N, N) -> scalar: sum of Frobenius norms.
+
+    The reduce-side compute for the matmul pipeline example: the reducer
+    aggregates per-file chain products into one scalar summary.
+    """
+    sq = jnp.sum(mats * mats, axis=(1, 2))
+    return (jnp.sum(jnp.sqrt(sq)),)
+
+
+# ---------------------------------------------------------------------------
+# Artifact registry: name -> (function, example argument shapes)
+# aot.py iterates this to produce artifacts/<name>.hlo.txt and the manifest.
+# ---------------------------------------------------------------------------
+
+def registry() -> dict:
+    f32 = jnp.float32
+    return {
+        "image_convert": (
+            image_convert,
+            [jax.ShapeDtypeStruct((IMAGE_H, IMAGE_W, 3), f32)],
+        ),
+        "image_pipeline": (
+            image_pipeline,
+            [jax.ShapeDtypeStruct((IMAGE_H, IMAGE_W, 3), f32)],
+        ),
+        "matmul_pair": (
+            matmul_pair,
+            [
+                jax.ShapeDtypeStruct((MATRIX_N, MATRIX_N), f32),
+                jax.ShapeDtypeStruct((MATRIX_N, MATRIX_N), f32),
+            ],
+        ),
+        "matmul_chain": (
+            matmul_chain,
+            [jax.ShapeDtypeStruct((CHAIN_LEN, MATRIX_N, MATRIX_N), f32)],
+        ),
+        "frobenius_reduce": (
+            frobenius_reduce,
+            [jax.ShapeDtypeStruct((8, MATRIX_N, MATRIX_N), f32)],
+        ),
+    }

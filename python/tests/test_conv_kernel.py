@@ -1,0 +1,92 @@
+"""L1 conv3x3 Pallas kernel vs pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.conv3x3 import conv3x3, BOX_BLUR, SHARPEN, SOBEL_X
+from compile.kernels.ref import conv3x3_ref, image_pipeline_ref
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(h, w, seed):
+    return jnp.asarray(np.random.RandomState(seed).rand(h, w), jnp.float32)
+
+
+@pytest.mark.parametrize("kernel", [BOX_BLUR, SHARPEN, SOBEL_X])
+@pytest.mark.parametrize("h,w", [(1, 1), (8, 8), (33, 17), (64, 128)])
+def test_conv_matches_ref(kernel, h, w):
+    x = rand(h, w, h * 100 + w)
+    np.testing.assert_allclose(
+        conv3x3(x, kernel3x3=kernel),
+        conv3x3_ref(x, kernel),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+def test_identity_kernel_is_noop():
+    ident = ((0.0, 0.0, 0.0), (0.0, 1.0, 0.0), (0.0, 0.0, 0.0))
+    x = rand(16, 16, 3)
+    np.testing.assert_allclose(conv3x3(x, kernel3x3=ident), x, atol=1e-7)
+
+
+def test_box_blur_preserves_mean_inside():
+    # Away from borders, a box blur of a constant plane is constant.
+    x = jnp.full((16, 16), 0.6, jnp.float32)
+    out = np.asarray(conv3x3(x, kernel3x3=BOX_BLUR))
+    np.testing.assert_allclose(out[1:-1, 1:-1], 0.6, rtol=1e-6)
+    # Borders see zero padding: strictly smaller.
+    assert out[0, 0] < 0.6
+
+
+def test_sobel_zero_on_constant():
+    x = jnp.full((12, 12), 0.3, jnp.float32)
+    out = np.asarray(conv3x3(x, kernel3x3=SOBEL_X))
+    np.testing.assert_allclose(out[1:-1, 1:-1], 0.0, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(h=st.integers(1, 80), w=st.integers(1, 80), seed=st.integers(0, 2**31 - 1))
+def test_conv_arbitrary_shapes(h, w, seed):
+    x = rand(h, w, seed)
+    np.testing.assert_allclose(
+        conv3x3(x, kernel3x3=BOX_BLUR),
+        conv3x3_ref(x, BOX_BLUR),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    k=st.lists(
+        st.floats(-2, 2, allow_nan=False, width=32), min_size=9, max_size=9
+    ),
+    seed=st.integers(0, 1000),
+)
+def test_conv_arbitrary_stencils(k, seed):
+    kernel = tuple(tuple(k[r * 3 + c] for c in range(3)) for r in range(3))
+    x = rand(24, 24, seed)
+    np.testing.assert_allclose(
+        conv3x3(x, kernel3x3=kernel),
+        conv3x3_ref(x, kernel),
+        rtol=1e-4,
+        atol=1e-5,
+    )
+
+
+def test_image_pipeline_model_matches_ref():
+    rgb = jnp.asarray(
+        np.random.RandomState(1).rand(model.IMAGE_H, model.IMAGE_W, 3),
+        jnp.float32,
+    )
+    (out,) = model.image_pipeline(rgb)
+    np.testing.assert_allclose(
+        out, image_pipeline_ref(rgb, BOX_BLUR), rtol=1e-5, atol=1e-6
+    )
+    assert out.shape == (model.IMAGE_H, model.IMAGE_W)

@@ -1,0 +1,64 @@
+"""L1 grayscale Pallas kernel vs pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.grayscale import grayscale, WEIGHT_R, WEIGHT_G, WEIGHT_B
+from compile.kernels.ref import grayscale_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_img(h, w, seed):
+    return jnp.asarray(np.random.RandomState(seed).rand(h, w, 3), jnp.float32)
+
+
+@pytest.mark.parametrize("h,w", [(1, 1), (8, 8), (256, 256), (100, 37), (257, 64)])
+def test_grayscale_matches_ref(h, w):
+    img = rand_img(h, w, h * 1000 + w)
+    np.testing.assert_allclose(grayscale(img), grayscale_ref(img), rtol=1e-6, atol=1e-6)
+
+
+def test_weights_sum_to_one():
+    # BT.601 luma: white must stay white.
+    assert abs((WEIGHT_R + WEIGHT_G + WEIGHT_B) - 1.0) < 1e-12
+
+
+def test_grayscale_white_black():
+    white = jnp.ones((16, 16, 3), jnp.float32)
+    black = jnp.zeros((16, 16, 3), jnp.float32)
+    np.testing.assert_allclose(grayscale(white), jnp.ones((16, 16)), atol=1e-6)
+    np.testing.assert_allclose(grayscale(black), jnp.zeros((16, 16)), atol=1e-6)
+
+
+def test_grayscale_pure_channels():
+    h = w = 8
+    for chan, weight in [(0, WEIGHT_R), (1, WEIGHT_G), (2, WEIGHT_B)]:
+        img = np.zeros((h, w, 3), np.float32)
+        img[:, :, chan] = 1.0
+        out = grayscale(jnp.asarray(img))
+        np.testing.assert_allclose(out, np.full((h, w), weight), rtol=1e-6)
+
+
+def test_grayscale_rejects_non_rgb():
+    with pytest.raises(AssertionError):
+        grayscale(jnp.zeros((4, 4, 4), jnp.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(h=st.integers(1, 300), w=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+def test_grayscale_arbitrary_shapes(h, w, seed):
+    img = rand_img(h, w, seed)
+    np.testing.assert_allclose(grayscale(img), grayscale_ref(img), rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(bh=st.sampled_from([1, 2, 32, 128, 256]), seed=st.integers(0, 1000))
+def test_grayscale_block_invariance(bh, seed):
+    img = rand_img(128, 32, seed)
+    np.testing.assert_allclose(
+        grayscale(img, bh=bh), grayscale(img, bh=128), rtol=1e-6, atol=1e-6
+    )

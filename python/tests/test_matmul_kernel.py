@@ -1,0 +1,122 @@
+"""L1 matmul Pallas kernel vs pure-jnp oracle — the core correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.matmul import matmul, _pick_block
+from compile.kernels.ref import matmul_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+def rand(shape, seed, dtype=np.float32):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Directed cases
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (8, 8, 8),
+        (128, 128, 128),
+        (256, 128, 64),
+        (64, 96, 32),
+        (1, 128, 1),
+        (3, 5, 7),       # primes: block shrink path
+        (130, 2, 130),   # tiny contraction dim
+    ],
+)
+def test_matmul_matches_ref(m, k, n):
+    a, b = rand((m, k), m * 1000 + k), rand((k, n), k * 1000 + n)
+    np.testing.assert_allclose(matmul(a, b), matmul_ref(a, b), rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (16, 32, 64), (128, 128, 128), (64, 8, 16)])
+def test_matmul_block_shapes_equivalent(bm, bn, bk):
+    """All tilings compute the same product."""
+    a, b = rand((128, 128), 7), rand((128, 128), 8)
+    np.testing.assert_allclose(
+        matmul(a, b, bm=bm, bn=bn, bk=bk), matmul_ref(a, b), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_matmul_identity():
+    a = rand((64, 64), 3)
+    eye = jnp.eye(64, dtype=jnp.float32)
+    np.testing.assert_allclose(matmul(a, eye), a, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(matmul(eye, a), a, rtol=RTOL, atol=ATOL)
+
+
+def test_matmul_zeros():
+    a = rand((32, 48), 4)
+    z = jnp.zeros((48, 16), jnp.float32)
+    assert not np.any(np.asarray(matmul(a, z)))
+
+
+def test_matmul_shape_mismatch_raises():
+    with pytest.raises(AssertionError):
+        matmul(rand((4, 5), 0), rand((6, 4), 1))
+
+
+def test_pick_block_divides():
+    for dim in [1, 2, 3, 7, 64, 100, 128, 129, 1000]:
+        for want in [1, 8, 128, 4096]:
+            b = _pick_block(dim, want)
+            assert 1 <= b <= min(dim, want)
+            assert dim % b == 0
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: shapes and dtypes
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_arbitrary_shapes(m, k, n, seed):
+    a, b = rand((m, k), seed), rand((k, n), seed + 1)
+    np.testing.assert_allclose(matmul(a, b), matmul_ref(a, b), rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    dtype=st.sampled_from([np.float32, np.float64]),
+    n=st.sampled_from([8, 32, 64]),
+)
+def test_matmul_dtypes(dtype, n):
+    a, b = rand((n, n), 11, dtype), rand((n, n), 12, dtype)
+    out = matmul(a, b)
+    assert out.dtype == a.dtype
+    np.testing.assert_allclose(out, matmul_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bm=st.sampled_from([8, 16, 32, 128]),
+    bn=st.sampled_from([8, 16, 32, 128]),
+    bk=st.sampled_from([8, 16, 32, 128]),
+    seed=st.integers(0, 1000),
+)
+def test_matmul_tiling_invariance(bm, bn, bk, seed):
+    """The product is invariant to the tiling choice (accumulation-order
+    drift is inside the allclose tolerance)."""
+    a, b = rand((64, 64), seed), rand((64, 64), seed + 1)
+    np.testing.assert_allclose(
+        matmul(a, b, bm=bm, bn=bn, bk=bk),
+        matmul(a, b, bm=64, bn=64, bk=64),
+        rtol=RTOL,
+        atol=ATOL,
+    )

@@ -1,0 +1,61 @@
+"""L2 model graphs: shapes, semantics vs oracles, registry hygiene."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels.ref import grayscale_ref, matmul_chain_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape), jnp.float32)
+
+
+def test_image_convert_matches_ref():
+    img = jnp.asarray(
+        np.random.RandomState(0).rand(model.IMAGE_H, model.IMAGE_W, 3), jnp.float32
+    )
+    (out,) = model.image_convert(img)
+    np.testing.assert_allclose(out, np.clip(grayscale_ref(img), 0, 1), rtol=1e-6)
+    assert out.shape == (model.IMAGE_H, model.IMAGE_W)
+
+
+def test_image_convert_clips():
+    img = jnp.full((8, 8, 3), 2.0, jnp.float32)  # out-of-range input
+    (out,) = model.image_convert(img)
+    assert float(jnp.max(out)) <= 1.0
+
+
+def test_matmul_chain_matches_ref():
+    mats = rand((model.CHAIN_LEN, 32, 32), 1) * 0.1
+    (out,) = model.matmul_chain(mats)
+    np.testing.assert_allclose(out, matmul_chain_ref(mats), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_pair():
+    a, b = rand((16, 16), 2), rand((16, 16), 3)
+    (out,) = model.matmul_pair(a, b)
+    np.testing.assert_allclose(out, a @ b, rtol=1e-4, atol=1e-4)
+
+
+def test_frobenius_reduce():
+    mats = rand((4, 8, 8), 5)
+    (out,) = model.frobenius_reduce(mats)
+    expect = sum(np.linalg.norm(np.asarray(mats[i]), "fro") for i in range(4))
+    np.testing.assert_allclose(out, expect, rtol=1e-5)
+
+
+def test_registry_entries_lower():
+    """Every registry entry must trace at its example shapes."""
+    for name, (fn, args) in model.registry().items():
+        lowered = jax.jit(fn).lower(*args)
+        assert lowered is not None, name
+
+
+def test_registry_names_are_artifact_safe():
+    for name in model.registry():
+        assert name.replace("_", "").isalnum(), name

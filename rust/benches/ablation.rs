@@ -1,0 +1,103 @@
+//! `cargo bench --bench ablation` — design-choice ablations DESIGN.md
+//! calls out:
+//!
+//! 1. **block vs cyclic distribution** under three file-cost patterns —
+//!    the §II claim that cyclic "improve[s] initial load balancing";
+//! 2. **dispatch latency sensitivity** — where the serialized scheduler
+//!    dispatcher starts to dominate DEFAULT mode (the regime boundary
+//!    discussed around Fig 18).
+
+use std::time::Duration;
+
+use llmapreduce::apps::CostHint;
+use llmapreduce::bench::experiments::{ablation_distribution, fig18_19_sweep};
+
+fn main() {
+    println!("ABLATION 1 — block vs cyclic under cost skew (256 files, np=8)\n");
+    let cells =
+        ablation_distribution(256, 8, Duration::from_millis(10), 42).unwrap();
+    println!(
+        "{:<10} {:<8} {:>12} {:>12}",
+        "pattern", "dist", "makespan", "straggler"
+    );
+    for c in &cells {
+        println!(
+            "{:<10} {:<8} {:>12} {:>12}",
+            c.pattern,
+            c.distribution.as_str(),
+            llmapreduce::util::fmt_duration(c.makespan),
+            llmapreduce::util::fmt_duration(c.straggler),
+        );
+    }
+    // Assertions: cyclic within 10% on uniform, >=20% better on sorted.
+    let get = |p: &str, d: llmapreduce::options::Distribution| {
+        cells
+            .iter()
+            .find(|c| c.pattern == p && c.distribution == d)
+            .unwrap()
+            .makespan
+            .as_secs_f64()
+    };
+    use llmapreduce::options::Distribution::{Block, Cyclic};
+    assert!(get("sorted", Block) > get("sorted", Cyclic) * 1.2);
+    println!("\nshape check: cyclic wins on sorted costs (the paper's load-balancing claim)\n");
+
+    println!("ABLATION 2 — dispatch latency sensitivity (512 files, np=64, DEFAULT vs MIMO)\n");
+    let hint = CostHint {
+        startup: Duration::from_millis(100),
+        per_item: Duration::from_millis(10),
+    };
+    println!("{:<14} {:>12} {:>12} {:>9}", "dispatch", "DEFAULT", "MIMO", "ratio");
+    for ms in [0u64, 1, 10, 50, 200] {
+        let sweep =
+            fig18_19_sweep(512, &[64], hint, Duration::from_millis(ms))
+                .unwrap();
+        let d = sweep.get("DEFAULT", 64).unwrap().elapsed;
+        let m = sweep.get("MIMO", 64).unwrap().elapsed;
+        println!(
+            "{:<14} {:>12} {:>12} {:>8.1}x",
+            format!("{ms}ms"),
+            llmapreduce::util::fmt_duration(d),
+            llmapreduce::util::fmt_duration(m),
+            d.as_secs_f64() / m.as_secs_f64(),
+        );
+    }
+    println!("\n(growing dispatch cost widens the DEFAULT/MIMO gap: every per-file\n task pays the dispatcher, MIMO pays it np times total)");
+
+    println!("\nABLATION 3 — cluster utilization vs np (512 files, MATLAB regime)\n");
+    // Utilization = busy slot-time / (makespan x slots).  MIMO keeps the
+    // cluster busy; SISO burns slot-time on repeated start-ups that ARE
+    // "busy" but useless — so we also show the useful fraction
+    // (compute-only utilization), which is the number that collapses.
+    let heavy = CostHint {
+        startup: Duration::from_millis(11_400),
+        per_item: Duration::from_millis(1_000),
+    };
+    println!(
+        "{:<6} {:>14} {:>14} {:>16} {:>16}",
+        "np", "BLOCK util", "MIMO util", "BLOCK useful", "MIMO useful"
+    );
+    for np in [1usize, 16, 64, 256] {
+        let sweep =
+            fig18_19_sweep(512, &[np], heavy, Duration::from_millis(10))
+                .unwrap();
+        let cell = |opt: &str| {
+            let m = sweep.get(opt, np).unwrap();
+            let busy = (m.total_startup + m.total_compute).as_secs_f64();
+            let useful = m.total_compute.as_secs_f64();
+            let slot_time = m.elapsed.as_secs_f64() * np as f64;
+            (busy / slot_time, useful / slot_time)
+        };
+        let (bu, bf) = cell("BLOCK");
+        let (mu, mf) = cell("MIMO");
+        println!(
+            "{:<6} {:>13.0}% {:>13.0}% {:>15.0}% {:>15.0}%",
+            np,
+            bu * 100.0,
+            mu * 100.0,
+            bf * 100.0,
+            mf * 100.0
+        );
+    }
+    println!("\n(BLOCK looks 'busy' but ~90% of its slot-time is start-up churn;\n MIMO's slot-time is almost all useful compute)");
+}

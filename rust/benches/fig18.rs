@@ -1,0 +1,75 @@
+//! `cargo bench --bench fig18` — regenerates Fig 18: computational
+//! overhead per concurrent array task vs np, for DEFAULT / BLOCK / MIMO.
+//!
+//! Costs are calibrated from the real matmul app when artifacts exist
+//! (XLA compile = start-up), else representative constants; the sweep
+//! runs on the discrete-event simulator (512 files, np 1..256, the
+//! paper's §IV parameters).
+//!
+//! Expected shape (the paper's findings): DEFAULT ≳ BLOCK falling
+//! linearly in np; MIMO flat and far below; all converge at 1 file/task.
+
+use std::time::Duration;
+
+use llmapreduce::apps::CostHint;
+use llmapreduce::bench::experiments::{fig18_19_sweep, PAPER_WIDTHS};
+use llmapreduce::metrics::report::{overhead_series, sweep_csv};
+use llmapreduce::prelude::*;
+use llmapreduce::scheduler::cost::Calibration;
+use llmapreduce::workload::matrices::generate_matrix_lists;
+
+fn calibrate() -> CostHint {
+    let fallback = CostHint {
+        startup: Duration::from_millis(30),
+        per_item: Duration::from_millis(3),
+    };
+    let Ok(manifest) = Manifest::discover() else { return fallback };
+    let Ok(app) = MatmulChainApp::new(&manifest) else { return fallback };
+    let d = std::env::temp_dir()
+        .join(format!("llmr-bench-fig18-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    let (l, n) = app.static_shape();
+    let paths = generate_matrix_lists(&d, 4, l, n, 3).unwrap();
+    let pairs: Vec<_> = paths
+        .iter()
+        .map(|p| (p.clone(), p.with_extension("out")))
+        .collect();
+    Calibration::measure(app.as_ref(), &pairs, 3)
+        .map(|c| c.hint)
+        .unwrap_or(fallback)
+}
+
+fn main() {
+    let hint = calibrate();
+    println!(
+        "FIG 18 — overhead per concurrent task (calibrated startup={:?}, per-file={:?})\n",
+        hint.startup, hint.per_item
+    );
+    let sweep =
+        fig18_19_sweep(512, &PAPER_WIDTHS, hint, Duration::from_millis(1))
+            .unwrap();
+    println!("{}", overhead_series(&sweep));
+
+    let csv = std::env::temp_dir().join("llmr-bench-fig18.csv");
+    std::fs::write(&csv, sweep_csv(&sweep)).unwrap();
+    println!("csv: {}", csv.display());
+
+    // Shape assertions — the bench FAILS if the paper's findings invert.
+    let m1 = sweep.get("MIMO", 1).unwrap().overhead_per_task;
+    let m256 = sweep.get("MIMO", 256).unwrap().overhead_per_task;
+    let b1 = sweep.get("BLOCK", 1).unwrap().overhead_per_task;
+    let b256 = sweep.get("BLOCK", 256).unwrap().overhead_per_task;
+    let d1 = sweep.get("DEFAULT", 1).unwrap().overhead_per_task;
+    assert!(
+        m1.as_secs_f64() / m256.as_secs_f64() < 3.0,
+        "MIMO overhead must stay ~flat"
+    );
+    assert!(
+        b1.as_secs_f64() / b256.as_secs_f64() > 50.0,
+        "BLOCK overhead must fall ~linearly"
+    );
+    assert!(d1 >= b1, "DEFAULT >= BLOCK at np=1");
+    assert!(b1 > m1 * 10, "BLOCK >> MIMO at np=1");
+    println!("shape checks: OK (DEFAULT >= BLOCK >> MIMO, MIMO flat)");
+}

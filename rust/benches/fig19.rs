@@ -1,0 +1,58 @@
+//! `cargo bench --bench fig19` — regenerates Fig 19: speed-up of job
+//! elapsed time vs DEFAULT at one process, for DEFAULT / BLOCK / MIMO
+//! across np ∈ {1..256} (512 files, §IV parameters).
+//!
+//! Expected shape: MIMO consistently best; BLOCK slightly above DEFAULT;
+//! speed-ups grow with np until the workload's parallelism is exhausted.
+
+use std::time::Duration;
+
+use llmapreduce::apps::CostHint;
+use llmapreduce::bench::experiments::{fig18_19_sweep, PAPER_WIDTHS};
+use llmapreduce::metrics::report::{speedup_series, sweep_csv};
+
+fn main() {
+    // The paper's MATLAB regime: startup an order of magnitude above the
+    // per-file compute (Table II pins ~11.4:1).  Fig 19's curves keep
+    // rising to np=256 exactly because startup dominates.
+    let hint = CostHint {
+        startup: Duration::from_millis(11_400),
+        per_item: Duration::from_millis(1_000),
+    };
+    println!(
+        "FIG 19 — speed-up vs DEFAULT@1 (MATLAB-regime costs {:?}/{:?})\n",
+        hint.startup, hint.per_item
+    );
+    let sweep =
+        fig18_19_sweep(512, &PAPER_WIDTHS, hint, Duration::from_millis(10))
+            .unwrap();
+    println!("{}", speedup_series(&sweep));
+
+    let csv = std::env::temp_dir().join("llmr-bench-fig19.csv");
+    std::fs::write(&csv, sweep_csv(&sweep)).unwrap();
+    println!("csv: {}", csv.display());
+
+    // Shape assertions per the paper's §IV findings.
+    let base = sweep.baseline().unwrap();
+    for np in PAPER_WIDTHS {
+        let d = sweep.get("DEFAULT", np).unwrap().speedup_vs(base);
+        let b = sweep.get("BLOCK", np).unwrap().speedup_vs(base);
+        let m = sweep.get("MIMO", np).unwrap().speedup_vs(base);
+        assert!(m > b, "np={np}: MIMO best ({m:.2} vs {b:.2})");
+        assert!(
+            b >= d * 0.95,
+            "np={np}: BLOCK >= DEFAULT ({b:.2} vs {d:.2})"
+        );
+    }
+    // Monotone growth for MIMO across the paper's sweep.
+    let mut prev = 0.0;
+    for np in PAPER_WIDTHS {
+        let m = sweep.get("MIMO", np).unwrap().speedup_vs(base);
+        assert!(
+            m > prev,
+            "MIMO speed-up must grow with np (np={np}: {m:.2} <= {prev:.2})"
+        );
+        prev = m;
+    }
+    println!("shape checks: OK (MIMO > BLOCK >= DEFAULT, monotone in np)");
+}

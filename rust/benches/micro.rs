@@ -1,0 +1,155 @@
+//! `cargo bench --bench micro` — L3 hot-path micro-benchmarks.
+//!
+//! The coordinator paths that run per-job (planner, distribution, script
+//! generation, input scanning) and per-simulated-task (DES event loop),
+//! plus the runtime compile/execute split that *is* the paper's
+//! startup-vs-compute mechanism.  The §Perf pass in EXPERIMENTS.md tracks
+//! these numbers.
+
+use std::time::Duration;
+
+use llmapreduce::bench::{bench_fn, BenchStats};
+use llmapreduce::mapreduce::planner::plan;
+use llmapreduce::mapreduce::distribution::distribute;
+use llmapreduce::options::{Distribution, Options, SchedulerKind};
+use llmapreduce::prelude::*;
+use llmapreduce::scheduler::dialect::dialect_for;
+use llmapreduce::scheduler::{JobSpec, TaskSpec, TaskWork};
+use llmapreduce::util::json::Json;
+use llmapreduce::workdir::scan::InputFile;
+
+fn fake_files(n: usize) -> Vec<InputFile> {
+    (0..n)
+        .map(|i| InputFile {
+            path: format!("/data/in/file_{i:06}.dat").into(),
+            relative: format!("file_{i:06}.dat").into(),
+        })
+        .collect()
+}
+
+fn print(s: &BenchStats, items: usize, unit: &str) {
+    println!(
+        "{}  [{:.0} {unit}/s]",
+        s.summary(),
+        s.throughput(items)
+    );
+}
+
+fn main() {
+    println!("L3 micro-benchmarks\n");
+
+    // Distribution: the paper's Table II size.
+    let s = bench_fn("distribute/block/43580x256", 3, 30, || {
+        std::hint::black_box(distribute(43_580, 256, Distribution::Block));
+    });
+    print(&s, 43_580, "files");
+    let s = bench_fn("distribute/cyclic/43580x256", 3, 30, || {
+        std::hint::black_box(distribute(43_580, 256, Distribution::Cyclic));
+    });
+    print(&s, 43_580, "files");
+
+    // Full planning (naming + assignment) at Table II scale.
+    let files = fake_files(43_580);
+    let opts = Options::new("/data/in", "/data/out", "mapper").np(256);
+    let dialect = dialect_for(SchedulerKind::GridEngine);
+    let s = bench_fn("plan/43580x256", 3, 20, || {
+        std::hint::black_box(plan(&files, &opts, dialect.as_ref()).unwrap());
+    });
+    print(&s, 43_580, "files");
+
+    // Submission-script generation per dialect.
+    for kind in [
+        SchedulerKind::GridEngine,
+        SchedulerKind::Slurm,
+        SchedulerKind::Lsf,
+    ] {
+        let d = dialect_for(kind);
+        let extra: Vec<String> = vec![];
+        let req = llmapreduce::scheduler::dialect::SubmitRequest {
+            job_name: "mapper",
+            tasks: 75_000,
+            mapred_dir: ".MAPRED.1",
+            exclusive: false,
+            depends_on: Some(42),
+            extra_options: &extra,
+        };
+        let s = bench_fn(
+            format!("submit-script/{}", kind.as_str()),
+            10,
+            1000,
+            || {
+                std::hint::black_box(d.submission_script(&req));
+            },
+        );
+        print(&s, 1, "scripts");
+    }
+
+    // DES engine: events/second at Fig 18's biggest cell (512 tasks).
+    let s = bench_fn("sim/512-tasks-np256", 2, 20, || {
+        let mut eng = SimEngine::new(ClusterConfig::with_width(256));
+        let tasks: Vec<TaskSpec> = (0..512)
+            .map(|i| TaskSpec {
+                task_id: i + 1,
+                work: TaskWork::Synthetic {
+                    startup: Duration::from_millis(100),
+                    per_item: Duration::from_millis(10),
+                    items: 1,
+                    launches: 1,
+                },
+            })
+            .collect();
+        std::hint::black_box(eng.run(JobSpec::new("bench", tasks)).unwrap());
+    });
+    print(&s, 512, "tasks");
+
+    // Table II trace through the sim: 256 tasks, 43,580 virtual files.
+    let s = bench_fn("sim/table2-trace", 2, 20, || {
+        let params = llmapreduce::workload::trace::TraceParams::table2();
+        let mut eng = SimEngine::new(ClusterConfig::with_width(256));
+        std::hint::black_box(
+            eng.run(JobSpec::new(
+                "trace",
+                params.tasks(llmapreduce::options::AppType::Mimo),
+            ))
+            .unwrap(),
+        );
+    });
+    print(&s, 43_580, "virtual files");
+
+    // JSON parser on a manifest-shaped document.
+    let doc = r#"{"format":"hlo-text","entries":{"m":{"file":"m.hlo.txt",
+        "inputs":[{"shape":[128,128],"dtype":"float32"},
+                  {"shape":[128,128],"dtype":"float32"}]}}}"#;
+    let s = bench_fn("json/parse-manifest", 10, 2000, || {
+        std::hint::black_box(Json::parse(doc).unwrap());
+    });
+    print(&s, doc.len(), "bytes");
+
+    // Runtime: compile (startup) vs execute (per-file) — the mechanism.
+    if let Ok(manifest) = Manifest::discover() {
+        let entry = manifest.entry("matmul_pair").unwrap().clone();
+        let compile = bench_fn("xla/compile-matmul_pair", 1, 10, || {
+            std::hint::black_box(
+                llmapreduce::runtime::XlaExecutable::from_entry(&entry)
+                    .unwrap(),
+            );
+        });
+        print(&compile, 1, "compiles");
+
+        let exe =
+            llmapreduce::runtime::XlaExecutable::from_entry(&entry).unwrap();
+        let n = entry.inputs[0].shape[0];
+        let a = vec![0.5f32; n * n];
+        let b = vec![0.25f32; n * n];
+        let execute = bench_fn("xla/execute-matmul_pair", 3, 50, || {
+            std::hint::black_box(exe.run_f32(&[&a, &b]).unwrap());
+        });
+        print(&execute, 2 * n * n * n, "flops");
+        println!(
+            "\nstartup:execute ratio = {:.1} (the amortization MIMO exploits)",
+            compile.median.as_secs_f64() / execute.median.as_secs_f64()
+        );
+    } else {
+        println!("(xla benches skipped: no artifacts)");
+    }
+}

@@ -1,0 +1,37 @@
+//! `cargo bench --bench table2` — regenerates Table II of the paper.
+//!
+//! The 43,580-file / 256-task real-user-application trace on the
+//! calibrated discrete-event simulator (the dataset is the one input we
+//! cannot have; DESIGN.md §3 documents the substitution).  The paper
+//! reports 11.57x; the trace parameters pin startup:compute at the ratio
+//! that regime implies, and the simulator adds dispatch effects.
+//!
+//! Also sweeps the startup:compute ratio to show where 11.57x sits.
+
+use std::time::Duration;
+
+use llmapreduce::bench::experiments::table2;
+use llmapreduce::workload::trace::TraceParams;
+
+fn main() {
+    println!("TABLE II — real-world trace (paper: 11.57x)\n");
+    let params = TraceParams::table2();
+    let r = table2(params).unwrap();
+    println!("{}", r.table());
+    println!(
+        "ideal (no dispatch): {:.2}x   simulated: {:.2}x   paper: 11.57x\n",
+        params.ideal_mimo_speedup(),
+        r.speedup()
+    );
+
+    println!("ablation: startup:per-file ratio vs speed-up (171 files/task)");
+    for ratio in [1u64, 2, 5, 10, 11, 20, 50] {
+        let p = TraceParams {
+            startup: Duration::from_millis(1000 * ratio),
+            per_item: Duration::from_millis(1000),
+            ..params
+        };
+        let r = table2(p).unwrap();
+        println!("  ratio {ratio:>3}: {:.2}x", r.speedup());
+    }
+}

@@ -1,0 +1,333 @@
+//! External-command applications — the paper's generality claim.
+//!
+//! "LLMapReduce can launch any program in any language on any
+//! supercomputers with a standard scheduler" (§I).  This app wraps an
+//! arbitrary executable honouring the LLMapReduce API contract:
+//!
+//! * SISO mapper: `prog <input> <output>` per file (Fig 6's wrapper);
+//! * MIMO mapper: the engine still calls `process` per pair, but the
+//!   process is spawned once per *instance* in server mode when
+//!   `--mimo-server` style programs are used — here we model the paper's
+//!   simpler contract: the MIMO pair list is written by the launcher and
+//!   handed to the program once (`prog <pairlist>`, Fig 11/17).  Use
+//!   [`CommandMimoApp`] for that shape.
+//! * reducer: `prog <map_output_dir> <redout>` (Fig 14).
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::sync::Arc;
+
+use crate::apps::{MapApp, MapInstance, ReduceApp};
+use crate::error::{Error, Result};
+
+fn run_command(argv: &[String]) -> Result<()> {
+    let (prog, args) = argv.split_first().ok_or_else(|| {
+        Error::App {
+            app: "command".into(),
+            input: PathBuf::new(),
+            reason: "empty argv".into(),
+        }
+    })?;
+    let status = Command::new(prog).args(args).status().map_err(|e| {
+        Error::App {
+            app: prog.clone(),
+            input: PathBuf::new(),
+            reason: format!("spawn failed: {e}"),
+        }
+    })?;
+    if !status.success() {
+        return Err(Error::App {
+            app: prog.clone(),
+            input: PathBuf::new(),
+            reason: format!("exit status {status}"),
+        });
+    }
+    Ok(())
+}
+
+/// SISO external mapper: spawns `prog input output` per file.  The
+/// process spawn *is* the startup cost — exactly the overhead the paper
+/// measures for wrapper-script mappers.
+pub struct CommandApp {
+    argv: Vec<String>,
+}
+
+impl CommandApp {
+    /// `argv`: program + fixed leading arguments (the wrapper script and
+    /// its bound reference files, like Fig 13's `textignore.txt`).
+    pub fn new(argv: Vec<String>) -> Result<Arc<Self>> {
+        if argv.is_empty() {
+            return Err(Error::opt("command app needs a program"));
+        }
+        Ok(Arc::new(CommandApp { argv }))
+    }
+}
+
+impl MapApp for CommandApp {
+    fn name(&self) -> &str {
+        &self.argv[0]
+    }
+
+    fn startup(&self) -> Result<Box<dyn MapInstance>> {
+        Ok(Box::new(CommandInstance {
+            argv: self.argv.clone(),
+        }))
+    }
+}
+
+struct CommandInstance {
+    argv: Vec<String>,
+}
+
+impl MapInstance for CommandInstance {
+    fn process(&mut self, input: &Path, output: &Path) -> Result<()> {
+        let mut argv = self.argv.clone();
+        argv.push(input.display().to_string());
+        argv.push(output.display().to_string());
+        run_command(&argv)
+    }
+}
+
+/// MIMO external mapper: the program is spawned **once per task** with a
+/// pair-list file (Fig 12's `run_llmap_x` calling `MatlabCmdMulti.sh
+/// input_x`).  The launcher writes the list; the program loops over it.
+pub struct CommandMimoApp {
+    argv: Vec<String>,
+    /// Directory for generated pair lists.
+    list_dir: PathBuf,
+}
+
+impl CommandMimoApp {
+    pub fn new(argv: Vec<String>, list_dir: PathBuf) -> Result<Arc<Self>> {
+        if argv.is_empty() {
+            return Err(Error::opt("command app needs a program"));
+        }
+        std::fs::create_dir_all(&list_dir)
+            .map_err(|e| Error::io(list_dir.clone(), e))?;
+        Ok(Arc::new(CommandMimoApp { argv, list_dir }))
+    }
+}
+
+impl MapApp for CommandMimoApp {
+    fn name(&self) -> &str {
+        &self.argv[0]
+    }
+
+    fn startup(&self) -> Result<Box<dyn MapInstance>> {
+        Ok(Box::new(CommandMimoInstance {
+            argv: self.argv.clone(),
+            list_dir: self.list_dir.clone(),
+            pending: Vec::new(),
+        }))
+    }
+}
+
+/// Accumulates pairs, flushes the external program once on drop (the
+/// instance lives for exactly one MIMO task).
+struct CommandMimoInstance {
+    argv: Vec<String>,
+    list_dir: PathBuf,
+    pending: Vec<(PathBuf, PathBuf)>,
+}
+
+impl CommandMimoInstance {
+    fn flush(&mut self) -> Result<()> {
+        if self.pending.is_empty() {
+            return Ok(());
+        }
+        // Unique per flush: concurrent array tasks must not collide on
+        // the list path (fixed after a real race in the any_language
+        // example).
+        static SEQ: std::sync::atomic::AtomicU64 =
+            std::sync::atomic::AtomicU64::new(0);
+        let seq = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let list = self.list_dir.join(format!(
+            "pairs-{}-{seq}.list",
+            std::process::id(),
+        ));
+        let body = crate::workdir::scripts::mimo_input_list(&self.pending);
+        std::fs::write(&list, body)
+            .map_err(|e| Error::io(list.clone(), e))?;
+        let mut argv = self.argv.clone();
+        argv.push(list.display().to_string());
+        let result = run_command(&argv);
+        let _ = std::fs::remove_file(&list);
+        self.pending.clear();
+        result
+    }
+}
+
+impl MapInstance for CommandMimoInstance {
+    fn process(&mut self, input: &Path, output: &Path) -> Result<()> {
+        // Batch; the run_map_task driver calls process per pair, and the
+        // batch flushes when the instance drops at end of task.
+        self.pending.push((input.to_path_buf(), output.to_path_buf()));
+        // Flush opportunistically at a batch bound so errors surface
+        // before drop (drop cannot return Result).
+        if self.pending.len() >= 4096 {
+            self.flush()?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for CommandMimoInstance {
+    fn drop(&mut self) {
+        if let Err(e) = self.flush() {
+            eprintln!("command mimo flush failed: {e}");
+        }
+    }
+}
+
+/// External reducer: `prog <map_output_dir> <redout>`.
+pub struct CommandReducer {
+    argv: Vec<String>,
+}
+
+impl CommandReducer {
+    pub fn new(argv: Vec<String>) -> Result<Arc<Self>> {
+        if argv.is_empty() {
+            return Err(Error::opt("command reducer needs a program"));
+        }
+        Ok(Arc::new(CommandReducer { argv }))
+    }
+}
+
+impl ReduceApp for CommandReducer {
+    fn name(&self) -> &str {
+        &self.argv[0]
+    }
+
+    fn reduce(&self, dir: &Path, out: &Path) -> Result<()> {
+        let mut argv = self.argv.clone();
+        argv.push(dir.display().to_string());
+        argv.push(out.display().to_string());
+        run_command(&argv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("llmr-cmd-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// A tiny shell mapper: copies input to output, uppercased.
+    fn write_mapper_script(dir: &Path) -> PathBuf {
+        let p = dir.join("mapper.sh");
+        fs::write(
+            &p,
+            "#!/bin/sh\ntr '[:lower:]' '[:upper:]' < \"$1\" > \"$2\"\n",
+        )
+        .unwrap();
+        make_exec(&p);
+        p
+    }
+
+    fn make_exec(p: &Path) {
+        use std::os::unix::fs::PermissionsExt;
+        let mut perm = fs::metadata(p).unwrap().permissions();
+        perm.set_mode(0o755);
+        fs::set_permissions(p, perm).unwrap();
+    }
+
+    #[test]
+    fn siso_command_runs_per_file() {
+        let d = tmp("siso");
+        let script = write_mapper_script(&d);
+        let inp = d.join("x.txt");
+        fs::write(&inp, "hello").unwrap();
+        let out = d.join("x.txt.out");
+        let app =
+            CommandApp::new(vec![script.display().to_string()]).unwrap();
+        let mut inst = app.startup().unwrap();
+        inst.process(&inp, &out).unwrap();
+        assert_eq!(fs::read_to_string(&out).unwrap(), "HELLO");
+    }
+
+    #[test]
+    fn failing_command_reports_status() {
+        let d = tmp("fail");
+        let p = d.join("bad.sh");
+        fs::write(&p, "#!/bin/sh\nexit 3\n").unwrap();
+        make_exec(&p);
+        let app = CommandApp::new(vec![p.display().to_string()]).unwrap();
+        let mut inst = app.startup().unwrap();
+        let err = inst
+            .process(Path::new("a"), Path::new("b"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("exit status"), "{err}");
+    }
+
+    #[test]
+    fn mimo_command_gets_pair_list_once() {
+        let d = tmp("mimo");
+        // Mapper that logs its invocation then processes the pair list.
+        let p = d.join("multi.sh");
+        fs::write(
+            &p,
+            format!(
+                "#!/bin/sh\necho run >> {}/invocations\n\
+                 while read -r i o; do cp \"$i\" \"$o\"; done < \"$1\"\n",
+                d.display()
+            ),
+        )
+        .unwrap();
+        make_exec(&p);
+        let app = CommandMimoApp::new(
+            vec![p.display().to_string()],
+            d.join("lists"),
+        )
+        .unwrap();
+        let pairs: Vec<_> = (0..3)
+            .map(|i| {
+                let inp = d.join(format!("f{i}.txt"));
+                fs::write(&inp, format!("{i}")).unwrap();
+                (inp, d.join(format!("f{i}.txt.out")))
+            })
+            .collect();
+        {
+            let mut inst = app.startup().unwrap();
+            for (i, o) in &pairs {
+                inst.process(i, o).unwrap();
+            }
+        } // drop flushes
+        for (i, o) in &pairs {
+            assert_eq!(
+                fs::read_to_string(o).unwrap(),
+                fs::read_to_string(i).unwrap()
+            );
+        }
+        // Spawned exactly once.
+        let inv = fs::read_to_string(d.join("invocations")).unwrap();
+        assert_eq!(inv.lines().count(), 1);
+    }
+
+    #[test]
+    fn command_reducer_contract() {
+        let d = tmp("reduce");
+        fs::write(d.join("a.out"), "1\n").unwrap();
+        fs::write(d.join("b.out"), "2\n").unwrap();
+        let p = d.join("red.sh");
+        fs::write(&p, "#!/bin/sh\ncat \"$1\"/*.out > \"$2\"\n").unwrap();
+        make_exec(&p);
+        let red = CommandReducer::new(vec![p.display().to_string()]).unwrap();
+        let out = d.join("merged");
+        red.reduce(&d, &out).unwrap();
+        assert_eq!(fs::read_to_string(&out).unwrap(), "1\n2\n");
+    }
+
+    #[test]
+    fn empty_argv_rejected() {
+        assert!(CommandApp::new(vec![]).is_err());
+        assert!(CommandReducer::new(vec![]).is_err());
+    }
+}

@@ -1,0 +1,452 @@
+//! Image conversion map application (§III-A).
+//!
+//! The Rust + XLA analogue of the paper's MATLAB `imageConvert()`:
+//! read an RGB image, convert to gray scale, write the result.  Images are
+//! PPM (P6) in, PGM (P5) out — simple formats a synthetic workload
+//! generator can produce byte-exactly.
+//!
+//! The compute is the AOT-compiled `image_convert` artifact (L2 JAX graph
+//! over the L1 Pallas grayscale kernel).  `startup()` compiles the
+//! artifact — the expensive launch the MIMO option amortizes, standing in
+//! for MATLAB's interpreter boot (DESIGN.md §3).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::apps::{CostHint, MapApp, MapInstance};
+use crate::error::{Error, IoContext, Result};
+use crate::runtime::{ArtifactEntry, Manifest, XlaExecutable};
+
+/// A decoded RGB image, f32 planes in [0, 1].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Image {
+    pub width: usize,
+    pub height: usize,
+    /// HWC interleaved, length = height*width*3.
+    pub rgb: Vec<f32>,
+}
+
+/// Read a binary PPM (P6, maxval 255).
+pub fn read_ppm(path: &Path) -> Result<Image> {
+    let data = std::fs::read(path).at(path)?;
+    let mut p = HeaderParser { data: &data, pos: 0 };
+    let magic = p.token(path)?;
+    if magic != b"P6" {
+        return Err(Error::Format {
+            kind: "ppm",
+            path: path.to_path_buf(),
+            reason: format!("bad magic {:?}", String::from_utf8_lossy(magic)),
+        });
+    }
+    let width = p.number(path)?;
+    let height = p.number(path)?;
+    let maxval = p.number(path)?;
+    if maxval != 255 {
+        return Err(Error::Format {
+            kind: "ppm",
+            path: path.to_path_buf(),
+            reason: format!("unsupported maxval {maxval}"),
+        });
+    }
+    p.single_whitespace();
+    let need = width * height * 3;
+    let pixels = &p.data[p.pos..];
+    if pixels.len() < need {
+        return Err(Error::Format {
+            kind: "ppm",
+            path: path.to_path_buf(),
+            reason: format!("short pixel data: {} < {need}", pixels.len()),
+        });
+    }
+    let rgb = pixels[..need].iter().map(|&b| b as f32 / 255.0).collect();
+    Ok(Image { width, height, rgb })
+}
+
+/// Write a binary PPM (P6, maxval 255) from f32 [0, 1] HWC data.
+pub fn write_ppm(path: &Path, img: &Image) -> Result<()> {
+    let mut out =
+        format!("P6\n{} {}\n255\n", img.width, img.height).into_bytes();
+    out.extend(img.rgb.iter().map(|&v| quantize(v)));
+    std::fs::write(path, out).at(path)
+}
+
+/// Write a binary PGM (P5, maxval 255) from f32 [0, 1] gray data.
+pub fn write_pgm(
+    path: &Path,
+    width: usize,
+    height: usize,
+    gray: &[f32],
+) -> Result<()> {
+    debug_assert_eq!(gray.len(), width * height);
+    let mut out = format!("P5\n{width} {height}\n255\n").into_bytes();
+    out.extend(gray.iter().map(|&v| quantize(v)));
+    std::fs::write(path, out).at(path)
+}
+
+/// Read a binary PGM (P5, maxval 255) into f32 [0, 1].
+pub fn read_pgm(path: &Path) -> Result<(usize, usize, Vec<f32>)> {
+    let data = std::fs::read(path).at(path)?;
+    let mut p = HeaderParser { data: &data, pos: 0 };
+    let magic = p.token(path)?;
+    if magic != b"P5" {
+        return Err(Error::Format {
+            kind: "pgm",
+            path: path.to_path_buf(),
+            reason: "bad magic".into(),
+        });
+    }
+    let width = p.number(path)?;
+    let height = p.number(path)?;
+    let _maxval = p.number(path)?;
+    p.single_whitespace();
+    let need = width * height;
+    let gray = p.data[p.pos..p.pos + need]
+        .iter()
+        .map(|&b| b as f32 / 255.0)
+        .collect();
+    Ok((width, height, gray))
+}
+
+fn quantize(v: f32) -> u8 {
+    (v.clamp(0.0, 1.0) * 255.0).round() as u8
+}
+
+struct HeaderParser<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> HeaderParser<'a> {
+    fn skip_ws_and_comments(&mut self) {
+        loop {
+            while self
+                .data
+                .get(self.pos)
+                .is_some_and(|b| b.is_ascii_whitespace())
+            {
+                self.pos += 1;
+            }
+            if self.data.get(self.pos) == Some(&b'#') {
+                while self.data.get(self.pos).is_some_and(|&b| b != b'\n') {
+                    self.pos += 1;
+                }
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn token(&mut self, path: &Path) -> Result<&'a [u8]> {
+        self.skip_ws_and_comments();
+        let start = self.pos;
+        while self
+            .data
+            .get(self.pos)
+            .is_some_and(|b| !b.is_ascii_whitespace())
+        {
+            self.pos += 1;
+        }
+        if start == self.pos {
+            return Err(Error::Format {
+                kind: "pnm",
+                path: path.to_path_buf(),
+                reason: "truncated header".into(),
+            });
+        }
+        Ok(&self.data[start..self.pos])
+    }
+
+    fn number(&mut self, path: &Path) -> Result<usize> {
+        let tok = self.token(path)?;
+        std::str::from_utf8(tok)
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| Error::Format {
+                kind: "pnm",
+                path: path.to_path_buf(),
+                reason: "bad number in header".into(),
+            })
+    }
+
+    /// Exactly one whitespace byte separates header and pixels.
+    fn single_whitespace(&mut self) {
+        if self
+            .data
+            .get(self.pos)
+            .is_some_and(|b| b.is_ascii_whitespace())
+        {
+            self.pos += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The map application
+// ---------------------------------------------------------------------------
+
+/// `imageConvert` as an LLMapReduce map application.
+///
+/// Generic over the bound artifact: `new` binds the plain grayscale
+/// `image_convert`; [`ImageConvertApp::pipeline`] binds the richer
+/// `image_pipeline` (grayscale + 3x3 blur — the Table II-style
+/// multi-stage image processing).  Both share the (H, W, 3) -> (H, W)
+/// contract.
+pub struct ImageConvertApp {
+    entry: ArtifactEntry,
+    name: &'static str,
+    /// Expected image shape from the artifact manifest (H, W).
+    height: usize,
+    width: usize,
+}
+
+impl ImageConvertApp {
+    /// Bind to the `image_convert` artifact in `manifest`.
+    pub fn new(manifest: &Manifest) -> Result<Arc<Self>> {
+        Self::bind(manifest, "image_convert", "imageconvert")
+    }
+
+    /// Bind to the `image_pipeline` artifact (grayscale + box blur).
+    pub fn pipeline(manifest: &Manifest) -> Result<Arc<Self>> {
+        Self::bind(manifest, "image_pipeline", "imagepipeline")
+    }
+
+    fn bind(
+        manifest: &Manifest,
+        artifact: &str,
+        name: &'static str,
+    ) -> Result<Arc<Self>> {
+        let entry = manifest.entry(artifact)?.clone();
+        let shape = &entry.inputs[0].shape;
+        if shape.len() != 3 || shape[2] != 3 {
+            return Err(Error::Artifact {
+                name: artifact.into(),
+                reason: format!("unexpected shape {shape:?}"),
+            });
+        }
+        Ok(Arc::new(ImageConvertApp {
+            height: shape[0],
+            width: shape[1],
+            name,
+            entry,
+        }))
+    }
+
+    pub fn image_shape(&self) -> (usize, usize) {
+        (self.height, self.width)
+    }
+}
+
+impl MapApp for ImageConvertApp {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn startup(&self) -> Result<Box<dyn MapInstance>> {
+        // The expensive launch: XLA-compile the artifact.
+        let exe = XlaExecutable::from_entry(&self.entry)?;
+        Ok(Box::new(ImageConvertInstance {
+            exe,
+            height: self.height,
+            width: self.width,
+        }))
+    }
+
+    fn cost_hint(&self) -> CostHint {
+        // Refined by calibration at bench time; these are ballpark values
+        // measured on this container (compile ~15ms, convert ~1ms).
+        CostHint {
+            startup: std::time::Duration::from_millis(15),
+            per_item: std::time::Duration::from_millis(1),
+        }
+    }
+}
+
+struct ImageConvertInstance {
+    exe: XlaExecutable,
+    height: usize,
+    width: usize,
+}
+
+impl MapInstance for ImageConvertInstance {
+    fn process(&mut self, input: &Path, output: &Path) -> Result<()> {
+        let img = read_ppm(input)?;
+        if (img.height, img.width) != (self.height, self.width) {
+            return Err(Error::App {
+                app: "imageconvert".into(),
+                input: input.to_path_buf(),
+                reason: format!(
+                    "image is {}x{}, artifact wants {}x{}",
+                    img.height, img.width, self.height, self.width
+                ),
+            });
+        }
+        let gray = self.exe.run_f32(&[&img.rgb])?;
+        write_pgm(output, img.width, img.height, &gray)
+    }
+}
+
+/// Pure-Rust reference conversion (BT.601), used by tests to validate the
+/// XLA path end-to-end.
+pub fn grayscale_ref(img: &Image) -> Vec<f32> {
+    const WR: f32 = 0.298936021293775;
+    const WG: f32 = 0.587043074451121;
+    const WB: f32 = 0.114020904255103;
+    img.rgb
+        .chunks_exact(3)
+        .map(|px| WR * px[0] + WG * px[1] + WB * px[2])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::fs;
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("llmr-img-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn random_image(h: usize, w: usize, seed: u64) -> Image {
+        let mut rng = Rng::new(seed);
+        Image {
+            width: w,
+            height: h,
+            rgb: (0..h * w * 3).map(|_| rng.next_f32()).collect(),
+        }
+    }
+
+    #[test]
+    fn ppm_roundtrip() {
+        let d = tmp("roundtrip");
+        let img = random_image(16, 24, 1);
+        let p = d.join("x.ppm");
+        write_ppm(&p, &img).unwrap();
+        let back = read_ppm(&p).unwrap();
+        assert_eq!(back.width, 24);
+        assert_eq!(back.height, 16);
+        // Quantization error at most 1/255 per channel (plus rounding).
+        for (a, b) in img.rgb.iter().zip(&back.rgb) {
+            assert!((a - b).abs() <= 0.5 / 255.0 + 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn ppm_with_comments() {
+        let d = tmp("comments");
+        let p = d.join("c.ppm");
+        let mut bytes = b"P6\n# a comment\n2 1\n255\n".to_vec();
+        bytes.extend([255, 0, 0, 0, 255, 0]);
+        fs::write(&p, bytes).unwrap();
+        let img = read_ppm(&p).unwrap();
+        assert_eq!((img.width, img.height), (2, 1));
+        assert!((img.rgb[0] - 1.0).abs() < 1e-6);
+        assert!((img.rgb[4] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ppm_rejects_bad_magic_and_truncation() {
+        let d = tmp("bad");
+        let p = d.join("bad.ppm");
+        fs::write(&p, b"P5\n1 1\n255\nxxx").unwrap();
+        assert!(read_ppm(&p).is_err());
+        fs::write(&p, b"P6\n4 4\n255\nxx").unwrap();
+        let err = read_ppm(&p).unwrap_err().to_string();
+        assert!(err.contains("short pixel data"), "{err}");
+    }
+
+    #[test]
+    fn pgm_roundtrip() {
+        let d = tmp("pgm");
+        let p = d.join("g.pgm");
+        let gray: Vec<f32> = (0..12).map(|i| i as f32 / 11.0).collect();
+        write_pgm(&p, 4, 3, &gray).unwrap();
+        let (w, h, back) = read_pgm(&p).unwrap();
+        assert_eq!((w, h), (4, 3));
+        for (a, b) in gray.iter().zip(&back) {
+            assert!((a - b).abs() <= 0.5 / 255.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn grayscale_ref_weights() {
+        let img = Image {
+            width: 1,
+            height: 1,
+            rgb: vec![1.0, 1.0, 1.0],
+        };
+        let g = grayscale_ref(&img);
+        assert!((g[0] - 1.0).abs() < 1e-6, "white stays white");
+    }
+
+    // -- XLA-backed tests (skip silently when artifacts absent) ------------
+
+    #[test]
+    fn image_convert_app_matches_ref() {
+        let Ok(m) = Manifest::discover() else { return };
+        let app = ImageConvertApp::new(&m).unwrap();
+        let (h, w) = app.image_shape();
+        let d = tmp("app");
+        let img = random_image(h, w, 42);
+        let inp = d.join("in.ppm");
+        let out = d.join("in.ppm.out");
+        write_ppm(&inp, &img).unwrap();
+
+        let mut inst = app.startup().unwrap();
+        inst.process(&inp, &out).unwrap();
+
+        let (ow, oh, gray) = read_pgm(&out).unwrap();
+        assert_eq!((ow, oh), (w, h));
+        // Compare against the pure-Rust reference on the *quantized* input.
+        let quantized = read_ppm(&inp).unwrap();
+        let expect = grayscale_ref(&quantized);
+        for (a, b) in gray.iter().zip(&expect) {
+            assert!((a - b).abs() <= 1.0 / 255.0 + 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn image_pipeline_app_blurs() {
+        let Ok(m) = Manifest::discover() else { return };
+        let Ok(app) = ImageConvertApp::pipeline(&m) else { return };
+        let (h, w) = app.image_shape();
+        let d = tmp("pipeline");
+        // A white image stays ~white inside; borders darken (zero pad).
+        let img = Image {
+            width: w,
+            height: h,
+            rgb: vec![1.0; h * w * 3],
+        };
+        let inp = d.join("white.ppm");
+        let out = d.join("white.ppm.out");
+        write_ppm(&inp, &img).unwrap();
+        let mut inst = app.startup().unwrap();
+        inst.process(&inp, &out).unwrap();
+        let (_, _, gray) = read_pgm(&out).unwrap();
+        let center = gray[(h / 2) * w + w / 2];
+        let corner = gray[0];
+        assert!((center - 1.0).abs() < 2.0 / 255.0, "center {center}");
+        assert!(corner < center, "borders darkened by zero padding");
+    }
+
+    #[test]
+    fn image_convert_rejects_wrong_size() {
+        let Ok(m) = Manifest::discover() else { return };
+        let app = ImageConvertApp::new(&m).unwrap();
+        let d = tmp("wrongsize");
+        let img = random_image(8, 8, 1);
+        let inp = d.join("small.ppm");
+        write_ppm(&inp, &img).unwrap();
+        let mut inst = app.startup().unwrap();
+        let err = inst
+            .process(&inp, &d.join("small.out"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("artifact wants"), "{err}");
+    }
+}

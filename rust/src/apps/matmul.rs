@@ -1,0 +1,430 @@
+//! Matrix chain-multiply map application — the §IV scalability workload.
+//!
+//! "a MATLAB code that reads in a list of square matrices and multiplies
+//! the matrices.  512 input data files were created..."
+//!
+//! File format (`.mat` text, self-describing so generators and tests can
+//! produce it):
+//!
+//! ```text
+//! MATLIST <count> <n>
+//! <n*n f32 values, whitespace separated>   x count
+//! ```
+//!
+//! The map application chain-multiplies the matrices (via the AOT
+//! `matmul_chain` artifact when the file matches its static (L, N) shape,
+//! element-streaming through `matmul_pair` otherwise) and writes the
+//! product plus its Frobenius norm to the output file.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::apps::{CostHint, MapApp, MapInstance};
+use crate::error::{Error, IoContext, Result};
+use crate::runtime::{ArtifactEntry, Manifest, XlaExecutable};
+
+/// A list of square matrices from one input file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatrixList {
+    pub n: usize,
+    /// `count` matrices, each n*n f32, concatenated.
+    pub data: Vec<f32>,
+}
+
+impl MatrixList {
+    pub fn count(&self) -> usize {
+        self.data.len() / (self.n * self.n)
+    }
+
+    pub fn matrix(&self, i: usize) -> &[f32] {
+        let sz = self.n * self.n;
+        &self.data[i * sz..(i + 1) * sz]
+    }
+}
+
+/// Read a MATLIST file.
+pub fn read_matrix_list(path: &Path) -> Result<MatrixList> {
+    let text = std::fs::read_to_string(path).at(path)?;
+    let mut tokens = text.split_ascii_whitespace();
+    let bad = |reason: String| Error::Format {
+        kind: "matlist",
+        path: path.to_path_buf(),
+        reason,
+    };
+    if tokens.next() != Some("MATLIST") {
+        return Err(bad("missing MATLIST magic".into()));
+    }
+    let count: usize = tokens
+        .next()
+        .and_then(|t| t.parse().ok())
+        .ok_or_else(|| bad("bad count".into()))?;
+    let n: usize = tokens
+        .next()
+        .and_then(|t| t.parse().ok())
+        .ok_or_else(|| bad("bad n".into()))?;
+    let need = count * n * n;
+    let mut data = Vec::with_capacity(need);
+    for tok in tokens.by_ref().take(need) {
+        data.push(
+            tok.parse::<f32>()
+                .map_err(|_| bad(format!("bad value '{tok}'")))?,
+        );
+    }
+    if data.len() != need {
+        return Err(bad(format!("expected {need} values, got {}", data.len())));
+    }
+    Ok(MatrixList { n, data })
+}
+
+/// Write a MATLIST file.
+pub fn write_matrix_list(path: &Path, list: &MatrixList) -> Result<()> {
+    use std::fmt::Write as _;
+    let mut out = format!("MATLIST {} {}\n", list.count(), list.n);
+    for m in 0..list.count() {
+        let mat = list.matrix(m);
+        for row in mat.chunks(list.n) {
+            for (i, v) in row.iter().enumerate() {
+                if i > 0 {
+                    out.push(' ');
+                }
+                let _ = write!(out, "{v}");
+            }
+            out.push('\n');
+        }
+    }
+    std::fs::write(path, out).at(path)
+}
+
+/// Pure-Rust chain product for validation (row-major, f32).
+pub fn chain_product_ref(list: &MatrixList) -> Vec<f32> {
+    let n = list.n;
+    let mut acc = list.matrix(0).to_vec();
+    let mut next = vec![0f32; n * n];
+    for m in 1..list.count() {
+        let b = list.matrix(m);
+        for i in 0..n {
+            for k in 0..n {
+                let a = acc[i * n + k];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &b[k * n..(k + 1) * n];
+                let orow = &mut next[i * n..(i + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += a * bv;
+                }
+            }
+        }
+        std::mem::swap(&mut acc, &mut next);
+        next.iter_mut().for_each(|v| *v = 0.0);
+    }
+    acc
+}
+
+/// Frobenius norm.
+pub fn frobenius(m: &[f32]) -> f32 {
+    m.iter().map(|v| v * v).sum::<f32>().sqrt()
+}
+
+/// Output format written by the app: `MATRESULT <n>` header, the product
+/// matrix, then `FROBENIUS <value>`.
+pub fn write_result(path: &Path, n: usize, product: &[f32]) -> Result<()> {
+    use std::fmt::Write as _;
+    let mut out = format!("MATRESULT {n}\n");
+    for row in product.chunks(n) {
+        for (i, v) in row.iter().enumerate() {
+            if i > 0 {
+                out.push(' ');
+            }
+            let _ = write!(out, "{v}");
+        }
+        out.push('\n');
+    }
+    let _ = writeln!(out, "FROBENIUS {}", frobenius(product));
+    std::fs::write(path, out).at(path)
+}
+
+/// Parse the Frobenius line back from a result file (used by the reducer).
+pub fn read_result_frobenius(path: &Path) -> Result<f32> {
+    let text = std::fs::read_to_string(path).at(path)?;
+    for line in text.lines().rev() {
+        if let Some(v) = line.strip_prefix("FROBENIUS ") {
+            return v.trim().parse().map_err(|_| Error::Format {
+                kind: "matresult",
+                path: path.to_path_buf(),
+                reason: "bad FROBENIUS value".into(),
+            });
+        }
+    }
+    Err(Error::Format {
+        kind: "matresult",
+        path: path.to_path_buf(),
+        reason: "no FROBENIUS line".into(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// The map application
+// ---------------------------------------------------------------------------
+
+/// The matrix chain-multiply mapper over the AOT artifacts.
+pub struct MatmulChainApp {
+    chain_entry: ArtifactEntry,
+    pair_entry: ArtifactEntry,
+    /// Static (L, N) of the `matmul_chain` artifact.
+    chain_len: usize,
+    n: usize,
+}
+
+impl MatmulChainApp {
+    pub fn new(manifest: &Manifest) -> Result<Arc<Self>> {
+        let chain_entry = manifest.entry("matmul_chain")?.clone();
+        let pair_entry = manifest.entry("matmul_pair")?.clone();
+        let shape = &chain_entry.inputs[0].shape; // (L, N, N)
+        if shape.len() != 3 || shape[1] != shape[2] {
+            return Err(Error::Artifact {
+                name: "matmul_chain".into(),
+                reason: format!("unexpected shape {shape:?}"),
+            });
+        }
+        Ok(Arc::new(MatmulChainApp {
+            chain_len: shape[0],
+            n: shape[1],
+            chain_entry,
+            pair_entry,
+        }))
+    }
+
+    /// The (chain length, matrix size) the fast path accepts.
+    pub fn static_shape(&self) -> (usize, usize) {
+        (self.chain_len, self.n)
+    }
+}
+
+impl MapApp for MatmulChainApp {
+    fn name(&self) -> &str {
+        "matmulchain"
+    }
+
+    fn startup(&self) -> Result<Box<dyn MapInstance>> {
+        // The expensive launch: compile BOTH artifacts (the paper's MATLAB
+        // boot loads the whole toolbox, not one function).
+        let chain = XlaExecutable::from_entry(&self.chain_entry)?;
+        let pair = XlaExecutable::from_entry(&self.pair_entry)?;
+        Ok(Box::new(MatmulChainInstance {
+            chain,
+            pair,
+            chain_len: self.chain_len,
+            n: self.n,
+        }))
+    }
+
+    fn cost_hint(&self) -> CostHint {
+        CostHint {
+            startup: std::time::Duration::from_millis(30),
+            per_item: std::time::Duration::from_millis(3),
+        }
+    }
+}
+
+struct MatmulChainInstance {
+    chain: XlaExecutable,
+    pair: XlaExecutable,
+    chain_len: usize,
+    n: usize,
+}
+
+impl MapInstance for MatmulChainInstance {
+    fn process(&mut self, input: &Path, output: &Path) -> Result<()> {
+        let list = read_matrix_list(input)?;
+        if list.n != self.n {
+            return Err(Error::App {
+                app: "matmulchain".into(),
+                input: input.to_path_buf(),
+                reason: format!(
+                    "matrix size {} != artifact size {}",
+                    list.n, self.n
+                ),
+            });
+        }
+        let product = if list.count() == self.chain_len {
+            // Fast path: single fused chain executable.
+            self.chain.run_f32(&[&list.data])?
+        } else {
+            // General path: fold through the pair executable.
+            let mut acc = list.matrix(0).to_vec();
+            for m in 1..list.count() {
+                acc = self.pair.run_f32(&[&acc, list.matrix(m)])?;
+            }
+            acc
+        };
+        write_result(output, self.n, &product)
+    }
+}
+
+/// The reducer for the matmul pipeline: sums Frobenius norms across all
+/// mapper outputs — a one-number summary like the paper's reduce step.
+pub struct FrobeniusSumReducer;
+
+impl crate::apps::ReduceApp for FrobeniusSumReducer {
+    fn name(&self) -> &str {
+        "frobsum-reducer"
+    }
+
+    fn reduce(&self, dir: &Path, out: &Path) -> Result<()> {
+        let mut files: Vec<PathBuf> = std::fs::read_dir(dir)
+            .at(dir)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.is_file()
+                    && p.file_name()
+                        .and_then(|n| n.to_str())
+                        .is_some_and(|n| !n.starts_with('.'))
+                    && *p != *out
+            })
+            .collect();
+        files.sort();
+        let mut total = 0f64;
+        let mut count = 0usize;
+        for f in &files {
+            total += read_result_frobenius(f)? as f64;
+            count += 1;
+        }
+        std::fs::write(
+            out,
+            format!("FILES {count}\nFROBENIUS_SUM {total}\n"),
+        )
+        .at(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::fs;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("llmr-mat-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn random_list(count: usize, n: usize, seed: u64) -> MatrixList {
+        let mut rng = Rng::new(seed);
+        // Scale down so chain products stay in f32 range.
+        MatrixList {
+            n,
+            data: (0..count * n * n)
+                .map(|_| (rng.next_f32() - 0.5) * 0.2)
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn matlist_roundtrip() {
+        let d = tmp("roundtrip");
+        let list = random_list(3, 4, 1);
+        let p = d.join("m.mat");
+        write_matrix_list(&p, &list).unwrap();
+        let back = read_matrix_list(&p).unwrap();
+        assert_eq!(back.n, 4);
+        assert_eq!(back.count(), 3);
+        for (a, b) in list.data.iter().zip(&back.data) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matlist_rejects_malformed() {
+        let d = tmp("badmat");
+        let p = d.join("bad.mat");
+        fs::write(&p, "NOTMAT 1 2\n").unwrap();
+        assert!(read_matrix_list(&p).is_err());
+        fs::write(&p, "MATLIST 2 2\n1 2 3\n").unwrap();
+        let err = read_matrix_list(&p).unwrap_err().to_string();
+        assert!(err.contains("expected 8 values"), "{err}");
+    }
+
+    #[test]
+    fn chain_ref_identity() {
+        // I * A = A
+        let n = 3;
+        let mut data = vec![0f32; n * n];
+        for i in 0..n {
+            data[i * n + i] = 1.0;
+        }
+        let a: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        data.extend(&a);
+        let list = MatrixList { n, data };
+        assert_eq!(chain_product_ref(&list), a);
+    }
+
+    #[test]
+    fn result_file_roundtrip() {
+        let d = tmp("result");
+        let p = d.join("r.out");
+        let product = vec![3.0, 0.0, 0.0, 4.0];
+        write_result(&p, 2, &product).unwrap();
+        let f = read_result_frobenius(&p).unwrap();
+        assert!((f - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn frobsum_reducer_sums() {
+        let d = tmp("frobsum");
+        write_result(&d.join("a.out"), 2, &[3.0, 0.0, 0.0, 4.0]).unwrap();
+        write_result(&d.join("b.out"), 2, &[6.0, 0.0, 0.0, 8.0]).unwrap();
+        let out = d.join("llmapreduce.out");
+        crate::apps::ReduceApp::reduce(&FrobeniusSumReducer, &d, &out)
+            .unwrap();
+        let text = fs::read_to_string(&out).unwrap();
+        assert!(text.contains("FILES 2"));
+        assert!(text.contains("FROBENIUS_SUM 15"), "{text}");
+    }
+
+    // -- XLA-backed (skip when artifacts absent) ----------------------------
+
+    #[test]
+    fn app_matches_reference_on_static_shape() {
+        let Ok(m) = Manifest::discover() else { return };
+        let app = MatmulChainApp::new(&m).unwrap();
+        let (l, n) = app.static_shape();
+        let d = tmp("app");
+        let list = random_list(l, n, 7);
+        let inp = d.join("in.mat");
+        write_matrix_list(&inp, &list).unwrap();
+        let out = d.join("in.mat.out");
+        let mut inst = app.startup().unwrap();
+        inst.process(&inp, &out).unwrap();
+
+        let quantized = read_matrix_list(&inp).unwrap();
+        let expect = chain_product_ref(&quantized);
+        let f_expect = frobenius(&expect);
+        let f_got = read_result_frobenius(&out).unwrap();
+        assert!(
+            (f_got - f_expect).abs() / f_expect.max(1e-6) < 1e-3,
+            "{f_got} vs {f_expect}"
+        );
+    }
+
+    #[test]
+    fn app_general_path_other_lengths() {
+        let Ok(m) = Manifest::discover() else { return };
+        let app = MatmulChainApp::new(&m).unwrap();
+        let (_, n) = app.static_shape();
+        let d = tmp("general");
+        let list = random_list(2, n, 9); // != static chain length
+        let inp = d.join("in2.mat");
+        write_matrix_list(&inp, &list).unwrap();
+        let out = d.join("in2.mat.out");
+        let mut inst = app.startup().unwrap();
+        inst.process(&inp, &out).unwrap();
+        let expect = frobenius(&chain_product_ref(&read_matrix_list(&inp).unwrap()));
+        let got = read_result_frobenius(&out).unwrap();
+        assert!((got - expect).abs() / expect.max(1e-6) < 1e-3);
+    }
+}

@@ -1,0 +1,327 @@
+//! Map and reduce applications.
+//!
+//! The paper's launcher is language-agnostic: "LLMapReduce can launch any
+//! program in any language" (§I).  The API contract (§II):
+//!
+//! * a **map** application takes two arguments — input filename, output
+//!   filename;
+//! * a **reduce** application takes two arguments — the directory where
+//!   the map results reside, and the reduce output filename;
+//! * in MIMO mode the map application is started once and reads multiple
+//!   lines of "input output" pairs from a generated file (Fig 11/17).
+//!
+//! The [`MapApp`] / [`MapInstance`] split makes the paper's central cost
+//! explicit: **`startup()` is the expensive application launch** (MATLAB
+//! interpreter boot in the paper; PJRT client + XLA compile here), and
+//! `process()` is the cheap per-file work.  SISO pays `startup()` per
+//! file; MIMO pays it once per array task.
+
+pub mod command;
+pub mod image;
+pub mod matmul;
+pub mod wordcount;
+
+use std::path::Path;
+use std::time::Duration;
+
+use crate::error::Result;
+
+/// Cost hints for the discrete-event simulator, used when a study runs in
+/// pure-timing mode (no real data).  Values come from calibration runs on
+/// the local engine (`scheduler::cost::Calibration`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostHint {
+    /// One application launch (the paper's "startup overhead").
+    pub startup: Duration,
+    /// Processing one input file after launch.
+    pub per_item: Duration,
+}
+
+impl Default for CostHint {
+    fn default() -> Self {
+        // Conservative defaults in the ratio the paper reports for MATLAB
+        // image processing (startup dominates short per-file work).
+        CostHint {
+            startup: Duration::from_millis(100),
+            per_item: Duration::from_millis(10),
+        }
+    }
+}
+
+/// A map application factory.  One `MapApp` is shared by all array tasks;
+/// each launch materializes a [`MapInstance`].
+pub trait MapApp: Send + Sync {
+    /// Application name (used as the scheduler job name, like
+    /// `MatlabCmd.sh` in Fig 8).
+    fn name(&self) -> &str;
+
+    /// Launch the application — this is the expensive step whose repeated
+    /// cost the MIMO option eliminates.  Implementations must do their
+    /// real initialization here (load reference data, compile the XLA
+    /// executable, ...), not lazily in `process`.
+    fn startup(&self) -> Result<Box<dyn MapInstance>>;
+
+    /// Cost hints for simulator-only studies.
+    fn cost_hint(&self) -> CostHint {
+        CostHint::default()
+    }
+}
+
+/// A launched map application instance.
+pub trait MapInstance {
+    /// Process one (input, output) pair — the body of the paper's mapper.
+    fn process(&mut self, input: &Path, output: &Path) -> Result<()>;
+}
+
+/// A reduce application: merges the map output directory into one file
+/// (Fig 1 steps 4–5).
+pub trait ReduceApp: Send + Sync {
+    fn name(&self) -> &str;
+
+    /// Scan `map_output_dir` and write the merged result to `out_file`.
+    fn reduce(&self, map_output_dir: &Path, out_file: &Path) -> Result<()>;
+}
+
+/// Blanket helper: run a full SISO or MIMO task over an instance-producing
+/// app, returning (startup_total, compute_total, launches).
+/// Shared by the local engine and the executing simulator.
+pub fn run_map_task(
+    app: &dyn MapApp,
+    pairs: &[(std::path::PathBuf, std::path::PathBuf)],
+    mimo: bool,
+) -> Result<(Duration, Duration, usize)> {
+    let mut startup_total = Duration::ZERO;
+    let mut compute_total = Duration::ZERO;
+    let mut launches = 0usize;
+
+    if mimo {
+        if pairs.is_empty() {
+            return Ok((Duration::ZERO, Duration::ZERO, 0));
+        }
+        let t0 = std::time::Instant::now();
+        let mut inst = app.startup()?;
+        startup_total += t0.elapsed();
+        launches += 1;
+        for (input, output) in pairs {
+            let t1 = std::time::Instant::now();
+            inst.process(input, output)?;
+            compute_total += t1.elapsed();
+        }
+    } else {
+        for (input, output) in pairs {
+            let t0 = std::time::Instant::now();
+            let mut inst = app.startup()?;
+            startup_total += t0.elapsed();
+            launches += 1;
+            let t1 = std::time::Instant::now();
+            inst.process(input, output)?;
+            compute_total += t1.elapsed();
+        }
+    }
+    Ok((startup_total, compute_total, launches))
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    //! A trivially-instrumented app for engine and pipeline tests.
+    use super::*;
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    /// Counts startups and processed files; "processes" by copying the
+    /// input file to the output path with a marker line appended.
+    pub struct CountingApp {
+        pub startups: Arc<AtomicUsize>,
+        pub processed: Arc<AtomicUsize>,
+        /// Optional synthetic startup work to make timing visible.
+        pub startup_spin: Duration,
+        /// Fail processing of files whose name contains this marker.
+        pub poison: Option<String>,
+    }
+
+    impl CountingApp {
+        pub fn new() -> Self {
+            CountingApp {
+                startups: Arc::new(AtomicUsize::new(0)),
+                processed: Arc::new(AtomicUsize::new(0)),
+                startup_spin: Duration::ZERO,
+                poison: None,
+            }
+        }
+    }
+
+    pub struct CountingInstance {
+        processed: Arc<AtomicUsize>,
+        poison: Option<String>,
+    }
+
+    impl MapApp for CountingApp {
+        fn name(&self) -> &str {
+            "counting-app"
+        }
+
+        fn startup(&self) -> Result<Box<dyn MapInstance>> {
+            if !self.startup_spin.is_zero() {
+                let t = std::time::Instant::now();
+                while t.elapsed() < self.startup_spin {
+                    std::hint::spin_loop();
+                }
+            }
+            self.startups.fetch_add(1, Ordering::SeqCst);
+            Ok(Box::new(CountingInstance {
+                processed: self.processed.clone(),
+                poison: self.poison.clone(),
+            }))
+        }
+    }
+
+    impl MapInstance for CountingInstance {
+        fn process(&mut self, input: &Path, output: &Path) -> Result<()> {
+            if let Some(p) = &self.poison {
+                if input.to_string_lossy().contains(p.as_str()) {
+                    return Err(crate::error::Error::App {
+                        app: "counting-app".into(),
+                        input: input.to_path_buf(),
+                        reason: "poisoned input".into(),
+                    });
+                }
+            }
+            let data = std::fs::read_to_string(input).unwrap_or_default();
+            std::fs::write(output, format!("{data}#mapped\n")).map_err(
+                |e| crate::error::Error::io(output.to_path_buf(), e),
+            )?;
+            self.processed.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        }
+    }
+
+    /// Reducer that concatenates all files in the directory (sorted).
+    pub struct ConcatReducer;
+
+    impl ReduceApp for ConcatReducer {
+        fn name(&self) -> &str {
+            "concat-reducer"
+        }
+
+        fn reduce(&self, dir: &Path, out: &Path) -> Result<()> {
+            let mut names: Vec<PathBuf> = std::fs::read_dir(dir)
+                .map_err(|e| crate::error::Error::io(dir.to_path_buf(), e))?
+                .filter_map(|e| e.ok())
+                .map(|e| e.path())
+                .filter(|p| p.is_file())
+                .collect();
+            names.sort();
+            let mut merged = String::new();
+            for n in names {
+                merged.push_str(&std::fs::read_to_string(&n).unwrap_or_default());
+            }
+            std::fs::write(out, merged)
+                .map_err(|e| crate::error::Error::io(out.to_path_buf(), e))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::*;
+    use super::*;
+    use std::fs;
+    use std::path::PathBuf;
+    use std::sync::atomic::Ordering;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("llmr-apps-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn mk_pairs(dir: &PathBuf, n: usize) -> Vec<(PathBuf, PathBuf)> {
+        (0..n)
+            .map(|i| {
+                let inp = dir.join(format!("f{i}.dat"));
+                fs::write(&inp, format!("data{i}\n")).unwrap();
+                (inp, dir.join(format!("f{i}.dat.out")))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn siso_starts_once_per_file() {
+        let d = tmp("siso");
+        let app = CountingApp::new();
+        let pairs = mk_pairs(&d, 5);
+        let (_s, _c, launches) = run_map_task(&app, &pairs, false).unwrap();
+        assert_eq!(launches, 5);
+        assert_eq!(app.startups.load(Ordering::SeqCst), 5);
+        assert_eq!(app.processed.load(Ordering::SeqCst), 5);
+    }
+
+    #[test]
+    fn mimo_starts_once_per_task() {
+        let d = tmp("mimo");
+        let app = CountingApp::new();
+        let pairs = mk_pairs(&d, 5);
+        let (_s, _c, launches) = run_map_task(&app, &pairs, true).unwrap();
+        assert_eq!(launches, 1);
+        assert_eq!(app.startups.load(Ordering::SeqCst), 1);
+        assert_eq!(app.processed.load(Ordering::SeqCst), 5);
+    }
+
+    #[test]
+    fn mimo_empty_task_never_launches() {
+        let app = CountingApp::new();
+        let (_s, _c, launches) = run_map_task(&app, &[], true).unwrap();
+        assert_eq!(launches, 0);
+        assert_eq!(app.startups.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn outputs_written() {
+        let d = tmp("outputs");
+        let app = CountingApp::new();
+        let pairs = mk_pairs(&d, 3);
+        run_map_task(&app, &pairs, true).unwrap();
+        for (_, out) in &pairs {
+            let text = fs::read_to_string(out).unwrap();
+            assert!(text.ends_with("#mapped\n"));
+        }
+    }
+
+    #[test]
+    fn startup_cost_amortized_in_mimo() {
+        let d = tmp("amortize");
+        let mut app = CountingApp::new();
+        app.startup_spin = Duration::from_millis(3);
+        let pairs = mk_pairs(&d, 4);
+        let (siso_startup, _, _) = run_map_task(&app, &pairs, false).unwrap();
+        let (mimo_startup, _, _) = run_map_task(&app, &pairs, true).unwrap();
+        // 4 launches vs 1: SISO startup must be several times larger.
+        assert!(
+            siso_startup > mimo_startup * 2,
+            "siso={siso_startup:?} mimo={mimo_startup:?}"
+        );
+    }
+
+    #[test]
+    fn failing_process_propagates() {
+        let d = tmp("poison");
+        let mut app = CountingApp::new();
+        app.poison = Some("f1".into());
+        let pairs = mk_pairs(&d, 3);
+        let err = run_map_task(&app, &pairs, false).unwrap_err();
+        assert!(err.to_string().contains("poisoned"));
+    }
+
+    #[test]
+    fn reducer_merges_sorted() {
+        let d = tmp("reduce");
+        fs::write(d.join("b.out"), "B\n").unwrap();
+        fs::write(d.join("a.out"), "A\n").unwrap();
+        let out = d.join("merged");
+        ConcatReducer.reduce(&d, &out).unwrap();
+        assert_eq!(fs::read_to_string(out).unwrap(), "A\nB\n");
+    }
+}

@@ -1,0 +1,301 @@
+//! Word-frequency counting — the paper's Java use case (§III-B).
+//!
+//! The Rust analogue of Swartz's `WordFrequencyCmd` [42]: the mapper
+//! counts word frequencies in one text file, ignoring words listed in a
+//! reference file (`textignore.txt`); the reducer scans the map output
+//! directory and merges the counts into a single file.
+//!
+//! `startup()` loads and indexes the ignore list — the per-launch cost a
+//! JVM boot carries in the paper.  An optional deterministic spin can be
+//! added to model heavier interpreters for overhead studies.
+
+use std::collections::BTreeMap;
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::apps::{CostHint, MapApp, MapInstance, ReduceApp};
+use crate::error::{Error, IoContext, Result};
+
+/// Case-folded word iterator: alphanumeric runs, lowercased.
+/// (Matching the common word-count convention; apostrophes split.)
+fn words(text: &str) -> impl Iterator<Item = String> + '_ {
+    text.split(|c: char| !c.is_alphanumeric())
+        .filter(|w| !w.is_empty())
+        .map(|w| w.to_lowercase())
+}
+
+/// Count words in `text`, skipping `ignore`.
+pub fn count_words(
+    text: &str,
+    ignore: &HashSet<String>,
+) -> BTreeMap<String, u64> {
+    let mut counts = BTreeMap::new();
+    for w in words(text) {
+        if !ignore.contains(&w) {
+            *counts.entry(w).or_insert(0) += 1;
+        }
+    }
+    counts
+}
+
+/// Serialize counts: `<word> <count>` per line, words sorted.
+pub fn write_counts(
+    path: &Path,
+    counts: &BTreeMap<String, u64>,
+) -> Result<()> {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    for (w, c) in counts {
+        let _ = writeln!(out, "{w} {c}");
+    }
+    std::fs::write(path, out).at(path)
+}
+
+/// Parse a counts file back.
+pub fn read_counts(path: &Path) -> Result<BTreeMap<String, u64>> {
+    let text = std::fs::read_to_string(path).at(path)?;
+    let mut counts = BTreeMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (Some(w), Some(c)) = (it.next(), it.next()) else {
+            return Err(Error::Format {
+                kind: "wordcount",
+                path: path.to_path_buf(),
+                reason: format!("line {}: bad entry", lineno + 1),
+            });
+        };
+        let c: u64 = c.parse().map_err(|_| Error::Format {
+            kind: "wordcount",
+            path: path.to_path_buf(),
+            reason: format!("line {}: bad count", lineno + 1),
+        })?;
+        *counts.entry(w.to_string()).or_insert(0) += c;
+    }
+    Ok(counts)
+}
+
+/// The word-frequency mapper (`WordFreqCmd.sh` analogue).
+pub struct WordCountApp {
+    /// Path of the ignore-list reference file (the third argument of the
+    /// paper's Java command, bound at construction like the wrapper
+    /// script binds `textignore.txt`).
+    ignore_file: Option<PathBuf>,
+    /// Synthetic extra startup (models a heavy interpreter for overhead
+    /// studies; zero by default).
+    pub startup_spin: Duration,
+}
+
+impl WordCountApp {
+    pub fn new(ignore_file: Option<PathBuf>) -> Arc<Self> {
+        Arc::new(WordCountApp {
+            ignore_file,
+            startup_spin: Duration::ZERO,
+        })
+    }
+
+    pub fn with_startup_spin(
+        ignore_file: Option<PathBuf>,
+        spin: Duration,
+    ) -> Arc<Self> {
+        Arc::new(WordCountApp {
+            ignore_file,
+            startup_spin: spin,
+        })
+    }
+}
+
+impl MapApp for WordCountApp {
+    fn name(&self) -> &str {
+        "wordcount"
+    }
+
+    fn startup(&self) -> Result<Box<dyn MapInstance>> {
+        if !self.startup_spin.is_zero() {
+            let t = std::time::Instant::now();
+            while t.elapsed() < self.startup_spin {
+                std::hint::spin_loop();
+            }
+        }
+        // Real launch work: load + index the reference file.
+        let ignore = match &self.ignore_file {
+            Some(p) => std::fs::read_to_string(p)
+                .at(p)?
+                .split_whitespace()
+                .map(|w| w.to_lowercase())
+                .collect(),
+            None => HashSet::new(),
+        };
+        Ok(Box::new(WordCountInstance { ignore }))
+    }
+
+    fn cost_hint(&self) -> CostHint {
+        CostHint {
+            startup: self.startup_spin.max(Duration::from_micros(200)),
+            per_item: Duration::from_micros(500),
+        }
+    }
+}
+
+struct WordCountInstance {
+    ignore: HashSet<String>,
+}
+
+impl MapInstance for WordCountInstance {
+    fn process(&mut self, input: &Path, output: &Path) -> Result<()> {
+        let text = std::fs::read_to_string(input).at(input)?;
+        write_counts(output, &count_words(&text, &self.ignore))
+    }
+}
+
+/// The merging reducer (`ReduceWordFrequencyCmd` analogue): scans the map
+/// output directory and merges all counts into one file.
+pub struct WordCountReducer;
+
+impl ReduceApp for WordCountReducer {
+    fn name(&self) -> &str {
+        "wordcount-reducer"
+    }
+
+    fn reduce(&self, dir: &Path, out: &Path) -> Result<()> {
+        let mut files: Vec<PathBuf> = std::fs::read_dir(dir)
+            .at(dir)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.is_file()
+                    && *p != *out
+                    && p.file_name()
+                        .and_then(|n| n.to_str())
+                        .is_some_and(|n| !n.starts_with('.'))
+            })
+            .collect();
+        files.sort();
+        let mut merged: BTreeMap<String, u64> = BTreeMap::new();
+        for f in &files {
+            for (w, c) in read_counts(f)? {
+                *merged.entry(w).or_insert(0) += c;
+            }
+        }
+        write_counts(out, &merged)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("llmr-wc-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn counts_basic() {
+        let c = count_words("the cat and the hat", &HashSet::new());
+        assert_eq!(c["the"], 2);
+        assert_eq!(c["cat"], 1);
+        assert_eq!(c.len(), 4);
+    }
+
+    #[test]
+    fn counts_case_folded_and_punctuation() {
+        let c = count_words("The THE the, tHe. (the)", &HashSet::new());
+        assert_eq!(c["the"], 5);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn ignore_list_respected() {
+        let ignore: HashSet<String> =
+            ["the", "and"].iter().map(|s| s.to_string()).collect();
+        let c = count_words("the cat and the hat", &ignore);
+        assert!(!c.contains_key("the"));
+        assert!(!c.contains_key("and"));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn counts_file_roundtrip() {
+        let d = tmp("roundtrip");
+        let p = d.join("c.out");
+        let mut counts = BTreeMap::new();
+        counts.insert("apple".to_string(), 3u64);
+        counts.insert("zebra".to_string(), 1u64);
+        write_counts(&p, &counts).unwrap();
+        assert_eq!(read_counts(&p).unwrap(), counts);
+    }
+
+    #[test]
+    fn mapper_end_to_end_with_ignore_file() {
+        let d = tmp("mapper");
+        let ignore = d.join("textignore.txt");
+        fs::write(&ignore, "a an the\n").unwrap();
+        let inp = d.join("doc.txt");
+        fs::write(&inp, "The quick brown fox jumps over a lazy dog the end")
+            .unwrap();
+        let out = d.join("doc.txt.out");
+        let app = WordCountApp::new(Some(ignore));
+        let mut inst = app.startup().unwrap();
+        inst.process(&inp, &out).unwrap();
+        let counts = read_counts(&out).unwrap();
+        assert!(!counts.contains_key("the"));
+        assert_eq!(counts["quick"], 1);
+    }
+
+    #[test]
+    fn reducer_merges_across_files() {
+        let d = tmp("reduce");
+        fs::write(d.join("a.out"), "apple 2\nbanana 1\n").unwrap();
+        fs::write(d.join("b.out"), "apple 3\ncherry 4\n").unwrap();
+        let out = d.join("llmapreduce.out");
+        WordCountReducer.reduce(&d, &out).unwrap();
+        let merged = read_counts(&out).unwrap();
+        assert_eq!(merged["apple"], 5);
+        assert_eq!(merged["banana"], 1);
+        assert_eq!(merged["cherry"], 4);
+    }
+
+    #[test]
+    fn reducer_skips_hidden_and_self() {
+        let d = tmp("skip");
+        fs::write(d.join("a.out"), "x 1\n").unwrap();
+        fs::write(d.join(".hidden"), "garbage not counts\n").unwrap();
+        let out = d.join("llmapreduce.out");
+        // Pre-existing output from an earlier run must not self-merge.
+        fs::write(&out, "x 100\n").unwrap();
+        WordCountReducer.reduce(&d, &out).unwrap();
+        let merged = read_counts(&out).unwrap();
+        assert_eq!(merged["x"], 1);
+    }
+
+    #[test]
+    fn missing_ignore_file_fails_at_startup() {
+        let app = WordCountApp::new(Some(PathBuf::from("/nonexistent/ign")));
+        assert!(app.startup().is_err(), "startup loads the reference file");
+    }
+
+    #[test]
+    fn mimo_semantics_one_scan_of_ignore_list() {
+        // MIMO reuses one instance: same results as fresh instances.
+        let d = tmp("mimo");
+        let inp1 = d.join("x.txt");
+        let inp2 = d.join("y.txt");
+        fs::write(&inp1, "alpha beta").unwrap();
+        fs::write(&inp2, "beta gamma").unwrap();
+        let app = WordCountApp::new(None);
+        let mut inst = app.startup().unwrap();
+        inst.process(&inp1, &d.join("x.out")).unwrap();
+        inst.process(&inp2, &d.join("y.out")).unwrap();
+        assert_eq!(read_counts(&d.join("x.out")).unwrap()["alpha"], 1);
+        assert_eq!(read_counts(&d.join("y.out")).unwrap()["gamma"], 1);
+    }
+}

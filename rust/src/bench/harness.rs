@@ -1,0 +1,113 @@
+//! Minimal micro-benchmark harness (criterion substitute).
+//!
+//! Measures a closure over `warmup + iters` runs and reports robust
+//! statistics.  Deliberately simple: monotonic clock, no outlier
+//! rejection beyond the median/p95 split, deterministic iteration counts
+//! so bench output is reproducible run to run on an idle machine.
+
+use std::time::{Duration, Instant};
+
+/// Statistics over one benchmarked closure.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    /// One-line summary for bench logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} {:>10} median, {:>10} mean, {:>10} p95 ({} iters)",
+            self.name,
+            crate::util::fmt_duration(self.median),
+            crate::util::fmt_duration(self.mean),
+            crate::util::fmt_duration(self.p95),
+            self.iters
+        )
+    }
+
+    /// Throughput in items/second given items processed per iteration.
+    pub fn throughput(&self, items_per_iter: usize) -> f64 {
+        items_per_iter as f64 / self.median.as_secs_f64().max(1e-12)
+    }
+}
+
+/// Run `f` `warmup` times untimed, then `iters` times timed.
+pub fn bench_fn(
+    name: impl Into<String>,
+    warmup: usize,
+    iters: usize,
+    mut f: impl FnMut(),
+) -> BenchStats {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    let total: Duration = samples.iter().sum();
+    let idx = |q: f64| {
+        ((samples.len() as f64 - 1.0) * q).round() as usize
+    };
+    BenchStats {
+        name: name.into(),
+        iters,
+        min: samples[0],
+        median: samples[idx(0.5)],
+        mean: total / iters as u32,
+        p95: samples[idx(0.95)],
+        max: *samples.last().unwrap(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let mut n = 0u64;
+        let s = bench_fn("spin", 2, 20, || {
+            // Deterministic small work.
+            for i in 0..10_000 {
+                n = n.wrapping_add(i);
+            }
+        });
+        assert!(s.min <= s.median);
+        assert!(s.median <= s.p95);
+        assert!(s.p95 <= s.max);
+        assert_eq!(s.iters, 20);
+        assert!(n > 0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let s = BenchStats {
+            name: "x".into(),
+            iters: 1,
+            min: Duration::from_millis(10),
+            median: Duration::from_millis(10),
+            mean: Duration::from_millis(10),
+            p95: Duration::from_millis(10),
+            max: Duration::from_millis(10),
+        };
+        assert!((s.throughput(100) - 10_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn summary_contains_name() {
+        let s = bench_fn("named-bench", 0, 1, || {});
+        assert!(s.summary().contains("named-bench"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Bench harness and the paper-experiment drivers.
+//!
+//! `criterion` is unavailable in this offline build, so [`harness`] is a
+//! small self-contained measurement loop (warm-up + N iterations, robust
+//! stats), and [`experiments`] holds the drivers that regenerate every
+//! table and figure of the paper's §IV.  Both the `cargo bench` targets
+//! (`rust/benches/`) and the CLI (`llmapreduce bench ...`) call into here
+//! so numbers in EXPERIMENTS.md come from one code path.
+
+pub mod experiments;
+pub mod harness;
+
+pub use harness::{bench_fn, BenchStats};

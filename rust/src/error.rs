@@ -1,0 +1,138 @@
+//! Crate-wide error type.
+//!
+//! Every fallible public API in the crate returns [`Result`].  The variants
+//! mirror the subsystems: option parsing, input scanning, scheduling,
+//! runtime (PJRT), and app execution.
+
+use std::path::PathBuf;
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// All the ways an LLMapReduce job can fail.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Bad or inconsistent command-line / API options (Fig 2 surface).
+    #[error("invalid option: {0}")]
+    InvalidOption(String),
+
+    /// Input discovery failed (missing directory, unreadable list file...).
+    #[error("input scan failed at {path}: {reason}")]
+    InputScan { path: PathBuf, reason: String },
+
+    /// No input files matched — the paper's model has nothing to map over.
+    #[error("no input files found under {0}")]
+    EmptyInput(PathBuf),
+
+    /// Scheduler rejected or lost a job.
+    #[error("scheduler error: {0}")]
+    Scheduler(String),
+
+    /// A job exceeded the dialect's array-task limit and --np/--ndata
+    /// could not be reconciled.
+    #[error("array job of {requested} tasks exceeds {dialect} limit of {limit}")]
+    ArrayLimit {
+        requested: usize,
+        limit: usize,
+        dialect: String,
+    },
+
+    /// PJRT / XLA runtime failure (artifact load, compile, execute).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Artifact missing or failed manifest validation.
+    #[error("artifact error for '{name}': {reason}")]
+    Artifact { name: String, reason: String },
+
+    /// A mapper or reducer application failed on a concrete input.
+    #[error("app '{app}' failed on {input}: {reason}")]
+    App {
+        app: String,
+        input: PathBuf,
+        reason: String,
+    },
+
+    /// Malformed data file (PPM image, matrix list, manifest JSON ...).
+    #[error("malformed {kind} file {path}: {reason}")]
+    Format {
+        kind: &'static str,
+        path: PathBuf,
+        reason: String,
+    },
+
+    /// JSON parse error (hand-rolled parser in util::json).
+    #[error("json error: {0}")]
+    Json(String),
+
+    /// Configuration file problem.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Plain I/O, with context attached where it happened.
+    #[error("io error at {path}: {source}")]
+    Io {
+        path: PathBuf,
+        #[source]
+        source: std::io::Error,
+    },
+}
+
+impl Error {
+    /// Attach a path to a raw `io::Error`.
+    pub fn io(path: impl Into<PathBuf>, source: std::io::Error) -> Self {
+        Error::Io {
+            path: path.into(),
+            source,
+        }
+    }
+
+    /// Shorthand for an option-validation failure.
+    pub fn opt(msg: impl Into<String>) -> Self {
+        Error::InvalidOption(msg.into())
+    }
+}
+
+/// Extension to add path context to `io::Result` in one call.
+pub trait IoContext<T> {
+    fn at(self, path: impl Into<PathBuf>) -> Result<T>;
+}
+
+impl<T> IoContext<T> for std::io::Result<T> {
+    fn at(self, path: impl Into<PathBuf>) -> Result<T> {
+        self.map_err(|e| Error::io(path, e))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_messages_are_informative() {
+        let e = Error::ArrayLimit {
+            requested: 100_000,
+            limit: 75_000,
+            dialect: "gridengine".into(),
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("100000"));
+        assert!(msg.contains("75000"));
+        assert!(msg.contains("gridengine"));
+    }
+
+    #[test]
+    fn io_context_attaches_path() {
+        let r: std::io::Result<()> =
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let e = r.at("/some/path").unwrap_err();
+        assert!(e.to_string().contains("/some/path"));
+    }
+
+    #[test]
+    fn opt_shorthand() {
+        assert!(Error::opt("--np must be > 0")
+            .to_string()
+            .contains("--np must be > 0"));
+    }
+}

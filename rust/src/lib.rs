@@ -1,0 +1,66 @@
+//! # llmapreduce — LLMapReduce on a Rust + JAX + Pallas stack
+//!
+//! Reproduction of *LLMapReduce: Multi-Level Map-Reduce for High
+//! Performance Data Analysis* (Byun, Kepner et al., IEEE HPEC 2016) as a
+//! three-layer system:
+//!
+//! * **L3 (this crate)** — the LLMapReduce launcher: option surface
+//!   ([`options`]), input scanning and `.MAPRED.PID` script generation
+//!   ([`workdir`]), planning and distribution ([`mapreduce`]), scheduler
+//!   dialects plus a discrete-event cluster simulator and a threaded local
+//!   engine ([`scheduler`]), applications ([`apps`]), workload generators
+//!   ([`workload`]) and metrics ([`metrics`]).
+//! * **L2 (python/compile/model.py, build time)** — JAX compute graphs for
+//!   the paper's map applications, AOT-lowered to HLO text artifacts.
+//! * **L1 (python/compile/kernels/, build time)** — Pallas kernels (tiled
+//!   matmul, grayscale) the L2 graphs call.
+//!
+//! The [`runtime`] module loads the AOT artifacts via the PJRT C API;
+//! python never runs at request time.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use llmapreduce::prelude::*;
+//!
+//! // The Fig 7 one-liner: map imageConvert over a directory of images.
+//! let manifest = Manifest::discover().unwrap();
+//! let opts = Options::new("input", "output", "imageconvert").np(2);
+//! let apps = Apps {
+//!     mapper: ImageConvertApp::new(&manifest).unwrap(),
+//!     reducer: None,
+//! };
+//! let mut engine = LocalEngine::new(2);
+//! let report = llmapreduce::mapreduce::run(&opts, &apps, &mut engine).unwrap();
+//! println!("processed {} files", report.map.total_items());
+//! ```
+
+pub mod apps;
+pub mod bench;
+pub mod config;
+pub mod error;
+pub mod mapreduce;
+pub mod metrics;
+pub mod options;
+pub mod runtime;
+pub mod scheduler;
+pub mod util;
+pub mod workdir;
+pub mod workload;
+
+pub use error::{Error, Result};
+
+/// The commonly-used surface in one import.
+pub mod prelude {
+    pub use crate::apps::image::ImageConvertApp;
+    pub use crate::apps::matmul::{FrobeniusSumReducer, MatmulChainApp};
+    pub use crate::apps::wordcount::{WordCountApp, WordCountReducer};
+    pub use crate::apps::{MapApp, MapInstance, ReduceApp};
+    pub use crate::error::{Error, Result};
+    pub use crate::mapreduce::{run, Apps, MapReduceReport};
+    pub use crate::options::{AppType, Distribution, Options, SchedulerKind};
+    pub use crate::runtime::Manifest;
+    pub use crate::scheduler::local::LocalEngine;
+    pub use crate::scheduler::sim::{ClusterConfig, SimEngine};
+    pub use crate::scheduler::{Engine, JobReport};
+}

@@ -1,0 +1,133 @@
+//! File-to-task distribution: block and cyclic (§II, `--distribution`).
+//!
+//! "Workloads can be distributed in a block or cyclic fashion to improve
+//! initial load balancing."  Block gives each task a contiguous run of the
+//! (sorted) input list; cyclic deals files round-robin — better when file
+//! sizes correlate with their position in the listing.
+
+use crate::options::Distribution;
+
+/// Assign `nfiles` file indices to `ntasks` tasks.
+///
+/// Returns one `Vec<usize>` of file indices per task.  Invariants (the
+/// property tests in `rust/tests/` re-check these over random shapes):
+///
+/// * every index in `0..nfiles` appears exactly once across all tasks;
+/// * task sizes differ by at most one;
+/// * block assignments are contiguous and ordered; cyclic assignments
+///   have stride `ntasks`.
+pub fn distribute(
+    nfiles: usize,
+    ntasks: usize,
+    dist: Distribution,
+) -> Vec<Vec<usize>> {
+    assert!(ntasks > 0, "ntasks must be positive");
+    match dist {
+        Distribution::Block => block(nfiles, ntasks),
+        Distribution::Cyclic => cyclic(nfiles, ntasks),
+    }
+}
+
+/// Contiguous blocks: with `r = nfiles % ntasks`, the first `r` tasks get
+/// `ceil(nfiles/ntasks)` files, the rest get `floor(...)` — "The block
+/// size is determined by LLMapReduce" (§III-A).
+fn block(nfiles: usize, ntasks: usize) -> Vec<Vec<usize>> {
+    let base = nfiles / ntasks;
+    let rem = nfiles % ntasks;
+    let mut out = Vec::with_capacity(ntasks);
+    let mut next = 0usize;
+    for t in 0..ntasks {
+        let size = base + usize::from(t < rem);
+        out.push((next..next + size).collect());
+        next += size;
+    }
+    debug_assert_eq!(next, nfiles);
+    out
+}
+
+/// Round-robin: file `i` goes to task `i % ntasks` (Fig 15's
+/// `--distribution cyclic`).
+fn cyclic(nfiles: usize, ntasks: usize) -> Vec<Vec<usize>> {
+    let mut out = vec![Vec::with_capacity(nfiles.div_ceil(ntasks)); ntasks];
+    for i in 0..nfiles {
+        out[i % ntasks].push(i);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flatten_sorted(assign: &[Vec<usize>]) -> Vec<usize> {
+        let mut all: Vec<usize> =
+            assign.iter().flatten().copied().collect();
+        all.sort_unstable();
+        all
+    }
+
+    #[test]
+    fn block_contiguous_and_balanced() {
+        let a = distribute(10, 3, Distribution::Block);
+        assert_eq!(a, vec![vec![0, 1, 2, 3], vec![4, 5, 6], vec![7, 8, 9]]);
+    }
+
+    #[test]
+    fn cyclic_round_robin() {
+        let a = distribute(7, 3, Distribution::Cyclic);
+        assert_eq!(a, vec![vec![0, 3, 6], vec![1, 4], vec![2, 5]]);
+    }
+
+    #[test]
+    fn exact_division_equal_sizes() {
+        for dist in [Distribution::Block, Distribution::Cyclic] {
+            let a = distribute(12, 4, dist);
+            assert!(a.iter().all(|t| t.len() == 3), "{dist:?}");
+        }
+    }
+
+    #[test]
+    fn partition_complete_and_disjoint() {
+        for dist in [Distribution::Block, Distribution::Cyclic] {
+            for (n, t) in [(0, 1), (1, 1), (5, 8), (512, 256), (43_580, 256)] {
+                let a = distribute(n, t, dist);
+                assert_eq!(a.len(), t);
+                assert_eq!(
+                    flatten_sorted(&a),
+                    (0..n).collect::<Vec<_>>(),
+                    "{dist:?} n={n} t={t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sizes_differ_by_at_most_one() {
+        for dist in [Distribution::Block, Distribution::Cyclic] {
+            let a = distribute(43_580, 256, dist);
+            let min = a.iter().map(Vec::len).min().unwrap();
+            let max = a.iter().map(Vec::len).max().unwrap();
+            assert!(max - min <= 1, "{dist:?}: {min}..{max}");
+        }
+    }
+
+    #[test]
+    fn more_tasks_than_files_leaves_empties() {
+        let a = distribute(2, 5, Distribution::Block);
+        assert_eq!(flatten_sorted(&a), vec![0, 1]);
+        assert_eq!(a.iter().filter(|t| t.is_empty()).count(), 3);
+    }
+
+    #[test]
+    fn block_is_order_preserving() {
+        let a = distribute(100, 7, Distribution::Block);
+        let flat: Vec<usize> = a.iter().flatten().copied().collect();
+        assert_eq!(flat, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "ntasks must be positive")]
+    fn zero_tasks_panics() {
+        distribute(4, 0, Distribution::Block);
+    }
+}

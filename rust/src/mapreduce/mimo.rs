@@ -1,0 +1,240 @@
+//! MIMO support: the SISO→MIMO morph (§II-B) and its overhead model.
+//!
+//! "The --apptype=mimo option will generate the input files for the
+//! modified map application that will read the input file with the
+//! multiple lines of input/output filename pairs."
+//!
+//! This module owns (a) the pair-list *reader* — the Rust analogue of the
+//! `while ischar(tline)` loop in Fig 11 that MIMO-capable external apps
+//! use, and (b) the closed-form overhead model the paper's §IV discusses,
+//! used by the benches to sanity-check the measured curves.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use crate::error::{Error, IoContext, Result};
+
+/// Parse a MIMO pair-list file (`input_<N>`): one "input output" pair per
+/// line, whitespace separated — the format Fig 11's MATLAB wrapper and
+/// Fig 17's Java wrapper read.
+pub fn parse_pair_list(path: &Path) -> Result<Vec<(PathBuf, PathBuf)>> {
+    let text = std::fs::read_to_string(path).at(path)?;
+    let mut pairs = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (Some(input), Some(output)) = (it.next(), it.next()) else {
+            return Err(Error::Format {
+                kind: "mimo pair list",
+                path: path.to_path_buf(),
+                reason: format!("line {}: expected 'input output'", lineno + 1),
+            });
+        };
+        if it.next().is_some() {
+            return Err(Error::Format {
+                kind: "mimo pair list",
+                path: path.to_path_buf(),
+                reason: format!("line {}: trailing tokens", lineno + 1),
+            });
+        }
+        pairs.push((PathBuf::from(input), PathBuf::from(output)));
+    }
+    Ok(pairs)
+}
+
+/// Closed-form per-task overhead (the y-axis of Fig 18) for the three
+/// launch options, given per-launch startup cost, per-task scheduler
+/// dispatch cost, and `files_per_task`.
+///
+/// * DEFAULT — every file is its own array task: per *file* the scheduler
+///   dispatches once and the app starts once.  Normalized per "task at
+///   width np" it is `files_per_task × (dispatch + startup)`.
+/// * BLOCK — np tasks, one dispatch each, app starts per file:
+///   `dispatch + files_per_task × startup`.
+/// * MIMO — np tasks, one dispatch, one start-up: `dispatch + startup`.
+#[derive(Debug, Clone, Copy)]
+pub struct OverheadModel {
+    pub startup: Duration,
+    pub dispatch: Duration,
+}
+
+/// The three launch options compared in §IV.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LaunchOption {
+    Default,
+    Block,
+    Mimo,
+}
+
+impl LaunchOption {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LaunchOption::Default => "DEFAULT",
+            LaunchOption::Block => "BLOCK",
+            LaunchOption::Mimo => "MIMO",
+        }
+    }
+
+    pub const ALL: [LaunchOption; 3] = [
+        LaunchOption::Default,
+        LaunchOption::Block,
+        LaunchOption::Mimo,
+    ];
+}
+
+impl OverheadModel {
+    /// Overhead attributed to one width-np "task slot" processing
+    /// `files_per_task` files.
+    pub fn per_task_overhead(
+        &self,
+        option: LaunchOption,
+        files_per_task: usize,
+    ) -> Duration {
+        let f = files_per_task as u32;
+        match option {
+            LaunchOption::Default => (self.dispatch + self.startup) * f,
+            LaunchOption::Block => self.dispatch + self.startup * f,
+            LaunchOption::Mimo => self.dispatch + self.startup,
+        }
+    }
+
+    /// Predicted job elapsed time with `np` concurrent tasks over
+    /// `nfiles` files of `per_item` compute each (serial dispatch cost
+    /// simplified into the per-task overhead).
+    pub fn elapsed(
+        &self,
+        option: LaunchOption,
+        nfiles: usize,
+        np: usize,
+        per_item: Duration,
+    ) -> Duration {
+        let files_per_task = nfiles.div_ceil(np);
+        self.per_task_overhead(option, files_per_task)
+            + per_item * files_per_task as u32
+    }
+
+    /// Fig 19's speed-up: DEFAULT at np=1 over `option` at np.
+    pub fn speedup(
+        &self,
+        option: LaunchOption,
+        nfiles: usize,
+        np: usize,
+        per_item: Duration,
+    ) -> f64 {
+        let base = self
+            .elapsed(LaunchOption::Default, nfiles, 1, per_item)
+            .as_secs_f64();
+        base / self.elapsed(option, nfiles, np, per_item).as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("llmr-mimo-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn parse_pair_list_roundtrip() {
+        let d = tmp("parse");
+        let p = d.join("input_1");
+        fs::write(&p, "in/a.ppm out/a.ppm.gray\nin/b.ppm out/b.ppm.gray\n")
+            .unwrap();
+        let pairs = parse_pair_list(&p).unwrap();
+        assert_eq!(pairs.len(), 2);
+        assert_eq!(pairs[0].0, PathBuf::from("in/a.ppm"));
+        assert_eq!(pairs[1].1, PathBuf::from("out/b.ppm.gray"));
+    }
+
+    #[test]
+    fn parse_skips_blank_lines() {
+        let d = tmp("blank");
+        let p = d.join("input_1");
+        fs::write(&p, "\na b\n\nc d\n\n").unwrap();
+        assert_eq!(parse_pair_list(&p).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn parse_rejects_bad_lines() {
+        let d = tmp("bad");
+        let p = d.join("input_1");
+        fs::write(&p, "only-one-token\n").unwrap();
+        assert!(parse_pair_list(&p).is_err());
+        fs::write(&p, "a b c\n").unwrap();
+        let err = parse_pair_list(&p).unwrap_err().to_string();
+        assert!(err.contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn overhead_ordering_matches_fig18() {
+        let m = OverheadModel {
+            startup: Duration::from_millis(100),
+            dispatch: Duration::from_millis(20),
+        };
+        // With many files per task: DEFAULT > BLOCK >> MIMO.
+        let f = 64;
+        let d = m.per_task_overhead(LaunchOption::Default, f);
+        let b = m.per_task_overhead(LaunchOption::Block, f);
+        let mi = m.per_task_overhead(LaunchOption::Mimo, f);
+        assert!(d > b, "{d:?} {b:?}");
+        assert!(b > mi * 10, "{b:?} {mi:?}");
+        // At one file per task all three converge (§IV: "the results of
+        // all three options will converge at the same point").
+        let d1 = m.per_task_overhead(LaunchOption::Default, 1);
+        let b1 = m.per_task_overhead(LaunchOption::Block, 1);
+        let m1 = m.per_task_overhead(LaunchOption::Mimo, 1);
+        assert_eq!(d1, b1);
+        assert_eq!(b1, m1);
+    }
+
+    #[test]
+    fn mimo_overhead_flat_in_np() {
+        let m = OverheadModel {
+            startup: Duration::from_millis(100),
+            dispatch: Duration::from_millis(20),
+        };
+        let nfiles = 512usize;
+        let o_at = |np: usize| {
+            m.per_task_overhead(LaunchOption::Mimo, nfiles.div_ceil(np))
+        };
+        assert_eq!(o_at(1), o_at(256), "MIMO per-task overhead flat");
+        // While BLOCK's falls with np.
+        let b_at = |np: usize| {
+            m.per_task_overhead(LaunchOption::Block, nfiles.div_ceil(np))
+        };
+        assert!(b_at(1) > b_at(256) * 100);
+    }
+
+    #[test]
+    fn speedup_curve_shape_matches_fig19() {
+        let m = OverheadModel {
+            startup: Duration::from_millis(100),
+            dispatch: Duration::from_millis(10),
+        };
+        let per_item = Duration::from_millis(50);
+        let nfiles = 512usize;
+        for np in [1usize, 4, 16, 64, 256] {
+            let s_def = m.speedup(LaunchOption::Default, nfiles, np, per_item);
+            let s_blk = m.speedup(LaunchOption::Block, nfiles, np, per_item);
+            let s_mimo = m.speedup(LaunchOption::Mimo, nfiles, np, per_item);
+            // MIMO best, BLOCK slightly better than DEFAULT (§IV).
+            assert!(s_mimo > s_blk, "np={np}");
+            assert!(s_blk >= s_def, "np={np}");
+        }
+        // Speed-up grows with np for every option.
+        assert!(
+            m.speedup(LaunchOption::Mimo, nfiles, 256, per_item)
+                > m.speedup(LaunchOption::Mimo, nfiles, 1, per_item)
+        );
+    }
+}

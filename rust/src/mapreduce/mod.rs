@@ -1,0 +1,18 @@
+//! The LLMapReduce coordinator — the paper's system contribution.
+//!
+//! * [`planner`] / [`distribution`] — files × `--np`/`--ndata` →
+//!   balanced per-task assignments (block or cyclic);
+//! * [`pipeline`] — the Fig 1 flow: scan → array job → dependent reducer;
+//! * [`mimo`] — the SISO→MIMO morph that gives the paper its headline;
+//! * [`subdir`] — `--subdir` output-tree replication;
+//! * [`multilevel`] — nested LLMapReduce over directory hierarchies.
+
+pub mod distribution;
+pub mod mimo;
+pub mod multilevel;
+pub mod pipeline;
+pub mod planner;
+pub mod subdir;
+
+pub use pipeline::{run, Apps, MapReduceReport};
+pub use planner::{plan, Plan, PlannedTask};

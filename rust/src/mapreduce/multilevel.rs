@@ -1,0 +1,342 @@
+//! Multi-level map-reduce (§II): nested LLMapReduce over hierarchies.
+//!
+//! "Many filesystems operate best when the number of files per directory
+//! is less than 10,000.  LLMapReduce users can build a nested call to
+//! LLMapReduce for processing whole hierarchies of data."
+//!
+//! The outer level maps over the immediate subdirectories of the input
+//! root — one *inner* LLMapReduce invocation per subdirectory — and an
+//! optional outer reducer merges the per-subdirectory reduce outputs.
+//! This is the paper's title feature: map-reduce jobs whose mappers are
+//! themselves map-reduce jobs.
+
+use std::fs;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::apps::ReduceApp;
+use crate::error::{Error, IoContext, Result};
+use crate::mapreduce::pipeline::{run, Apps, MapReduceReport};
+use crate::options::Options;
+use crate::scheduler::Engine;
+
+/// Report for a nested invocation.
+#[derive(Debug)]
+pub struct MultiLevelReport {
+    /// (subdirectory name, inner report) per inner invocation.
+    pub inner: Vec<(String, MapReduceReport)>,
+    /// Path of the final merged output, when an outer reducer ran.
+    pub final_out: Option<PathBuf>,
+}
+
+impl MultiLevelReport {
+    pub fn total_items(&self) -> usize {
+        self.inner.iter().map(|(_, r)| r.map.total_items()).sum()
+    }
+
+    pub fn elapsed(&self) -> std::time::Duration {
+        self.inner.iter().map(|(_, r)| r.elapsed()).sum()
+    }
+}
+
+/// Run a two-level map-reduce: one inner LLMapReduce per immediate
+/// subdirectory of `opts.input`, then `outer_reducer` over the collected
+/// inner reduce outputs.
+///
+/// Each inner invocation inherits all options but gets
+/// `input = <subdir>`, `output = <output>/<subdir name>` and a derived
+/// pid (`pid*1000 + k`) so the `.MAPRED` directories don't collide.
+pub fn run_nested(
+    opts: &Options,
+    apps: &Apps,
+    outer_reducer: Option<Arc<dyn ReduceApp>>,
+    engine: &mut dyn Engine,
+) -> Result<MultiLevelReport> {
+    let mut subdirs: Vec<PathBuf> = fs::read_dir(&opts.input)
+        .at(&opts.input)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.is_dir())
+        .collect();
+    subdirs.sort();
+    if subdirs.is_empty() {
+        return Err(Error::EmptyInput(opts.input.clone()));
+    }
+
+    let base_pid = opts.effective_pid();
+    let mut inner_reports = Vec::with_capacity(subdirs.len());
+    for (k, sub) in subdirs.iter().enumerate() {
+        let name = sub
+            .file_name()
+            .and_then(|n| n.to_str())
+            .unwrap_or("sub")
+            .to_string();
+        let inner_opts = Options {
+            input: sub.clone(),
+            output: opts.output.join(&name),
+            pid: Some(base_pid.wrapping_mul(1000).wrapping_add(k as u32 + 1)),
+            ..opts.clone()
+        };
+        let report = run(&inner_opts, apps, engine)?;
+        inner_reports.push((name, report));
+    }
+
+    // Outer reduce: merge the inner reduce outputs (or, without inner
+    // reducers, the union of inner map outputs) into one file.
+    let final_out = if let Some(outer) = outer_reducer {
+        let collect_dir = opts.output.join(".multilevel");
+        fs::create_dir_all(&collect_dir).at(&collect_dir)?;
+        for (name, report) in &inner_reports {
+            if let Some(redout) = &report.redout_path {
+                let dst = collect_dir.join(format!("{name}.part"));
+                fs::copy(redout, &dst).at(redout)?;
+            }
+        }
+        let out = opts.output.join(&opts.redout);
+        outer.reduce(&collect_dir, &out)?;
+        fs::remove_dir_all(&collect_dir).ok();
+        Some(out)
+    } else {
+        None
+    };
+
+    Ok(MultiLevelReport {
+        inner: inner_reports,
+        final_out,
+    })
+}
+
+/// Run an N-level nested map-reduce: recurse `depth` levels of
+/// subdirectories; the innermost level runs the ordinary pipeline over
+/// its directory, and every enclosing level merges its children with
+/// `outer_reducer` (when given).
+///
+/// `depth == 0` is a plain [`run`]; `depth == 1` equals [`run_nested`].
+/// This is the paper's "whole hierarchies of data" taken literally.
+pub fn run_nested_depth(
+    opts: &Options,
+    apps: &Apps,
+    outer_reducer: Option<Arc<dyn ReduceApp>>,
+    engine: &mut dyn Engine,
+    depth: usize,
+) -> Result<MultiLevelReport> {
+    if depth <= 1 {
+        if depth == 0 {
+            let report = run(opts, apps, engine)?;
+            let final_out = report.redout_path.clone();
+            return Ok(MultiLevelReport {
+                inner: vec![("".to_string(), report)],
+                final_out,
+            });
+        }
+        return run_nested(opts, apps, outer_reducer, engine);
+    }
+
+    let mut subdirs: Vec<PathBuf> = fs::read_dir(&opts.input)
+        .at(&opts.input)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.is_dir())
+        .collect();
+    subdirs.sort();
+    if subdirs.is_empty() {
+        return Err(Error::EmptyInput(opts.input.clone()));
+    }
+
+    let base_pid = opts.effective_pid();
+    let mut inner_all = Vec::new();
+    let mut child_outs = Vec::new();
+    for (k, sub) in subdirs.iter().enumerate() {
+        let name = sub
+            .file_name()
+            .and_then(|n| n.to_str())
+            .unwrap_or("sub")
+            .to_string();
+        let inner_opts = Options {
+            input: sub.clone(),
+            output: opts.output.join(&name),
+            pid: Some(
+                base_pid
+                    .wrapping_mul(100)
+                    .wrapping_add(depth as u32 * 10 + k as u32 + 1),
+            ),
+            ..opts.clone()
+        };
+        let child = run_nested_depth(
+            &inner_opts,
+            apps,
+            outer_reducer.clone(),
+            engine,
+            depth - 1,
+        )?;
+        if let Some(out) = &child.final_out {
+            child_outs.push((name.clone(), out.clone()));
+        }
+        for (child_name, r) in child.inner {
+            inner_all.push((format!("{name}/{child_name}"), r));
+        }
+    }
+
+    let final_out = if let Some(outer) = outer_reducer {
+        let collect_dir = opts.output.join(".multilevel");
+        fs::create_dir_all(&collect_dir).at(&collect_dir)?;
+        for (name, out) in &child_outs {
+            let dst = collect_dir.join(format!("{name}.part"));
+            fs::copy(out, &dst).at(out)?;
+        }
+        let out = opts.output.join(&opts.redout);
+        outer.reduce(&collect_dir, &out)?;
+        fs::remove_dir_all(&collect_dir).ok();
+        Some(out)
+    } else {
+        None
+    };
+
+    Ok(MultiLevelReport {
+        inner: inner_all,
+        final_out,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::testutil::{ConcatReducer, CountingApp};
+    use crate::scheduler::local::LocalEngine;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("llmr-ml-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn setup(tag: &str) -> (PathBuf, PathBuf) {
+        let root = tmp(tag);
+        let input = root.join("input");
+        for (sub, n) in [("sensors-a", 3), ("sensors-b", 2)] {
+            let d = input.join(sub);
+            fs::create_dir_all(&d).unwrap();
+            for i in 0..n {
+                fs::write(d.join(format!("{sub}-{i}.txt")), format!("{i}\n"))
+                    .unwrap();
+            }
+        }
+        (input, root.join("output"))
+    }
+
+    #[test]
+    fn nested_runs_one_inner_job_per_subdir() {
+        let (input, output) = setup("basic");
+        let opts = Options::new(&input, &output, "counting-app")
+            .reducer("concat-reducer")
+            .pid(70001);
+        let apps = Apps {
+            mapper: Arc::new(CountingApp::new()),
+            reducer: Some(Arc::new(ConcatReducer)),
+        };
+        let mut eng = LocalEngine::new(2);
+        let report =
+            run_nested(&opts, &apps, Some(Arc::new(ConcatReducer)), &mut eng)
+                .unwrap();
+        assert_eq!(report.inner.len(), 2);
+        assert_eq!(report.total_items(), 5);
+        // Inner outputs land in per-subdir output dirs.
+        assert!(output.join("sensors-a/sensors-a-0.txt.out").is_file());
+        assert!(output.join("sensors-b/sensors-b-1.txt.out").is_file());
+        // Final merge exists and contains all mapped lines.
+        let final_out = report.final_out.unwrap();
+        let text = fs::read_to_string(final_out).unwrap();
+        assert_eq!(text.matches("#mapped").count(), 5);
+    }
+
+    #[test]
+    fn nested_without_outer_reducer() {
+        let (input, output) = setup("noouter");
+        let opts = Options::new(&input, &output, "counting-app").pid(70002);
+        let apps = Apps {
+            mapper: Arc::new(CountingApp::new()),
+            reducer: None,
+        };
+        let mut eng = LocalEngine::new(1);
+        let report = run_nested(&opts, &apps, None, &mut eng).unwrap();
+        assert!(report.final_out.is_none());
+        assert_eq!(report.inner.len(), 2);
+    }
+
+    #[test]
+    fn three_level_hierarchy_merges_to_one_file() {
+        // input/site-X/sensor-Y/*.txt, depth 2.
+        let root = tmp("deep");
+        let input = root.join("input");
+        for site in ["site-a", "site-b"] {
+            for sensor in ["s1", "s2"] {
+                let d = input.join(site).join(sensor);
+                fs::create_dir_all(&d).unwrap();
+                for i in 0..2 {
+                    fs::write(
+                        d.join(format!("{site}-{sensor}-{i}.txt")),
+                        format!("{i}\n"),
+                    )
+                    .unwrap();
+                }
+            }
+        }
+        let opts = Options::new(&input, root.join("output"), "counting-app")
+            .reducer("concat-reducer")
+            .pid(70010);
+        let apps = Apps {
+            mapper: Arc::new(CountingApp::new()),
+            reducer: Some(Arc::new(ConcatReducer)),
+        };
+        let mut eng = LocalEngine::new(2);
+        let report = run_nested_depth(
+            &opts,
+            &apps,
+            Some(Arc::new(ConcatReducer)),
+            &mut eng,
+            2,
+        )
+        .unwrap();
+        assert_eq!(report.inner.len(), 4, "2 sites x 2 sensors");
+        assert_eq!(report.total_items(), 8);
+        let final_out = report.final_out.unwrap();
+        let text = fs::read_to_string(&final_out).unwrap();
+        assert_eq!(text.matches("#mapped").count(), 8);
+        // Inner names carry the hierarchy path.
+        assert!(report.inner.iter().any(|(n, _)| n == "site-a/s1"));
+    }
+
+    #[test]
+    fn depth_zero_is_plain_run() {
+        let root = tmp("flat0");
+        let input = root.join("input");
+        fs::create_dir_all(&input).unwrap();
+        fs::write(input.join("a.txt"), "a").unwrap();
+        let opts =
+            Options::new(&input, root.join("out"), "counting-app").pid(70011);
+        let apps = Apps {
+            mapper: Arc::new(CountingApp::new()),
+            reducer: None,
+        };
+        let mut eng = LocalEngine::new(1);
+        let r =
+            run_nested_depth(&opts, &apps, None, &mut eng, 0).unwrap();
+        assert_eq!(r.total_items(), 1);
+    }
+
+    #[test]
+    fn empty_hierarchy_is_error() {
+        let root = tmp("empty");
+        let input = root.join("input");
+        fs::create_dir_all(&input).unwrap();
+        let opts = Options::new(&input, root.join("out"), "m").pid(70003);
+        let apps = Apps {
+            mapper: Arc::new(CountingApp::new()),
+            reducer: None,
+        };
+        let mut eng = LocalEngine::new(1);
+        assert!(run_nested(&opts, &apps, None, &mut eng).is_err());
+    }
+}

@@ -1,0 +1,324 @@
+//! The LLMapReduce pipeline: one call = one map-reduce job (Fig 1).
+//!
+//! Steps, numbered as in the paper's schematic:
+//!
+//! 1. identify input files (scan directory / read list);
+//! 2. create an array job of mapper tasks via the scheduler;
+//! 3. submit the reduce task with a job dependency on the mappers;
+//! 4. the reducer scans the mapper output directory;
+//! 5. the reducer writes the final result.
+//!
+//! The `.MAPRED.PID` directory with submission and run scripts is
+//! generated exactly as on a real cluster, then the job is *executed* on
+//! the configured engine (local threads or the discrete-event simulator).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::apps::{MapApp, ReduceApp};
+use crate::error::Result;
+use crate::mapreduce::planner::{plan, Plan};
+use crate::mapreduce::subdir::replicate_output_tree;
+use crate::options::Options;
+use crate::scheduler::dialect::dialect_for;
+use crate::scheduler::{Engine, JobSpec, TaskSpec, TaskWork};
+use crate::workdir::scan::scan_input;
+use crate::workdir::scripts::{reduce_run_script, write_all};
+use crate::workdir::MapRedDir;
+
+/// Result of one LLMapReduce invocation.
+#[derive(Debug)]
+pub struct MapReduceReport {
+    /// The mapper array job's report.
+    pub map: crate::scheduler::JobReport,
+    /// The reducer job's report, when a reducer was given.
+    pub reduce: Option<crate::scheduler::JobReport>,
+    /// The plan that produced the jobs.
+    pub plan: Plan,
+    /// Where the reduce output was written (if reducing).
+    pub redout_path: Option<PathBuf>,
+    /// The kept `.MAPRED.PID` directory (only with `--keep`).
+    pub mapred_dir: Option<PathBuf>,
+}
+
+impl MapReduceReport {
+    /// Total elapsed (virtual or wall) time: map + reduce makespans.
+    pub fn elapsed(&self) -> std::time::Duration {
+        self.map.makespan
+            + self
+                .reduce
+                .as_ref()
+                .map(|r| r.makespan)
+                .unwrap_or_default()
+    }
+}
+
+/// The applications an invocation binds to.  The paper resolves mapper /
+/// reducer names to executables on disk; this API accepts the executable
+/// objects directly (the CLI layer does the name resolution).
+pub struct Apps {
+    pub mapper: Arc<dyn MapApp>,
+    pub reducer: Option<Arc<dyn ReduceApp>>,
+}
+
+/// Run one complete LLMapReduce invocation on `engine`.
+pub fn run(
+    opts: &Options,
+    apps: &Apps,
+    engine: &mut dyn Engine,
+) -> Result<MapReduceReport> {
+    opts.validate()?;
+    let dialect = dialect_for(opts.scheduler);
+
+    // Step 1: identify input files.
+    let files = scan_input(&opts.input, opts.subdir)?;
+
+    // Plan tasks and output naming.
+    let the_plan = plan(&files, opts, dialect.as_ref())?;
+
+    // Generate the .MAPRED.PID artifacts (Figs 8/9/12) and output dirs.
+    let base = opts.workdir.clone().unwrap_or_else(|| {
+        std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."))
+    });
+    let wd = MapRedDir::create(&base, opts.effective_pid(), opts.keep)?;
+    write_all(&wd, &the_plan, opts, dialect.as_ref())?;
+    replicate_output_tree(&the_plan)?;
+
+    // Step 2: the mapper array job.
+    let map_tasks: Vec<TaskSpec> = the_plan
+        .tasks
+        .iter()
+        .map(|t| TaskSpec {
+            task_id: t.task_id,
+            work: TaskWork::Map {
+                app: apps.mapper.clone(),
+                pairs: t.pairs.clone(),
+                mode: opts.apptype,
+            },
+        })
+        .collect();
+    let map_spec = JobSpec::new(apps.mapper.name(), map_tasks)
+        .exclusive(opts.exclusive);
+    let map_id = engine.submit(map_spec)?;
+
+    // Step 3: the dependent reduce task.
+    let (reduce_id, redout_path) = if let Some(reducer) = &apps.reducer {
+        let redout = opts.output.join(&opts.redout);
+        wd.write(
+            "run_reduce",
+            &reduce_run_script(
+                reducer.name(),
+                &opts.output,
+                &redout,
+            ),
+        )?;
+        let spec = JobSpec::new(
+            reducer.name(),
+            vec![TaskSpec {
+                task_id: 1,
+                work: TaskWork::Reduce {
+                    app: reducer.clone(),
+                    input_dir: opts.output.clone(),
+                    out_file: redout.clone(),
+                },
+            }],
+        )
+        .after(map_id);
+        (Some(engine.submit(spec)?), Some(redout))
+    } else {
+        (None, None)
+    };
+
+    // Wait for completion (reduce waits on map transitively).
+    let map_report;
+    let reduce_report;
+    if let Some(rid) = reduce_id {
+        reduce_report = Some(engine.wait(rid)?);
+        map_report = engine.wait(map_id)?;
+    } else {
+        map_report = engine.wait(map_id)?;
+        reduce_report = None;
+    }
+
+    let mapred_dir = if opts.keep {
+        Some(wd.persist())
+    } else {
+        None // dropped -> deleted, the paper's default
+    };
+
+    Ok(MapReduceReport {
+        map: map_report,
+        reduce: reduce_report,
+        plan: the_plan,
+        redout_path,
+        mapred_dir,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::testutil::{ConcatReducer, CountingApp};
+    use crate::options::AppType;
+    use crate::scheduler::local::LocalEngine;
+    use crate::scheduler::sim::{ClusterConfig, SimEngine};
+    use std::fs;
+    use std::sync::atomic::Ordering;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("llmr-pipe-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn setup(tag: &str, nfiles: usize) -> (PathBuf, PathBuf) {
+        let root = tmp(tag);
+        let input = root.join("input");
+        let output = root.join("output");
+        fs::create_dir_all(&input).unwrap();
+        for i in 0..nfiles {
+            fs::write(input.join(format!("f{i:02}.txt")), format!("{i}\n"))
+                .unwrap();
+        }
+        (input, output)
+    }
+
+    #[test]
+    fn map_only_local() {
+        let (input, output) = setup("maponly", 6);
+        let opts = Options::new(&input, &output, "counting-app")
+            .np(2)
+            .pid(90001);
+        let apps = Apps {
+            mapper: Arc::new(CountingApp::new()),
+            reducer: None,
+        };
+        let mut eng = LocalEngine::new(2);
+        let report = run(&opts, &apps, &mut eng).unwrap();
+        assert_eq!(report.plan.tasks.len(), 2);
+        assert_eq!(report.map.total_items(), 6);
+        assert!(report.reduce.is_none());
+        // All outputs exist with paper naming.
+        for i in 0..6 {
+            assert!(output.join(format!("f{i:02}.txt.out")).is_file());
+        }
+    }
+
+    #[test]
+    fn map_reduce_end_to_end_fig1() {
+        let (input, output) = setup("fig1", 4);
+        let opts = Options::new(&input, &output, "counting-app")
+            .np(2)
+            .reducer("concat-reducer")
+            .pid(90002);
+        let apps = Apps {
+            mapper: Arc::new(CountingApp::new()),
+            reducer: Some(Arc::new(ConcatReducer)),
+        };
+        let mut eng = LocalEngine::new(2);
+        let report = run(&opts, &apps, &mut eng).unwrap();
+        let redout = report.redout_path.clone().unwrap();
+        assert!(redout.ends_with("llmapreduce.out"));
+        let merged = fs::read_to_string(&redout).unwrap();
+        assert_eq!(merged.matches("#mapped").count(), 4);
+        assert!(report.reduce.is_some());
+    }
+
+    #[test]
+    fn mimo_reduces_launches() {
+        let (input, output) = setup("mimo", 8);
+        let app = Arc::new(CountingApp::new());
+        let opts = Options::new(&input, &output, "counting-app")
+            .np(2)
+            .apptype(AppType::Mimo)
+            .pid(90003);
+        let apps = Apps {
+            mapper: app.clone(),
+            reducer: None,
+        };
+        let mut eng = LocalEngine::new(2);
+        let report = run(&opts, &apps, &mut eng).unwrap();
+        assert_eq!(report.map.total_launches(), 2);
+        assert_eq!(app.startups.load(Ordering::SeqCst), 2);
+        assert_eq!(report.map.total_items(), 8);
+    }
+
+    #[test]
+    fn keep_preserves_mapred_dir() {
+        let (input, output) = setup("keep", 2);
+        let opts = Options::new(&input, &output, "counting-app")
+            .keep(true)
+            .pid(90004);
+        let apps = Apps {
+            mapper: Arc::new(CountingApp::new()),
+            reducer: None,
+        };
+        let mut eng = LocalEngine::new(1);
+        let report = run(&opts, &apps, &mut eng).unwrap();
+        let wd = report.mapred_dir.clone().unwrap();
+        assert!(wd.ends_with(".MAPRED.90004"));
+        assert!(wd.join("submit.sh").is_file());
+        assert!(wd.join("run_llmap_1").is_file());
+        fs::remove_dir_all(wd).unwrap();
+    }
+
+    #[test]
+    fn default_cleanup_removes_mapred_dir() {
+        let (input, output) = setup("clean", 2);
+        let opts =
+            Options::new(&input, &output, "counting-app").pid(90005);
+        let apps = Apps {
+            mapper: Arc::new(CountingApp::new()),
+            reducer: None,
+        };
+        let mut eng = LocalEngine::new(1);
+        let report = run(&opts, &apps, &mut eng).unwrap();
+        assert!(report.mapred_dir.is_none());
+        let cwd = std::env::current_dir().unwrap();
+        assert!(!cwd.join(".MAPRED.90005").exists());
+    }
+
+    #[test]
+    fn sim_engine_executes_same_pipeline() {
+        let (input, output) = setup("simexec", 6);
+        let opts = Options::new(&input, &output, "counting-app")
+            .np(3)
+            .reducer("concat-reducer")
+            .pid(90006);
+        let apps = Apps {
+            mapper: Arc::new(CountingApp::new()),
+            reducer: Some(Arc::new(ConcatReducer)),
+        };
+        let mut eng =
+            SimEngine::new(ClusterConfig::with_width(3)).execute_payloads(true);
+        let report = run(&opts, &apps, &mut eng).unwrap();
+        // Virtual makespan is deterministic and real outputs exist.
+        assert!(report.map.makespan > std::time::Duration::ZERO);
+        let merged =
+            fs::read_to_string(report.redout_path.unwrap()).unwrap();
+        assert_eq!(merged.matches("#mapped").count(), 6);
+    }
+
+    #[test]
+    fn subdir_pipeline_replicates() {
+        let root = tmp("subdirpipe");
+        let input = root.join("input");
+        let output = root.join("output");
+        fs::create_dir_all(input.join("a/b")).unwrap();
+        fs::write(input.join("a/x.txt"), "x").unwrap();
+        fs::write(input.join("a/b/y.txt"), "y").unwrap();
+        let opts = Options::new(&input, &output, "counting-app")
+            .subdir(true)
+            .pid(90007);
+        let apps = Apps {
+            mapper: Arc::new(CountingApp::new()),
+            reducer: None,
+        };
+        let mut eng = LocalEngine::new(1);
+        run(&opts, &apps, &mut eng).unwrap();
+        assert!(output.join("a/x.txt.out").is_file());
+        assert!(output.join("a/b/y.txt.out").is_file());
+    }
+}

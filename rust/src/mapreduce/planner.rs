@@ -1,0 +1,342 @@
+//! The planner: input files × options → per-task assignments.
+//!
+//! Encodes §II/§III-A's rules:
+//!
+//! * no `--np`, no `--ndata` → **DEFAULT**: one array task per input file;
+//! * `--np=N` → N array tasks, each takes a block (or cyclic slice) of
+//!   the inputs — "only 100 array tasks are created and each array task
+//!   will process a block of the total input data";
+//! * `--ndata=K` → K files per task, **overriding** `--np`;
+//! * the task count must respect the scheduler dialect's array limit
+//!   (Grid Engine defaults to 75,000).
+//!
+//! Output naming follows §III-A: `<input name><delimiter><ext>`, placed in
+//! the output directory (mirroring the input subtree when `--subdir`).
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::mapreduce::distribution::distribute;
+use crate::options::{AppType, Options};
+use crate::scheduler::dialect::Dialect;
+use crate::workdir::scan::InputFile;
+
+/// One planned array task: which (input, output) pairs it owns.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlannedTask {
+    /// 1-based array task id (`$SGE_TASK_ID`).
+    pub task_id: usize,
+    pub pairs: Vec<(PathBuf, PathBuf)>,
+}
+
+/// The complete plan for one LLMapReduce invocation.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub tasks: Vec<PlannedTask>,
+    /// Launch protocol each task uses.
+    pub apptype: AppType,
+    /// Total number of input files planned.
+    pub nfiles: usize,
+}
+
+impl Plan {
+    /// Files per task, max over tasks (the paper's "block size").
+    pub fn max_files_per_task(&self) -> usize {
+        self.tasks.iter().map(|t| t.pairs.len()).max().unwrap_or(0)
+    }
+
+    /// Total application launches the plan implies.
+    pub fn total_launches(&self) -> usize {
+        match self.apptype {
+            AppType::Siso => self.nfiles,
+            AppType::Mimo => {
+                self.tasks.iter().filter(|t| !t.pairs.is_empty()).count()
+            }
+        }
+    }
+}
+
+/// Decide the number of array tasks for `nfiles` inputs under `opts`,
+/// enforcing the dialect's array limit.
+pub fn task_count(
+    nfiles: usize,
+    opts: &Options,
+    dialect: &dyn Dialect,
+) -> Result<usize> {
+    let requested = if let Some(ndata) = opts.ndata {
+        // --ndata overrides --np (§II).
+        nfiles.div_ceil(ndata)
+    } else if let Some(np) = opts.np {
+        np.min(nfiles.max(1))
+    } else {
+        // DEFAULT: task per file (Fig 7: "each input image file ...
+        // becomes an array task").
+        nfiles
+    };
+    let requested = requested.max(1);
+    let limit = dialect.max_array_tasks();
+    if requested > limit {
+        // The paper's remedy is "--np can be used"; DEFAULT mode with too
+        // many files is a hard error pointing the user at --np.
+        if opts.np.is_none() && opts.ndata.is_none() {
+            return Err(Error::ArrayLimit {
+                requested,
+                limit,
+                dialect: dialect.kind().as_str().to_string(),
+            });
+        }
+        return Err(Error::ArrayLimit {
+            requested,
+            limit,
+            dialect: dialect.kind().as_str().to_string(),
+        });
+    }
+    Ok(requested)
+}
+
+/// Build the output path for one input file.
+///
+/// With `--subdir` the input's relative directory is replicated below the
+/// output root (§II-A, Fig 3); otherwise outputs are flat.
+///
+/// Hot path (called once per input file, 43,580 times at Table II scale):
+/// the flat case assembles root/name<delim><ext> into one pre-sized
+/// buffer instead of chaining `output_name` + `join` allocations —
+/// measured 2.2x on the plan/43580x256 micro bench (EXPERIMENTS.md
+/// §Perf).
+pub fn output_path(
+    opts: &Options,
+    output_root: &Path,
+    input: &InputFile,
+) -> PathBuf {
+    let file_name = input.file_name();
+    if opts.subdir {
+        let name = opts.output_name(file_name);
+        return match input.relative.parent() {
+            Some(parent) if !parent.as_os_str().is_empty() => {
+                output_root.join(parent).join(name)
+            }
+            _ => output_root.join(name),
+        };
+    }
+    // Flat case: one allocation, exact capacity.
+    let root = output_root.as_os_str();
+    let mut buf = std::ffi::OsString::with_capacity(
+        root.len()
+            + 1
+            + file_name.len()
+            + opts.delimiter.len()
+            + opts.ext.len(),
+    );
+    buf.push(root);
+    buf.push("/");
+    buf.push(file_name);
+    buf.push(&opts.delimiter);
+    buf.push(&opts.ext);
+    PathBuf::from(buf)
+}
+
+/// Produce the full plan: task count, distribution, output naming.
+pub fn plan(
+    files: &[InputFile],
+    opts: &Options,
+    dialect: &dyn Dialect,
+) -> Result<Plan> {
+    let ntasks = task_count(files.len(), opts, dialect)?;
+    let pair_of = |i: usize| {
+        let input = &files[i];
+        (
+            input.path.clone(),
+            output_path(opts, &opts.output, input),
+        )
+    };
+    // Block assignments are contiguous ranges — build them directly and
+    // skip materializing the index vectors (perf: see EXPERIMENTS.md
+    // §Perf iteration 2).
+    let tasks = match opts.distribution {
+        crate::options::Distribution::Block => {
+            let base = files.len() / ntasks;
+            let rem = files.len() % ntasks;
+            let mut next = 0usize;
+            (0..ntasks)
+                .map(|t| {
+                    let size = base + usize::from(t < rem);
+                    let pairs = (next..next + size).map(pair_of).collect();
+                    next += size;
+                    PlannedTask {
+                        task_id: t + 1,
+                        pairs,
+                    }
+                })
+                .collect()
+        }
+        _ => distribute(files.len(), ntasks, opts.distribution)
+            .into_iter()
+            .enumerate()
+            .map(|(t, idxs)| PlannedTask {
+                task_id: t + 1,
+                pairs: idxs.into_iter().map(pair_of).collect(),
+            })
+            .collect(),
+    };
+    Ok(Plan {
+        tasks,
+        apptype: opts.apptype,
+        nfiles: files.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::options::{Distribution, Options, SchedulerKind};
+    use crate::scheduler::dialect::dialect_for;
+
+    fn files(n: usize) -> Vec<InputFile> {
+        (0..n)
+            .map(|i| InputFile {
+                path: PathBuf::from(format!("/in/f{i:04}.dat")),
+                relative: PathBuf::from(format!("f{i:04}.dat")),
+            })
+            .collect()
+    }
+
+    fn ge() -> Box<dyn Dialect + Send + Sync> {
+        dialect_for(SchedulerKind::GridEngine)
+    }
+
+    #[test]
+    fn default_mode_task_per_file() {
+        let opts = Options::new("/in", "/out", "m");
+        let p = plan(&files(6), &opts, ge().as_ref()).unwrap();
+        assert_eq!(p.tasks.len(), 6);
+        assert!(p.tasks.iter().all(|t| t.pairs.len() == 1));
+        assert_eq!(p.total_launches(), 6);
+    }
+
+    #[test]
+    fn np_caps_tasks() {
+        // Fig 7 -> Fig 10 transition: --np=2 over 6 images.
+        let opts = Options::new("/in", "/out", "m").np(2);
+        let p = plan(&files(6), &opts, ge().as_ref()).unwrap();
+        assert_eq!(p.tasks.len(), 2);
+        assert_eq!(p.max_files_per_task(), 3);
+    }
+
+    #[test]
+    fn ndata_overrides_np() {
+        let opts = Options::new("/in", "/out", "m").np(2).ndata(5);
+        let p = plan(&files(12), &opts, ge().as_ref()).unwrap();
+        // ceil(12/5) = 3 tasks, not 2.
+        assert_eq!(p.tasks.len(), 3);
+        assert!(p.max_files_per_task() <= 5);
+    }
+
+    #[test]
+    fn np_larger_than_files_clamps() {
+        let opts = Options::new("/in", "/out", "m").np(100);
+        let p = plan(&files(4), &opts, ge().as_ref()).unwrap();
+        assert_eq!(p.tasks.len(), 4);
+    }
+
+    #[test]
+    fn array_limit_enforced() {
+        let opts = Options::new("/in", "/out", "m"); // DEFAULT
+        let err =
+            task_count(80_000, &opts, ge().as_ref()).unwrap_err();
+        assert!(matches!(err, Error::ArrayLimit { limit: 75_000, .. }));
+        // With --np the same input fits.
+        let opts = opts.np(256);
+        assert_eq!(task_count(80_000, &opts, ge().as_ref()).unwrap(), 256);
+    }
+
+    #[test]
+    fn slurm_limit_tighter() {
+        let d = dialect_for(SchedulerKind::Slurm);
+        let opts = Options::new("/in", "/out", "m");
+        assert!(task_count(5_000, &opts, d.as_ref()).is_err());
+        assert_eq!(
+            task_count(5_000, &opts.np(512), d.as_ref()).unwrap(),
+            512
+        );
+    }
+
+    #[test]
+    fn output_names_follow_fig9() {
+        // Fig 9: output = input name + ".out" in the output dir.
+        let opts = Options::new("/in", "/out", "m");
+        let p = plan(&files(2), &opts, ge().as_ref()).unwrap();
+        assert_eq!(
+            p.tasks[0].pairs[0].1,
+            PathBuf::from("/out/f0000.dat.out")
+        );
+    }
+
+    #[test]
+    fn ext_and_delimiter_respected() {
+        // Fig 10: --ext=gray -> ".gray".
+        let opts = Options::new("/in", "/out", "m").ext("gray");
+        let p = plan(&files(1), &opts, ge().as_ref()).unwrap();
+        assert!(p.tasks[0].pairs[0].1.to_str().unwrap().ends_with("f0000.dat.gray"));
+    }
+
+    #[test]
+    fn subdir_replicates_tree() {
+        let fs = vec![
+            InputFile {
+                path: PathBuf::from("/in/x/a.dat"),
+                relative: PathBuf::from("x/a.dat"),
+            },
+            InputFile {
+                path: PathBuf::from("/in/x/y/b.dat"),
+                relative: PathBuf::from("x/y/b.dat"),
+            },
+        ];
+        let opts = Options::new("/in", "/out", "m").subdir(true);
+        let p = plan(&fs, &opts, ge().as_ref()).unwrap();
+        let outs: Vec<_> = p
+            .tasks
+            .iter()
+            .flat_map(|t| t.pairs.iter().map(|(_, o)| o.clone()))
+            .collect();
+        assert!(outs.contains(&PathBuf::from("/out/x/a.dat.out")));
+        assert!(outs.contains(&PathBuf::from("/out/x/y/b.dat.out")));
+    }
+
+    #[test]
+    fn without_subdir_outputs_flat() {
+        let fs = vec![InputFile {
+            path: PathBuf::from("/in/x/a.dat"),
+            relative: PathBuf::from("x/a.dat"),
+        }];
+        let opts = Options::new("/in", "/out", "m");
+        let p = plan(&fs, &opts, ge().as_ref()).unwrap();
+        assert_eq!(p.tasks[0].pairs[0].1, PathBuf::from("/out/a.dat.out"));
+    }
+
+    #[test]
+    fn cyclic_distribution_in_plan() {
+        let opts = Options::new("/in", "/out", "m")
+            .np(3)
+            .distribution(Distribution::Cyclic);
+        let p = plan(&files(7), &opts, ge().as_ref()).unwrap();
+        let t1: Vec<_> = p.tasks[0]
+            .pairs
+            .iter()
+            .map(|(i, _)| i.to_str().unwrap().to_string())
+            .collect();
+        assert_eq!(t1, vec!["/in/f0000.dat", "/in/f0003.dat", "/in/f0006.dat"]);
+    }
+
+    #[test]
+    fn mimo_launch_accounting() {
+        let opts = Options::new("/in", "/out", "m")
+            .np(4)
+            .apptype(AppType::Mimo);
+        let p = plan(&files(16), &opts, ge().as_ref()).unwrap();
+        assert_eq!(p.total_launches(), 4);
+        let siso = Options::new("/in", "/out", "m").np(4);
+        let p2 = plan(&files(16), &siso, ge().as_ref()).unwrap();
+        assert_eq!(p2.total_launches(), 16);
+    }
+}

@@ -1,0 +1,89 @@
+//! Output-tree replication for `--subdir=true` (§II-A, Fig 3).
+//!
+//! "LLMapReduce will scan the input directory recursively and list all
+//! the files under the input directory as input data to the map process.
+//! In addition, LLMapReduce will duplicate the input data structure to
+//! the output directory."
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::PathBuf;
+
+use crate::error::{IoContext, Result};
+use crate::mapreduce::planner::Plan;
+
+/// Create every directory the plan's outputs need.  Returns the set of
+/// directories created (sorted), which with `--subdir` mirrors the input
+/// hierarchy.
+pub fn replicate_output_tree(plan: &Plan) -> Result<Vec<PathBuf>> {
+    let mut dirs: BTreeSet<PathBuf> = BTreeSet::new();
+    for task in &plan.tasks {
+        for (_, output) in &task.pairs {
+            if let Some(parent) = output.parent() {
+                dirs.insert(parent.to_path_buf());
+            }
+        }
+    }
+    for d in &dirs {
+        fs::create_dir_all(d).at(d)?;
+    }
+    Ok(dirs.into_iter().collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::planner::plan;
+    use crate::options::{Options, SchedulerKind};
+    use crate::scheduler::dialect::dialect_for;
+    use crate::workdir::scan::InputFile;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("llmr-subdir-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn replicates_hierarchy() {
+        let out_root = tmp("tree").join("out");
+        let files = vec![
+            InputFile {
+                path: PathBuf::from("/in/a/1.dat"),
+                relative: PathBuf::from("a/1.dat"),
+            },
+            InputFile {
+                path: PathBuf::from("/in/a/b/2.dat"),
+                relative: PathBuf::from("a/b/2.dat"),
+            },
+            InputFile {
+                path: PathBuf::from("/in/3.dat"),
+                relative: PathBuf::from("3.dat"),
+            },
+        ];
+        let opts = Options::new("/in", &out_root, "m").subdir(true);
+        let d = dialect_for(SchedulerKind::GridEngine);
+        let p = plan(&files, &opts, d.as_ref()).unwrap();
+        let dirs = replicate_output_tree(&p).unwrap();
+        assert!(out_root.join("a").is_dir());
+        assert!(out_root.join("a/b").is_dir());
+        assert_eq!(dirs.len(), 3); // out, out/a, out/a/b
+    }
+
+    #[test]
+    fn flat_plan_creates_only_root() {
+        let out_root = tmp("flat").join("out");
+        let files = vec![InputFile {
+            path: PathBuf::from("/in/deep/x.dat"),
+            relative: PathBuf::from("deep/x.dat"),
+        }];
+        let opts = Options::new("/in", &out_root, "m"); // no --subdir
+        let d = dialect_for(SchedulerKind::GridEngine);
+        let p = plan(&files, &opts, d.as_ref()).unwrap();
+        let dirs = replicate_output_tree(&p).unwrap();
+        assert_eq!(dirs, vec![out_root.clone()]);
+        assert!(!out_root.join("deep").exists());
+    }
+}

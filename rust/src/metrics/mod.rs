@@ -1,0 +1,146 @@
+//! Metrics: phase timing decomposition and experiment records.
+//!
+//! The paper's §IV quantities, computed from [`JobReport`]s:
+//!
+//! * **overhead per array task** (Fig 18's y-axis) — dispatch + startup;
+//! * **job elapsed time** and **speed-up vs DEFAULT@1** (Fig 19);
+//! * **BLOCK vs MIMO speed-up** (Tables I and II).
+
+pub mod report;
+
+use std::time::Duration;
+
+use crate::scheduler::JobReport;
+
+/// One measured experiment cell: an option at a width.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Label, e.g. "MIMO" or "BLOCK".
+    pub option: String,
+    /// Concurrent array tasks (np).
+    pub np: usize,
+    pub elapsed: Duration,
+    pub overhead_per_task: Duration,
+    pub total_startup: Duration,
+    pub total_compute: Duration,
+    pub launches: usize,
+    pub items: usize,
+}
+
+impl Measurement {
+    pub fn from_report(
+        option: impl Into<String>,
+        np: usize,
+        r: &JobReport,
+    ) -> Measurement {
+        // Fig 18 normalizes overhead per *concurrent process*, not per
+        // array task: DEFAULT mode has one array task per file, but the
+        // paper attributes the summed overhead to the np width slots.
+        let total_overhead = r.total_startup() + r.total_dispatch();
+        Measurement {
+            option: option.into(),
+            np,
+            elapsed: r.makespan,
+            overhead_per_task: total_overhead / np.max(1) as u32,
+            total_startup: r.total_startup(),
+            total_compute: r.total_compute(),
+            launches: r.total_launches(),
+            items: r.total_items(),
+        }
+    }
+
+    /// Speed-up of this measurement relative to a baseline elapsed time.
+    pub fn speedup_vs(&self, baseline: Duration) -> f64 {
+        baseline.as_secs_f64() / self.elapsed.as_secs_f64().max(1e-12)
+    }
+}
+
+/// A sweep: measurements across np values for several options, as in
+/// Figs 18/19.
+#[derive(Debug, Clone, Default)]
+pub struct Sweep {
+    pub rows: Vec<Measurement>,
+}
+
+impl Sweep {
+    pub fn push(&mut self, m: Measurement) {
+        self.rows.push(m);
+    }
+
+    pub fn get(&self, option: &str, np: usize) -> Option<&Measurement> {
+        self.rows
+            .iter()
+            .find(|m| m.option == option && m.np == np)
+    }
+
+    /// The Fig 19 baseline: DEFAULT at np = 1.
+    pub fn baseline(&self) -> Option<Duration> {
+        self.get("DEFAULT", 1).map(|m| m.elapsed)
+    }
+
+    /// Distinct np values, ascending.
+    pub fn np_values(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.rows.iter().map(|m| m.np).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Distinct options in first-seen order.
+    pub fn options(&self) -> Vec<String> {
+        let mut seen = Vec::new();
+        for m in &self.rows {
+            if !seen.contains(&m.option) {
+                seen.push(m.option.clone());
+            }
+        }
+        seen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::TaskReport;
+
+    fn report(startup_ms: u64, compute_ms: u64) -> JobReport {
+        JobReport {
+            makespan: Duration::from_millis(startup_ms + compute_ms),
+            tasks: vec![TaskReport {
+                startup: Duration::from_millis(startup_ms),
+                compute: Duration::from_millis(compute_ms),
+                launches: 1,
+                items: 1,
+                ..Default::default()
+            }],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn measurement_from_report() {
+        let m = Measurement::from_report("MIMO", 4, &report(100, 400));
+        assert_eq!(m.elapsed, Duration::from_millis(500));
+        assert_eq!(m.total_startup, Duration::from_millis(100));
+        assert_eq!(m.launches, 1);
+    }
+
+    #[test]
+    fn speedup_math() {
+        let m = Measurement::from_report("MIMO", 1, &report(0, 100));
+        assert!((m.speedup_vs(Duration::from_millis(500)) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sweep_lookup_and_baseline() {
+        let mut s = Sweep::default();
+        s.push(Measurement::from_report("DEFAULT", 1, &report(10, 90)));
+        s.push(Measurement::from_report("MIMO", 1, &report(1, 9)));
+        s.push(Measurement::from_report("MIMO", 4, &report(1, 4)));
+        assert_eq!(s.baseline(), Some(Duration::from_millis(100)));
+        assert_eq!(s.np_values(), vec![1, 4]);
+        assert_eq!(s.options(), vec!["DEFAULT", "MIMO"]);
+        assert!(s.get("MIMO", 4).is_some());
+        assert!(s.get("BLOCK", 1).is_none());
+    }
+}

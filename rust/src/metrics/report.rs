@@ -1,0 +1,259 @@
+//! Human-readable tables, CSV, and JSON emission for experiment results.
+//!
+//! The bench harness prints the same rows/series the paper reports: the
+//! speed-up tables (I, II) and the overhead / speed-up curves (18, 19).
+
+use std::time::Duration;
+
+use crate::metrics::{Measurement, Sweep};
+use crate::util::json::{obj, Json};
+use crate::util::{fmt_count, fmt_duration};
+
+/// Render a fixed-width text table.
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncols = headers.len();
+    let mut widths: Vec<usize> =
+        headers.iter().map(|h| h.chars().count()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncols) {
+            widths[i] = widths[i].max(cell.chars().count());
+        }
+    }
+    let mut out = String::new();
+    let sep = |out: &mut String| {
+        for w in &widths {
+            out.push('+');
+            out.push_str(&"-".repeat(w + 2));
+        }
+        out.push_str("+\n");
+    };
+    sep(&mut out);
+    for (i, h) in headers.iter().enumerate() {
+        out.push_str(&format!("| {:w$} ", h, w = widths[i]));
+    }
+    out.push_str("|\n");
+    sep(&mut out);
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncols) {
+            out.push_str(&format!("| {:w$} ", cell, w = widths[i]));
+        }
+        out.push_str("|\n");
+    }
+    sep(&mut out);
+    out
+}
+
+/// Tables I/II: speed-up of MIMO over BLOCK.
+pub fn speedup_table(
+    example: &str,
+    block: &Measurement,
+    mimo: &Measurement,
+) -> String {
+    let speedup = block.elapsed.as_secs_f64()
+        / mimo.elapsed.as_secs_f64().max(1e-12);
+    render_table(
+        &["Example", "Type", "Elapsed", "Speed up"],
+        &[
+            vec![
+                example.to_string(),
+                "Multiple app launches (BLOCK)".into(),
+                fmt_duration(block.elapsed),
+                "1".into(),
+            ],
+            vec![
+                String::new(),
+                "Single app launch (MIMO)".into(),
+                fmt_duration(mimo.elapsed),
+                format!("{speedup:.2}"),
+            ],
+        ],
+    )
+}
+
+/// Fig 18: overhead per array task, one row per np, one column per option.
+pub fn overhead_series(sweep: &Sweep) -> String {
+    let options = sweep.options();
+    let mut headers: Vec<&str> = vec!["np (concurrent tasks)"];
+    let option_headers: Vec<String> = options
+        .iter()
+        .map(|o| format!("{o} overhead/task"))
+        .collect();
+    headers.extend(option_headers.iter().map(|s| s.as_str()));
+    let rows: Vec<Vec<String>> = sweep
+        .np_values()
+        .into_iter()
+        .map(|np| {
+            let mut row = vec![fmt_count(np)];
+            for o in &options {
+                row.push(
+                    sweep
+                        .get(o, np)
+                        .map(|m| fmt_duration(m.overhead_per_task))
+                        .unwrap_or_else(|| "-".into()),
+                );
+            }
+            row
+        })
+        .collect();
+    render_table(&headers, &rows)
+}
+
+/// Fig 19: speed-up vs DEFAULT@1.
+pub fn speedup_series(sweep: &Sweep) -> String {
+    let baseline = sweep
+        .baseline()
+        .unwrap_or_else(|| Duration::from_secs(1));
+    let options = sweep.options();
+    let mut headers: Vec<&str> = vec!["np (concurrent tasks)"];
+    let option_headers: Vec<String> =
+        options.iter().map(|o| format!("{o} speed-up")).collect();
+    headers.extend(option_headers.iter().map(|s| s.as_str()));
+    let rows: Vec<Vec<String>> = sweep
+        .np_values()
+        .into_iter()
+        .map(|np| {
+            let mut row = vec![fmt_count(np)];
+            for o in &options {
+                row.push(
+                    sweep
+                        .get(o, np)
+                        .map(|m| format!("{:.2}", m.speedup_vs(baseline)))
+                        .unwrap_or_else(|| "-".into()),
+                );
+            }
+            row
+        })
+        .collect();
+    render_table(&headers, &rows)
+}
+
+/// CSV emission for plotting (one row per measurement).
+pub fn sweep_csv(sweep: &Sweep) -> String {
+    let mut out = String::from(
+        "option,np,elapsed_s,overhead_per_task_s,total_startup_s,\
+         total_compute_s,launches,items\n",
+    );
+    for m in &sweep.rows {
+        out.push_str(&format!(
+            "{},{},{:.6},{:.6},{:.6},{:.6},{},{}\n",
+            m.option,
+            m.np,
+            m.elapsed.as_secs_f64(),
+            m.overhead_per_task.as_secs_f64(),
+            m.total_startup.as_secs_f64(),
+            m.total_compute.as_secs_f64(),
+            m.launches,
+            m.items
+        ));
+    }
+    out
+}
+
+/// JSON emission for EXPERIMENTS.md tooling.
+pub fn sweep_json(name: &str, sweep: &Sweep) -> Json {
+    obj(vec![
+        ("experiment", name.into()),
+        (
+            "rows",
+            Json::Arr(
+                sweep
+                    .rows
+                    .iter()
+                    .map(|m| {
+                        obj(vec![
+                            ("option", m.option.as_str().into()),
+                            ("np", m.np.into()),
+                            ("elapsed_s", m.elapsed.as_secs_f64().into()),
+                            (
+                                "overhead_per_task_s",
+                                m.overhead_per_task.as_secs_f64().into(),
+                            ),
+                            ("launches", m.launches.into()),
+                            ("items", m.items.into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meas(option: &str, np: usize, ms: u64) -> Measurement {
+        Measurement {
+            option: option.into(),
+            np,
+            elapsed: Duration::from_millis(ms),
+            overhead_per_task: Duration::from_millis(ms / 10),
+            total_startup: Duration::from_millis(ms / 5),
+            total_compute: Duration::from_millis(ms / 2),
+            launches: np,
+            items: np * 2,
+        }
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = render_table(
+            &["A", "Blong"],
+            &[vec!["x".into(), "y".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+        assert!(t.contains("Blong"));
+    }
+
+    #[test]
+    fn speedup_table_matches_paper_shape() {
+        let block = meas("BLOCK", 2, 2410);
+        let mimo = meas("MIMO", 2, 1000);
+        let t = speedup_table("Matlab", &block, &mimo);
+        assert!(t.contains("Multiple app launches (BLOCK)"));
+        assert!(t.contains("Single app launch (MIMO)"));
+        assert!(t.contains("2.41"));
+    }
+
+    #[test]
+    fn series_tables_have_all_options() {
+        let mut s = Sweep::default();
+        for np in [1usize, 2, 4] {
+            s.push(meas("DEFAULT", np, 1000 / np as u64));
+            s.push(meas("BLOCK", np, 900 / np as u64));
+            s.push(meas("MIMO", np, 500 / np as u64));
+        }
+        let o = overhead_series(&s);
+        let p = speedup_series(&s);
+        for t in [&o, &p] {
+            assert!(t.contains("DEFAULT"));
+            assert!(t.contains("BLOCK"));
+            assert!(t.contains("MIMO"));
+        }
+        // Fig 19 baseline row: DEFAULT@1 speed-up is 1.00.
+        assert!(p.contains("1.00"));
+    }
+
+    #[test]
+    fn csv_roundtrip_row_count() {
+        let mut s = Sweep::default();
+        s.push(meas("MIMO", 1, 10));
+        s.push(meas("MIMO", 2, 5));
+        let csv = sweep_csv(&s);
+        assert_eq!(csv.lines().count(), 3); // header + 2
+    }
+
+    #[test]
+    fn json_emission_parses() {
+        let mut s = Sweep::default();
+        s.push(meas("BLOCK", 4, 100));
+        let j = sweep_json("fig18", &s);
+        let text = j.to_string_pretty();
+        let back = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(
+            back.get("experiment").unwrap().as_str(),
+            Some("fig18")
+        );
+    }
+}

@@ -1,0 +1,536 @@
+//! The LLMapReduce option surface — Fig 2 of the paper, verbatim.
+//!
+//! ```text
+//! LLMapReduce --np=number_of_tasks \
+//!  --input=input_dir --output=output_dir \
+//!  --mapper=myMapper --reducer=myReducer --redout=output_filename \
+//!  --ndata=NdataPerTask --distribution=block|cyclic \
+//!  --subdir=true|false --ext=myExt --delimeter=myExtDelimiter \
+//!  --exclusive=true|false --keep=true|false --apptype=mimo|siso \
+//!  --options=<scheduler_options_to_add>
+//! ```
+//!
+//! Both `--delimeter` (the paper's spelling, Fig 2) and `--delimiter`
+//! (the prose spelling, §II) are accepted.  Values may be given as
+//! `--key=value` or `--key value`, matching the paper's own usage (Fig 7
+//! uses `=`; Fig 15 uses spaces).
+
+use std::path::PathBuf;
+
+use crate::error::{Error, Result};
+
+/// How input files are spread over array tasks (§II, `--distribution`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Distribution {
+    /// Contiguous runs of files per task (the paper's default).
+    #[default]
+    Block,
+    /// Round-robin: file *i* goes to task *i mod np* (Fig 15).
+    Cyclic,
+}
+
+impl Distribution {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "block" => Ok(Distribution::Block),
+            "cyclic" => Ok(Distribution::Cyclic),
+            other => Err(Error::opt(format!(
+                "--distribution must be block|cyclic, got '{other}'"
+            ))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Distribution::Block => "block",
+            Distribution::Cyclic => "cyclic",
+        }
+    }
+}
+
+/// Application launch protocol (§II-B, `--apptype`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AppType {
+    /// Single-input-single-output: one application launch per input file
+    /// (repeated start-up cost).  The paper's default.
+    #[default]
+    Siso,
+    /// Multiple-input-multiple-output: one launch per array task, fed a
+    /// generated list of input/output pairs — the SPMD morph that gives
+    /// the paper its 10x headline.
+    Mimo,
+}
+
+impl AppType {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "siso" => Ok(AppType::Siso),
+            "mimo" => Ok(AppType::Mimo),
+            other => Err(Error::opt(format!(
+                "--apptype must be mimo|siso, got '{other}'"
+            ))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AppType::Siso => "siso",
+            AppType::Mimo => "mimo",
+        }
+    }
+}
+
+/// Which scheduler dialect generates the submission scripts.
+/// (The paper supports "several schedulers such as SLURM, Grid Engine and
+/// LSF" — §I; the dialect is orthogonal to the execution engine.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedulerKind {
+    /// Open-source Grid Engine (the dialect shown in Fig 8).
+    #[default]
+    GridEngine,
+    Slurm,
+    Lsf,
+}
+
+impl SchedulerKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "gridengine" | "sge" | "ge" => Ok(SchedulerKind::GridEngine),
+            "slurm" => Ok(SchedulerKind::Slurm),
+            "lsf" => Ok(SchedulerKind::Lsf),
+            other => Err(Error::opt(format!(
+                "--scheduler must be gridengine|slurm|lsf, got '{other}'"
+            ))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SchedulerKind::GridEngine => "gridengine",
+            SchedulerKind::Slurm => "slurm",
+            SchedulerKind::Lsf => "lsf",
+        }
+    }
+}
+
+/// The full Fig 2 option set, plus the engine/scheduler selectors this
+/// reproduction adds (they do not exist in the paper because the paper had
+/// a real cluster; see DESIGN.md §3 substitutions).
+#[derive(Debug, Clone)]
+pub struct Options {
+    /// `--np`: number of array tasks.  `None` = one task per input file
+    /// (the paper's DEFAULT mode).
+    pub np: Option<usize>,
+    /// `--ndata`: input files per task; overrides `--np` (§II).
+    pub ndata: Option<usize>,
+    /// `--input`: input directory or list file.
+    pub input: PathBuf,
+    /// `--output`: output directory.
+    pub output: PathBuf,
+    /// `--mapper`: map application (built-in name or executable path).
+    pub mapper: String,
+    /// `--reducer`: optional reduce application.
+    pub reducer: Option<String>,
+    /// `--redout`: reducer output file name (default `llmapreduce.out`).
+    pub redout: String,
+    /// `--distribution`: block|cyclic.
+    pub distribution: Distribution,
+    /// `--subdir`: recurse into the input tree and replicate it on output.
+    pub subdir: bool,
+    /// `--ext`: output extension (default "out").
+    pub ext: String,
+    /// `--delimeter`/`--delimiter`: extension delimiter (default ".").
+    pub delimiter: String,
+    /// `--exclusive`: whole-node allocation.
+    pub exclusive: bool,
+    /// `--keep`: keep the .MAPRED.PID directory for debugging.
+    pub keep: bool,
+    /// `--apptype`: siso|mimo.
+    pub apptype: AppType,
+    /// `--options`: extra raw scheduler directives, passed through into the
+    /// generated submission script.
+    pub scheduler_options: Vec<String>,
+    /// `--scheduler`: which dialect writes the scripts.
+    pub scheduler: SchedulerKind,
+    /// Process id used for the `.MAPRED.<PID>` name; defaults to the real
+    /// pid, overridable for reproducible tests.
+    pub pid: Option<u32>,
+    /// Where `.MAPRED.<PID>` is created; defaults to the current working
+    /// directory (the paper's behaviour).
+    pub workdir: Option<PathBuf>,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Options {
+            np: None,
+            ndata: None,
+            input: PathBuf::new(),
+            output: PathBuf::new(),
+            mapper: String::new(),
+            reducer: None,
+            redout: "llmapreduce.out".to_string(),
+            distribution: Distribution::Block,
+            subdir: false,
+            ext: "out".to_string(),
+            delimiter: ".".to_string(),
+            exclusive: false,
+            keep: false,
+            apptype: AppType::Siso,
+            scheduler_options: Vec::new(),
+            scheduler: SchedulerKind::GridEngine,
+            pid: None,
+            workdir: None,
+        }
+    }
+}
+
+impl Options {
+    /// Start building options for an input/output/mapper triple (the three
+    /// mandatory arguments of every example in the paper).
+    pub fn new(
+        input: impl Into<PathBuf>,
+        output: impl Into<PathBuf>,
+        mapper: impl Into<String>,
+    ) -> Self {
+        Options {
+            input: input.into(),
+            output: output.into(),
+            mapper: mapper.into(),
+            ..Default::default()
+        }
+    }
+
+    // -- builder-style setters (used by examples and tests) -----------------
+
+    pub fn np(mut self, np: usize) -> Self {
+        self.np = Some(np);
+        self
+    }
+    pub fn ndata(mut self, ndata: usize) -> Self {
+        self.ndata = Some(ndata);
+        self
+    }
+    pub fn reducer(mut self, r: impl Into<String>) -> Self {
+        self.reducer = Some(r.into());
+        self
+    }
+    pub fn redout(mut self, r: impl Into<String>) -> Self {
+        self.redout = r.into();
+        self
+    }
+    pub fn distribution(mut self, d: Distribution) -> Self {
+        self.distribution = d;
+        self
+    }
+    pub fn subdir(mut self, on: bool) -> Self {
+        self.subdir = on;
+        self
+    }
+    pub fn ext(mut self, e: impl Into<String>) -> Self {
+        self.ext = e.into();
+        self
+    }
+    pub fn delimiter(mut self, d: impl Into<String>) -> Self {
+        self.delimiter = d.into();
+        self
+    }
+    pub fn exclusive(mut self, on: bool) -> Self {
+        self.exclusive = on;
+        self
+    }
+    pub fn keep(mut self, on: bool) -> Self {
+        self.keep = on;
+        self
+    }
+    pub fn apptype(mut self, t: AppType) -> Self {
+        self.apptype = t;
+        self
+    }
+    pub fn scheduler(mut self, s: SchedulerKind) -> Self {
+        self.scheduler = s;
+        self
+    }
+    pub fn scheduler_option(mut self, o: impl Into<String>) -> Self {
+        self.scheduler_options.push(o.into());
+        self
+    }
+    pub fn pid(mut self, pid: u32) -> Self {
+        self.pid = Some(pid);
+        self
+    }
+    pub fn workdir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.workdir = Some(dir.into());
+        self
+    }
+
+    /// Parse from a command-line style argument vector (everything after
+    /// the program name).  Accepts `--key=value` and `--key value`.
+    pub fn parse_args<I, S>(args: I) -> Result<Options>
+    where
+        I: IntoIterator<Item = S>,
+        S: AsRef<str>,
+    {
+        let mut opts = Options::default();
+        let argv: Vec<String> =
+            args.into_iter().map(|s| s.as_ref().to_string()).collect();
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            let (key, inline_val) = match arg.split_once('=') {
+                Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                None => (arg.clone(), None),
+            };
+            if !key.starts_with("--") {
+                return Err(Error::opt(format!("unexpected argument '{arg}'")));
+            }
+            let mut take = || -> Result<String> {
+                if let Some(v) = inline_val.clone() {
+                    Ok(v)
+                } else {
+                    i += 1;
+                    argv.get(i).cloned().ok_or_else(|| {
+                        Error::opt(format!("{key} requires a value"))
+                    })
+                }
+            };
+            match key.as_str() {
+                "--np" => opts.np = Some(parse_count(&key, &take()?)?),
+                "--ndata" => opts.ndata = Some(parse_count(&key, &take()?)?),
+                "--input" => opts.input = PathBuf::from(take()?),
+                "--output" => opts.output = PathBuf::from(take()?),
+                "--mapper" => opts.mapper = take()?,
+                "--reducer" => opts.reducer = Some(take()?),
+                "--redout" => opts.redout = take()?,
+                "--distribution" => {
+                    opts.distribution = Distribution::parse(&take()?)?
+                }
+                "--subdir" => opts.subdir = parse_bool(&key, &take()?)?,
+                "--ext" => opts.ext = take()?,
+                // Fig 2 spells it "delimeter"; the prose spells "delimiter".
+                "--delimeter" | "--delimiter" => opts.delimiter = take()?,
+                "--exclusive" => opts.exclusive = parse_bool(&key, &take()?)?,
+                "--keep" => opts.keep = parse_bool(&key, &take()?)?,
+                "--apptype" => opts.apptype = AppType::parse(&take()?)?,
+                "--options" => opts.scheduler_options.push(take()?),
+                "--scheduler" => {
+                    opts.scheduler = SchedulerKind::parse(&take()?)?
+                }
+                "--workdir" => opts.workdir = Some(PathBuf::from(take()?)),
+                other => {
+                    return Err(Error::opt(format!("unknown option '{other}'")))
+                }
+            }
+            i += 1;
+        }
+        opts.validate()?;
+        Ok(opts)
+    }
+
+    /// Check the option set is internally consistent.
+    pub fn validate(&self) -> Result<()> {
+        if self.input.as_os_str().is_empty() {
+            return Err(Error::opt("--input is required"));
+        }
+        if self.output.as_os_str().is_empty() {
+            return Err(Error::opt("--output is required"));
+        }
+        if self.mapper.is_empty() {
+            return Err(Error::opt("--mapper is required"));
+        }
+        if self.np == Some(0) {
+            return Err(Error::opt("--np must be > 0"));
+        }
+        if self.ndata == Some(0) {
+            return Err(Error::opt("--ndata must be > 0"));
+        }
+        if self.ext.is_empty() {
+            return Err(Error::opt("--ext must be non-empty"));
+        }
+        if self.redout.is_empty() {
+            return Err(Error::opt("--redout must be non-empty"));
+        }
+        Ok(())
+    }
+
+    /// The output file name for one input file: `<name><delim><ext>`
+    /// (§III-A: "the output file name is determined by the name of the
+    /// input file with the default extension, '.out'").
+    pub fn output_name(&self, input_file_name: &str) -> String {
+        format!("{input_file_name}{}{}", self.delimiter, self.ext)
+    }
+
+    /// Effective pid for the `.MAPRED.<PID>` directory.
+    pub fn effective_pid(&self) -> u32 {
+        self.pid.unwrap_or_else(std::process::id)
+    }
+}
+
+fn parse_count(key: &str, s: &str) -> Result<usize> {
+    s.parse::<usize>()
+        .map_err(|_| Error::opt(format!("{key} expects a positive integer, got '{s}'")))
+}
+
+fn parse_bool(key: &str, s: &str) -> Result<bool> {
+    match s.to_ascii_lowercase().as_str() {
+        "true" | "1" | "yes" => Ok(true),
+        "false" | "0" | "no" => Ok(false),
+        other => Err(Error::opt(format!(
+            "{key} expects true|false, got '{other}'"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> Vec<&'static str> {
+        vec!["--input=in", "--output=out", "--mapper=myMapper"]
+    }
+
+    #[test]
+    fn fig7_style_equals_form() {
+        // Fig 7: LLMapReduce --mapper=MatlabCmd.sh --input=input --output=output
+        let o = Options::parse_args([
+            "--mapper=MatlabCmd.sh",
+            "--input=input",
+            "--output=output",
+        ])
+        .unwrap();
+        assert_eq!(o.mapper, "MatlabCmd.sh");
+        assert_eq!(o.np, None); // DEFAULT mode: one task per file
+        assert_eq!(o.apptype, AppType::Siso);
+        assert_eq!(o.ext, "out");
+        assert_eq!(o.delimiter, ".");
+    }
+
+    #[test]
+    fn fig15_style_space_form() {
+        // Fig 15: LLMapReduce --np 3 --mapper WordFreqCmd.sh --reducer ... --distribution cyclic
+        let o = Options::parse_args([
+            "--np", "3",
+            "--mapper", "WordFreqCmd.sh",
+            "--reducer", "ReduceWordFreqCmd.sh",
+            "--input", "input",
+            "--output", "output",
+            "--distribution", "cyclic",
+        ])
+        .unwrap();
+        assert_eq!(o.np, Some(3));
+        assert_eq!(o.distribution, Distribution::Cyclic);
+        assert_eq!(o.reducer.as_deref(), Some("ReduceWordFreqCmd.sh"));
+    }
+
+    #[test]
+    fn fig16_mimo() {
+        let o = Options::parse_args([
+            "--np", "3",
+            "--mapper", "WordFreqCmdMulti.sh",
+            "--reducer", "ReduceWordFreqCmd.sh",
+            "--input", "input",
+            "--output", "output",
+            "--apptype", "mimo",
+        ])
+        .unwrap();
+        assert_eq!(o.apptype, AppType::Mimo);
+    }
+
+    #[test]
+    fn both_delimiter_spellings() {
+        for spelling in ["--delimeter=_", "--delimiter=_"] {
+            let mut args = base();
+            args.push(spelling);
+            let o = Options::parse_args(args).unwrap();
+            assert_eq!(o.delimiter, "_");
+        }
+    }
+
+    #[test]
+    fn ext_changes_output_name() {
+        // Fig 10: --ext=gray gives ".gray" instead of ".out".
+        let mut args = base();
+        args.push("--ext=gray");
+        let o = Options::parse_args(args).unwrap();
+        assert_eq!(o.output_name("image1.ppm"), "image1.ppm.gray");
+    }
+
+    #[test]
+    fn custom_delimiter_in_output_name() {
+        let o = Options::new("i", "o", "m").ext("gray").delimiter("_");
+        assert_eq!(o.output_name("img"), "img_gray");
+    }
+
+    #[test]
+    fn missing_required_args_rejected() {
+        assert!(Options::parse_args(["--input=i", "--output=o"]).is_err());
+        assert!(Options::parse_args(["--input=i", "--mapper=m"]).is_err());
+        assert!(Options::parse_args(["--output=o", "--mapper=m"]).is_err());
+    }
+
+    #[test]
+    fn zero_counts_rejected() {
+        let mut args = base();
+        args.push("--np=0");
+        assert!(Options::parse_args(args).is_err());
+        let mut args = base();
+        args.push("--ndata=0");
+        assert!(Options::parse_args(args).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let mut args = base();
+        args.push("--bogus=1");
+        let err = Options::parse_args(args).unwrap_err().to_string();
+        assert!(err.contains("--bogus"), "{err}");
+    }
+
+    #[test]
+    fn bad_enum_values_rejected() {
+        for bad in [
+            "--distribution=diagonal",
+            "--apptype=simo",
+            "--scheduler=pbs",
+            "--subdir=maybe",
+        ] {
+            let mut args = base();
+            args.push(bad);
+            assert!(Options::parse_args(args).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn options_passthrough_accumulates() {
+        let mut args = base();
+        args.push("--options=-l mem=8G");
+        args.push("--options=-q long");
+        let o = Options::parse_args(args).unwrap();
+        assert_eq!(o.scheduler_options, vec!["-l mem=8G", "-q long"]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let mut args = base();
+        args.push("--np");
+        assert!(Options::parse_args(args).is_err());
+    }
+
+    #[test]
+    fn builder_roundtrip() {
+        let o = Options::new("in", "out", "map")
+            .np(100)
+            .ndata(5)
+            .reducer("red")
+            .distribution(Distribution::Cyclic)
+            .apptype(AppType::Mimo)
+            .subdir(true)
+            .keep(true)
+            .exclusive(true)
+            .scheduler(SchedulerKind::Slurm)
+            .pid(1120);
+        o.validate().unwrap();
+        assert_eq!(o.effective_pid(), 1120);
+        assert_eq!(o.scheduler.as_str(), "slurm");
+    }
+}

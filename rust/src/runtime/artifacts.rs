@@ -1,0 +1,252 @@
+//! Artifact discovery and manifest validation.
+//!
+//! `make artifacts` (python, build time) writes `artifacts/<name>.hlo.txt`
+//! plus `manifest.json` describing each entry's input shapes/dtypes.  The
+//! Rust runtime never regenerates these — python is not on the request
+//! path — it only locates and validates them here.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, IoContext, Result};
+use crate::util::json::Json;
+
+/// Input signature of one artifact entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl InputSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One entry from the manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// Absolute path to the `.hlo.txt` file.
+    pub path: PathBuf,
+    pub inputs: Vec<InputSpec>,
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+/// Locate the artifacts directory:
+/// 1. `$LLMR_ARTIFACTS` if set;
+/// 2. `./artifacts` upward from the current directory (so examples work
+///    from anywhere inside the repo).
+pub fn find_artifacts_dir() -> Result<PathBuf> {
+    if let Ok(dir) = std::env::var("LLMR_ARTIFACTS") {
+        let p = PathBuf::from(dir);
+        if p.join("manifest.json").is_file() {
+            return Ok(p);
+        }
+        return Err(Error::Artifact {
+            name: "manifest.json".into(),
+            reason: format!("$LLMR_ARTIFACTS={} has no manifest", p.display()),
+        });
+    }
+    let mut cur = std::env::current_dir()
+        .map_err(|e| Error::io(PathBuf::from("."), e))?;
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").is_file() {
+            return Ok(cand);
+        }
+        if !cur.pop() {
+            return Err(Error::Artifact {
+                name: "manifest.json".into(),
+                reason: "no artifacts/ directory found — run `make artifacts`"
+                    .into(),
+            });
+        }
+    }
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).at(&manifest_path)?;
+        let doc = Json::parse(&text)?;
+        if doc.get("format").and_then(Json::as_str) != Some("hlo-text") {
+            return Err(Error::Artifact {
+                name: "manifest.json".into(),
+                reason: "format != hlo-text".into(),
+            });
+        }
+        let entries_obj = doc
+            .get("entries")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| Error::Artifact {
+                name: "manifest.json".into(),
+                reason: "missing entries object".into(),
+            })?;
+        let mut entries = Vec::with_capacity(entries_obj.len());
+        for (name, entry) in entries_obj {
+            let file =
+                entry.get("file").and_then(Json::as_str).ok_or_else(|| {
+                    Error::Artifact {
+                        name: name.clone(),
+                        reason: "missing file field".into(),
+                    }
+                })?;
+            let path = dir.join(file);
+            if !path.is_file() {
+                return Err(Error::Artifact {
+                    name: name.clone(),
+                    reason: format!("{} does not exist", path.display()),
+                });
+            }
+            let inputs = entry
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::Artifact {
+                    name: name.clone(),
+                    reason: "missing inputs array".into(),
+                })?
+                .iter()
+                .map(|spec| -> Result<InputSpec> {
+                    let shape = spec
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| Error::Artifact {
+                            name: name.clone(),
+                            reason: "input missing shape".into(),
+                        })?
+                        .iter()
+                        .map(|d| {
+                            d.as_usize().ok_or_else(|| Error::Artifact {
+                                name: name.clone(),
+                                reason: "non-integer dim".into(),
+                            })
+                        })
+                        .collect::<Result<Vec<usize>>>()?;
+                    let dtype = spec
+                        .get("dtype")
+                        .and_then(Json::as_str)
+                        .unwrap_or("float32")
+                        .to_string();
+                    Ok(InputSpec { shape, dtype })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            entries.push(ArtifactEntry {
+                name: name.clone(),
+                path,
+                inputs,
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            entries,
+        })
+    }
+
+    /// Load from the auto-discovered artifacts directory.
+    pub fn discover() -> Result<Manifest> {
+        Manifest::load(&find_artifacts_dir()?)
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| Error::Artifact {
+                name: name.to_string(),
+                reason: format!(
+                    "not in manifest (have: {})",
+                    self.entries
+                        .iter()
+                        .map(|e| e.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ),
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("llmr-art-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn write_manifest(dir: &Path, body: &str) {
+        fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn loads_valid_manifest() {
+        let d = tmp("valid");
+        fs::write(d.join("m.hlo.txt"), "HloModule m\n").unwrap();
+        write_manifest(
+            &d,
+            r#"{"format":"hlo-text","entries":{
+                "m":{"file":"m.hlo.txt",
+                     "inputs":[{"shape":[128,128],"dtype":"float32"}]}}}"#,
+        );
+        let m = Manifest::load(&d).unwrap();
+        let e = m.entry("m").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![128, 128]);
+        assert_eq!(e.inputs[0].element_count(), 16384);
+    }
+
+    #[test]
+    fn missing_hlo_file_rejected() {
+        let d = tmp("nohlo");
+        write_manifest(
+            &d,
+            r#"{"format":"hlo-text","entries":{
+                "m":{"file":"gone.hlo.txt","inputs":[]}}}"#,
+        );
+        assert!(Manifest::load(&d).is_err());
+    }
+
+    #[test]
+    fn wrong_format_rejected() {
+        let d = tmp("badfmt");
+        write_manifest(&d, r#"{"format":"proto","entries":{}}"#);
+        let err = Manifest::load(&d).unwrap_err().to_string();
+        assert!(err.contains("hlo-text"), "{err}");
+    }
+
+    #[test]
+    fn unknown_entry_lists_alternatives() {
+        let d = tmp("unknown");
+        fs::write(d.join("a.hlo.txt"), "HloModule a\n").unwrap();
+        write_manifest(
+            &d,
+            r#"{"format":"hlo-text","entries":{
+                "a":{"file":"a.hlo.txt","inputs":[]}}}"#,
+        );
+        let m = Manifest::load(&d).unwrap();
+        let err = m.entry("nope").unwrap_err().to_string();
+        assert!(err.contains("have: a"), "{err}");
+    }
+
+    #[test]
+    fn real_repo_manifest_loads() {
+        // The actual artifacts built by `make artifacts`, when present.
+        if let Ok(dir) = find_artifacts_dir() {
+            let m = Manifest::load(&dir).unwrap();
+            for name in ["image_convert", "matmul_pair", "matmul_chain"] {
+                assert!(m.entry(name).is_ok(), "{name} missing");
+            }
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Per-thread PJRT client.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based — not `Send`/`Sync` — so
+//! each engine worker thread boots its own client on first use.  This is
+//! faithful to the paper's cost model: every concurrently-running array
+//! task on a real cluster boots its own MATLAB/JVM; here every worker
+//! thread boots its own PJRT client, and the per-*application-launch*
+//! start-up cost that MIMO amortizes is the XLA **compile** in
+//! [`super::executable`], paid per `MapApp::startup()`.
+
+use std::cell::OnceCell;
+
+use crate::error::{Error, Result};
+
+thread_local! {
+    static CLIENT: OnceCell<xla::PjRtClient> = const { OnceCell::new() };
+}
+
+/// Get this thread's PJRT CPU client (booted on first use).
+pub fn thread_client() -> Result<xla::PjRtClient> {
+    CLIENT.with(|cell| {
+        if cell.get().is_none() {
+            let client = xla::PjRtClient::cpu().map_err(|e| {
+                Error::Runtime(format!("PjRtClient::cpu: {e}"))
+            })?;
+            let _ = cell.set(client);
+        }
+        // PjRtClient is an Rc handle; cloning is cheap and shares the
+        // underlying client.
+        Ok(cell.get().expect("just set").clone())
+    })
+}
+
+/// Back-compat alias used by `main.rs` inspect.
+pub fn global_client() -> Result<xla::PjRtClient> {
+    thread_client()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_is_cpu() {
+        let c = thread_client().unwrap();
+        assert_eq!(c.platform_name(), "cpu");
+        assert!(c.device_count() >= 1);
+    }
+
+    #[test]
+    fn second_call_reuses() {
+        // Same underlying client (thread-local cache): platform data
+        // agrees and no panic on repeated boot.
+        let a = thread_client().unwrap();
+        let b = thread_client().unwrap();
+        assert_eq!(a.platform_name(), b.platform_name());
+    }
+
+    #[test]
+    fn each_thread_gets_a_client() {
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                s.spawn(|| {
+                    let c = thread_client().unwrap();
+                    assert_eq!(c.platform_name(), "cpu");
+                });
+            }
+        });
+    }
+}

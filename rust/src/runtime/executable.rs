@@ -1,0 +1,191 @@
+//! HLO artifact loading, compilation and execution.
+//!
+//! The interchange format is HLO *text* (never serialized protos — jax's
+//! 64-bit instruction ids crash xla_extension 0.5.1's proto path; the text
+//! parser reassigns ids).  See `python/compile/aot.py` and
+//! /opt/xla-example/README.md.
+//!
+//! [`XlaExecutable::load`] is deliberately the *expensive* call: it parses
+//! and XLA-compiles the module.  The map applications call it from
+//! `MapApp::startup()`, so SISO mode pays compilation per input file and
+//! MIMO pays it once per array task — the mechanism under test in the
+//! paper (DESIGN.md §3, substitution table).
+
+use std::path::Path;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::runtime::artifacts::{ArtifactEntry, InputSpec};
+use crate::runtime::client::thread_client;
+
+/// A compiled, executable artifact.
+pub struct XlaExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+    inputs: Vec<InputSpec>,
+    /// How long parse+compile took (the "application start-up" cost).
+    compile_time: Duration,
+}
+
+impl XlaExecutable {
+    /// Parse the HLO text at `path` and compile it on the global client.
+    pub fn load(name: &str, path: &Path, inputs: &[InputSpec]) -> Result<Self> {
+        let t0 = std::time::Instant::now();
+        let client = thread_client()?;
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
+            Error::Runtime(format!("parse {}: {e}", path.display()))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| {
+            Error::Runtime(format!("compile {name}: {e}"))
+        })?;
+        Ok(XlaExecutable {
+            exe,
+            name: name.to_string(),
+            inputs: inputs.to_vec(),
+            compile_time: t0.elapsed(),
+        })
+    }
+
+    /// Load straight from a manifest entry.
+    pub fn from_entry(entry: &ArtifactEntry) -> Result<Self> {
+        Self::load(&entry.name, &entry.path, &entry.inputs)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn compile_time(&self) -> Duration {
+        self.compile_time
+    }
+
+    pub fn input_specs(&self) -> &[InputSpec] {
+        &self.inputs
+    }
+
+    /// Execute on f32 buffers, one per declared input, shapes validated
+    /// against the manifest.  Returns the flattened f32 elements of the
+    /// single tuple output (`return_tuple=True` in aot.py).
+    pub fn run_f32(&self, args: &[&[f32]]) -> Result<Vec<f32>> {
+        if args.len() != self.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                args.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (i, (arg, spec)) in args.iter().zip(&self.inputs).enumerate() {
+            if arg.len() != spec.element_count() {
+                return Err(Error::Runtime(format!(
+                    "{}: input {i} has {} elements, shape {:?} needs {}",
+                    self.name,
+                    arg.len(),
+                    spec.shape,
+                    spec.element_count()
+                )));
+            }
+            // One host->literal copy straight into the target shape
+            // (vec1 + reshape would copy twice — §Perf iteration 3).
+            let bytes = unsafe {
+                std::slice::from_raw_parts(
+                    arg.as_ptr() as *const u8,
+                    std::mem::size_of_val(*arg),
+                )
+            };
+            let lit = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &spec.shape,
+                bytes,
+            )
+            .map_err(|e| {
+                Error::Runtime(format!("literal for input {i}: {e}"))
+            })?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("execute {}: {e}", self.name)))?;
+        let buffer = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| Error::Runtime("empty result".into()))?;
+        let literal = buffer
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("to_literal: {e}")))?;
+        let out = literal
+            .to_tuple1()
+            .map_err(|e| Error::Runtime(format!("to_tuple1: {e}")))?;
+        out.to_vec::<f32>()
+            .map_err(|e| Error::Runtime(format!("to_vec: {e}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::Manifest;
+
+    fn manifest() -> Option<Manifest> {
+        Manifest::discover().ok()
+    }
+
+    #[test]
+    fn matmul_pair_roundtrip() {
+        // The CORE integration point: python-AOT HLO text executes in rust
+        // with correct numerics.
+        let Some(m) = manifest() else { return };
+        let entry = m.entry("matmul_pair").unwrap();
+        let exe = XlaExecutable::from_entry(entry).unwrap();
+        let n = entry.inputs[0].shape[0];
+        // a = I, b = arbitrary -> out == b.
+        let mut a = vec![0f32; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0;
+        }
+        let b: Vec<f32> = (0..n * n).map(|i| (i % 97) as f32 * 0.5).collect();
+        let out = exe.run_f32(&[&a, &b]).unwrap();
+        assert_eq!(out.len(), n * n);
+        for (x, y) in out.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+        assert!(exe.compile_time() > Duration::ZERO);
+    }
+
+    #[test]
+    fn image_convert_white_is_white() {
+        let Some(m) = manifest() else { return };
+        let entry = m.entry("image_convert").unwrap();
+        let exe = XlaExecutable::from_entry(entry).unwrap();
+        let hw3 = entry.inputs[0].element_count();
+        let img = vec![1f32; hw3];
+        let out = exe.run_f32(&[&img]).unwrap();
+        assert_eq!(out.len(), hw3 / 3);
+        for v in &out {
+            assert!((v - 1.0).abs() < 1e-5, "{v}");
+        }
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let Some(m) = manifest() else { return };
+        let exe =
+            XlaExecutable::from_entry(m.entry("matmul_pair").unwrap()).unwrap();
+        let err = exe.run_f32(&[&[0.0]]).unwrap_err().to_string();
+        assert!(err.contains("expected 2 inputs"), "{err}");
+    }
+
+    #[test]
+    fn wrong_shape_rejected() {
+        let Some(m) = manifest() else { return };
+        let exe =
+            XlaExecutable::from_entry(m.entry("matmul_pair").unwrap()).unwrap();
+        let a = vec![0f32; 3];
+        let b = vec![0f32; 3];
+        let err = exe.run_f32(&[&a, &b]).unwrap_err().to_string();
+        assert!(err.contains("elements"), "{err}");
+    }
+}

@@ -1,0 +1,19 @@
+//! The XLA/PJRT runtime layer.
+//!
+//! Loads the HLO-text artifacts that `python/compile/aot.py` produced at
+//! build time, compiles them on the PJRT CPU client, and executes them
+//! from the coordinator's hot path.  Python never runs here.
+//!
+//! ```text
+//! artifacts/*.hlo.txt  --parse-->  HloModuleProto  --compile-->  PJRT exe
+//!        ^                                                          |
+//!   make artifacts (python, once)                        MapApp::process
+//! ```
+
+pub mod artifacts;
+pub mod client;
+pub mod executable;
+
+pub use artifacts::{find_artifacts_dir, ArtifactEntry, InputSpec, Manifest};
+pub use client::{global_client, thread_client};
+pub use executable::XlaExecutable;

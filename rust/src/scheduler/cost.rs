@@ -1,0 +1,152 @@
+//! Cost calibration: bridges the real (local) engine and the simulator.
+//!
+//! The paper measured on a real cluster.  We measure the two quantities
+//! that drive every result in §IV — application start-up cost and per-file
+//! compute cost — on the *real* local engine, then feed them to the
+//! discrete-event simulator to produce the scaling sweeps this container's
+//! single core cannot run in parallel.  EXPERIMENTS.md records the
+//! calibrated constants next to each figure.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::apps::{CostHint, MapApp};
+use crate::error::Result;
+
+/// A measured cost profile for one application.
+#[derive(Debug, Clone, Copy)]
+pub struct Calibration {
+    pub hint: CostHint,
+    /// How many launches/items the measurement averaged over.
+    pub launches_measured: usize,
+    pub items_measured: usize,
+}
+
+impl Calibration {
+    /// Measure `app` by launching it `launches` times and processing the
+    /// sample pairs through one instance.  The samples must be real files
+    /// the app can process.
+    pub fn measure(
+        app: &dyn MapApp,
+        sample_pairs: &[(PathBuf, PathBuf)],
+        launches: usize,
+    ) -> Result<Calibration> {
+        assert!(!sample_pairs.is_empty(), "need at least one sample pair");
+        assert!(launches >= 1);
+
+        // Warm-up launch: fault in code paths, page caches, BLAS threads.
+        let _ = app.startup()?;
+
+        // Startup cost: average over `launches` fresh launches.
+        let t0 = std::time::Instant::now();
+        for _ in 0..launches {
+            let _ = app.startup()?;
+        }
+        let startup = t0.elapsed() / launches as u32;
+
+        // Per-item cost: one instance, stream all samples (MIMO-style so
+        // startup does not contaminate the measurement).  The first call
+        // on a fresh instance pays one-time lazy initialization (PJRT
+        // buffer pools, page faults) that a steady-state mapper never
+        // sees again — warm it untimed, then time the real passes twice.
+        let mut inst = app.startup()?;
+        let (w_in, w_out) = &sample_pairs[0];
+        inst.process(w_in, w_out)?;
+        let t1 = std::time::Instant::now();
+        for _ in 0..2 {
+            for (input, output) in sample_pairs {
+                inst.process(input, output)?;
+            }
+        }
+        let per_item = t1.elapsed() / (2 * sample_pairs.len()) as u32;
+
+        Ok(Calibration {
+            hint: CostHint { startup, per_item },
+            launches_measured: launches,
+            items_measured: sample_pairs.len(),
+        })
+    }
+
+    /// The paper's central ratio: how expensive a launch is relative to
+    /// one file of work.  MATLAB in the paper has a very large ratio;
+    /// the MIMO speed-up ceiling for n files/launch is
+    /// `(ratio + 1) / (ratio/n + 1)`.
+    pub fn startup_ratio(&self) -> f64 {
+        let s = self.hint.startup.as_secs_f64();
+        let p = self.hint.per_item.as_secs_f64().max(1e-12);
+        s / p
+    }
+
+    /// Predicted MIMO-over-SISO speed-up when each launch amortizes over
+    /// `files_per_task` files (ignoring dispatch, the dominant term).
+    pub fn predicted_mimo_speedup(&self, files_per_task: usize) -> f64 {
+        let r = self.startup_ratio();
+        let n = files_per_task as f64;
+        (r + 1.0) / (r / n + 1.0)
+    }
+}
+
+/// A hand-specified cost profile for simulator studies where the paper
+/// gives us the regime but we have no binary to measure (e.g. "MATLAB
+/// takes relatively significant time to launch", §IV Table II).
+pub fn synthetic_hint(startup: Duration, per_item: Duration) -> CostHint {
+    CostHint { startup, per_item }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::testutil::CountingApp;
+    use std::fs;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("llmr-cost-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn measures_spinning_startup() {
+        let d = tmp("spin");
+        let mut app = CountingApp::new();
+        app.startup_spin = Duration::from_millis(5);
+        let pairs: Vec<_> = (0..3)
+            .map(|i| {
+                let p = d.join(format!("f{i}"));
+                fs::write(&p, "x").unwrap();
+                (p, d.join(format!("f{i}.out")))
+            })
+            .collect();
+        let cal = Calibration::measure(&app, &pairs, 3).unwrap();
+        assert!(
+            cal.hint.startup >= Duration::from_millis(5),
+            "{:?}",
+            cal.hint.startup
+        );
+        assert!(cal.startup_ratio() > 1.0);
+    }
+
+    #[test]
+    fn speedup_prediction_shape() {
+        let cal = Calibration {
+            hint: CostHint {
+                startup: Duration::from_millis(1000),
+                per_item: Duration::from_millis(100),
+            },
+            launches_measured: 1,
+            items_measured: 1,
+        };
+        // ratio = 10; with 170 files/task the ceiling approaches 11.
+        // (Table II: 43,580 files / 256 tasks ≈ 170 files per task,
+        // speed-up 11.57 — consistent with a startup ratio near 11.)
+        let s = cal.predicted_mimo_speedup(170);
+        assert!(s > 9.0 && s < 11.0, "s={s}");
+        // One file per task: no gain (the Fig 19 convergence point).
+        let s1 = cal.predicted_mimo_speedup(1);
+        assert!((s1 - 1.0).abs() < 1e-9);
+        // Monotone in files per task.
+        assert!(cal.predicted_mimo_speedup(10) < cal.predicted_mimo_speedup(100));
+    }
+}

@@ -1,0 +1,302 @@
+//! Submission-script dialects: Grid Engine, SLURM, LSF.
+//!
+//! "LLMapReduce hides the scheduler-specific job submission script from
+//! users and, therefore, provides a scheduler-neutral API" (§III-A).
+//! The same abstract plan lowers to each scheduler's directive language;
+//! Fig 8 shows the Grid Engine form this module reproduces verbatim.
+//!
+//! The dialects also carry per-scheduler array-size limits: "the default
+//! maximum number of array tasks for an array job is 75,000 for the open
+//! source Grid Engine scheduler" (§III-A).  Exceeding the limit is exactly
+//! the situation `--np` exists for.
+
+use crate::options::SchedulerKind;
+
+/// Everything a dialect needs to know to write a submission script.
+#[derive(Debug, Clone)]
+pub struct SubmitRequest<'a> {
+    /// Job name (`-N` / `--job-name` / `-J`).
+    pub job_name: &'a str,
+    /// Number of array tasks (the `M` in `-t 1-M`).
+    pub tasks: usize,
+    /// `.MAPRED.<PID>` directory name (relative, like the paper's
+    /// `.MAPRED.1120`).
+    pub mapred_dir: &'a str,
+    /// Whole-node allocation.
+    pub exclusive: bool,
+    /// Job id this one depends on (reducer jobs).
+    pub depends_on: Option<u64>,
+    /// Raw passthrough directives from `--options`.
+    pub extra_options: &'a [String],
+}
+
+/// A scheduler dialect: script syntax + limits.
+pub trait Dialect {
+    fn kind(&self) -> SchedulerKind;
+
+    /// Default maximum array-job size.
+    fn max_array_tasks(&self) -> usize;
+
+    /// Environment variable holding the array task id at run time.
+    fn task_id_var(&self) -> &'static str;
+
+    /// Render the job submission script (the file Fig 8 shows).
+    fn submission_script(&self, req: &SubmitRequest<'_>) -> String;
+}
+
+/// Look up the dialect for a [`SchedulerKind`].
+pub fn dialect_for(kind: SchedulerKind) -> Box<dyn Dialect + Send + Sync> {
+    match kind {
+        SchedulerKind::GridEngine => Box::new(GridEngine),
+        SchedulerKind::Slurm => Box::new(Slurm),
+        SchedulerKind::Lsf => Box::new(Lsf),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Grid Engine (the dialect of Fig 8)
+// ---------------------------------------------------------------------------
+
+pub struct GridEngine;
+
+impl Dialect for GridEngine {
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::GridEngine
+    }
+
+    fn max_array_tasks(&self) -> usize {
+        75_000 // §III-A
+    }
+
+    fn task_id_var(&self) -> &'static str {
+        "SGE_TASK_ID"
+    }
+
+    fn submission_script(&self, req: &SubmitRequest<'_>) -> String {
+        // Fig 8, line for line:
+        //   #!/bin/bash
+        //   #$ -terse -cwd -V -j y -N MatlabCmd.sh
+        //   #$ -l excl=false -t 1-M
+        //   #$ -o .MAPRED.1120/llmap.log-$JOB_ID-$TASK_ID
+        //   ./.MAPRED.1120/run_llmap_$SGE_TASK_ID
+        let mut s = String::new();
+        s.push_str("#!/bin/bash\n");
+        s.push_str(&format!("#$ -terse -cwd -V -j y -N {}\n", req.job_name));
+        s.push_str(&format!(
+            "#$ -l excl={} -t 1-{}\n",
+            req.exclusive, req.tasks
+        ));
+        s.push_str(&format!(
+            "#$ -o {}/llmap.log-$JOB_ID-$TASK_ID\n",
+            req.mapred_dir
+        ));
+        if let Some(dep) = req.depends_on {
+            s.push_str(&format!("#$ -hold_jid {dep}\n"));
+        }
+        for opt in req.extra_options {
+            s.push_str(&format!("#$ {opt}\n"));
+        }
+        s.push_str(&format!(
+            "./{}/run_llmap_${}\n",
+            req.mapred_dir,
+            self.task_id_var()
+        ));
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SLURM
+// ---------------------------------------------------------------------------
+
+pub struct Slurm;
+
+impl Dialect for Slurm {
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::Slurm
+    }
+
+    fn max_array_tasks(&self) -> usize {
+        // slurm.conf MaxArraySize default is 1001 (max index 1000).
+        1_000
+    }
+
+    fn task_id_var(&self) -> &'static str {
+        "SLURM_ARRAY_TASK_ID"
+    }
+
+    fn submission_script(&self, req: &SubmitRequest<'_>) -> String {
+        let mut s = String::new();
+        s.push_str("#!/bin/bash\n");
+        s.push_str(&format!("#SBATCH --job-name={}\n", req.job_name));
+        s.push_str(&format!("#SBATCH --array=1-{}\n", req.tasks));
+        s.push_str(&format!(
+            "#SBATCH --output={}/llmap.log-%A-%a\n",
+            req.mapred_dir
+        ));
+        if req.exclusive {
+            s.push_str("#SBATCH --exclusive\n");
+        }
+        if let Some(dep) = req.depends_on {
+            s.push_str(&format!("#SBATCH --dependency=afterok:{dep}\n"));
+        }
+        for opt in req.extra_options {
+            s.push_str(&format!("#SBATCH {opt}\n"));
+        }
+        s.push_str(&format!(
+            "./{}/run_llmap_${}\n",
+            req.mapred_dir,
+            self.task_id_var()
+        ));
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// IBM Platform LSF
+// ---------------------------------------------------------------------------
+
+pub struct Lsf;
+
+impl Dialect for Lsf {
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::Lsf
+    }
+
+    fn max_array_tasks(&self) -> usize {
+        // LSF MAX_JOB_ARRAY_SIZE default.
+        1_000
+    }
+
+    fn task_id_var(&self) -> &'static str {
+        "LSB_JOBINDEX"
+    }
+
+    fn submission_script(&self, req: &SubmitRequest<'_>) -> String {
+        let mut s = String::new();
+        s.push_str("#!/bin/bash\n");
+        s.push_str(&format!(
+            "#BSUB -J \"{}[1-{}]\"\n",
+            req.job_name, req.tasks
+        ));
+        s.push_str(&format!(
+            "#BSUB -o {}/llmap.log-%J-%I\n",
+            req.mapred_dir
+        ));
+        if req.exclusive {
+            s.push_str("#BSUB -x\n");
+        }
+        if let Some(dep) = req.depends_on {
+            s.push_str(&format!("#BSUB -w \"done({dep})\"\n"));
+        }
+        for opt in req.extra_options {
+            s.push_str(&format!("#BSUB {opt}\n"));
+        }
+        s.push_str(&format!(
+            "./{}/run_llmap_${}\n",
+            req.mapred_dir,
+            self.task_id_var()
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req<'a>(extra: &'a [String]) -> SubmitRequest<'a> {
+        SubmitRequest {
+            job_name: "MatlabCmd.sh",
+            tasks: 6,
+            mapred_dir: ".MAPRED.1120",
+            exclusive: false,
+            depends_on: None,
+            extra_options: extra,
+        }
+    }
+
+    #[test]
+    fn gridengine_matches_fig8() {
+        let script = GridEngine.submission_script(&req(&[]));
+        let expected = "#!/bin/bash\n\
+            #$ -terse -cwd -V -j y -N MatlabCmd.sh\n\
+            #$ -l excl=false -t 1-6\n\
+            #$ -o .MAPRED.1120/llmap.log-$JOB_ID-$TASK_ID\n\
+            ./.MAPRED.1120/run_llmap_$SGE_TASK_ID\n";
+        assert_eq!(script, expected);
+    }
+
+    #[test]
+    fn gridengine_exclusive_and_dependency() {
+        let mut r = req(&[]);
+        r.exclusive = true;
+        r.depends_on = Some(42);
+        let script = GridEngine.submission_script(&r);
+        assert!(script.contains("-l excl=true"));
+        assert!(script.contains("#$ -hold_jid 42"));
+    }
+
+    #[test]
+    fn extra_options_passthrough() {
+        // §II: "--options ... is handy when some data processing requires
+        // more memory than the standard allowance".
+        let extra = vec!["-l mem=8G".to_string()];
+        for kind in [
+            SchedulerKind::GridEngine,
+            SchedulerKind::Slurm,
+            SchedulerKind::Lsf,
+        ] {
+            let d = dialect_for(kind);
+            let script = d.submission_script(&req(&extra));
+            assert!(script.contains("-l mem=8G"), "{kind:?}: {script}");
+        }
+    }
+
+    #[test]
+    fn slurm_directives() {
+        let mut r = req(&[]);
+        r.exclusive = true;
+        r.depends_on = Some(7);
+        let script = Slurm.submission_script(&r);
+        assert!(script.contains("#SBATCH --job-name=MatlabCmd.sh"));
+        assert!(script.contains("#SBATCH --array=1-6"));
+        assert!(script.contains("#SBATCH --exclusive"));
+        assert!(script.contains("--dependency=afterok:7"));
+        assert!(script.contains("run_llmap_$SLURM_ARRAY_TASK_ID"));
+    }
+
+    #[test]
+    fn lsf_directives() {
+        let mut r = req(&[]);
+        r.depends_on = Some(9);
+        let script = Lsf.submission_script(&r);
+        assert!(script.contains("#BSUB -J \"MatlabCmd.sh[1-6]\""));
+        assert!(script.contains("#BSUB -w \"done(9)\""));
+        assert!(script.contains("run_llmap_$LSB_JOBINDEX"));
+    }
+
+    #[test]
+    fn array_limits() {
+        assert_eq!(GridEngine.max_array_tasks(), 75_000);
+        assert_eq!(Slurm.max_array_tasks(), 1_000);
+        assert_eq!(Lsf.max_array_tasks(), 1_000);
+    }
+
+    #[test]
+    fn every_dialect_references_its_task_id_var() {
+        for kind in [
+            SchedulerKind::GridEngine,
+            SchedulerKind::Slurm,
+            SchedulerKind::Lsf,
+        ] {
+            let d = dialect_for(kind);
+            let script = d.submission_script(&req(&[]));
+            assert!(
+                script.contains(d.task_id_var()),
+                "{kind:?} script must use {}",
+                d.task_id_var()
+            );
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Shared task execution: turns a [`TaskWork`] into measured phase timings.
+//!
+//! Used by the local engine (wall-clock) and by the simulator when it runs
+//! in executing mode (real outputs, virtual queueing time).
+
+use std::time::Duration;
+
+use crate::apps::run_map_task;
+use crate::error::Result;
+use crate::options::AppType;
+use crate::scheduler::TaskWork;
+
+/// Measured execution of one task's payload.
+#[derive(Debug, Clone, Default)]
+pub struct ExecOutcome {
+    pub startup: Duration,
+    pub compute: Duration,
+    pub launches: usize,
+    pub items: usize,
+}
+
+/// Execute the payload right here, right now, and measure it.
+pub fn execute(work: &TaskWork) -> Result<ExecOutcome> {
+    match work {
+        TaskWork::Map { app, pairs, mode } => {
+            let (startup, compute, launches) =
+                run_map_task(app.as_ref(), pairs, *mode == AppType::Mimo)?;
+            Ok(ExecOutcome {
+                startup,
+                compute,
+                launches,
+                items: pairs.len(),
+            })
+        }
+        TaskWork::Reduce {
+            app,
+            input_dir,
+            out_file,
+        } => {
+            let t0 = std::time::Instant::now();
+            app.reduce(input_dir, out_file)?;
+            Ok(ExecOutcome {
+                startup: Duration::ZERO,
+                compute: t0.elapsed(),
+                launches: 1,
+                items: 1,
+            })
+        }
+        TaskWork::Synthetic {
+            startup,
+            per_item,
+            items,
+            launches,
+        } => {
+            // Synthetic work really spins so wall-clock engines stay honest.
+            let spin = |d: Duration| {
+                let t = std::time::Instant::now();
+                while t.elapsed() < d {
+                    std::hint::spin_loop();
+                }
+            };
+            let t0 = std::time::Instant::now();
+            spin(*startup * (*launches as u32));
+            let startup_spent = t0.elapsed();
+            let t1 = std::time::Instant::now();
+            spin(*per_item * (*items as u32));
+            Ok(ExecOutcome {
+                startup: startup_spent,
+                compute: t1.elapsed(),
+                launches: *launches,
+                items: *items,
+            })
+        }
+    }
+}
+
+/// What the payload would cost on the virtual clock, without executing it.
+/// Used by the simulator in pure-timing mode.
+pub fn virtual_cost(work: &TaskWork) -> ExecOutcome {
+    match work {
+        TaskWork::Map { app, pairs, mode } => {
+            let hint = app.cost_hint();
+            let launches = match mode {
+                AppType::Siso => pairs.len(),
+                AppType::Mimo => usize::from(!pairs.is_empty()),
+            };
+            ExecOutcome {
+                startup: hint.startup * launches as u32,
+                compute: hint.per_item * pairs.len() as u32,
+                launches,
+                items: pairs.len(),
+            }
+        }
+        TaskWork::Reduce { .. } => ExecOutcome {
+            startup: Duration::ZERO,
+            compute: Duration::from_millis(1),
+            launches: 1,
+            items: 1,
+        },
+        TaskWork::Synthetic {
+            startup,
+            per_item,
+            items,
+            launches,
+        } => ExecOutcome {
+            startup: *startup * (*launches as u32),
+            compute: *per_item * (*items as u32),
+            launches: *launches,
+            items: *items,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_virtual_cost_arithmetic() {
+        let w = TaskWork::Synthetic {
+            startup: Duration::from_millis(100),
+            per_item: Duration::from_millis(10),
+            items: 8,
+            launches: 8,
+        };
+        let c = virtual_cost(&w);
+        assert_eq!(c.startup, Duration::from_millis(800));
+        assert_eq!(c.compute, Duration::from_millis(80));
+    }
+
+    #[test]
+    fn synthetic_execute_spins_about_right() {
+        let w = TaskWork::Synthetic {
+            startup: Duration::from_millis(2),
+            per_item: Duration::from_millis(1),
+            items: 3,
+            launches: 1,
+        };
+        let out = execute(&w).unwrap();
+        assert!(out.startup >= Duration::from_millis(2));
+        assert!(out.compute >= Duration::from_millis(3));
+        assert_eq!(out.launches, 1);
+        assert_eq!(out.items, 3);
+    }
+
+    #[test]
+    fn mimo_virtual_cost_single_launch() {
+        use crate::apps::testutil::CountingApp;
+        use std::sync::Arc;
+        let pairs: Vec<_> = (0..10)
+            .map(|i| {
+                (
+                    std::path::PathBuf::from(format!("in{i}")),
+                    std::path::PathBuf::from(format!("out{i}")),
+                )
+            })
+            .collect();
+        let mk = |mode| TaskWork::Map {
+            app: Arc::new(CountingApp::new()),
+            pairs: pairs.clone(),
+            mode,
+        };
+        let siso = virtual_cost(&mk(AppType::Siso));
+        let mimo = virtual_cost(&mk(AppType::Mimo));
+        assert_eq!(siso.launches, 10);
+        assert_eq!(mimo.launches, 1);
+        assert_eq!(siso.compute, mimo.compute);
+        assert_eq!(siso.startup, mimo.startup * 10);
+    }
+}

@@ -1,0 +1,334 @@
+//! The local execution engine: really runs tasks on worker threads.
+//!
+//! This is the measurement substrate for Table I and for calibrating the
+//! simulator's cost model: wall-clock, real PJRT compiles, real file I/O.
+//! Concurrency is capped by `slots` (the analogue of the cluster's width —
+//! on this container effectively 1 core, which is why the scaling *curves*
+//! come from the simulator; see DESIGN.md §3).
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::scheduler::exec::execute;
+use crate::scheduler::{Engine, JobId, JobReport, JobSpec, TaskReport};
+
+/// Thread-pool engine with array-job and dependency semantics.
+pub struct LocalEngine {
+    slots: usize,
+    next_id: u64,
+    /// Finished jobs (including those waited on already).
+    finished: HashMap<JobId, JobReport>,
+    /// Jobs submitted but not yet run.  The local engine runs jobs at
+    /// `wait()` time in dependency order — simpler than a background
+    /// dispatcher and identical observable behaviour for a launcher that
+    /// always waits (Fig 1: reduce waits on map).
+    pending: Vec<(JobId, JobSpec)>,
+}
+
+impl LocalEngine {
+    /// `slots`: maximum concurrently-running tasks (the `--np` width).
+    pub fn new(slots: usize) -> Self {
+        LocalEngine {
+            slots: slots.max(1),
+            next_id: 1,
+            finished: HashMap::new(),
+            pending: Vec::new(),
+        }
+    }
+
+    fn run_job(&mut self, id: JobId, spec: JobSpec) -> Result<JobReport> {
+        // Dependencies first (transitively).
+        if let Some(dep) = spec.depends_on {
+            if !self.finished.contains_key(&dep) {
+                let dep_spec = self.take_pending(dep)?;
+                let report = self.run_job(dep, dep_spec)?;
+                self.finished.insert(dep, report);
+            }
+        }
+
+        let submit_t = Instant::now();
+        let n = spec.tasks.len();
+        let reports: Arc<Mutex<Vec<Option<TaskReport>>>> =
+            Arc::new(Mutex::new(vec![None; n]));
+        let first_err: Arc<Mutex<Option<Error>>> = Arc::new(Mutex::new(None));
+
+        // Simple work queue: channel of task indices, `slots` workers.
+        let (tx, rx) = mpsc::channel::<usize>();
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..n {
+            tx.send(i).expect("queue send");
+        }
+        drop(tx);
+
+        let workers = self.slots.min(n.max(1));
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let rx = rx.clone();
+                let reports = reports.clone();
+                let first_err = first_err.clone();
+                let tasks = &spec.tasks;
+                scope.spawn(move || {
+                    loop {
+                        let idx = {
+                            let guard = rx.lock().expect("rx lock");
+                            match guard.recv() {
+                                Ok(i) => i,
+                                Err(_) => break,
+                            }
+                        };
+                        let task = &tasks[idx];
+                        let started_at = submit_t.elapsed();
+                        let result = execute(&task.work);
+                        let finished_at = submit_t.elapsed();
+                        match result {
+                            Ok(out) => {
+                                let report = TaskReport {
+                                    task_id: task.task_id,
+                                    // No scheduler in the local engine.
+                                    dispatch_wait: Duration::ZERO,
+                                    startup: out.startup,
+                                    compute: out.compute,
+                                    launches: out.launches,
+                                    items: out.items,
+                                    started_at,
+                                    finished_at,
+                                    retries: 0,
+                                };
+                                reports.lock().expect("reports")[idx] =
+                                    Some(report);
+                            }
+                            Err(e) => {
+                                let mut slot =
+                                    first_err.lock().expect("err lock");
+                                if slot.is_none() {
+                                    *slot = Some(e);
+                                }
+                            }
+                        }
+                    }
+                });
+            }
+        });
+
+        if let Some(e) = first_err.lock().expect("err lock").take() {
+            return Err(e);
+        }
+        let tasks: Vec<TaskReport> = Arc::try_unwrap(reports)
+            .expect("workers joined")
+            .into_inner()
+            .expect("reports lock")
+            .into_iter()
+            .map(|r| r.expect("every task reported"))
+            .collect();
+        Ok(JobReport {
+            job_id: id.0,
+            name: spec.name,
+            makespan: submit_t.elapsed(),
+            slots: self.slots,
+            tasks,
+        })
+    }
+
+    fn take_pending(&mut self, id: JobId) -> Result<JobSpec> {
+        let pos = self
+            .pending
+            .iter()
+            .position(|(jid, _)| *jid == id)
+            .ok_or_else(|| {
+                Error::Scheduler(format!("unknown dependency job {id}"))
+            })?;
+        Ok(self.pending.remove(pos).1)
+    }
+}
+
+impl Engine for LocalEngine {
+    fn name(&self) -> &'static str {
+        "local"
+    }
+
+    fn submit(&mut self, spec: JobSpec) -> Result<JobId> {
+        if let Some(dep) = spec.depends_on {
+            let known = self.finished.contains_key(&dep)
+                || self.pending.iter().any(|(jid, _)| *jid == dep);
+            if !known {
+                return Err(Error::Scheduler(format!(
+                    "dependency {dep} was never submitted"
+                )));
+            }
+        }
+        let id = JobId(self.next_id);
+        self.next_id += 1;
+        self.pending.push((id, spec));
+        Ok(id)
+    }
+
+    fn wait(&mut self, id: JobId) -> Result<JobReport> {
+        if let Some(r) = self.finished.get(&id) {
+            return Ok(r.clone());
+        }
+        let spec = self.take_pending(id)?;
+        let report = self.run_job(id, spec)?;
+        self.finished.insert(id, report.clone());
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::testutil::{ConcatReducer, CountingApp};
+    use crate::options::AppType;
+    use crate::scheduler::{TaskSpec, TaskWork};
+    use std::fs;
+    use std::path::PathBuf;
+    use std::sync::atomic::Ordering;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("llmr-local-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn map_tasks(
+        dir: &PathBuf,
+        app: Arc<CountingApp>,
+        nfiles: usize,
+        ntasks: usize,
+        mode: AppType,
+    ) -> Vec<TaskSpec> {
+        let pairs: Vec<_> = (0..nfiles)
+            .map(|i| {
+                let inp = dir.join(format!("f{i}.dat"));
+                fs::write(&inp, format!("{i}\n")).unwrap();
+                (inp, dir.join(format!("f{i}.dat.out")))
+            })
+            .collect();
+        pairs
+            .chunks(nfiles.div_ceil(ntasks))
+            .enumerate()
+            .map(|(t, chunk)| TaskSpec {
+                task_id: t + 1,
+                work: TaskWork::Map {
+                    app: app.clone(),
+                    pairs: chunk.to_vec(),
+                    mode,
+                },
+            })
+            .collect()
+    }
+
+    #[test]
+    fn runs_all_tasks_and_reports() {
+        let d = tmp("basic");
+        let app = Arc::new(CountingApp::new());
+        let tasks = map_tasks(&d, app.clone(), 8, 4, AppType::Siso);
+        let mut eng = LocalEngine::new(2);
+        let report = eng.run(JobSpec::new("job", tasks)).unwrap();
+        assert_eq!(report.tasks.len(), 4);
+        assert_eq!(report.total_items(), 8);
+        assert_eq!(report.total_launches(), 8); // SISO: launch per file
+        assert_eq!(app.processed.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn mimo_launches_once_per_task() {
+        let d = tmp("mimo");
+        let app = Arc::new(CountingApp::new());
+        let tasks = map_tasks(&d, app.clone(), 8, 4, AppType::Mimo);
+        let mut eng = LocalEngine::new(2);
+        let report = eng.run(JobSpec::new("job", tasks)).unwrap();
+        assert_eq!(report.total_launches(), 4); // MIMO: launch per task
+        assert_eq!(app.startups.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn dependency_runs_before_dependent() {
+        let d = tmp("dep");
+        let app = Arc::new(CountingApp::new());
+        let map_tasks = map_tasks(&d, app.clone(), 4, 2, AppType::Mimo);
+        let outdir = d.clone();
+        let mut eng = LocalEngine::new(2);
+        let map_id = eng.submit(JobSpec::new("map", map_tasks)).unwrap();
+        let red_id = eng
+            .submit(
+                JobSpec::new(
+                    "reduce",
+                    vec![TaskSpec {
+                        task_id: 1,
+                        work: TaskWork::Reduce {
+                            app: Arc::new(ConcatReducer),
+                            input_dir: outdir.clone(),
+                            out_file: d.join("llmapreduce.out"),
+                        },
+                    }],
+                )
+                .after(map_id),
+            )
+            .unwrap();
+        let red = eng.wait(red_id).unwrap();
+        assert_eq!(red.tasks.len(), 1);
+        // Reducer saw the mapper outputs: merged content contains markers.
+        let merged = fs::read_to_string(d.join("llmapreduce.out")).unwrap();
+        assert_eq!(merged.matches("#mapped").count(), 4);
+        // Map job's report is retrievable afterwards.
+        let map_report = eng.wait(map_id).unwrap();
+        assert_eq!(map_report.total_items(), 4);
+    }
+
+    #[test]
+    fn unknown_dependency_rejected() {
+        let mut eng = LocalEngine::new(1);
+        let err = eng
+            .submit(JobSpec::new("x", vec![]).after(JobId(99)))
+            .unwrap_err();
+        assert!(err.to_string().contains("never submitted"));
+    }
+
+    #[test]
+    fn task_failure_propagates() {
+        let d = tmp("fail");
+        let mut app = CountingApp::new();
+        app.poison = Some("f2".into());
+        let tasks = map_tasks(&d, Arc::new(app), 4, 2, AppType::Siso);
+        let mut eng = LocalEngine::new(2);
+        let err = eng.run(JobSpec::new("job", tasks)).unwrap_err();
+        assert!(err.to_string().contains("poisoned"));
+    }
+
+    #[test]
+    fn single_slot_serializes() {
+        let d = tmp("serial");
+        let app = Arc::new(CountingApp::new());
+        let tasks = map_tasks(&d, app.clone(), 6, 6, AppType::Siso);
+        let mut eng = LocalEngine::new(1);
+        let report = eng.run(JobSpec::new("job", tasks)).unwrap();
+        // With one slot, task intervals must not overlap.
+        let mut intervals: Vec<(Duration, Duration)> = report
+            .tasks
+            .iter()
+            .map(|t| (t.started_at, t.finished_at))
+            .collect();
+        intervals.sort();
+        for w in intervals.windows(2) {
+            assert!(w[0].1 <= w[1].0 + Duration::from_millis(5));
+        }
+    }
+
+    #[test]
+    fn wait_twice_returns_same_report() {
+        let d = tmp("twice");
+        let app = Arc::new(CountingApp::new());
+        let tasks = map_tasks(&d, app, 2, 1, AppType::Mimo);
+        let mut eng = LocalEngine::new(1);
+        let id = eng.submit(JobSpec::new("job", tasks)).unwrap();
+        let a = eng.wait(id).unwrap();
+        let b = eng.wait(id).unwrap();
+        assert_eq!(a.job_id, b.job_id);
+        assert_eq!(a.tasks.len(), b.tasks.len());
+    }
+}

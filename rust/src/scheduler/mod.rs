@@ -1,0 +1,341 @@
+//! Scheduler substrate: the cluster LLMapReduce rides on.
+//!
+//! The paper runs on real Grid Engine / SLURM / LSF clusters.  This repo
+//! substitutes (DESIGN.md §3):
+//!
+//! * [`dialect`] — faithful submission-script *dialects* for all three
+//!   schedulers (what `.MAPRED.PID/submit.sh` looks like per scheduler);
+//! * [`local`]  — an execution engine that really runs tasks on worker
+//!   threads with an `np`-slot cap (real wall-clock measurements);
+//! * [`sim`]    — a discrete-event cluster simulator with virtual time,
+//!   nodes × slots, dispatch latency, dependencies and failure injection
+//!   (scaling studies beyond this container's single core);
+//! * [`cost`]   — the calibrated cost model bridging the two.
+
+pub mod cost;
+pub mod dialect;
+pub mod exec;
+pub mod local;
+pub mod sim;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::apps::{MapApp, ReduceApp};
+use crate::error::Result;
+use crate::options::AppType;
+
+/// Opaque job identifier, unique per engine instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+/// The work inside one array task.
+#[derive(Clone)]
+pub enum TaskWork {
+    /// Run the map application over `pairs` of (input, output).
+    ///
+    /// * `AppType::Siso`: one application start-up **per pair** (the
+    ///   paper's DEFAULT / BLOCK behaviour — repeated launches).
+    /// * `AppType::Mimo`: one start-up for the whole task, then stream
+    ///   the pairs (the paper's SPMD morph).
+    Map {
+        app: Arc<dyn MapApp>,
+        pairs: Vec<(PathBuf, PathBuf)>,
+        mode: AppType,
+    },
+    /// Run the reduce application over the map output directory.
+    Reduce {
+        app: Arc<dyn ReduceApp>,
+        input_dir: PathBuf,
+        out_file: PathBuf,
+    },
+    /// Timing-only payload for simulator studies where the real data does
+    /// not exist (e.g. the 43,580-file Table II trace): `launches`
+    /// start-ups plus `items` per-file compute units.
+    Synthetic {
+        startup: Duration,
+        per_item: Duration,
+        items: usize,
+        launches: usize,
+    },
+}
+
+impl std::fmt::Debug for TaskWork {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TaskWork::Map { pairs, mode, .. } => f
+                .debug_struct("Map")
+                .field("pairs", &pairs.len())
+                .field("mode", mode)
+                .finish(),
+            TaskWork::Reduce { input_dir, .. } => f
+                .debug_struct("Reduce")
+                .field("input_dir", input_dir)
+                .finish(),
+            TaskWork::Synthetic {
+                items, launches, ..
+            } => f
+                .debug_struct("Synthetic")
+                .field("items", items)
+                .field("launches", launches)
+                .finish(),
+        }
+    }
+}
+
+impl TaskWork {
+    /// Number of application launches this work implies.
+    pub fn launches(&self) -> usize {
+        match self {
+            TaskWork::Map { pairs, mode, .. } => match mode {
+                AppType::Siso => pairs.len(),
+                AppType::Mimo => usize::from(!pairs.is_empty()),
+            },
+            TaskWork::Reduce { .. } => 1,
+            TaskWork::Synthetic { launches, .. } => *launches,
+        }
+    }
+
+    /// Number of data items processed.
+    pub fn items(&self) -> usize {
+        match self {
+            TaskWork::Map { pairs, .. } => pairs.len(),
+            TaskWork::Reduce { .. } => 1,
+            TaskWork::Synthetic { items, .. } => *items,
+        }
+    }
+}
+
+/// One array task (1-based ids, like `$SGE_TASK_ID`).
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    pub task_id: usize,
+    pub work: TaskWork,
+}
+
+/// An array job: the unit LLMapReduce submits (Fig 1 step 2).
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Job name (`-N` in Fig 8) — conventionally the mapper script name.
+    pub name: String,
+    pub tasks: Vec<TaskSpec>,
+    /// Job dependency (Fig 1 step 3: the reduce task "will wait until all
+    /// the mapper tasks are completed by setting a job dependency").
+    pub depends_on: Option<JobId>,
+    /// Whole-node allocation (`--exclusive`).
+    pub exclusive: bool,
+}
+
+impl JobSpec {
+    pub fn new(name: impl Into<String>, tasks: Vec<TaskSpec>) -> Self {
+        JobSpec {
+            name: name.into(),
+            tasks,
+            depends_on: None,
+            exclusive: false,
+        }
+    }
+
+    pub fn after(mut self, dep: JobId) -> Self {
+        self.depends_on = Some(dep);
+        self
+    }
+
+    pub fn exclusive(mut self, on: bool) -> Self {
+        self.exclusive = on;
+        self
+    }
+}
+
+/// Timing decomposition for one finished task.
+#[derive(Debug, Clone, Default)]
+pub struct TaskReport {
+    pub task_id: usize,
+    /// Time from eligibility to dispatch (queue wait + dispatch latency).
+    pub dispatch_wait: Duration,
+    /// Total application start-up time across all launches in the task.
+    pub startup: Duration,
+    /// Total per-item compute time.
+    pub compute: Duration,
+    /// Number of application launches performed.
+    pub launches: usize,
+    /// Number of data items processed.
+    pub items: usize,
+    /// Task start time, relative to job submission.
+    pub started_at: Duration,
+    /// Task end time, relative to job submission.
+    pub finished_at: Duration,
+    /// Retries consumed before success (failure injection).
+    pub retries: usize,
+}
+
+impl TaskReport {
+    /// Overhead = everything that is not item compute.  This is the y-axis
+    /// of Fig 18 ("computational overhead cost ... per array task").
+    pub fn overhead(&self) -> Duration {
+        self.dispatch_wait + self.startup
+    }
+}
+
+/// A finished job.
+#[derive(Debug, Clone, Default)]
+pub struct JobReport {
+    pub job_id: u64,
+    pub name: String,
+    pub tasks: Vec<TaskReport>,
+    /// End-to-end: submission to last task completion.
+    pub makespan: Duration,
+    /// Execution width (cluster slots / worker threads) the job ran on.
+    pub slots: usize,
+}
+
+impl JobReport {
+    pub fn total_startup(&self) -> Duration {
+        self.tasks.iter().map(|t| t.startup).sum()
+    }
+
+    pub fn total_compute(&self) -> Duration {
+        self.tasks.iter().map(|t| t.compute).sum()
+    }
+
+    pub fn total_dispatch(&self) -> Duration {
+        self.tasks.iter().map(|t| t.dispatch_wait).sum()
+    }
+
+    pub fn total_launches(&self) -> usize {
+        self.tasks.iter().map(|t| t.launches).sum()
+    }
+
+    pub fn total_items(&self) -> usize {
+        self.tasks.iter().map(|t| t.items).sum()
+    }
+
+    /// Fraction of slot-time spent in task work (startup + compute) over
+    /// the makespan — the cluster-utilization view real schedulers report.
+    pub fn utilization(&self) -> f64 {
+        if self.slots == 0 || self.makespan.is_zero() {
+            return 0.0;
+        }
+        let busy = (self.total_startup() + self.total_compute()).as_secs_f64();
+        (busy / (self.makespan.as_secs_f64() * self.slots as f64)).min(1.0)
+    }
+
+    /// Mean overhead per array task — Fig 18's metric.
+    pub fn mean_overhead_per_task(&self) -> Duration {
+        if self.tasks.is_empty() {
+            return Duration::ZERO;
+        }
+        let total: Duration = self.tasks.iter().map(|t| t.overhead()).sum();
+        total / self.tasks.len() as u32
+    }
+}
+
+/// An execution engine: where submitted jobs actually run.
+///
+/// Implementations: [`local::LocalEngine`] (threads, wall-clock) and
+/// [`sim::SimEngine`] (discrete-event, virtual clock).
+pub trait Engine: Send {
+    /// Engine name for reports ("local", "sim").
+    fn name(&self) -> &'static str;
+
+    /// Submit an array job; returns immediately with its id.
+    fn submit(&mut self, spec: JobSpec) -> Result<JobId>;
+
+    /// Block until the job (and its dependency chain) finishes.
+    fn wait(&mut self, id: JobId) -> Result<JobReport>;
+
+    /// Submit and wait in one call.
+    fn run(&mut self, spec: JobSpec) -> Result<JobReport> {
+        let id = self.submit(spec)?;
+        self.wait(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_work_launch_accounting() {
+        let pairs = vec![
+            (PathBuf::from("a"), PathBuf::from("a.out")),
+            (PathBuf::from("b"), PathBuf::from("b.out")),
+            (PathBuf::from("c"), PathBuf::from("c.out")),
+        ];
+        let siso = TaskWork::Synthetic {
+            startup: Duration::from_millis(1),
+            per_item: Duration::from_millis(1),
+            items: pairs.len(),
+            launches: pairs.len(),
+        };
+        assert_eq!(siso.launches(), 3);
+        assert_eq!(siso.items(), 3);
+    }
+
+    #[test]
+    fn report_overhead_is_dispatch_plus_startup() {
+        let t = TaskReport {
+            dispatch_wait: Duration::from_millis(10),
+            startup: Duration::from_millis(90),
+            compute: Duration::from_millis(500),
+            ..Default::default()
+        };
+        assert_eq!(t.overhead(), Duration::from_millis(100));
+    }
+
+    #[test]
+    fn job_report_aggregates() {
+        let mk = |s, c, d| TaskReport {
+            startup: Duration::from_millis(s),
+            compute: Duration::from_millis(c),
+            dispatch_wait: Duration::from_millis(d),
+            launches: 1,
+            items: 2,
+            ..Default::default()
+        };
+        let r = JobReport {
+            tasks: vec![mk(10, 100, 5), mk(20, 200, 5)],
+            ..Default::default()
+        };
+        assert_eq!(r.total_startup(), Duration::from_millis(30));
+        assert_eq!(r.total_compute(), Duration::from_millis(300));
+        assert_eq!(r.total_dispatch(), Duration::from_millis(10));
+        assert_eq!(r.total_launches(), 2);
+        assert_eq!(r.total_items(), 4);
+        assert_eq!(r.mean_overhead_per_task(), Duration::from_millis(20));
+    }
+
+    #[test]
+    fn utilization_math() {
+        let r = JobReport {
+            slots: 2,
+            makespan: Duration::from_millis(100),
+            tasks: vec![TaskReport {
+                startup: Duration::from_millis(40),
+                compute: Duration::from_millis(120),
+                ..Default::default()
+            }],
+            ..Default::default()
+        };
+        // busy 160ms over 2x100ms slot-time = 0.8.
+        assert!((r.utilization() - 0.8).abs() < 1e-9);
+        let idle = JobReport::default();
+        assert_eq!(idle.utilization(), 0.0);
+    }
+
+    #[test]
+    fn jobspec_builder() {
+        let spec = JobSpec::new("MatlabCmd.sh", vec![])
+            .after(JobId(3))
+            .exclusive(true);
+        assert_eq!(spec.depends_on, Some(JobId(3)));
+        assert!(spec.exclusive);
+    }
+}

@@ -1,0 +1,264 @@
+//! Minimal TOML subset parser (the `toml` crate is unavailable offline).
+//!
+//! Supports the subset the config system uses:
+//!
+//! * `[section]` and `[section.subsection]` headers;
+//! * `key = value` with string (`"..."`), integer, float, boolean and
+//!   string-array (`["a", "b"]`) values;
+//! * `#` comments and blank lines.
+//!
+//! Everything is stored flattened as `section.key` -> [`TomlValue`].
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed TOML scalar or string array.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    StrArray(Vec<String>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_int().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str_array(&self) -> Option<&[String]> {
+        match self {
+            TomlValue::StrArray(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A flattened TOML document: `section.key` -> value.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    /// Parse a document.
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| {
+                Error::Config(format!("line {}: {msg}", lineno + 1))
+            };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err("unterminated section header"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(err("empty section name"));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| err("expected key = value"))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let value = parse_value(value.trim())
+                .ok_or_else(|| err(&format!("bad value '{}'", value.trim())))?;
+            if entries.insert(full_key.clone(), value).is_some() {
+                return Err(err(&format!("duplicate key '{full_key}'")));
+            }
+        }
+        Ok(TomlDoc { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+
+    /// All keys under a `section.` prefix.
+    pub fn section_keys(&self, section: &str) -> Vec<&str> {
+        let prefix = format!("{section}.");
+        self.entries
+            .keys()
+            .filter(|k| k.starts_with(&prefix))
+            .map(String::as_str)
+            .collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<TomlValue> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"')?;
+        // No escape support beyond \" and \\ — config strings are paths
+        // and option strings.
+        return Some(TomlValue::Str(
+            inner.replace("\\\"", "\"").replace("\\\\", "\\"),
+        ));
+    }
+    if s == "true" {
+        return Some(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Some(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']')?.trim();
+        if inner.is_empty() {
+            return Some(TomlValue::StrArray(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            let item = part.strip_prefix('"')?.strip_suffix('"')?;
+            items.push(item.to_string());
+        }
+        return Some(TomlValue::StrArray(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Some(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Some(TomlValue::Float(f));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let doc = TomlDoc::parse(
+            r#"
+# llmapreduce cluster profile
+[cluster]
+nodes = 16
+slots_per_node = 16        # cores
+dispatch_latency_ms = 50
+jitter = 0.05
+name = "supercloud"
+
+[job]
+np = 256
+apptype = "mimo"
+options = ["-l mem=8G", "-q long"]
+exclusive = false
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("cluster.nodes").unwrap().as_int(), Some(16));
+        assert_eq!(doc.get("cluster.jitter").unwrap().as_float(), Some(0.05));
+        assert_eq!(
+            doc.get("cluster.name").unwrap().as_str(),
+            Some("supercloud")
+        );
+        assert_eq!(doc.get("job.apptype").unwrap().as_str(), Some("mimo"));
+        assert_eq!(
+            doc.get("job.options").unwrap().as_str_array().unwrap(),
+            &["-l mem=8G".to_string(), "-q long".to_string()]
+        );
+        assert_eq!(doc.get("job.exclusive").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn keys_without_section() {
+        let doc = TomlDoc::parse("engine = \"sim\"\n").unwrap();
+        assert_eq!(doc.get("engine").unwrap().as_str(), Some("sim"));
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = TomlDoc::parse("key = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get("key").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TomlDoc::parse("[unterminated\n").is_err());
+        assert!(TomlDoc::parse("key value\n").is_err());
+        assert!(TomlDoc::parse("k = \n").is_err());
+        assert!(TomlDoc::parse("k = 1\nk = 2\n").is_err());
+        assert!(TomlDoc::parse("[]\nk = 1\n").is_err());
+    }
+
+    #[test]
+    fn section_keys_listing() {
+        let doc =
+            TomlDoc::parse("[a]\nx = 1\ny = 2\n[b]\nz = 3\n").unwrap();
+        assert_eq!(doc.section_keys("a"), vec!["a.x", "a.y"]);
+        assert_eq!(doc.section_keys("b"), vec!["b.z"]);
+    }
+
+    #[test]
+    fn negative_and_float_values() {
+        let doc = TomlDoc::parse("a = -3\nb = 2.5\nc = -0.25\n").unwrap();
+        assert_eq!(doc.get("a").unwrap().as_int(), Some(-3));
+        assert_eq!(doc.get("b").unwrap().as_float(), Some(2.5));
+        assert_eq!(doc.get("c").unwrap().as_float(), Some(-0.25));
+    }
+
+    #[test]
+    fn empty_array() {
+        let doc = TomlDoc::parse("a = []\n").unwrap();
+        assert_eq!(doc.get("a").unwrap().as_str_array().unwrap().len(), 0);
+    }
+}

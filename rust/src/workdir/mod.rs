@@ -1,0 +1,147 @@
+//! The `.MAPRED.<PID>` temporary working directory (§II).
+//!
+//! "LLMapReduce generates all the necessary temporary files under the
+//! directory, .MAPRED.PID, where the PID is the process identification
+//! number.  [...] By default, LLMapReduce will delete the .MAPRED.PID
+//! directory after the job is completed.  However, users can keep the
+//! temporary directory for debugging purpose with the --keep=true option."
+
+pub mod scan;
+pub mod scripts;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::error::{IoContext, Result};
+
+/// Handle to a live `.MAPRED.<PID>` directory.  Dropping it deletes the
+/// directory unless `keep` was requested (or `persist()` was called).
+#[derive(Debug)]
+pub struct MapRedDir {
+    path: PathBuf,
+    keep: bool,
+}
+
+impl MapRedDir {
+    /// Create `.MAPRED.<pid>` under `base` (the job's working directory).
+    pub fn create(base: &Path, pid: u32, keep: bool) -> Result<MapRedDir> {
+        let path = base.join(format!(".MAPRED.{pid}"));
+        fs::create_dir_all(&path).at(&path)?;
+        Ok(MapRedDir { path, keep })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn keep(&self) -> bool {
+        self.keep
+    }
+
+    /// Path of the per-task run script (Fig 9 / Fig 12: `run_llmap_<N>`,
+    /// 1-based like the scheduler's task ids).
+    pub fn run_script(&self, task_id: usize) -> PathBuf {
+        self.path.join(format!("run_llmap_{task_id}"))
+    }
+
+    /// Path of the per-task MIMO pair-list file (Fig 12: `input_<N>`).
+    pub fn mimo_input(&self, task_id: usize) -> PathBuf {
+        self.path.join(format!("input_{task_id}"))
+    }
+
+    /// Path of the generated submission script.
+    pub fn submit_script(&self) -> PathBuf {
+        self.path.join("submit.sh")
+    }
+
+    /// Path of the per-task log file (Fig 8 names them
+    /// `llmap.log-$JOB_ID-$TASK_ID`; job id is known at submit time).
+    pub fn log_file(&self, job_id: u64, task_id: usize) -> PathBuf {
+        self.path.join(format!("llmap.log-{job_id}-{task_id}"))
+    }
+
+    /// Write a file inside the directory.
+    pub fn write(&self, name: &str, contents: &str) -> Result<PathBuf> {
+        let p = self.path.join(name);
+        fs::write(&p, contents).at(&p)?;
+        Ok(p)
+    }
+
+    /// Keep the directory alive past drop (used when handing ownership to
+    /// a running job).
+    pub fn persist(mut self) -> PathBuf {
+        self.keep = true;
+        self.path.clone()
+    }
+}
+
+impl Drop for MapRedDir {
+    fn drop(&mut self) {
+        if !self.keep {
+            let _ = fs::remove_dir_all(&self.path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("llmr-wd-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn creates_mapred_pid_dir() {
+        let base = tmp("create");
+        let wd = MapRedDir::create(&base, 1120, false).unwrap();
+        assert!(wd.path().ends_with(".MAPRED.1120"));
+        assert!(wd.path().is_dir());
+    }
+
+    #[test]
+    fn default_drop_deletes() {
+        let base = tmp("drop");
+        let path;
+        {
+            let wd = MapRedDir::create(&base, 7, false).unwrap();
+            path = wd.path().to_path_buf();
+            wd.write("x", "y").unwrap();
+        }
+        assert!(!path.exists(), "deleted on drop without --keep");
+    }
+
+    #[test]
+    fn keep_preserves() {
+        let base = tmp("keep");
+        let path;
+        {
+            let wd = MapRedDir::create(&base, 8, true).unwrap();
+            path = wd.path().to_path_buf();
+        }
+        assert!(path.exists(), "--keep=true preserves the directory");
+    }
+
+    #[test]
+    fn persist_overrides_cleanup() {
+        let base = tmp("persist");
+        let wd = MapRedDir::create(&base, 9, false).unwrap();
+        let path = wd.persist();
+        assert!(path.exists());
+    }
+
+    #[test]
+    fn file_name_conventions_match_paper() {
+        let base = tmp("names");
+        let wd = MapRedDir::create(&base, 2188, false).unwrap();
+        // Fig 12: .MAPRED.2188/run_llmap_1 and .MAPRED.2188/input_1
+        assert!(wd.run_script(1).ends_with(".MAPRED.2188/run_llmap_1"));
+        assert!(wd.mimo_input(1).ends_with(".MAPRED.2188/input_1"));
+        // Fig 8: llmap.log-$JOB_ID-$TASK_ID
+        assert!(wd.log_file(42, 3).ends_with(".MAPRED.2188/llmap.log-42-3"));
+    }
+}

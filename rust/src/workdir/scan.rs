@@ -1,0 +1,252 @@
+//! Input discovery — step 1 of Fig 1.
+//!
+//! "LLMapReduce identifies the input files to be processed by scanning a
+//! given input directory or reading a list from a given input file."
+//! With `--subdir=true` the scan recurses (§II-A) and the relative
+//! directory structure is preserved so the output tree can be replicated.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, IoContext, Result};
+
+/// One discovered input file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InputFile {
+    /// Absolute (or input-rooted) path to the file.
+    pub path: PathBuf,
+    /// Path relative to the scan root — drives output-tree replication.
+    pub relative: PathBuf,
+}
+
+impl InputFile {
+    /// File name component as utf-8 (input files are named by generators
+    /// and users; non-utf8 names are rejected at scan time).
+    pub fn file_name(&self) -> &str {
+        self.path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .expect("scan guarantees utf-8 names")
+    }
+}
+
+/// Scan an input *source*: a directory (flat or recursive) or a list file.
+///
+/// Results are sorted by relative path so planning is deterministic — the
+/// scheduler's task numbering in the paper is stable for a given input
+/// directory, and tests rely on the same property.
+pub fn scan_input(input: &Path, recursive: bool) -> Result<Vec<InputFile>> {
+    let meta = fs::metadata(input).map_err(|e| Error::InputScan {
+        path: input.to_path_buf(),
+        reason: e.to_string(),
+    })?;
+    let mut files = if meta.is_dir() {
+        scan_dir(input, recursive)?
+    } else {
+        read_list_file(input)?
+    };
+    files.sort_by(|a, b| a.relative.cmp(&b.relative));
+    if files.is_empty() {
+        return Err(Error::EmptyInput(input.to_path_buf()));
+    }
+    Ok(files)
+}
+
+fn scan_dir(root: &Path, recursive: bool) -> Result<Vec<InputFile>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let entries = fs::read_dir(&dir).at(&dir)?;
+        for entry in entries {
+            let entry = entry.at(&dir)?;
+            let path = entry.path();
+            let ftype = entry.file_type().at(&path)?;
+            if ftype.is_dir() {
+                if recursive && !is_hidden(&path) {
+                    stack.push(path);
+                }
+                continue;
+            }
+            if !ftype.is_file() {
+                continue; // sockets, fifos — not data
+            }
+            if is_hidden(&path) {
+                continue; // .MAPRED.* and dotfiles are never inputs
+            }
+            let relative = path
+                .strip_prefix(root)
+                .expect("entry under root")
+                .to_path_buf();
+            check_utf8(&path)?;
+            out.push(InputFile { path, relative });
+        }
+    }
+    Ok(out)
+}
+
+/// Read an explicit list file: one input path per line, `#` comments and
+/// blank lines skipped.  Relative paths resolve against the list file's
+/// parent directory.
+fn read_list_file(list: &Path) -> Result<Vec<InputFile>> {
+    let text = fs::read_to_string(list).at(list)?;
+    let base = list.parent().unwrap_or_else(|| Path::new("."));
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let path = if Path::new(line).is_absolute() {
+            PathBuf::from(line)
+        } else {
+            base.join(line)
+        };
+        if !path.is_file() {
+            return Err(Error::InputScan {
+                path: list.to_path_buf(),
+                reason: format!(
+                    "line {}: '{}' is not a file",
+                    lineno + 1,
+                    line
+                ),
+            });
+        }
+        let relative = PathBuf::from(
+            path.file_name().expect("file path has a name"),
+        );
+        check_utf8(&path)?;
+        out.push(InputFile { path, relative });
+    }
+    Ok(out)
+}
+
+fn is_hidden(path: &Path) -> bool {
+    path.file_name()
+        .and_then(|n| n.to_str())
+        .map(|n| n.starts_with('.'))
+        .unwrap_or(false)
+}
+
+fn check_utf8(path: &Path) -> Result<()> {
+    if path.file_name().and_then(|n| n.to_str()).is_none() {
+        return Err(Error::InputScan {
+            path: path.to_path_buf(),
+            reason: "non-utf8 file name".into(),
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs::File;
+    use std::io::Write;
+
+    fn mkdirs(root: &Path, files: &[&str]) {
+        for f in files {
+            let p = root.join(f);
+            fs::create_dir_all(p.parent().unwrap()).unwrap();
+            File::create(&p).unwrap();
+        }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "llmr-scan-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn flat_scan_sorted_and_complete() {
+        let d = tmpdir("flat");
+        mkdirs(&d, &["b.dat", "a.dat", "c.dat"]);
+        let files = scan_input(&d, false).unwrap();
+        let names: Vec<_> = files.iter().map(|f| f.file_name()).collect();
+        assert_eq!(names, vec!["a.dat", "b.dat", "c.dat"]);
+    }
+
+    #[test]
+    fn flat_scan_skips_subdirs() {
+        let d = tmpdir("skipsub");
+        mkdirs(&d, &["a.dat", "sub/b.dat"]);
+        let files = scan_input(&d, false).unwrap();
+        assert_eq!(files.len(), 1);
+        assert_eq!(files[0].file_name(), "a.dat");
+    }
+
+    #[test]
+    fn recursive_scan_preserves_relative_paths() {
+        let d = tmpdir("rec");
+        mkdirs(&d, &["x/1.dat", "x/y/2.dat", "3.dat"]);
+        let files = scan_input(&d, true).unwrap();
+        let rels: Vec<_> = files
+            .iter()
+            .map(|f| f.relative.to_str().unwrap().to_string())
+            .collect();
+        assert_eq!(rels, vec!["3.dat", "x/1.dat", "x/y/2.dat"]);
+    }
+
+    #[test]
+    fn hidden_files_excluded() {
+        let d = tmpdir("hidden");
+        mkdirs(&d, &["a.dat", ".hidden", ".MAPRED.123/run_llmap_1"]);
+        let files = scan_input(&d, true).unwrap();
+        assert_eq!(files.len(), 1);
+    }
+
+    #[test]
+    fn empty_dir_is_error() {
+        let d = tmpdir("empty");
+        assert!(matches!(
+            scan_input(&d, false),
+            Err(Error::EmptyInput(_))
+        ));
+    }
+
+    #[test]
+    fn missing_input_is_error() {
+        let d = tmpdir("gone").join("nope");
+        assert!(matches!(
+            scan_input(&d, false),
+            Err(Error::InputScan { .. })
+        ));
+    }
+
+    #[test]
+    fn list_file_with_comments() {
+        let d = tmpdir("list");
+        mkdirs(&d, &["a.dat", "b.dat"]);
+        let list = d.join("inputs.list");
+        let mut f = File::create(&list).unwrap();
+        writeln!(f, "# comment\n\na.dat\nb.dat").unwrap();
+        let files = scan_input(&list, false).unwrap();
+        assert_eq!(files.len(), 2);
+        assert!(files[0].path.is_file());
+    }
+
+    #[test]
+    fn list_file_bad_entry_is_error() {
+        let d = tmpdir("badlist");
+        let list = d.join("inputs.list");
+        let mut f = File::create(&list).unwrap();
+        writeln!(f, "missing.dat").unwrap();
+        let err = scan_input(&list, false).unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn list_file_absolute_paths() {
+        let d = tmpdir("abslist");
+        mkdirs(&d, &["a.dat"]);
+        let list = d.join("inputs.list");
+        let mut f = File::create(&list).unwrap();
+        writeln!(f, "{}", d.join("a.dat").display()).unwrap();
+        let files = scan_input(&list, false).unwrap();
+        assert_eq!(files.len(), 1);
+    }
+}

@@ -1,0 +1,251 @@
+//! Generated script artifacts (Figs 8, 9, 12).
+//!
+//! LLMapReduce's observable products on a real cluster are *text files*:
+//! one submission script and one run script per array task (plus, in MIMO
+//! mode, one `input_<N>` pair-list per task).  We generate the same files
+//! with the same names and shapes, so the `.MAPRED.PID` directory of this
+//! reproduction is recognizable next to the paper's figures, and golden
+//! tests can pin the formats.
+
+use crate::error::Result;
+use crate::mapreduce::planner::Plan;
+use crate::options::{AppType, Options};
+use crate::scheduler::dialect::{Dialect, SubmitRequest};
+use crate::workdir::MapRedDir;
+
+/// Render the run script for one SISO task (Fig 9): the wrapper is
+/// invoked once per (input, output) pair.
+pub fn siso_run_script(
+    mapper: &str,
+    pairs: &[(std::path::PathBuf, std::path::PathBuf)],
+) -> String {
+    let mut s = String::new();
+    s.push_str("#!/bin/bash\n");
+    s.push_str("export PATH=${PATH}:.\n");
+    for (input, output) in pairs {
+        s.push_str(&format!(
+            "{mapper} {} {}\n",
+            input.display(),
+            output.display()
+        ));
+    }
+    s
+}
+
+/// Render the run script for one MIMO task (Fig 12): the wrapper is
+/// invoked once with the generated pair-list file.
+pub fn mimo_run_script(mapper: &str, input_list: &std::path::Path) -> String {
+    format!(
+        "#!/bin/bash\nexport PATH=${{PATH}}:.\n{mapper} {}\n",
+        input_list.display()
+    )
+}
+
+/// Render the MIMO pair list (`input_<N>`): one "input output" line per
+/// file, the format Fig 11's wrapper reads with `strsplit`.
+pub fn mimo_input_list(
+    pairs: &[(std::path::PathBuf, std::path::PathBuf)],
+) -> String {
+    let mut s = String::new();
+    for (input, output) in pairs {
+        s.push_str(&format!("{} {}\n", input.display(), output.display()));
+    }
+    s
+}
+
+/// Render the run script for the reduce task: reducer gets the map output
+/// directory and the reduce output filename (§II).
+pub fn reduce_run_script(
+    reducer: &str,
+    map_output_dir: &std::path::Path,
+    redout: &std::path::Path,
+) -> String {
+    format!(
+        "#!/bin/bash\nexport PATH=${{PATH}}:.\n{reducer} {} {}\n",
+        map_output_dir.display(),
+        redout.display()
+    )
+}
+
+/// Everything written for one submission.
+#[derive(Debug)]
+pub struct GeneratedScripts {
+    pub submit_script: std::path::PathBuf,
+    pub run_scripts: Vec<std::path::PathBuf>,
+    pub mimo_inputs: Vec<std::path::PathBuf>,
+}
+
+/// Write submission + run scripts (+ MIMO pair lists) for a plan into the
+/// `.MAPRED.PID` directory — the file set Figs 8/9/12 show.
+pub fn write_all(
+    wd: &MapRedDir,
+    plan: &Plan,
+    opts: &Options,
+    dialect: &dyn Dialect,
+) -> Result<GeneratedScripts> {
+    let mapred_name = wd
+        .path()
+        .file_name()
+        .and_then(|n| n.to_str())
+        .unwrap_or(".MAPRED.0")
+        .to_string();
+
+    let mut run_scripts = Vec::with_capacity(plan.tasks.len());
+    let mut mimo_inputs = Vec::new();
+
+    for task in &plan.tasks {
+        let script = match opts.apptype {
+            AppType::Siso => siso_run_script(&opts.mapper, &task.pairs),
+            AppType::Mimo => {
+                let list_path = wd.mimo_input(task.task_id);
+                let list_name = format!("input_{}", task.task_id);
+                wd.write(&list_name, &mimo_input_list(&task.pairs))?;
+                mimo_inputs.push(list_path.clone());
+                mimo_run_script(&opts.mapper, &list_path)
+            }
+        };
+        let name = format!("run_llmap_{}", task.task_id);
+        run_scripts.push(wd.write(&name, &script)?);
+    }
+
+    let req = SubmitRequest {
+        job_name: &opts.mapper,
+        tasks: plan.tasks.len(),
+        mapred_dir: &mapred_name,
+        exclusive: opts.exclusive,
+        depends_on: None,
+        extra_options: &opts.scheduler_options,
+    };
+    let submit = wd.write("submit.sh", &dialect.submission_script(&req))?;
+
+    Ok(GeneratedScripts {
+        submit_script: submit,
+        run_scripts,
+        mimo_inputs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::planner::plan;
+    use crate::options::SchedulerKind;
+    use crate::scheduler::dialect::dialect_for;
+    use crate::workdir::scan::InputFile;
+    use std::fs;
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("llmr-scripts-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn fake_files(n: usize) -> Vec<InputFile> {
+        (0..n)
+            .map(|i| InputFile {
+                path: PathBuf::from(format!("input/im{i}.ppm")),
+                relative: PathBuf::from(format!("im{i}.ppm")),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn siso_run_script_matches_fig9_shape() {
+        let pairs = vec![(
+            PathBuf::from("input/im1.ppm"),
+            PathBuf::from("output/im1.ppm.out"),
+        )];
+        let s = siso_run_script("MatlabCmd.sh", &pairs);
+        assert_eq!(
+            s,
+            "#!/bin/bash\nexport PATH=${PATH}:.\n\
+             MatlabCmd.sh input/im1.ppm output/im1.ppm.out\n"
+        );
+    }
+
+    #[test]
+    fn mimo_run_script_matches_fig12_shape() {
+        let s = mimo_run_script(
+            "MatlabCmdMulti.sh",
+            std::path::Path::new("./.MAPRED.2188/input_1"),
+        );
+        assert_eq!(
+            s,
+            "#!/bin/bash\nexport PATH=${PATH}:.\n\
+             MatlabCmdMulti.sh ./.MAPRED.2188/input_1\n"
+        );
+    }
+
+    #[test]
+    fn mimo_input_list_is_pair_lines() {
+        let pairs = vec![
+            (PathBuf::from("a.ppm"), PathBuf::from("a.ppm.gray")),
+            (PathBuf::from("b.ppm"), PathBuf::from("b.ppm.gray")),
+        ];
+        assert_eq!(
+            mimo_input_list(&pairs),
+            "a.ppm a.ppm.gray\nb.ppm b.ppm.gray\n"
+        );
+    }
+
+    #[test]
+    fn write_all_siso_layout() {
+        let base = tmp("siso");
+        let wd = MapRedDir::create(&base, 1120, true).unwrap();
+        let opts = Options::new("input", "output", "MatlabCmd.sh")
+            .np(2)
+            .pid(1120);
+        let d = dialect_for(SchedulerKind::GridEngine);
+        let p = plan(&fake_files(6), &opts, d.as_ref()).unwrap();
+        let gen = write_all(&wd, &p, &opts, d.as_ref()).unwrap();
+        assert_eq!(gen.run_scripts.len(), 2);
+        assert!(gen.mimo_inputs.is_empty());
+        // Submission script exists and references the run scripts.
+        let submit = fs::read_to_string(&gen.submit_script).unwrap();
+        assert!(submit.contains("-t 1-2"));
+        assert!(submit.contains("run_llmap_$SGE_TASK_ID"));
+        // Run script 1 processes its block of 3 files, one exec per file.
+        let run1 = fs::read_to_string(&gen.run_scripts[0]).unwrap();
+        assert_eq!(run1.matches("MatlabCmd.sh ").count(), 3);
+    }
+
+    #[test]
+    fn write_all_mimo_layout() {
+        let base = tmp("mimo");
+        let wd = MapRedDir::create(&base, 2188, true).unwrap();
+        let opts = Options::new("input", "output", "MatlabCmdMulti.sh")
+            .np(2)
+            .apptype(AppType::Mimo)
+            .pid(2188);
+        let d = dialect_for(SchedulerKind::GridEngine);
+        let p = plan(&fake_files(6), &opts, d.as_ref()).unwrap();
+        let gen = write_all(&wd, &p, &opts, d.as_ref()).unwrap();
+        assert_eq!(gen.mimo_inputs.len(), 2);
+        // Each run script launches the wrapper exactly once (Fig 12).
+        for (i, rs) in gen.run_scripts.iter().enumerate() {
+            let text = fs::read_to_string(rs).unwrap();
+            assert_eq!(text.matches("MatlabCmdMulti.sh").count(), 1);
+            assert!(text.contains(&format!("input_{}", i + 1)));
+        }
+        // Pair lists cover all 6 files.
+        let total_lines: usize = gen
+            .mimo_inputs
+            .iter()
+            .map(|p| fs::read_to_string(p).unwrap().lines().count())
+            .sum();
+        assert_eq!(total_lines, 6);
+    }
+
+    #[test]
+    fn reduce_script_contract() {
+        let s = reduce_run_script(
+            "ReduceWordFreqCmd.sh",
+            std::path::Path::new("output"),
+            std::path::Path::new("llmapreduce.out"),
+        );
+        assert!(s.contains("ReduceWordFreqCmd.sh output llmapreduce.out"));
+    }
+}

@@ -1,0 +1,96 @@
+//! Synthetic PPM image generator (the §III-A image-conversion workload).
+
+use std::path::{Path, PathBuf};
+
+use crate::apps::image::{write_ppm, Image};
+use crate::error::{IoContext, Result};
+use crate::util::rng::Rng;
+
+/// Generate `count` random RGB images of `height`×`width` as
+/// `im_<i>.ppm` under `dir`.  Deterministic in `seed`.
+pub fn generate_images(
+    dir: &Path,
+    count: usize,
+    height: usize,
+    width: usize,
+    seed: u64,
+) -> Result<Vec<PathBuf>> {
+    std::fs::create_dir_all(dir).at(dir)?;
+    let mut rng = Rng::new(seed);
+    let mut paths = Vec::with_capacity(count);
+    for i in 0..count {
+        let mut r = rng.fork(i as u64);
+        // Structured content (gradient + noise), not pure noise: grayscale
+        // output then has visible structure, useful when eyeballing
+        // example outputs.
+        let mut rgb = Vec::with_capacity(height * width * 3);
+        for y in 0..height {
+            for x in 0..width {
+                let gx = x as f32 / width.max(1) as f32;
+                let gy = y as f32 / height.max(1) as f32;
+                rgb.push((gx + 0.1 * r.next_f32()).clamp(0.0, 1.0));
+                rgb.push((gy + 0.1 * r.next_f32()).clamp(0.0, 1.0));
+                rgb.push((0.5 + 0.5 * r.next_f32()).clamp(0.0, 1.0));
+            }
+        }
+        let img = Image {
+            width,
+            height,
+            rgb,
+        };
+        let path = dir.join(format!("im_{i:04}.ppm"));
+        write_ppm(&path, &img)?;
+        paths.push(path);
+    }
+    Ok(paths)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::image::read_ppm;
+    use std::fs;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("llmr-wimg-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn generates_readable_images() {
+        let d = tmp("gen");
+        let paths = generate_images(&d, 3, 8, 16, 42).unwrap();
+        assert_eq!(paths.len(), 3);
+        for p in &paths {
+            let img = read_ppm(p).unwrap();
+            assert_eq!((img.height, img.width), (8, 16));
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let d1 = tmp("det1");
+        let d2 = tmp("det2");
+        generate_images(&d1, 2, 4, 4, 7).unwrap();
+        generate_images(&d2, 2, 4, 4, 7).unwrap();
+        for i in 0..2 {
+            let a = fs::read(d1.join(format!("im_{i:04}.ppm"))).unwrap();
+            let b = fs::read(d2.join(format!("im_{i:04}.ppm"))).unwrap();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn different_seed_differs() {
+        let d1 = tmp("seed1");
+        let d2 = tmp("seed2");
+        generate_images(&d1, 1, 4, 4, 1).unwrap();
+        generate_images(&d2, 1, 4, 4, 2).unwrap();
+        assert_ne!(
+            fs::read(d1.join("im_0000.ppm")).unwrap(),
+            fs::read(d2.join("im_0000.ppm")).unwrap()
+        );
+    }
+}

@@ -1,0 +1,13 @@
+//! Synthetic workload generators.
+//!
+//! The paper's data is user data we don't have (sensor images, text
+//! corpora, a 43,580-file image processing job).  These generators produce
+//! deterministic synthetic equivalents that exercise the same code paths:
+//! PPM images sized for the `image_convert` artifact, Zipf-distributed
+//! text corpora for word counting, MATLIST matrix files for the §IV
+//! scaling study, and the Table II trace parameters.
+
+pub mod images;
+pub mod matrices;
+pub mod text;
+pub mod trace;

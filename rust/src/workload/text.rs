@@ -1,0 +1,137 @@
+//! Synthetic text corpus generator (the §III-B word-counting workload:
+//! "a Java application that counts the number of unique words in the
+//! given text files" — 21 files in Table I).
+//!
+//! Words are drawn from a Zipf distribution over a synthetic vocabulary,
+//! matching natural-language frequency shape so reducer merge costs are
+//! realistic.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{IoContext, Result};
+use crate::util::rng::Rng;
+
+/// Deterministic synthetic vocabulary: `w<k>` tokens plus a stopword set
+/// shared with the generated ignore file.
+pub const STOPWORDS: [&str; 8] =
+    ["the", "a", "an", "and", "of", "to", "in", "is"];
+
+/// Generate `count` text files `doc_<i>.txt` under `dir`, each with
+/// `words_per_file` words: Zipf-ranked vocabulary of `vocab` words mixed
+/// with stopwords.  Also writes `textignore.txt` (the paper's reference
+/// file) NEXT TO the corpus directory — like the paper, where the
+/// reference file lives beside the application, not among the inputs —
+/// and returns (doc paths, ignore path).
+pub fn generate_corpus(
+    dir: &Path,
+    count: usize,
+    words_per_file: usize,
+    vocab: usize,
+    seed: u64,
+) -> Result<(Vec<PathBuf>, PathBuf)> {
+    std::fs::create_dir_all(dir).at(dir)?;
+    let mut rng = Rng::new(seed);
+
+    // Zipf weights 1/rank over the vocabulary.
+    let weights: Vec<f64> =
+        (1..=vocab.max(1)).map(|r| 1.0 / r as f64).collect();
+
+    let mut paths = Vec::with_capacity(count);
+    for i in 0..count {
+        let mut r = rng.fork(i as u64);
+        let mut text = String::with_capacity(words_per_file * 6);
+        for w in 0..words_per_file {
+            if w > 0 {
+                text.push(if w % 12 == 0 { '\n' } else { ' ' });
+            }
+            // 1-in-4 words is a stopword, like running English.
+            if r.next_below(4) == 0 {
+                text.push_str(
+                    STOPWORDS[r.next_below(STOPWORDS.len() as u64) as usize],
+                );
+            } else {
+                let rank = r.weighted(&weights);
+                text.push_str(&format!("w{rank:05}"));
+            }
+        }
+        text.push('\n');
+        let path = dir.join(format!("doc_{i:04}.txt"));
+        std::fs::write(&path, text).at(&path)?;
+        paths.push(path);
+    }
+
+    let ignore = dir
+        .parent()
+        .unwrap_or(dir)
+        .join("textignore.txt");
+    std::fs::write(&ignore, STOPWORDS.join("\n")).at(&ignore)?;
+    Ok((paths, ignore))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::fs;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("llmr-wtxt-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn generates_corpus_and_ignore_file() {
+        let d = tmp("gen");
+        let (docs, ignore) = generate_corpus(&d, 3, 100, 50, 1).unwrap();
+        assert_eq!(docs.len(), 3);
+        assert!(ignore.is_file());
+        // The reference file must NOT be inside the input directory: the
+        // scanner would otherwise feed it to the mapper as data.
+        assert_ne!(ignore.parent(), Some(d.as_path()));
+        for doc in &docs {
+            let text = fs::read_to_string(doc).unwrap();
+            assert!(text.split_whitespace().count() == 100);
+        }
+    }
+
+    #[test]
+    fn zipf_head_is_heavy() {
+        let d = tmp("zipf");
+        let (docs, _) = generate_corpus(&d, 1, 5000, 100, 2).unwrap();
+        let text = fs::read_to_string(&docs[0]).unwrap();
+        let head = text.matches("w00000").count();
+        let tail = text.matches("w00099").count();
+        assert!(head > tail * 3, "rank-1 ({head}) >> rank-100 ({tail})");
+    }
+
+    #[test]
+    fn stopwords_present_and_listed() {
+        let d = tmp("stop");
+        let (docs, ignore) = generate_corpus(&d, 1, 2000, 20, 3).unwrap();
+        let text = fs::read_to_string(&docs[0]).unwrap();
+        let listed: HashSet<&str> = STOPWORDS.into_iter().collect();
+        let found = text
+            .split_whitespace()
+            .filter(|w| listed.contains(w))
+            .count();
+        assert!(found > 200, "~25% stopwords, found {found}");
+        let ign = fs::read_to_string(ignore).unwrap();
+        for s in STOPWORDS {
+            assert!(ign.contains(s));
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let d1 = tmp("det1");
+        let d2 = tmp("det2");
+        generate_corpus(&d1, 1, 100, 10, 9).unwrap();
+        generate_corpus(&d2, 1, 100, 10, 9).unwrap();
+        assert_eq!(
+            fs::read(d1.join("doc_0000.txt")).unwrap(),
+            fs::read(d2.join("doc_0000.txt")).unwrap()
+        );
+    }
+}

@@ -1,0 +1,631 @@
+//! Cross-module integration: full LLMapReduce pipelines over real apps on
+//! both engines, engine-equivalence, failure propagation, and the use
+//! cases of §III end to end.
+
+use std::fs;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use llmapreduce::apps::matmul::read_result_frobenius;
+use llmapreduce::apps::wordcount::read_counts;
+use llmapreduce::bench::experiments::block_vs_mimo;
+use llmapreduce::prelude::*;
+use llmapreduce::scheduler::sim::{ClusterConfig, SimEngine};
+use llmapreduce::workload::images::generate_images;
+use llmapreduce::workload::matrices::generate_matrix_lists;
+use llmapreduce::workload::text::generate_corpus;
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("llmr-int-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+// ---------------------------------------------------------------------------
+// §III-B: the word-count use case end to end (no artifacts needed)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn wordcount_fig15_pipeline_counts_are_exact() {
+    let root = tmp("wc-exact");
+    let input = root.join("input");
+    let (docs, ignore) = generate_corpus(&input, 9, 300, 40, 5).unwrap();
+
+    // Ground truth: count everything by hand.
+    let mut expect = std::collections::BTreeMap::new();
+    let stop: std::collections::HashSet<String> =
+        fs::read_to_string(&ignore)
+            .unwrap()
+            .split_whitespace()
+            .map(|s| s.to_string())
+            .collect();
+    for doc in &docs {
+        for w in fs::read_to_string(doc)
+            .unwrap()
+            .split(|c: char| !c.is_alphanumeric())
+            .filter(|w| !w.is_empty())
+        {
+            let w = w.to_lowercase();
+            if !stop.contains(&w) {
+                *expect.entry(w).or_insert(0u64) += 1;
+            }
+        }
+    }
+
+    let opts = Options::new(&input, root.join("output"), "wordcount")
+        .np(3)
+        .distribution(Distribution::Cyclic)
+        .reducer("wordcount-reducer")
+        .pid(60001);
+    let apps = Apps {
+        mapper: WordCountApp::new(Some(ignore)),
+        reducer: Some(Arc::new(WordCountReducer)),
+    };
+    let mut eng = LocalEngine::new(3);
+    let report = llmapreduce::mapreduce::run(&opts, &apps, &mut eng).unwrap();
+    let merged = read_counts(&report.redout_path.unwrap()).unwrap();
+    assert_eq!(merged, expect, "map-reduce == sequential ground truth");
+}
+
+#[test]
+fn wordcount_mimo_and_siso_agree() {
+    let root = tmp("wc-agree");
+    let input = root.join("input");
+    let (_d, ignore) = generate_corpus(&input, 7, 200, 30, 8).unwrap();
+    let mk = |apptype, outdir: &str, pid| {
+        Options::new(&input, root.join(outdir), "wordcount")
+            .np(2)
+            .apptype(apptype)
+            .reducer("wordcount-reducer")
+            .pid(pid)
+    };
+    let apps = Apps {
+        mapper: WordCountApp::new(Some(ignore)),
+        reducer: Some(Arc::new(WordCountReducer)),
+    };
+    let mut eng = LocalEngine::new(2);
+    let siso = llmapreduce::mapreduce::run(
+        &mk(AppType::Siso, "out-siso", 60002),
+        &apps,
+        &mut eng,
+    )
+    .unwrap();
+    let mimo = llmapreduce::mapreduce::run(
+        &mk(AppType::Mimo, "out-mimo", 60003),
+        &apps,
+        &mut eng,
+    )
+    .unwrap();
+    let a = read_counts(&siso.redout_path.unwrap()).unwrap();
+    let b = read_counts(&mimo.redout_path.unwrap()).unwrap();
+    assert_eq!(a, b, "launch protocol must not change results");
+    assert!(mimo.map.total_launches() < siso.map.total_launches());
+}
+
+// ---------------------------------------------------------------------------
+// Engine equivalence: local and executing-sim produce identical outputs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn local_and_sim_engines_produce_identical_results() {
+    let root = tmp("equiv");
+    let input = root.join("input");
+    let (_d, ignore) = generate_corpus(&input, 6, 150, 20, 9).unwrap();
+    let apps = Apps {
+        mapper: WordCountApp::new(Some(ignore)),
+        reducer: Some(Arc::new(WordCountReducer)),
+    };
+    let run_on = |engine: &mut dyn Engine, outdir: &str, pid| {
+        let opts = Options::new(&input, root.join(outdir), "wordcount")
+            .np(2)
+            .reducer("wordcount-reducer")
+            .pid(pid);
+        llmapreduce::mapreduce::run(&opts, &apps, engine).unwrap()
+    };
+    let mut local = LocalEngine::new(2);
+    let r1 = run_on(&mut local, "out-local", 60004);
+    let mut sim =
+        SimEngine::new(ClusterConfig::with_width(2)).execute_payloads(true);
+    let r2 = run_on(&mut sim, "out-sim", 60005);
+    assert_eq!(
+        fs::read_to_string(r1.redout_path.unwrap()).unwrap(),
+        fs::read_to_string(r2.redout_path.unwrap()).unwrap(),
+    );
+}
+
+// ---------------------------------------------------------------------------
+// §III-A / §IV with real artifacts (skipped when absent)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn image_pipeline_full_stack() {
+    let Ok(manifest) = Manifest::discover() else { return };
+    let mapper = ImageConvertApp::new(&manifest).unwrap();
+    let (h, w) = mapper.image_shape();
+    let root = tmp("img-stack");
+    let input = root.join("input");
+    generate_images(&input, 4, h, w, 77).unwrap();
+
+    let opts = Options::new(&input, root.join("output"), "imageconvert")
+        .np(2)
+        .ext("gray")
+        .pid(60006);
+    let apps = Apps {
+        mapper,
+        reducer: None,
+    };
+    let mut eng = LocalEngine::new(2);
+    let report = llmapreduce::mapreduce::run(&opts, &apps, &mut eng).unwrap();
+    assert_eq!(report.map.total_items(), 4);
+    for i in 0..4 {
+        let out = root.join(format!("output/im_{i:04}.ppm.gray"));
+        let (ow, oh, gray) =
+            llmapreduce::apps::image::read_pgm(&out).unwrap();
+        assert_eq!((ow, oh), (w, h));
+        assert!(gray.iter().all(|v| (0.0..=1.0).contains(v)));
+    }
+}
+
+#[test]
+fn matmul_pipeline_block_vs_mimo_speedup_positive() {
+    let Ok(manifest) = Manifest::discover() else { return };
+    let mapper = MatmulChainApp::new(&manifest).unwrap();
+    let (l, n) = mapper.static_shape();
+    let root = tmp("mat-speedup");
+    let input = root.join("input");
+    generate_matrix_lists(&input, 8, l, n, 13).unwrap();
+
+    let opts = Options::new(&input, root.join("output"), "matmulchain")
+        .np(2)
+        .reducer("frobsum-reducer")
+        .pid(60007);
+    let apps = Apps {
+        mapper,
+        reducer: Some(Arc::new(FrobeniusSumReducer)),
+    };
+    let mut eng = LocalEngine::new(2);
+    let result =
+        block_vs_mimo("matmul", &opts, &apps, &mut eng).unwrap();
+    // 4 files/task with compile-dominated startup: MIMO must win clearly.
+    assert!(
+        result.speedup() > 1.5,
+        "MIMO speed-up {:.2} should exceed 1.5x",
+        result.speedup()
+    );
+    // And the reduce output parses.
+    let red = root.join("output/llmapreduce.out");
+    let text = fs::read_to_string(&red).unwrap();
+    assert!(text.contains("FILES 8"), "{text}");
+}
+
+#[test]
+fn matmul_outputs_match_frobenius_reference() {
+    let Ok(manifest) = Manifest::discover() else { return };
+    let mapper = MatmulChainApp::new(&manifest).unwrap();
+    let (l, n) = mapper.static_shape();
+    let root = tmp("mat-ref");
+    let input = root.join("input");
+    let paths = generate_matrix_lists(&input, 3, l, n, 21).unwrap();
+
+    let opts = Options::new(&input, root.join("output"), "matmulchain")
+        .pid(60008);
+    let apps = Apps {
+        mapper,
+        reducer: None,
+    };
+    let mut eng = LocalEngine::new(1);
+    llmapreduce::mapreduce::run(&opts, &apps, &mut eng).unwrap();
+
+    for p in &paths {
+        let list =
+            llmapreduce::apps::matmul::read_matrix_list(p).unwrap();
+        let expect = llmapreduce::apps::matmul::frobenius(
+            &llmapreduce::apps::matmul::chain_product_ref(&list),
+        );
+        let name = p.file_name().unwrap().to_str().unwrap();
+        let out = root.join(format!("output/{name}.out"));
+        let got = read_result_frobenius(&out).unwrap();
+        assert!(
+            (got - expect).abs() / expect.max(1e-6) < 1e-3,
+            "{name}: {got} vs {expect}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Failure injection through the whole stack
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sim_failure_injection_retries_through_pipeline() {
+    let tasks: Vec<llmapreduce::scheduler::TaskSpec> = (0..64)
+        .map(|i| llmapreduce::scheduler::TaskSpec {
+            task_id: i + 1,
+            work: llmapreduce::scheduler::TaskWork::Synthetic {
+                startup: Duration::from_millis(1),
+                per_item: Duration::from_millis(1),
+                items: 2,
+                launches: 2,
+            },
+        })
+        .collect();
+    let mut eng = SimEngine::new(ClusterConfig {
+        failure_rate: 0.2,
+        max_retries: 8,
+        seed: 1234,
+        ..ClusterConfig::with_width(8)
+    });
+    let report = eng
+        .run(llmapreduce::scheduler::JobSpec::new("flaky", tasks))
+        .unwrap();
+    assert_eq!(report.tasks.len(), 64);
+    assert!(report.tasks.iter().any(|t| t.retries > 0));
+    // Retried tasks still did their work.
+    assert_eq!(report.total_items(), 128);
+}
+
+#[test]
+fn app_failure_fails_job_on_both_engines() {
+    struct FailingApp;
+    struct FailingInstance;
+    impl llmapreduce::apps::MapApp for FailingApp {
+        fn name(&self) -> &str {
+            "failing"
+        }
+        fn startup(
+            &self,
+        ) -> llmapreduce::Result<Box<dyn llmapreduce::apps::MapInstance>>
+        {
+            Ok(Box::new(FailingInstance))
+        }
+    }
+    impl llmapreduce::apps::MapInstance for FailingInstance {
+        fn process(
+            &mut self,
+            input: &std::path::Path,
+            _output: &std::path::Path,
+        ) -> llmapreduce::Result<()> {
+            Err(llmapreduce::Error::App {
+                app: "failing".into(),
+                input: input.to_path_buf(),
+                reason: "always fails".into(),
+            })
+        }
+    }
+
+    let root = tmp("fail-both");
+    let input = root.join("input");
+    fs::create_dir_all(&input).unwrap();
+    fs::write(input.join("x.dat"), "x").unwrap();
+    let opts = Options::new(&input, root.join("out"), "failing").pid(60009);
+    let apps = Apps {
+        mapper: Arc::new(FailingApp),
+        reducer: None,
+    };
+    let mut local = LocalEngine::new(1);
+    assert!(llmapreduce::mapreduce::run(&opts, &apps, &mut local).is_err());
+    let mut sim =
+        SimEngine::new(ClusterConfig::with_width(1)).execute_payloads(true);
+    assert!(llmapreduce::mapreduce::run(&opts, &apps, &mut sim).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// CLI binary smoke tests
+// ---------------------------------------------------------------------------
+
+fn cli() -> Option<PathBuf> {
+    // target/<profile>/llmapreduce next to the test binary.
+    let exe = std::env::current_exe().ok()?;
+    let dir = exe.parent()?.parent()?;
+    let bin = dir.join("llmapreduce");
+    bin.is_file().then_some(bin)
+}
+
+#[test]
+fn cli_help_and_gen_data_and_run() {
+    let Some(bin) = cli() else { return };
+    let root = tmp("cli");
+
+    let help = std::process::Command::new(&bin).output().unwrap();
+    assert!(String::from_utf8_lossy(&help.stdout).contains("USAGE"));
+
+    let gen = std::process::Command::new(&bin)
+        .args([
+            "gen-data",
+            "corpus",
+            &format!("--dir={}", root.join("input").display()),
+            "--count=5",
+        ])
+        .output()
+        .unwrap();
+    assert!(gen.status.success(), "{:?}", gen);
+
+    let run = std::process::Command::new(&bin)
+        .current_dir(&root)
+        .args([
+            "run",
+            "--mapper=wordcount",
+            &format!("--input={}", root.join("input").display()),
+            &format!("--output={}", root.join("output").display()),
+            "--np=2",
+            "--reducer=wordcount-reducer",
+            "--apptype=mimo",
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&run.stdout);
+    assert!(run.status.success(), "stdout={stdout} stderr={}",
+        String::from_utf8_lossy(&run.stderr));
+    assert!(stdout.contains("5 files"), "{stdout}");
+    assert!(root.join("output/llmapreduce.out").is_file());
+}
+
+#[test]
+fn cli_rejects_bad_options() {
+    let Some(bin) = cli() else { return };
+    let out = std::process::Command::new(&bin)
+        .args(["run", "--mapper=wordcount", "--np=0"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("error"));
+}
+
+// ---------------------------------------------------------------------------
+// Additional coverage: list-file inputs, exclusive allocation, engines,
+// config-file defaults
+// ---------------------------------------------------------------------------
+
+#[test]
+fn list_file_input_through_pipeline() {
+    // §II: input can be "a list from a given input file" instead of a dir.
+    let root = tmp("listfile");
+    let data = root.join("data");
+    fs::create_dir_all(&data).unwrap();
+    for i in 0..4 {
+        fs::write(data.join(format!("d{i}.txt")), format!("word{i}")).unwrap();
+    }
+    let list = root.join("inputs.list");
+    fs::write(
+        &list,
+        "# chosen subset, not the whole directory\nd0.txt\nd2.txt\n",
+    )
+    .unwrap();
+    // Relative entries resolve against the list file's directory — put
+    // the list next to the data.
+    let list = data.join("inputs.list");
+    fs::write(&list, "# subset\nd0.txt\nd2.txt\n").unwrap();
+    let opts = Options::new(&list, root.join("out"), "wordcount").pid(60010);
+    let apps = Apps {
+        mapper: WordCountApp::new(None),
+        reducer: None,
+    };
+    let mut eng = LocalEngine::new(1);
+    let report = llmapreduce::mapreduce::run(&opts, &apps, &mut eng).unwrap();
+    assert_eq!(report.map.total_items(), 2, "only the listed files");
+    assert!(root.join("out/d0.txt.out").is_file());
+    assert!(!root.join("out/d1.txt.out").exists());
+}
+
+#[test]
+fn exclusive_option_flows_to_sim_allocation() {
+    use llmapreduce::scheduler::{JobSpec, TaskSpec, TaskWork};
+    // 2 nodes x 2 slots; 4 exclusive 10ms tasks must take 2 waves.
+    let mk_tasks = || -> Vec<TaskSpec> {
+        (0..4)
+            .map(|i| TaskSpec {
+                task_id: i + 1,
+                work: TaskWork::Synthetic {
+                    startup: Duration::ZERO,
+                    per_item: Duration::from_millis(10),
+                    items: 1,
+                    launches: 1,
+                },
+            })
+            .collect()
+    };
+    let cfg = ClusterConfig {
+        nodes: 2,
+        slots_per_node: 2,
+        dispatch_latency: Duration::ZERO,
+        ..Default::default()
+    };
+    let excl = SimEngine::new(cfg.clone())
+        .run(JobSpec::new("e", mk_tasks()).exclusive(true))
+        .unwrap();
+    let shared = SimEngine::new(cfg)
+        .run(JobSpec::new("s", mk_tasks()))
+        .unwrap();
+    assert!(excl.makespan >= Duration::from_millis(20));
+    assert!(shared.makespan < Duration::from_millis(20));
+    // Utilization reflects the wasted exclusive slots.
+    assert!(excl.utilization() < shared.utilization());
+}
+
+#[test]
+fn cli_engine_sim_exec_runs_pipeline() {
+    let Some(bin) = cli() else { return };
+    let root = tmp("cli-sim");
+    let gen = std::process::Command::new(&bin)
+        .args([
+            "gen-data",
+            "corpus",
+            &format!("--dir={}", root.join("input").display()),
+            "--count=4",
+        ])
+        .output()
+        .unwrap();
+    assert!(gen.status.success());
+    let run = std::process::Command::new(&bin)
+        .current_dir(&root)
+        .args([
+            "run",
+            "--mapper=wordcount",
+            &format!("--input={}", root.join("input").display()),
+            &format!("--output={}", root.join("output").display()),
+            "--np=2",
+            "--apptype=mimo",
+            "--engine=sim-exec",
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&run.stdout);
+    assert!(run.status.success(), "{stdout} {}", String::from_utf8_lossy(&run.stderr));
+    assert!(stdout.contains("engine: sim"), "{stdout}");
+    // Real outputs despite the virtual clock.
+    assert!(root.join("output/doc_0000.txt.out").is_file());
+}
+
+#[test]
+fn config_file_defaults_apply_to_cli() {
+    let Some(bin) = cli() else { return };
+    let root = tmp("cli-config");
+    fs::write(
+        root.join("llmapreduce.toml"),
+        "[job]\nnp = 2\napptype = \"mimo\"\n",
+    )
+    .unwrap();
+    let gen = std::process::Command::new(&bin)
+        .args([
+            "gen-data",
+            "corpus",
+            &format!("--dir={}", root.join("input").display()),
+            "--count=6",
+        ])
+        .output()
+        .unwrap();
+    assert!(gen.status.success());
+    let run = std::process::Command::new(&bin)
+        .current_dir(&root)
+        .args([
+            "run",
+            "--mapper=wordcount",
+            &format!("--input={}", root.join("input").display()),
+            &format!("--output={}", root.join("output").display()),
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&run.stdout);
+    assert!(run.status.success(), "{stdout}");
+    // np=2 from config -> 2 tasks; mimo -> 2 launches over 6 files.
+    assert!(stdout.contains("6 files, 2 tasks, 2 launches"), "{stdout}");
+}
+
+#[test]
+fn image_pipeline_app_through_pipeline() {
+    let Ok(manifest) = Manifest::discover() else { return };
+    let Ok(mapper) =
+        llmapreduce::apps::image::ImageConvertApp::pipeline(&manifest)
+    else {
+        return;
+    };
+    let (h, w) = mapper.image_shape();
+    let root = tmp("imgpipe");
+    let input = root.join("input");
+    generate_images(&input, 2, h, w, 3).unwrap();
+    let opts = Options::new(&input, root.join("output"), "imagepipeline")
+        .apptype(AppType::Mimo)
+        .pid(60011);
+    let apps = Apps {
+        mapper,
+        reducer: None,
+    };
+    let mut eng = LocalEngine::new(1);
+    let report = llmapreduce::mapreduce::run(&opts, &apps, &mut eng).unwrap();
+    assert_eq!(report.map.total_items(), 2);
+    let (ow, oh, gray) = llmapreduce::apps::image::read_pgm(
+        &root.join("output/im_0000.ppm.out"),
+    )
+    .unwrap();
+    assert_eq!((ow, oh), (w, h));
+    assert!(gray.iter().all(|v| (0.0..=1.0).contains(v)));
+}
+
+// ---------------------------------------------------------------------------
+// Simulator validation: the DES calibrated from the real app must predict
+// real elapsed times at the widths this container can actually run
+// (np = 1: the only width where 1 core gives honest parallel semantics).
+// This is the load-bearing check for the DESIGN.md §3 substitution.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn calibrated_sim_predicts_real_elapsed_within_40_percent() {
+    use llmapreduce::scheduler::cost::Calibration;
+    use llmapreduce::scheduler::{JobSpec, TaskSpec, TaskWork};
+
+    let Ok(manifest) = Manifest::discover() else { return };
+    let mapper = MatmulChainApp::new(&manifest).unwrap();
+    let (l, n) = mapper.static_shape();
+    let root = tmp("sim-validate");
+    let input = root.join("input");
+    let nfiles = 10;
+    let paths = generate_matrix_lists(&input, nfiles, l, n, 17).unwrap();
+
+    // Calibrate from a held-out sample (outputs OUTSIDE the input dir so
+    // the later scan doesn't pick them up as data).
+    let calib_dir = root.join("calib");
+    fs::create_dir_all(&calib_dir).unwrap();
+    let sample: Vec<_> = paths
+        .iter()
+        .take(3)
+        .map(|p| {
+            (
+                p.clone(),
+                calib_dir.join(p.file_name().unwrap()).with_extension("out"),
+            )
+        })
+        .collect();
+    let cal = Calibration::measure(mapper.as_ref(), &sample, 2).unwrap();
+
+    // Real run: np=1, MIMO over all files.
+    let opts = Options::new(&input, root.join("output"), "matmulchain")
+        .np(1)
+        .apptype(AppType::Mimo)
+        .pid(60012);
+    let apps = Apps {
+        mapper: mapper.clone(),
+        reducer: None,
+    };
+    let mut local = LocalEngine::new(1);
+    let real = llmapreduce::mapreduce::run(&opts, &apps, &mut local)
+        .unwrap()
+        .map
+        .makespan;
+
+    // Simulated prediction from the calibrated costs.
+    let mut sim = SimEngine::new(ClusterConfig {
+        dispatch_latency: Duration::ZERO,
+        ..ClusterConfig::with_width(1)
+    });
+    let predicted = sim
+        .run(JobSpec::new(
+            "predict",
+            vec![TaskSpec {
+                task_id: 1,
+                work: TaskWork::Synthetic {
+                    startup: cal.hint.startup,
+                    per_item: cal.hint.per_item,
+                    items: nfiles,
+                    launches: 1,
+                },
+            }],
+        ))
+        .unwrap()
+        .makespan;
+
+    let err = (real.as_secs_f64() - predicted.as_secs_f64()).abs()
+        / real.as_secs_f64();
+    println!(
+        "sim validation: predicted {predicted:?} vs real {real:?} ({:.0}% error)",
+        err * 100.0
+    );
+    assert!(
+        err < 0.4,
+        "sim predicted {predicted:?} vs real {real:?} ({:.0}% off) — \
+         calibration drift breaks the Fig 18/19 substitution",
+        err * 100.0
+    );
+}

@@ -1,0 +1,406 @@
+//! Property-based tests over the coordinator's invariants.
+//!
+//! `proptest` is unavailable offline, so this uses the crate's own
+//! deterministic RNG as a case generator: each property runs over a few
+//! hundred random shapes, and a failing case prints its seed so it can be
+//! replayed exactly.
+
+use std::collections::HashSet;
+use std::time::Duration;
+
+use llmapreduce::mapreduce::distribution::distribute;
+use llmapreduce::mapreduce::planner::{plan, task_count};
+use llmapreduce::options::{AppType, Distribution, Options, SchedulerKind};
+use llmapreduce::scheduler::dialect::dialect_for;
+use llmapreduce::scheduler::sim::{ClusterConfig, SimEngine};
+use llmapreduce::scheduler::{Engine, JobSpec, TaskSpec, TaskWork};
+use llmapreduce::util::json::{obj, Json};
+use llmapreduce::util::rng::Rng;
+use llmapreduce::workdir::scan::InputFile;
+
+const CASES: usize = 300;
+
+/// Tiny property harness: runs `f` over CASES seeded RNGs; panics with
+/// the failing seed embedded in the message.
+fn forall(name: &str, mut f: impl FnMut(&mut Rng)) {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(0xC0FFEE ^ seed);
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| f(&mut rng)),
+        );
+        if let Err(e) = result {
+            panic!(
+                "property '{name}' failed at seed {seed}: {:?}",
+                e.downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Distribution invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_distribution_is_a_partition() {
+    forall("partition", |rng| {
+        let nfiles = rng.range(0, 2000);
+        let ntasks = rng.range(1, 300);
+        let dist = if rng.next_below(2) == 0 {
+            Distribution::Block
+        } else {
+            Distribution::Cyclic
+        };
+        let a = distribute(nfiles, ntasks, dist);
+        assert_eq!(a.len(), ntasks);
+        let mut seen = HashSet::new();
+        for idx in a.iter().flatten() {
+            assert!(*idx < nfiles, "index in range");
+            assert!(seen.insert(*idx), "no duplicates");
+        }
+        assert_eq!(seen.len(), nfiles, "complete coverage");
+    });
+}
+
+#[test]
+fn prop_distribution_balanced() {
+    forall("balance", |rng| {
+        let nfiles = rng.range(0, 5000);
+        let ntasks = rng.range(1, 257);
+        for dist in [Distribution::Block, Distribution::Cyclic] {
+            let a = distribute(nfiles, ntasks, dist);
+            let min = a.iter().map(Vec::len).min().unwrap();
+            let max = a.iter().map(Vec::len).max().unwrap();
+            assert!(max - min <= 1, "{dist:?}: {min}..{max}");
+        }
+    });
+}
+
+#[test]
+fn prop_block_is_contiguous_and_ordered() {
+    forall("block-contiguous", |rng| {
+        let nfiles = rng.range(0, 3000);
+        let ntasks = rng.range(1, 64);
+        let a = distribute(nfiles, ntasks, Distribution::Block);
+        let flat: Vec<usize> = a.iter().flatten().copied().collect();
+        assert_eq!(flat, (0..nfiles).collect::<Vec<_>>());
+    });
+}
+
+#[test]
+fn prop_cyclic_has_stride_ntasks() {
+    forall("cyclic-stride", |rng| {
+        let nfiles = rng.range(1, 3000);
+        let ntasks = rng.range(1, 64);
+        let a = distribute(nfiles, ntasks, Distribution::Cyclic);
+        for (t, files) in a.iter().enumerate() {
+            for (k, idx) in files.iter().enumerate() {
+                assert_eq!(*idx, t + k * ntasks);
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Planner invariants
+// ---------------------------------------------------------------------------
+
+fn fake_files(n: usize) -> Vec<InputFile> {
+    (0..n)
+        .map(|i| InputFile {
+            path: format!("/in/f{i:05}").into(),
+            relative: format!("f{i:05}").into(),
+        })
+        .collect()
+}
+
+#[test]
+fn prop_planner_covers_every_file_once() {
+    let dialect = dialect_for(SchedulerKind::GridEngine);
+    forall("planner-cover", |rng| {
+        let nfiles = rng.range(1, 800);
+        let mut opts = Options::new("/in", "/out", "m");
+        match rng.next_below(3) {
+            0 => {} // DEFAULT
+            1 => opts.np = Some(rng.range(1, 300)),
+            _ => opts.ndata = Some(rng.range(1, 50)),
+        }
+        if rng.next_below(2) == 0 {
+            opts.distribution = Distribution::Cyclic;
+        }
+        let p = plan(&fake_files(nfiles), &opts, dialect.as_ref()).unwrap();
+        let all: Vec<_> =
+            p.tasks.iter().flat_map(|t| t.pairs.iter()).collect();
+        assert_eq!(all.len(), nfiles);
+        let inputs: HashSet<_> = all.iter().map(|(i, _)| i).collect();
+        assert_eq!(inputs.len(), nfiles, "each input exactly once");
+        // Outputs all distinct and inside the output dir.
+        let outputs: HashSet<_> = all.iter().map(|(_, o)| o).collect();
+        assert_eq!(outputs.len(), nfiles);
+        for (_, o) in &all {
+            assert!(o.starts_with("/out"));
+        }
+    });
+}
+
+#[test]
+fn prop_ndata_bounds_files_per_task() {
+    let dialect = dialect_for(SchedulerKind::GridEngine);
+    forall("ndata-bound", |rng| {
+        let nfiles = rng.range(1, 2000);
+        let ndata = rng.range(1, 64);
+        let opts = Options::new("/in", "/out", "m").ndata(ndata);
+        let p = plan(&fake_files(nfiles), &opts, dialect.as_ref()).unwrap();
+        assert!(p.max_files_per_task() <= ndata);
+    });
+}
+
+#[test]
+fn prop_task_count_never_exceeds_dialect_limit() {
+    forall("limit", |rng| {
+        let kind = match rng.next_below(3) {
+            0 => SchedulerKind::GridEngine,
+            1 => SchedulerKind::Slurm,
+            _ => SchedulerKind::Lsf,
+        };
+        let dialect = dialect_for(kind);
+        let nfiles = rng.range(1, 200_000);
+        let np = rng.range(1, 999);
+        let opts = Options::new("/in", "/out", "m").np(np);
+        match task_count(nfiles, &opts, dialect.as_ref()) {
+            Ok(t) => assert!(t <= dialect.max_array_tasks()),
+            Err(e) => {
+                assert!(np > dialect.max_array_tasks(), "{kind:?}: {e}")
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_mimo_launches_at_most_tasks() {
+    let dialect = dialect_for(SchedulerKind::GridEngine);
+    forall("mimo-launches", |rng| {
+        let nfiles = rng.range(1, 1000);
+        let np = rng.range(1, 128);
+        let siso = Options::new("/in", "/out", "m").np(np);
+        let mimo = siso.clone().apptype(AppType::Mimo);
+        let ps = plan(&fake_files(nfiles), &siso, dialect.as_ref()).unwrap();
+        let pm = plan(&fake_files(nfiles), &mimo, dialect.as_ref()).unwrap();
+        assert_eq!(ps.total_launches(), nfiles, "SISO: launch per file");
+        assert!(pm.total_launches() <= np.min(nfiles));
+        assert!(pm.total_launches() >= 1);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Options parsing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_options_roundtrip_through_args() {
+    forall("options-roundtrip", |rng| {
+        let np = rng.range(1, 100_000);
+        let ndata = rng.range(1, 10_000);
+        let exts = ["out", "gray", "result", "x"];
+        let ext = exts[rng.next_below(exts.len() as u64) as usize];
+        let args = vec![
+            format!("--np={np}"),
+            format!("--ndata={ndata}"),
+            "--input=/data/in".to_string(),
+            "--output=/data/out".to_string(),
+            "--mapper=myMapper".to_string(),
+            format!("--ext={ext}"),
+            format!(
+                "--distribution={}",
+                if rng.next_below(2) == 0 { "block" } else { "cyclic" }
+            ),
+            format!(
+                "--apptype={}",
+                if rng.next_below(2) == 0 { "siso" } else { "mimo" }
+            ),
+        ];
+        let o = Options::parse_args(&args).unwrap();
+        assert_eq!(o.np, Some(np));
+        assert_eq!(o.ndata, Some(ndata));
+        assert_eq!(o.ext, ext);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Simulator invariants
+// ---------------------------------------------------------------------------
+
+fn random_tasks(rng: &mut Rng, n: usize) -> Vec<TaskSpec> {
+    (0..n)
+        .map(|i| TaskSpec {
+            task_id: i + 1,
+            work: TaskWork::Synthetic {
+                startup: Duration::from_micros(rng.range(1, 5000) as u64),
+                per_item: Duration::from_micros(rng.range(1, 2000) as u64),
+                items: rng.range(1, 20),
+                launches: rng.range(1, 20),
+            },
+        })
+        .collect()
+}
+
+#[test]
+fn prop_sim_deterministic_replay() {
+    forall("sim-replay", |rng| {
+        let n = rng.range(1, 60);
+        let seed = rng.next_u64();
+        let tasks = random_tasks(rng, n);
+        let run = |tasks: Vec<TaskSpec>| {
+            let mut eng = SimEngine::new(ClusterConfig {
+                jitter: 0.1,
+                seed,
+                ..ClusterConfig::with_width(rng_width(seed))
+            });
+            eng.run(JobSpec::new("j", tasks)).unwrap().makespan
+        };
+        assert_eq!(run(tasks.clone()), run(tasks));
+    });
+}
+
+fn rng_width(seed: u64) -> usize {
+    (seed % 16) as usize + 1
+}
+
+#[test]
+fn prop_sim_wider_cluster_never_slower() {
+    forall("sim-monotone-width", |rng| {
+        let n = rng.range(1, 80);
+        let tasks = random_tasks(rng, n);
+        let run = |np: usize, tasks: Vec<TaskSpec>| {
+            let mut eng = SimEngine::new(ClusterConfig {
+                dispatch_latency: Duration::from_micros(100),
+                ..ClusterConfig::with_width(np)
+            });
+            eng.run(JobSpec::new("j", tasks)).unwrap().makespan
+        };
+        let narrow = run(1, tasks.clone());
+        let wide = run(64, tasks);
+        assert!(
+            wide <= narrow,
+            "wider cluster can't be slower: {wide:?} vs {narrow:?}"
+        );
+    });
+}
+
+#[test]
+fn prop_sim_makespan_bounds() {
+    // Makespan >= the longest single task; <= serial sum + dispatch.
+    forall("sim-bounds", |rng| {
+        let n = rng.range(1, 40);
+        let tasks = random_tasks(rng, n);
+        let durations: Vec<Duration> = tasks
+            .iter()
+            .map(|t| match &t.work {
+                TaskWork::Synthetic {
+                    startup,
+                    per_item,
+                    items,
+                    launches,
+                } => *startup * (*launches as u32)
+                    + *per_item * (*items as u32),
+                _ => unreachable!(),
+            })
+            .collect();
+        let dispatch = Duration::from_micros(50);
+        let np = rng.range(1, 32);
+        let mut eng = SimEngine::new(ClusterConfig {
+            dispatch_latency: dispatch,
+            ..ClusterConfig::with_width(np)
+        });
+        let makespan =
+            eng.run(JobSpec::new("j", tasks)).unwrap().makespan;
+        let longest = durations.iter().max().copied().unwrap();
+        let serial: Duration =
+            durations.iter().sum::<Duration>() + dispatch * n as u32;
+        assert!(makespan >= longest, "{makespan:?} >= {longest:?}");
+        assert!(makespan <= serial, "{makespan:?} <= {serial:?}");
+    });
+}
+
+#[test]
+fn prop_sim_mimo_never_slower_than_siso() {
+    forall("sim-mimo-wins", |rng| {
+        let np = rng.range(1, 64);
+        let nfiles = rng.range(np, 1000);
+        let startup = Duration::from_micros(rng.range(10, 10_000) as u64);
+        let per_item = Duration::from_micros(rng.range(1, 5_000) as u64);
+        let base = nfiles / np;
+        let rem = nfiles % np;
+        let mk = |mimo: bool| -> Vec<TaskSpec> {
+            (0..np)
+                .map(|t| {
+                    let items = base + usize::from(t < rem);
+                    TaskSpec {
+                        task_id: t + 1,
+                        work: TaskWork::Synthetic {
+                            startup,
+                            per_item,
+                            items,
+                            launches: if mimo {
+                                usize::from(items > 0)
+                            } else {
+                                items
+                            },
+                        },
+                    }
+                })
+                .collect()
+        };
+        let run = |tasks| {
+            SimEngine::new(ClusterConfig::with_width(np))
+                .run(JobSpec::new("j", tasks))
+                .unwrap()
+                .makespan
+        };
+        assert!(run(mk(true)) <= run(mk(false)));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// JSON roundtrip over random documents
+// ---------------------------------------------------------------------------
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    if depth == 0 {
+        return match rng.next_below(4) {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_below(2) == 0),
+            2 => Json::Num((rng.next_below(1_000_000) as f64) / 4.0),
+            _ => Json::Str(format!("s{}", rng.next_below(10_000))),
+        };
+    }
+    match rng.next_below(2) {
+        0 => Json::Arr(
+            (0..rng.range(0, 5))
+                .map(|_| random_json(rng, depth - 1))
+                .collect(),
+        ),
+        _ => obj((0..rng.range(0, 5))
+            .map(|i| {
+                let key = format!("k{i}");
+                (
+                    Box::leak(key.into_boxed_str()) as &str,
+                    random_json(rng, depth - 1),
+                )
+            })
+            .collect()),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    forall("json-roundtrip", |rng| {
+        let doc = random_json(rng, 3);
+        let compact = Json::parse(&doc.to_string_compact()).unwrap();
+        let pretty = Json::parse(&doc.to_string_pretty()).unwrap();
+        assert_eq!(doc, compact);
+        assert_eq!(doc, pretty);
+    });
+}

@@ -1,0 +1,160 @@
+//! The AOT bridge, end to end: HLO text produced by python/compile/aot.py
+//! loads, compiles and executes in Rust with correct numerics.
+//!
+//! This is the integration point the whole three-layer architecture hangs
+//! on (python tests stop at parse; the executing side lives here).
+//! Tests no-op silently when `make artifacts` hasn't run.
+
+use llmapreduce::apps::image::{grayscale_ref, Image};
+use llmapreduce::runtime::{Manifest, XlaExecutable};
+use llmapreduce::util::rng::Rng;
+
+fn manifest() -> Option<Manifest> {
+    Manifest::discover().ok()
+}
+
+#[test]
+fn matmul_pair_against_host_reference() {
+    let Some(m) = manifest() else { return };
+    let entry = m.entry("matmul_pair").unwrap();
+    let exe = XlaExecutable::from_entry(entry).unwrap();
+    let n = entry.inputs[0].shape[0];
+    let mut rng = Rng::new(101);
+    let a: Vec<f32> = (0..n * n).map(|_| rng.next_f32() - 0.5).collect();
+    let b: Vec<f32> = (0..n * n).map(|_| rng.next_f32() - 0.5).collect();
+    let got = exe.run_f32(&[&a, &b]).unwrap();
+
+    // Host reference (naive triple loop).
+    let mut expect = vec![0f32; n * n];
+    for i in 0..n {
+        for k in 0..n {
+            let av = a[i * n + k];
+            for j in 0..n {
+                expect[i * n + j] += av * b[k * n + j];
+            }
+        }
+    }
+    let mut max_err = 0f32;
+    for (g, e) in got.iter().zip(&expect) {
+        max_err = max_err.max((g - e).abs());
+    }
+    assert!(max_err < 1e-3, "max |err| = {max_err}");
+}
+
+#[test]
+fn matmul_chain_associativity() {
+    // chain(I, A, I, B) == A @ B: exercises the full static chain.
+    let Some(m) = manifest() else { return };
+    let entry = m.entry("matmul_chain").unwrap();
+    let exe = XlaExecutable::from_entry(entry).unwrap();
+    let l = entry.inputs[0].shape[0];
+    let n = entry.inputs[0].shape[1];
+    assert!(l >= 2);
+
+    let mut rng = Rng::new(33);
+    let rand_mat =
+        |rng: &mut Rng| -> Vec<f32> {
+            (0..n * n).map(|_| (rng.next_f32() - 0.5) * 0.2).collect()
+        };
+    let eye: Vec<f32> = (0..n * n)
+        .map(|i| if i % (n + 1) == 0 { 1.0 } else { 0.0 })
+        .collect();
+
+    // Stack: [A, B, I, I, ...] -> product A@B.
+    let a = rand_mat(&mut rng);
+    let b = rand_mat(&mut rng);
+    let mut stacked = Vec::with_capacity(l * n * n);
+    stacked.extend(&a);
+    stacked.extend(&b);
+    for _ in 2..l {
+        stacked.extend(&eye);
+    }
+    let got = exe.run_f32(&[&stacked]).unwrap();
+
+    let pair = m.entry("matmul_pair").unwrap();
+    let pair_exe = XlaExecutable::from_entry(pair).unwrap();
+    let expect = pair_exe.run_f32(&[&a, &b]).unwrap();
+    for (g, e) in got.iter().zip(&expect) {
+        assert!((g - e).abs() < 1e-3, "{g} vs {e}");
+    }
+}
+
+#[test]
+fn image_convert_matches_host_bt601() {
+    let Some(m) = manifest() else { return };
+    let entry = m.entry("image_convert").unwrap();
+    let exe = XlaExecutable::from_entry(entry).unwrap();
+    let h = entry.inputs[0].shape[0];
+    let w = entry.inputs[0].shape[1];
+    let mut rng = Rng::new(55);
+    let rgb: Vec<f32> = (0..h * w * 3).map(|_| rng.next_f32()).collect();
+    let got = exe.run_f32(&[&rgb]).unwrap();
+    let expect = grayscale_ref(&Image {
+        width: w,
+        height: h,
+        rgb: rgb.clone(),
+    });
+    for (g, e) in got.iter().zip(&expect) {
+        assert!((g - e).abs() < 1e-5, "{g} vs {e}");
+    }
+}
+
+#[test]
+fn frobenius_reduce_artifact() {
+    let Some(m) = manifest() else { return };
+    let entry = m.entry("frobenius_reduce").unwrap();
+    let exe = XlaExecutable::from_entry(entry).unwrap();
+    let b = entry.inputs[0].shape[0];
+    let n = entry.inputs[0].shape[1];
+    // Diagonal matrices with known Frobenius norms: matrix k = k+1 on the
+    // diagonal -> norm (k+1)*sqrt(n).
+    let mut stack = vec![0f32; b * n * n];
+    for k in 0..b {
+        for i in 0..n {
+            stack[k * n * n + i * n + i] = (k + 1) as f32;
+        }
+    }
+    let got = exe.run_f32(&[&stack]).unwrap();
+    assert_eq!(got.len(), 1);
+    let expect: f32 =
+        (1..=b).map(|k| k as f32 * (n as f32).sqrt()).sum();
+    assert!(
+        (got[0] - expect).abs() / expect < 1e-5,
+        "{} vs {expect}",
+        got[0]
+    );
+}
+
+#[test]
+fn compile_time_is_the_startup_cost() {
+    // The paper's premise: application start-up (here: XLA compile) is
+    // large relative to one file of work.  Verify the ratio exceeds 5x —
+    // if this ever fails the MIMO experiments stop being meaningful.
+    let Some(m) = manifest() else { return };
+    let entry = m.entry("matmul_pair").unwrap();
+    let exe = XlaExecutable::from_entry(entry).unwrap();
+    let n = entry.inputs[0].shape[0];
+    let a = vec![0.1f32; n * n];
+    let b = vec![0.2f32; n * n];
+    // Warm up once, then time one execute.
+    exe.run_f32(&[&a, &b]).unwrap();
+    let t = std::time::Instant::now();
+    exe.run_f32(&[&a, &b]).unwrap();
+    let exec_time = t.elapsed();
+    assert!(
+        exe.compile_time() > exec_time * 5,
+        "compile {:?} should dominate execute {:?}",
+        exe.compile_time(),
+        exec_time
+    );
+}
+
+#[test]
+fn every_manifest_entry_compiles() {
+    let Some(m) = manifest() else { return };
+    for entry in &m.entries {
+        let exe = XlaExecutable::from_entry(entry)
+            .unwrap_or_else(|e| panic!("{}: {e}", entry.name));
+        assert_eq!(exe.input_specs().len(), entry.inputs.len());
+    }
+}
