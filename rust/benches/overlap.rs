@@ -1,0 +1,158 @@
+//! `cargo bench --bench overlap` — barriered vs overlapped map→reduce.
+//!
+//! The paper's Fig 1 launcher barriers the reduce job on the *whole* map
+//! array job; `--overlap=true` instead releases one partial-reduce task
+//! per mapper task the moment that task completes (task-granularity
+//! scheduler dependencies, DESIGN.md §4).  This bench runs the same
+//! I/O-bound workload both ways on the background-dispatch local engine
+//! and prints makespan, utilization and the speed-up the removed barrier
+//! buys.
+//!
+//! The workload models the regime where overlap pays: mapper task costs
+//! ramp (time-ordered inputs growing through the day — the same
+//! straggler pattern as the block-vs-cyclic ablation), so early slots go
+//! idle while the stragglers finish, and the reducer's per-file
+//! consumption is substantial.  Tasks sleep rather than spin so the
+//! comparison is honest on a single-core container.
+//!
+//! Expected shape: overlapped makespan clearly below barriered (the
+//! partial folds hide inside map-phase idle time and the final merge
+//! reads pre-folded partials), utilization correspondingly higher.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use llmapreduce::apps::{MapApp, MapInstance, ReduceApp};
+use llmapreduce::metrics::report::overlap_comparison;
+use llmapreduce::prelude::*;
+
+/// Mapper whose per-file cost is the number of milliseconds stored in the
+/// input file (I/O-bound: sleeps, does not spin).
+struct SleepMapApp;
+
+struct SleepMapInstance;
+
+impl MapApp for SleepMapApp {
+    fn name(&self) -> &str {
+        "sleep-map"
+    }
+
+    fn startup(&self) -> Result<Box<dyn MapInstance>> {
+        Ok(Box::new(SleepMapInstance))
+    }
+}
+
+impl MapInstance for SleepMapInstance {
+    fn process(&mut self, input: &Path, output: &Path) -> Result<()> {
+        let ms: u64 = fs::read_to_string(input)
+            .map_err(|e| Error::io(input.to_path_buf(), e))?
+            .trim()
+            .parse()
+            .unwrap_or(0);
+        std::thread::sleep(Duration::from_millis(ms));
+        fs::write(output, "mapped\n")
+            .map_err(|e| Error::io(output.to_path_buf(), e))
+    }
+}
+
+/// Reducer that pays `consume_ms` per consumed file — in one big scan at
+/// the barrier, or spread across eager partial folds.
+struct SleepReducer {
+    consume_ms: u64,
+}
+
+impl SleepReducer {
+    fn concat(&self, files: &[PathBuf], out: &Path) -> Result<()> {
+        std::thread::sleep(Duration::from_millis(
+            self.consume_ms * files.len() as u64,
+        ));
+        let mut merged = String::new();
+        for f in files {
+            merged.push_str(
+                &fs::read_to_string(f)
+                    .map_err(|e| Error::io(f.clone(), e))?,
+            );
+        }
+        fs::write(out, merged).map_err(|e| Error::io(out.to_path_buf(), e))
+    }
+}
+
+impl ReduceApp for SleepReducer {
+    fn name(&self) -> &str {
+        "sleep-reduce"
+    }
+
+    fn reduce(&self, dir: &Path, out: &Path) -> Result<()> {
+        let mut files: Vec<PathBuf> = fs::read_dir(dir)
+            .map_err(|e| Error::io(dir.to_path_buf(), e))?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.is_file() && *p != *out)
+            .collect();
+        files.sort();
+        self.concat(&files, out)
+    }
+
+    fn reduce_partial(&self, files: &[PathBuf], out: &Path) -> Result<()> {
+        self.concat(files, out)
+    }
+
+    fn supports_partial(&self) -> bool {
+        true
+    }
+}
+
+fn run_mode(
+    root: &Path,
+    input: &Path,
+    overlap: bool,
+) -> Result<MapReduceReport> {
+    let output = root.join(if overlap { "out-overlap" } else { "out-barrier" });
+    let opts = Options::new(input, &output, "sleep-map")
+        .np(8)
+        .reducer("sleep-reduce")
+        .overlap(overlap)
+        .pid(if overlap { 82002 } else { 82001 })
+        .workdir(root);
+    let apps = Apps {
+        mapper: Arc::new(SleepMapApp),
+        reducer: Some(Arc::new(SleepReducer { consume_ms: 10 })),
+    };
+    let mut engine = LocalEngine::new(4);
+    run(&opts, &apps, &mut engine)
+}
+
+fn main() -> Result<()> {
+    let root = std::env::temp_dir()
+        .join(format!("llmr-bench-overlap-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&root);
+    let input = root.join("input");
+    fs::create_dir_all(&input)
+        .map_err(|e| Error::io(input.clone(), e))?;
+    // 16 files whose costs ramp 0..75ms (block tasks become stragglers).
+    for k in 0..16u64 {
+        let f = input.join(format!("f{k:02}.txt"));
+        fs::write(&f, format!("{}\n", 5 * k))
+            .map_err(|e| Error::io(f.clone(), e))?;
+    }
+
+    println!("== overlapped map->reduce vs Fig 1 barrier ==");
+    println!(
+        "16 ramped inputs (0..75ms), np=8, slots=4, reduce 10ms/file\n"
+    );
+    let barriered = run_mode(&root, &input, false)?;
+    let overlapped = run_mode(&root, &input, true)?;
+    println!("{}", overlap_comparison(&barriered, &overlapped));
+    let speedup = barriered.elapsed().as_secs_f64()
+        / overlapped.elapsed().as_secs_f64().max(1e-12);
+    println!(
+        "barrier removed: {:.2}x ({} -> {})",
+        speedup,
+        llmapreduce::util::fmt_duration(barriered.elapsed()),
+        llmapreduce::util::fmt_duration(overlapped.elapsed()),
+    );
+    let _ = fs::remove_dir_all(&root);
+    Ok(())
+}

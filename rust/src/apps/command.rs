@@ -204,6 +204,11 @@ impl ReduceApp for CommandReducer {
         argv.push(out.display().to_string());
         run_command(&argv)
     }
+
+    // `supports_partial` stays at the opt-in default (false): an
+    // external program's reduce contract is "a directory of real mapper
+    // outputs", and we cannot know whether concatenated partials would
+    // misparse, so the overlapped pipeline barriers for command reducers.
 }
 
 #[cfg(test)]
@@ -323,6 +328,9 @@ mod tests {
         let out = d.join("merged");
         red.reduce(&d, &out).unwrap();
         assert_eq!(fs::read_to_string(&out).unwrap(), "1\n2\n");
+        // External reducers can't fold partials: --overlap must fall
+        // back to the barrier for them.
+        assert!(!red.supports_partial());
     }
 
     #[test]

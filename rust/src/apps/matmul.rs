@@ -285,18 +285,78 @@ impl crate::apps::ReduceApp for FrobeniusSumReducer {
             })
             .collect();
         files.sort();
-        let mut total = 0f64;
-        let mut count = 0usize;
-        for f in &files {
-            total += read_result_frobenius(f)? as f64;
-            count += 1;
-        }
+        let (count, total) = sum_results(&files)?;
         std::fs::write(
             out,
             format!("FILES {count}\nFROBENIUS_SUM {total}\n"),
         )
         .at(out)
     }
+
+    /// Overlapped mode: `read_result_frobenius` reads ONE value per file,
+    /// so the default byte-concatenation would drop all but one matrix
+    /// result per partial.  Instead sum the task's values and emit a
+    /// `FILES <n>` line plus a single `FROBENIUS <sum>` line; the final
+    /// `reduce` pass sums both across partials, so the overlapped output
+    /// matches the barriered one (same f64 parsing on both paths; exact
+    /// up to floating-point summation order).
+    fn reduce_partial(&self, files: &[PathBuf], out: &Path) -> Result<()> {
+        let (count, total) = sum_results(files)?;
+        std::fs::write(
+            out,
+            format!("FILES {count}\nFROBENIUS {total}\n"),
+        )
+        .at(out)
+    }
+
+    fn supports_partial(&self) -> bool {
+        true
+    }
+}
+
+/// The one fold both reduce paths share: total file count and Frobenius
+/// sum over result files (mapper outputs or partials).
+fn sum_results(files: &[PathBuf]) -> Result<(usize, f64)> {
+    let mut total = 0f64;
+    let mut count = 0usize;
+    for f in files {
+        let (nfiles, frob) = read_result_or_partial(f)?;
+        total += frob;
+        count += nfiles;
+    }
+    Ok((count, total))
+}
+
+/// Read either a mapper output (one matrix result, counts as 1 file) or
+/// an overlapped partial (`FILES <n>` + `FROBENIUS <sum>`): returns the
+/// file count it represents and its Frobenius contribution.  One read;
+/// the FROBENIUS value is parsed as f64 on every path (barriered reduce,
+/// partial fold, final merge) so the two modes agree.
+fn read_result_or_partial(path: &Path) -> Result<(usize, f64)> {
+    let text = std::fs::read_to_string(path).at(path)?;
+    let bad = |reason: &str| Error::Format {
+        kind: "matresult",
+        path: path.to_path_buf(),
+        reason: reason.into(),
+    };
+    let mut nfiles = 1usize;
+    let mut frob: Option<f64> = None;
+    for line in text.lines() {
+        if let Some(v) = line.strip_prefix("FILES ") {
+            nfiles = v
+                .trim()
+                .parse()
+                .map_err(|_| bad("bad FILES value"))?;
+        } else if let Some(v) = line.strip_prefix("FROBENIUS ") {
+            frob = Some(
+                v.trim()
+                    .parse()
+                    .map_err(|_| bad("bad FROBENIUS value"))?,
+            );
+        }
+    }
+    frob.map(|f| (nfiles, f))
+        .ok_or_else(|| bad("no FROBENIUS line"))
 }
 
 #[cfg(test)]
@@ -371,6 +431,33 @@ mod tests {
         write_result(&p, 2, &product).unwrap();
         let f = read_result_frobenius(&p).unwrap();
         assert!((f - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn overlapped_partials_match_barriered_reduce() {
+        use crate::apps::ReduceApp;
+        let d = tmp("frobpart");
+        write_result(&d.join("a.out"), 1, &[3.0]).unwrap();
+        write_result(&d.join("b.out"), 1, &[4.0]).unwrap();
+        write_result(&d.join("c.out"), 1, &[5.0]).unwrap();
+        // Overlapped: two partials (task-grouped), then a final merge.
+        let pdir = d.join("partials");
+        fs::create_dir_all(&pdir).unwrap();
+        FrobeniusSumReducer
+            .reduce_partial(
+                &[d.join("a.out"), d.join("b.out")],
+                &pdir.join("part_1"),
+            )
+            .unwrap();
+        FrobeniusSumReducer
+            .reduce_partial(&[d.join("c.out")], &pdir.join("part_2"))
+            .unwrap();
+        let overlapped = pdir.join(".final");
+        FrobeniusSumReducer.reduce(&pdir, &overlapped).unwrap();
+        let text = fs::read_to_string(&overlapped).unwrap();
+        // FILES counts matrices (3), not partials (2); sum is 3+4+5.
+        assert!(text.contains("FILES 3"), "{text}");
+        assert!(text.contains("FROBENIUS_SUM 12"), "{text}");
     }
 
     #[test]

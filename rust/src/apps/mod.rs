@@ -21,7 +21,7 @@ pub mod image;
 pub mod matmul;
 pub mod wordcount;
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use crate::error::Result;
@@ -80,6 +80,46 @@ pub trait ReduceApp: Send + Sync {
 
     /// Scan `map_output_dir` and write the merged result to `out_file`.
     fn reduce(&self, map_output_dir: &Path, out_file: &Path) -> Result<()>;
+
+    /// Whether this reducer can fold partials (overlapped mode).
+    /// **Opt-in**: the default is `false`, and the pipeline falls back
+    /// to the Fig 1 barrier for reducers that never declared support —
+    /// a reducer whose `reduce` depends on seeing the *real* mapper
+    /// output files (boundaries, names, one-record formats) must not be
+    /// silently fed concatenated partials.  Return `true` only after
+    /// checking `reduce_partial` (the concat default or an override) is
+    /// associative with your `reduce`.
+    fn supports_partial(&self) -> bool {
+        false
+    }
+
+    /// Fold one completed mapper task's output `files` into the partial
+    /// file `out_file` — the overlapped pipeline's eager consumption step
+    /// (`--overlap=true`, DESIGN.md §4).  The final [`ReduceApp::reduce`]
+    /// pass later runs over the *directory of partial files*, so the
+    /// partial output format must be readable by `reduce` and the fold
+    /// must be associative: `reduce(partials) == reduce(mapper outputs)`.
+    ///
+    /// The default byte-concatenates the inputs, which is associative for
+    /// line-oriented merges (concatenation, word-count files).  Reducers
+    /// whose `reduce` reads one record per file must override — see
+    /// `FrobeniusSumReducer` in [`crate::apps::matmul`].
+    fn reduce_partial(
+        &self,
+        files: &[PathBuf],
+        out_file: &Path,
+    ) -> Result<()> {
+        let mut merged = Vec::new();
+        for f in files {
+            merged.extend(
+                std::fs::read(f)
+                    .map_err(|e| crate::error::Error::io(f.clone(), e))?,
+            );
+        }
+        std::fs::write(out_file, merged).map_err(|e| {
+            crate::error::Error::io(out_file.to_path_buf(), e)
+        })
+    }
 }
 
 /// Blanket helper: run a full SISO or MIMO task over an instance-producing
@@ -204,6 +244,11 @@ pub(crate) mod testutil {
             "concat-reducer"
         }
 
+        // Concatenation is associative with the default partial fold.
+        fn supports_partial(&self) -> bool {
+            true
+        }
+
         fn reduce(&self, dir: &Path, out: &Path) -> Result<()> {
             let mut names: Vec<PathBuf> = std::fs::read_dir(dir)
                 .map_err(|e| crate::error::Error::io(dir.to_path_buf(), e))?
@@ -323,5 +368,34 @@ mod tests {
         let out = d.join("merged");
         ConcatReducer.reduce(&d, &out).unwrap();
         assert_eq!(fs::read_to_string(out).unwrap(), "A\nB\n");
+    }
+
+    #[test]
+    fn default_reduce_partial_concatenates_then_reduces_associatively() {
+        let d = tmp("partial");
+        fs::write(d.join("a.out"), "A\n").unwrap();
+        fs::write(d.join("b.out"), "B\n").unwrap();
+        fs::write(d.join("c.out"), "C\n").unwrap();
+        // Overlapped shape: two partials over task-grouped outputs...
+        let pdir = d.join("partials");
+        fs::create_dir_all(&pdir).unwrap();
+        ConcatReducer
+            .reduce_partial(
+                &[d.join("a.out"), d.join("b.out")],
+                &pdir.join("part_1"),
+            )
+            .unwrap();
+        ConcatReducer
+            .reduce_partial(&[d.join("c.out")], &pdir.join("part_2"))
+            .unwrap();
+        // ...then the final pass over the partials directory must equal
+        // a direct reduce over all three mapper outputs.
+        let overlapped = d.join("overlapped");
+        ConcatReducer.reduce(&pdir, &overlapped).unwrap();
+        assert_eq!(
+            fs::read_to_string(&overlapped).unwrap(),
+            "A\nB\nC\n",
+            "partial fold is associative for concat"
+        );
     }
 }

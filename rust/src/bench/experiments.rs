@@ -4,8 +4,8 @@
 //! |----------------|-------------------|----------------------------------|
 //! | Table I        | [`table1_matlab`], [`table1_java`] | real local engine |
 //! | Table II       | [`table2`]        | calibrated simulator             |
-//! | Fig 18         | [`fig18_19_sweep`] + [`overhead_series`] | simulator |
-//! | Fig 19         | [`fig18_19_sweep`] + [`speedup_series`]  | simulator |
+//! | Fig 18         | [`fig18_19_sweep`] + [`crate::metrics::report::overhead_series`] | simulator |
+//! | Fig 19         | [`fig18_19_sweep`] + [`crate::metrics::report::speedup_series`]  | simulator |
 //!
 //! We match *shapes*, not the authors' absolute numbers (their testbed was
 //! the MIT SuperCloud; ours is a calibrated DES — DESIGN.md §3).

@@ -265,14 +265,19 @@ impl Config {
         }
     }
 
-    /// Build the configured engine.
+    /// Build the configured engine.  The local engine inherits the
+    /// cluster profile's failure-injection knobs, so `engine = "local"` vs
+    /// `engine = "sim"` replay the same retry pattern (DESIGN.md §4).
     pub fn build_engine(
         &self,
         width: usize,
     ) -> Box<dyn crate::scheduler::Engine> {
         match self.engine {
             EngineKind::Local => {
-                Box::new(crate::scheduler::local::LocalEngine::new(width))
+                Box::new(crate::scheduler::local::LocalEngine::with_policy(
+                    width,
+                    self.cluster.failure_policy(),
+                ))
             }
             EngineKind::Sim => Box::new(crate::scheduler::sim::SimEngine::new(
                 ClusterConfig {
@@ -391,9 +396,23 @@ options = ["-l mem=8G"]
     fn build_engine_kinds() {
         let mut c = Config::default();
         assert_eq!(c.build_engine(2).name(), "local");
+        assert!(!c.build_engine(2).virtual_time());
         c.engine = EngineKind::Sim;
         assert_eq!(c.build_engine(2).name(), "sim");
+        assert!(c.build_engine(2).virtual_time());
         c.engine = EngineKind::SimExec;
         assert_eq!(c.build_engine(2).name(), "sim");
+    }
+
+    #[test]
+    fn local_engine_inherits_cluster_failure_policy() {
+        let c = Config::parse(
+            "[cluster]\nfailure_rate = 0.5\nmax_retries = 3\nseed = 4\n",
+        )
+        .unwrap();
+        let p = c.cluster.failure_policy();
+        assert_eq!(p.failure_rate, 0.5);
+        assert_eq!(p.max_retries, 3);
+        assert_eq!(p.seed, 4);
     }
 }

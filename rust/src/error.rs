@@ -10,27 +10,26 @@ use std::path::PathBuf;
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 /// All the ways an LLMapReduce job can fail.
-#[derive(Debug, thiserror::Error)]
+///
+/// `Display` and `std::error::Error` are implemented by hand (rather
+/// than derived via `thiserror`) so the crate's default build has zero
+/// external dependencies — it compiles offline with a bare toolchain.
+#[derive(Debug)]
 pub enum Error {
     /// Bad or inconsistent command-line / API options (Fig 2 surface).
-    #[error("invalid option: {0}")]
     InvalidOption(String),
 
     /// Input discovery failed (missing directory, unreadable list file...).
-    #[error("input scan failed at {path}: {reason}")]
     InputScan { path: PathBuf, reason: String },
 
     /// No input files matched — the paper's model has nothing to map over.
-    #[error("no input files found under {0}")]
     EmptyInput(PathBuf),
 
     /// Scheduler rejected or lost a job.
-    #[error("scheduler error: {0}")]
     Scheduler(String),
 
     /// A job exceeded the dialect's array-task limit and --np/--ndata
     /// could not be reconciled.
-    #[error("array job of {requested} tasks exceeds {dialect} limit of {limit}")]
     ArrayLimit {
         requested: usize,
         limit: usize,
@@ -38,15 +37,12 @@ pub enum Error {
     },
 
     /// PJRT / XLA runtime failure (artifact load, compile, execute).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Artifact missing or failed manifest validation.
-    #[error("artifact error for '{name}': {reason}")]
     Artifact { name: String, reason: String },
 
     /// A mapper or reducer application failed on a concrete input.
-    #[error("app '{app}' failed on {input}: {reason}")]
     App {
         app: String,
         input: PathBuf,
@@ -54,7 +50,6 @@ pub enum Error {
     },
 
     /// Malformed data file (PPM image, matrix list, manifest JSON ...).
-    #[error("malformed {kind} file {path}: {reason}")]
     Format {
         kind: &'static str,
         path: PathBuf,
@@ -62,20 +57,70 @@ pub enum Error {
     },
 
     /// JSON parse error (hand-rolled parser in util::json).
-    #[error("json error: {0}")]
     Json(String),
 
     /// Configuration file problem.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Plain I/O, with context attached where it happened.
-    #[error("io error at {path}: {source}")]
     Io {
         path: PathBuf,
-        #[source]
         source: std::io::Error,
     },
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::InvalidOption(msg) => write!(f, "invalid option: {msg}"),
+            Error::InputScan { path, reason } => write!(
+                f,
+                "input scan failed at {}: {reason}",
+                path.display()
+            ),
+            Error::EmptyInput(path) => {
+                write!(f, "no input files found under {}", path.display())
+            }
+            Error::Scheduler(msg) => write!(f, "scheduler error: {msg}"),
+            Error::ArrayLimit {
+                requested,
+                limit,
+                dialect,
+            } => write!(
+                f,
+                "array job of {requested} tasks exceeds {dialect} limit \
+                 of {limit}"
+            ),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Artifact { name, reason } => {
+                write!(f, "artifact error for '{name}': {reason}")
+            }
+            Error::App { app, input, reason } => write!(
+                f,
+                "app '{app}' failed on {}: {reason}",
+                input.display()
+            ),
+            Error::Format { kind, path, reason } => write!(
+                f,
+                "malformed {kind} file {}: {reason}",
+                path.display()
+            ),
+            Error::Json(msg) => write!(f, "json error: {msg}"),
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Io { path, source } => {
+                write!(f, "io error at {}: {source}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 impl Error {

@@ -60,6 +60,7 @@ pub mod prelude {
     pub use crate::mapreduce::{run, Apps, MapReduceReport};
     pub use crate::options::{AppType, Distribution, Options, SchedulerKind};
     pub use crate::runtime::Manifest;
+    pub use crate::scheduler::failure::FailurePolicy;
     pub use crate::scheduler::local::LocalEngine;
     pub use crate::scheduler::sim::{ClusterConfig, SimEngine};
     pub use crate::scheduler::{Engine, JobReport};

@@ -54,6 +54,9 @@ RUN OPTIONS (Fig 2 of the paper):
   plus: --slots=N (engine width, default np)
         --engine=local|sim|sim-exec (execution substrate)
         --workdir=DIR (where .MAPRED.PID is created)
+        --overlap=true|false (overlapped map->reduce: the reducer
+          consumes each mapper task's output as it completes instead
+          of barriering on the whole map array job; see DESIGN.md)
 
   Built-in mappers: imageconvert, imagepipeline, matmulchain,
                     wordcount[:ignorefile]
@@ -194,6 +197,21 @@ fn cmd_run(args: &[String]) -> Result<()> {
         llmapreduce::util::fmt_duration(report.map.total_startup()),
         llmapreduce::util::fmt_duration(report.map.total_compute()),
     );
+    println!(
+        "  utilization {:.0}%{}",
+        report.utilization() * 100.0,
+        if report.overlapped {
+            "  (overlapped map->reduce)"
+        } else {
+            ""
+        }
+    );
+    if let Some(p) = &report.partials {
+        println!(
+            "  partial reduces: {} tasks consumed eagerly",
+            p.tasks.len()
+        );
+    }
     if let Some(p) = &report.redout_path {
         println!("  reduce output: {}", p.display());
     }

@@ -11,9 +11,29 @@
 //! The `.MAPRED.PID` directory with submission and run scripts is
 //! generated exactly as on a real cluster, then the job is *executed* on
 //! the configured engine (local threads or the discrete-event simulator).
+//!
+//! # Overlapped reduce (`--overlap=true`, DESIGN.md §4)
+//!
+//! The classic path barriers the single reduce task on the *whole* map
+//! array job (step 3).  The overlapped path instead submits one
+//! partial-reduce task per mapper task with a task-granularity dependency
+//! ([`crate::scheduler::JobSpec::after_tasks`]): each partial folds its
+//! mapper task's outputs the moment that task lands, so reducer
+//! consumption overlaps the remaining map work, and a final cheap merge
+//! over the partials directory produces the same result for associative
+//! reducers (for pure concatenation, record order follows task grouping
+//! rather than global filename order — identical under block
+//! distribution, interleaved under cyclic).  On engines that dispatch in
+//! the background this cuts makespan and raises utilization; engines may
+//! also run it conservatively barriered.  The flag is ignored — falling
+//! back to the barrier — whenever overlap could change *what* is
+//! reduced: no reducer, `--subdir`, or a reducer without partial support
+//! (see [`crate::apps::ReduceApp::supports_partial`]).
 
+use std::fs;
 use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::apps::{MapApp, ReduceApp};
 use crate::error::Result;
@@ -31,7 +51,9 @@ use crate::workdir::MapRedDir;
 pub struct MapReduceReport {
     /// The mapper array job's report.
     pub map: crate::scheduler::JobReport,
-    /// The reducer job's report, when a reducer was given.
+    /// The partial-reduce job's report (overlapped mode only).
+    pub partials: Option<crate::scheduler::JobReport>,
+    /// The (final) reducer job's report, when a reducer was given.
     pub reduce: Option<crate::scheduler::JobReport>,
     /// The plan that produced the jobs.
     pub plan: Plan,
@@ -39,17 +61,38 @@ pub struct MapReduceReport {
     pub redout_path: Option<PathBuf>,
     /// The kept `.MAPRED.PID` directory (only with `--keep`).
     pub mapred_dir: Option<PathBuf>,
+    /// Whether the overlapped map→reduce path ran.
+    pub overlapped: bool,
+    /// End-to-end elapsed time of the whole invocation.  Wall-clock
+    /// engines are measured around the full submit→wait span (jobs may
+    /// overlap, so summing per-job makespans would double-count); virtual
+    /// engines report the sum of job makespans (the simulator serializes
+    /// chained jobs, so the sum *is* its chain elapsed).
+    pub total_elapsed: Duration,
 }
 
 impl MapReduceReport {
-    /// Total elapsed (virtual or wall) time: map + reduce makespans.
-    pub fn elapsed(&self) -> std::time::Duration {
-        self.map.makespan
-            + self
-                .reduce
-                .as_ref()
-                .map(|r| r.makespan)
-                .unwrap_or_default()
+    /// End-to-end elapsed (virtual or wall) time of the invocation.
+    pub fn elapsed(&self) -> Duration {
+        self.total_elapsed
+    }
+
+    /// Fraction of slot-time spent in application work (startup +
+    /// compute) across all jobs of the invocation.  With everything else
+    /// equal, the overlapped path shows higher utilization than the
+    /// barriered one: reduce work fills slots the barrier left idle.
+    pub fn utilization(&self) -> f64 {
+        let slots = self.map.slots.max(1);
+        if self.total_elapsed.is_zero() {
+            return 0.0;
+        }
+        let mut busy = self.map.total_startup() + self.map.total_compute();
+        for r in self.partials.iter().chain(self.reduce.iter()) {
+            busy += r.total_startup() + r.total_compute();
+        }
+        (busy.as_secs_f64()
+            / (self.total_elapsed.as_secs_f64() * slots as f64))
+            .min(1.0)
     }
 }
 
@@ -85,6 +128,7 @@ pub fn run(
     replicate_output_tree(&the_plan)?;
 
     // Step 2: the mapper array job.
+    let t0 = Instant::now();
     let map_tasks: Vec<TaskSpec> = the_plan
         .tasks
         .iter()
@@ -101,8 +145,23 @@ pub fn run(
         .exclusive(opts.exclusive);
     let map_id = engine.submit(map_spec)?;
 
-    // Step 3: the dependent reduce task.
-    let (reduce_id, redout_path) = if let Some(reducer) = &apps.reducer {
+    // Step 3: the dependent reduce — barriered (Fig 1) or overlapped.
+    // --overlap must not change *what* gets reduced, so it falls back to
+    // the barrier when it would: under --subdir (the classic reducer
+    // contract scans only the top level of the output dir, while
+    // partials would consume the nested per-task outputs explicitly)
+    // and for reducers that cannot fold partials (external command
+    // reducers, whose contract is a directory of real mapper outputs).
+    let overlap = opts.overlap
+        && !opts.subdir
+        && apps
+            .reducer
+            .as_ref()
+            .is_some_and(|r| r.supports_partial());
+    let mut partials_dir: Option<PathBuf> = None;
+    let (reduce_id, partial_id, redout_path) = if let Some(reducer) =
+        &apps.reducer
+    {
         let redout = opts.output.join(&opts.redout);
         wd.write(
             "run_reduce",
@@ -112,33 +171,99 @@ pub fn run(
                 &redout,
             ),
         )?;
-        let spec = JobSpec::new(
-            reducer.name(),
-            vec![TaskSpec {
-                task_id: 1,
-                work: TaskWork::Reduce {
-                    app: reducer.clone(),
-                    input_dir: opts.output.clone(),
-                    out_file: redout.clone(),
-                },
-            }],
-        )
-        .after(map_id);
-        (Some(engine.submit(spec)?), Some(redout))
+        // The (final) reduce job is identical in both modes except for
+        // the directory it scans and the job it depends on.
+        let reduce_spec = |input_dir: PathBuf| {
+            JobSpec::new(
+                reducer.name(),
+                vec![TaskSpec {
+                    task_id: 1,
+                    work: TaskWork::Reduce {
+                        app: reducer.clone(),
+                        input_dir,
+                        out_file: redout.clone(),
+                    },
+                }],
+            )
+        };
+        if overlap {
+            // Step 3a: one partial-reduce task per mapper task, each
+            // released the moment *its* mapper task completes.  Clear the
+            // staging dir first: stale partials from an earlier run (a
+            // failure, or --keep) must not leak into the final merge.
+            let pdir = opts.output.join(".partials");
+            let _ = fs::remove_dir_all(&pdir);
+            fs::create_dir_all(&pdir)
+                .map_err(|e| crate::error::Error::io(pdir.clone(), e))?;
+            let partial_tasks: Vec<TaskSpec> = (0..the_plan.tasks.len())
+                .map(|i| TaskSpec {
+                    task_id: i + 1,
+                    work: TaskWork::ReducePartial {
+                        app: reducer.clone(),
+                        files: the_plan.task_outputs(i),
+                        out_file: pdir.join(format!("part_{:05}", i + 1)),
+                    },
+                })
+                .collect();
+            let partial_spec = JobSpec::new(
+                format!("{}.partial", reducer.name()),
+                partial_tasks,
+            )
+            .after_tasks(map_id, the_plan.overlap_edges());
+            let pid = engine.submit(partial_spec)?;
+            // Step 3b: the final merge over the partials directory.
+            let final_spec = reduce_spec(pdir.clone()).after(pid);
+            partials_dir = Some(pdir);
+            (Some(engine.submit(final_spec)?), Some(pid), Some(redout))
+        } else {
+            let spec = reduce_spec(opts.output.clone()).after(map_id);
+            (Some(engine.submit(spec)?), None, Some(redout))
+        }
     } else {
-        (None, None)
+        (None, None, None)
     };
 
-    // Wait for completion (reduce waits on map transitively).
-    let map_report;
-    let reduce_report;
-    if let Some(rid) = reduce_id {
-        reduce_report = Some(engine.wait(rid)?);
-        map_report = engine.wait(map_id)?;
-    } else {
-        map_report = engine.wait(map_id)?;
-        reduce_report = None;
+    // Wait for completion (reduce waits on map transitively).  The
+    // partials staging dir is scratch space like .MAPRED.PID: clear it
+    // on the failure path too, not just after a clean run.
+    type Waited = (
+        crate::scheduler::JobReport,
+        Option<crate::scheduler::JobReport>,
+        Option<crate::scheduler::JobReport>,
+    );
+    let wait_all = |engine: &mut dyn Engine| -> Result<Waited> {
+        if let Some(rid) = reduce_id {
+            let reduce_report = Some(engine.wait(rid)?);
+            let partial_report = match partial_id {
+                Some(pid) => Some(engine.wait(pid)?),
+                None => None,
+            };
+            Ok((engine.wait(map_id)?, partial_report, reduce_report))
+        } else {
+            Ok((engine.wait(map_id)?, None, None))
+        }
+    };
+    let waited = wait_all(&mut *engine);
+    if let Some(pdir) = &partials_dir {
+        if !opts.keep {
+            let _ = fs::remove_dir_all(pdir);
+        }
     }
+    let (map_report, partial_report, reduce_report) = waited?;
+
+    let total_elapsed = if engine.virtual_time() {
+        map_report.makespan
+            + partial_report
+                .as_ref()
+                .map(|r| r.makespan)
+                .unwrap_or_default()
+            + reduce_report
+                .as_ref()
+                .map(|r| r.makespan)
+                .unwrap_or_default()
+    } else {
+        t0.elapsed()
+    };
 
     let mapred_dir = if opts.keep {
         Some(wd.persist())
@@ -148,10 +273,13 @@ pub fn run(
 
     Ok(MapReduceReport {
         map: map_report,
+        partials: partial_report,
         reduce: reduce_report,
         plan: the_plan,
         redout_path,
         mapred_dir,
+        overlapped: overlap,
+        total_elapsed,
     })
 }
 
@@ -299,6 +427,72 @@ mod tests {
         let merged =
             fs::read_to_string(report.redout_path.unwrap()).unwrap();
         assert_eq!(merged.matches("#mapped").count(), 6);
+    }
+
+    #[test]
+    fn overlapped_reduce_end_to_end() {
+        let (input, output) = setup("overlap", 6);
+        let opts = Options::new(&input, &output, "counting-app")
+            .np(3)
+            .reducer("concat-reducer")
+            .overlap(true)
+            .pid(90008);
+        let apps = Apps {
+            mapper: Arc::new(CountingApp::new()),
+            reducer: Some(Arc::new(ConcatReducer)),
+        };
+        let mut eng = LocalEngine::new(2);
+        let report = run(&opts, &apps, &mut eng).unwrap();
+        assert!(report.overlapped);
+        let partials = report.partials.as_ref().unwrap();
+        assert_eq!(partials.tasks.len(), 3, "one partial per map task");
+        // Same final answer as the barriered path.
+        let merged =
+            fs::read_to_string(report.redout_path.clone().unwrap())
+                .unwrap();
+        assert_eq!(merged.matches("#mapped").count(), 6);
+        // Staging directory is scratch: cleaned up without --keep.
+        assert!(!output.join(".partials").exists());
+        assert!(report.utilization() > 0.0);
+        assert!(report.elapsed() > std::time::Duration::ZERO);
+    }
+
+    #[test]
+    fn overlapped_reduce_correct_on_conservative_sim_engine() {
+        let (input, output) = setup("overlapsim", 4);
+        let opts = Options::new(&input, &output, "counting-app")
+            .np(2)
+            .reducer("concat-reducer")
+            .overlap(true)
+            .pid(90009);
+        let apps = Apps {
+            mapper: Arc::new(CountingApp::new()),
+            reducer: Some(Arc::new(ConcatReducer)),
+        };
+        let mut eng = SimEngine::new(ClusterConfig::with_width(2))
+            .execute_payloads(true);
+        let report = run(&opts, &apps, &mut eng).unwrap();
+        let merged =
+            fs::read_to_string(report.redout_path.unwrap()).unwrap();
+        assert_eq!(merged.matches("#mapped").count(), 4);
+        assert!(report.total_elapsed > std::time::Duration::ZERO);
+    }
+
+    #[test]
+    fn overlap_without_reducer_is_a_noop() {
+        let (input, output) = setup("overlapnop", 2);
+        let opts = Options::new(&input, &output, "counting-app")
+            .overlap(true)
+            .pid(90010);
+        let apps = Apps {
+            mapper: Arc::new(CountingApp::new()),
+            reducer: None,
+        };
+        let mut eng = LocalEngine::new(1);
+        let report = run(&opts, &apps, &mut eng).unwrap();
+        assert!(!report.overlapped);
+        assert!(report.partials.is_none());
+        assert!(!output.join(".partials").exists());
     }
 
     #[test]

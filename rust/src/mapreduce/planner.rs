@@ -54,6 +54,25 @@ impl Plan {
             }
         }
     }
+
+    /// Output files owned by the task at index `idx` — what an overlapped
+    /// partial-reduce stage consumes the moment that mapper task lands.
+    pub fn task_outputs(
+        &self,
+        idx: usize,
+    ) -> Vec<PathBuf> {
+        self.tasks
+            .get(idx)
+            .map(|t| t.pairs.iter().map(|(_, out)| out.clone()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Identity task-dependency edges for the overlapped reduce: partial
+    /// task *i* becomes eligible when map task *i* completes (the
+    /// task-granularity analogue of Fig 1's job dependency).
+    pub fn overlap_edges(&self) -> Vec<(usize, usize)> {
+        (0..self.tasks.len()).map(|i| (i, i)).collect()
+    }
 }
 
 /// Decide the number of array tasks for `nfiles` inputs under `opts`,
@@ -326,6 +345,17 @@ mod tests {
             .map(|(i, _)| i.to_str().unwrap().to_string())
             .collect();
         assert_eq!(t1, vec!["/in/f0000.dat", "/in/f0003.dat", "/in/f0006.dat"]);
+    }
+
+    #[test]
+    fn overlap_helpers_mirror_task_layout() {
+        let opts = Options::new("/in", "/out", "m").np(3);
+        let p = plan(&files(6), &opts, ge().as_ref()).unwrap();
+        assert_eq!(p.overlap_edges(), vec![(0, 0), (1, 1), (2, 2)]);
+        let outs = p.task_outputs(0);
+        assert_eq!(outs.len(), 2, "6 files over 3 block tasks");
+        assert_eq!(outs[0], PathBuf::from("/out/f0000.dat.out"));
+        assert!(p.task_outputs(99).is_empty(), "out of range is empty");
     }
 
     #[test]

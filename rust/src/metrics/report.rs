@@ -5,6 +5,7 @@
 
 use std::time::Duration;
 
+use crate::mapreduce::MapReduceReport;
 use crate::metrics::{Measurement, Sweep};
 use crate::util::json::{obj, Json};
 use crate::util::{fmt_count, fmt_duration};
@@ -66,6 +67,38 @@ pub fn speedup_table(
                 fmt_duration(mimo.elapsed),
                 format!("{speedup:.2}"),
             ],
+        ],
+    )
+}
+
+/// Barriered vs overlapped map→reduce (DESIGN.md §4): end-to-end
+/// makespan, slot utilization, and the speed-up the removed barrier buys.
+/// Overlap shows up on both axes — lower makespan because reduce work
+/// fills slots the Fig 1 barrier left idle, higher utilization because
+/// the same busy time divides by a shorter span.
+pub fn overlap_comparison(
+    barriered: &MapReduceReport,
+    overlapped: &MapReduceReport,
+) -> String {
+    let speedup = barriered.elapsed().as_secs_f64()
+        / overlapped.elapsed().as_secs_f64().max(1e-12);
+    let row = |label: &str, r: &MapReduceReport, s: String| {
+        vec![
+            label.to_string(),
+            fmt_duration(r.elapsed()),
+            format!("{:.0}%", r.utilization() * 100.0),
+            s,
+        ]
+    };
+    render_table(
+        &["Mode", "Makespan", "Utilization", "Speed up"],
+        &[
+            row("barriered (Fig 1 job dependency)", barriered, "1".into()),
+            row(
+                "overlapped (task dependencies)",
+                overlapped,
+                format!("{speedup:.2}"),
+            ),
         ],
     )
 }
@@ -233,6 +266,43 @@ mod tests {
         }
         // Fig 19 baseline row: DEFAULT@1 speed-up is 1.00.
         assert!(p.contains("1.00"));
+    }
+
+    #[test]
+    fn overlap_comparison_shows_makespan_and_utilization() {
+        use crate::mapreduce::planner::Plan;
+        use crate::options::AppType;
+        use crate::scheduler::{JobReport, TaskReport};
+        let job = |startup_ms: u64, compute_ms: u64| JobReport {
+            slots: 2,
+            tasks: vec![TaskReport {
+                startup: Duration::from_millis(startup_ms),
+                compute: Duration::from_millis(compute_ms),
+                ..Default::default()
+            }],
+            ..Default::default()
+        };
+        let mk = |elapsed_ms: u64, overlapped: bool| MapReduceReport {
+            map: job(20, 100),
+            partials: overlapped.then(|| job(0, 40)),
+            reduce: Some(job(0, 20)),
+            plan: Plan {
+                tasks: vec![],
+                apptype: AppType::Siso,
+                nfiles: 0,
+            },
+            redout_path: None,
+            mapred_dir: None,
+            overlapped,
+            total_elapsed: Duration::from_millis(elapsed_ms),
+        };
+        let barriered = mk(200, false);
+        let overlapped = mk(130, true);
+        assert!(overlapped.utilization() > barriered.utilization());
+        let t = overlap_comparison(&barriered, &overlapped);
+        assert!(t.contains("barriered"), "{t}");
+        assert!(t.contains("overlapped"), "{t}");
+        assert!(t.contains("1.54"), "barrier/overlap speed-up row: {t}");
     }
 
     #[test]

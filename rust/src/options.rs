@@ -147,6 +147,15 @@ pub struct Options {
     pub keep: bool,
     /// `--apptype`: siso|mimo.
     pub apptype: AppType,
+    /// `--overlap`: overlapped map→reduce (reproduction extra, not in
+    /// Fig 2).  When true and a reducer is given, reducer consumption
+    /// starts per-mapper-task-completion via task-granularity scheduler
+    /// dependencies instead of barriering on the whole map array job
+    /// (DESIGN.md §4).  Ignored without a reducer, and falls back to the
+    /// barrier under `--subdir` (the classic reducer scans only the top
+    /// level of the output dir; overlap must not change the reduced file
+    /// set).
+    pub overlap: bool,
     /// `--options`: extra raw scheduler directives, passed through into the
     /// generated submission script.
     pub scheduler_options: Vec<String>,
@@ -177,6 +186,7 @@ impl Default for Options {
             exclusive: false,
             keep: false,
             apptype: AppType::Siso,
+            overlap: false,
             scheduler_options: Vec::new(),
             scheduler: SchedulerKind::GridEngine,
             pid: None,
@@ -247,6 +257,10 @@ impl Options {
         self.apptype = t;
         self
     }
+    pub fn overlap(mut self, on: bool) -> Self {
+        self.overlap = on;
+        self
+    }
     pub fn scheduler(mut self, s: SchedulerKind) -> Self {
         self.scheduler = s;
         self
@@ -312,6 +326,7 @@ impl Options {
                 "--exclusive" => opts.exclusive = parse_bool(&key, &take()?)?,
                 "--keep" => opts.keep = parse_bool(&key, &take()?)?,
                 "--apptype" => opts.apptype = AppType::parse(&take()?)?,
+                "--overlap" => opts.overlap = parse_bool(&key, &take()?)?,
                 "--options" => opts.scheduler_options.push(take()?),
                 "--scheduler" => {
                     opts.scheduler = SchedulerKind::parse(&take()?)?
@@ -498,6 +513,19 @@ mod tests {
             args.push(bad);
             assert!(Options::parse_args(args).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn overlap_flag_parses_and_defaults_off() {
+        let o = Options::parse_args(base()).unwrap();
+        assert!(!o.overlap, "overlap is opt-in");
+        let mut args = base();
+        args.push("--overlap=true");
+        assert!(Options::parse_args(args).unwrap().overlap);
+        let mut args = base();
+        args.push("--overlap=sideways");
+        assert!(Options::parse_args(args).is_err());
+        assert!(Options::new("i", "o", "m").overlap(true).overlap);
     }
 
     #[test]

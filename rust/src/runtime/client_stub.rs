@@ -1,0 +1,54 @@
+//! Stub PJRT client: compiled when the `xla-runtime` feature is off.
+//!
+//! Keeps the crate buildable with zero external dependencies (DESIGN.md
+//! §3): every call reports the runtime as unavailable, so artifact-backed
+//! apps fail at `MapApp::startup()` with a clear message while the
+//! launcher, planner, engines, simulator and text/bench workloads — the
+//! parts under study — run fully.
+
+use crate::error::{Error, Result};
+
+/// Stand-in for `xla::PjRtClient`; never successfully constructed.
+#[derive(Debug, Clone)]
+pub struct StubClient;
+
+impl StubClient {
+    pub fn platform_name(&self) -> &'static str {
+        "stub"
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+}
+
+fn unavailable() -> Error {
+    Error::Runtime(
+        "PJRT unavailable: this binary was built without the \
+         `xla-runtime` cargo feature (rebuild with \
+         `--features xla-runtime` where the xla crate and \
+         xla_extension library are installed)"
+            .into(),
+    )
+}
+
+/// Get this thread's PJRT CPU client — always unavailable in the stub.
+pub fn thread_client() -> Result<StubClient> {
+    Err(unavailable())
+}
+
+/// Back-compat alias used by `main.rs` inspect.
+pub fn global_client() -> Result<StubClient> {
+    thread_client()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let err = thread_client().unwrap_err().to_string();
+        assert!(err.contains("xla-runtime"), "{err}");
+    }
+}

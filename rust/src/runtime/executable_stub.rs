@@ -1,0 +1,78 @@
+//! Stub XLA executable: compiled when the `xla-runtime` feature is off.
+//!
+//! Mirrors the public surface of the real
+//! `runtime::executable::XlaExecutable` so the apps layer compiles
+//! unchanged; `load` always fails, so SISO/MIMO launch accounting and the
+//! schedulers stay testable without the native XLA library.
+
+use std::path::Path;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::runtime::artifacts::{ArtifactEntry, InputSpec};
+
+/// A compiled, executable artifact (stub: cannot be constructed).
+pub struct XlaExecutable {
+    name: String,
+    inputs: Vec<InputSpec>,
+}
+
+impl XlaExecutable {
+    /// Parse and compile the HLO text at `path` — always fails in the
+    /// stub build.
+    pub fn load(
+        name: &str,
+        path: &Path,
+        _inputs: &[InputSpec],
+    ) -> Result<Self> {
+        Err(Error::Runtime(format!(
+            "cannot compile '{name}' from {}: built without the \
+             `xla-runtime` cargo feature",
+            path.display()
+        )))
+    }
+
+    /// Load straight from a manifest entry.
+    pub fn from_entry(entry: &ArtifactEntry) -> Result<Self> {
+        Self::load(&entry.name, &entry.path, &entry.inputs)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn compile_time(&self) -> Duration {
+        Duration::ZERO
+    }
+
+    pub fn input_specs(&self) -> &[InputSpec] {
+        &self.inputs
+    }
+
+    /// Execute on f32 buffers — unreachable in the stub build (`load`
+    /// never succeeds), kept for API parity.
+    pub fn run_f32(&self, _args: &[&[f32]]) -> Result<Vec<f32>> {
+        Err(Error::Runtime(format!(
+            "cannot execute '{}': built without the `xla-runtime` \
+             cargo feature",
+            self.name
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_load_fails_with_feature_hint() {
+        let err = XlaExecutable::load(
+            "matmul_pair",
+            Path::new("/nonexistent.hlo.txt"),
+            &[],
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("xla-runtime"), "{err}");
+    }
+}

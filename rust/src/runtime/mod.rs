@@ -11,7 +11,22 @@
 //! ```
 
 pub mod artifacts;
+
+// The PJRT client and executable need the external `xla` crate (and the
+// xla_extension native library).  They are gated behind the
+// `xla-runtime` cargo feature so the default build compiles offline with
+// a bare toolchain; without the feature, drop-in stubs report the
+// runtime as unavailable and every artifact-backed app fails cleanly at
+// `startup()` (callers already skip when artifacts are absent).
+#[cfg(feature = "xla-runtime")]
 pub mod client;
+#[cfg(not(feature = "xla-runtime"))]
+#[path = "client_stub.rs"]
+pub mod client;
+#[cfg(feature = "xla-runtime")]
+pub mod executable;
+#[cfg(not(feature = "xla-runtime"))]
+#[path = "executable_stub.rs"]
 pub mod executable;
 
 pub use artifacts::{find_artifacts_dir, ArtifactEntry, InputSpec, Manifest};

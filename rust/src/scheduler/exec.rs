@@ -46,6 +46,20 @@ pub fn execute(work: &TaskWork) -> Result<ExecOutcome> {
                 items: 1,
             })
         }
+        TaskWork::ReducePartial {
+            app,
+            files,
+            out_file,
+        } => {
+            let t0 = std::time::Instant::now();
+            app.reduce_partial(files, out_file)?;
+            Ok(ExecOutcome {
+                startup: Duration::ZERO,
+                compute: t0.elapsed(),
+                launches: 1,
+                items: files.len(),
+            })
+        }
         TaskWork::Synthetic {
             startup,
             per_item,
@@ -96,6 +110,12 @@ pub fn virtual_cost(work: &TaskWork) -> ExecOutcome {
             compute: Duration::from_millis(1),
             launches: 1,
             items: 1,
+        },
+        TaskWork::ReducePartial { files, .. } => ExecOutcome {
+            startup: Duration::ZERO,
+            compute: Duration::from_millis(1),
+            launches: 1,
+            items: files.len(),
         },
         TaskWork::Synthetic {
             startup,

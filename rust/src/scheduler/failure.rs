@@ -1,0 +1,124 @@
+//! Failure injection shared by both engines.
+//!
+//! The simulator has always injected task failures (nodes die on real
+//! clusters); the local engine historically did not, so the two engines
+//! disagreed on retry behaviour.  [`FailurePolicy`] is the single
+//! decision rule both now consult: whether attempt `a` of task `t` fails
+//! is a **pure function of (seed, task_id, attempt)** — independent of
+//! dispatch interleaving, worker count, or which engine asks — so a job
+//! replayed on [`crate::scheduler::local::LocalEngine`] and
+//! [`crate::scheduler::sim::SimEngine`] with the same policy produces
+//! identical per-task retry counts (DESIGN.md §4).
+
+use crate::util::rng::Rng;
+
+/// Deterministic per-attempt failure injection.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailurePolicy {
+    /// Probability that any single attempt fails (0 disables injection).
+    pub failure_rate: f64,
+    /// Retry budget: attempts at index `max_retries` and beyond are never
+    /// failed by injection, so a task cannot fail *terminally* through the
+    /// policy alone (injection models transient faults).
+    pub max_retries: usize,
+    /// Seed: identical seeds replay identical failure patterns.
+    pub seed: u64,
+}
+
+impl Default for FailurePolicy {
+    fn default() -> Self {
+        // Mirrors `ClusterConfig::default()` so local and sim agree out
+        // of the box (with rate 0, injection is off).
+        FailurePolicy {
+            failure_rate: 0.0,
+            max_retries: 2,
+            seed: 0x5EED,
+        }
+    }
+}
+
+impl FailurePolicy {
+    /// Does attempt `attempt` (0-based) of task `task_id` fail?
+    ///
+    /// Attempts at or past `max_retries` never fail — retry budget
+    /// exhausted means the fault injector steps aside, exactly like the
+    /// simulator's historical `retries < max_retries` guard.
+    pub fn should_fail(&self, task_id: usize, attempt: usize) -> bool {
+        if self.failure_rate <= 0.0 || attempt >= self.max_retries {
+            return false;
+        }
+        // Independent stream per (task, attempt): mix both into the seed
+        // with distinct odd constants so neighbouring tasks/attempts do
+        // not correlate.
+        let mut rng = Rng::new(
+            self.seed
+                ^ (task_id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ (attempt as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F),
+        );
+        rng.next_f64() < self.failure_rate
+    }
+
+    /// Retries a task with this id consumes before its first success.
+    pub fn expected_retries(&self, task_id: usize) -> usize {
+        (0usize..)
+            .take_while(|&a| self.should_fail(task_id, a))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_zero_never_fails() {
+        let p = FailurePolicy::default();
+        for t in 0..100 {
+            assert!(!p.should_fail(t, 0));
+        }
+    }
+
+    #[test]
+    fn rate_one_fails_until_budget_exhausted() {
+        let p = FailurePolicy {
+            failure_rate: 1.0,
+            max_retries: 3,
+            seed: 1,
+        };
+        for t in 1..10 {
+            assert!(p.should_fail(t, 0));
+            assert!(p.should_fail(t, 1));
+            assert!(p.should_fail(t, 2));
+            // The attempt after the last retry always succeeds.
+            assert!(!p.should_fail(t, 3));
+            assert_eq!(p.expected_retries(t), 3);
+        }
+    }
+
+    #[test]
+    fn decision_is_deterministic_and_seed_sensitive() {
+        let a = FailurePolicy {
+            failure_rate: 0.5,
+            max_retries: 8,
+            seed: 11,
+        };
+        let b = FailurePolicy { seed: 12, ..a };
+        let pattern = |p: &FailurePolicy| -> Vec<bool> {
+            (1..64).map(|t| p.should_fail(t, 0)).collect()
+        };
+        assert_eq!(pattern(&a), pattern(&a), "pure function");
+        assert_ne!(pattern(&a), pattern(&b), "seed changes the pattern");
+    }
+
+    #[test]
+    fn observed_rate_near_requested() {
+        let p = FailurePolicy {
+            failure_rate: 0.3,
+            max_retries: 1,
+            seed: 99,
+        };
+        let fails = (1..=2000).filter(|&t| p.should_fail(t, 0)).count();
+        let rate = fails as f64 / 2000.0;
+        assert!((0.25..0.35).contains(&rate), "rate={rate}");
+    }
+}

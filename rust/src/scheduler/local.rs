@@ -5,142 +5,191 @@
 //! Concurrency is capped by `slots` (the analogue of the cluster's width —
 //! on this container effectively 1 core, which is why the scaling *curves*
 //! come from the simulator; see DESIGN.md §3).
+//!
+//! # Architecture (DESIGN.md §4)
+//!
+//! The engine is a true background dispatcher, mirroring how Fig 1's
+//! launcher hands jobs to a resident cluster scheduler:
+//!
+//! * [`LocalEngine::submit`] validates the dependency edge, drops the job
+//!   in the dispatcher's inbox and **returns before anything executes**;
+//! * a *dispatcher thread* admits inbox jobs, tracks job- and
+//!   task-granularity dependency edges ([`JobSpec::task_deps`]), and
+//!   promotes eligible tasks from **any** submitted job onto one shared
+//!   ready queue — independent jobs interleave under the single `slots`
+//!   cap instead of running one-at-a-time;
+//! * a persistent pool of `slots` *worker threads* executes ready tasks
+//!   and reports completions back to the dispatcher, which unlocks
+//!   dependent tasks the moment their upstream finishes (the overlapped
+//!   map→reduce path) and completes jobs when their last task lands;
+//! * [`LocalEngine::wait`] just blocks on the job's outcome.
+//!
+//! Failure injection follows the same [`FailurePolicy`] rule as
+//! [`crate::scheduler::sim::SimEngine`], so per-task retry counts are
+//! identical across the two engines for the same (seed, task id) — one
+//! behavioral contract, two clocks.
 
-use std::collections::HashMap;
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::error::{Error, Result};
 use crate::scheduler::exec::execute;
-use crate::scheduler::{Engine, JobId, JobReport, JobSpec, TaskReport};
+use crate::scheduler::failure::FailurePolicy;
+use crate::scheduler::{
+    Engine, JobId, JobReport, JobSpec, TaskReport, TaskSpec,
+};
 
-/// Thread-pool engine with array-job and dependency semantics.
-pub struct LocalEngine {
+/// Eligibility gate of one task.
+#[derive(Debug, Clone)]
+enum Gate {
+    /// Ready to dispatch (and already on, or about to join, the queue).
+    Open,
+    /// Waiting for the whole dependency job (Fig 1 barrier).
+    Job,
+    /// Waiting for `n` specific upstream tasks (overlapped reduce).
+    Tasks(usize),
+}
+
+/// Dispatcher-owned state of one submitted job.
+struct Job {
+    name: String,
+    tasks: Arc<Vec<TaskSpec>>,
+    /// Original task count — survives `shed()`, because late submits of
+    /// dependents validate their task edges against it.
+    ntasks: usize,
+    submitted_at: Instant,
+    gates: Vec<Gate>,
+    /// When each task became dispatchable (for `dispatch_wait`).
+    eligible_at: Vec<Option<Instant>>,
+    /// Injected-failure attempts consumed so far, per task.
+    attempts: Vec<usize>,
+    reports: Vec<Option<TaskReport>>,
+    done_tasks: Vec<bool>,
+    /// Tasks not yet successfully completed.
+    remaining: usize,
+    /// Jobs whose whole-job barrier waits on this job.
+    barrier_dependents: Vec<JobId>,
+    /// task index here → dependent (job, task index) edges to release.
+    task_dependents: HashMap<usize, Vec<(JobId, usize)>>,
+    /// Completed report or failure message; `Some` means the job is over.
+    outcome: Option<Result<JobReport, String>>,
+}
+
+impl Job {
+    /// Drop the per-task state once an outcome is set.  `wait()` only
+    /// ever clones the outcome, and every code path that touches the
+    /// per-task vectors checks `outcome.is_none()` first — so after
+    /// completion the task specs (which can hold thousands of input
+    /// pairs) are dead weight a long-lived engine would otherwise retain
+    /// forever.
+    fn shed(&mut self) {
+        self.tasks = Arc::new(Vec::new());
+        self.gates = Vec::new();
+        self.eligible_at = Vec::new();
+        self.attempts = Vec::new();
+        self.reports = Vec::new();
+        self.done_tasks = Vec::new();
+    }
+}
+
+/// Completion messages from workers to the dispatcher.
+enum Event {
+    TaskDone {
+        job: JobId,
+        idx: usize,
+        report: TaskReport,
+    },
+    /// A real (non-injected) task error: fails the job and, cascading,
+    /// every dependent job.
+    TaskFailed { job: JobId, msg: String },
+}
+
+/// Everything behind the shared mutex.
+struct Core {
+    /// Submitted jobs awaiting dispatcher admission.
+    inbox: VecDeque<(JobId, JobSpec, Instant)>,
+    /// Completion events awaiting dispatcher processing.
+    events: VecDeque<Event>,
+    /// Dispatchable (job, task index) pairs, shared by all jobs.
+    ready: VecDeque<(JobId, usize)>,
+    jobs: HashMap<JobId, Job>,
+    shutdown: bool,
+}
+
+struct Inner {
+    state: Mutex<Core>,
+    /// Wakes workers when `ready` grows (or on shutdown).
+    work_cv: Condvar,
+    /// Wakes the dispatcher when `inbox`/`events` grow (or on shutdown).
+    event_cv: Condvar,
+    /// Wakes `wait()`ers when any job reaches an outcome.
+    done_cv: Condvar,
+    policy: FailurePolicy,
     slots: usize,
+}
+
+impl Inner {
+    /// Poison-tolerant lock: a panicking worker must not wedge `wait()`.
+    fn lock(&self) -> MutexGuard<'_, Core> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Thread-pool engine with array-job, dependency and failure-injection
+/// semantics.
+pub struct LocalEngine {
+    inner: Arc<Inner>,
     next_id: u64,
-    /// Finished jobs (including those waited on already).
-    finished: HashMap<JobId, JobReport>,
-    /// Jobs submitted but not yet run.  The local engine runs jobs at
-    /// `wait()` time in dependency order — simpler than a background
-    /// dispatcher and identical observable behaviour for a launcher that
-    /// always waits (Fig 1: reduce waits on map).
-    pending: Vec<(JobId, JobSpec)>,
+    workers: Vec<JoinHandle<()>>,
+    dispatcher: Option<JoinHandle<()>>,
 }
 
 impl LocalEngine {
     /// `slots`: maximum concurrently-running tasks (the `--np` width).
     pub fn new(slots: usize) -> Self {
-        LocalEngine {
-            slots: slots.max(1),
-            next_id: 1,
-            finished: HashMap::new(),
-            pending: Vec::new(),
-        }
+        Self::with_policy(slots, FailurePolicy::default())
     }
 
-    fn run_job(&mut self, id: JobId, spec: JobSpec) -> Result<JobReport> {
-        // Dependencies first (transitively).
-        if let Some(dep) = spec.depends_on {
-            if !self.finished.contains_key(&dep) {
-                let dep_spec = self.take_pending(dep)?;
-                let report = self.run_job(dep, dep_spec)?;
-                self.finished.insert(dep, report);
-            }
-        }
-
-        let submit_t = Instant::now();
-        let n = spec.tasks.len();
-        let reports: Arc<Mutex<Vec<Option<TaskReport>>>> =
-            Arc::new(Mutex::new(vec![None; n]));
-        let first_err: Arc<Mutex<Option<Error>>> = Arc::new(Mutex::new(None));
-
-        // Simple work queue: channel of task indices, `slots` workers.
-        let (tx, rx) = mpsc::channel::<usize>();
-        let rx = Arc::new(Mutex::new(rx));
-        for i in 0..n {
-            tx.send(i).expect("queue send");
-        }
-        drop(tx);
-
-        let workers = self.slots.min(n.max(1));
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                let rx = rx.clone();
-                let reports = reports.clone();
-                let first_err = first_err.clone();
-                let tasks = &spec.tasks;
-                scope.spawn(move || {
-                    loop {
-                        let idx = {
-                            let guard = rx.lock().expect("rx lock");
-                            match guard.recv() {
-                                Ok(i) => i,
-                                Err(_) => break,
-                            }
-                        };
-                        let task = &tasks[idx];
-                        let started_at = submit_t.elapsed();
-                        let result = execute(&task.work);
-                        let finished_at = submit_t.elapsed();
-                        match result {
-                            Ok(out) => {
-                                let report = TaskReport {
-                                    task_id: task.task_id,
-                                    // No scheduler in the local engine.
-                                    dispatch_wait: Duration::ZERO,
-                                    startup: out.startup,
-                                    compute: out.compute,
-                                    launches: out.launches,
-                                    items: out.items,
-                                    started_at,
-                                    finished_at,
-                                    retries: 0,
-                                };
-                                reports.lock().expect("reports")[idx] =
-                                    Some(report);
-                            }
-                            Err(e) => {
-                                let mut slot =
-                                    first_err.lock().expect("err lock");
-                                if slot.is_none() {
-                                    *slot = Some(e);
-                                }
-                            }
-                        }
-                    }
-                });
-            }
+    /// An engine whose workers inject task failures per `policy`
+    /// (matching [`crate::scheduler::sim::SimEngine`] retry counts).
+    pub fn with_policy(slots: usize, policy: FailurePolicy) -> Self {
+        let slots = slots.max(1);
+        let inner = Arc::new(Inner {
+            state: Mutex::new(Core {
+                inbox: VecDeque::new(),
+                events: VecDeque::new(),
+                ready: VecDeque::new(),
+                jobs: HashMap::new(),
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            event_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            policy,
+            slots,
         });
-
-        if let Some(e) = first_err.lock().expect("err lock").take() {
-            return Err(e);
-        }
-        let tasks: Vec<TaskReport> = Arc::try_unwrap(reports)
-            .expect("workers joined")
-            .into_inner()
-            .expect("reports lock")
-            .into_iter()
-            .map(|r| r.expect("every task reported"))
+        let workers = (0..slots)
+            .map(|_| {
+                let inner = inner.clone();
+                std::thread::spawn(move || worker_loop(&inner))
+            })
             .collect();
-        Ok(JobReport {
-            job_id: id.0,
-            name: spec.name,
-            makespan: submit_t.elapsed(),
-            slots: self.slots,
-            tasks,
-        })
+        let dispatcher = {
+            let inner = inner.clone();
+            Some(std::thread::spawn(move || dispatcher_loop(&inner)))
+        };
+        LocalEngine {
+            inner,
+            next_id: 1,
+            workers,
+            dispatcher,
+        }
     }
 
-    fn take_pending(&mut self, id: JobId) -> Result<JobSpec> {
-        let pos = self
-            .pending
-            .iter()
-            .position(|(jid, _)| *jid == id)
-            .ok_or_else(|| {
-                Error::Scheduler(format!("unknown dependency job {id}"))
-            })?;
-        Ok(self.pending.remove(pos).1)
+    pub fn slots(&self) -> usize {
+        self.inner.slots
     }
 }
 
@@ -150,29 +199,482 @@ impl Engine for LocalEngine {
     }
 
     fn submit(&mut self, spec: JobSpec) -> Result<JobId> {
-        if let Some(dep) = spec.depends_on {
-            let known = self.finished.contains_key(&dep)
-                || self.pending.iter().any(|(jid, _)| *jid == dep);
-            if !known {
-                return Err(Error::Scheduler(format!(
-                    "dependency {dep} was never submitted"
-                )));
-            }
-        }
+        let mut core = self.inner.lock();
+        crate::scheduler::validate_submit(&spec, |dep| {
+            // `ntasks`, not `tasks.len()`: a completed job has shed its
+            // task specs, but late dependents still validate against it.
+            core.jobs.get(&dep).map(|j| j.ntasks).or_else(|| {
+                core.inbox
+                    .iter()
+                    .find(|(id, _, _)| *id == dep)
+                    .map(|(_, s, _)| s.tasks.len())
+            })
+        })?;
         let id = JobId(self.next_id);
         self.next_id += 1;
-        self.pending.push((id, spec));
+        core.inbox.push_back((id, spec, Instant::now()));
+        drop(core);
+        self.inner.event_cv.notify_one();
         Ok(id)
     }
 
     fn wait(&mut self, id: JobId) -> Result<JobReport> {
-        if let Some(r) = self.finished.get(&id) {
-            return Ok(r.clone());
+        let mut core = self.inner.lock();
+        loop {
+            if let Some(job) = core.jobs.get(&id) {
+                if let Some(outcome) = &job.outcome {
+                    return match outcome {
+                        Ok(r) => Ok(r.clone()),
+                        Err(msg) => Err(Error::Scheduler(msg.clone())),
+                    };
+                }
+            } else if !core.inbox.iter().any(|(jid, _, _)| *jid == id) {
+                return Err(Error::Scheduler(format!("unknown job {id}")));
+            }
+            core = self
+                .inner
+                .done_cv
+                .wait(core)
+                .unwrap_or_else(|e| e.into_inner());
         }
-        let spec = self.take_pending(id)?;
-        let report = self.run_job(id, spec)?;
-        self.finished.insert(id, report.clone());
-        Ok(report)
+    }
+}
+
+impl Drop for LocalEngine {
+    fn drop(&mut self) {
+        self.inner.lock().shutdown = true;
+        self.inner.work_cv.notify_all();
+        self.inner.event_cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatcher
+// ---------------------------------------------------------------------------
+
+fn dispatcher_loop(inner: &Inner) {
+    loop {
+        let mut core = inner.lock();
+        while !core.shutdown
+            && core.inbox.is_empty()
+            && core.events.is_empty()
+        {
+            core = inner
+                .event_cv
+                .wait(core)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+        if core.shutdown {
+            return;
+        }
+        let ready_before = core.ready.len();
+        while let Some((jid, spec, submitted_at)) = core.inbox.pop_front() {
+            admit(&mut core, inner.slots, jid, spec, submitted_at);
+        }
+        while let Some(ev) = core.events.pop_front() {
+            match ev {
+                Event::TaskDone { job, idx, report } => {
+                    on_task_done(&mut core, inner.slots, job, idx, report);
+                }
+                Event::TaskFailed { job, msg } => {
+                    fail_job(&mut core, job, msg);
+                }
+            }
+        }
+        // Workers cannot pop `ready` while the dispatcher holds the
+        // lock, so a length delta across this round means new
+        // dispatchable work.  (The worker retry path also pushes to
+        // `ready`, but it wakes a worker itself.)  Waiters are few
+        // (wait() callers); waking them every round is cheap, waking
+        // all `slots` workers is not.
+        let new_work = core.ready.len() > ready_before;
+        drop(core);
+        if new_work {
+            inner.work_cv.notify_all();
+        }
+        inner.done_cv.notify_all();
+    }
+}
+
+fn empty_report(
+    jid: JobId,
+    name: &str,
+    submitted_at: Instant,
+    slots: usize,
+) -> JobReport {
+    JobReport {
+        job_id: jid.0,
+        name: name.to_string(),
+        makespan: submitted_at.elapsed(),
+        slots,
+        tasks: Vec::new(),
+    }
+}
+
+/// Admit one inbox job: resolve its dependency edges into per-task gates,
+/// register reverse edges on the upstream job, and queue whatever is
+/// already eligible.
+fn admit(
+    core: &mut Core,
+    slots: usize,
+    jid: JobId,
+    spec: JobSpec,
+    submitted_at: Instant,
+) {
+    let JobSpec {
+        name,
+        tasks,
+        depends_on,
+        task_deps,
+        exclusive: _, // no nodes locally; one slot is one slot
+    } = spec;
+    let n = tasks.len();
+    let mut job = Job {
+        name,
+        tasks: Arc::new(tasks),
+        ntasks: n,
+        submitted_at,
+        gates: vec![Gate::Open; n],
+        eligible_at: vec![None; n],
+        attempts: vec![0; n],
+        reports: vec![None; n],
+        done_tasks: vec![false; n],
+        remaining: n,
+        barrier_dependents: Vec::new(),
+        task_dependents: HashMap::new(),
+        outcome: None,
+    };
+
+    // Whether this job was registered to wait on the upstream's
+    // whole-job completion signal (drives zero-task completion below).
+    let mut barrier_registered = false;
+    if let Some(dep) = depends_on {
+        // Group this job's task edges by dependent index.
+        let mut edges: HashMap<usize, Vec<usize>> = HashMap::new();
+        for &(i, u) in &task_deps {
+            edges.entry(i).or_default().push(u);
+        }
+        match core.jobs.get_mut(&dep) {
+            Some(upstream) => match &upstream.outcome {
+                Some(Ok(_)) => {} // dependency satisfied: all gates open
+                Some(Err(msg)) => {
+                    job.outcome = Some(Err(format!(
+                        "dependency job {dep} failed: {msg}"
+                    )));
+                    job.shed();
+                    core.jobs.insert(jid, job);
+                    return;
+                }
+                None => {
+                    for i in 0..n {
+                        if let Some(ups) = edges.get(&i) {
+                            let mut open_count = 0usize;
+                            for &u in ups {
+                                if upstream.done_tasks[u] {
+                                    continue;
+                                }
+                                upstream
+                                    .task_dependents
+                                    .entry(u)
+                                    .or_default()
+                                    .push((jid, i));
+                                open_count += 1;
+                            }
+                            if open_count > 0 {
+                                job.gates[i] = Gate::Tasks(open_count);
+                            }
+                        } else {
+                            job.gates[i] = Gate::Job;
+                        }
+                    }
+                    // Zero-task dependents and any Job-gated task wait for
+                    // the upstream completion signal.
+                    if n == 0
+                        || job
+                            .gates
+                            .iter()
+                            .any(|g| matches!(g, Gate::Job))
+                    {
+                        upstream.barrier_dependents.push(jid);
+                        barrier_registered = true;
+                    }
+                }
+            },
+            None => {
+                // Validated at submit; can only mean the dependency was
+                // itself dropped on an earlier admission failure.
+                job.outcome = Some(Err(format!(
+                    "dependency job {dep} was never admitted"
+                )));
+                job.shed();
+                core.jobs.insert(jid, job);
+                return;
+            }
+        }
+    }
+
+    // A zero-task job completes at admission only when it is not
+    // barriered on a still-running upstream (open_barriers completes it
+    // otherwise, once the upstream lands).
+    if n == 0 && !barrier_registered {
+        job.outcome =
+            Some(Ok(empty_report(jid, &job.name, submitted_at, slots)));
+    }
+    let now = Instant::now();
+    let mut to_ready = Vec::new();
+    for i in 0..n {
+        if matches!(job.gates[i], Gate::Open) {
+            job.eligible_at[i] = Some(now);
+            to_ready.push((jid, i));
+        }
+    }
+    core.jobs.insert(jid, job);
+    core.ready.extend(to_ready);
+}
+
+/// Record a successful task, release dependents, complete the job when its
+/// last task lands.
+fn on_task_done(
+    core: &mut Core,
+    slots: usize,
+    jid: JobId,
+    idx: usize,
+    report: TaskReport,
+) {
+    let (released, completed) = {
+        let Some(job) = core.jobs.get_mut(&jid) else { return };
+        if job.outcome.is_some() || job.done_tasks[idx] {
+            return; // job already failed, or stale duplicate
+        }
+        job.done_tasks[idx] = true;
+        job.reports[idx] = Some(report);
+        job.remaining -= 1;
+        let released =
+            job.task_dependents.remove(&idx).unwrap_or_default();
+        let completed = job.remaining == 0;
+        if completed {
+            let tasks: Vec<TaskReport> = job
+                .reports
+                .iter_mut()
+                .map(|r| r.take().expect("every task reported"))
+                .collect();
+            job.outcome = Some(Ok(JobReport {
+                job_id: jid.0,
+                name: job.name.clone(),
+                makespan: job.submitted_at.elapsed(),
+                slots,
+                tasks,
+            }));
+            job.shed();
+        }
+        (released, completed)
+    };
+
+    // Open task-granularity gates on dependents (the overlapped path).
+    let now = Instant::now();
+    let mut to_ready = Vec::new();
+    for (dj, di) in released {
+        if let Some(dep_job) = core.jobs.get_mut(&dj) {
+            if dep_job.outcome.is_some() {
+                continue;
+            }
+            if let Gate::Tasks(remaining) = &mut dep_job.gates[di] {
+                *remaining -= 1;
+                if *remaining == 0 {
+                    dep_job.gates[di] = Gate::Open;
+                    dep_job.eligible_at[di] = Some(now);
+                    to_ready.push((dj, di));
+                }
+            }
+        }
+    }
+    core.ready.extend(to_ready);
+
+    if completed {
+        open_barriers(core, slots, jid);
+    }
+}
+
+/// Open whole-job barriers downstream of `jid`, transitively completing
+/// degenerate zero-task dependents.
+fn open_barriers(core: &mut Core, slots: usize, jid: JobId) {
+    let mut done_stack = vec![jid];
+    while let Some(id) = done_stack.pop() {
+        let dependents = core
+            .jobs
+            .get_mut(&id)
+            .map(|j| std::mem::take(&mut j.barrier_dependents))
+            .unwrap_or_default();
+        for dj in dependents {
+            let mut to_ready = Vec::new();
+            let mut newly_done = false;
+            if let Some(d) = core.jobs.get_mut(&dj) {
+                if d.outcome.is_some() {
+                    continue;
+                }
+                let now = Instant::now();
+                for di in 0..d.gates.len() {
+                    if matches!(d.gates[di], Gate::Job) {
+                        d.gates[di] = Gate::Open;
+                        d.eligible_at[di] = Some(now);
+                        to_ready.push((dj, di));
+                    }
+                }
+                if d.ntasks == 0 {
+                    d.outcome = Some(Ok(empty_report(
+                        dj,
+                        &d.name,
+                        d.submitted_at,
+                        slots,
+                    )));
+                    d.shed();
+                    newly_done = true;
+                }
+            }
+            core.ready.extend(to_ready);
+            if newly_done {
+                done_stack.push(dj);
+            }
+        }
+    }
+}
+
+/// Fail `jid` and cascade the failure through every dependent job.
+fn fail_job(core: &mut Core, jid: JobId, msg: String) {
+    let mut stack = vec![(jid, msg)];
+    while let Some((id, m)) = stack.pop() {
+        let dependents: Vec<JobId> = {
+            let Some(job) = core.jobs.get_mut(&id) else { continue };
+            if job.outcome.is_some() {
+                continue;
+            }
+            job.outcome = Some(Err(m.clone()));
+            job.shed();
+            let mut deps: Vec<JobId> =
+                std::mem::take(&mut job.barrier_dependents);
+            for (_, edges) in std::mem::take(&mut job.task_dependents) {
+                deps.extend(edges.into_iter().map(|(dj, _)| dj));
+            }
+            deps.sort_unstable();
+            deps.dedup();
+            deps
+        };
+        for dj in dependents {
+            stack.push((dj, format!("dependency job {id} failed: {m}")));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Workers
+// ---------------------------------------------------------------------------
+
+fn worker_loop(inner: &Inner) {
+    loop {
+        // Claim a ready task (or exit on shutdown).
+        let mut core = inner.lock();
+        let (jid, idx) = loop {
+            if core.shutdown {
+                return;
+            }
+            if let Some(pair) = core.ready.pop_front() {
+                break pair;
+            }
+            core = inner
+                .work_cv
+                .wait(core)
+                .unwrap_or_else(|e| e.into_inner());
+        };
+        // Snapshot what execution needs; skip tasks of dead jobs.
+        let Some(job) = core.jobs.get(&jid) else { continue };
+        if job.outcome.is_some() {
+            continue;
+        }
+        let tasks = job.tasks.clone();
+        let submitted_at = job.submitted_at;
+        let attempt = job.attempts[idx];
+        let dispatch_wait = job.eligible_at[idx]
+            .map(|t| t.elapsed())
+            .unwrap_or_default();
+        drop(core);
+
+        let task = &tasks[idx];
+
+        // Failure injection: the attempt "crashes at launch" — consumed a
+        // retry, re-enters the queue, no side effects (the simulator burns
+        // half the virtual duration instead; counts match, clocks differ).
+        if inner.policy.should_fail(task.task_id, attempt) {
+            let mut core = inner.lock();
+            let requeue = core
+                .jobs
+                .get_mut(&jid)
+                .map(|j| {
+                    if j.outcome.is_none() {
+                        j.attempts[idx] += 1;
+                        true
+                    } else {
+                        false
+                    }
+                })
+                .unwrap_or(false);
+            if requeue {
+                core.ready.push_back((jid, idx));
+                drop(core);
+                inner.work_cv.notify_one();
+            }
+            continue;
+        }
+
+        let started_at = submitted_at.elapsed();
+        // Payloads are app code: a panic must fail the job (like any
+        // task error), not silently kill this worker and hang wait().
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| execute(&task.work)),
+        )
+        .unwrap_or_else(|panic| {
+            let msg = panic
+                .downcast_ref::<&str>()
+                .map(|s| (*s).to_string())
+                .or_else(|| panic.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".into());
+            Err(Error::Scheduler(format!("payload panicked: {msg}")))
+        });
+        let finished_at = submitted_at.elapsed();
+
+        let mut core = inner.lock();
+        match result {
+            Ok(out) => {
+                core.events.push_back(Event::TaskDone {
+                    job: jid,
+                    idx,
+                    report: TaskReport {
+                        task_id: task.task_id,
+                        dispatch_wait,
+                        startup: out.startup,
+                        compute: out.compute,
+                        launches: out.launches,
+                        items: out.items,
+                        started_at,
+                        finished_at,
+                        retries: attempt,
+                    },
+                });
+            }
+            Err(e) => {
+                core.events.push_back(Event::TaskFailed {
+                    job: jid,
+                    msg: format!("task {} failed: {e}", task.task_id),
+                });
+            }
+        }
+        drop(core);
+        inner.event_cv.notify_one();
     }
 }
 
@@ -180,11 +682,14 @@ impl Engine for LocalEngine {
 mod tests {
     use super::*;
     use crate::apps::testutil::{ConcatReducer, CountingApp};
+    use crate::apps::{MapApp, MapInstance};
     use crate::options::AppType;
+    use crate::scheduler::sim::{ClusterConfig, SimEngine};
     use crate::scheduler::{TaskSpec, TaskWork};
     use std::fs;
-    use std::path::PathBuf;
-    use std::sync::atomic::Ordering;
+    use std::path::{Path, PathBuf};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::time::Duration;
 
     fn tmp(tag: &str) -> PathBuf {
         let d = std::env::temp_dir()
@@ -217,6 +722,20 @@ mod tests {
                     app: app.clone(),
                     pairs: chunk.to_vec(),
                     mode,
+                },
+            })
+            .collect()
+    }
+
+    fn synth_tasks(n: usize, micros: u64) -> Vec<TaskSpec> {
+        (0..n)
+            .map(|i| TaskSpec {
+                task_id: i + 1,
+                work: TaskWork::Synthetic {
+                    startup: Duration::from_micros(micros),
+                    per_item: Duration::from_micros(micros),
+                    items: 1,
+                    launches: 1,
                 },
             })
             .collect()
@@ -301,6 +820,36 @@ mod tests {
     }
 
     #[test]
+    fn failed_dependency_cascades_to_dependents() {
+        let d = tmp("cascade");
+        let mut app = CountingApp::new();
+        app.poison = Some("f0".into());
+        let tasks = map_tasks(&d, Arc::new(app), 2, 1, AppType::Siso);
+        let mut eng = LocalEngine::new(2);
+        let map_id = eng.submit(JobSpec::new("map", tasks)).unwrap();
+        let red_id = eng
+            .submit(
+                JobSpec::new(
+                    "reduce",
+                    vec![TaskSpec {
+                        task_id: 1,
+                        work: TaskWork::Reduce {
+                            app: Arc::new(ConcatReducer),
+                            input_dir: d.clone(),
+                            out_file: d.join("out"),
+                        },
+                    }],
+                )
+                .after(map_id),
+            )
+            .unwrap();
+        let err = eng.wait(red_id).unwrap_err().to_string();
+        assert!(err.contains("dependency"), "{err}");
+        assert!(err.contains("poisoned"), "{err}");
+        assert!(eng.wait(map_id).is_err());
+    }
+
+    #[test]
     fn single_slot_serializes() {
         let d = tmp("serial");
         let app = Arc::new(CountingApp::new());
@@ -330,5 +879,291 @@ mod tests {
         let b = eng.wait(id).unwrap();
         assert_eq!(a.job_id, b.job_id);
         assert_eq!(a.tasks.len(), b.tasks.len());
+    }
+
+    // -- background-dispatcher behaviour ------------------------------------
+
+    /// A mapper that records whether its peer job was *running at the same
+    /// time*: it raises `mine`, then spins until it sees `other` (or a
+    /// deadline).  Two such jobs can only both observe each other if the
+    /// engine dispatches tasks from independent jobs concurrently.
+    struct HandshakeApp {
+        mine: Arc<AtomicBool>,
+        other: Arc<AtomicBool>,
+        saw_other: Arc<AtomicBool>,
+    }
+
+    struct HandshakeInstance {
+        mine: Arc<AtomicBool>,
+        other: Arc<AtomicBool>,
+        saw_other: Arc<AtomicBool>,
+    }
+
+    impl MapApp for HandshakeApp {
+        fn name(&self) -> &str {
+            "handshake"
+        }
+        fn startup(&self) -> Result<Box<dyn MapInstance>> {
+            Ok(Box::new(HandshakeInstance {
+                mine: self.mine.clone(),
+                other: self.other.clone(),
+                saw_other: self.saw_other.clone(),
+            }))
+        }
+    }
+
+    impl MapInstance for HandshakeInstance {
+        fn process(&mut self, _input: &Path, output: &Path) -> Result<()> {
+            self.mine.store(true, Ordering::SeqCst);
+            let deadline = Instant::now() + Duration::from_secs(10);
+            while Instant::now() < deadline {
+                if self.other.load(Ordering::SeqCst) {
+                    self.saw_other.store(true, Ordering::SeqCst);
+                    break;
+                }
+                std::thread::yield_now();
+            }
+            fs::write(output, "done")
+                .map_err(|e| Error::io(output.to_path_buf(), e))
+        }
+    }
+
+    #[test]
+    fn independent_jobs_interleave_within_slot_cap() {
+        let d = tmp("interleave");
+        let flag_a = Arc::new(AtomicBool::new(false));
+        let flag_b = Arc::new(AtomicBool::new(false));
+        let saw_a = Arc::new(AtomicBool::new(false));
+        let saw_b = Arc::new(AtomicBool::new(false));
+        let mk = |tag: &str,
+                  mine: &Arc<AtomicBool>,
+                  other: &Arc<AtomicBool>,
+                  saw: &Arc<AtomicBool>| {
+            let inp = d.join(format!("{tag}.dat"));
+            fs::write(&inp, "x").unwrap();
+            let app: Arc<dyn MapApp> = Arc::new(HandshakeApp {
+                mine: mine.clone(),
+                other: other.clone(),
+                saw_other: saw.clone(),
+            });
+            JobSpec::new(
+                tag,
+                vec![TaskSpec {
+                    task_id: 1,
+                    work: TaskWork::Map {
+                        app,
+                        pairs: vec![(
+                            inp,
+                            d.join(format!("{tag}.out")),
+                        )],
+                        mode: AppType::Siso,
+                    },
+                }],
+            )
+        };
+        let mut eng = LocalEngine::new(2);
+        let ja = eng.submit(mk("a", &flag_a, &flag_b, &saw_a)).unwrap();
+        let jb = eng.submit(mk("b", &flag_b, &flag_a, &saw_b)).unwrap();
+        eng.wait(ja).unwrap();
+        eng.wait(jb).unwrap();
+        assert!(
+            saw_a.load(Ordering::SeqCst) && saw_b.load(Ordering::SeqCst),
+            "two independent jobs must run concurrently under one slot cap"
+        );
+    }
+
+    #[test]
+    fn independent_jobs_share_one_slot_without_deadlock() {
+        let mut eng = LocalEngine::new(1);
+        let a = eng.submit(JobSpec::new("a", synth_tasks(2, 100))).unwrap();
+        let b = eng.submit(JobSpec::new("b", synth_tasks(2, 100))).unwrap();
+        assert_eq!(eng.wait(b).unwrap().tasks.len(), 2);
+        assert_eq!(eng.wait(a).unwrap().tasks.len(), 2);
+    }
+
+    #[test]
+    fn task_granular_dependency_releases_eagerly_and_correctly() {
+        let d = tmp("taskdep");
+        let app = Arc::new(CountingApp::new());
+        let tasks = map_tasks(&d, app, 6, 3, AppType::Mimo);
+        // Rebuild each map task's output list for the partial stage.
+        let outputs: Vec<Vec<PathBuf>> = tasks
+            .iter()
+            .map(|t| match &t.work {
+                TaskWork::Map { pairs, .. } => {
+                    pairs.iter().map(|(_, o)| o.clone()).collect()
+                }
+                _ => unreachable!(),
+            })
+            .collect();
+        let mut eng = LocalEngine::new(2);
+        let map_id = eng.submit(JobSpec::new("map", tasks)).unwrap();
+        let partial_tasks: Vec<TaskSpec> = outputs
+            .iter()
+            .enumerate()
+            .map(|(i, files)| TaskSpec {
+                task_id: i + 1,
+                work: TaskWork::ReducePartial {
+                    app: Arc::new(ConcatReducer),
+                    files: files.clone(),
+                    out_file: d.join(format!("part_{i}")),
+                },
+            })
+            .collect();
+        let edges: Vec<(usize, usize)> =
+            (0..partial_tasks.len()).map(|i| (i, i)).collect();
+        let pid = eng
+            .submit(
+                JobSpec::new("partial", partial_tasks)
+                    .after_tasks(map_id, edges),
+            )
+            .unwrap();
+        let partial = eng.wait(pid).unwrap();
+        assert_eq!(partial.tasks.len(), 3);
+        // Each partial saw exactly its upstream task's 2 outputs.
+        for i in 0..3 {
+            let text =
+                fs::read_to_string(d.join(format!("part_{i}"))).unwrap();
+            assert_eq!(
+                text.matches("#mapped").count(),
+                2,
+                "partial {i} consumed its own mapper task's outputs"
+            );
+        }
+    }
+
+    #[test]
+    fn panicking_payload_fails_job_instead_of_hanging() {
+        struct PanicApp;
+        struct PanicInstance;
+        impl MapApp for PanicApp {
+            fn name(&self) -> &str {
+                "panic-app"
+            }
+            fn startup(&self) -> Result<Box<dyn MapInstance>> {
+                Ok(Box::new(PanicInstance))
+            }
+        }
+        impl MapInstance for PanicInstance {
+            fn process(&mut self, _i: &Path, _o: &Path) -> Result<()> {
+                panic!("boom in app code");
+            }
+        }
+        let d = tmp("panic");
+        let inp = d.join("x.dat");
+        fs::write(&inp, "x").unwrap();
+        let mut eng = LocalEngine::new(1);
+        let err = eng
+            .run(JobSpec::new(
+                "p",
+                vec![TaskSpec {
+                    task_id: 1,
+                    work: TaskWork::Map {
+                        app: Arc::new(PanicApp),
+                        pairs: vec![(inp, d.join("x.out"))],
+                        mode: AppType::Siso,
+                    },
+                }],
+            ))
+            .unwrap_err();
+        assert!(err.to_string().contains("panicked"), "{err}");
+        // The worker survived the unwind: the engine still runs jobs.
+        let ok = eng.run(JobSpec::new("ok", synth_tasks(2, 50))).unwrap();
+        assert_eq!(ok.tasks.len(), 2);
+    }
+
+    #[test]
+    fn zero_task_dependent_waits_for_upstream_outcome() {
+        // A zero-task barrier job must inherit its upstream's fate, not
+        // complete vacuously at admission.
+        let d = tmp("zerodep");
+        let mut app = CountingApp::new();
+        app.poison = Some("f0".into());
+        let tasks = map_tasks(&d, Arc::new(app), 2, 1, AppType::Siso);
+        let mut eng = LocalEngine::new(1);
+        let a = eng.submit(JobSpec::new("map", tasks)).unwrap();
+        let b = eng.submit(JobSpec::new("barrier", vec![]).after(a)).unwrap();
+        let err = eng.wait(b).unwrap_err().to_string();
+        assert!(err.contains("dependency"), "{err}");
+        // And with a healthy upstream it completes fine.
+        let c = eng.submit(JobSpec::new("ok", synth_tasks(1, 10))).unwrap();
+        let e = eng.submit(JobSpec::new("barrier2", vec![]).after(c)).unwrap();
+        assert!(eng.wait(e).unwrap().tasks.is_empty());
+    }
+
+    #[test]
+    fn task_dep_edge_out_of_range_rejected() {
+        let mut eng = LocalEngine::new(1);
+        let a = eng.submit(JobSpec::new("a", synth_tasks(2, 10))).unwrap();
+        let err = eng
+            .submit(
+                JobSpec::new("b", synth_tasks(2, 10))
+                    .after_tasks(a, vec![(0, 5)]),
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        let err = eng
+            .submit(JobSpec::new("c", synth_tasks(1, 10)).after_tasks(
+                a,
+                vec![(3, 0)],
+            ))
+            .unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn injected_retries_follow_the_policy_exactly() {
+        let policy = FailurePolicy {
+            failure_rate: 0.6,
+            max_retries: 4,
+            seed: 42,
+        };
+        let mut eng = LocalEngine::with_policy(2, policy);
+        let report =
+            eng.run(JobSpec::new("flaky", synth_tasks(8, 50))).unwrap();
+        assert_eq!(report.tasks.len(), 8);
+        for t in &report.tasks {
+            assert_eq!(
+                t.retries,
+                policy.expected_retries(t.task_id),
+                "task {}",
+                t.task_id
+            );
+        }
+        let total: usize = report.tasks.iter().map(|t| t.retries).sum();
+        assert!(total > 0, "rate 0.6 over 8 tasks must retry some");
+    }
+
+    #[test]
+    fn retry_counts_match_sim_engine() {
+        let (rate, max_retries, seed) = (0.5, 5, 9);
+        let mut local = LocalEngine::with_policy(
+            2,
+            FailurePolicy {
+                failure_rate: rate,
+                max_retries,
+                seed,
+            },
+        );
+        let local_report = local
+            .run(JobSpec::new("flaky", synth_tasks(8, 50)))
+            .unwrap();
+        let mut sim = SimEngine::new(ClusterConfig {
+            failure_rate: rate,
+            max_retries,
+            seed,
+            dispatch_latency: Duration::from_millis(1),
+            ..ClusterConfig::with_width(2)
+        });
+        let sim_report =
+            sim.run(JobSpec::new("flaky", synth_tasks(8, 50))).unwrap();
+        let by_id = |r: &JobReport| -> HashMap<usize, usize> {
+            r.tasks.iter().map(|t| (t.task_id, t.retries)).collect()
+        };
+        assert_eq!(
+            by_id(&local_report),
+            by_id(&sim_report),
+            "one failure-injection contract across engines"
+        );
     }
 }

@@ -15,6 +15,7 @@
 pub mod cost;
 pub mod dialect;
 pub mod exec;
+pub mod failure;
 pub mod local;
 pub mod sim;
 
@@ -23,7 +24,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::apps::{MapApp, ReduceApp};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::options::AppType;
 
 /// Opaque job identifier, unique per engine instance.
@@ -56,6 +57,17 @@ pub enum TaskWork {
         input_dir: PathBuf,
         out_file: PathBuf,
     },
+    /// Overlapped-reduce stage: fold one mapper task's completed output
+    /// `files` into the partial file `out_file` via
+    /// [`crate::apps::ReduceApp::reduce_partial`].  Submitted with a
+    /// task-granularity dependency ([`JobSpec::after_tasks`]) so it runs
+    /// as soon as *its* mapper task finishes instead of barriering on the
+    /// whole map array job (DESIGN.md §4).
+    ReducePartial {
+        app: Arc<dyn ReduceApp>,
+        files: Vec<PathBuf>,
+        out_file: PathBuf,
+    },
     /// Timing-only payload for simulator studies where the real data does
     /// not exist (e.g. the 43,580-file Table II trace): `launches`
     /// start-ups plus `items` per-file compute units.
@@ -79,6 +91,11 @@ impl std::fmt::Debug for TaskWork {
                 .debug_struct("Reduce")
                 .field("input_dir", input_dir)
                 .finish(),
+            TaskWork::ReducePartial { files, out_file, .. } => f
+                .debug_struct("ReducePartial")
+                .field("files", &files.len())
+                .field("out_file", out_file)
+                .finish(),
             TaskWork::Synthetic {
                 items, launches, ..
             } => f
@@ -99,6 +116,7 @@ impl TaskWork {
                 AppType::Mimo => usize::from(!pairs.is_empty()),
             },
             TaskWork::Reduce { .. } => 1,
+            TaskWork::ReducePartial { .. } => 1,
             TaskWork::Synthetic { launches, .. } => *launches,
         }
     }
@@ -108,6 +126,7 @@ impl TaskWork {
         match self {
             TaskWork::Map { pairs, .. } => pairs.len(),
             TaskWork::Reduce { .. } => 1,
+            TaskWork::ReducePartial { files, .. } => files.len(),
             TaskWork::Synthetic { items, .. } => *items,
         }
     }
@@ -129,6 +148,17 @@ pub struct JobSpec {
     /// Job dependency (Fig 1 step 3: the reduce task "will wait until all
     /// the mapper tasks are completed by setting a job dependency").
     pub depends_on: Option<JobId>,
+    /// Task-granularity dependency edges into the `depends_on` job's task
+    /// array: `(dependent_idx, upstream_idx)` means the task at index
+    /// `dependent_idx` of **this** job becomes eligible as soon as the
+    /// task at index `upstream_idx` of the dependency job completes —
+    /// the overlapped-reduce mechanism (DESIGN.md §4).  Indices are
+    /// positions in the respective `tasks` vectors, **not** task ids.
+    /// Tasks with no edge keep the whole-job barrier.  Empty (the
+    /// default) means the classic Fig 1 whole-job barrier.  Engines may
+    /// conservatively widen task edges back to the job barrier (the
+    /// simulator does); execution stays correct, only overlap is lost.
+    pub task_deps: Vec<(usize, usize)>,
     /// Whole-node allocation (`--exclusive`).
     pub exclusive: bool,
 }
@@ -139,12 +169,26 @@ impl JobSpec {
             name: name.into(),
             tasks,
             depends_on: None,
+            task_deps: Vec::new(),
             exclusive: false,
         }
     }
 
     pub fn after(mut self, dep: JobId) -> Self {
         self.depends_on = Some(dep);
+        self
+    }
+
+    /// Depend on `dep` at task granularity: each `(dependent_idx,
+    /// upstream_idx)` edge releases one task of this job the moment the
+    /// named upstream task finishes (see [`JobSpec::task_deps`]).
+    pub fn after_tasks(
+        mut self,
+        dep: JobId,
+        edges: Vec<(usize, usize)>,
+    ) -> Self {
+        self.depends_on = Some(dep);
+        self.task_deps = edges;
         self
     }
 
@@ -237,6 +281,39 @@ impl JobReport {
     }
 }
 
+/// Submit-time validation shared by the engines: the dependency (if
+/// any) must be known — `dep_ntasks` returns its task count, or `None`
+/// when it was never submitted — and every task-granularity edge must
+/// be in range.  Both engines enforce this even where edges are widened
+/// to a job barrier, so specs stay portable across `--engine=local|sim`.
+pub(crate) fn validate_submit(
+    spec: &JobSpec,
+    dep_ntasks: impl FnOnce(JobId) -> Option<usize>,
+) -> Result<()> {
+    if let Some(dep) = spec.depends_on {
+        let Some(dep_ntasks) = dep_ntasks(dep) else {
+            return Err(Error::Scheduler(format!(
+                "dependency {dep} was never submitted"
+            )));
+        };
+        for &(i, u) in &spec.task_deps {
+            if i >= spec.tasks.len() || u >= dep_ntasks {
+                return Err(Error::Scheduler(format!(
+                    "task dependency edge ({i}, {u}) out of range \
+                     ({} dependent / {} upstream tasks)",
+                    spec.tasks.len(),
+                    dep_ntasks
+                )));
+            }
+        }
+    } else if !spec.task_deps.is_empty() {
+        return Err(Error::Scheduler(
+            "task_deps given without depends_on".into(),
+        ));
+    }
+    Ok(())
+}
+
 /// An execution engine: where submitted jobs actually run.
 ///
 /// Implementations: [`local::LocalEngine`] (threads, wall-clock) and
@@ -250,6 +327,15 @@ pub trait Engine: Send {
 
     /// Block until the job (and its dependency chain) finishes.
     fn wait(&mut self, id: JobId) -> Result<JobReport>;
+
+    /// True when this engine reports virtual (simulated) time rather than
+    /// wall-clock.  The pipeline uses this to pick how end-to-end elapsed
+    /// time is aggregated: wall engines are measured around the whole
+    /// submit→wait span (jobs may overlap), virtual engines sum their job
+    /// makespans (the simulator serializes chained jobs).
+    fn virtual_time(&self) -> bool {
+        false
+    }
 
     /// Submit and wait in one call.
     fn run(&mut self, spec: JobSpec) -> Result<JobReport> {
@@ -336,6 +422,41 @@ mod tests {
             .after(JobId(3))
             .exclusive(true);
         assert_eq!(spec.depends_on, Some(JobId(3)));
+        assert!(spec.task_deps.is_empty(), "after() keeps the job barrier");
         assert!(spec.exclusive);
+    }
+
+    #[test]
+    fn jobspec_task_granular_dependency() {
+        let spec = JobSpec::new("partial-reduce", vec![])
+            .after_tasks(JobId(7), vec![(0, 0), (1, 1)]);
+        assert_eq!(spec.depends_on, Some(JobId(7)));
+        assert_eq!(spec.task_deps, vec![(0, 0), (1, 1)]);
+    }
+
+    #[test]
+    fn reduce_partial_work_accounting() {
+        use crate::apps::ReduceApp;
+        struct Nop;
+        impl ReduceApp for Nop {
+            fn name(&self) -> &str {
+                "nop"
+            }
+            fn reduce(
+                &self,
+                _dir: &std::path::Path,
+                _out: &std::path::Path,
+            ) -> Result<()> {
+                Ok(())
+            }
+        }
+        let w = TaskWork::ReducePartial {
+            app: Arc::new(Nop),
+            files: vec![PathBuf::from("a"), PathBuf::from("b")],
+            out_file: PathBuf::from("part_1"),
+        };
+        assert_eq!(w.launches(), 1);
+        assert_eq!(w.items(), 2);
+        assert!(format!("{w:?}").contains("ReducePartial"));
     }
 }

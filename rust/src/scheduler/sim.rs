@@ -8,13 +8,24 @@
 //! Two modes:
 //!
 //! * **pure timing** (default) — payload costs come from
-//!   [`exec::virtual_cost`] (calibrated [`CostHint`]s); nothing touches the
-//!   filesystem.  This is how the Fig 18/19 sweeps scale to 256 concurrent
-//!   tasks on a single-core container, and how the 43,580-file Table II
-//!   trace runs in milliseconds.
+//!   [`crate::scheduler::exec::virtual_cost`] (calibrated
+//!   [`crate::apps::CostHint`]s); nothing touches the filesystem.  This is
+//!   how the Fig 18/19 sweeps scale to 256 concurrent tasks on a
+//!   single-core container, and how the 43,580-file Table II trace runs in
+//!   milliseconds.
 //! * **executing** (`execute_payloads(true)`) — payloads really run (real
 //!   outputs on disk) while queueing/dispatch time stays virtual; used by
 //!   integration tests to check that sim and local agree on results.
+//!
+//! Failure injection delegates to the engine-shared
+//! [`crate::scheduler::failure::FailurePolicy`], so retry counts replay
+//! identically on [`crate::scheduler::local::LocalEngine`].
+//!
+//! Task-granularity dependencies ([`JobSpec::task_deps`]) are honoured
+//! *conservatively*: the simulator runs chained jobs one at a time, so a
+//! task edge widens back to the whole-job barrier.  Results and ordering
+//! stay correct; only the overlap is lost (the local engine models it —
+//! DESIGN.md §4).
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
@@ -22,6 +33,7 @@ use std::time::Duration;
 
 use crate::error::{Error, Result};
 use crate::scheduler::exec::{execute, virtual_cost};
+use crate::scheduler::failure::FailurePolicy;
 use crate::scheduler::{Engine, JobId, JobReport, JobSpec, TaskReport};
 use crate::util::rng::Rng;
 
@@ -84,6 +96,17 @@ impl ClusterConfig {
             nodes: np,
             slots_per_node: 1,
             ..Default::default()
+        }
+    }
+
+    /// The failure-injection rule this cluster implies — the same
+    /// [`FailurePolicy`] the local engine consumes, so the two engines
+    /// replay identical retry patterns.
+    pub fn failure_policy(&self) -> FailurePolicy {
+        FailurePolicy {
+            failure_rate: self.failure_rate,
+            max_retries: self.max_retries,
+            seed: self.seed,
         }
     }
 }
@@ -234,9 +257,13 @@ impl SimEngine {
 
                     // Failure injection: failed attempts burn half the
                     // duration, then the task re-enters the ready queue.
-                    let fails = self.config.failure_rate > 0.0
-                        && rng.next_f64() < self.config.failure_rate
-                        && retries[idx] < self.config.max_retries;
+                    // The decision comes from the engine-shared policy —
+                    // a pure function of (seed, task id, attempt) — so
+                    // local-engine runs retry identically.
+                    let fails = self
+                        .config
+                        .failure_policy()
+                        .should_fail(task.task_id, retries[idx]);
                     if fails {
                         retries[idx] += 1;
                         let finish = dispatch_done + duration / 2;
@@ -315,16 +342,22 @@ impl Engine for SimEngine {
         "sim"
     }
 
+    fn virtual_time(&self) -> bool {
+        true
+    }
+
     fn submit(&mut self, spec: JobSpec) -> Result<JobId> {
-        if let Some(dep) = spec.depends_on {
-            let known = self.finished.contains_key(&dep)
-                || self.pending.iter().any(|(jid, _)| *jid == dep);
-            if !known {
-                return Err(Error::Scheduler(format!(
-                    "dependency {dep} was never submitted"
-                )));
-            }
-        }
+        // Same admission contract as the local engine (shared helper):
+        // specs must stay portable across `--engine=local|sim` even
+        // though this engine widens task edges to the job barrier.
+        crate::scheduler::validate_submit(&spec, |dep| {
+            self.finished.get(&dep).map(|r| r.tasks.len()).or_else(|| {
+                self.pending
+                    .iter()
+                    .find(|(jid, _)| *jid == dep)
+                    .map(|(_, s)| s.tasks.len())
+            })
+        })?;
         let id = JobId(self.next_id);
         self.next_id += 1;
         self.pending.push((id, spec));
@@ -464,6 +497,59 @@ mod tests {
                 .makespan
         };
         assert_ne!(run(1), run(2));
+    }
+
+    #[test]
+    fn task_dep_validation_matches_local_engine() {
+        let mut eng = SimEngine::new(cfg(2));
+        let a = eng
+            .submit(JobSpec::new("a", synth_tasks(2, 1, 1, 1, 1)))
+            .unwrap();
+        let err = eng
+            .submit(
+                JobSpec::new("b", synth_tasks(2, 1, 1, 1, 1))
+                    .after_tasks(a, vec![(0, 99)]),
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        let orphan = JobSpec {
+            task_deps: vec![(0, 0)],
+            ..JobSpec::new("orphan", synth_tasks(1, 1, 1, 1, 1))
+        };
+        let err = eng.submit(orphan).unwrap_err();
+        assert!(err.to_string().contains("depends_on"), "{err}");
+    }
+
+    #[test]
+    fn task_deps_widen_to_conservative_barrier() {
+        // The simulator may ignore task-granularity edges, but ordering
+        // and results must match the barriered semantics exactly.
+        let mut eager = SimEngine::new(cfg(4));
+        let m1 = eager
+            .submit(JobSpec::new("map", synth_tasks(4, 5, 5, 1, 1)))
+            .unwrap();
+        let edges: Vec<(usize, usize)> = (0..4).map(|i| (i, i)).collect();
+        let p1 = eager
+            .submit(
+                JobSpec::new("partial", synth_tasks(4, 1, 1, 1, 1))
+                    .after_tasks(m1, edges),
+            )
+            .unwrap();
+        let eager_partial = eager.wait(p1).unwrap();
+
+        let mut barriered = SimEngine::new(cfg(4));
+        let m2 = barriered
+            .submit(JobSpec::new("map", synth_tasks(4, 5, 5, 1, 1)))
+            .unwrap();
+        let p2 = barriered
+            .submit(
+                JobSpec::new("partial", synth_tasks(4, 1, 1, 1, 1))
+                    .after(m2),
+            )
+            .unwrap();
+        let barriered_partial = barriered.wait(p2).unwrap();
+        assert_eq!(eager_partial.makespan, barriered_partial.makespan);
+        assert_eq!(eager_partial.tasks.len(), 4);
     }
 
     #[test]

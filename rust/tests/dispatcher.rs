@@ -1,0 +1,172 @@
+//! Integration tests for the background-dispatch local engine and the
+//! overlapped map→reduce path, through public API only.
+
+use std::fs;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use llmapreduce::apps::wordcount::{WordCountApp, WordCountReducer};
+use llmapreduce::mapreduce::{run, Apps};
+use llmapreduce::options::Options;
+use llmapreduce::prelude::{
+    ClusterConfig, Engine, FailurePolicy, LocalEngine, SimEngine,
+};
+use llmapreduce::scheduler::{JobId, JobSpec, TaskSpec, TaskWork};
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("llmr-dispatch-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn synth_tasks(n: usize, startup_ms: u64) -> Vec<TaskSpec> {
+    (0..n)
+        .map(|i| TaskSpec {
+            task_id: i + 1,
+            work: TaskWork::Synthetic {
+                startup: Duration::from_millis(startup_ms),
+                per_item: Duration::ZERO,
+                items: 0,
+                launches: 1,
+            },
+        })
+        .collect()
+}
+
+#[test]
+fn submit_returns_before_execution() {
+    let mut eng = LocalEngine::new(1);
+    let t0 = Instant::now();
+    let id = eng
+        .submit(JobSpec::new("slow", synth_tasks(1, 150)))
+        .unwrap();
+    let submit_latency = t0.elapsed();
+    assert!(
+        submit_latency < Duration::from_millis(100),
+        "submit() must hand the job to the dispatcher and return, not \
+         execute it inline (took {submit_latency:?})"
+    );
+    let report = eng.wait(id).unwrap();
+    assert!(
+        report.makespan >= Duration::from_millis(140),
+        "the 150ms task really ran: {:?}",
+        report.makespan
+    );
+}
+
+#[test]
+fn many_independent_jobs_share_the_pool_and_all_finish() {
+    let mut eng = LocalEngine::new(2);
+    let ids: Vec<JobId> = (0..5)
+        .map(|k| {
+            eng.submit(JobSpec::new(format!("job-{k}"), synth_tasks(3, 1)))
+                .unwrap()
+        })
+        .collect();
+    // Waited out of submission order, every job completes fully.
+    for id in ids.iter().rev() {
+        let r = eng.wait(*id).unwrap();
+        assert_eq!(r.tasks.len(), 3);
+        assert_eq!(r.total_launches(), 3);
+    }
+}
+
+#[test]
+fn task_dep_validation_through_public_api() {
+    let mut eng = LocalEngine::new(1);
+    // task_deps without depends_on is rejected.
+    let orphan = JobSpec {
+        task_deps: vec![(0, 0)],
+        ..JobSpec::new("orphan", synth_tasks(1, 1))
+    };
+    assert!(eng.submit(orphan).is_err());
+    // In-range edges are accepted and execute in order.
+    let a = eng.submit(JobSpec::new("a", synth_tasks(2, 1))).unwrap();
+    let b = eng
+        .submit(
+            JobSpec::new("b", synth_tasks(2, 1))
+                .after_tasks(a, vec![(0, 0), (1, 1)]),
+        )
+        .unwrap();
+    assert_eq!(eng.wait(b).unwrap().tasks.len(), 2);
+}
+
+#[test]
+fn local_and_sim_agree_on_injected_retry_counts() {
+    let (rate, max_retries, seed) = (0.4, 6, 21);
+    let mut local = LocalEngine::with_policy(
+        2,
+        FailurePolicy {
+            failure_rate: rate,
+            max_retries,
+            seed,
+        },
+    );
+    let lr = local
+        .run(JobSpec::new("flaky", synth_tasks(12, 1)))
+        .unwrap();
+    let mut sim = SimEngine::new(ClusterConfig {
+        failure_rate: rate,
+        max_retries,
+        seed,
+        dispatch_latency: Duration::from_millis(1),
+        ..ClusterConfig::with_width(2)
+    });
+    let sr = sim.run(JobSpec::new("flaky", synth_tasks(12, 1))).unwrap();
+    let mut lv: Vec<(usize, usize)> =
+        lr.tasks.iter().map(|t| (t.task_id, t.retries)).collect();
+    let mut sv: Vec<(usize, usize)> =
+        sr.tasks.iter().map(|t| (t.task_id, t.retries)).collect();
+    lv.sort_unstable();
+    sv.sort_unstable();
+    assert_eq!(lv, sv, "one failure-injection contract across engines");
+}
+
+#[test]
+fn overlapped_wordcount_equals_barriered_result() {
+    let root = tmp("wc-overlap");
+    let input = root.join("input");
+    fs::create_dir_all(&input).unwrap();
+    for (i, text) in [
+        "the quick brown fox",
+        "jumps over the lazy dog",
+        "the dog barks",
+        "quick quick slow",
+        "over and over and over",
+        "fox and dog and fox",
+    ]
+    .iter()
+    .enumerate()
+    {
+        fs::write(input.join(format!("d{i}.txt")), text).unwrap();
+    }
+    let mut results = Vec::new();
+    for overlap in [false, true] {
+        let out =
+            root.join(if overlap { "out-overlap" } else { "out-barrier" });
+        let opts = Options::new(&input, &out, "wordcount")
+            .np(3)
+            .reducer("wordcount-reducer")
+            .overlap(overlap)
+            .workdir(&root)
+            .pid(70100 + overlap as u32);
+        let apps = Apps {
+            mapper: WordCountApp::new(None),
+            reducer: Some(Arc::new(WordCountReducer)),
+        };
+        let mut eng = LocalEngine::new(2);
+        let report = run(&opts, &apps, &mut eng).unwrap();
+        assert_eq!(report.overlapped, overlap);
+        assert_eq!(report.partials.is_some(), overlap);
+        results.push(
+            fs::read_to_string(report.redout_path.unwrap()).unwrap(),
+        );
+    }
+    assert_eq!(
+        results[0], results[1],
+        "overlapped reduce must produce byte-identical word counts"
+    );
+}
