@@ -66,8 +66,8 @@ fn main() -> Result<()> {
             reducer.display().to_string()
         ])?),
     };
-    let mut eng = LocalEngine::new(2);
-    let siso = llmapreduce::mapreduce::run(&opts, &apps, &mut eng)?;
+    let eng = LocalEngine::new(2);
+    let siso = llmapreduce::mapreduce::run(&opts, &apps, &eng)?;
     println!(
         "SISO shell pipeline: {} files, {} process spawns, elapsed {}",
         siso.map.total_items(),
@@ -90,8 +90,7 @@ fn main() -> Result<()> {
             reducer.display().to_string()
         ])?),
     };
-    let mut eng = LocalEngine::new(2);
-    let mimo = llmapreduce::mapreduce::run(&opts2, &apps2, &mut eng)?;
+    let mimo = llmapreduce::mapreduce::run(&opts2, &apps2, &eng)?;
     println!(
         "MIMO shell pipeline: {} files, {} launches, elapsed {}",
         mimo.map.total_items(),

@@ -54,8 +54,8 @@ fn main() -> Result<()> {
         mapper: mapper.clone(),
         reducer: Some(Arc::new(FrobeniusSumReducer)),
     };
-    let mut engine = LocalEngine::new(np);
-    let result = block_vs_mimo("matmul pipeline", &opts, &apps, &mut engine)?;
+    let engine = LocalEngine::new(np);
+    let result = block_vs_mimo("matmul pipeline", &opts, &apps, &engine)?;
     println!("\n{}", result.table());
     println!("headline: MIMO {:.2}x over BLOCK on real execution\n", result.speedup());
 

@@ -40,8 +40,8 @@ fn main() -> Result<()> {
         mapper: WordCountApp::new(None),
         reducer: None,
     };
-    let mut engine = LocalEngine::new(4);
-    let report = llmapreduce::mapreduce::run(&opts, &apps, &mut engine)?;
+    let engine = LocalEngine::new(4);
+    let report = llmapreduce::mapreduce::run(&opts, &apps, &engine)?;
     println!(
         "--subdir=true: {} files mapped, tree replicated:",
         report.map.total_items()
@@ -55,6 +55,9 @@ fn main() -> Result<()> {
     }
 
     // --- Variant 2: nested map-reduce with an outer reducer -------------
+    // All three per-sensor pipelines are submitted through one Session
+    // before any is waited, so they share the engine's slot cap
+    // concurrently instead of running sensor-by-sensor.
     let out2 = root.join("output-nested");
     let opts = Options::new(&input, &out2, "wordcount")
         .np(2)
@@ -63,17 +66,19 @@ fn main() -> Result<()> {
         mapper: WordCountApp::new(None),
         reducer: Some(Arc::new(WordCountReducer)),
     };
-    let mut engine = LocalEngine::new(2);
+    let engine = LocalEngine::new(2);
     let nested = run_nested(
         &opts,
         &apps,
         Some(Arc::new(WordCountReducer)),
-        &mut engine,
+        &engine,
     )?;
     println!(
-        "\nnested: {} inner jobs, {} files total",
+        "\nnested: {} inner jobs, {} files total, wall {} (slot-time {})",
         nested.inner.len(),
-        nested.total_items()
+        nested.total_items(),
+        llmapreduce::util::fmt_duration(nested.elapsed()),
+        llmapreduce::util::fmt_duration(nested.summed_elapsed()),
     );
     for (name, inner) in &nested.inner {
         println!(

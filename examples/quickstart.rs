@@ -32,14 +32,18 @@ fn main() -> Result<()> {
     generate_images(&input, 6, h, w, 42)?;
 
     // Fig 7: each input image becomes part of an array job; --np=2 gives
-    // two array tasks of three images each.
+    // two array tasks of three images each.  The handle API: submit
+    // returns before anything executes, wait() assembles the report —
+    // submit several invocations first and they share the engine.
     let opts = Options::new(&input, &output, "imageconvert").np(2);
     let apps = Apps {
         mapper,
         reducer: None,
     };
-    let mut engine = LocalEngine::new(2);
-    let report = llmapreduce::mapreduce::run(&opts, &apps, &mut engine)?;
+    let engine = LocalEngine::new(2);
+    let session = Session::new(&engine);
+    let invocation = session.submit(&opts, &apps)?;
+    let report = invocation.wait()?;
 
     println!(
         "converted {} images in {} ({} app launches, startup total {})",
@@ -53,10 +57,10 @@ fn main() -> Result<()> {
     }
 
     // Same job with --apptype=mimo: one launch per task instead of one
-    // per image — the paper's headline feature.
+    // per image — the paper's headline feature.  One-shot blocking form
+    // (a submit-and-wait wrapper over the same handles), same engine.
     let mimo_opts = opts.clone().apptype(AppType::Mimo).ext("gray");
-    let mut engine = LocalEngine::new(2);
-    let mimo = llmapreduce::mapreduce::run(&mimo_opts, &apps, &mut engine)?;
+    let mimo = llmapreduce::mapreduce::run(&mimo_opts, &apps, &engine)?;
     println!(
         "MIMO: {} launches (was {}), elapsed {} (was {})",
         mimo.map.total_launches(),

@@ -39,8 +39,9 @@ fn main() -> Result<()> {
         reducer: Some(Arc::new(WordCountReducer)),
     };
 
-    let mut engine = LocalEngine::new(3);
-    let siso = llmapreduce::mapreduce::run(&opts, &apps, &mut engine)?;
+    // One shared engine serves both runs (the Engine API is `&self`).
+    let engine = LocalEngine::new(3);
+    let siso = llmapreduce::mapreduce::run(&opts, &apps, &engine)?;
     println!(
         "SISO (Fig 15): {} launches over {} files, elapsed {}",
         siso.map.total_launches(),
@@ -50,8 +51,7 @@ fn main() -> Result<()> {
 
     // Fig 16: the same pipeline with --apptype mimo.
     let mimo_opts = opts.clone().apptype(AppType::Mimo);
-    let mut engine = LocalEngine::new(3);
-    let mimo = llmapreduce::mapreduce::run(&mimo_opts, &apps, &mut engine)?;
+    let mimo = llmapreduce::mapreduce::run(&mimo_opts, &apps, &engine)?;
     println!(
         "MIMO (Fig 16): {} launches, elapsed {}  (speed-up {:.2}x)",
         mimo.map.total_launches(),

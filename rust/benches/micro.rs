@@ -86,7 +86,7 @@ fn main() {
 
     // DES engine: events/second at Fig 18's biggest cell (512 tasks).
     let s = bench_fn("sim/512-tasks-np256", 2, 20, || {
-        let mut eng = SimEngine::new(ClusterConfig::with_width(256));
+        let eng = SimEngine::new(ClusterConfig::with_width(256));
         let tasks: Vec<TaskSpec> = (0..512)
             .map(|i| TaskSpec {
                 task_id: i + 1,
@@ -105,7 +105,7 @@ fn main() {
     // Table II trace through the sim: 256 tasks, 43,580 virtual files.
     let s = bench_fn("sim/table2-trace", 2, 20, || {
         let params = llmapreduce::workload::trace::TraceParams::table2();
-        let mut eng = SimEngine::new(ClusterConfig::with_width(256));
+        let eng = SimEngine::new(ClusterConfig::with_width(256));
         std::hint::black_box(
             eng.run(JobSpec::new(
                 "trace",

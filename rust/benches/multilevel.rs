@@ -1,0 +1,202 @@
+//! `cargo bench --bench multilevel` — serial vs concurrent multi-level
+//! fan-out.
+//!
+//! The seed's nested path ran one inner LLMapReduce per subdirectory
+//! *strictly serially*: each branch submitted and waited before the next
+//! branch started, so a hierarchy never used more engine slots than one
+//! inner pipeline could.  The handle-based API submits every branch up
+//! front (`Session::submit` returns pre-execution) and waits afterwards,
+//! so all branches share the slot cap concurrently — the same
+//! barrier-removal argument as `--overlap`, one level up.
+//!
+//! This bench runs the same 6-branch hierarchy both ways on one
+//! `LocalEngine` shape and checks two things: the concurrent wall clock
+//! is measurably lower, and the final merged reduce output is
+//! byte-identical.  Tasks sleep rather than spin so the comparison is
+//! honest on a single-core container.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use llmapreduce::apps::{MapApp, MapInstance, ReduceApp};
+use llmapreduce::mapreduce::multilevel::run_nested;
+use llmapreduce::prelude::*;
+
+const BRANCHES: usize = 6;
+const FILES_PER_BRANCH: usize = 4;
+const SLEEP_MS: u64 = 40;
+const NP: usize = 2; // inner tasks per branch: serial path uses ≤ NP slots
+const SLOTS: usize = 4;
+
+/// Mapper that sleeps `SLEEP_MS` per file and emits a deterministic,
+/// input-derived record.
+struct SleepMapApp;
+
+struct SleepMapInstance;
+
+impl MapApp for SleepMapApp {
+    fn name(&self) -> &str {
+        "sleep-map"
+    }
+
+    fn startup(&self) -> Result<Box<dyn MapInstance>> {
+        Ok(Box::new(SleepMapInstance))
+    }
+}
+
+impl MapInstance for SleepMapInstance {
+    fn process(&mut self, input: &Path, output: &Path) -> Result<()> {
+        std::thread::sleep(Duration::from_millis(SLEEP_MS));
+        let name = input
+            .file_name()
+            .map(|n| n.to_string_lossy().to_string())
+            .unwrap_or_default();
+        fs::write(output, format!("{name}:mapped\n"))
+            .map_err(|e| Error::io(output.to_path_buf(), e))
+    }
+}
+
+/// Deterministic reducer: sorted concat of the directory (excluding its
+/// own output).
+struct SortedConcat;
+
+impl ReduceApp for SortedConcat {
+    fn name(&self) -> &str {
+        "sorted-concat"
+    }
+
+    fn reduce(&self, dir: &Path, out: &Path) -> Result<()> {
+        let mut files: Vec<PathBuf> = fs::read_dir(dir)
+            .map_err(|e| Error::io(dir.to_path_buf(), e))?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.is_file() && *p != *out)
+            .collect();
+        files.sort();
+        let mut merged = String::new();
+        for f in &files {
+            merged.push_str(
+                &fs::read_to_string(f).map_err(|e| Error::io(f.clone(), e))?,
+            );
+        }
+        fs::write(out, merged).map_err(|e| Error::io(out.to_path_buf(), e))
+    }
+}
+
+fn apps() -> Apps {
+    Apps {
+        mapper: Arc::new(SleepMapApp),
+        reducer: Some(Arc::new(SortedConcat)),
+    }
+}
+
+/// The seed's serial semantics: one blocking inner run per branch, then
+/// the same collect-and-merge the nested path performs.
+fn serial_nested(root: &Path, input: &Path) -> Result<(String, Duration)> {
+    let engine = LocalEngine::new(SLOTS);
+    let apps = apps();
+    let output = root.join("out-serial");
+    let collect = root.join("serial-collect");
+    fs::create_dir_all(&collect)
+        .map_err(|e| Error::io(collect.clone(), e))?;
+    let t0 = Instant::now();
+    let mut subdirs: Vec<PathBuf> = fs::read_dir(input)
+        .map_err(|e| Error::io(input.to_path_buf(), e))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.is_dir())
+        .collect();
+    subdirs.sort();
+    for (k, sub) in subdirs.iter().enumerate() {
+        let name = sub
+            .file_name()
+            .map(|n| n.to_string_lossy().to_string())
+            .unwrap_or_default();
+        let opts = Options::new(sub, output.join(&name), "sleep-map")
+            .np(NP)
+            .reducer("sorted-concat")
+            .workdir(root)
+            .pid(83100 + k as u32);
+        let report = run(&opts, &apps, &engine)?;
+        let redout = report.redout_path.expect("inner reducer ran");
+        let dst = collect.join(format!("{name}.part"));
+        fs::copy(&redout, &dst).map_err(|e| Error::io(dst.clone(), e))?;
+    }
+    let out = output.join("llmapreduce.out");
+    SortedConcat.reduce(&collect, &out)?;
+    let elapsed = t0.elapsed();
+    let _ = fs::remove_dir_all(&collect);
+    let text =
+        fs::read_to_string(&out).map_err(|e| Error::io(out.clone(), e))?;
+    Ok((text, elapsed))
+}
+
+/// The handle-based path: every branch submitted before any wait.
+fn concurrent_nested(
+    root: &Path,
+    input: &Path,
+) -> Result<(String, Duration)> {
+    let engine = LocalEngine::new(SLOTS);
+    let apps = apps();
+    let opts = Options::new(input, root.join("out-concurrent"), "sleep-map")
+        .np(NP)
+        .reducer("sorted-concat")
+        .workdir(root)
+        .pid(83200);
+    let t0 = Instant::now();
+    let report =
+        run_nested(&opts, &apps, Some(Arc::new(SortedConcat)), &engine)?;
+    let elapsed = t0.elapsed();
+    let out = report.final_out.expect("outer reducer ran");
+    let text =
+        fs::read_to_string(&out).map_err(|e| Error::io(out.clone(), e))?;
+    Ok((text, elapsed))
+}
+
+fn main() -> Result<()> {
+    let root = std::env::temp_dir()
+        .join(format!("llmr-bench-multilevel-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&root);
+    let input = root.join("input");
+    for b in 0..BRANCHES {
+        let d = input.join(format!("branch-{b}"));
+        fs::create_dir_all(&d).map_err(|e| Error::io(d.clone(), e))?;
+        for i in 0..FILES_PER_BRANCH {
+            let f = d.join(format!("b{b}-{i:02}.txt"));
+            fs::write(&f, "x\n").map_err(|e| Error::io(f.clone(), e))?;
+        }
+    }
+
+    println!("== multi-level fan-out: serial seed path vs concurrent ==");
+    println!(
+        "{BRANCHES} branches x {FILES_PER_BRANCH} files x {SLEEP_MS}ms, \
+         np={NP}, slots={SLOTS}\n"
+    );
+    let (serial_text, serial_elapsed) = serial_nested(&root, &input)?;
+    let (conc_text, conc_elapsed) = concurrent_nested(&root, &input)?;
+
+    assert_eq!(
+        serial_text, conc_text,
+        "concurrent fan-out must produce the identical final reduce output"
+    );
+    let speedup = serial_elapsed.as_secs_f64()
+        / conc_elapsed.as_secs_f64().max(1e-12);
+    println!(
+        "serial     {}   (each branch waits for the previous)",
+        llmapreduce::util::fmt_duration(serial_elapsed)
+    );
+    println!(
+        "concurrent {}   (all branches submitted up front)",
+        llmapreduce::util::fmt_duration(conc_elapsed)
+    );
+    println!("speed-up   {speedup:.2}x, identical final output");
+    assert!(
+        speedup > 1.2,
+        "concurrent multi-level fan-out should beat the serial path \
+         ({speedup:.2}x)"
+    );
+    let _ = fs::remove_dir_all(&root);
+    Ok(())
+}

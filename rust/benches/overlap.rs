@@ -120,8 +120,8 @@ fn run_mode(
         mapper: Arc::new(SleepMapApp),
         reducer: Some(Arc::new(SleepReducer { consume_ms: 10 })),
     };
-    let mut engine = LocalEngine::new(4);
-    run(&opts, &apps, &mut engine)
+    let engine = LocalEngine::new(4);
+    run(&opts, &apps, &engine)
 }
 
 fn main() -> Result<()> {

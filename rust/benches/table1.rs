@@ -30,12 +30,12 @@ fn main() {
             generate_images(&d.join("input"), 6, h, w, 1).unwrap();
             // Repeat the comparison for stability; report each run.
             for run in 1..=3 {
-                let mut eng = LocalEngine::new(2);
+                let eng = LocalEngine::new(2);
                 let r = table1_matlab(
                     &d.join("input"),
                     &d.join(format!("output{run}")),
                     app.clone(),
-                    &mut eng,
+                    &eng,
                 )
                 .unwrap();
                 println!(
@@ -50,8 +50,8 @@ fn main() {
 
     for run in 1..=3 {
         let d = tmp(&format!("java{run}"));
-        let mut eng = LocalEngine::new(3);
-        let r = table1_java(&d, Duration::from_millis(5), &mut eng).unwrap();
+        let eng = LocalEngine::new(3);
+        let r = table1_java(&d, Duration::from_millis(5), &eng).unwrap();
         println!(
             "java-row   run {run}: BLOCK {:>10?}  MIMO {:>10?}  speed-up {:.2}x",
             r.block.elapsed, r.mimo.elapsed, r.speedup()

@@ -50,7 +50,7 @@ pub fn block_vs_mimo(
     example: &str,
     base_opts: &Options,
     apps: &Apps,
-    engine: &mut dyn Engine,
+    engine: &dyn Engine,
 ) -> Result<SpeedupResult> {
     let np = base_opts.np.unwrap_or(1);
     let block_opts = base_opts.clone().apptype(AppType::Siso);
@@ -72,7 +72,7 @@ pub fn table1_matlab(
     input: &Path,
     output: &Path,
     mapper: Arc<dyn MapApp>,
-    engine: &mut dyn Engine,
+    engine: &dyn Engine,
 ) -> Result<SpeedupResult> {
     let opts = Options::new(input, output, mapper.name())
         .np(2)
@@ -90,7 +90,7 @@ pub fn table1_matlab(
 pub fn table1_java(
     workdir: &Path,
     jvm_boot: Duration,
-    engine: &mut dyn Engine,
+    engine: &dyn Engine,
 ) -> Result<SpeedupResult> {
     let input = workdir.join("input");
     let output = workdir.join("output");
@@ -111,7 +111,7 @@ pub fn table1_java(
 /// Table II: the 43,580-file / 256-task trace on the calibrated simulator.
 pub fn table2(params: TraceParams) -> Result<SpeedupResult> {
     let run_mode = |apptype| -> Result<Measurement> {
-        let mut eng = SimEngine::new(ClusterConfig {
+        let eng = SimEngine::new(ClusterConfig {
             dispatch_latency: Duration::from_millis(50),
             ..ClusterConfig::with_width(params.ntasks)
         });
@@ -204,7 +204,7 @@ pub fn fig18_19_sweep(
     let mut sweep = Sweep::default();
     for &np in widths {
         for option in ["DEFAULT", "BLOCK", "MIMO"] {
-            let mut eng = SimEngine::new(ClusterConfig {
+            let eng = SimEngine::new(ClusterConfig {
                 dispatch_latency: dispatch,
                 ..ClusterConfig::with_width(np)
             });
@@ -298,7 +298,7 @@ pub fn ablation_distribution(
                     },
                 });
             }
-            let mut eng = SimEngine::new(ClusterConfig {
+            let eng = SimEngine::new(ClusterConfig {
                 dispatch_latency: Duration::ZERO,
                 ..ClusterConfig::with_width(np)
             });

@@ -30,9 +30,18 @@
 //!     mapper: ImageConvertApp::new(&manifest).unwrap(),
 //!     reducer: None,
 //! };
-//! let mut engine = LocalEngine::new(2);
-//! let report = llmapreduce::mapreduce::run(&opts, &apps, &mut engine).unwrap();
+//! // Handle API: submit returns before anything executes; wait()
+//! // assembles the report.  Submit N invocations before waiting and
+//! // they share the engine's slot cap concurrently.
+//! let engine = LocalEngine::new(2);
+//! let session = Session::new(&engine);
+//! let invocation = session.submit(&opts, &apps).unwrap();
+//! let report = invocation.wait().unwrap();
 //! println!("processed {} files", report.map.total_items());
+//!
+//! // One-shot blocking form (submit-and-wait wrapper over the same):
+//! let report = llmapreduce::mapreduce::run(&opts, &apps, &engine).unwrap();
+//! # let _ = report;
 //! ```
 
 pub mod apps;
@@ -57,7 +66,10 @@ pub mod prelude {
     pub use crate::apps::wordcount::{WordCountApp, WordCountReducer};
     pub use crate::apps::{MapApp, MapInstance, ReduceApp};
     pub use crate::error::{Error, Result};
-    pub use crate::mapreduce::{run, Apps, MapReduceReport};
+    pub use crate::mapreduce::{
+        run, run_nested, Apps, Invocation, InvocationStatus,
+        MapReduceReport, MultiLevelReport, Session,
+    };
     pub use crate::options::{AppType, Distribution, Options, SchedulerKind};
     pub use crate::runtime::Manifest;
     pub use crate::scheduler::failure::FailurePolicy;

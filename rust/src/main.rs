@@ -180,8 +180,8 @@ fn cmd_run(args: &[String]) -> Result<()> {
         .transpose()?;
     let apps = Apps { mapper, reducer };
     let width = slots.or(opts.np).unwrap_or(4);
-    let mut engine = config.build_engine(width);
-    let report = run(&opts, &apps, engine.as_mut())?;
+    let engine = config.build_engine(width);
+    let report = run(&opts, &apps, engine.as_ref())?;
     println!("engine: {}", engine.name());
 
     println!(
@@ -308,12 +308,12 @@ fn cmd_bench(args: &[String]) -> Result<()> {
                 let d = tmp_bench_dir("t1m")?;
                 let (h, w) = app.image_shape();
                 generate_images(&d.join("input"), 6, h, w, 1)?;
-                let mut eng = LocalEngine::new(2);
+                let eng = LocalEngine::new(2);
                 let r = table1_matlab(
                     &d.join("input"),
                     &d.join("output"),
                     app,
-                    &mut eng,
+                    &eng,
                 )?;
                 println!("{}", r.table());
                 println!("paper: 2.41x   measured: {:.2}x\n", r.speedup());
@@ -322,10 +322,10 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         }
         // Java row: wordcount over 21 files, 3 tasks, cyclic.
         let d = tmp_bench_dir("t1j")?;
-        let mut eng = LocalEngine::new(3);
+        let eng = LocalEngine::new(3);
         // JVM boot stand-in: 5ms against ~1.5ms/file of counting gives the
         // paper's startup:compute regime (speed-up ≈ 2.85 at 7 files/task).
-        let r = table1_java(&d, Duration::from_millis(5), &mut eng)?;
+        let r = table1_java(&d, Duration::from_millis(5), &eng)?;
         println!("{}", r.table());
         println!("paper: 2.85x   measured: {:.2}x\n", r.speedup());
     }

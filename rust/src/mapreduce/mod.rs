@@ -2,17 +2,25 @@
 //!
 //! * [`planner`] / [`distribution`] — files × `--np`/`--ndata` →
 //!   balanced per-task assignments (block or cyclic);
-//! * [`pipeline`] — the Fig 1 flow: scan → array job → dependent reducer;
+//! * [`session`] — the handle-based invocation API:
+//!   [`Session::submit`] returns an [`Invocation`] before anything
+//!   executes, so N invocations share one engine concurrently;
+//! * [`pipeline`] — the Fig 1 flow (scan → array job → dependent
+//!   reducer) as a blocking submit-and-wait wrapper over [`session`];
 //! * [`mimo`] — the SISO→MIMO morph that gives the paper its headline;
 //! * [`subdir`] — `--subdir` output-tree replication;
-//! * [`multilevel`] — nested LLMapReduce over directory hierarchies.
+//! * [`multilevel`] — nested LLMapReduce over directory hierarchies,
+//!   fanning every subdirectory pipeline out concurrently.
 
 pub mod distribution;
 pub mod mimo;
 pub mod multilevel;
 pub mod pipeline;
 pub mod planner;
+pub mod session;
 pub mod subdir;
 
+pub use multilevel::{run_nested, run_nested_depth, MultiLevelReport};
 pub use pipeline::{run, Apps, MapReduceReport};
 pub use planner::{plan, Plan, PlannedTask};
+pub use session::{Invocation, InvocationStatus, Session};

@@ -4,29 +4,55 @@
 //! is less than 10,000.  LLMapReduce users can build a nested call to
 //! LLMapReduce for processing whole hierarchies of data."
 //!
-//! The outer level maps over the immediate subdirectories of the input
-//! root — one *inner* LLMapReduce invocation per subdirectory — and an
-//! optional outer reducer merges the per-subdirectory reduce outputs.
+//! The outer level maps over the subdirectories of the input root — one
+//! *inner* LLMapReduce invocation per leaf directory — and an optional
+//! outer reducer merges the per-directory reduce outputs bottom-up.
 //! This is the paper's title feature: map-reduce jobs whose mappers are
 //! themselves map-reduce jobs.
+//!
+//! # Concurrent fan-out
+//!
+//! Inner pipelines are independent, so they are *all submitted up
+//! front* through one [`Session`] and only then waited: every
+//! subdirectory's map/reduce jobs share the engine's slot cap
+//! concurrently instead of running branch-by-branch.  Removing that
+//! serialization is the same barrier argument as `--overlap` (DESIGN.md
+//! §4), one level up — `cargo bench --bench multilevel` measures the
+//! win over the serial path.
+//!
+//! Each leaf invocation gets a collision-free derived pid
+//! (`base_pid * 1000 + seq`, `seq` enumerating leaves across the whole
+//! tree), so any fan-out width or depth keeps distinct `.MAPRED.<pid>`
+//! and `.partials.<pid>` scratch.  The per-level merge stages through
+//! `.multilevel.<base_pid>`, likewise pid-suffixed so concurrent nested
+//! runs can share an output root.
 
 use std::fs;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::apps::ReduceApp;
 use crate::error::{Error, IoContext, Result};
 use crate::mapreduce::pipeline::{run, Apps, MapReduceReport};
+use crate::mapreduce::session::{Invocation, Session};
 use crate::options::Options;
 use crate::scheduler::Engine;
 
 /// Report for a nested invocation.
 #[derive(Debug)]
 pub struct MultiLevelReport {
-    /// (subdirectory name, inner report) per inner invocation.
+    /// (subdirectory path, inner report) per inner invocation.
     pub inner: Vec<(String, MapReduceReport)>,
     /// Path of the final merged output, when an outer reducer ran.
     pub final_out: Option<PathBuf>,
+    /// End-to-end elapsed time of the whole nested run, mirroring
+    /// [`MapReduceReport::total_elapsed`]: wall-clock engines measure
+    /// the true submit→wait span (inner invocations overlap, so summing
+    /// their elapsed times would double-count); virtual-time engines
+    /// report the summed inner elapsed (the simulator serializes, so
+    /// the sum *is* its end-to-end time).
+    pub total_elapsed: Duration,
 }
 
 impl MultiLevelReport {
@@ -34,7 +60,17 @@ impl MultiLevelReport {
         self.inner.iter().map(|(_, r)| r.map.total_items()).sum()
     }
 
-    pub fn elapsed(&self) -> std::time::Duration {
+    /// End-to-end elapsed (virtual or wall) time of the nested run.
+    pub fn elapsed(&self) -> Duration {
+        self.total_elapsed
+    }
+
+    /// Sum of the inner invocations' elapsed times — slot-time consumed
+    /// rather than wall time.  On a wall-clock engine this exceeds
+    /// [`MultiLevelReport::elapsed`] exactly when inner pipelines
+    /// overlapped (the concurrency win); on a virtual-time engine the
+    /// two agree.
+    pub fn summed_elapsed(&self) -> Duration {
         self.inner.iter().map(|(_, r)| r.elapsed()).sum()
     }
 }
@@ -45,65 +81,15 @@ impl MultiLevelReport {
 ///
 /// Each inner invocation inherits all options but gets
 /// `input = <subdir>`, `output = <output>/<subdir name>` and a derived
-/// pid (`pid*1000 + k`) so the `.MAPRED` directories don't collide.
+/// pid (see the module docs), and **all inner invocations run
+/// concurrently** on the shared engine.
 pub fn run_nested(
     opts: &Options,
     apps: &Apps,
     outer_reducer: Option<Arc<dyn ReduceApp>>,
-    engine: &mut dyn Engine,
+    engine: &dyn Engine,
 ) -> Result<MultiLevelReport> {
-    let mut subdirs: Vec<PathBuf> = fs::read_dir(&opts.input)
-        .at(&opts.input)?
-        .filter_map(|e| e.ok())
-        .map(|e| e.path())
-        .filter(|p| p.is_dir())
-        .collect();
-    subdirs.sort();
-    if subdirs.is_empty() {
-        return Err(Error::EmptyInput(opts.input.clone()));
-    }
-
-    let base_pid = opts.effective_pid();
-    let mut inner_reports = Vec::with_capacity(subdirs.len());
-    for (k, sub) in subdirs.iter().enumerate() {
-        let name = sub
-            .file_name()
-            .and_then(|n| n.to_str())
-            .unwrap_or("sub")
-            .to_string();
-        let inner_opts = Options {
-            input: sub.clone(),
-            output: opts.output.join(&name),
-            pid: Some(base_pid.wrapping_mul(1000).wrapping_add(k as u32 + 1)),
-            ..opts.clone()
-        };
-        let report = run(&inner_opts, apps, engine)?;
-        inner_reports.push((name, report));
-    }
-
-    // Outer reduce: merge the inner reduce outputs (or, without inner
-    // reducers, the union of inner map outputs) into one file.
-    let final_out = if let Some(outer) = outer_reducer {
-        let collect_dir = opts.output.join(".multilevel");
-        fs::create_dir_all(&collect_dir).at(&collect_dir)?;
-        for (name, report) in &inner_reports {
-            if let Some(redout) = &report.redout_path {
-                let dst = collect_dir.join(format!("{name}.part"));
-                fs::copy(redout, &dst).at(redout)?;
-            }
-        }
-        let out = opts.output.join(&opts.redout);
-        outer.reduce(&collect_dir, &out)?;
-        fs::remove_dir_all(&collect_dir).ok();
-        Some(out)
-    } else {
-        None
-    };
-
-    Ok(MultiLevelReport {
-        inner: inner_reports,
-        final_out,
-    })
+    run_nested_depth(opts, apps, outer_reducer, engine, 1)
 }
 
 /// Run an N-level nested map-reduce: recurse `depth` levels of
@@ -113,89 +99,215 @@ pub fn run_nested(
 ///
 /// `depth == 0` is a plain [`run`]; `depth == 1` equals [`run_nested`].
 /// This is the paper's "whole hierarchies of data" taken literally.
+/// All leaf pipelines across all branches are submitted before any is
+/// waited, so the whole hierarchy shares the engine concurrently; the
+/// merges then run bottom-up over the finished outputs.
 pub fn run_nested_depth(
     opts: &Options,
     apps: &Apps,
     outer_reducer: Option<Arc<dyn ReduceApp>>,
-    engine: &mut dyn Engine,
+    engine: &dyn Engine,
     depth: usize,
 ) -> Result<MultiLevelReport> {
-    if depth <= 1 {
-        if depth == 0 {
-            let report = run(opts, apps, engine)?;
-            let final_out = report.redout_path.clone();
-            return Ok(MultiLevelReport {
-                inner: vec![("".to_string(), report)],
-                final_out,
-            });
-        }
-        return run_nested(opts, apps, outer_reducer, engine);
+    let t0 = Instant::now();
+    if depth == 0 {
+        let report = run(opts, apps, engine)?;
+        let final_out = report.redout_path.clone();
+        let total_elapsed = if engine.virtual_time() {
+            report.elapsed()
+        } else {
+            t0.elapsed()
+        };
+        return Ok(MultiLevelReport {
+            inner: vec![(String::new(), report)],
+            final_out,
+            total_elapsed,
+        });
     }
 
-    let mut subdirs: Vec<PathBuf> = fs::read_dir(&opts.input)
-        .at(&opts.input)?
+    // Phase 1: walk the hierarchy and submit every leaf pipeline —
+    // nothing is waited yet, so all branches share the slot cap.  An
+    // unpinned base pid goes through the process-unique derivation:
+    // two concurrent unpinned nested runs must not pin their leaves
+    // (base * 1000 + seq) or their `.multilevel.<base>` staging to the
+    // same raw process id.
+    let session = Session::new(engine);
+    let base_pid = crate::mapreduce::session::auto_pid(opts.pid);
+    let mut seq: u32 = 0;
+    let mut pending = Vec::new();
+    let tree = submit_tree(
+        &session,
+        opts,
+        apps,
+        &opts.input,
+        &opts.output,
+        "",
+        depth,
+        base_pid,
+        &mut seq,
+        &mut pending,
+    )?;
+
+    // Phase 2: wait out every leaf.  On failure the remaining handles
+    // drop, which blocks until their jobs settle and then cleans their
+    // scratch — nothing leaks (see the session module docs).
+    let mut inner = Vec::with_capacity(pending.len());
+    for (name, inv) in pending {
+        inner.push((name, inv.wait()?));
+    }
+
+    // Phase 3: bottom-up merges over the finished outputs.
+    let final_out = match &outer_reducer {
+        Some(outer) => {
+            merge_tree(&tree, &inner, outer.as_ref(), &opts.redout, base_pid)?
+        }
+        None => None,
+    };
+
+    let total_elapsed = if engine.virtual_time() {
+        inner.iter().map(|(_, r)| r.elapsed()).sum()
+    } else {
+        t0.elapsed()
+    };
+    Ok(MultiLevelReport {
+        inner,
+        final_out,
+        total_elapsed,
+    })
+}
+
+/// One node of the walked hierarchy: a leaf holds the index of its
+/// submitted invocation; an internal node holds its children in sorted
+/// subdirectory order.
+struct TreeNode {
+    /// Last path segment ("s1" for prefix "site-a/s1"); the merge names
+    /// this node's part file after it.
+    name: String,
+    /// Output directory of this node.
+    output: PathBuf,
+    children: Vec<TreeNode>,
+    /// Index into the submitted-invocations vector, for leaves.
+    leaf: Option<usize>,
+}
+
+/// Recursively submit the leaf pipelines of `input` (at `depth` more
+/// levels of nesting) through `session`, collecting handles into
+/// `pending` and returning the merge tree.  `seq` enumerates leaves
+/// across the whole walk, keeping every derived pid distinct no matter
+/// the fan-out or depth.
+#[allow(clippy::too_many_arguments)]
+fn submit_tree<'e>(
+    session: &Session<'e>,
+    opts: &Options,
+    apps: &Apps,
+    input: &Path,
+    output: &Path,
+    prefix: &str,
+    depth: usize,
+    base_pid: u32,
+    seq: &mut u32,
+    pending: &mut Vec<(String, Invocation<'e>)>,
+) -> Result<TreeNode> {
+    let name = input
+        .file_name()
+        .and_then(|n| n.to_str())
+        .unwrap_or("sub")
+        .to_string();
+    if depth == 0 {
+        *seq += 1;
+        let inner_opts = Options {
+            input: input.to_path_buf(),
+            output: output.to_path_buf(),
+            pid: Some(
+                base_pid.wrapping_mul(1000).wrapping_add(*seq),
+            ),
+            ..opts.clone()
+        };
+        let inv = session.submit(&inner_opts, apps)?;
+        pending.push((prefix.to_string(), inv));
+        return Ok(TreeNode {
+            name,
+            output: output.to_path_buf(),
+            children: Vec::new(),
+            leaf: Some(pending.len() - 1),
+        });
+    }
+
+    let mut subdirs: Vec<PathBuf> = fs::read_dir(input)
+        .at(input)?
         .filter_map(|e| e.ok())
         .map(|e| e.path())
         .filter(|p| p.is_dir())
         .collect();
     subdirs.sort();
     if subdirs.is_empty() {
-        return Err(Error::EmptyInput(opts.input.clone()));
+        return Err(Error::EmptyInput(input.to_path_buf()));
     }
 
-    let base_pid = opts.effective_pid();
-    let mut inner_all = Vec::new();
-    let mut child_outs = Vec::new();
-    for (k, sub) in subdirs.iter().enumerate() {
-        let name = sub
+    let mut children = Vec::with_capacity(subdirs.len());
+    for sub in &subdirs {
+        let sub_name = sub
             .file_name()
             .and_then(|n| n.to_str())
             .unwrap_or("sub")
             .to_string();
-        let inner_opts = Options {
-            input: sub.clone(),
-            output: opts.output.join(&name),
-            pid: Some(
-                base_pid
-                    .wrapping_mul(100)
-                    .wrapping_add(depth as u32 * 10 + k as u32 + 1),
-            ),
-            ..opts.clone()
+        let child_prefix = if prefix.is_empty() {
+            sub_name.clone()
+        } else {
+            format!("{prefix}/{sub_name}")
         };
-        let child = run_nested_depth(
-            &inner_opts,
+        children.push(submit_tree(
+            session,
+            opts,
             apps,
-            outer_reducer.clone(),
-            engine,
+            sub,
+            &output.join(&sub_name),
+            &child_prefix,
             depth - 1,
-        )?;
-        if let Some(out) = &child.final_out {
-            child_outs.push((name.clone(), out.clone()));
-        }
-        for (child_name, r) in child.inner {
-            inner_all.push((format!("{name}/{child_name}"), r));
+            base_pid,
+            seq,
+            pending,
+        )?);
+    }
+    Ok(TreeNode {
+        name,
+        output: output.to_path_buf(),
+        children,
+        leaf: None,
+    })
+}
+
+/// Merge the hierarchy bottom-up: a leaf contributes its inner reduce
+/// output; an internal node collects its children's contributions into
+/// a pid-suffixed staging dir and reduces them into `<output>/<redout>`.
+fn merge_tree(
+    node: &TreeNode,
+    inner: &[(String, MapReduceReport)],
+    outer: &dyn ReduceApp,
+    redout: &str,
+    base_pid: u32,
+) -> Result<Option<PathBuf>> {
+    if let Some(i) = node.leaf {
+        return Ok(inner[i].1.redout_path.clone());
+    }
+    let mut parts: Vec<(String, PathBuf)> = Vec::new();
+    for child in &node.children {
+        if let Some(out) =
+            merge_tree(child, inner, outer, redout, base_pid)?
+        {
+            parts.push((child.name.clone(), out));
         }
     }
-
-    let final_out = if let Some(outer) = outer_reducer {
-        let collect_dir = opts.output.join(".multilevel");
-        fs::create_dir_all(&collect_dir).at(&collect_dir)?;
-        for (name, out) in &child_outs {
-            let dst = collect_dir.join(format!("{name}.part"));
-            fs::copy(out, &dst).at(out)?;
-        }
-        let out = opts.output.join(&opts.redout);
-        outer.reduce(&collect_dir, &out)?;
-        fs::remove_dir_all(&collect_dir).ok();
-        Some(out)
-    } else {
-        None
-    };
-
-    Ok(MultiLevelReport {
-        inner: inner_all,
-        final_out,
-    })
+    let collect_dir = node.output.join(format!(".multilevel.{base_pid}"));
+    fs::create_dir_all(&collect_dir).at(&collect_dir)?;
+    for (name, out) in &parts {
+        let dst = collect_dir.join(format!("{name}.part"));
+        fs::copy(out, &dst).at(out)?;
+    }
+    let out = node.output.join(redout);
+    outer.reduce(&collect_dir, &out)?;
+    fs::remove_dir_all(&collect_dir).ok();
+    Ok(Some(out))
 }
 
 #[cfg(test)]
@@ -236,9 +348,9 @@ mod tests {
             mapper: Arc::new(CountingApp::new()),
             reducer: Some(Arc::new(ConcatReducer)),
         };
-        let mut eng = LocalEngine::new(2);
+        let eng = LocalEngine::new(2);
         let report =
-            run_nested(&opts, &apps, Some(Arc::new(ConcatReducer)), &mut eng)
+            run_nested(&opts, &apps, Some(Arc::new(ConcatReducer)), &eng)
                 .unwrap();
         assert_eq!(report.inner.len(), 2);
         assert_eq!(report.total_items(), 5);
@@ -249,6 +361,9 @@ mod tests {
         let final_out = report.final_out.unwrap();
         let text = fs::read_to_string(final_out).unwrap();
         assert_eq!(text.matches("#mapped").count(), 5);
+        // Merge staging is scratch: cleaned up after the reduce.
+        assert!(!output.join(".multilevel.70001").exists());
+        assert!(report.elapsed() > Duration::ZERO);
     }
 
     #[test]
@@ -259,8 +374,8 @@ mod tests {
             mapper: Arc::new(CountingApp::new()),
             reducer: None,
         };
-        let mut eng = LocalEngine::new(1);
-        let report = run_nested(&opts, &apps, None, &mut eng).unwrap();
+        let eng = LocalEngine::new(1);
+        let report = run_nested(&opts, &apps, None, &eng).unwrap();
         assert!(report.final_out.is_none());
         assert_eq!(report.inner.len(), 2);
     }
@@ -290,12 +405,12 @@ mod tests {
             mapper: Arc::new(CountingApp::new()),
             reducer: Some(Arc::new(ConcatReducer)),
         };
-        let mut eng = LocalEngine::new(2);
+        let eng = LocalEngine::new(2);
         let report = run_nested_depth(
             &opts,
             &apps,
             Some(Arc::new(ConcatReducer)),
-            &mut eng,
+            &eng,
             2,
         )
         .unwrap();
@@ -306,6 +421,11 @@ mod tests {
         assert_eq!(text.matches("#mapped").count(), 8);
         // Inner names carry the hierarchy path.
         assert!(report.inner.iter().any(|(n, _)| n == "site-a/s1"));
+        // Every intermediate level merged too.
+        assert!(root
+            .join("output/site-a")
+            .join("llmapreduce.out")
+            .is_file());
     }
 
     #[test]
@@ -320,9 +440,8 @@ mod tests {
             mapper: Arc::new(CountingApp::new()),
             reducer: None,
         };
-        let mut eng = LocalEngine::new(1);
-        let r =
-            run_nested_depth(&opts, &apps, None, &mut eng, 0).unwrap();
+        let eng = LocalEngine::new(1);
+        let r = run_nested_depth(&opts, &apps, None, &eng, 0).unwrap();
         assert_eq!(r.total_items(), 1);
     }
 
@@ -336,7 +455,41 @@ mod tests {
             mapper: Arc::new(CountingApp::new()),
             reducer: None,
         };
-        let mut eng = LocalEngine::new(1);
-        assert!(run_nested(&opts, &apps, None, &mut eng).is_err());
+        let eng = LocalEngine::new(1);
+        assert!(run_nested(&opts, &apps, None, &eng).is_err());
+    }
+
+    #[test]
+    fn derived_pids_stay_distinct_on_wide_and_deep_trees() {
+        // ≥10 subdirectories used to collide under the old
+        // base*100 + depth*10 + k derivation; the leaf-sequence scheme
+        // cannot (distinct seq per leaf).  Checked through the visible
+        // artifact: every inner invocation keeps its own .MAPRED dir.
+        let root = tmp("widepids");
+        let input = root.join("input");
+        for k in 0..12 {
+            let d = input.join(format!("dir-{k:02}"));
+            fs::create_dir_all(&d).unwrap();
+            fs::write(d.join("x.txt"), "x").unwrap();
+        }
+        let opts = Options::new(&input, root.join("output"), "counting-app")
+            .keep(true)
+            .workdir(&root)
+            .pid(70020);
+        let apps = Apps {
+            mapper: Arc::new(CountingApp::new()),
+            reducer: None,
+        };
+        let eng = LocalEngine::new(2);
+        let report = run_nested(&opts, &apps, None, &eng).unwrap();
+        assert_eq!(report.inner.len(), 12);
+        let kept = fs::read_dir(&root)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                e.file_name().to_string_lossy().starts_with(".MAPRED.")
+            })
+            .count();
+        assert_eq!(kept, 12, "one distinct .MAPRED.<pid> per leaf");
     }
 }

@@ -12,6 +12,13 @@
 //! generated exactly as on a real cluster, then the job is *executed* on
 //! the configured engine (local threads or the discrete-event simulator).
 //!
+//! [`run`] is the classic blocking surface, kept for one-shot callers:
+//! it is a thin submit-and-wait over the handle-based API in
+//! [`crate::mapreduce::session`].  Callers that want several invocations
+//! in flight on one engine use [`crate::mapreduce::Session`] directly —
+//! that is how [`crate::mapreduce::multilevel`] fans a hierarchy out
+//! concurrently.
+//!
 //! # Overlapped reduce (`--overlap=true`, DESIGN.md §4)
 //!
 //! The classic path barriers the single reduce task on the *whole* map
@@ -28,23 +35,21 @@
 //! also run it conservatively barriered.  The flag is ignored — falling
 //! back to the barrier — whenever overlap could change *what* is
 //! reduced: no reducer, `--subdir`, or a reducer without partial support
-//! (see [`crate::apps::ReduceApp::supports_partial`]).
+//! (see [`crate::apps::ReduceApp::supports_partial`]).  The partials
+//! staging directory is `<output>/.partials.<pid>` — pid-suffixed, so
+//! concurrent invocations sharing an output directory keep separate
+//! scratch.
 
-use std::fs;
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::apps::{MapApp, ReduceApp};
 use crate::error::Result;
-use crate::mapreduce::planner::{plan, Plan};
-use crate::mapreduce::subdir::replicate_output_tree;
+use crate::mapreduce::planner::Plan;
+use crate::mapreduce::session::Session;
 use crate::options::Options;
-use crate::scheduler::dialect::dialect_for;
-use crate::scheduler::{Engine, JobSpec, TaskSpec, TaskWork};
-use crate::workdir::scan::scan_input;
-use crate::workdir::scripts::{reduce_run_script, write_all};
-use crate::workdir::MapRedDir;
+use crate::scheduler::Engine;
 
 /// Result of one LLMapReduce invocation.
 #[derive(Debug)]
@@ -64,10 +69,11 @@ pub struct MapReduceReport {
     /// Whether the overlapped map→reduce path ran.
     pub overlapped: bool,
     /// End-to-end elapsed time of the whole invocation.  Wall-clock
-    /// engines are measured around the full submit→wait span (jobs may
-    /// overlap, so summing per-job makespans would double-count); virtual
-    /// engines report the sum of job makespans (the simulator serializes
-    /// chained jobs, so the sum *is* its chain elapsed).
+    /// engines report the span the chain's jobs cover — the longest job
+    /// makespan, i.e. submission to last completion (jobs overlap, so
+    /// summing per-job makespans would double-count); virtual engines
+    /// report the sum of job makespans (the simulator serializes chained
+    /// jobs, so the sum *is* its chain elapsed).
     pub total_elapsed: Duration,
 }
 
@@ -104,183 +110,15 @@ pub struct Apps {
     pub reducer: Option<Arc<dyn ReduceApp>>,
 }
 
-/// Run one complete LLMapReduce invocation on `engine`.
+/// Run one complete LLMapReduce invocation on `engine`, blocking until
+/// it finishes — submit-and-wait over the handle API
+/// ([`Session::submit`] / [`crate::mapreduce::Invocation::wait`]).
 pub fn run(
     opts: &Options,
     apps: &Apps,
-    engine: &mut dyn Engine,
+    engine: &dyn Engine,
 ) -> Result<MapReduceReport> {
-    opts.validate()?;
-    let dialect = dialect_for(opts.scheduler);
-
-    // Step 1: identify input files.
-    let files = scan_input(&opts.input, opts.subdir)?;
-
-    // Plan tasks and output naming.
-    let the_plan = plan(&files, opts, dialect.as_ref())?;
-
-    // Generate the .MAPRED.PID artifacts (Figs 8/9/12) and output dirs.
-    let base = opts.workdir.clone().unwrap_or_else(|| {
-        std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."))
-    });
-    let wd = MapRedDir::create(&base, opts.effective_pid(), opts.keep)?;
-    write_all(&wd, &the_plan, opts, dialect.as_ref())?;
-    replicate_output_tree(&the_plan)?;
-
-    // Step 2: the mapper array job.
-    let t0 = Instant::now();
-    let map_tasks: Vec<TaskSpec> = the_plan
-        .tasks
-        .iter()
-        .map(|t| TaskSpec {
-            task_id: t.task_id,
-            work: TaskWork::Map {
-                app: apps.mapper.clone(),
-                pairs: t.pairs.clone(),
-                mode: opts.apptype,
-            },
-        })
-        .collect();
-    let map_spec = JobSpec::new(apps.mapper.name(), map_tasks)
-        .exclusive(opts.exclusive);
-    let map_id = engine.submit(map_spec)?;
-
-    // Step 3: the dependent reduce — barriered (Fig 1) or overlapped.
-    // --overlap must not change *what* gets reduced, so it falls back to
-    // the barrier when it would: under --subdir (the classic reducer
-    // contract scans only the top level of the output dir, while
-    // partials would consume the nested per-task outputs explicitly)
-    // and for reducers that cannot fold partials (external command
-    // reducers, whose contract is a directory of real mapper outputs).
-    let overlap = opts.overlap
-        && !opts.subdir
-        && apps
-            .reducer
-            .as_ref()
-            .is_some_and(|r| r.supports_partial());
-    let mut partials_dir: Option<PathBuf> = None;
-    let (reduce_id, partial_id, redout_path) = if let Some(reducer) =
-        &apps.reducer
-    {
-        let redout = opts.output.join(&opts.redout);
-        wd.write(
-            "run_reduce",
-            &reduce_run_script(
-                reducer.name(),
-                &opts.output,
-                &redout,
-            ),
-        )?;
-        // The (final) reduce job is identical in both modes except for
-        // the directory it scans and the job it depends on.
-        let reduce_spec = |input_dir: PathBuf| {
-            JobSpec::new(
-                reducer.name(),
-                vec![TaskSpec {
-                    task_id: 1,
-                    work: TaskWork::Reduce {
-                        app: reducer.clone(),
-                        input_dir,
-                        out_file: redout.clone(),
-                    },
-                }],
-            )
-        };
-        if overlap {
-            // Step 3a: one partial-reduce task per mapper task, each
-            // released the moment *its* mapper task completes.  Clear the
-            // staging dir first: stale partials from an earlier run (a
-            // failure, or --keep) must not leak into the final merge.
-            let pdir = opts.output.join(".partials");
-            let _ = fs::remove_dir_all(&pdir);
-            fs::create_dir_all(&pdir)
-                .map_err(|e| crate::error::Error::io(pdir.clone(), e))?;
-            let partial_tasks: Vec<TaskSpec> = (0..the_plan.tasks.len())
-                .map(|i| TaskSpec {
-                    task_id: i + 1,
-                    work: TaskWork::ReducePartial {
-                        app: reducer.clone(),
-                        files: the_plan.task_outputs(i),
-                        out_file: pdir.join(format!("part_{:05}", i + 1)),
-                    },
-                })
-                .collect();
-            let partial_spec = JobSpec::new(
-                format!("{}.partial", reducer.name()),
-                partial_tasks,
-            )
-            .after_tasks(map_id, the_plan.overlap_edges());
-            let pid = engine.submit(partial_spec)?;
-            // Step 3b: the final merge over the partials directory.
-            let final_spec = reduce_spec(pdir.clone()).after(pid);
-            partials_dir = Some(pdir);
-            (Some(engine.submit(final_spec)?), Some(pid), Some(redout))
-        } else {
-            let spec = reduce_spec(opts.output.clone()).after(map_id);
-            (Some(engine.submit(spec)?), None, Some(redout))
-        }
-    } else {
-        (None, None, None)
-    };
-
-    // Wait for completion (reduce waits on map transitively).  The
-    // partials staging dir is scratch space like .MAPRED.PID: clear it
-    // on the failure path too, not just after a clean run.
-    type Waited = (
-        crate::scheduler::JobReport,
-        Option<crate::scheduler::JobReport>,
-        Option<crate::scheduler::JobReport>,
-    );
-    let wait_all = |engine: &mut dyn Engine| -> Result<Waited> {
-        if let Some(rid) = reduce_id {
-            let reduce_report = Some(engine.wait(rid)?);
-            let partial_report = match partial_id {
-                Some(pid) => Some(engine.wait(pid)?),
-                None => None,
-            };
-            Ok((engine.wait(map_id)?, partial_report, reduce_report))
-        } else {
-            Ok((engine.wait(map_id)?, None, None))
-        }
-    };
-    let waited = wait_all(&mut *engine);
-    if let Some(pdir) = &partials_dir {
-        if !opts.keep {
-            let _ = fs::remove_dir_all(pdir);
-        }
-    }
-    let (map_report, partial_report, reduce_report) = waited?;
-
-    let total_elapsed = if engine.virtual_time() {
-        map_report.makespan
-            + partial_report
-                .as_ref()
-                .map(|r| r.makespan)
-                .unwrap_or_default()
-            + reduce_report
-                .as_ref()
-                .map(|r| r.makespan)
-                .unwrap_or_default()
-    } else {
-        t0.elapsed()
-    };
-
-    let mapred_dir = if opts.keep {
-        Some(wd.persist())
-    } else {
-        None // dropped -> deleted, the paper's default
-    };
-
-    Ok(MapReduceReport {
-        map: map_report,
-        partials: partial_report,
-        reduce: reduce_report,
-        plan: the_plan,
-        redout_path,
-        mapred_dir,
-        overlapped: overlap,
-        total_elapsed,
-    })
+    Session::new(engine).submit(opts, apps)?.wait()
 }
 
 #[cfg(test)]
@@ -323,8 +161,8 @@ mod tests {
             mapper: Arc::new(CountingApp::new()),
             reducer: None,
         };
-        let mut eng = LocalEngine::new(2);
-        let report = run(&opts, &apps, &mut eng).unwrap();
+        let eng = LocalEngine::new(2);
+        let report = run(&opts, &apps, &eng).unwrap();
         assert_eq!(report.plan.tasks.len(), 2);
         assert_eq!(report.map.total_items(), 6);
         assert!(report.reduce.is_none());
@@ -345,8 +183,8 @@ mod tests {
             mapper: Arc::new(CountingApp::new()),
             reducer: Some(Arc::new(ConcatReducer)),
         };
-        let mut eng = LocalEngine::new(2);
-        let report = run(&opts, &apps, &mut eng).unwrap();
+        let eng = LocalEngine::new(2);
+        let report = run(&opts, &apps, &eng).unwrap();
         let redout = report.redout_path.clone().unwrap();
         assert!(redout.ends_with("llmapreduce.out"));
         let merged = fs::read_to_string(&redout).unwrap();
@@ -366,8 +204,8 @@ mod tests {
             mapper: app.clone(),
             reducer: None,
         };
-        let mut eng = LocalEngine::new(2);
-        let report = run(&opts, &apps, &mut eng).unwrap();
+        let eng = LocalEngine::new(2);
+        let report = run(&opts, &apps, &eng).unwrap();
         assert_eq!(report.map.total_launches(), 2);
         assert_eq!(app.startups.load(Ordering::SeqCst), 2);
         assert_eq!(report.map.total_items(), 8);
@@ -383,8 +221,8 @@ mod tests {
             mapper: Arc::new(CountingApp::new()),
             reducer: None,
         };
-        let mut eng = LocalEngine::new(1);
-        let report = run(&opts, &apps, &mut eng).unwrap();
+        let eng = LocalEngine::new(1);
+        let report = run(&opts, &apps, &eng).unwrap();
         let wd = report.mapred_dir.clone().unwrap();
         assert!(wd.ends_with(".MAPRED.90004"));
         assert!(wd.join("submit.sh").is_file());
@@ -401,8 +239,8 @@ mod tests {
             mapper: Arc::new(CountingApp::new()),
             reducer: None,
         };
-        let mut eng = LocalEngine::new(1);
-        let report = run(&opts, &apps, &mut eng).unwrap();
+        let eng = LocalEngine::new(1);
+        let report = run(&opts, &apps, &eng).unwrap();
         assert!(report.mapred_dir.is_none());
         let cwd = std::env::current_dir().unwrap();
         assert!(!cwd.join(".MAPRED.90005").exists());
@@ -419,9 +257,9 @@ mod tests {
             mapper: Arc::new(CountingApp::new()),
             reducer: Some(Arc::new(ConcatReducer)),
         };
-        let mut eng =
+        let eng =
             SimEngine::new(ClusterConfig::with_width(3)).execute_payloads(true);
-        let report = run(&opts, &apps, &mut eng).unwrap();
+        let report = run(&opts, &apps, &eng).unwrap();
         // Virtual makespan is deterministic and real outputs exist.
         assert!(report.map.makespan > std::time::Duration::ZERO);
         let merged =
@@ -441,8 +279,8 @@ mod tests {
             mapper: Arc::new(CountingApp::new()),
             reducer: Some(Arc::new(ConcatReducer)),
         };
-        let mut eng = LocalEngine::new(2);
-        let report = run(&opts, &apps, &mut eng).unwrap();
+        let eng = LocalEngine::new(2);
+        let report = run(&opts, &apps, &eng).unwrap();
         assert!(report.overlapped);
         let partials = report.partials.as_ref().unwrap();
         assert_eq!(partials.tasks.len(), 3, "one partial per map task");
@@ -452,7 +290,7 @@ mod tests {
                 .unwrap();
         assert_eq!(merged.matches("#mapped").count(), 6);
         // Staging directory is scratch: cleaned up without --keep.
-        assert!(!output.join(".partials").exists());
+        assert!(!output.join(".partials.90008").exists());
         assert!(report.utilization() > 0.0);
         assert!(report.elapsed() > std::time::Duration::ZERO);
     }
@@ -469,9 +307,9 @@ mod tests {
             mapper: Arc::new(CountingApp::new()),
             reducer: Some(Arc::new(ConcatReducer)),
         };
-        let mut eng = SimEngine::new(ClusterConfig::with_width(2))
+        let eng = SimEngine::new(ClusterConfig::with_width(2))
             .execute_payloads(true);
-        let report = run(&opts, &apps, &mut eng).unwrap();
+        let report = run(&opts, &apps, &eng).unwrap();
         let merged =
             fs::read_to_string(report.redout_path.unwrap()).unwrap();
         assert_eq!(merged.matches("#mapped").count(), 4);
@@ -488,11 +326,11 @@ mod tests {
             mapper: Arc::new(CountingApp::new()),
             reducer: None,
         };
-        let mut eng = LocalEngine::new(1);
-        let report = run(&opts, &apps, &mut eng).unwrap();
+        let eng = LocalEngine::new(1);
+        let report = run(&opts, &apps, &eng).unwrap();
         assert!(!report.overlapped);
         assert!(report.partials.is_none());
-        assert!(!output.join(".partials").exists());
+        assert!(!output.join(".partials.90010").exists());
     }
 
     #[test]
@@ -510,8 +348,8 @@ mod tests {
             mapper: Arc::new(CountingApp::new()),
             reducer: None,
         };
-        let mut eng = LocalEngine::new(1);
-        run(&opts, &apps, &mut eng).unwrap();
+        let eng = LocalEngine::new(1);
+        run(&opts, &apps, &eng).unwrap();
         assert!(output.join("a/x.txt.out").is_file());
         assert!(output.join("a/b/y.txt.out").is_file());
     }

@@ -1,0 +1,563 @@
+//! Handle-based, non-blocking invocation API.
+//!
+//! [`crate::mapreduce::pipeline::run`] is one blocking call: it plans,
+//! submits *and waits*.  That shape throws away the background
+//! dispatcher underneath it — the engine can interleave any number of
+//! jobs under its slot cap, but a blocking caller only ever gives it one
+//! invocation at a time.  This module splits the lifecycle into handles:
+//!
+//! * [`Session::new`] wraps a shared [`Engine`] (`&dyn Engine` — the
+//!   engine trait is `&self`-based, so one engine serves many sessions
+//!   and threads);
+//! * [`Session::submit`] plans the invocation, writes the `.MAPRED.PID`
+//!   artifacts, submits the whole job chain (map → optional partials →
+//!   reduce) and **returns before any task executes**;
+//! * [`Invocation::wait`] blocks for completion and assembles the
+//!   [`MapReduceReport`]; [`Invocation::status`] polls without blocking;
+//! * [`Session::wait_all`] blocks until everything submitted through
+//!   the session has finished.
+//!
+//! Submitting N invocations before waiting on any of them is the whole
+//! point: their map/partial/reduce jobs share the engine's slot cap
+//! *concurrently*, which is what the multi-level path
+//! ([`crate::mapreduce::multilevel`]) uses to run every subdirectory
+//! pipeline of a hierarchy at once instead of serially.
+//!
+//! # Scratch-space rules for concurrent invocations
+//!
+//! Each invocation owns two pieces of scratch: the `.MAPRED.<pid>`
+//! artifact directory (in the workdir) and, in overlapped mode, a
+//! `.partials.<pid>` staging directory (in the output dir).  Both are
+//! pid-suffixed, so invocations with distinct pids can share a workdir
+//! and even an output directory without clobbering each other.  When
+//! `Options::pid` is unset a pid is derived from a **process-wide**
+//! counter (sessions are created freely — one per [`run`] call — so
+//! per-session uniqueness would not protect concurrent callers): the
+//! first unpinned submit in the process uses the real process id (the
+//! paper's naming), and every further unpinned submit strides to a
+//! distinct derived pid.  Two invocations explicitly pinned to the
+//! *same* pid must not run concurrently in the same workdir — pin
+//! distinct pids instead (the multi-level driver does exactly that).
+//!
+//! [`run`]: crate::mapreduce::pipeline::run
+//!
+//! Dropping an [`Invocation`] without waiting is safe: `Drop` blocks
+//! until the submitted chain settles, then removes the scratch
+//! directories (unless `--keep`), so nothing leaks.  On *success* the
+//! chain settles only after its last task finished, so no task is
+//! still using the scratch.  On *failure* the engine settles the chain
+//! as soon as the failure cascades, so straggler tasks of the failed
+//! chain may still be draining while scratch is removed — harmless by
+//! construction (nothing executes out of `.MAPRED.<pid>`, and a
+//! straggler's write into a removed `.partials.<pid>` just turns into
+//! one more error on an already-failed invocation), and identical to
+//! the blocking path's failure behaviour.
+
+use std::fs;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::error::Result;
+use crate::mapreduce::pipeline::{Apps, MapReduceReport};
+use crate::mapreduce::planner::{plan, Plan};
+use crate::mapreduce::subdir::replicate_output_tree;
+use crate::options::Options;
+use crate::scheduler::dialect::dialect_for;
+use crate::scheduler::{Engine, JobId, JobReport, JobSpec, TaskSpec, TaskWork};
+use crate::workdir::scan::scan_input;
+use crate::workdir::scripts::{reduce_run_script, write_all};
+use crate::workdir::MapRedDir;
+
+/// Reports of one waited-out chain: (map, partials, reduce).
+type WaitedChain = (JobReport, Option<JobReport>, Option<JobReport>);
+
+/// Process-wide counter behind auto-derived pids.  Sessions are cheap
+/// and created freely (every [`crate::mapreduce::pipeline::run`] call
+/// makes one), so uniqueness must span the process, not one session:
+/// two threads running unpinned invocations concurrently would
+/// otherwise both claim `.MAPRED.<process id>`.
+static AUTO_PID_SEQ: AtomicU32 = AtomicU32::new(0);
+
+/// Process-unique pid derivation shared by sessions and the multilevel
+/// driver: an explicit pid wins; otherwise the process's first unpinned
+/// caller keeps the paper's process-id naming and later ones stride to
+/// distinct values (an odd stride is a bijection over `u32`).
+pub(crate) fn auto_pid(explicit: Option<u32>) -> u32 {
+    if let Some(pid) = explicit {
+        return pid;
+    }
+    let seq = AUTO_PID_SEQ.fetch_add(1, Ordering::Relaxed);
+    std::process::id().wrapping_add(seq.wrapping_mul(0x9E37_79B9))
+}
+
+/// A submission context over a shared engine.  Cheap to create; many
+/// sessions may wrap the same engine, and one session may be shared by
+/// reference across threads (all methods take `&self`).
+pub struct Session<'e> {
+    engine: &'e dyn Engine,
+    /// Final job of every invocation submitted through this session
+    /// (what [`Session::wait_all`] blocks on).
+    submitted: Mutex<Vec<JobId>>,
+}
+
+impl<'e> Session<'e> {
+    /// Wrap a shared engine.
+    pub fn new(engine: &'e dyn Engine) -> Self {
+        Session {
+            engine,
+            submitted: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The engine this session submits to.
+    pub fn engine(&self) -> &'e dyn Engine {
+        self.engine
+    }
+
+    /// Effective pid for one submit: [`auto_pid`] over `Options::pid`
+    /// (see the module docs on scratch-space rules).
+    fn derive_pid(&self, opts: &Options) -> u32 {
+        auto_pid(opts.pid)
+    }
+
+    /// Plan one LLMapReduce invocation, write its `.MAPRED.<pid>`
+    /// artifacts, submit the whole job chain, and return a handle
+    /// **before any task executes** (steps 1–3 of Fig 1; steps 4–5
+    /// happen on the engine in the background).
+    ///
+    /// The overlapped path (`--overlap=true`) and its fallbacks are
+    /// identical to the classic call — see
+    /// [`crate::mapreduce::pipeline`] for the semantics; only the
+    /// waiting moved out of this function.
+    pub fn submit(&self, opts: &Options, apps: &Apps) -> Result<Invocation<'e>> {
+        let engine = self.engine;
+        opts.validate()?;
+        let dialect = dialect_for(opts.scheduler);
+
+        // Step 1: identify input files.
+        let files = scan_input(&opts.input, opts.subdir)?;
+
+        // Plan tasks and output naming.
+        let the_plan = plan(&files, opts, dialect.as_ref())?;
+
+        // Generate the .MAPRED.PID artifacts (Figs 8/9/12), output dirs.
+        let base = opts.workdir.clone().unwrap_or_else(|| {
+            std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."))
+        });
+        let pid = self.derive_pid(opts);
+        let wd = MapRedDir::create(&base, pid, opts.keep)?;
+        write_all(&wd, &the_plan, opts, dialect.as_ref())?;
+        replicate_output_tree(&the_plan)?;
+
+        // Step 2: the mapper array job.
+        let map_tasks: Vec<TaskSpec> = the_plan
+            .tasks
+            .iter()
+            .map(|t| TaskSpec {
+                task_id: t.task_id,
+                work: TaskWork::Map {
+                    app: apps.mapper.clone(),
+                    pairs: t.pairs.clone(),
+                    mode: opts.apptype,
+                },
+            })
+            .collect();
+        let map_spec = JobSpec::new(apps.mapper.name(), map_tasks)
+            .exclusive(opts.exclusive);
+        let map_id = engine.submit(map_spec)?;
+
+        // Step 3: the dependent reduce — barriered (Fig 1) or
+        // overlapped.  --overlap must not change *what* gets reduced, so
+        // it falls back to the barrier when it would: under --subdir
+        // (the classic reducer contract scans only the top level of the
+        // output dir, while partials would consume the nested per-task
+        // outputs explicitly) and for reducers that cannot fold partials
+        // (external command reducers, whose contract is a directory of
+        // real mapper outputs).
+        let overlap = opts.overlap
+            && !opts.subdir
+            && apps
+                .reducer
+                .as_ref()
+                .is_some_and(|r| r.supports_partial());
+        let mut partials_dir: Option<PathBuf> = None;
+        let (reduce_id, partial_id, redout_path) = if let Some(reducer) =
+            &apps.reducer
+        {
+            let redout = opts.output.join(&opts.redout);
+            wd.write(
+                "run_reduce",
+                &reduce_run_script(
+                    reducer.name(),
+                    &opts.output,
+                    &redout,
+                ),
+            )?;
+            // The (final) reduce job is identical in both modes except
+            // for the directory it scans and the job it depends on.
+            let reduce_spec = |input_dir: PathBuf| {
+                JobSpec::new(
+                    reducer.name(),
+                    vec![TaskSpec {
+                        task_id: 1,
+                        work: TaskWork::Reduce {
+                            app: reducer.clone(),
+                            input_dir,
+                            out_file: redout.clone(),
+                        },
+                    }],
+                )
+            };
+            if overlap {
+                // Step 3a: one partial-reduce task per mapper task, each
+                // released the moment *its* mapper task completes.  The
+                // staging dir is pid-suffixed so concurrent invocations
+                // sharing an output directory keep separate scratch;
+                // clear it first so stale partials from an earlier run
+                // (a failure, or --keep) cannot leak into the merge.
+                let pdir = opts.output.join(format!(".partials.{pid}"));
+                let _ = fs::remove_dir_all(&pdir);
+                fs::create_dir_all(&pdir)
+                    .map_err(|e| crate::error::Error::io(pdir.clone(), e))?;
+                let partial_tasks: Vec<TaskSpec> = (0..the_plan
+                    .tasks
+                    .len())
+                    .map(|i| TaskSpec {
+                        task_id: i + 1,
+                        work: TaskWork::ReducePartial {
+                            app: reducer.clone(),
+                            files: the_plan.task_outputs(i),
+                            out_file: pdir
+                                .join(format!("part_{:05}", i + 1)),
+                        },
+                    })
+                    .collect();
+                let partial_spec = JobSpec::new(
+                    format!("{}.partial", reducer.name()),
+                    partial_tasks,
+                )
+                .after_tasks(map_id, the_plan.overlap_edges());
+                let pid_job = engine.submit(partial_spec)?;
+                // Step 3b: the final merge over the partials directory.
+                let final_spec = reduce_spec(pdir.clone()).after(pid_job);
+                partials_dir = Some(pdir);
+                (
+                    Some(engine.submit(final_spec)?),
+                    Some(pid_job),
+                    Some(redout),
+                )
+            } else {
+                let spec = reduce_spec(opts.output.clone()).after(map_id);
+                (Some(engine.submit(spec)?), None, Some(redout))
+            }
+        } else {
+            (None, None, None)
+        };
+
+        let final_id = reduce_id.unwrap_or(map_id);
+        self.submitted
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(final_id);
+        Ok(Invocation {
+            engine,
+            map_id,
+            partial_id,
+            reduce_id,
+            final_id,
+            plan: Some(the_plan),
+            redout_path,
+            partials_dir,
+            workdir: Some(wd),
+            keep: opts.keep,
+            overlapped: overlap,
+            virtual_time: engine.virtual_time(),
+            finished: false,
+        })
+    }
+
+    /// Block until every invocation submitted through this session has
+    /// settled (including ones whose handles were already waited or
+    /// dropped).  Returns the first failure, after still waiting out the
+    /// rest — the engine-side analogue of joining a scatter of handles.
+    /// Per-invocation reports still come from [`Invocation::wait`].
+    pub fn wait_all(&self) -> Result<()> {
+        let ids: Vec<JobId> = self
+            .submitted
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone();
+        let mut first_err = None;
+        for id in ids {
+            if let Err(e) = self.engine.wait(id) {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+/// Non-blocking view of an invocation's lifecycle
+/// ([`Invocation::status`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InvocationStatus {
+    /// Some job of the chain is still queued or running.  Lazily
+    /// executed virtual-time engines report `Running` until a `wait`
+    /// forces the simulation.
+    Running,
+    /// The whole chain completed; [`Invocation::wait`] returns promptly.
+    Succeeded,
+    /// The chain failed; [`Invocation::wait`] returns the error.
+    Failed,
+}
+
+/// Handle to one submitted LLMapReduce invocation.
+///
+/// Obtained from [`Session::submit`]; consume it with
+/// [`Invocation::wait`] to get the [`MapReduceReport`].  Dropping it
+/// without waiting blocks until the submitted jobs settle and then
+/// cleans up the invocation's scratch directories — no leaks (see the
+/// module docs for the failure-path straggler caveat).
+pub struct Invocation<'e> {
+    engine: &'e dyn Engine,
+    map_id: JobId,
+    partial_id: Option<JobId>,
+    reduce_id: Option<JobId>,
+    /// Last job of the chain (reduce when present, else map).
+    final_id: JobId,
+    plan: Option<Plan>,
+    redout_path: Option<PathBuf>,
+    partials_dir: Option<PathBuf>,
+    workdir: Option<MapRedDir>,
+    keep: bool,
+    overlapped: bool,
+    virtual_time: bool,
+    finished: bool,
+}
+
+impl Invocation<'_> {
+    /// Non-blocking lifecycle probe (see [`InvocationStatus`]).
+    pub fn status(&self) -> InvocationStatus {
+        match self.engine.try_wait(self.final_id) {
+            Ok(Some(_)) => InvocationStatus::Succeeded,
+            Ok(None) => InvocationStatus::Running,
+            Err(_) => InvocationStatus::Failed,
+        }
+    }
+
+    /// The mapper array job's id on the engine.
+    pub fn map_job(&self) -> JobId {
+        self.map_id
+    }
+
+    /// Whether this invocation runs the overlapped map→reduce path.
+    pub fn overlapped(&self) -> bool {
+        self.overlapped
+    }
+
+    /// Block until the whole chain finishes and assemble the report
+    /// (steps 4–5 of Fig 1 happened on the engine; this collects them).
+    ///
+    /// End-to-end elapsed mirrors `pipeline::run`: virtual-time engines
+    /// sum their chained job makespans; wall-clock engines report the
+    /// span covered by the chain (the makespans overlap, so the longest
+    /// one — submission to last completion — *is* the span, independent
+    /// of how late `wait` is called).
+    pub fn wait(mut self) -> Result<MapReduceReport> {
+        self.finished = true;
+        let waited = self.wait_jobs();
+        // The partials staging dir is scratch like .MAPRED.PID: clear it
+        // on the failure path too, not just after a clean run.
+        if !self.keep {
+            if let Some(pdir) = &self.partials_dir {
+                let _ = fs::remove_dir_all(pdir);
+            }
+        }
+        let mapred_dir = match self.workdir.take() {
+            Some(wd) if self.keep => Some(wd.persist()),
+            _ => None, // dropped -> deleted, the paper's default
+        };
+        let (map_report, partial_report, reduce_report) = waited?;
+
+        let chain_makespans = |acc: fn(Duration, Duration) -> Duration| {
+            let mut total = map_report.makespan;
+            for r in partial_report.iter().chain(reduce_report.iter()) {
+                total = acc(total, r.makespan);
+            }
+            total
+        };
+        let total_elapsed = if self.virtual_time {
+            chain_makespans(|a, b| a + b)
+        } else {
+            chain_makespans(Duration::max)
+        };
+
+        Ok(MapReduceReport {
+            map: map_report,
+            partials: partial_report,
+            reduce: reduce_report,
+            plan: self.plan.take().expect("plan is set until wait"),
+            redout_path: self.redout_path.clone(),
+            mapred_dir,
+            overlapped: self.overlapped,
+            total_elapsed,
+        })
+    }
+
+    /// Wait out the chain, reduce-first so a dependency failure
+    /// surfaces as the downstream error the caller sees.
+    fn wait_jobs(&self) -> Result<WaitedChain> {
+        if let Some(rid) = self.reduce_id {
+            let reduce_report = self.engine.wait(rid)?;
+            let partial_report = match self.partial_id {
+                Some(pid) => Some(self.engine.wait(pid)?),
+                None => None,
+            };
+            Ok((
+                self.engine.wait(self.map_id)?,
+                partial_report,
+                Some(reduce_report),
+            ))
+        } else {
+            Ok((self.engine.wait(self.map_id)?, None, None))
+        }
+    }
+}
+
+impl Drop for Invocation<'_> {
+    fn drop(&mut self) {
+        if self.finished {
+            return;
+        }
+        // Block until the submitted chain settles — on success that
+        // means every task finished, so scratch is no longer in use
+        // (on failure, see the module docs' straggler caveat).  The
+        // engine outlives this handle (it is borrowed), so the jobs make
+        // progress and this terminates.
+        let _ = self.engine.wait(self.final_id);
+        if !self.keep {
+            if let Some(pdir) = &self.partials_dir {
+                let _ = fs::remove_dir_all(pdir);
+            }
+        }
+        // `self.workdir` drops next: MapRedDir removes .MAPRED.<pid>
+        // unless --keep was requested.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::testutil::{ConcatReducer, CountingApp};
+    use crate::scheduler::local::LocalEngine;
+    use std::sync::Arc;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("llmr-session-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn setup(tag: &str, nfiles: usize) -> (PathBuf, PathBuf, PathBuf) {
+        let root = tmp(tag);
+        let input = root.join("input");
+        fs::create_dir_all(&input).unwrap();
+        for i in 0..nfiles {
+            fs::write(input.join(format!("f{i:02}.txt")), format!("{i}\n"))
+                .unwrap();
+        }
+        let output = root.join("output");
+        (root, input, output)
+    }
+
+    #[test]
+    fn submit_then_wait_matches_blocking_run() {
+        let (root, input, output) = setup("basic", 4);
+        let opts = Options::new(&input, &output, "counting-app")
+            .np(2)
+            .reducer("concat-reducer")
+            .workdir(&root)
+            .pid(91001);
+        let apps = Apps {
+            mapper: Arc::new(CountingApp::new()),
+            reducer: Some(Arc::new(ConcatReducer)),
+        };
+        let engine = LocalEngine::new(2);
+        let session = Session::new(&engine);
+        let inv = session.submit(&opts, &apps).unwrap();
+        let report = inv.wait().unwrap();
+        assert_eq!(report.map.total_items(), 4);
+        let merged =
+            fs::read_to_string(report.redout_path.unwrap()).unwrap();
+        assert_eq!(merged.matches("#mapped").count(), 4);
+        assert!(!root.join(".MAPRED.91001").exists(), "scratch cleaned");
+    }
+
+    #[test]
+    fn status_reaches_succeeded_and_wait_all_blocks_everything() {
+        let (root, input, output) = setup("status", 3);
+        let apps = Apps {
+            mapper: Arc::new(CountingApp::new()),
+            reducer: None,
+        };
+        let engine = LocalEngine::new(2);
+        let session = Session::new(&engine);
+        let opts = Options::new(&input, &output, "counting-app")
+            .np(3)
+            .workdir(&root)
+            .pid(91002);
+        let inv = session.submit(&opts, &apps).unwrap();
+        session.wait_all().unwrap();
+        assert_eq!(inv.status(), InvocationStatus::Succeeded);
+        let report = inv.wait().unwrap();
+        assert_eq!(report.map.total_items(), 3);
+    }
+
+    #[test]
+    fn failed_chain_reports_failed_status() {
+        let (root, input, output) = setup("fail", 2);
+        let mut app = CountingApp::new();
+        app.poison = Some("f00".into());
+        let apps = Apps {
+            mapper: Arc::new(app),
+            reducer: None,
+        };
+        let engine = LocalEngine::new(1);
+        let session = Session::new(&engine);
+        let opts = Options::new(&input, &output, "counting-app")
+            .workdir(&root)
+            .pid(91003);
+        let inv = session.submit(&opts, &apps).unwrap();
+        assert!(session.wait_all().is_err());
+        assert_eq!(inv.status(), InvocationStatus::Failed);
+        assert!(inv.wait().is_err());
+        assert!(!root.join(".MAPRED.91003").exists(), "scratch cleaned");
+    }
+
+    #[test]
+    fn unpinned_pids_are_process_unique() {
+        // Parallel tests share the process-wide counter, so this cannot
+        // assume it sees seq 0 — only that every derivation is fresh,
+        // across sessions as much as within one.
+        let engine = LocalEngine::new(1);
+        let a = Session::new(&engine);
+        let b = Session::new(&engine);
+        let unpinned = Options::new("i", "o", "m");
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..8 {
+            assert!(seen.insert(a.derive_pid(&unpinned)));
+            assert!(seen.insert(b.derive_pid(&unpinned)));
+        }
+        let pinned = Options::new("i", "o", "m").pid(77);
+        assert_eq!(a.derive_pid(&pinned), 77, "explicit pid wins");
+    }
+}

@@ -30,6 +30,7 @@
 //! behavioral contract, two clocks.
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -138,10 +139,13 @@ impl Inner {
 }
 
 /// Thread-pool engine with array-job, dependency and failure-injection
-/// semantics.
+/// semantics.  All [`Engine`] methods take `&self`, so one engine can be
+/// shared by any number of concurrent submitters (sessions, threads) —
+/// the id counter is atomic and everything else already lives behind the
+/// dispatcher's mutex.
 pub struct LocalEngine {
     inner: Arc<Inner>,
-    next_id: u64,
+    next_id: AtomicU64,
     workers: Vec<JoinHandle<()>>,
     dispatcher: Option<JoinHandle<()>>,
 }
@@ -182,7 +186,7 @@ impl LocalEngine {
         };
         LocalEngine {
             inner,
-            next_id: 1,
+            next_id: AtomicU64::new(1),
             workers,
             dispatcher,
         }
@@ -198,7 +202,7 @@ impl Engine for LocalEngine {
         "local"
     }
 
-    fn submit(&mut self, spec: JobSpec) -> Result<JobId> {
+    fn submit(&self, spec: JobSpec) -> Result<JobId> {
         let mut core = self.inner.lock();
         crate::scheduler::validate_submit(&spec, |dep| {
             // `ntasks`, not `tasks.len()`: a completed job has shed its
@@ -210,15 +214,16 @@ impl Engine for LocalEngine {
                     .map(|(_, s, _)| s.tasks.len())
             })
         })?;
-        let id = JobId(self.next_id);
-        self.next_id += 1;
+        // Allocated under the state lock, so an id never becomes visible
+        // out of submission order on one thread.
+        let id = JobId(self.next_id.fetch_add(1, Ordering::Relaxed));
         core.inbox.push_back((id, spec, Instant::now()));
         drop(core);
         self.inner.event_cv.notify_one();
         Ok(id)
     }
 
-    fn wait(&mut self, id: JobId) -> Result<JobReport> {
+    fn wait(&self, id: JobId) -> Result<JobReport> {
         let mut core = self.inner.lock();
         loop {
             if let Some(job) = core.jobs.get(&id) {
@@ -237,6 +242,21 @@ impl Engine for LocalEngine {
                 .wait(core)
                 .unwrap_or_else(|e| e.into_inner());
         }
+    }
+
+    fn try_wait(&self, id: JobId) -> Result<Option<JobReport>> {
+        let core = self.inner.lock();
+        if let Some(job) = core.jobs.get(&id) {
+            return match &job.outcome {
+                Some(Ok(r)) => Ok(Some(r.clone())),
+                Some(Err(msg)) => Err(Error::Scheduler(msg.clone())),
+                None => Ok(None),
+            };
+        }
+        if core.inbox.iter().any(|(jid, _, _)| *jid == id) {
+            return Ok(None); // submitted, not yet admitted
+        }
+        Err(Error::Scheduler(format!("unknown job {id}")))
     }
 }
 
@@ -746,7 +766,7 @@ mod tests {
         let d = tmp("basic");
         let app = Arc::new(CountingApp::new());
         let tasks = map_tasks(&d, app.clone(), 8, 4, AppType::Siso);
-        let mut eng = LocalEngine::new(2);
+        let eng = LocalEngine::new(2);
         let report = eng.run(JobSpec::new("job", tasks)).unwrap();
         assert_eq!(report.tasks.len(), 4);
         assert_eq!(report.total_items(), 8);
@@ -759,7 +779,7 @@ mod tests {
         let d = tmp("mimo");
         let app = Arc::new(CountingApp::new());
         let tasks = map_tasks(&d, app.clone(), 8, 4, AppType::Mimo);
-        let mut eng = LocalEngine::new(2);
+        let eng = LocalEngine::new(2);
         let report = eng.run(JobSpec::new("job", tasks)).unwrap();
         assert_eq!(report.total_launches(), 4); // MIMO: launch per task
         assert_eq!(app.startups.load(Ordering::SeqCst), 4);
@@ -771,7 +791,7 @@ mod tests {
         let app = Arc::new(CountingApp::new());
         let map_tasks = map_tasks(&d, app.clone(), 4, 2, AppType::Mimo);
         let outdir = d.clone();
-        let mut eng = LocalEngine::new(2);
+        let eng = LocalEngine::new(2);
         let map_id = eng.submit(JobSpec::new("map", map_tasks)).unwrap();
         let red_id = eng
             .submit(
@@ -801,7 +821,7 @@ mod tests {
 
     #[test]
     fn unknown_dependency_rejected() {
-        let mut eng = LocalEngine::new(1);
+        let eng = LocalEngine::new(1);
         let err = eng
             .submit(JobSpec::new("x", vec![]).after(JobId(99)))
             .unwrap_err();
@@ -814,7 +834,7 @@ mod tests {
         let mut app = CountingApp::new();
         app.poison = Some("f2".into());
         let tasks = map_tasks(&d, Arc::new(app), 4, 2, AppType::Siso);
-        let mut eng = LocalEngine::new(2);
+        let eng = LocalEngine::new(2);
         let err = eng.run(JobSpec::new("job", tasks)).unwrap_err();
         assert!(err.to_string().contains("poisoned"));
     }
@@ -825,7 +845,7 @@ mod tests {
         let mut app = CountingApp::new();
         app.poison = Some("f0".into());
         let tasks = map_tasks(&d, Arc::new(app), 2, 1, AppType::Siso);
-        let mut eng = LocalEngine::new(2);
+        let eng = LocalEngine::new(2);
         let map_id = eng.submit(JobSpec::new("map", tasks)).unwrap();
         let red_id = eng
             .submit(
@@ -854,7 +874,7 @@ mod tests {
         let d = tmp("serial");
         let app = Arc::new(CountingApp::new());
         let tasks = map_tasks(&d, app.clone(), 6, 6, AppType::Siso);
-        let mut eng = LocalEngine::new(1);
+        let eng = LocalEngine::new(1);
         let report = eng.run(JobSpec::new("job", tasks)).unwrap();
         // With one slot, task intervals must not overlap.
         let mut intervals: Vec<(Duration, Duration)> = report
@@ -873,7 +893,7 @@ mod tests {
         let d = tmp("twice");
         let app = Arc::new(CountingApp::new());
         let tasks = map_tasks(&d, app, 2, 1, AppType::Mimo);
-        let mut eng = LocalEngine::new(1);
+        let eng = LocalEngine::new(1);
         let id = eng.submit(JobSpec::new("job", tasks)).unwrap();
         let a = eng.wait(id).unwrap();
         let b = eng.wait(id).unwrap();
@@ -961,7 +981,7 @@ mod tests {
                 }],
             )
         };
-        let mut eng = LocalEngine::new(2);
+        let eng = LocalEngine::new(2);
         let ja = eng.submit(mk("a", &flag_a, &flag_b, &saw_a)).unwrap();
         let jb = eng.submit(mk("b", &flag_b, &flag_a, &saw_b)).unwrap();
         eng.wait(ja).unwrap();
@@ -974,7 +994,7 @@ mod tests {
 
     #[test]
     fn independent_jobs_share_one_slot_without_deadlock() {
-        let mut eng = LocalEngine::new(1);
+        let eng = LocalEngine::new(1);
         let a = eng.submit(JobSpec::new("a", synth_tasks(2, 100))).unwrap();
         let b = eng.submit(JobSpec::new("b", synth_tasks(2, 100))).unwrap();
         assert_eq!(eng.wait(b).unwrap().tasks.len(), 2);
@@ -996,7 +1016,7 @@ mod tests {
                 _ => unreachable!(),
             })
             .collect();
-        let mut eng = LocalEngine::new(2);
+        let eng = LocalEngine::new(2);
         let map_id = eng.submit(JobSpec::new("map", tasks)).unwrap();
         let partial_tasks: Vec<TaskSpec> = outputs
             .iter()
@@ -1052,7 +1072,7 @@ mod tests {
         let d = tmp("panic");
         let inp = d.join("x.dat");
         fs::write(&inp, "x").unwrap();
-        let mut eng = LocalEngine::new(1);
+        let eng = LocalEngine::new(1);
         let err = eng
             .run(JobSpec::new(
                 "p",
@@ -1080,7 +1100,7 @@ mod tests {
         let mut app = CountingApp::new();
         app.poison = Some("f0".into());
         let tasks = map_tasks(&d, Arc::new(app), 2, 1, AppType::Siso);
-        let mut eng = LocalEngine::new(1);
+        let eng = LocalEngine::new(1);
         let a = eng.submit(JobSpec::new("map", tasks)).unwrap();
         let b = eng.submit(JobSpec::new("barrier", vec![]).after(a)).unwrap();
         let err = eng.wait(b).unwrap_err().to_string();
@@ -1093,7 +1113,7 @@ mod tests {
 
     #[test]
     fn task_dep_edge_out_of_range_rejected() {
-        let mut eng = LocalEngine::new(1);
+        let eng = LocalEngine::new(1);
         let a = eng.submit(JobSpec::new("a", synth_tasks(2, 10))).unwrap();
         let err = eng
             .submit(
@@ -1118,7 +1138,7 @@ mod tests {
             max_retries: 4,
             seed: 42,
         };
-        let mut eng = LocalEngine::with_policy(2, policy);
+        let eng = LocalEngine::with_policy(2, policy);
         let report =
             eng.run(JobSpec::new("flaky", synth_tasks(8, 50))).unwrap();
         assert_eq!(report.tasks.len(), 8);
@@ -1137,7 +1157,7 @@ mod tests {
     #[test]
     fn retry_counts_match_sim_engine() {
         let (rate, max_retries, seed) = (0.5, 5, 9);
-        let mut local = LocalEngine::with_policy(
+        let local = LocalEngine::with_policy(
             2,
             FailurePolicy {
                 failure_rate: rate,
@@ -1148,7 +1168,7 @@ mod tests {
         let local_report = local
             .run(JobSpec::new("flaky", synth_tasks(8, 50)))
             .unwrap();
-        let mut sim = SimEngine::new(ClusterConfig {
+        let sim = SimEngine::new(ClusterConfig {
             failure_rate: rate,
             max_retries,
             seed,

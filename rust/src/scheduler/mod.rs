@@ -318,27 +318,47 @@ pub(crate) fn validate_submit(
 ///
 /// Implementations: [`local::LocalEngine`] (threads, wall-clock) and
 /// [`sim::SimEngine`] (discrete-event, virtual clock).
-pub trait Engine: Send {
+///
+/// # Sharing contract
+///
+/// Every method takes `&self`: one engine serves any number of
+/// concurrent submitters (the cluster-scheduler model — `qsub` never
+/// needed exclusive access to Grid Engine).  Implementations use
+/// interior mutability, and `Send + Sync` is part of the trait bound so
+/// a `&dyn Engine` can be handed to as many
+/// [`crate::mapreduce::Session`]s and threads as the caller likes.
+/// Submissions made from one thread are observed in order (a dependent
+/// may always name a dependency submitted earlier on the same thread);
+/// there is no ordering between threads.
+pub trait Engine: Send + Sync {
     /// Engine name for reports ("local", "sim").
     fn name(&self) -> &'static str;
 
     /// Submit an array job; returns immediately with its id.
-    fn submit(&mut self, spec: JobSpec) -> Result<JobId>;
+    fn submit(&self, spec: JobSpec) -> Result<JobId>;
 
     /// Block until the job (and its dependency chain) finishes.
-    fn wait(&mut self, id: JobId) -> Result<JobReport>;
+    fn wait(&self, id: JobId) -> Result<JobReport>;
+
+    /// Non-blocking completion probe: `Ok(Some(report))` once the job
+    /// finished, `Ok(None)` while it is still queued or running, and
+    /// `Err` when the job failed (or was never submitted).  Virtual-time
+    /// engines that execute lazily (the simulator) report `Ok(None)`
+    /// until something calls [`Engine::wait`] — probing never forces a
+    /// simulation, so deterministic replay is preserved.
+    fn try_wait(&self, id: JobId) -> Result<Option<JobReport>>;
 
     /// True when this engine reports virtual (simulated) time rather than
     /// wall-clock.  The pipeline uses this to pick how end-to-end elapsed
-    /// time is aggregated: wall engines are measured around the whole
-    /// submit→wait span (jobs may overlap), virtual engines sum their job
+    /// time is aggregated: wall engines report the span covered by their
+    /// (possibly overlapping) jobs, virtual engines sum their job
     /// makespans (the simulator serializes chained jobs).
     fn virtual_time(&self) -> bool {
         false
     }
 
     /// Submit and wait in one call.
-    fn run(&mut self, spec: JobSpec) -> Result<JobReport> {
+    fn run(&self, spec: JobSpec) -> Result<JobReport> {
         let id = self.submit(spec)?;
         self.wait(id)
     }

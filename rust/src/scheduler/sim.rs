@@ -29,6 +29,7 @@
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::sync::{Mutex, MutexGuard};
 use std::time::Duration;
 
 use crate::error::{Error, Result};
@@ -111,13 +112,19 @@ impl ClusterConfig {
     }
 }
 
+/// Queue/result state behind the engine's mutex (interior mutability, so
+/// one simulator serves concurrent submitters like the local engine).
+struct SimState {
+    next_id: u64,
+    pending: Vec<(JobId, JobSpec)>,
+    finished: HashMap<JobId, JobReport>,
+}
+
 /// The simulator engine.
 pub struct SimEngine {
     config: ClusterConfig,
     execute_payloads: bool,
-    next_id: u64,
-    pending: Vec<(JobId, JobSpec)>,
-    finished: HashMap<JobId, JobReport>,
+    state: Mutex<SimState>,
 }
 
 impl SimEngine {
@@ -125,9 +132,11 @@ impl SimEngine {
         SimEngine {
             config,
             execute_payloads: false,
-            next_id: 1,
-            pending: Vec::new(),
-            finished: HashMap::new(),
+            state: Mutex::new(SimState {
+                next_id: 1,
+                pending: Vec::new(),
+                finished: HashMap::new(),
+            }),
         }
     }
 
@@ -141,24 +150,36 @@ impl SimEngine {
         &self.config
     }
 
+    /// Poison-tolerant lock (mirrors the local engine's).
+    fn lock(&self) -> MutexGuard<'_, SimState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     /// Run every pending job whose dependency chain ends at `target`,
-    /// in one coupled discrete-event simulation.
-    fn simulate_chain(&mut self, target: JobId) -> Result<()> {
+    /// in one coupled discrete-event simulation.  Runs under the state
+    /// lock: concurrent `wait()`s serialize, and each chain simulates
+    /// from its own zero clock with a fresh seeded RNG — determinism is
+    /// per chain, independent of what else the engine is serving.
+    fn simulate_chain(
+        &self,
+        state: &mut SimState,
+        target: JobId,
+    ) -> Result<()> {
         // Collect the dependency chain (target and all ancestors).
         let mut chain: Vec<(JobId, JobSpec)> = Vec::new();
         let mut cursor = Some(target);
         while let Some(id) = cursor {
-            if self.finished.contains_key(&id) {
+            if state.finished.contains_key(&id) {
                 break;
             }
-            let pos = self
+            let pos = state
                 .pending
                 .iter()
                 .position(|(jid, _)| *jid == id)
                 .ok_or_else(|| {
                     Error::Scheduler(format!("unknown job {id}"))
                 })?;
-            let (jid, spec) = self.pending.remove(pos);
+            let (jid, spec) = state.pending.remove(pos);
             cursor = spec.depends_on;
             chain.push((jid, spec));
         }
@@ -328,7 +349,7 @@ impl SimEngine {
                 slots: self.config.total_slots(),
                 tasks: reports.into_iter().map(|r| r.unwrap()).collect(),
             };
-            self.finished.insert(jid, report);
+            state.finished.insert(jid, report);
         }
         Ok(())
     }
@@ -346,32 +367,56 @@ impl Engine for SimEngine {
         true
     }
 
-    fn submit(&mut self, spec: JobSpec) -> Result<JobId> {
+    fn submit(&self, spec: JobSpec) -> Result<JobId> {
+        let mut state = self.lock();
         // Same admission contract as the local engine (shared helper):
         // specs must stay portable across `--engine=local|sim` even
         // though this engine widens task edges to the job barrier.
         crate::scheduler::validate_submit(&spec, |dep| {
-            self.finished.get(&dep).map(|r| r.tasks.len()).or_else(|| {
-                self.pending
+            state.finished.get(&dep).map(|r| r.tasks.len()).or_else(|| {
+                state
+                    .pending
                     .iter()
                     .find(|(jid, _)| *jid == dep)
                     .map(|(_, s)| s.tasks.len())
             })
         })?;
-        let id = JobId(self.next_id);
-        self.next_id += 1;
-        self.pending.push((id, spec));
+        let id = JobId(state.next_id);
+        state.next_id += 1;
+        state.pending.push((id, spec));
         Ok(id)
     }
 
-    fn wait(&mut self, id: JobId) -> Result<JobReport> {
-        if !self.finished.contains_key(&id) {
-            self.simulate_chain(id)?;
+    fn wait(&self, id: JobId) -> Result<JobReport> {
+        let mut state = self.lock();
+        if !state.finished.contains_key(&id) {
+            self.simulate_chain(&mut state, id)?;
         }
-        self.finished
+        state
+            .finished
             .get(&id)
             .cloned()
             .ok_or_else(|| Error::Scheduler(format!("job {id} vanished")))
+    }
+
+    fn try_wait(&self, id: JobId) -> Result<Option<JobReport>> {
+        // Never forces — or waits on — a simulation: a lazily-executed
+        // pending job reads as in-flight until someone `wait()`s its
+        // chain, and while another thread holds the engine simulating
+        // (possibly executing real payloads), everything probes as
+        // in-flight rather than blocking behind the mutex.
+        let state = match self.state.try_lock() {
+            Ok(state) => state,
+            Err(std::sync::TryLockError::WouldBlock) => return Ok(None),
+            Err(std::sync::TryLockError::Poisoned(e)) => e.into_inner(),
+        };
+        if let Some(r) = state.finished.get(&id) {
+            return Ok(Some(r.clone()));
+        }
+        if state.pending.iter().any(|(jid, _)| *jid == id) {
+            return Ok(None);
+        }
+        Err(Error::Scheduler(format!("unknown job {id}")))
     }
 }
 
@@ -409,7 +454,7 @@ mod tests {
 
     #[test]
     fn single_task_timing_exact() {
-        let mut eng = SimEngine::new(cfg(1));
+        let eng = SimEngine::new(cfg(1));
         let r = eng
             .run(JobSpec::new("j", synth_tasks(1, 100, 10, 4, 4)))
             .unwrap();
@@ -440,7 +485,7 @@ mod tests {
     fn dispatch_latency_serializes_launches() {
         // Wide cluster, tiny compute: makespan dominated by the serial
         // dispatcher, one latency unit per task.
-        let mut eng = SimEngine::new(ClusterConfig {
+        let eng = SimEngine::new(ClusterConfig {
             dispatch_latency: Duration::from_millis(10),
             ..ClusterConfig::with_width(512)
         });
@@ -456,7 +501,7 @@ mod tests {
 
     #[test]
     fn dependency_ordering_respected() {
-        let mut eng = SimEngine::new(cfg(4));
+        let eng = SimEngine::new(cfg(4));
         let a = eng
             .submit(JobSpec::new("map", synth_tasks(8, 5, 5, 1, 1)))
             .unwrap();
@@ -472,7 +517,7 @@ mod tests {
     #[test]
     fn deterministic_with_same_seed() {
         let run = || {
-            let mut eng = SimEngine::new(ClusterConfig {
+            let eng = SimEngine::new(ClusterConfig {
                 jitter: 0.2,
                 seed: 99,
                 ..cfg(4)
@@ -487,7 +532,7 @@ mod tests {
     #[test]
     fn jitter_changes_with_seed() {
         let run = |seed| {
-            let mut eng = SimEngine::new(ClusterConfig {
+            let eng = SimEngine::new(ClusterConfig {
                 jitter: 0.2,
                 seed,
                 ..cfg(4)
@@ -501,7 +546,7 @@ mod tests {
 
     #[test]
     fn task_dep_validation_matches_local_engine() {
-        let mut eng = SimEngine::new(cfg(2));
+        let eng = SimEngine::new(cfg(2));
         let a = eng
             .submit(JobSpec::new("a", synth_tasks(2, 1, 1, 1, 1)))
             .unwrap();
@@ -524,7 +569,7 @@ mod tests {
     fn task_deps_widen_to_conservative_barrier() {
         // The simulator may ignore task-granularity edges, but ordering
         // and results must match the barriered semantics exactly.
-        let mut eager = SimEngine::new(cfg(4));
+        let eager = SimEngine::new(cfg(4));
         let m1 = eager
             .submit(JobSpec::new("map", synth_tasks(4, 5, 5, 1, 1)))
             .unwrap();
@@ -537,7 +582,7 @@ mod tests {
             .unwrap();
         let eager_partial = eager.wait(p1).unwrap();
 
-        let mut barriered = SimEngine::new(cfg(4));
+        let barriered = SimEngine::new(cfg(4));
         let m2 = barriered
             .submit(JobSpec::new("map", synth_tasks(4, 5, 5, 1, 1)))
             .unwrap();
@@ -554,7 +599,7 @@ mod tests {
 
     #[test]
     fn failure_injection_retries_and_succeeds() {
-        let mut eng = SimEngine::new(ClusterConfig {
+        let eng = SimEngine::new(ClusterConfig {
             failure_rate: 0.3,
             max_retries: 10,
             seed: 7,
@@ -572,7 +617,7 @@ mod tests {
     fn exclusive_takes_whole_node() {
         // 2 nodes x 4 slots; 4 exclusive tasks of 10ms must serialize
         // into 2 waves (2 at a time), not run 4-wide.
-        let mut eng = SimEngine::new(ClusterConfig {
+        let eng = SimEngine::new(ClusterConfig {
             nodes: 2,
             slots_per_node: 4,
             dispatch_latency: Duration::ZERO,
@@ -587,7 +632,7 @@ mod tests {
             r.makespan
         );
         // Non-exclusive: all 8 slots available, 4 tasks run in one wave.
-        let mut eng2 = SimEngine::new(ClusterConfig {
+        let eng2 = SimEngine::new(ClusterConfig {
             nodes: 2,
             slots_per_node: 4,
             dispatch_latency: Duration::ZERO,

@@ -38,7 +38,7 @@ fn synth_tasks(n: usize, startup_ms: u64) -> Vec<TaskSpec> {
 
 #[test]
 fn submit_returns_before_execution() {
-    let mut eng = LocalEngine::new(1);
+    let eng = LocalEngine::new(1);
     let t0 = Instant::now();
     let id = eng
         .submit(JobSpec::new("slow", synth_tasks(1, 150)))
@@ -59,7 +59,7 @@ fn submit_returns_before_execution() {
 
 #[test]
 fn many_independent_jobs_share_the_pool_and_all_finish() {
-    let mut eng = LocalEngine::new(2);
+    let eng = LocalEngine::new(2);
     let ids: Vec<JobId> = (0..5)
         .map(|k| {
             eng.submit(JobSpec::new(format!("job-{k}"), synth_tasks(3, 1)))
@@ -76,7 +76,7 @@ fn many_independent_jobs_share_the_pool_and_all_finish() {
 
 #[test]
 fn task_dep_validation_through_public_api() {
-    let mut eng = LocalEngine::new(1);
+    let eng = LocalEngine::new(1);
     // task_deps without depends_on is rejected.
     let orphan = JobSpec {
         task_deps: vec![(0, 0)],
@@ -97,7 +97,7 @@ fn task_dep_validation_through_public_api() {
 #[test]
 fn local_and_sim_agree_on_injected_retry_counts() {
     let (rate, max_retries, seed) = (0.4, 6, 21);
-    let mut local = LocalEngine::with_policy(
+    let local = LocalEngine::with_policy(
         2,
         FailurePolicy {
             failure_rate: rate,
@@ -108,7 +108,7 @@ fn local_and_sim_agree_on_injected_retry_counts() {
     let lr = local
         .run(JobSpec::new("flaky", synth_tasks(12, 1)))
         .unwrap();
-    let mut sim = SimEngine::new(ClusterConfig {
+    let sim = SimEngine::new(ClusterConfig {
         failure_rate: rate,
         max_retries,
         seed,
@@ -157,8 +157,8 @@ fn overlapped_wordcount_equals_barriered_result() {
             mapper: WordCountApp::new(None),
             reducer: Some(Arc::new(WordCountReducer)),
         };
-        let mut eng = LocalEngine::new(2);
-        let report = run(&opts, &apps, &mut eng).unwrap();
+        let eng = LocalEngine::new(2);
+        let report = run(&opts, &apps, &eng).unwrap();
         assert_eq!(report.overlapped, overlap);
         assert_eq!(report.partials.is_some(), overlap);
         results.push(

@@ -93,8 +93,8 @@ fn golden_mapred_dir_layout_mimo() {
         mapper: WordCountApp::new(None),
         reducer: None,
     };
-    let mut eng = LocalEngine::new(2);
-    let report = run(&opts, &apps, &mut eng).unwrap();
+    let eng = LocalEngine::new(2);
+    let report = run(&opts, &apps, &eng).unwrap();
     let wd = report.mapred_dir.unwrap();
     assert!(wd.ends_with(".MAPRED.2188"));
 

@@ -64,8 +64,8 @@ fn wordcount_fig15_pipeline_counts_are_exact() {
         mapper: WordCountApp::new(Some(ignore)),
         reducer: Some(Arc::new(WordCountReducer)),
     };
-    let mut eng = LocalEngine::new(3);
-    let report = llmapreduce::mapreduce::run(&opts, &apps, &mut eng).unwrap();
+    let eng = LocalEngine::new(3);
+    let report = llmapreduce::mapreduce::run(&opts, &apps, &eng).unwrap();
     let merged = read_counts(&report.redout_path.unwrap()).unwrap();
     assert_eq!(merged, expect, "map-reduce == sequential ground truth");
 }
@@ -86,17 +86,17 @@ fn wordcount_mimo_and_siso_agree() {
         mapper: WordCountApp::new(Some(ignore)),
         reducer: Some(Arc::new(WordCountReducer)),
     };
-    let mut eng = LocalEngine::new(2);
+    let eng = LocalEngine::new(2);
     let siso = llmapreduce::mapreduce::run(
         &mk(AppType::Siso, "out-siso", 60002),
         &apps,
-        &mut eng,
+        &eng,
     )
     .unwrap();
     let mimo = llmapreduce::mapreduce::run(
         &mk(AppType::Mimo, "out-mimo", 60003),
         &apps,
-        &mut eng,
+        &eng,
     )
     .unwrap();
     let a = read_counts(&siso.redout_path.unwrap()).unwrap();
@@ -118,18 +118,18 @@ fn local_and_sim_engines_produce_identical_results() {
         mapper: WordCountApp::new(Some(ignore)),
         reducer: Some(Arc::new(WordCountReducer)),
     };
-    let run_on = |engine: &mut dyn Engine, outdir: &str, pid| {
+    let run_on = |engine: &dyn Engine, outdir: &str, pid| {
         let opts = Options::new(&input, root.join(outdir), "wordcount")
             .np(2)
             .reducer("wordcount-reducer")
             .pid(pid);
         llmapreduce::mapreduce::run(&opts, &apps, engine).unwrap()
     };
-    let mut local = LocalEngine::new(2);
-    let r1 = run_on(&mut local, "out-local", 60004);
-    let mut sim =
+    let local = LocalEngine::new(2);
+    let r1 = run_on(&local, "out-local", 60004);
+    let sim =
         SimEngine::new(ClusterConfig::with_width(2)).execute_payloads(true);
-    let r2 = run_on(&mut sim, "out-sim", 60005);
+    let r2 = run_on(&sim, "out-sim", 60005);
     assert_eq!(
         fs::read_to_string(r1.redout_path.unwrap()).unwrap(),
         fs::read_to_string(r2.redout_path.unwrap()).unwrap(),
@@ -157,8 +157,8 @@ fn image_pipeline_full_stack() {
         mapper,
         reducer: None,
     };
-    let mut eng = LocalEngine::new(2);
-    let report = llmapreduce::mapreduce::run(&opts, &apps, &mut eng).unwrap();
+    let eng = LocalEngine::new(2);
+    let report = llmapreduce::mapreduce::run(&opts, &apps, &eng).unwrap();
     assert_eq!(report.map.total_items(), 4);
     for i in 0..4 {
         let out = root.join(format!("output/im_{i:04}.ppm.gray"));
@@ -186,9 +186,9 @@ fn matmul_pipeline_block_vs_mimo_speedup_positive() {
         mapper,
         reducer: Some(Arc::new(FrobeniusSumReducer)),
     };
-    let mut eng = LocalEngine::new(2);
+    let eng = LocalEngine::new(2);
     let result =
-        block_vs_mimo("matmul", &opts, &apps, &mut eng).unwrap();
+        block_vs_mimo("matmul", &opts, &apps, &eng).unwrap();
     // 4 files/task with compile-dominated startup: MIMO must win clearly.
     assert!(
         result.speedup() > 1.5,
@@ -216,8 +216,8 @@ fn matmul_outputs_match_frobenius_reference() {
         mapper,
         reducer: None,
     };
-    let mut eng = LocalEngine::new(1);
-    llmapreduce::mapreduce::run(&opts, &apps, &mut eng).unwrap();
+    let eng = LocalEngine::new(1);
+    llmapreduce::mapreduce::run(&opts, &apps, &eng).unwrap();
 
     for p in &paths {
         let list =
@@ -252,7 +252,7 @@ fn sim_failure_injection_retries_through_pipeline() {
             },
         })
         .collect();
-    let mut eng = SimEngine::new(ClusterConfig {
+    let eng = SimEngine::new(ClusterConfig {
         failure_rate: 0.2,
         max_retries: 8,
         seed: 1234,
@@ -305,11 +305,11 @@ fn app_failure_fails_job_on_both_engines() {
         mapper: Arc::new(FailingApp),
         reducer: None,
     };
-    let mut local = LocalEngine::new(1);
-    assert!(llmapreduce::mapreduce::run(&opts, &apps, &mut local).is_err());
-    let mut sim =
+    let local = LocalEngine::new(1);
+    assert!(llmapreduce::mapreduce::run(&opts, &apps, &local).is_err());
+    let sim =
         SimEngine::new(ClusterConfig::with_width(1)).execute_payloads(true);
-    assert!(llmapreduce::mapreduce::run(&opts, &apps, &mut sim).is_err());
+    assert!(llmapreduce::mapreduce::run(&opts, &apps, &sim).is_err());
 }
 
 // ---------------------------------------------------------------------------
@@ -403,8 +403,8 @@ fn list_file_input_through_pipeline() {
         mapper: WordCountApp::new(None),
         reducer: None,
     };
-    let mut eng = LocalEngine::new(1);
-    let report = llmapreduce::mapreduce::run(&opts, &apps, &mut eng).unwrap();
+    let eng = LocalEngine::new(1);
+    let report = llmapreduce::mapreduce::run(&opts, &apps, &eng).unwrap();
     assert_eq!(report.map.total_items(), 2, "only the listed files");
     assert!(root.join("out/d0.txt.out").is_file());
     assert!(!root.join("out/d1.txt.out").exists());
@@ -533,8 +533,8 @@ fn image_pipeline_app_through_pipeline() {
         mapper,
         reducer: None,
     };
-    let mut eng = LocalEngine::new(1);
-    let report = llmapreduce::mapreduce::run(&opts, &apps, &mut eng).unwrap();
+    let eng = LocalEngine::new(1);
+    let report = llmapreduce::mapreduce::run(&opts, &apps, &eng).unwrap();
     assert_eq!(report.map.total_items(), 2);
     let (ow, oh, gray) = llmapreduce::apps::image::read_pgm(
         &root.join("output/im_0000.ppm.out"),
@@ -589,14 +589,14 @@ fn calibrated_sim_predicts_real_elapsed_within_40_percent() {
         mapper: mapper.clone(),
         reducer: None,
     };
-    let mut local = LocalEngine::new(1);
-    let real = llmapreduce::mapreduce::run(&opts, &apps, &mut local)
+    let local = LocalEngine::new(1);
+    let real = llmapreduce::mapreduce::run(&opts, &apps, &local)
         .unwrap()
         .map
         .makespan;
 
     // Simulated prediction from the calibrated costs.
-    let mut sim = SimEngine::new(ClusterConfig {
+    let sim = SimEngine::new(ClusterConfig {
         dispatch_latency: Duration::ZERO,
         ..ClusterConfig::with_width(1)
     });

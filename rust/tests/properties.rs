@@ -253,7 +253,7 @@ fn prop_sim_deterministic_replay() {
         let seed = rng.next_u64();
         let tasks = random_tasks(rng, n);
         let run = |tasks: Vec<TaskSpec>| {
-            let mut eng = SimEngine::new(ClusterConfig {
+            let eng = SimEngine::new(ClusterConfig {
                 jitter: 0.1,
                 seed,
                 ..ClusterConfig::with_width(rng_width(seed))
@@ -274,7 +274,7 @@ fn prop_sim_wider_cluster_never_slower() {
         let n = rng.range(1, 80);
         let tasks = random_tasks(rng, n);
         let run = |np: usize, tasks: Vec<TaskSpec>| {
-            let mut eng = SimEngine::new(ClusterConfig {
+            let eng = SimEngine::new(ClusterConfig {
                 dispatch_latency: Duration::from_micros(100),
                 ..ClusterConfig::with_width(np)
             });
@@ -310,7 +310,7 @@ fn prop_sim_makespan_bounds() {
             .collect();
         let dispatch = Duration::from_micros(50);
         let np = rng.range(1, 32);
-        let mut eng = SimEngine::new(ClusterConfig {
+        let eng = SimEngine::new(ClusterConfig {
             dispatch_latency: dispatch,
             ..ClusterConfig::with_width(np)
         });

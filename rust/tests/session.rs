@@ -1,0 +1,423 @@
+//! Integration tests for the handle-based invocation API: concurrent
+//! sessions over one shared engine, nested fan-out equivalence, and
+//! drop-without-wait cleanup — all through the public API.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use llmapreduce::apps::{MapApp, MapInstance, ReduceApp};
+use llmapreduce::mapreduce::multilevel::run_nested;
+use llmapreduce::mapreduce::run;
+use llmapreduce::prelude::*;
+use llmapreduce::scheduler::sim::{ClusterConfig, SimEngine};
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("llmr-sess-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn write_inputs(dir: &Path, n: usize, tag: &str) {
+    fs::create_dir_all(dir).unwrap();
+    for i in 0..n {
+        fs::write(dir.join(format!("{tag}-{i:02}.txt")), format!("{tag} {i}\n"))
+            .unwrap();
+    }
+}
+
+/// Mapper that appends a marker, counts completions, and optionally
+/// blocks on a gate until the test opens it.
+struct TestMapApp {
+    gate: Option<Arc<AtomicBool>>,
+    completed: Arc<AtomicUsize>,
+}
+
+struct TestMapInstance {
+    gate: Option<Arc<AtomicBool>>,
+    completed: Arc<AtomicUsize>,
+}
+
+impl TestMapApp {
+    fn free(completed: &Arc<AtomicUsize>) -> Arc<dyn MapApp> {
+        Arc::new(TestMapApp {
+            gate: None,
+            completed: completed.clone(),
+        })
+    }
+
+    fn gated(
+        gate: &Arc<AtomicBool>,
+        completed: &Arc<AtomicUsize>,
+    ) -> Arc<dyn MapApp> {
+        Arc::new(TestMapApp {
+            gate: Some(gate.clone()),
+            completed: completed.clone(),
+        })
+    }
+}
+
+impl MapApp for TestMapApp {
+    fn name(&self) -> &str {
+        "test-map"
+    }
+
+    fn startup(&self) -> Result<Box<dyn MapInstance>> {
+        Ok(Box::new(TestMapInstance {
+            gate: self.gate.clone(),
+            completed: self.completed.clone(),
+        }))
+    }
+}
+
+impl MapInstance for TestMapInstance {
+    fn process(&mut self, input: &Path, output: &Path) -> Result<()> {
+        if let Some(gate) = &self.gate {
+            let deadline = Instant::now() + Duration::from_secs(30);
+            while !gate.load(Ordering::SeqCst) {
+                if Instant::now() > deadline {
+                    return Err(Error::App {
+                        app: "test-map".into(),
+                        input: input.to_path_buf(),
+                        reason: "gate never opened".into(),
+                    });
+                }
+                std::thread::yield_now();
+            }
+        }
+        let data = fs::read_to_string(input)
+            .map_err(|e| Error::io(input.to_path_buf(), e))?;
+        fs::write(output, format!("{data}#mapped\n"))
+            .map_err(|e| Error::io(output.to_path_buf(), e))?;
+        self.completed.fetch_add(1, Ordering::SeqCst);
+        Ok(())
+    }
+}
+
+/// Deterministic reducer: concatenates the directory's files in sorted
+/// order (excluding its own output), partial-fold capable.
+struct SortedConcat;
+
+impl ReduceApp for SortedConcat {
+    fn name(&self) -> &str {
+        "sorted-concat"
+    }
+
+    fn supports_partial(&self) -> bool {
+        true
+    }
+
+    fn reduce(&self, dir: &Path, out: &Path) -> Result<()> {
+        let mut files: Vec<PathBuf> = fs::read_dir(dir)
+            .map_err(|e| Error::io(dir.to_path_buf(), e))?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.is_file() && *p != *out)
+            .collect();
+        files.sort();
+        let mut merged = String::new();
+        for f in &files {
+            merged.push_str(
+                &fs::read_to_string(f).map_err(|e| Error::io(f.clone(), e))?,
+            );
+        }
+        fs::write(out, merged).map_err(|e| Error::io(out.to_path_buf(), e))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The acceptance-criterion test: submit returns pre-execution
+// ---------------------------------------------------------------------------
+
+#[test]
+fn submit_returns_before_any_task_executes() {
+    let root = tmp("pre-exec");
+    let input = root.join("input");
+    write_inputs(&input, 4, "a");
+    let gate = Arc::new(AtomicBool::new(false));
+    let completed = Arc::new(AtomicUsize::new(0));
+    let apps = Apps {
+        mapper: TestMapApp::gated(&gate, &completed),
+        reducer: None,
+    };
+    let engine = LocalEngine::new(2);
+    let session = Session::new(&engine);
+    let opts = Options::new(&input, root.join("output"), "test-map")
+        .np(2)
+        .workdir(&root)
+        .pid(95001);
+
+    // The gate is closed: no task can complete until the test opens it,
+    // so a submit() that executed (or waited on) the work would hang.
+    // It returns instead, with the whole chain pending.
+    let inv = session.submit(&opts, &apps).unwrap();
+    assert_eq!(
+        completed.load(Ordering::SeqCst),
+        0,
+        "submit() must return before any task executed"
+    );
+    assert_eq!(inv.status(), InvocationStatus::Running);
+
+    gate.store(true, Ordering::SeqCst);
+    let report = inv.wait().unwrap();
+    assert_eq!(report.map.total_items(), 4);
+    assert_eq!(completed.load(Ordering::SeqCst), 4);
+}
+
+// ---------------------------------------------------------------------------
+// N invocations in flight on one engine
+// ---------------------------------------------------------------------------
+
+#[test]
+fn many_invocations_before_any_wait_all_complete() {
+    let root = tmp("fanout");
+    let completed = Arc::new(AtomicUsize::new(0));
+    let apps = Apps {
+        mapper: TestMapApp::free(&completed),
+        reducer: Some(Arc::new(SortedConcat)),
+    };
+    let engine = LocalEngine::new(2);
+    let session = Session::new(&engine);
+
+    let mut pending = Vec::new();
+    for k in 0..4u32 {
+        let input = root.join(format!("input-{k}"));
+        write_inputs(&input, 3, &format!("j{k}"));
+        let opts = Options::new(
+            &input,
+            root.join(format!("output-{k}")),
+            "test-map",
+        )
+        .np(3)
+        .reducer("sorted-concat")
+        .workdir(&root)
+        .pid(95100 + k);
+        pending.push((k, session.submit(&opts, &apps).unwrap()));
+    }
+
+    // Everything is submitted before the first wait; wait_all drains the
+    // session, then every handle's wait returns promptly.
+    session.wait_all().unwrap();
+    for (k, inv) in pending {
+        assert_eq!(inv.status(), InvocationStatus::Succeeded);
+        let report = inv.wait().unwrap();
+        assert_eq!(report.map.total_items(), 3, "invocation {k}");
+        let merged = fs::read_to_string(report.redout_path.unwrap()).unwrap();
+        assert_eq!(merged.matches("#mapped").count(), 3);
+    }
+    assert_eq!(completed.load(Ordering::SeqCst), 12);
+}
+
+#[test]
+fn one_session_shared_across_threads() {
+    let root = tmp("threads");
+    let completed = Arc::new(AtomicUsize::new(0));
+    let apps = Apps {
+        mapper: TestMapApp::free(&completed),
+        reducer: None,
+    };
+    let engine = LocalEngine::new(2);
+    let session = Session::new(&engine);
+
+    let mut opt_sets = Vec::new();
+    for k in 0..3u32 {
+        let input = root.join(format!("input-{k}"));
+        write_inputs(&input, 2, &format!("t{k}"));
+        opt_sets.push(
+            Options::new(
+                &input,
+                root.join(format!("output-{k}")),
+                "test-map",
+            )
+            .np(2)
+            .workdir(&root)
+            .pid(95150 + k),
+        );
+    }
+
+    std::thread::scope(|scope| {
+        for opts in &opt_sets {
+            let session = &session;
+            let apps = &apps;
+            scope.spawn(move || {
+                let report =
+                    session.submit(opts, apps).unwrap().wait().unwrap();
+                assert_eq!(report.map.total_items(), 2);
+            });
+        }
+    });
+    assert_eq!(completed.load(Ordering::SeqCst), 6);
+}
+
+// ---------------------------------------------------------------------------
+// Concurrent nested fan-out == serial reference, byte for byte
+// ---------------------------------------------------------------------------
+
+#[test]
+fn nested_concurrent_output_matches_serial_reference() {
+    let root = tmp("nested-equiv");
+    let input = root.join("input");
+    for k in 0..4 {
+        write_inputs(
+            &input.join(format!("branch-{k}")),
+            3,
+            &format!("b{k}"),
+        );
+    }
+    let completed = Arc::new(AtomicUsize::new(0));
+    let apps = Apps {
+        mapper: TestMapApp::free(&completed),
+        reducer: Some(Arc::new(SortedConcat)),
+    };
+
+    // Concurrent path: run_nested submits all four inner pipelines up
+    // front on one engine.
+    let engine = LocalEngine::new(3);
+    let opts = Options::new(&input, root.join("out-concurrent"), "test-map")
+        .np(2)
+        .reducer("sorted-concat")
+        .workdir(&root)
+        .pid(95300);
+    let nested =
+        run_nested(&opts, &apps, Some(Arc::new(SortedConcat)), &engine)
+            .unwrap();
+    let concurrent = fs::read_to_string(nested.final_out.unwrap()).unwrap();
+
+    // Serial reference: the seed's behaviour — one blocking inner run
+    // per subdirectory, then the same collect-and-merge by hand.
+    let serial_engine = LocalEngine::new(3);
+    let serial_out_root = root.join("out-serial");
+    let collect = root.join("serial-collect");
+    fs::create_dir_all(&collect).unwrap();
+    let mut subdirs: Vec<PathBuf> = fs::read_dir(&input)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.is_dir())
+        .collect();
+    subdirs.sort();
+    for (k, sub) in subdirs.iter().enumerate() {
+        let name = sub.file_name().unwrap().to_str().unwrap().to_string();
+        let inner_opts = Options::new(
+            sub,
+            serial_out_root.join(&name),
+            "test-map",
+        )
+        .np(2)
+        .reducer("sorted-concat")
+        .workdir(&root)
+        .pid(95400 + k as u32);
+        let report = run(&inner_opts, &apps, &serial_engine).unwrap();
+        fs::copy(
+            report.redout_path.unwrap(),
+            collect.join(format!("{name}.part")),
+        )
+        .unwrap();
+    }
+    let serial_final = serial_out_root.join("llmapreduce.out");
+    SortedConcat.reduce(&collect, &serial_final).unwrap();
+    let serial = fs::read_to_string(&serial_final).unwrap();
+
+    assert_eq!(
+        concurrent, serial,
+        "concurrent fan-out must not change the final reduce output"
+    );
+    assert_eq!(concurrent.matches("#mapped").count(), 12);
+}
+
+// ---------------------------------------------------------------------------
+// Drop-without-wait: no deadlock, no leaked scratch
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dropped_invocation_cleans_scratch_and_engine_survives() {
+    let root = tmp("dropped");
+    let input = root.join("input");
+    write_inputs(&input, 4, "d");
+    let completed = Arc::new(AtomicUsize::new(0));
+    let apps = Apps {
+        mapper: TestMapApp::free(&completed),
+        reducer: Some(Arc::new(SortedConcat)),
+    };
+    let engine = LocalEngine::new(2);
+    let session = Session::new(&engine);
+    let output = root.join("output");
+    let opts = Options::new(&input, &output, "test-map")
+        .np(2)
+        .reducer("sorted-concat")
+        .overlap(true)
+        .workdir(&root)
+        .pid(95500);
+
+    let inv = session.submit(&opts, &apps).unwrap();
+    drop(inv); // never waited: blocks until the chain settles, then cleans
+
+    assert!(
+        !root.join(".MAPRED.95500").exists(),
+        "dropped invocation must not leak its .MAPRED dir"
+    );
+    assert!(
+        !output.join(".partials.95500").exists(),
+        "dropped invocation must not leak its partials staging"
+    );
+    // The jobs really ran to completion before cleanup.
+    assert_eq!(completed.load(Ordering::SeqCst), 4);
+    assert!(output.join("llmapreduce.out").is_file());
+
+    // The engine is unaffected: it keeps serving new invocations.
+    let opts2 = Options::new(&input, root.join("output-2"), "test-map")
+        .np(2)
+        .workdir(&root)
+        .pid(95501);
+    let report = run(&opts2, &apps, &engine).unwrap();
+    assert_eq!(report.map.total_items(), 4);
+}
+
+// ---------------------------------------------------------------------------
+// Shared SimEngine stays deterministic under the session API
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shared_sim_engine_is_deterministic_across_sessions() {
+    let run_pair = |tag: &str| -> (Duration, Duration) {
+        let root = tmp(tag);
+        let completed = Arc::new(AtomicUsize::new(0));
+        let apps = Apps {
+            mapper: TestMapApp::free(&completed),
+            reducer: Some(Arc::new(SortedConcat)),
+        };
+        let engine = SimEngine::new(ClusterConfig::with_width(2))
+            .execute_payloads(true);
+        let session = Session::new(&engine);
+        let mut invs = Vec::new();
+        for k in 0..2u32 {
+            let input = root.join(format!("input-{k}"));
+            write_inputs(&input, 3, "s");
+            let opts = Options::new(
+                &input,
+                root.join(format!("output-{k}")),
+                "test-map",
+            )
+            .np(3)
+            .reducer("sorted-concat")
+            .workdir(&root)
+            .pid(95600 + k);
+            invs.push(session.submit(&opts, &apps).unwrap());
+        }
+        let b = invs.pop().unwrap();
+        let a = invs.pop().unwrap();
+        // Waited out of submission order on purpose.
+        let eb = b.wait().unwrap().elapsed();
+        let ea = a.wait().unwrap().elapsed();
+        (ea, eb)
+    };
+    assert_eq!(
+        run_pair("sim-det-1"),
+        run_pair("sim-det-2"),
+        "virtual clocks must replay identically under concurrent sessions"
+    );
+}
