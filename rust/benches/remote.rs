@@ -1,0 +1,184 @@
+//! `cargo bench --bench remote` — task-shipping overhead of the
+//! distributed engine.
+//!
+//! Runs the same wordcount pipeline on the in-process `LocalEngine` and
+//! on a `RemoteCoordinator` with 1, 2 and 4 localhost worker processes
+//! (hosted on threads over real TCP), and reports the per-task shipping
+//! overhead — assignment round-trip minus worker-measured execution —
+//! next to compute time.  Every remote run must stay byte-identical to
+//! the local baseline; the bench is also a correctness gate.
+
+use std::fs;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use llmapreduce::mapreduce::{run, Apps};
+use llmapreduce::metrics::report::{render_table, worker_attribution};
+use llmapreduce::options::Options;
+use llmapreduce::prelude::*;
+use llmapreduce::util::fmt_duration;
+use llmapreduce::workload::text::generate_corpus;
+
+const NFILES: usize = 24;
+const NP: usize = 8;
+
+fn apps() -> Result<Apps> {
+    Ok(Apps {
+        mapper: llmapreduce::apps::registry::resolve_mapper("wordcount")?,
+        reducer: Some(llmapreduce::apps::registry::resolve_reducer(
+            "wordcount-reducer",
+        )?),
+    })
+}
+
+fn opts(input: &PathBuf, output: PathBuf, pid: u32) -> Options {
+    Options::new(input, output, "wordcount")
+        .np(NP)
+        .reducer("wordcount-reducer")
+        .pid(pid)
+}
+
+struct Row {
+    label: String,
+    elapsed: Duration,
+    ship_per_task: Duration,
+    compute_per_task: Duration,
+    bytes: Vec<u8>,
+}
+
+fn summarize(
+    label: impl Into<String>,
+    elapsed: Duration,
+    report: &llmapreduce::mapreduce::MapReduceReport,
+) -> Row {
+    let n = report.map.tasks.len().max(1) as u32;
+    let ship: Duration = report.map.tasks.iter().map(|t| t.shipped).sum();
+    let compute: Duration =
+        report.map.tasks.iter().map(|t| t.compute).sum();
+    Row {
+        label: label.into(),
+        elapsed,
+        ship_per_task: ship / n,
+        compute_per_task: compute / n,
+        bytes: fs::read(report.redout_path.as_ref().expect("reduced"))
+            .expect("redout readable"),
+    }
+}
+
+fn main() -> Result<()> {
+    let root = std::env::temp_dir()
+        .join(format!("llmr-bench-remote-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&root);
+    fs::create_dir_all(&root).map_err(|e| Error::io(root.clone(), e))?;
+    let input = root.join("input");
+    // generate_corpus writes textignore.txt next to (not inside) the
+    // corpus dir, so the input scan sees only the docs.
+    let _ = generate_corpus(&input, NFILES, 2_000, 500, 7)?;
+
+    println!(
+        "== remote engine: shipping overhead vs local ({NFILES} files, \
+         np={NP}) ==\n"
+    );
+
+    let mut rows: Vec<Row> = Vec::new();
+
+    // Local baseline at width 4 (the largest fleet below).
+    {
+        let engine = LocalEngine::new(4);
+        let t0 = Instant::now();
+        let report = run(
+            &opts(&input, root.join("out-local"), 84000).workdir(&root),
+            &apps()?,
+            &engine,
+        )?;
+        rows.push(summarize("local (4 slots)", t0.elapsed(), &report));
+    }
+
+    for nworkers in [1usize, 2, 4] {
+        let coordinator = RemoteCoordinator::bind(
+            "127.0.0.1:0",
+            CoordinatorConfig::default(),
+        )?;
+        let addr = coordinator.local_addr().to_string();
+        let workers: Vec<_> = (0..nworkers)
+            .map(|i| {
+                let config = WorkerConfig::new(addr.clone())
+                    .name(format!("w{i}"))
+                    .slots(1);
+                std::thread::spawn(move || run_worker(config))
+            })
+            .collect();
+        coordinator.wait_for_workers(nworkers, Duration::from_secs(30))?;
+        let t0 = Instant::now();
+        let report = run(
+            &opts(
+                &input,
+                root.join(format!("out-remote-{nworkers}")),
+                84100 + nworkers as u32,
+            )
+            .workdir(&root),
+            &apps()?,
+            &coordinator,
+        )?;
+        let elapsed = t0.elapsed();
+        if nworkers == 4 {
+            println!("per-worker attribution (4-worker map job):");
+            println!("{}", worker_attribution(&report.map));
+        }
+        rows.push(summarize(
+            format!("remote ({nworkers} worker(s))"),
+            elapsed,
+            &report,
+        ));
+        drop(coordinator);
+        for w in workers {
+            w.join().expect("worker thread").expect("worker clean exit");
+        }
+    }
+
+    let baseline = rows[0].bytes.clone();
+    for r in &rows {
+        assert_eq!(
+            r.bytes, baseline,
+            "{}: output must be byte-identical to local",
+            r.label
+        );
+    }
+
+    let base_elapsed = rows[0].elapsed;
+    let table_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.label.clone(),
+                fmt_duration(r.elapsed),
+                fmt_duration(r.ship_per_task),
+                fmt_duration(r.compute_per_task),
+                format!(
+                    "{:.2}",
+                    base_elapsed.as_secs_f64()
+                        / r.elapsed.as_secs_f64().max(1e-12)
+                ),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(
+            &[
+                "engine",
+                "makespan",
+                "ship/task",
+                "compute/task",
+                "vs local"
+            ],
+            &table_rows
+        )
+    );
+    println!(
+        "all {} configurations produced byte-identical wordcount output",
+        rows.len()
+    );
+    let _ = fs::remove_dir_all(&root);
+    Ok(())
+}

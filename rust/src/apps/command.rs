@@ -68,6 +68,16 @@ impl MapApp for CommandApp {
         &self.argv[0]
     }
 
+    /// The full argv, whitespace-joined — what the registry's external
+    /// fallback splits back.  Shipped verbatim: tokens may be `$PATH`
+    /// programs, so they cannot be safely absolutized — use absolute
+    /// paths in the argv when workers run from a different directory.
+    /// (Arguments containing spaces do not round-trip; the CLI surface
+    /// has the same limitation.)
+    fn wire_spec(&self) -> String {
+        self.argv.join(" ")
+    }
+
     fn startup(&self) -> Result<Box<dyn MapInstance>> {
         Ok(Box::new(CommandInstance {
             argv: self.argv.clone(),
@@ -196,6 +206,11 @@ impl CommandReducer {
 impl ReduceApp for CommandReducer {
     fn name(&self) -> &str {
         &self.argv[0]
+    }
+
+    /// See [`CommandApp::wire_spec`] (same argv round-trip).
+    fn wire_spec(&self) -> String {
+        self.argv.join(" ")
     }
 
     fn reduce(&self, dir: &Path, out: &Path) -> Result<()> {

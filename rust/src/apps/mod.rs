@@ -19,6 +19,7 @@
 pub mod command;
 pub mod image;
 pub mod matmul;
+pub mod registry;
 pub mod wordcount;
 
 use std::path::{Path, PathBuf};
@@ -65,6 +66,18 @@ pub trait MapApp: Send + Sync {
     fn cost_hint(&self) -> CostHint {
         CostHint::default()
     }
+
+    /// Wire identity for the remote engine: a spec string that
+    /// [`crate::apps::registry::resolve_mapper`] on a worker daemon
+    /// resolves back to an equivalent app.  Defaults to the plain name
+    /// (correct for stateless built-ins); apps carrying construction
+    /// state the resolver understands — an ignore file, an argv —
+    /// override so that state survives the trip.  Apps that only exist
+    /// in-process (test doubles) keep the default and simply fail to
+    /// resolve worker-side, failing the job with a clear error.
+    fn wire_spec(&self) -> String {
+        self.name().to_string()
+    }
 }
 
 /// A launched map application instance.
@@ -77,6 +90,13 @@ pub trait MapInstance {
 /// (Fig 1 steps 4–5).
 pub trait ReduceApp: Send + Sync {
     fn name(&self) -> &str;
+
+    /// Wire identity for the remote engine (see [`MapApp::wire_spec`]);
+    /// resolved worker-side by
+    /// [`crate::apps::registry::resolve_reducer`].
+    fn wire_spec(&self) -> String {
+        self.name().to_string()
+    }
 
     /// Scan `map_output_dir` and write the merged result to `out_file`.
     fn reduce(&self, map_output_dir: &Path, out_file: &Path) -> Result<()>;

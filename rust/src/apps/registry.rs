@@ -1,0 +1,125 @@
+//! Name → application resolution, shared by the CLI and the remote
+//! worker daemon.
+//!
+//! The paper resolves mapper/reducer names to executables on disk; this
+//! registry resolves them to the built-in apps first and falls back to
+//! external commands ("any program in any language", §I).  The remote
+//! engine leans on the same mapping for its wire protocol: the
+//! coordinator ships [`crate::apps::MapApp::wire_spec`] strings, and the
+//! worker daemon resolves them here — so a spec that round-trips through
+//! the CLI (`--mapper=wordcount:ignore.txt`) round-trips over the wire
+//! identically.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::apps::command::{CommandApp, CommandReducer};
+use crate::apps::image::ImageConvertApp;
+use crate::apps::matmul::{FrobeniusSumReducer, MatmulChainApp};
+use crate::apps::wordcount::{WordCountApp, WordCountReducer};
+use crate::apps::{MapApp, ReduceApp};
+use crate::error::Result;
+use crate::runtime::Manifest;
+
+/// Resolve a mapper spec: built-ins first, external command otherwise.
+///
+/// Built-ins: `imageconvert`, `imagepipeline`, `matmulchain`,
+/// `wordcount[:ignorefile]`.  Anything else is split on whitespace and
+/// launched as an external command per file.
+pub fn resolve_mapper(spec: &str) -> Result<Arc<dyn MapApp>> {
+    if spec == "imageconvert" {
+        let m = Manifest::discover()?;
+        return Ok(ImageConvertApp::new(&m)? as Arc<dyn MapApp>);
+    }
+    if spec == "imagepipeline" {
+        let m = Manifest::discover()?;
+        return Ok(ImageConvertApp::pipeline(&m)? as Arc<dyn MapApp>);
+    }
+    if spec == "matmulchain" {
+        let m = Manifest::discover()?;
+        return Ok(MatmulChainApp::new(&m)? as Arc<dyn MapApp>);
+    }
+    if let Some(rest) = spec.strip_prefix("wordcount") {
+        if rest.is_empty() || rest.starts_with(':') {
+            let ignore = rest
+                .strip_prefix(':')
+                .map(PathBuf::from)
+                .filter(|p| !p.as_os_str().is_empty());
+            return Ok(WordCountApp::new(ignore) as Arc<dyn MapApp>);
+        }
+    }
+    Ok(CommandApp::new(
+        spec.split_whitespace().map(str::to_string).collect(),
+    )? as Arc<dyn MapApp>)
+}
+
+/// Resolve a reducer spec: `wordcount-reducer`, `frobsum-reducer`, or an
+/// external command.
+pub fn resolve_reducer(spec: &str) -> Result<Arc<dyn ReduceApp>> {
+    match spec {
+        "wordcount-reducer" => Ok(Arc::new(WordCountReducer)),
+        "frobsum-reducer" => Ok(Arc::new(FrobeniusSumReducer)),
+        other => Ok(CommandReducer::new(
+            other.split_whitespace().map(str::to_string).collect(),
+        )? as Arc<dyn ReduceApp>),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wordcount_specs_resolve_to_builtin() {
+        assert_eq!(resolve_mapper("wordcount").unwrap().name(), "wordcount");
+        let with_ignore = resolve_mapper("wordcount:/tmp/ign.txt").unwrap();
+        assert_eq!(with_ignore.name(), "wordcount");
+        // The ignore path survives in the wire spec.
+        assert_eq!(with_ignore.wire_spec(), "wordcount:/tmp/ign.txt");
+    }
+
+    #[test]
+    fn wordcount_prefixed_command_is_not_the_builtin() {
+        // "wordcounter" must not silently become the wordcount built-in.
+        let app = resolve_mapper("wordcounter").unwrap();
+        assert_eq!(app.name(), "wordcounter");
+        assert_eq!(app.wire_spec(), "wordcounter");
+    }
+
+    #[test]
+    fn builtin_reducers_resolve() {
+        assert_eq!(
+            resolve_reducer("wordcount-reducer").unwrap().name(),
+            "wordcount-reducer"
+        );
+        assert_eq!(
+            resolve_reducer("frobsum-reducer").unwrap().name(),
+            "frobsum-reducer"
+        );
+    }
+
+    #[test]
+    fn external_command_spec_roundtrips() {
+        let app = resolve_mapper("./mapper.sh ref.txt").unwrap();
+        assert_eq!(app.wire_spec(), "./mapper.sh ref.txt");
+        let red = resolve_reducer("./reduce.sh --merge").unwrap();
+        assert_eq!(red.wire_spec(), "./reduce.sh --merge");
+    }
+
+    #[test]
+    fn empty_spec_rejected() {
+        assert!(resolve_mapper("").is_err());
+        assert!(resolve_reducer("").is_err());
+    }
+
+    #[test]
+    fn builtin_wire_specs_resolve_back_to_equivalent_apps() {
+        // The contract the remote engine relies on: resolving a spec and
+        // re-resolving its wire_spec lands on the same app identity.
+        for spec in ["wordcount", "wordcount:ign.txt", "cat"] {
+            let app = resolve_mapper(spec).unwrap();
+            let again = resolve_mapper(&app.wire_spec()).unwrap();
+            assert_eq!(app.wire_spec(), again.wire_spec(), "{spec}");
+        }
+    }
+}

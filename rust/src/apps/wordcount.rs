@@ -114,6 +114,21 @@ impl MapApp for WordCountApp {
         "wordcount"
     }
 
+    /// Remote workers must re-bind the same ignore file, so the wire
+    /// spec carries it (`wordcount:<path>` — the CLI's spelling, which
+    /// [`crate::apps::registry::resolve_mapper`] parses back).  A
+    /// relative path is absolutized against this process's working
+    /// directory first: workers share the filesystem, not the cwd.
+    fn wire_spec(&self) -> String {
+        match &self.ignore_file {
+            Some(p) => format!(
+                "wordcount:{}",
+                crate::util::absolutize(p).display()
+            ),
+            None => "wordcount".to_string(),
+        }
+    }
+
     fn startup(&self) -> Result<Box<dyn MapInstance>> {
         if !self.startup_spin.is_zero() {
             let t = std::time::Instant::now();

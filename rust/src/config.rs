@@ -41,6 +41,9 @@ pub enum EngineKind {
     Sim,
     /// Simulator that also executes payloads (virtual time, real output).
     SimExec,
+    /// Distributed coordinator: tasks ship to `llmapreduce worker`
+    /// daemons over TCP (DESIGN.md §6).
+    Remote,
 }
 
 impl EngineKind {
@@ -49,9 +52,32 @@ impl EngineKind {
             "local" => Ok(EngineKind::Local),
             "sim" => Ok(EngineKind::Sim),
             "sim-exec" | "simexec" => Ok(EngineKind::SimExec),
+            "remote" => Ok(EngineKind::Remote),
             other => Err(Error::Config(format!(
-                "engine must be local|sim|sim-exec, got '{other}'"
+                "engine must be local|sim|sim-exec|remote, got '{other}'"
             ))),
+        }
+    }
+}
+
+/// `[remote]` profile: how the coordinator fronts a worker fleet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RemoteDefaults {
+    /// Address the coordinator binds (`--listen`).
+    pub listen: String,
+    /// Workers to wait for before running jobs (`--min-workers`).
+    pub min_workers: usize,
+    /// Silence threshold after which a worker is declared dead and its
+    /// in-flight tasks reassigned.
+    pub heartbeat_timeout: Duration,
+}
+
+impl Default for RemoteDefaults {
+    fn default() -> Self {
+        RemoteDefaults {
+            listen: "127.0.0.1:7171".to_string(),
+            min_workers: 1,
+            heartbeat_timeout: Duration::from_secs(3),
         }
     }
 }
@@ -61,6 +87,8 @@ impl EngineKind {
 pub struct Config {
     pub engine: EngineKind,
     pub cluster: ClusterConfig,
+    /// Coordinator/worker profile for `engine = "remote"`.
+    pub remote: RemoteDefaults,
     /// Job option defaults applied under explicit CLI values.
     pub job_defaults: JobDefaults,
 }
@@ -152,6 +180,23 @@ impl Config {
             ));
         }
 
+        // [remote]
+        if let Some(v) = doc.get("remote.listen") {
+            config.remote.listen = v
+                .as_str()
+                .ok_or_else(|| {
+                    Error::Config("remote.listen must be a string".into())
+                })?
+                .to_string();
+        }
+        if let Some(n) = usize_key(&doc, "remote.min_workers")? {
+            config.remote.min_workers = n;
+        }
+        if let Some(ms) = usize_key(&doc, "remote.heartbeat_timeout_ms")? {
+            config.remote.heartbeat_timeout =
+                Duration::from_millis(ms as u64);
+        }
+
         // [job]
         let j = &mut config.job_defaults;
         j.np = usize_key(&doc, "job.np")?;
@@ -216,6 +261,16 @@ impl Config {
                 self.cluster.seed = s;
             }
         }
+        if let Some(v) = get("LLMR_LISTEN") {
+            if !v.is_empty() {
+                self.remote.listen = v;
+            }
+        }
+        if let Some(v) = get("LLMR_MIN_WORKERS") {
+            if let Ok(n) = v.parse::<usize>() {
+                self.remote.min_workers = n;
+            }
+        }
     }
 
     /// Fill unset fields of `opts` from the job defaults (CLI wins).
@@ -265,14 +320,18 @@ impl Config {
         }
     }
 
-    /// Build the configured engine.  The local engine inherits the
-    /// cluster profile's failure-injection knobs, so `engine = "local"` vs
-    /// `engine = "sim"` replay the same retry pattern (DESIGN.md §4).
+    /// Build the configured engine.  The local and remote engines
+    /// inherit the cluster profile's failure-injection knobs, so
+    /// `engine = "local"` vs `"sim"` vs `"remote"` replay the same retry
+    /// pattern (DESIGN.md §4).  `engine = "remote"` binds
+    /// `remote.listen` and blocks until `remote.min_workers` workers
+    /// register (60s grace) — spawn `llmapreduce worker` daemons first
+    /// or concurrently.
     pub fn build_engine(
         &self,
         width: usize,
-    ) -> Box<dyn crate::scheduler::Engine> {
-        match self.engine {
+    ) -> Result<Box<dyn crate::scheduler::Engine>> {
+        Ok(match self.engine {
             EngineKind::Local => {
                 Box::new(crate::scheduler::local::LocalEngine::with_policy(
                     width,
@@ -294,7 +353,26 @@ impl Config {
                 })
                 .execute_payloads(true),
             ),
-        }
+            EngineKind::Remote => {
+                use crate::scheduler::remote::{
+                    CoordinatorConfig, RemoteCoordinator,
+                };
+                let coordinator = RemoteCoordinator::bind(
+                    &self.remote.listen,
+                    CoordinatorConfig {
+                        heartbeat_timeout: self.remote.heartbeat_timeout,
+                        policy: self.cluster.failure_policy(),
+                    },
+                )?;
+                if self.remote.min_workers > 0 {
+                    coordinator.wait_for_workers(
+                        self.remote.min_workers,
+                        Duration::from_secs(60),
+                    )?;
+                }
+                Box::new(coordinator)
+            }
+        })
     }
 }
 
@@ -395,13 +473,57 @@ options = ["-l mem=8G"]
     #[test]
     fn build_engine_kinds() {
         let mut c = Config::default();
-        assert_eq!(c.build_engine(2).name(), "local");
-        assert!(!c.build_engine(2).virtual_time());
+        assert_eq!(c.build_engine(2).unwrap().name(), "local");
+        assert!(!c.build_engine(2).unwrap().virtual_time());
         c.engine = EngineKind::Sim;
-        assert_eq!(c.build_engine(2).name(), "sim");
-        assert!(c.build_engine(2).virtual_time());
+        assert_eq!(c.build_engine(2).unwrap().name(), "sim");
+        assert!(c.build_engine(2).unwrap().virtual_time());
         c.engine = EngineKind::SimExec;
-        assert_eq!(c.build_engine(2).name(), "sim");
+        assert_eq!(c.build_engine(2).unwrap().name(), "sim");
+    }
+
+    #[test]
+    fn build_remote_engine_binds_without_waiting_when_zero_min_workers() {
+        let mut c = Config::default();
+        c.engine = EngineKind::Remote;
+        c.remote.listen = "127.0.0.1:0".into(); // ephemeral port
+        c.remote.min_workers = 0;
+        let eng = c.build_engine(2).unwrap();
+        assert_eq!(eng.name(), "remote");
+        assert!(!eng.virtual_time());
+    }
+
+    #[test]
+    fn remote_section_parses() {
+        let c = Config::parse(
+            "engine = \"remote\"\n\n[remote]\nlisten = \"0.0.0.0:9000\"\n\
+             min_workers = 4\nheartbeat_timeout_ms = 1500\n",
+        )
+        .unwrap();
+        assert_eq!(c.engine, EngineKind::Remote);
+        assert_eq!(c.remote.listen, "0.0.0.0:9000");
+        assert_eq!(c.remote.min_workers, 4);
+        assert_eq!(
+            c.remote.heartbeat_timeout,
+            Duration::from_millis(1500)
+        );
+        // Defaults hold when the section is absent.
+        let d = Config::parse("").unwrap();
+        assert_eq!(d.remote, RemoteDefaults::default());
+    }
+
+    #[test]
+    fn remote_env_overrides() {
+        let mut c = Config::default();
+        c.apply_env_overrides(|k| match k {
+            "LLMR_ENGINE" => Some("remote".into()),
+            "LLMR_LISTEN" => Some("127.0.0.1:9191".into()),
+            "LLMR_MIN_WORKERS" => Some("3".into()),
+            _ => None,
+        });
+        assert_eq!(c.engine, EngineKind::Remote);
+        assert_eq!(c.remote.listen, "127.0.0.1:9191");
+        assert_eq!(c.remote.min_workers, 3);
     }
 
     #[test]

@@ -74,6 +74,9 @@ pub mod prelude {
     pub use crate::runtime::Manifest;
     pub use crate::scheduler::failure::FailurePolicy;
     pub use crate::scheduler::local::LocalEngine;
+    pub use crate::scheduler::remote::{
+        run_worker, CoordinatorConfig, RemoteCoordinator, WorkerConfig,
+    };
     pub use crate::scheduler::sim::{ClusterConfig, SimEngine};
     pub use crate::scheduler::{Engine, JobReport};
 }

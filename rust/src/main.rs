@@ -11,25 +11,23 @@
 //! ```
 
 use std::path::PathBuf;
-use std::sync::Arc;
 use std::time::Duration;
 
-use llmapreduce::apps::command::{CommandApp, CommandReducer};
 use llmapreduce::apps::image::ImageConvertApp;
-use llmapreduce::apps::matmul::{FrobeniusSumReducer, MatmulChainApp};
-use llmapreduce::apps::wordcount::{WordCountApp, WordCountReducer};
-use llmapreduce::apps::{MapApp, ReduceApp};
+use llmapreduce::apps::matmul::MatmulChainApp;
+use llmapreduce::apps::registry::{resolve_mapper, resolve_reducer};
 use llmapreduce::bench::experiments::{
     fig18_19_sweep, table1_java, table1_matlab, table2, PAPER_WIDTHS,
 };
 use llmapreduce::error::{Error, Result};
 use llmapreduce::mapreduce::{run, Apps};
 use llmapreduce::metrics::report::{
-    overhead_series, speedup_series, sweep_csv,
+    overhead_series, speedup_series, sweep_csv, worker_attribution,
 };
-use llmapreduce::options::Options;
+use llmapreduce::options::{Options, WorkerOptions};
 use llmapreduce::prelude::{LocalEngine, Manifest};
 use llmapreduce::scheduler::cost::Calibration;
+use llmapreduce::scheduler::remote::{run_worker, WorkerConfig};
 use llmapreduce::workload::images::generate_images;
 use llmapreduce::workload::matrices::generate_matrix_lists;
 use llmapreduce::workload::text::generate_corpus;
@@ -40,6 +38,7 @@ llmapreduce — LLMapReduce (HPEC'16) on a Rust + JAX + Pallas stack
 
 USAGE:
   llmapreduce run [Fig 2 options]        run one map-reduce job
+  llmapreduce worker --connect=H:P       join a remote coordinator
   llmapreduce gen-data <kind> [opts]     generate synthetic workloads
   llmapreduce bench <experiment>         regenerate a paper table/figure
   llmapreduce inspect                    show artifacts + environment
@@ -52,11 +51,18 @@ RUN OPTIONS (Fig 2 of the paper):
   --apptype=mimo|siso --options=<raw scheduler directives>
   --scheduler=gridengine|slurm|lsf
   plus: --slots=N (engine width, default np)
-        --engine=local|sim|sim-exec (execution substrate)
+        --engine=local|sim|sim-exec|remote (execution substrate)
+        --listen=HOST:PORT (remote: coordinator bind, default
+          127.0.0.1:7171)  --min-workers=N (remote: wait for N
+          registered workers before running, default 1)
         --workdir=DIR (where .MAPRED.PID is created)
         --overlap=true|false (overlapped map->reduce: the reducer
           consumes each mapper task's output as it completes instead
           of barriering on the whole map array job; see DESIGN.md)
+
+WORKER (the daemon side of --engine=remote; spawn one per node):
+  llmapreduce worker --connect=HOST:PORT [--slots=N] [--name=S]
+                     [--heartbeat-ms=N] [--fail-after=N]
 
   Built-in mappers: imageconvert, imagepipeline, matmulchain,
                     wordcount[:ignorefile]
@@ -86,6 +92,7 @@ fn main() {
 fn dispatch(args: &[String]) -> Result<()> {
     match args.first().map(String::as_str) {
         Some("run") => cmd_run(&args[1..]),
+        Some("worker") => cmd_worker(&args[1..]),
         Some("gen-data") => cmd_gen_data(&args[1..]),
         Some("bench") => cmd_bench(&args[1..]),
         Some("inspect") => cmd_inspect(),
@@ -99,77 +106,62 @@ fn dispatch(args: &[String]) -> Result<()> {
     }
 }
 
-/// Pull the engine options (`--slots=N`, `--engine=local|sim|sim-exec`)
-/// out of the arg list — they select the execution substrate, which the
-/// paper's Fig 2 surface never needed (it had a real cluster).
-fn split_engine_args(
-    args: &[String],
-) -> (Vec<String>, Option<usize>, Option<String>) {
+/// Engine options pulled out of the `run` arg list — they select the
+/// execution substrate, which the paper's Fig 2 surface never needed
+/// (it had a real cluster).
+#[derive(Default)]
+struct EngineArgs {
+    slots: Option<usize>,
+    engine: Option<String>,
+    listen: Option<String>,
+    min_workers: Option<usize>,
+}
+
+/// Split `--slots` / `--engine` / `--listen` / `--min-workers` from the
+/// Fig 2 options.
+fn split_engine_args(args: &[String]) -> (Vec<String>, EngineArgs) {
     let mut rest = Vec::new();
-    let mut slots = None;
-    let mut engine = None;
+    let mut ea = EngineArgs::default();
     let mut it = args.iter().peekable();
     while let Some(a) = it.next() {
         if let Some(v) = a.strip_prefix("--slots=") {
-            slots = v.parse().ok();
+            ea.slots = v.parse().ok();
         } else if a == "--slots" {
-            slots = it.next().and_then(|v| v.parse().ok());
+            ea.slots = it.next().and_then(|v| v.parse().ok());
         } else if let Some(v) = a.strip_prefix("--engine=") {
-            engine = Some(v.to_string());
+            ea.engine = Some(v.to_string());
         } else if a == "--engine" {
-            engine = it.next().cloned();
+            ea.engine = it.next().cloned();
+        } else if let Some(v) = a.strip_prefix("--listen=") {
+            ea.listen = Some(v.to_string());
+        } else if a == "--listen" {
+            ea.listen = it.next().cloned();
+        } else if let Some(v) = a.strip_prefix("--min-workers=") {
+            ea.min_workers = v.parse().ok();
+        } else if a == "--min-workers" {
+            ea.min_workers = it.next().and_then(|v| v.parse().ok());
         } else {
             rest.push(a.clone());
         }
     }
-    (rest, slots, engine)
-}
-
-/// Resolve a mapper name: built-ins first, external command otherwise.
-fn resolve_mapper(name: &str) -> Result<Arc<dyn MapApp>> {
-    if name == "imageconvert" {
-        let m = Manifest::discover()?;
-        return Ok(ImageConvertApp::new(&m)? as Arc<dyn MapApp>);
-    }
-    if name == "imagepipeline" {
-        let m = Manifest::discover()?;
-        return Ok(ImageConvertApp::pipeline(&m)? as Arc<dyn MapApp>);
-    }
-    if name == "matmulchain" {
-        let m = Manifest::discover()?;
-        return Ok(MatmulChainApp::new(&m)? as Arc<dyn MapApp>);
-    }
-    if let Some(rest) = name.strip_prefix("wordcount") {
-        let ignore = rest
-            .strip_prefix(':')
-            .map(PathBuf::from)
-            .filter(|p| !p.as_os_str().is_empty());
-        return Ok(WordCountApp::new(ignore) as Arc<dyn MapApp>);
-    }
-    Ok(CommandApp::new(
-        name.split_whitespace().map(str::to_string).collect(),
-    )? as Arc<dyn MapApp>)
-}
-
-fn resolve_reducer(name: &str) -> Result<Arc<dyn ReduceApp>> {
-    match name {
-        "wordcount-reducer" => Ok(Arc::new(WordCountReducer)),
-        "frobsum-reducer" => Ok(Arc::new(FrobeniusSumReducer)),
-        other => Ok(CommandReducer::new(
-            other.split_whitespace().map(str::to_string).collect(),
-        )? as Arc<dyn ReduceApp>),
-    }
+    (rest, ea)
 }
 
 fn cmd_run(args: &[String]) -> Result<()> {
-    let (fig2_args, slots, engine_arg) = split_engine_args(args);
+    let (fig2_args, engine_args) = split_engine_args(args);
     let mut opts = Options::parse_args(&fig2_args)?;
 
     // Config file + env defaults under explicit CLI values.
     let mut config = llmapreduce::config::Config::discover()?;
     config.apply_job_defaults(&mut opts);
-    if let Some(e) = engine_arg {
-        config.engine = llmapreduce::config::EngineKind::parse(&e)?;
+    if let Some(e) = &engine_args.engine {
+        config.engine = llmapreduce::config::EngineKind::parse(e)?;
+    }
+    if let Some(l) = engine_args.listen {
+        config.remote.listen = l;
+    }
+    if let Some(n) = engine_args.min_workers {
+        config.remote.min_workers = n;
     }
 
     let mapper = resolve_mapper(&opts.mapper)?;
@@ -179,8 +171,17 @@ fn cmd_run(args: &[String]) -> Result<()> {
         .map(resolve_reducer)
         .transpose()?;
     let apps = Apps { mapper, reducer };
-    let width = slots.or(opts.np).unwrap_or(4);
-    let engine = config.build_engine(width);
+    let width = engine_args.slots.or(opts.np).unwrap_or(4);
+    if config.engine == llmapreduce::config::EngineKind::Remote {
+        println!(
+            "coordinator binding {} — waiting for {} worker(s); spawn \
+             them with `llmapreduce worker --connect={}`",
+            config.remote.listen,
+            config.remote.min_workers,
+            config.remote.listen
+        );
+    }
+    let engine = config.build_engine(width)?;
     let report = run(&opts, &apps, engine.as_ref())?;
     println!("engine: {}", engine.name());
 
@@ -218,6 +219,29 @@ fn cmd_run(args: &[String]) -> Result<()> {
     if let Some(d) = &report.mapred_dir {
         println!("  kept workdir: {}", d.display());
     }
+    if engine.name() == "remote" {
+        println!("\nper-worker attribution (map job):");
+        println!("{}", worker_attribution(&report.map));
+    }
+    Ok(())
+}
+
+/// `llmapreduce worker`: the daemon side of `--engine=remote`.  Blocks
+/// until the coordinator shuts the fleet down.
+fn cmd_worker(args: &[String]) -> Result<()> {
+    let w = WorkerOptions::parse_args(args)?;
+    let mut config = WorkerConfig::new(w.connect.clone()).slots(w.slots);
+    if let Some(name) = &w.name {
+        config = config.name(name.clone());
+    }
+    config.heartbeat_interval = Duration::from_millis(w.heartbeat_ms);
+    config.fail_after = w.fail_after;
+    println!(
+        "worker '{}' joining {} with {} slot(s)",
+        config.name, config.connect, config.slots
+    );
+    run_worker(config)?;
+    println!("worker done (coordinator shut down)");
     Ok(())
 }
 

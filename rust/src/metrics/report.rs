@@ -103,6 +103,61 @@ pub fn overlap_comparison(
     )
 }
 
+/// Per-worker attribution of one job on the remote engine: where each
+/// worker's time went — dispatch wait (queueing before shipping),
+/// network/shipping overhead, application startup and compute — plus
+/// how many of its tasks had to be reassigned off dead peers.  Tasks
+/// without worker attribution (local/sim engines) group under `-`.
+pub fn worker_attribution(job: &crate::scheduler::JobReport) -> String {
+    use std::collections::BTreeMap;
+    #[derive(Default)]
+    struct Acc {
+        tasks: usize,
+        dispatch: Duration,
+        shipped: Duration,
+        startup: Duration,
+        compute: Duration,
+        reassigned: usize,
+    }
+    let mut per: BTreeMap<String, Acc> = BTreeMap::new();
+    for t in &job.tasks {
+        let key = t.worker.clone().unwrap_or_else(|| "-".to_string());
+        let acc = per.entry(key).or_default();
+        acc.tasks += 1;
+        acc.dispatch += t.dispatch_wait;
+        acc.shipped += t.shipped;
+        acc.startup += t.startup;
+        acc.compute += t.compute;
+        acc.reassigned += t.reassigned;
+    }
+    let rows: Vec<Vec<String>> = per
+        .iter()
+        .map(|(worker, a)| {
+            vec![
+                worker.clone(),
+                a.tasks.to_string(),
+                fmt_duration(a.dispatch),
+                fmt_duration(a.shipped),
+                fmt_duration(a.startup),
+                fmt_duration(a.compute),
+                a.reassigned.to_string(),
+            ]
+        })
+        .collect();
+    render_table(
+        &[
+            "worker",
+            "tasks",
+            "dispatch wait",
+            "shipping",
+            "startup",
+            "compute",
+            "reassigned",
+        ],
+        &rows,
+    )
+}
+
 /// Fig 18: overhead per array task, one row per np, one column per option.
 pub fn overhead_series(sweep: &Sweep) -> String {
     let options = sweep.options();
@@ -303,6 +358,35 @@ mod tests {
         assert!(t.contains("barriered"), "{t}");
         assert!(t.contains("overlapped"), "{t}");
         assert!(t.contains("1.54"), "barrier/overlap speed-up row: {t}");
+    }
+
+    #[test]
+    fn worker_attribution_groups_and_sums() {
+        use crate::scheduler::{JobReport, TaskReport};
+        let task = |worker: &str, ship_ms: u64, reassigned: usize| {
+            TaskReport {
+                worker: Some(worker.to_string()),
+                shipped: Duration::from_millis(ship_ms),
+                compute: Duration::from_millis(10),
+                ..Default::default()
+            }
+        };
+        let job = JobReport {
+            tasks: vec![
+                task("w1", 5, 0),
+                task("w1", 7, 1),
+                task("w2", 3, 0),
+            ],
+            ..Default::default()
+        };
+        let t = worker_attribution(&job);
+        assert!(t.contains("w1"), "{t}");
+        assert!(t.contains("w2"), "{t}");
+        assert!(t.contains("shipping"), "{t}");
+        // w1 row: 2 tasks, 12ms shipped, 1 reassignment.
+        let w1_row = t.lines().find(|l| l.contains("w1")).unwrap();
+        assert!(w1_row.contains("| 2 "), "{w1_row}");
+        assert!(w1_row.contains("12"), "{w1_row}");
     }
 
     #[test]

@@ -381,6 +381,98 @@ impl Options {
     }
 }
 
+/// Options of the `llmapreduce worker` subcommand (reproduction extra:
+/// the daemon side of `--engine=remote`, DESIGN.md §6).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerOptions {
+    /// `--connect=host:port`: the coordinator to register with.
+    pub connect: String,
+    /// `--slots=N`: concurrent task capacity advertised (default 1).
+    pub slots: usize,
+    /// `--name=S`: report attribution name (default `worker-<pid>`).
+    pub name: Option<String>,
+    /// `--heartbeat-ms=N`: liveness beacon period (default 500).
+    pub heartbeat_ms: u64,
+    /// `--fail-after=N`: chaos knob — drop the connection cold upon
+    /// receiving the Nth assignment (fault-tolerance testing).
+    pub fail_after: Option<usize>,
+}
+
+impl WorkerOptions {
+    /// Parse the argument vector after `llmapreduce worker`.  Accepts
+    /// `--key=value` and `--key value`, like the Fig 2 surface.
+    pub fn parse_args<I, S>(args: I) -> Result<WorkerOptions>
+    where
+        I: IntoIterator<Item = S>,
+        S: AsRef<str>,
+    {
+        let mut connect = None;
+        let mut slots = 1usize;
+        let mut name = None;
+        let mut heartbeat_ms = 500u64;
+        let mut fail_after = None;
+        let argv: Vec<String> =
+            args.into_iter().map(|s| s.as_ref().to_string()).collect();
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            let (key, inline_val) = match arg.split_once('=') {
+                Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                None => (arg.clone(), None),
+            };
+            let mut take = || -> Result<String> {
+                if let Some(v) = inline_val.clone() {
+                    Ok(v)
+                } else {
+                    i += 1;
+                    argv.get(i).cloned().ok_or_else(|| {
+                        Error::opt(format!("{key} requires a value"))
+                    })
+                }
+            };
+            match key.as_str() {
+                "--connect" => connect = Some(take()?),
+                "--slots" => slots = parse_count(&key, &take()?)?,
+                "--name" => name = Some(take()?),
+                "--heartbeat-ms" => {
+                    heartbeat_ms = parse_count(&key, &take()?)? as u64
+                }
+                "--fail-after" => {
+                    fail_after = Some(parse_count(&key, &take()?)?)
+                }
+                other => {
+                    return Err(Error::opt(format!(
+                        "unknown worker option '{other}'"
+                    )))
+                }
+            }
+            i += 1;
+        }
+        let connect = connect.ok_or_else(|| {
+            Error::opt("worker requires --connect=host:port")
+        })?;
+        if connect.is_empty() {
+            return Err(Error::opt("--connect must be non-empty"));
+        }
+        if slots == 0 {
+            return Err(Error::opt("--slots must be > 0"));
+        }
+        if heartbeat_ms == 0 {
+            return Err(Error::opt("--heartbeat-ms must be > 0"));
+        }
+        if fail_after == Some(0) {
+            return Err(Error::opt("--fail-after must be > 0"));
+        }
+        Ok(WorkerOptions {
+            connect,
+            slots,
+            name,
+            heartbeat_ms,
+            fail_after,
+        })
+    }
+}
+
 fn parse_count(key: &str, s: &str) -> Result<usize> {
     s.parse::<usize>()
         .map_err(|_| Error::opt(format!("{key} expects a positive integer, got '{s}'")))
@@ -542,6 +634,52 @@ mod tests {
         let mut args = base();
         args.push("--np");
         assert!(Options::parse_args(args).is_err());
+    }
+
+    #[test]
+    fn worker_options_parse_both_forms() {
+        let w = WorkerOptions::parse_args([
+            "--connect=127.0.0.1:7171",
+            "--slots=4",
+            "--name=w1",
+        ])
+        .unwrap();
+        assert_eq!(w.connect, "127.0.0.1:7171");
+        assert_eq!(w.slots, 4);
+        assert_eq!(w.name.as_deref(), Some("w1"));
+        assert_eq!(w.heartbeat_ms, 500, "default beacon period");
+        assert_eq!(w.fail_after, None);
+
+        let w = WorkerOptions::parse_args([
+            "--connect", "host:9000",
+            "--heartbeat-ms", "250",
+            "--fail-after", "2",
+        ])
+        .unwrap();
+        assert_eq!(w.connect, "host:9000");
+        assert_eq!(w.slots, 1, "default one slot");
+        assert_eq!(w.heartbeat_ms, 250);
+        assert_eq!(w.fail_after, Some(2));
+    }
+
+    #[test]
+    fn worker_options_validation() {
+        assert!(WorkerOptions::parse_args::<[&str; 0], &str>([]).is_err());
+        assert!(WorkerOptions::parse_args(["--slots=2"]).is_err());
+        assert!(
+            WorkerOptions::parse_args(["--connect=h:1", "--slots=0"])
+                .is_err()
+        );
+        assert!(WorkerOptions::parse_args([
+            "--connect=h:1",
+            "--fail-after=0"
+        ])
+        .is_err());
+        assert!(WorkerOptions::parse_args([
+            "--connect=h:1",
+            "--bogus=1"
+        ])
+        .is_err());
     }
 
     #[test]

@@ -88,6 +88,20 @@ pub fn execute(work: &TaskWork) -> Result<ExecOutcome> {
     }
 }
 
+/// Extract a human-readable message from a `catch_unwind` payload —
+/// shared by every engine that runs app code on its own threads (local
+/// workers, remote worker daemons): a payload panic must fail the job
+/// with its message, not kill the executing thread.
+pub(crate) fn panic_message(
+    panic: Box<dyn std::any::Any + Send>,
+) -> String {
+    panic
+        .downcast_ref::<&str>()
+        .map(|s| (*s).to_string())
+        .or_else(|| panic.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".into())
+}
+
 /// What the payload would cost on the virtual clock, without executing it.
 /// Used by the simulator in pure-timing mode.
 pub fn virtual_cost(work: &TaskWork) -> ExecOutcome {

@@ -13,8 +13,10 @@
 //!
 //! * [`LocalEngine::submit`] validates the dependency edge, drops the job
 //!   in the dispatcher's inbox and **returns before anything executes**;
-//! * a *dispatcher thread* admits inbox jobs, tracks job- and
-//!   task-granularity dependency edges ([`JobSpec::task_deps`]), and
+//! * a *dispatcher thread* admits inbox jobs into the engine-shared
+//!   `JobTable` (the dependency/completion state machine also driving
+//!   [`crate::scheduler::remote::RemoteCoordinator`]), which tracks job-
+//!   and task-granularity dependency edges ([`JobSpec::task_deps`]) and
 //!   promotes eligible tasks from **any** submitted job onto one shared
 //!   ready queue — independent jobs interleave under the single `slots`
 //!   cap instead of running one-at-a-time;
@@ -25,11 +27,11 @@
 //! * [`LocalEngine::wait`] just blocks on the job's outcome.
 //!
 //! Failure injection follows the same [`FailurePolicy`] rule as
-//! [`crate::scheduler::sim::SimEngine`], so per-task retry counts are
-//! identical across the two engines for the same (seed, task id) — one
-//! behavioral contract, two clocks.
+//! [`crate::scheduler::sim::SimEngine`] and the remote coordinator, so
+//! per-task retry counts are identical across engines for the same
+//! (seed, task id) — one behavioral contract, multiple clocks.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
@@ -38,62 +40,8 @@ use std::time::Instant;
 use crate::error::{Error, Result};
 use crate::scheduler::exec::execute;
 use crate::scheduler::failure::FailurePolicy;
-use crate::scheduler::{
-    Engine, JobId, JobReport, JobSpec, TaskReport, TaskSpec,
-};
-
-/// Eligibility gate of one task.
-#[derive(Debug, Clone)]
-enum Gate {
-    /// Ready to dispatch (and already on, or about to join, the queue).
-    Open,
-    /// Waiting for the whole dependency job (Fig 1 barrier).
-    Job,
-    /// Waiting for `n` specific upstream tasks (overlapped reduce).
-    Tasks(usize),
-}
-
-/// Dispatcher-owned state of one submitted job.
-struct Job {
-    name: String,
-    tasks: Arc<Vec<TaskSpec>>,
-    /// Original task count — survives `shed()`, because late submits of
-    /// dependents validate their task edges against it.
-    ntasks: usize,
-    submitted_at: Instant,
-    gates: Vec<Gate>,
-    /// When each task became dispatchable (for `dispatch_wait`).
-    eligible_at: Vec<Option<Instant>>,
-    /// Injected-failure attempts consumed so far, per task.
-    attempts: Vec<usize>,
-    reports: Vec<Option<TaskReport>>,
-    done_tasks: Vec<bool>,
-    /// Tasks not yet successfully completed.
-    remaining: usize,
-    /// Jobs whose whole-job barrier waits on this job.
-    barrier_dependents: Vec<JobId>,
-    /// task index here → dependent (job, task index) edges to release.
-    task_dependents: HashMap<usize, Vec<(JobId, usize)>>,
-    /// Completed report or failure message; `Some` means the job is over.
-    outcome: Option<Result<JobReport, String>>,
-}
-
-impl Job {
-    /// Drop the per-task state once an outcome is set.  `wait()` only
-    /// ever clones the outcome, and every code path that touches the
-    /// per-task vectors checks `outcome.is_none()` first — so after
-    /// completion the task specs (which can hold thousands of input
-    /// pairs) are dead weight a long-lived engine would otherwise retain
-    /// forever.
-    fn shed(&mut self) {
-        self.tasks = Arc::new(Vec::new());
-        self.gates = Vec::new();
-        self.eligible_at = Vec::new();
-        self.attempts = Vec::new();
-        self.reports = Vec::new();
-        self.done_tasks = Vec::new();
-    }
-}
+use crate::scheduler::table::{JobTable, Outcome};
+use crate::scheduler::{Engine, JobId, JobReport, JobSpec, TaskReport};
 
 /// Completion messages from workers to the dispatcher.
 enum Event {
@@ -115,7 +63,8 @@ struct Core {
     events: VecDeque<Event>,
     /// Dispatchable (job, task index) pairs, shared by all jobs.
     ready: VecDeque<(JobId, usize)>,
-    jobs: HashMap<JobId, Job>,
+    /// The engine-shared dependency/completion state machine.
+    table: JobTable,
     shutdown: bool,
 }
 
@@ -165,7 +114,7 @@ impl LocalEngine {
                 inbox: VecDeque::new(),
                 events: VecDeque::new(),
                 ready: VecDeque::new(),
-                jobs: HashMap::new(),
+                table: JobTable::new(slots),
                 shutdown: false,
             }),
             work_cv: Condvar::new(),
@@ -205,9 +154,9 @@ impl Engine for LocalEngine {
     fn submit(&self, spec: JobSpec) -> Result<JobId> {
         let mut core = self.inner.lock();
         crate::scheduler::validate_submit(&spec, |dep| {
-            // `ntasks`, not `tasks.len()`: a completed job has shed its
-            // task specs, but late dependents still validate against it.
-            core.jobs.get(&dep).map(|j| j.ntasks).or_else(|| {
+            // Table `ntasks`, not live task vectors: a completed job has
+            // shed its specs, but late dependents still validate.
+            core.table.ntasks(dep).or_else(|| {
                 core.inbox
                     .iter()
                     .find(|(id, _, _)| *id == dep)
@@ -226,15 +175,19 @@ impl Engine for LocalEngine {
     fn wait(&self, id: JobId) -> Result<JobReport> {
         let mut core = self.inner.lock();
         loop {
-            if let Some(job) = core.jobs.get(&id) {
-                if let Some(outcome) = &job.outcome {
-                    return match outcome {
-                        Ok(r) => Ok(r.clone()),
-                        Err(msg) => Err(Error::Scheduler(msg.clone())),
-                    };
+            match core.table.outcome(id) {
+                Outcome::Done(r) => return Ok(r.clone()),
+                Outcome::Failed(msg) => {
+                    return Err(Error::Scheduler(msg.to_string()))
                 }
-            } else if !core.inbox.iter().any(|(jid, _, _)| *jid == id) {
-                return Err(Error::Scheduler(format!("unknown job {id}")));
+                Outcome::Running => {}
+                Outcome::Unknown => {
+                    if !core.inbox.iter().any(|(jid, _, _)| *jid == id) {
+                        return Err(Error::Scheduler(format!(
+                            "unknown job {id}"
+                        )));
+                    }
+                }
             }
             core = self
                 .inner
@@ -246,17 +199,18 @@ impl Engine for LocalEngine {
 
     fn try_wait(&self, id: JobId) -> Result<Option<JobReport>> {
         let core = self.inner.lock();
-        if let Some(job) = core.jobs.get(&id) {
-            return match &job.outcome {
-                Some(Ok(r)) => Ok(Some(r.clone())),
-                Some(Err(msg)) => Err(Error::Scheduler(msg.clone())),
-                None => Ok(None),
-            };
+        match core.table.outcome(id) {
+            Outcome::Done(r) => Ok(Some(r.clone())),
+            Outcome::Failed(msg) => Err(Error::Scheduler(msg.to_string())),
+            Outcome::Running => Ok(None),
+            Outcome::Unknown => {
+                if core.inbox.iter().any(|(jid, _, _)| *jid == id) {
+                    Ok(None) // submitted, not yet admitted
+                } else {
+                    Err(Error::Scheduler(format!("unknown job {id}")))
+                }
+            }
         }
-        if core.inbox.iter().any(|(jid, _, _)| *jid == id) {
-            return Ok(None); // submitted, not yet admitted
-        }
-        Err(Error::Scheduler(format!("unknown job {id}")))
     }
 }
 
@@ -295,15 +249,17 @@ fn dispatcher_loop(inner: &Inner) {
         }
         let ready_before = core.ready.len();
         while let Some((jid, spec, submitted_at)) = core.inbox.pop_front() {
-            admit(&mut core, inner.slots, jid, spec, submitted_at);
+            let ready = core.table.admit(jid, spec, submitted_at);
+            core.ready.extend(ready);
         }
         while let Some(ev) = core.events.pop_front() {
             match ev {
                 Event::TaskDone { job, idx, report } => {
-                    on_task_done(&mut core, inner.slots, job, idx, report);
+                    let ready = core.table.on_task_done(job, idx, report);
+                    core.ready.extend(ready);
                 }
                 Event::TaskFailed { job, msg } => {
-                    fail_job(&mut core, job, msg);
+                    core.table.fail_job(job, msg);
                 }
             }
         }
@@ -319,275 +275,6 @@ fn dispatcher_loop(inner: &Inner) {
             inner.work_cv.notify_all();
         }
         inner.done_cv.notify_all();
-    }
-}
-
-fn empty_report(
-    jid: JobId,
-    name: &str,
-    submitted_at: Instant,
-    slots: usize,
-) -> JobReport {
-    JobReport {
-        job_id: jid.0,
-        name: name.to_string(),
-        makespan: submitted_at.elapsed(),
-        slots,
-        tasks: Vec::new(),
-    }
-}
-
-/// Admit one inbox job: resolve its dependency edges into per-task gates,
-/// register reverse edges on the upstream job, and queue whatever is
-/// already eligible.
-fn admit(
-    core: &mut Core,
-    slots: usize,
-    jid: JobId,
-    spec: JobSpec,
-    submitted_at: Instant,
-) {
-    let JobSpec {
-        name,
-        tasks,
-        depends_on,
-        task_deps,
-        exclusive: _, // no nodes locally; one slot is one slot
-    } = spec;
-    let n = tasks.len();
-    let mut job = Job {
-        name,
-        tasks: Arc::new(tasks),
-        ntasks: n,
-        submitted_at,
-        gates: vec![Gate::Open; n],
-        eligible_at: vec![None; n],
-        attempts: vec![0; n],
-        reports: vec![None; n],
-        done_tasks: vec![false; n],
-        remaining: n,
-        barrier_dependents: Vec::new(),
-        task_dependents: HashMap::new(),
-        outcome: None,
-    };
-
-    // Whether this job was registered to wait on the upstream's
-    // whole-job completion signal (drives zero-task completion below).
-    let mut barrier_registered = false;
-    if let Some(dep) = depends_on {
-        // Group this job's task edges by dependent index.
-        let mut edges: HashMap<usize, Vec<usize>> = HashMap::new();
-        for &(i, u) in &task_deps {
-            edges.entry(i).or_default().push(u);
-        }
-        match core.jobs.get_mut(&dep) {
-            Some(upstream) => match &upstream.outcome {
-                Some(Ok(_)) => {} // dependency satisfied: all gates open
-                Some(Err(msg)) => {
-                    job.outcome = Some(Err(format!(
-                        "dependency job {dep} failed: {msg}"
-                    )));
-                    job.shed();
-                    core.jobs.insert(jid, job);
-                    return;
-                }
-                None => {
-                    for i in 0..n {
-                        if let Some(ups) = edges.get(&i) {
-                            let mut open_count = 0usize;
-                            for &u in ups {
-                                if upstream.done_tasks[u] {
-                                    continue;
-                                }
-                                upstream
-                                    .task_dependents
-                                    .entry(u)
-                                    .or_default()
-                                    .push((jid, i));
-                                open_count += 1;
-                            }
-                            if open_count > 0 {
-                                job.gates[i] = Gate::Tasks(open_count);
-                            }
-                        } else {
-                            job.gates[i] = Gate::Job;
-                        }
-                    }
-                    // Zero-task dependents and any Job-gated task wait for
-                    // the upstream completion signal.
-                    if n == 0
-                        || job
-                            .gates
-                            .iter()
-                            .any(|g| matches!(g, Gate::Job))
-                    {
-                        upstream.barrier_dependents.push(jid);
-                        barrier_registered = true;
-                    }
-                }
-            },
-            None => {
-                // Validated at submit; can only mean the dependency was
-                // itself dropped on an earlier admission failure.
-                job.outcome = Some(Err(format!(
-                    "dependency job {dep} was never admitted"
-                )));
-                job.shed();
-                core.jobs.insert(jid, job);
-                return;
-            }
-        }
-    }
-
-    // A zero-task job completes at admission only when it is not
-    // barriered on a still-running upstream (open_barriers completes it
-    // otherwise, once the upstream lands).
-    if n == 0 && !barrier_registered {
-        job.outcome =
-            Some(Ok(empty_report(jid, &job.name, submitted_at, slots)));
-    }
-    let now = Instant::now();
-    let mut to_ready = Vec::new();
-    for i in 0..n {
-        if matches!(job.gates[i], Gate::Open) {
-            job.eligible_at[i] = Some(now);
-            to_ready.push((jid, i));
-        }
-    }
-    core.jobs.insert(jid, job);
-    core.ready.extend(to_ready);
-}
-
-/// Record a successful task, release dependents, complete the job when its
-/// last task lands.
-fn on_task_done(
-    core: &mut Core,
-    slots: usize,
-    jid: JobId,
-    idx: usize,
-    report: TaskReport,
-) {
-    let (released, completed) = {
-        let Some(job) = core.jobs.get_mut(&jid) else { return };
-        if job.outcome.is_some() || job.done_tasks[idx] {
-            return; // job already failed, or stale duplicate
-        }
-        job.done_tasks[idx] = true;
-        job.reports[idx] = Some(report);
-        job.remaining -= 1;
-        let released =
-            job.task_dependents.remove(&idx).unwrap_or_default();
-        let completed = job.remaining == 0;
-        if completed {
-            let tasks: Vec<TaskReport> = job
-                .reports
-                .iter_mut()
-                .map(|r| r.take().expect("every task reported"))
-                .collect();
-            job.outcome = Some(Ok(JobReport {
-                job_id: jid.0,
-                name: job.name.clone(),
-                makespan: job.submitted_at.elapsed(),
-                slots,
-                tasks,
-            }));
-            job.shed();
-        }
-        (released, completed)
-    };
-
-    // Open task-granularity gates on dependents (the overlapped path).
-    let now = Instant::now();
-    let mut to_ready = Vec::new();
-    for (dj, di) in released {
-        if let Some(dep_job) = core.jobs.get_mut(&dj) {
-            if dep_job.outcome.is_some() {
-                continue;
-            }
-            if let Gate::Tasks(remaining) = &mut dep_job.gates[di] {
-                *remaining -= 1;
-                if *remaining == 0 {
-                    dep_job.gates[di] = Gate::Open;
-                    dep_job.eligible_at[di] = Some(now);
-                    to_ready.push((dj, di));
-                }
-            }
-        }
-    }
-    core.ready.extend(to_ready);
-
-    if completed {
-        open_barriers(core, slots, jid);
-    }
-}
-
-/// Open whole-job barriers downstream of `jid`, transitively completing
-/// degenerate zero-task dependents.
-fn open_barriers(core: &mut Core, slots: usize, jid: JobId) {
-    let mut done_stack = vec![jid];
-    while let Some(id) = done_stack.pop() {
-        let dependents = core
-            .jobs
-            .get_mut(&id)
-            .map(|j| std::mem::take(&mut j.barrier_dependents))
-            .unwrap_or_default();
-        for dj in dependents {
-            let mut to_ready = Vec::new();
-            let mut newly_done = false;
-            if let Some(d) = core.jobs.get_mut(&dj) {
-                if d.outcome.is_some() {
-                    continue;
-                }
-                let now = Instant::now();
-                for di in 0..d.gates.len() {
-                    if matches!(d.gates[di], Gate::Job) {
-                        d.gates[di] = Gate::Open;
-                        d.eligible_at[di] = Some(now);
-                        to_ready.push((dj, di));
-                    }
-                }
-                if d.ntasks == 0 {
-                    d.outcome = Some(Ok(empty_report(
-                        dj,
-                        &d.name,
-                        d.submitted_at,
-                        slots,
-                    )));
-                    d.shed();
-                    newly_done = true;
-                }
-            }
-            core.ready.extend(to_ready);
-            if newly_done {
-                done_stack.push(dj);
-            }
-        }
-    }
-}
-
-/// Fail `jid` and cascade the failure through every dependent job.
-fn fail_job(core: &mut Core, jid: JobId, msg: String) {
-    let mut stack = vec![(jid, msg)];
-    while let Some((id, m)) = stack.pop() {
-        let dependents: Vec<JobId> = {
-            let Some(job) = core.jobs.get_mut(&id) else { continue };
-            if job.outcome.is_some() {
-                continue;
-            }
-            job.outcome = Some(Err(m.clone()));
-            job.shed();
-            let mut deps: Vec<JobId> =
-                std::mem::take(&mut job.barrier_dependents);
-            for (_, edges) in std::mem::take(&mut job.task_dependents) {
-                deps.extend(edges.into_iter().map(|(dj, _)| dj));
-            }
-            deps.sort_unstable();
-            deps.dedup();
-            deps
-        };
-        for dj in dependents {
-            stack.push((dj, format!("dependency job {id} failed: {m}")));
-        }
     }
 }
 
@@ -612,38 +299,21 @@ fn worker_loop(inner: &Inner) {
                 .unwrap_or_else(|e| e.into_inner());
         };
         // Snapshot what execution needs; skip tasks of dead jobs.
-        let Some(job) = core.jobs.get(&jid) else { continue };
-        if job.outcome.is_some() {
-            continue;
-        }
-        let tasks = job.tasks.clone();
-        let submitted_at = job.submitted_at;
-        let attempt = job.attempts[idx];
-        let dispatch_wait = job.eligible_at[idx]
+        let Some(view) = core.table.view(jid, idx) else { continue };
+        let dispatch_wait = view
+            .eligible_at
             .map(|t| t.elapsed())
             .unwrap_or_default();
         drop(core);
 
-        let task = &tasks[idx];
+        let task = &view.tasks[idx];
 
         // Failure injection: the attempt "crashes at launch" — consumed a
         // retry, re-enters the queue, no side effects (the simulator burns
         // half the virtual duration instead; counts match, clocks differ).
-        if inner.policy.should_fail(task.task_id, attempt) {
+        if inner.policy.should_fail(task.task_id, view.attempt) {
             let mut core = inner.lock();
-            let requeue = core
-                .jobs
-                .get_mut(&jid)
-                .map(|j| {
-                    if j.outcome.is_none() {
-                        j.attempts[idx] += 1;
-                        true
-                    } else {
-                        false
-                    }
-                })
-                .unwrap_or(false);
-            if requeue {
+            if core.table.bump_attempt(jid, idx) {
                 core.ready.push_back((jid, idx));
                 drop(core);
                 inner.work_cv.notify_one();
@@ -651,21 +321,17 @@ fn worker_loop(inner: &Inner) {
             continue;
         }
 
-        let started_at = submitted_at.elapsed();
+        let started_at = view.submitted_at.elapsed();
         // Payloads are app code: a panic must fail the job (like any
         // task error), not silently kill this worker and hang wait().
         let result = std::panic::catch_unwind(
             std::panic::AssertUnwindSafe(|| execute(&task.work)),
         )
         .unwrap_or_else(|panic| {
-            let msg = panic
-                .downcast_ref::<&str>()
-                .map(|s| (*s).to_string())
-                .or_else(|| panic.downcast_ref::<String>().cloned())
-                .unwrap_or_else(|| "non-string panic payload".into());
+            let msg = crate::scheduler::exec::panic_message(panic);
             Err(Error::Scheduler(format!("payload panicked: {msg}")))
         });
-        let finished_at = submitted_at.elapsed();
+        let finished_at = view.submitted_at.elapsed();
 
         let mut core = inner.lock();
         match result {
@@ -682,7 +348,8 @@ fn worker_loop(inner: &Inner) {
                         items: out.items,
                         started_at,
                         finished_at,
-                        retries: attempt,
+                        retries: view.attempt,
+                        ..Default::default()
                     },
                 });
             }
@@ -706,6 +373,7 @@ mod tests {
     use crate::options::AppType;
     use crate::scheduler::sim::{ClusterConfig, SimEngine};
     use crate::scheduler::{TaskSpec, TaskWork};
+    use std::collections::HashMap;
     use std::fs;
     use std::path::{Path, PathBuf};
     use std::sync::atomic::{AtomicBool, Ordering};

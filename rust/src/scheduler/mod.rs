@@ -10,14 +10,19 @@
 //! * [`sim`]    — a discrete-event cluster simulator with virtual time,
 //!   nodes × slots, dispatch latency, dependencies and failure injection
 //!   (scaling studies beyond this container's single core);
-//! * [`cost`]   — the calibrated cost model bridging the two.
+//! * [`remote`] — a distributed coordinator/worker engine: tasks ship
+//!   over TCP to `llmapreduce worker` daemons, with heartbeat-based
+//!   death detection and fault-tolerant reassignment (DESIGN.md §6);
+//! * [`cost`]   — the calibrated cost model bridging the engines.
 
 pub mod cost;
 pub mod dialect;
 pub mod exec;
 pub mod failure;
 pub mod local;
+pub mod remote;
 pub mod sim;
+pub(crate) mod table;
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -218,6 +223,17 @@ pub struct TaskReport {
     pub finished_at: Duration,
     /// Retries consumed before success (failure injection).
     pub retries: usize,
+    /// Name of the worker daemon that ran the successful attempt
+    /// (`None` on in-process engines — local, sim).
+    pub worker: Option<String>,
+    /// Wire-shipping overhead on the remote engine: assignment round-trip
+    /// minus the worker-measured execution time (serialization, network,
+    /// and worker-side queueing).  Zero on in-process engines.
+    pub shipped: Duration,
+    /// Times the task was shipped to a worker that died (connection drop
+    /// or heartbeat lapse) before completing it, forcing reassignment to
+    /// a surviving worker.  Distinct from `retries` (injected failures).
+    pub reassigned: usize,
 }
 
 impl TaskReport {

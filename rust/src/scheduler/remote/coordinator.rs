@@ -1,0 +1,704 @@
+//! The coordinator: a network-fronted [`Engine`].
+//!
+//! `RemoteCoordinator` binds a TCP listener, accepts worker-daemon
+//! registrations ([`crate::scheduler::remote::worker`]), and schedules
+//! submitted jobs over the fleet.  Because it implements the same
+//! [`Engine`] trait as the local engine — `&self` submit, blocking
+//! `wait`, non-blocking `try_wait` — everything above it (`Session`,
+//! `pipeline::run`, overlap dispatch, nested multi-level fan-out) works
+//! over the network unchanged.
+//!
+//! # Scheduling
+//!
+//! Dependency semantics live in the engine-shared
+//! `scheduler::table::JobTable`; this module adds placement:
+//! eligible tasks queue in `ready`, and `try_assign` ships them to the
+//! alive worker with the most free slots (least-loaded first, lowest id
+//! on ties, so independent single-slot workers each take one task before
+//! any takes two).  Failure injection runs **coordinator-side** against
+//! the engine-shared [`FailurePolicy`] *before* a task ships, so per-task
+//! retry counts replay identically across `--engine=local|sim|remote`.
+//!
+//! # Fault tolerance
+//!
+//! Every shipped task is tracked in `assigned`.  A worker is declared
+//! dead on connection EOF/error or when its heartbeat lapses past
+//! `heartbeat_timeout`; its in-flight tasks go back to the *front* of
+//! the ready queue (they have waited longest) and their
+//! [`TaskReport::reassigned`] count increments.  Task payloads re-execute
+//! idempotently — mappers and reducers rewrite their output files — so a
+//! task that was half-finished on a dead worker simply runs again
+//! elsewhere.  A completion racing in from a worker already declared
+//! dead is accepted (the job table de-duplicates), never double-counted.
+//! Losing the *whole* fleet fails every live job with a clear error
+//! rather than blocking `wait()` on capacity that may never return.
+//!
+//! # Known limitation
+//!
+//! Assignment frames are sent while holding the state mutex, so one
+//! wedged worker socket can stall the coordinator for up to the
+//! transport's 10s write timeout per frame (after which the worker is
+//! declared dead).  Fine for the localhost fleets this targets; a
+//! per-worker outbox thread is the fix if WAN-scale workers arrive.
+
+use std::collections::{HashMap, VecDeque};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::scheduler::failure::FailurePolicy;
+use crate::scheduler::remote::protocol::{
+    Message, WireWork, PROTOCOL_VERSION,
+};
+use crate::scheduler::remote::transport::{split, LineWriter};
+use crate::scheduler::table::{JobTable, Outcome};
+use crate::scheduler::{Engine, JobId, JobReport, JobSpec, TaskReport};
+
+/// Tuning knobs of the coordinator (defaults suit localhost fleets).
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// A worker silent for longer than this is declared dead and its
+    /// in-flight tasks reassigned.  Workers beacon at ~1/4 this rate.
+    pub heartbeat_timeout: Duration,
+    /// Failure injection (engine-shared semantics; see module docs).
+    pub policy: FailurePolicy,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            heartbeat_timeout: Duration::from_secs(3),
+            policy: FailurePolicy::default(),
+        }
+    }
+}
+
+/// One shipped task.
+struct Assigned {
+    worker: u64,
+    sent_at: Instant,
+    dispatch_wait: Duration,
+    attempt: usize,
+    /// Slots charged on the worker (1, or all of them for exclusive
+    /// whole-node tasks — the sim's `--exclusive` semantics).
+    need: usize,
+}
+
+/// Coordinator-side state of one registered worker.
+struct WorkerState {
+    name: String,
+    slots: usize,
+    writer: LineWriter,
+    in_flight: Vec<(JobId, usize)>,
+    /// Slots currently charged (≥ `in_flight.len()`; exclusive tasks
+    /// charge the whole worker).
+    used: usize,
+    last_seen: Instant,
+    alive: bool,
+}
+
+struct Core {
+    table: JobTable,
+    ready: VecDeque<(JobId, usize)>,
+    workers: HashMap<u64, WorkerState>,
+    assigned: HashMap<(JobId, usize), Assigned>,
+    /// Reassignment counts for in-flight tasks (moved into the report).
+    reassigns: HashMap<(JobId, usize), usize>,
+    next_worker_id: u64,
+    shutdown: bool,
+}
+
+impl Core {
+    fn alive_slots(&self) -> usize {
+        self.workers
+            .values()
+            .filter(|w| w.alive)
+            .map(|w| w.slots)
+            .sum()
+    }
+
+    fn alive_workers(&self) -> usize {
+        self.workers.values().filter(|w| w.alive).count()
+    }
+}
+
+struct Inner {
+    state: Mutex<Core>,
+    /// Wakes `wait()`ers when any job reaches an outcome.
+    done_cv: Condvar,
+    /// Wakes `wait_for_workers` (and the monitor's shutdown poll).
+    workers_cv: Condvar,
+    config: CoordinatorConfig,
+}
+
+impl Inner {
+    fn lock(&self) -> MutexGuard<'_, Core> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// The distributed engine front (see module docs).
+pub struct RemoteCoordinator {
+    inner: Arc<Inner>,
+    next_id: AtomicU64,
+    local_addr: SocketAddr,
+    accept_thread: Option<JoinHandle<()>>,
+    monitor_thread: Option<JoinHandle<()>>,
+}
+
+impl RemoteCoordinator {
+    /// Bind the listener (e.g. `"127.0.0.1:0"` for an ephemeral port)
+    /// and start accepting workers.  Jobs may be submitted immediately;
+    /// their tasks wait in queue until capacity registers.
+    pub fn bind(addr: &str, config: CoordinatorConfig) -> Result<Self> {
+        let listener = TcpListener::bind(addr).map_err(|e| {
+            Error::Scheduler(format!("coordinator bind {addr}: {e}"))
+        })?;
+        let local_addr = listener.local_addr().map_err(|e| {
+            Error::Scheduler(format!("coordinator addr: {e}"))
+        })?;
+        listener.set_nonblocking(true).map_err(|e| {
+            Error::Scheduler(format!("coordinator nonblocking: {e}"))
+        })?;
+        let inner = Arc::new(Inner {
+            state: Mutex::new(Core {
+                table: JobTable::new(1),
+                ready: VecDeque::new(),
+                workers: HashMap::new(),
+                assigned: HashMap::new(),
+                reassigns: HashMap::new(),
+                next_worker_id: 1,
+                shutdown: false,
+            }),
+            done_cv: Condvar::new(),
+            workers_cv: Condvar::new(),
+            config,
+        });
+        let accept_thread = {
+            let inner = inner.clone();
+            Some(std::thread::spawn(move || accept_loop(&inner, listener)))
+        };
+        let monitor_thread = {
+            let inner = inner.clone();
+            Some(std::thread::spawn(move || monitor_loop(&inner)))
+        };
+        Ok(RemoteCoordinator {
+            inner,
+            next_id: AtomicU64::new(1),
+            local_addr,
+            accept_thread,
+            monitor_thread,
+        })
+    }
+
+    /// The bound address (useful with an ephemeral `:0` bind).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Currently-alive worker count.
+    pub fn workers(&self) -> usize {
+        self.inner.lock().alive_workers()
+    }
+
+    /// Block until at least `n` workers are registered and alive, or
+    /// `timeout` elapses (error).  Spawn workers first or concurrently.
+    pub fn wait_for_workers(
+        &self,
+        n: usize,
+        timeout: Duration,
+    ) -> Result<usize> {
+        let deadline = Instant::now() + timeout;
+        let mut core = self.inner.lock();
+        loop {
+            let alive = core.alive_workers();
+            if alive >= n {
+                return Ok(alive);
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Err(Error::Scheduler(format!(
+                    "only {alive}/{n} workers registered within \
+                     {timeout:?} (is `llmapreduce worker --connect {}` \
+                     running?)",
+                    self.local_addr
+                )));
+            }
+            let (guard, _) = self
+                .inner
+                .workers_cv
+                .wait_timeout(core, left)
+                .unwrap_or_else(|e| e.into_inner());
+            core = guard;
+        }
+    }
+}
+
+impl Engine for RemoteCoordinator {
+    fn name(&self) -> &'static str {
+        "remote"
+    }
+
+    fn submit(&self, spec: JobSpec) -> Result<JobId> {
+        let mut core = self.inner.lock();
+        crate::scheduler::validate_submit(&spec, |dep| {
+            core.table.ntasks(dep)
+        })?;
+        let id = JobId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        let ready = core.table.admit(id, spec, Instant::now());
+        core.ready.extend(ready);
+        try_assign(&mut core, &self.inner.config.policy);
+        drop(core);
+        // Admission may complete zero-task jobs outright.
+        self.inner.done_cv.notify_all();
+        Ok(id)
+    }
+
+    fn wait(&self, id: JobId) -> Result<JobReport> {
+        let mut core = self.inner.lock();
+        loop {
+            match core.table.outcome(id) {
+                Outcome::Done(r) => return Ok(r.clone()),
+                Outcome::Failed(msg) => {
+                    return Err(Error::Scheduler(msg.to_string()))
+                }
+                Outcome::Running => {}
+                Outcome::Unknown => {
+                    return Err(Error::Scheduler(format!(
+                        "unknown job {id}"
+                    )))
+                }
+            }
+            core = self
+                .inner
+                .done_cv
+                .wait(core)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    fn try_wait(&self, id: JobId) -> Result<Option<JobReport>> {
+        let core = self.inner.lock();
+        match core.table.outcome(id) {
+            Outcome::Done(r) => Ok(Some(r.clone())),
+            Outcome::Failed(msg) => Err(Error::Scheduler(msg.to_string())),
+            Outcome::Running => Ok(None),
+            Outcome::Unknown => {
+                Err(Error::Scheduler(format!("unknown job {id}")))
+            }
+        }
+    }
+}
+
+impl Drop for RemoteCoordinator {
+    fn drop(&mut self) {
+        {
+            let mut core = self.inner.lock();
+            core.shutdown = true;
+            for w in core.workers.values_mut() {
+                let _ = w.writer.send(&Message::Shutdown);
+                // Half-close so the shutdown frame is delivered in
+                // order; the worker closes its side on receipt, which
+                // unblocks our reader thread with a clean EOF.
+                w.writer.shutdown_write();
+            }
+        }
+        self.inner.workers_cv.notify_all();
+        self.inner.done_cv.notify_all();
+        if let Some(h) = self.monitor_thread.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Placement
+// ---------------------------------------------------------------------------
+
+/// Ship ready tasks to free capacity until one side runs dry.  Runs
+/// under the core lock (writers live inside it; sends are small frames
+/// with a bounded write timeout).
+fn try_assign(core: &mut Core, policy: &FailurePolicy) {
+    loop {
+        let Some((jid, idx)) = core.ready.pop_front() else { return };
+        // Stale queue entries (job already failed/completed) drop here.
+        let Some(view) = core.table.view(jid, idx) else { continue };
+        let task = &view.tasks[idx];
+
+        // Engine-shared failure injection: the attempt "crashes at
+        // launch" before it ever ships — consumed a retry, re-enters the
+        // queue; identical (seed, task, attempt) accounting to the local
+        // engine and the simulator.
+        if policy.should_fail(task.task_id, view.attempt) {
+            if core.table.bump_attempt(jid, idx) {
+                core.ready.push_back((jid, idx));
+            }
+            continue;
+        }
+
+        // Least-loaded alive worker with room; lowest id on ties
+        // (deterministic spread across equal workers).  Exclusive tasks
+        // need an idle worker and charge all of its slots — the
+        // whole-node `--exclusive` semantics the simulator models.
+        let target = core
+            .workers
+            .iter()
+            .filter(|(_, w)| {
+                w.alive
+                    && if view.exclusive {
+                        w.used == 0
+                    } else {
+                        w.used < w.slots
+                    }
+            })
+            .min_by_key(|(id, w)| (w.used, **id))
+            .map(|(id, w)| {
+                (*id, if view.exclusive { w.slots } else { 1 })
+            });
+        let Some((wid, need)) = target else {
+            // No capacity for the queue head: put it back and wait for
+            // a completion, a registration, or a death sweep (FIFO,
+            // like a cluster array job).
+            core.ready.push_front((jid, idx));
+            return;
+        };
+
+        let msg = Message::Assign {
+            job: jid.0,
+            task_idx: idx,
+            task_id: task.task_id,
+            work: WireWork::from_work(&task.work),
+        };
+        let now = Instant::now();
+        let dispatch_wait = view
+            .eligible_at
+            .map(|t| now.saturating_duration_since(t))
+            .unwrap_or_default();
+        let send_failed = {
+            let worker =
+                core.workers.get_mut(&wid).expect("picked above");
+            worker.writer.send(&msg).is_err()
+        };
+        if send_failed {
+            // Send failure = dead worker; requeue and retry placement.
+            core.ready.push_front((jid, idx));
+            mark_dead(core, wid);
+            continue;
+        }
+        let worker = core.workers.get_mut(&wid).expect("picked above");
+        worker.in_flight.push((jid, idx));
+        worker.used += need;
+        core.assigned.insert(
+            (jid, idx),
+            Assigned {
+                worker: wid,
+                sent_at: now,
+                dispatch_wait,
+                attempt: view.attempt,
+                need,
+            },
+        );
+    }
+}
+
+/// Declare a worker dead: requeue its in-flight tasks at the *front* of
+/// the ready queue with bumped reassignment counts, and drop its
+/// capacity from the reported width.  Idempotent.
+fn mark_dead(core: &mut Core, wid: u64) {
+    let Some(worker) = core.workers.get_mut(&wid) else { return };
+    if !worker.alive {
+        return;
+    }
+    worker.alive = false;
+    worker.used = 0;
+    worker.writer.shutdown();
+    let name = worker.name.clone();
+    let orphans = std::mem::take(&mut worker.in_flight);
+    for key in orphans {
+        // Only requeue tasks this worker still owns (a reassignment may
+        // already have moved one).
+        if core.assigned.get(&key).map(|a| a.worker) != Some(wid) {
+            continue;
+        }
+        core.assigned.remove(&key);
+        if core.table.is_live(key.0) {
+            *core.reassigns.entry(key).or_insert(0) += 1;
+            core.ready.push_front(key);
+        }
+    }
+    core.table.set_slots(core.alive_slots().max(1));
+    if core.alive_workers() == 0 {
+        // Whole fleet lost: fail every live job with a clear error
+        // instead of letting `wait()` hang forever on capacity that may
+        // never return (new workers would have to re-run from a fresh
+        // submission anyway — partial map output is re-created
+        // idempotently on retry, not resumed).
+        for jid in core.table.live_jobs() {
+            core.table.fail_job(
+                jid,
+                format!("all workers lost (worker '{name}' was the last)"),
+            );
+        }
+        core.ready.clear();
+        core.reassigns.clear();
+        core.assigned.clear();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Connection handling
+// ---------------------------------------------------------------------------
+
+fn accept_loop(inner: &Arc<Inner>, listener: TcpListener) {
+    loop {
+        if inner.lock().shutdown {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let inner = inner.clone();
+                // Reader threads are detached: they exit on EOF, and
+                // coordinator Drop force-closes every worker socket.
+                std::thread::spawn(move || serve_worker(&inner, stream));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(25)),
+        }
+    }
+}
+
+/// Per-connection reader: handshake, then pump messages until the
+/// worker disappears.
+fn serve_worker(inner: &Arc<Inner>, stream: TcpStream) {
+    let Ok((mut reader, mut writer)) = split(stream) else { return };
+
+    // Handshake: first frame must be a compatible Register, and it must
+    // arrive promptly — a silent connection (port scanner, stray
+    // client) must not pin this thread and socket forever.
+    reader.set_read_timeout(Some(Duration::from_secs(10)));
+    let (name, slots) = match reader.recv() {
+        Ok(Some(Message::Register {
+            name,
+            slots,
+            version,
+        })) if version == PROTOCOL_VERSION => (name, slots.max(1)),
+        _ => return, // wrong/late first frame or version: drop it
+    };
+    reader.set_read_timeout(None);
+    let wid = {
+        let mut core = inner.lock();
+        if core.shutdown {
+            return;
+        }
+        let wid = core.next_worker_id;
+        core.next_worker_id += 1;
+        if writer.send(&Message::Registered { worker_id: wid }).is_err() {
+            return;
+        }
+        core.workers.insert(
+            wid,
+            WorkerState {
+                name,
+                slots,
+                writer,
+                in_flight: Vec::new(),
+                used: 0,
+                last_seen: Instant::now(),
+                alive: true,
+            },
+        );
+        core.table.set_slots(core.alive_slots().max(1));
+        try_assign(&mut core, &inner.config.policy);
+        wid
+    };
+    inner.workers_cv.notify_all();
+
+    loop {
+        match reader.recv() {
+            Ok(Some(msg)) => {
+                let mut core = inner.lock();
+                if core.shutdown {
+                    return;
+                }
+                if let Some(w) = core.workers.get_mut(&wid) {
+                    w.last_seen = Instant::now();
+                }
+                match msg {
+                    Message::Heartbeat { .. } => {}
+                    Message::Complete {
+                        job,
+                        task_idx,
+                        outcome,
+                    } => {
+                        on_complete(
+                            &mut core, wid, JobId(job), task_idx, outcome,
+                        );
+                        try_assign(&mut core, &inner.config.policy);
+                        drop(core);
+                        inner.done_cv.notify_all();
+                    }
+                    Message::Failed { job, task_idx, msg } => {
+                        let key = (JobId(job), task_idx);
+                        if let Some(w) = core.workers.get_mut(&wid) {
+                            w.in_flight.retain(|k| *k != key);
+                        }
+                        // Same ownership gate as completions: a stale
+                        // failure from a worker whose task was already
+                        // reassigned must neither fail the job (the
+                        // rightful run may yet succeed) nor clobber the
+                        // new owner's assignment.
+                        let owned = core
+                            .assigned
+                            .get(&key)
+                            .map(|a| a.worker)
+                            == Some(wid);
+                        if owned {
+                            let need = core
+                                .assigned
+                                .remove(&key)
+                                .map(|a| a.need)
+                                .unwrap_or(1);
+                            if let Some(w) = core.workers.get_mut(&wid)
+                            {
+                                w.used = w.used.saturating_sub(need);
+                            }
+                            core.table.fail_job(JobId(job), msg);
+                            // Drop queue entries / counters of dead jobs.
+                            let c: &mut Core = &mut core;
+                            let (ready, reassigns, table) =
+                                (&mut c.ready, &mut c.reassigns, &c.table);
+                            ready.retain(|(j, _)| table.is_live(*j));
+                            reassigns
+                                .retain(|(j, _), _| table.is_live(*j));
+                        }
+                        try_assign(&mut core, &inner.config.policy);
+                        drop(core);
+                        inner.done_cv.notify_all();
+                    }
+                    // Workers never send coordinator-bound frames other
+                    // than the above; ignore anything else.
+                    _ => {}
+                }
+            }
+            // Protocol garbage from this worker: treat like death
+            // (kill the connection) rather than poisoning the fleet.
+            Ok(None) | Err(_) => {
+                let mut core = inner.lock();
+                if !core.shutdown {
+                    mark_dead(&mut core, wid);
+                    try_assign(&mut core, &inner.config.policy);
+                }
+                drop(core);
+                inner.done_cv.notify_all();
+                inner.workers_cv.notify_all();
+                return;
+            }
+        }
+    }
+}
+
+/// Fold one successful completion into the job table, stamping the
+/// report with coordinator-clock timings and remote attribution.
+fn on_complete(
+    core: &mut Core,
+    wid: u64,
+    jid: JobId,
+    idx: usize,
+    outcome: crate::scheduler::remote::protocol::WireOutcome,
+) {
+    // A completion can arrive from a worker that was declared dead (its
+    // socket outlived the heartbeat verdict) after the task was already
+    // reassigned; accept it — the table de-duplicates — but only clear
+    // the assignment if this worker still owns it.
+    let owned = core.assigned.get(&(jid, idx)).map(|a| a.worker)
+        == Some(wid);
+    let assignment = if owned {
+        core.assigned.remove(&(jid, idx))
+    } else {
+        None
+    };
+    if let Some(w) = core.workers.get_mut(&wid) {
+        w.in_flight.retain(|k| *k != (jid, idx));
+        if let Some(a) = &assignment {
+            w.used = w.used.saturating_sub(a.need);
+        }
+    }
+    let Some(view) = core.table.view(jid, idx) else {
+        return; // job already over (failed, or duplicate completion)
+    };
+    let now = Instant::now();
+    let task_id = view.tasks[idx].task_id;
+    let (sent_at, dispatch_wait, attempt) = match &assignment {
+        Some(a) => (a.sent_at, a.dispatch_wait, a.attempt),
+        None => (now, Duration::ZERO, view.attempt),
+    };
+    let exec = outcome.startup() + outcome.compute();
+    let roundtrip = now.saturating_duration_since(sent_at);
+    let report = TaskReport {
+        task_id,
+        dispatch_wait,
+        startup: outcome.startup(),
+        compute: outcome.compute(),
+        launches: outcome.launches,
+        items: outcome.items,
+        started_at: sent_at.saturating_duration_since(view.submitted_at),
+        finished_at: now.saturating_duration_since(view.submitted_at),
+        retries: attempt,
+        worker: Some(
+            core.workers
+                .get(&wid)
+                .map(|w| w.name.clone())
+                .unwrap_or_else(|| format!("worker-{wid}")),
+        ),
+        shipped: roundtrip.saturating_sub(exec),
+        reassigned: core.reassigns.remove(&(jid, idx)).unwrap_or(0),
+    };
+    let ready = core.table.on_task_done(jid, idx, report);
+    core.ready.extend(ready);
+}
+
+// ---------------------------------------------------------------------------
+// Liveness monitor
+// ---------------------------------------------------------------------------
+
+/// Periodically sweep for heartbeat-lapsed workers.  Connection drops
+/// are caught faster by the reader threads; this catches wedged-but-
+/// connected workers.
+fn monitor_loop(inner: &Arc<Inner>) {
+    let timeout = inner.config.heartbeat_timeout;
+    let tick = (timeout / 4).max(Duration::from_millis(50));
+    let mut core = inner.lock();
+    loop {
+        if core.shutdown {
+            return;
+        }
+        let lapsed: Vec<u64> = core
+            .workers
+            .iter()
+            .filter(|(_, w)| w.alive && w.last_seen.elapsed() > timeout)
+            .map(|(id, _)| *id)
+            .collect();
+        if !lapsed.is_empty() {
+            for wid in &lapsed {
+                mark_dead(&mut core, *wid);
+            }
+            try_assign(&mut core, &inner.config.policy);
+            inner.done_cv.notify_all();
+        }
+        // Sleep on the condvar so coordinator shutdown wakes us
+        // immediately instead of after a tick.
+        let (guard, _) = inner
+            .workers_cv
+            .wait_timeout(core, tick)
+            .unwrap_or_else(|e| e.into_inner());
+        core = guard;
+    }
+}

@@ -1,0 +1,36 @@
+//! The distributed engine: a coordinator/worker fleet over TCP.
+//!
+//! The paper's whole premise is map-reduce *across cluster nodes*
+//! ("LLMapReduce provides the familiar map-reduce parallel programming
+//! model to big data users running on a supercomputer", §I); this module
+//! is the reproduction's real multi-process substrate, complementing the
+//! in-process thread pool ([`crate::scheduler::local`]) and the
+//! discrete-event simulator ([`crate::scheduler::sim`]).  DESIGN.md §6
+//! documents the topology, message lifecycle and reassignment rules.
+//!
+//! * [`protocol`] — newline-delimited JSON wire messages (register /
+//!   heartbeat / assign / complete / failed / shutdown) built on
+//!   [`crate::util::json`]: zero new dependencies, debuggable with `nc`;
+//! * [`transport`] — line framing over `TcpStream`, split reader/writer;
+//! * [`coordinator`] — [`RemoteCoordinator`], an [`Engine`] whose tasks
+//!   ship to registered workers, with heartbeat-based death detection
+//!   and automatic reassignment of a dead worker's in-flight tasks;
+//! * [`worker`] — the daemon behind `llmapreduce worker`: registers,
+//!   executes shipped work via [`crate::scheduler::exec`] (the same
+//!   execution path as the local engine), streams reports back.
+//!
+//! Because `RemoteCoordinator` sits behind the shared [`Engine`] trait,
+//! `Session`, `pipeline::run`, overlapped dispatch and the nested
+//! multi-level fan-out all run over the network unchanged — the
+//! acceptance bar is byte-identical wordcount output against
+//! [`crate::scheduler::local::LocalEngine`].
+//!
+//! [`Engine`]: crate::scheduler::Engine
+
+pub mod coordinator;
+pub mod protocol;
+pub mod transport;
+pub mod worker;
+
+pub use coordinator::{CoordinatorConfig, RemoteCoordinator};
+pub use worker::{run_worker, WorkerConfig};

@@ -1,0 +1,647 @@
+//! The coordinator↔worker wire protocol.
+//!
+//! One [`Message`] per line, encoded as a compact JSON object over
+//! [`crate::util::json`] — no external dependencies, human-readable in a
+//! packet capture, and trivially framed: a `BufRead::read_line` loop is
+//! the whole parser (DESIGN.md §6 discusses why line-delimited JSON over
+//! a binary format).  Malformed frames surface as [`Error::Format`] with
+//! `kind = "wire"`, never a panic — a coordinator must survive a
+//! garbage-spewing peer.
+//!
+//! [`WireWork`] is the serializable mirror of
+//! [`crate::scheduler::TaskWork`]: app identity travels as a
+//! [`crate::apps::MapApp::wire_spec`] string the worker re-resolves via
+//! [`crate::apps::registry`], and paths travel as strings (coordinator
+//! and workers share a filesystem — the paper's central-storage model,
+//! §I's "central storage" assumption).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::scheduler::TaskWork;
+use crate::util::json::{obj, Json};
+
+/// Protocol revision, checked at registration.
+pub const PROTOCOL_VERSION: usize = 1;
+
+/// A malformed-frame error (the only error shape this module emits;
+/// the transport layer reuses it for oversize / non-UTF8 frames).
+pub(crate) fn frame_err(reason: impl Into<String>) -> Error {
+    Error::Format {
+        kind: "wire",
+        path: PathBuf::from("<frame>"),
+        reason: reason.into(),
+    }
+}
+
+/// Serializable task payload: [`TaskWork`] minus the in-process `Arc`s.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireWork {
+    /// A map task; `mimo` mirrors `AppType::Mimo`.
+    Map {
+        mapper: String,
+        pairs: Vec<(String, String)>,
+        mimo: bool,
+    },
+    /// The final reduce over a directory.
+    Reduce {
+        reducer: String,
+        input_dir: String,
+        out_file: String,
+    },
+    /// An overlapped partial fold over one mapper task's outputs.
+    ReducePartial {
+        reducer: String,
+        files: Vec<String>,
+        out_file: String,
+    },
+    /// Timing-only payload (benchmarks, simulator parity tests).
+    Synthetic {
+        startup_us: u64,
+        per_item_us: u64,
+        items: usize,
+        launches: usize,
+    },
+}
+
+impl WireWork {
+    /// Serialize an in-process payload for shipping.  App identity is
+    /// the app's [`crate::apps::MapApp::wire_spec`]; the worker-side
+    /// registry resolves it back (or fails the task with a clear error
+    /// for in-process-only apps).  Relative paths are absolutized
+    /// against the coordinator's working directory before shipping —
+    /// workers share the filesystem but not necessarily the cwd.
+    pub fn from_work(work: &TaskWork) -> WireWork {
+        // One cwd lookup per serialization, not per path — this runs
+        // under the coordinator's state lock.
+        let cwd = std::env::current_dir().ok();
+        let s = |p: &std::path::Path| -> String {
+            crate::util::absolutize_in(cwd.as_deref(), p)
+                .to_string_lossy()
+                .into_owned()
+        };
+        match work {
+            TaskWork::Map { app, pairs, mode } => WireWork::Map {
+                mapper: app.wire_spec(),
+                pairs: pairs
+                    .iter()
+                    .map(|(i, o)| (s(i), s(o)))
+                    .collect(),
+                mimo: *mode == crate::options::AppType::Mimo,
+            },
+            TaskWork::Reduce {
+                app,
+                input_dir,
+                out_file,
+            } => WireWork::Reduce {
+                reducer: app.wire_spec(),
+                input_dir: s(input_dir),
+                out_file: s(out_file),
+            },
+            TaskWork::ReducePartial {
+                app,
+                files,
+                out_file,
+            } => WireWork::ReducePartial {
+                reducer: app.wire_spec(),
+                files: files.iter().map(|f| s(f)).collect(),
+                out_file: s(out_file),
+            },
+            TaskWork::Synthetic {
+                startup,
+                per_item,
+                items,
+                launches,
+            } => WireWork::Synthetic {
+                startup_us: startup.as_micros() as u64,
+                per_item_us: per_item.as_micros() as u64,
+                items: *items,
+                launches: *launches,
+            },
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            WireWork::Map {
+                mapper,
+                pairs,
+                mimo,
+            } => obj(vec![
+                ("kind", "map".into()),
+                ("mapper", mapper.as_str().into()),
+                (
+                    "pairs",
+                    Json::Arr(
+                        pairs
+                            .iter()
+                            .map(|(i, o)| {
+                                Json::Arr(vec![
+                                    i.as_str().into(),
+                                    o.as_str().into(),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                ("mimo", (*mimo).into()),
+            ]),
+            WireWork::Reduce {
+                reducer,
+                input_dir,
+                out_file,
+            } => obj(vec![
+                ("kind", "reduce".into()),
+                ("reducer", reducer.as_str().into()),
+                ("input_dir", input_dir.as_str().into()),
+                ("out_file", out_file.as_str().into()),
+            ]),
+            WireWork::ReducePartial {
+                reducer,
+                files,
+                out_file,
+            } => obj(vec![
+                ("kind", "reduce_partial".into()),
+                ("reducer", reducer.as_str().into()),
+                (
+                    "files",
+                    Json::Arr(
+                        files.iter().map(|f| f.as_str().into()).collect(),
+                    ),
+                ),
+                ("out_file", out_file.as_str().into()),
+            ]),
+            WireWork::Synthetic {
+                startup_us,
+                per_item_us,
+                items,
+                launches,
+            } => obj(vec![
+                ("kind", "synthetic".into()),
+                ("startup_us", (*startup_us as usize).into()),
+                ("per_item_us", (*per_item_us as usize).into()),
+                ("items", (*items).into()),
+                ("launches", (*launches).into()),
+            ]),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<WireWork> {
+        match str_field(v, "kind")? {
+            "map" => Ok(WireWork::Map {
+                mapper: str_field(v, "mapper")?.to_string(),
+                pairs: arr_field(v, "pairs")?
+                    .iter()
+                    .map(|p| {
+                        let pair = p.as_arr().ok_or_else(|| {
+                            frame_err("pair is not an array")
+                        })?;
+                        match pair {
+                            [Json::Str(i), Json::Str(o)] => {
+                                Ok((i.clone(), o.clone()))
+                            }
+                            _ => Err(frame_err(
+                                "pair is not [input, output]",
+                            )),
+                        }
+                    })
+                    .collect::<Result<_>>()?,
+                mimo: bool_field(v, "mimo")?,
+            }),
+            "reduce" => Ok(WireWork::Reduce {
+                reducer: str_field(v, "reducer")?.to_string(),
+                input_dir: str_field(v, "input_dir")?.to_string(),
+                out_file: str_field(v, "out_file")?.to_string(),
+            }),
+            "reduce_partial" => Ok(WireWork::ReducePartial {
+                reducer: str_field(v, "reducer")?.to_string(),
+                files: arr_field(v, "files")?
+                    .iter()
+                    .map(|f| {
+                        f.as_str().map(str::to_string).ok_or_else(|| {
+                            frame_err("file entry is not a string")
+                        })
+                    })
+                    .collect::<Result<_>>()?,
+                out_file: str_field(v, "out_file")?.to_string(),
+            }),
+            "synthetic" => Ok(WireWork::Synthetic {
+                startup_us: usize_field(v, "startup_us")? as u64,
+                per_item_us: usize_field(v, "per_item_us")? as u64,
+                items: usize_field(v, "items")?,
+                launches: usize_field(v, "launches")?,
+            }),
+            other => Err(frame_err(format!("unknown work kind '{other}'"))),
+        }
+    }
+}
+
+/// Worker-measured execution outcome, mirrored from
+/// [`crate::scheduler::exec::ExecOutcome`] in integer microseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct WireOutcome {
+    pub startup_us: u64,
+    pub compute_us: u64,
+    pub launches: usize,
+    pub items: usize,
+}
+
+impl WireOutcome {
+    pub fn startup(&self) -> Duration {
+        Duration::from_micros(self.startup_us)
+    }
+
+    pub fn compute(&self) -> Duration {
+        Duration::from_micros(self.compute_us)
+    }
+}
+
+/// Everything that crosses the wire, in both directions.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Worker → coordinator, first frame of a connection.
+    Register {
+        name: String,
+        slots: usize,
+        version: usize,
+    },
+    /// Coordinator → worker, the registration reply.
+    Registered { worker_id: u64 },
+    /// Worker → coordinator liveness beacon; a lapse triggers
+    /// reassignment of the worker's in-flight tasks.
+    Heartbeat { worker_id: u64 },
+    /// Coordinator → worker: run this task.
+    Assign {
+        job: u64,
+        task_idx: usize,
+        task_id: usize,
+        work: WireWork,
+    },
+    /// Worker → coordinator: the task succeeded.
+    Complete {
+        job: u64,
+        task_idx: usize,
+        outcome: WireOutcome,
+    },
+    /// Worker → coordinator: the task raised a real (non-injected)
+    /// error; the coordinator fails the job and cascades.
+    Failed {
+        job: u64,
+        task_idx: usize,
+        msg: String,
+    },
+    /// Coordinator → worker: drain and exit.
+    Shutdown,
+}
+
+impl Message {
+    /// One frame: compact JSON plus the terminating newline.
+    pub fn encode(&self) -> String {
+        let mut s = self.to_json().to_string_compact();
+        s.push('\n');
+        s
+    }
+
+    /// Parse one frame (without or with its trailing newline).  All
+    /// failure modes return [`Error::Format`]; none panic.
+    pub fn decode(line: &str) -> Result<Message> {
+        let v = Json::parse(line.trim_end_matches(['\r', '\n']))
+            .map_err(|e| frame_err(format!("bad frame json: {e}")))?;
+        Message::from_json(&v)
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Message::Register {
+                name,
+                slots,
+                version,
+            } => obj(vec![
+                ("type", "register".into()),
+                ("name", name.as_str().into()),
+                ("slots", (*slots).into()),
+                ("version", (*version).into()),
+            ]),
+            Message::Registered { worker_id } => obj(vec![
+                ("type", "registered".into()),
+                ("worker_id", (*worker_id as usize).into()),
+            ]),
+            Message::Heartbeat { worker_id } => obj(vec![
+                ("type", "heartbeat".into()),
+                ("worker_id", (*worker_id as usize).into()),
+            ]),
+            Message::Assign {
+                job,
+                task_idx,
+                task_id,
+                work,
+            } => obj(vec![
+                ("type", "assign".into()),
+                ("job", (*job as usize).into()),
+                ("task_idx", (*task_idx).into()),
+                ("task_id", (*task_id).into()),
+                ("work", work.to_json()),
+            ]),
+            Message::Complete {
+                job,
+                task_idx,
+                outcome,
+            } => obj(vec![
+                ("type", "complete".into()),
+                ("job", (*job as usize).into()),
+                ("task_idx", (*task_idx).into()),
+                (
+                    "outcome",
+                    obj(vec![
+                        (
+                            "startup_us",
+                            (outcome.startup_us as usize).into(),
+                        ),
+                        (
+                            "compute_us",
+                            (outcome.compute_us as usize).into(),
+                        ),
+                        ("launches", outcome.launches.into()),
+                        ("items", outcome.items.into()),
+                    ]),
+                ),
+            ]),
+            Message::Failed {
+                job,
+                task_idx,
+                msg,
+            } => obj(vec![
+                ("type", "failed".into()),
+                ("job", (*job as usize).into()),
+                ("task_idx", (*task_idx).into()),
+                ("msg", msg.as_str().into()),
+            ]),
+            Message::Shutdown => obj(vec![("type", "shutdown".into())]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Message> {
+        match str_field(v, "type")? {
+            "register" => Ok(Message::Register {
+                name: str_field(v, "name")?.to_string(),
+                slots: usize_field(v, "slots")?,
+                version: usize_field(v, "version")?,
+            }),
+            "registered" => Ok(Message::Registered {
+                worker_id: usize_field(v, "worker_id")? as u64,
+            }),
+            "heartbeat" => Ok(Message::Heartbeat {
+                worker_id: usize_field(v, "worker_id")? as u64,
+            }),
+            "assign" => Ok(Message::Assign {
+                job: usize_field(v, "job")? as u64,
+                task_idx: usize_field(v, "task_idx")?,
+                task_id: usize_field(v, "task_id")?,
+                work: WireWork::from_json(
+                    v.get("work")
+                        .ok_or_else(|| frame_err("assign without work"))?,
+                )?,
+            }),
+            "complete" => {
+                let o = v
+                    .get("outcome")
+                    .ok_or_else(|| frame_err("complete without outcome"))?;
+                Ok(Message::Complete {
+                    job: usize_field(v, "job")? as u64,
+                    task_idx: usize_field(v, "task_idx")?,
+                    outcome: WireOutcome {
+                        startup_us: usize_field(o, "startup_us")? as u64,
+                        compute_us: usize_field(o, "compute_us")? as u64,
+                        launches: usize_field(o, "launches")?,
+                        items: usize_field(o, "items")?,
+                    },
+                })
+            }
+            "failed" => Ok(Message::Failed {
+                job: usize_field(v, "job")? as u64,
+                task_idx: usize_field(v, "task_idx")?,
+                msg: str_field(v, "msg")?.to_string(),
+            }),
+            "shutdown" => Ok(Message::Shutdown),
+            other => {
+                Err(frame_err(format!("unknown message type '{other}'")))
+            }
+        }
+    }
+}
+
+// -- field accessors that turn shape errors into Error::Format ------------
+
+fn fields(v: &Json) -> Result<&BTreeMap<String, Json>> {
+    v.as_obj()
+        .ok_or_else(|| frame_err("frame is not a JSON object"))
+}
+
+fn str_field<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
+    fields(v)?
+        .get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| frame_err(format!("missing string field '{key}'")))
+}
+
+fn usize_field(v: &Json, key: &str) -> Result<usize> {
+    fields(v)?
+        .get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| {
+            frame_err(format!("missing non-negative int field '{key}'"))
+        })
+}
+
+fn bool_field(v: &Json, key: &str) -> Result<bool> {
+    fields(v)?
+        .get(key)
+        .and_then(Json::as_bool)
+        .ok_or_else(|| frame_err(format!("missing bool field '{key}'")))
+}
+
+fn arr_field<'a>(v: &'a Json, key: &str) -> Result<&'a [Json]> {
+    fields(v)?
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| frame_err(format!("missing array field '{key}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Message) {
+        let line = msg.encode();
+        assert!(line.ends_with('\n'), "framed");
+        assert_eq!(Message::decode(&line).unwrap(), msg, "{line}");
+    }
+
+    #[test]
+    fn all_message_shapes_roundtrip() {
+        roundtrip(Message::Register {
+            name: "worker-1".into(),
+            slots: 4,
+            version: PROTOCOL_VERSION,
+        });
+        roundtrip(Message::Registered { worker_id: 7 });
+        roundtrip(Message::Heartbeat { worker_id: 7 });
+        roundtrip(Message::Assign {
+            job: 3,
+            task_idx: 0,
+            task_id: 1,
+            work: WireWork::Map {
+                mapper: "wordcount:ign.txt".into(),
+                pairs: vec![("in/a.txt".into(), "out/a.txt.out".into())],
+                mimo: true,
+            },
+        });
+        roundtrip(Message::Assign {
+            job: 4,
+            task_idx: 2,
+            task_id: 3,
+            work: WireWork::Reduce {
+                reducer: "wordcount-reducer".into(),
+                input_dir: "out".into(),
+                out_file: "out/llmapreduce.out".into(),
+            },
+        });
+        roundtrip(Message::Assign {
+            job: 5,
+            task_idx: 1,
+            task_id: 2,
+            work: WireWork::ReducePartial {
+                reducer: "wordcount-reducer".into(),
+                files: vec!["a.out".into(), "b.out".into()],
+                out_file: ".partials.9/part_00001".into(),
+            },
+        });
+        roundtrip(Message::Assign {
+            job: 6,
+            task_idx: 0,
+            task_id: 1,
+            work: WireWork::Synthetic {
+                startup_us: 1500,
+                per_item_us: 10,
+                items: 8,
+                launches: 1,
+            },
+        });
+        roundtrip(Message::Complete {
+            job: 3,
+            task_idx: 0,
+            outcome: WireOutcome {
+                startup_us: 1200,
+                compute_us: 3400,
+                launches: 1,
+                items: 5,
+            },
+        });
+        roundtrip(Message::Failed {
+            job: 3,
+            task_idx: 1,
+            msg: "app 'x' failed on in/a.txt: poisoned".into(),
+        });
+        roundtrip(Message::Shutdown);
+    }
+
+    #[test]
+    fn paths_with_escapes_survive() {
+        roundtrip(Message::Assign {
+            job: 1,
+            task_idx: 0,
+            task_id: 1,
+            work: WireWork::Map {
+                mapper: "wordcount".into(),
+                pairs: vec![(
+                    "in/sp ace/\"quoted\".txt".into(),
+                    "out/uni-é😀.out".into(),
+                )],
+                mimo: false,
+            },
+        });
+    }
+
+    #[test]
+    fn malformed_frames_are_format_errors_not_panics() {
+        for bad in [
+            "",
+            "not json",
+            "{}",
+            "[1,2,3]",
+            r#"{"type":"warp"}"#,
+            r#"{"type":"register","name":"w"}"#, // missing slots/version
+            r#"{"type":"assign","job":1,"task_idx":0,"task_id":1}"#,
+            r#"{"type":"assign","job":1,"task_idx":0,"task_id":1,"work":{"kind":"map"}}"#,
+            r#"{"type":"complete","job":1,"task_idx":0}"#,
+            r#"{"type":"register","name":"w","slots":-2,"version":1}"#,
+            r#"{"type":"register","name":"w","slots":1.5,"version":1}"#,
+        ] {
+            let err = Message::decode(bad).unwrap_err();
+            assert!(
+                matches!(err, Error::Format { kind: "wire", .. }),
+                "{bad:?} -> {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn wire_work_mirrors_task_work() {
+        use crate::options::AppType;
+        use crate::scheduler::TaskWork;
+        use std::path::PathBuf;
+        use std::sync::Arc;
+        let work = TaskWork::Map {
+            app: crate::apps::wordcount::WordCountApp::new(Some(
+                PathBuf::from("/refs/ign.txt"),
+            )),
+            pairs: vec![(
+                PathBuf::from("/data/a"),
+                PathBuf::from("/data/a.out"),
+            )],
+            mode: AppType::Mimo,
+        };
+        assert_eq!(
+            WireWork::from_work(&work),
+            WireWork::Map {
+                mapper: "wordcount:/refs/ign.txt".into(),
+                pairs: vec![("/data/a".into(), "/data/a.out".into())],
+                mimo: true,
+            }
+        );
+        let red = TaskWork::Reduce {
+            app: Arc::new(crate::apps::wordcount::WordCountReducer),
+            input_dir: PathBuf::from("/data/out"),
+            out_file: PathBuf::from("/data/out/red"),
+        };
+        assert_eq!(
+            WireWork::from_work(&red),
+            WireWork::Reduce {
+                reducer: "wordcount-reducer".into(),
+                input_dir: "/data/out".into(),
+                out_file: "/data/out/red".into(),
+            }
+        );
+    }
+
+    #[test]
+    fn relative_paths_absolutize_against_coordinator_cwd() {
+        use crate::options::AppType;
+        use crate::scheduler::TaskWork;
+        use std::path::PathBuf;
+        let work = TaskWork::Map {
+            app: crate::apps::wordcount::WordCountApp::new(None),
+            pairs: vec![(PathBuf::from("in/a"), PathBuf::from("out/a"))],
+            mode: AppType::Siso,
+        };
+        let WireWork::Map { pairs, .. } = WireWork::from_work(&work)
+        else {
+            panic!("map stays map");
+        };
+        let cwd = std::env::current_dir().unwrap();
+        assert_eq!(pairs[0].0, cwd.join("in/a").to_string_lossy());
+        assert_eq!(pairs[0].1, cwd.join("out/a").to_string_lossy());
+    }
+}

@@ -1,0 +1,211 @@
+//! Line-framed message transport over TCP.
+//!
+//! A connection is split into an owned reader half and an owned writer
+//! half ([`split`]) so the coordinator can park the writer inside its
+//! state mutex while a dedicated thread blocks on the reader — the two
+//! halves are `TcpStream` clones of one socket.  Framing is one
+//! [`Message`] per `\n`-terminated line (see
+//! [`crate::scheduler::remote::protocol`]).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::scheduler::remote::protocol::{frame_err, Message};
+
+/// Frames too long to be legitimate traffic (a runaway or hostile peer);
+/// `recv` aborts the connection instead of buffering without bound.
+/// Generous: a 75k-task MIMO pair list still fits.
+const MAX_FRAME_BYTES: usize = 64 * 1024 * 1024;
+
+fn wire_err(context: &str, e: std::io::Error) -> Error {
+    Error::Scheduler(format!("wire {context}: {e}"))
+}
+
+/// Reading half of a connection.
+pub struct LineReader {
+    inner: BufReader<TcpStream>,
+}
+
+impl LineReader {
+    /// Bound (or unbound, with `None`) how long `recv` may block.  The
+    /// coordinator uses this during the registration handshake so a
+    /// silent connection (port scanner, stray client) cannot pin its
+    /// reader thread and socket forever.
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) {
+        let _ = self.inner.get_ref().set_read_timeout(timeout);
+    }
+
+    /// Block for the next frame.  `Ok(None)` on clean EOF (peer gone);
+    /// protocol errors are [`Error::Format`], transport errors
+    /// [`Error::Scheduler`].  Each read is capped by the frame budget,
+    /// so a newline-less byte flood errors out instead of buffering
+    /// without bound.
+    pub fn recv(&mut self) -> Result<Option<Message>> {
+        let mut bytes: Vec<u8> = Vec::new();
+        loop {
+            // Budget + 1 so an overflowing frame is detected (below)
+            // rather than silently truncated at the boundary.
+            let budget = (MAX_FRAME_BYTES + 1 - bytes.len()) as u64;
+            let mut limited = std::io::Read::take(&mut self.inner, budget);
+            match limited.read_until(b'\n', &mut bytes) {
+                Ok(0) => {
+                    // EOF — clean between frames, or mid-frame (peer
+                    // death); either way the peer is gone.
+                    return Ok(None);
+                }
+                Ok(_) => {
+                    if bytes.len() > MAX_FRAME_BYTES {
+                        return Err(frame_err(
+                            "frame exceeds size limit",
+                        ));
+                    }
+                    if bytes.last() != Some(&b'\n') {
+                        // Budget boundary or transient short read
+                        // without a delimiter: keep reading.
+                        continue;
+                    }
+                    let line =
+                        std::str::from_utf8(&bytes).map_err(|_| {
+                            frame_err("frame is not utf-8")
+                        })?;
+                    if line.trim().is_empty() {
+                        bytes.clear();
+                        continue; // tolerate blank keep-alive lines
+                    }
+                    return Message::decode(line).map(Some);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {
+                    continue
+                }
+                Err(e) => return Err(wire_err("read failed", e)),
+            }
+        }
+    }
+}
+
+/// Writing half of a connection.
+pub struct LineWriter {
+    inner: TcpStream,
+}
+
+impl LineWriter {
+    /// Send one frame (write + flush; the stream has `TCP_NODELAY` set,
+    /// so small frames leave immediately).
+    pub fn send(&mut self, msg: &Message) -> Result<()> {
+        self.inner
+            .write_all(msg.encode().as_bytes())
+            .map_err(|e| wire_err("send failed", e))
+    }
+
+    /// Hard-close both halves of the connection (used by the worker's
+    /// deterministic crash knob and dead-worker teardown).
+    pub fn shutdown(&self) {
+        let _ = self.inner.shutdown(std::net::Shutdown::Both);
+    }
+
+    /// Half-close: send FIN after any queued frames, keep reading.
+    /// Coordinator shutdown uses this so the final `shutdown` frame is
+    /// delivered in order — a full close could RST it away if a worker
+    /// heartbeat is in flight.
+    pub fn shutdown_write(&self) {
+        let _ = self.inner.shutdown(std::net::Shutdown::Write);
+    }
+}
+
+/// Split a stream into framed reader/writer halves, configuring the
+/// socket for protocol traffic (`TCP_NODELAY`, bounded write stalls so a
+/// wedged peer cannot block the coordinator forever).
+pub fn split(stream: TcpStream) -> Result<(LineReader, LineWriter)> {
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "<unknown>".into());
+    // Streams accepted from the coordinator's nonblocking listener must
+    // not inherit nonblocking mode (platform-dependent): the framing
+    // below relies on blocking reads.
+    stream
+        .set_nonblocking(false)
+        .map_err(|e| wire_err(&format!("blocking({peer})"), e))?;
+    stream
+        .set_nodelay(true)
+        .map_err(|e| wire_err(&format!("nodelay({peer})"), e))?;
+    stream
+        .set_write_timeout(Some(Duration::from_secs(10)))
+        .map_err(|e| wire_err(&format!("write-timeout({peer})"), e))?;
+    let writer = stream
+        .try_clone()
+        .map_err(|e| wire_err(&format!("clone({peer})"), e))?;
+    Ok((
+        LineReader {
+            inner: BufReader::new(stream),
+        },
+        LineWriter { inner: writer },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::remote::protocol::WireOutcome;
+    use std::net::TcpListener;
+
+    #[test]
+    fn frames_roundtrip_over_a_real_socket() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let sender = std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            let (_r, mut w) = split(stream).unwrap();
+            w.send(&Message::Heartbeat { worker_id: 1 }).unwrap();
+            w.send(&Message::Complete {
+                job: 2,
+                task_idx: 0,
+                outcome: WireOutcome {
+                    startup_us: 10,
+                    compute_us: 20,
+                    launches: 1,
+                    items: 2,
+                },
+            })
+            .unwrap();
+            // Dropping the stream closes the connection -> clean EOF.
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let (mut r, _w) = split(stream).unwrap();
+        assert_eq!(
+            r.recv().unwrap(),
+            Some(Message::Heartbeat { worker_id: 1 })
+        );
+        assert!(matches!(
+            r.recv().unwrap(),
+            Some(Message::Complete { job: 2, .. })
+        ));
+        assert_eq!(r.recv().unwrap(), None, "clean EOF");
+        sender.join().unwrap();
+    }
+
+    #[test]
+    fn garbage_line_is_a_format_error_then_stream_continues() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let sender = std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            stream.write_all(b"this is not json\n").unwrap();
+            stream
+                .write_all(Message::Shutdown.encode().as_bytes())
+                .unwrap();
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let (mut r, _w) = split(stream).unwrap();
+        let err = r.recv().unwrap_err();
+        assert!(
+            matches!(err, Error::Format { kind: "wire", .. }),
+            "{err}"
+        );
+        // The framing survives a bad line: the next frame still parses.
+        assert_eq!(r.recv().unwrap(), Some(Message::Shutdown));
+        sender.join().unwrap();
+    }
+}

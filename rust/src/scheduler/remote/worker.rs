@@ -1,0 +1,400 @@
+//! The worker daemon: `llmapreduce worker --connect host:port --slots N`.
+//!
+//! A worker dials the coordinator, registers its slot count, and then
+//! executes whatever [`Message::Assign`] frames arrive: the shipped
+//! [`WireWork`] is materialized back into a real
+//! [`crate::scheduler::TaskWork`] via [`crate::apps::registry`] and run
+//! through the same [`crate::scheduler::exec::execute`] path the local
+//! engine uses — one execution substrate, reached over two transports.
+//! Completions stream back as they land; a heartbeat thread beacons
+//! liveness in between.
+//!
+//! [`run_worker`] is a library function so tests and benches can host
+//! workers on plain threads; the CLI subcommand is a thin wrapper.  The
+//! [`WorkerConfig::fail_after`] chaos knob makes fault-tolerance tests
+//! deterministic: the worker drops its connection cold upon *receiving*
+//! its Nth assignment (never executing it), exactly like a machine lost
+//! mid-job.
+
+use std::collections::VecDeque;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::apps::registry::{resolve_mapper, resolve_reducer};
+use crate::error::{Error, Result};
+use crate::options::AppType;
+use crate::scheduler::exec::execute;
+use crate::scheduler::remote::protocol::{
+    Message, WireOutcome, WireWork, PROTOCOL_VERSION,
+};
+use crate::scheduler::remote::transport::{split, LineWriter};
+use crate::scheduler::TaskWork;
+
+/// Everything a worker daemon needs to start.
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    /// Coordinator address (`host:port`).
+    pub connect: String,
+    /// Concurrent task capacity advertised to the coordinator.
+    pub slots: usize,
+    /// Name used for per-worker attribution in reports.
+    pub name: String,
+    /// Liveness beacon period (keep well under the coordinator's
+    /// heartbeat timeout; the default pairing is 500ms vs 3s).
+    pub heartbeat_interval: Duration,
+    /// Chaos knob: drop the connection cold upon receiving the Nth
+    /// assignment (1-based), which is then never executed — a
+    /// deterministic stand-in for `kill -9` mid-job.
+    pub fail_after: Option<usize>,
+}
+
+impl WorkerConfig {
+    pub fn new(connect: impl Into<String>) -> Self {
+        WorkerConfig {
+            connect: connect.into(),
+            slots: 1,
+            name: format!("worker-{}", std::process::id()),
+            heartbeat_interval: Duration::from_millis(500),
+            fail_after: None,
+        }
+    }
+
+    pub fn slots(mut self, n: usize) -> Self {
+        self.slots = n.max(1);
+        self
+    }
+
+    pub fn name(mut self, name: impl Into<String>) -> Self {
+        self.name = name.into();
+        self
+    }
+
+    pub fn fail_after(mut self, n: usize) -> Self {
+        self.fail_after = Some(n);
+        self
+    }
+}
+
+/// Rebuild an executable [`TaskWork`] from its wire form, resolving app
+/// specs through the registry.  Resolution failures surface as task
+/// failures on the coordinator, naming the spec.
+fn materialize(work: &WireWork) -> Result<TaskWork> {
+    match work {
+        WireWork::Map {
+            mapper,
+            pairs,
+            mimo,
+        } => Ok(TaskWork::Map {
+            app: resolve_mapper(mapper)?,
+            pairs: pairs
+                .iter()
+                .map(|(i, o)| (i.into(), o.into()))
+                .collect(),
+            mode: if *mimo { AppType::Mimo } else { AppType::Siso },
+        }),
+        WireWork::Reduce {
+            reducer,
+            input_dir,
+            out_file,
+        } => Ok(TaskWork::Reduce {
+            app: resolve_reducer(reducer)?,
+            input_dir: input_dir.into(),
+            out_file: out_file.into(),
+        }),
+        WireWork::ReducePartial {
+            reducer,
+            files,
+            out_file,
+        } => Ok(TaskWork::ReducePartial {
+            app: resolve_reducer(reducer)?,
+            files: files.iter().map(|f| f.into()).collect(),
+            out_file: out_file.into(),
+        }),
+        WireWork::Synthetic {
+            startup_us,
+            per_item_us,
+            items,
+            launches,
+        } => Ok(TaskWork::Synthetic {
+            startup: Duration::from_micros(*startup_us),
+            per_item: Duration::from_micros(*per_item_us),
+            items: *items,
+            launches: *launches,
+        }),
+    }
+}
+
+/// Executor-pool feed: assignments queued by the read loop.
+struct Queue {
+    tasks: Mutex<(VecDeque<(u64, usize, WireWork)>, bool)>,
+    cv: Condvar,
+}
+
+impl Queue {
+    fn push(&self, item: (u64, usize, WireWork)) {
+        let mut q = self.tasks.lock().unwrap_or_else(|e| e.into_inner());
+        q.0.push_back(item);
+        drop(q);
+        self.cv.notify_one();
+    }
+
+    fn close(&self) {
+        self.tasks.lock().unwrap_or_else(|e| e.into_inner()).1 = true;
+        self.cv.notify_all();
+    }
+
+    /// Abrupt death: discard queued assignments too — a "killed" worker
+    /// must not keep executing its backlog after dropping off the wire.
+    fn abort(&self) {
+        let mut q = self.tasks.lock().unwrap_or_else(|e| e.into_inner());
+        q.0.clear();
+        q.1 = true;
+        drop(q);
+        self.cv.notify_all();
+    }
+
+    fn pop(&self) -> Option<(u64, usize, WireWork)> {
+        let mut q = self.tasks.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if let Some(item) = q.0.pop_front() {
+                return Some(item);
+            }
+            if q.1 {
+                return None;
+            }
+            q = self.cv.wait(q).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// Execute one assignment and stream the result back.  Send failures
+/// are ignored — they mean the coordinator is gone, and the read loop
+/// notices independently.
+fn execute_assignment(
+    writer: &Mutex<LineWriter>,
+    job: u64,
+    task_idx: usize,
+    work: &WireWork,
+) {
+    let result = materialize(work).and_then(|w| {
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            execute(&w)
+        }))
+        .unwrap_or_else(|panic| {
+            let msg = crate::scheduler::exec::panic_message(panic);
+            Err(Error::Scheduler(format!("payload panicked: {msg}")))
+        })
+    });
+    let reply = match result {
+        Ok(out) => Message::Complete {
+            job,
+            task_idx,
+            outcome: WireOutcome {
+                startup_us: out.startup.as_micros() as u64,
+                compute_us: out.compute.as_micros() as u64,
+                launches: out.launches,
+                items: out.items,
+            },
+        },
+        Err(e) => Message::Failed {
+            job,
+            task_idx,
+            msg: e.to_string(),
+        },
+    };
+    let _ = writer
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .send(&reply);
+}
+
+/// Dial the coordinator, retrying for a grace period — workers and the
+/// coordinator are started concurrently (a CI script backgrounds the
+/// daemons before `llmapreduce run --engine=remote` binds), so a
+/// connection-refused right at boot is expected, not fatal.
+fn connect_with_retry(addr: &str) -> Result<TcpStream> {
+    let deadline = std::time::Instant::now() + Duration::from_secs(15);
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(stream) => return Ok(stream),
+            Err(e) => {
+                if std::time::Instant::now() >= deadline {
+                    return Err(Error::Scheduler(format!(
+                        "worker connect {addr}: {e}"
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(200));
+            }
+        }
+    }
+}
+
+/// Run a worker daemon until the coordinator shuts it down (or the
+/// connection dies, or [`WorkerConfig::fail_after`] fires).  Blocking;
+/// host it on a thread for in-process fleets.
+pub fn run_worker(config: WorkerConfig) -> Result<()> {
+    let stream = connect_with_retry(&config.connect)?;
+    let (mut reader, writer) = split(stream)?;
+    let writer = Arc::new(Mutex::new(writer));
+
+    // Handshake.
+    writer
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .send(&Message::Register {
+            name: config.name.clone(),
+            slots: config.slots,
+            version: PROTOCOL_VERSION,
+        })?;
+    let worker_id = match reader.recv()? {
+        Some(Message::Registered { worker_id }) => worker_id,
+        other => {
+            return Err(Error::Scheduler(format!(
+                "worker handshake: expected registered, got {other:?}"
+            )))
+        }
+    };
+
+    // Heartbeat thread.
+    let stop = Arc::new(AtomicBool::new(false));
+    let beat = {
+        let writer = writer.clone();
+        let stop = stop.clone();
+        let interval = config.heartbeat_interval;
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(interval);
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let sent = writer
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .send(&Message::Heartbeat { worker_id });
+                if sent.is_err() {
+                    break; // coordinator gone; read loop exits too
+                }
+            }
+        })
+    };
+
+    // Executor pool.
+    let queue = Arc::new(Queue {
+        tasks: Mutex::new((VecDeque::new(), false)),
+        cv: Condvar::new(),
+    });
+    let executors: Vec<_> = (0..config.slots.max(1))
+        .map(|_| {
+            let queue = queue.clone();
+            let writer = writer.clone();
+            std::thread::spawn(move || {
+                while let Some((job, task_idx, work)) = queue.pop() {
+                    execute_assignment(&writer, job, task_idx, &work);
+                }
+            })
+        })
+        .collect();
+
+    // Read loop.
+    let mut received = 0usize;
+    let outcome = loop {
+        match reader.recv() {
+            Ok(Some(Message::Assign {
+                job,
+                task_idx,
+                work,
+                ..
+            })) => {
+                received += 1;
+                if config.fail_after.is_some_and(|n| received >= n) {
+                    // Chaos: vanish without executing this assignment
+                    // (or anything still queued).  The coordinator sees
+                    // the socket drop and reassigns.
+                    queue.abort();
+                    writer
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .shutdown();
+                    break Ok(());
+                }
+                queue.push((job, task_idx, work));
+            }
+            Ok(Some(Message::Shutdown)) | Ok(None) => break Ok(()),
+            Ok(Some(_)) => {} // nothing else is worker-bound; ignore
+            Err(e) => break Err(e),
+        }
+    };
+
+    // Wind down: stop the beacon, drain executors, close the socket.
+    stop.store(true, Ordering::Relaxed);
+    queue.close();
+    for h in executors {
+        let _ = h.join();
+    }
+    writer.lock().unwrap_or_else(|e| e.into_inner()).shutdown();
+    let _ = beat.join();
+    outcome
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn materialize_roundtrips_builtin_specs() {
+        let w = materialize(&WireWork::Map {
+            mapper: "wordcount".into(),
+            pairs: vec![("a".into(), "a.out".into())],
+            mimo: true,
+        })
+        .unwrap();
+        match w {
+            TaskWork::Map { app, pairs, mode } => {
+                assert_eq!(app.name(), "wordcount");
+                assert_eq!(pairs.len(), 1);
+                assert_eq!(mode, AppType::Mimo);
+            }
+            other => panic!("wrong work: {other:?}"),
+        }
+        let s = materialize(&WireWork::Synthetic {
+            startup_us: 1000,
+            per_item_us: 10,
+            items: 4,
+            launches: 2,
+        })
+        .unwrap();
+        match s {
+            TaskWork::Synthetic {
+                startup, launches, ..
+            } => {
+                assert_eq!(startup, Duration::from_millis(1));
+                assert_eq!(launches, 2);
+            }
+            other => panic!("wrong work: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unresolvable_spec_is_an_error_not_a_panic() {
+        // Empty spec cannot resolve even as an external command.
+        assert!(materialize(&WireWork::Reduce {
+            reducer: "".into(),
+            input_dir: "d".into(),
+            out_file: "f".into(),
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn config_builder() {
+        let c = WorkerConfig::new("127.0.0.1:7171")
+            .slots(0)
+            .name("w0")
+            .fail_after(2);
+        assert_eq!(c.slots, 1, "slots clamp to >= 1");
+        assert_eq!(c.name, "w0");
+        assert_eq!(c.fail_after, Some(2));
+    }
+}

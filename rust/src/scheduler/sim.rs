@@ -314,6 +314,7 @@ impl SimEngine {
                             ),
                             finished_at: dur(finish - job_submit),
                             retries: retries[idx],
+                            ..Default::default()
                         };
                         reports[idx] = Some(report);
                     }

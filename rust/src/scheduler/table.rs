@@ -1,0 +1,593 @@
+//! The engine-shared job table: one dependency/completion state machine.
+//!
+//! [`crate::scheduler::local::LocalEngine`] and
+//! [`crate::scheduler::remote::RemoteCoordinator`] schedule work against
+//! very different substrates (an in-process thread pool vs. TCP-attached
+//! worker daemons), but the *queueing semantics* — admission, whole-job
+//! barriers ([`JobSpec::depends_on`]), task-granularity edges
+//! ([`JobSpec::task_deps`]), failure cascade, zero-task degenerate jobs,
+//! report assembly — must be identical, or the same pipeline would
+//! behave differently per `--engine`.  [`JobTable`] is that shared state
+//! machine, extracted from the local engine's dispatcher.  Callers hold
+//! it behind their own mutex and own their own ready queue; the table
+//! answers "which `(job, task)` pairs just became dispatchable".
+//!
+//! The table is wall-clock (`Instant`-stamped eligibility for
+//! `dispatch_wait`); the virtual-time simulator keeps its own event loop.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::scheduler::{JobId, JobReport, JobSpec, TaskReport, TaskSpec};
+
+/// Eligibility gate of one task.
+#[derive(Debug, Clone)]
+enum Gate {
+    /// Ready to dispatch (and already on, or about to join, the queue).
+    Open,
+    /// Waiting for the whole dependency job (Fig 1 barrier).
+    Job,
+    /// Waiting for `n` specific upstream tasks (overlapped reduce).
+    Tasks(usize),
+}
+
+/// Table-owned state of one submitted job.
+struct Job {
+    name: String,
+    tasks: Arc<Vec<TaskSpec>>,
+    /// Original task count — survives `shed()`, because late submits of
+    /// dependents validate their task edges against it.
+    ntasks: usize,
+    submitted_at: Instant,
+    gates: Vec<Gate>,
+    /// When each task became dispatchable (for `dispatch_wait`).
+    eligible_at: Vec<Option<Instant>>,
+    /// Injected-failure attempts consumed so far, per task.
+    attempts: Vec<usize>,
+    reports: Vec<Option<TaskReport>>,
+    done_tasks: Vec<bool>,
+    /// Tasks not yet successfully completed.
+    remaining: usize,
+    /// Jobs whose whole-job barrier waits on this job.
+    barrier_dependents: Vec<JobId>,
+    /// task index here → dependent (job, task index) edges to release.
+    task_dependents: HashMap<usize, Vec<(JobId, usize)>>,
+    /// Whole-node allocation requested (`--exclusive`).  The local
+    /// engine has no nodes (one slot is one slot); the remote engine
+    /// gives such tasks a whole worker.
+    exclusive: bool,
+    /// Completed report or failure message; `Some` means the job is over.
+    outcome: Option<Result<JobReport, String>>,
+}
+
+impl Job {
+    /// Drop the per-task state once an outcome is set.  Waiters only
+    /// ever clone the outcome, and every code path that touches the
+    /// per-task vectors checks `outcome.is_none()` first — so after
+    /// completion the task specs (which can hold thousands of input
+    /// pairs) are dead weight a long-lived engine would otherwise retain
+    /// forever.
+    fn shed(&mut self) {
+        self.tasks = Arc::new(Vec::new());
+        self.gates = Vec::new();
+        self.eligible_at = Vec::new();
+        self.attempts = Vec::new();
+        self.reports = Vec::new();
+        self.done_tasks = Vec::new();
+    }
+}
+
+/// Borrowed view of one job's fate (see [`JobTable::outcome`]).
+pub(crate) enum Outcome<'a> {
+    /// Never admitted to this table.
+    Unknown,
+    /// Admitted, still running.
+    Running,
+    /// Completed successfully.
+    Done(&'a JobReport),
+    /// Failed (directly or via dependency cascade).
+    Failed(&'a str),
+}
+
+/// Execution-time snapshot of one task, handed to whatever runs it.
+pub(crate) struct TaskView {
+    /// The job's task array (shared — workers index into it).
+    pub tasks: Arc<Vec<TaskSpec>>,
+    pub submitted_at: Instant,
+    /// Injected-failure attempts already consumed.
+    pub attempt: usize,
+    /// When the task became dispatchable.
+    pub eligible_at: Option<Instant>,
+    /// Whole-node allocation (`JobSpec::exclusive`).
+    pub exclusive: bool,
+}
+
+/// The shared dependency/completion state machine (module docs).
+pub(crate) struct JobTable {
+    jobs: HashMap<JobId, Job>,
+    /// Execution width reported in assembled [`JobReport`]s.
+    slots: usize,
+}
+
+impl JobTable {
+    pub fn new(slots: usize) -> Self {
+        JobTable {
+            jobs: HashMap::new(),
+            slots,
+        }
+    }
+
+    /// Update the reported execution width (the remote coordinator's
+    /// width changes as workers attach and die).
+    pub fn set_slots(&mut self, slots: usize) {
+        self.slots = slots;
+    }
+
+    /// Task count of a job this table has admitted (survives completion).
+    pub fn ntasks(&self, id: JobId) -> Option<usize> {
+        self.jobs.get(&id).map(|j| j.ntasks)
+    }
+
+    /// The job's current fate.
+    pub fn outcome(&self, id: JobId) -> Outcome<'_> {
+        match self.jobs.get(&id).map(|j| &j.outcome) {
+            None => Outcome::Unknown,
+            Some(None) => Outcome::Running,
+            Some(Some(Ok(r))) => Outcome::Done(r),
+            Some(Some(Err(m))) => Outcome::Failed(m),
+        }
+    }
+
+    /// Whether the job is admitted and still undecided.
+    pub fn is_live(&self, id: JobId) -> bool {
+        matches!(self.outcome(id), Outcome::Running)
+    }
+
+    /// Snapshot what executing task `idx` of `jid` needs; `None` when
+    /// the job is over, the task already completed (a stale queue entry
+    /// from a reassignment race must not re-execute), or unknown.
+    pub fn view(&self, jid: JobId, idx: usize) -> Option<TaskView> {
+        let job = self.jobs.get(&jid)?;
+        // The bounds check also shields against hostile wire frames
+        // naming task indices the job never had.
+        if job.outcome.is_some() || idx >= job.ntasks || job.done_tasks[idx]
+        {
+            return None;
+        }
+        Some(TaskView {
+            tasks: job.tasks.clone(),
+            submitted_at: job.submitted_at,
+            attempt: job.attempts[idx],
+            eligible_at: job.eligible_at[idx],
+            exclusive: job.exclusive,
+        })
+    }
+
+    /// Record one consumed injected-failure attempt; `false` when the job
+    /// is already over (caller drops the task instead of requeueing).
+    pub fn bump_attempt(&mut self, jid: JobId, idx: usize) -> bool {
+        match self.jobs.get_mut(&jid) {
+            Some(job) if job.outcome.is_none() && idx < job.ntasks => {
+                job.attempts[idx] += 1;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    fn empty_report(&self, jid: JobId, name: &str, at: Instant) -> JobReport {
+        JobReport {
+            job_id: jid.0,
+            name: name.to_string(),
+            makespan: at.elapsed(),
+            slots: self.slots,
+            tasks: Vec::new(),
+        }
+    }
+
+    /// Admit one job: resolve its dependency edges into per-task gates,
+    /// register reverse edges on the upstream job, and return whatever is
+    /// immediately dispatchable.  The spec must already have passed
+    /// [`crate::scheduler::validate_submit`].
+    pub fn admit(
+        &mut self,
+        jid: JobId,
+        spec: JobSpec,
+        submitted_at: Instant,
+    ) -> Vec<(JobId, usize)> {
+        let JobSpec {
+            name,
+            tasks,
+            depends_on,
+            task_deps,
+            exclusive,
+        } = spec;
+        let n = tasks.len();
+        let mut job = Job {
+            name,
+            tasks: Arc::new(tasks),
+            ntasks: n,
+            submitted_at,
+            gates: vec![Gate::Open; n],
+            eligible_at: vec![None; n],
+            attempts: vec![0; n],
+            reports: vec![None; n],
+            done_tasks: vec![false; n],
+            remaining: n,
+            barrier_dependents: Vec::new(),
+            task_dependents: HashMap::new(),
+            exclusive,
+            outcome: None,
+        };
+
+        // Whether this job was registered to wait on the upstream's
+        // whole-job completion signal (drives zero-task completion below).
+        let mut barrier_registered = false;
+        if let Some(dep) = depends_on {
+            // Group this job's task edges by dependent index.
+            let mut edges: HashMap<usize, Vec<usize>> = HashMap::new();
+            for &(i, u) in &task_deps {
+                edges.entry(i).or_default().push(u);
+            }
+            match self.jobs.get_mut(&dep) {
+                Some(upstream) => match &upstream.outcome {
+                    Some(Ok(_)) => {} // dependency satisfied: gates open
+                    Some(Err(msg)) => {
+                        job.outcome = Some(Err(format!(
+                            "dependency job {dep} failed: {msg}"
+                        )));
+                        job.shed();
+                        self.jobs.insert(jid, job);
+                        return Vec::new();
+                    }
+                    None => {
+                        for i in 0..n {
+                            if let Some(ups) = edges.get(&i) {
+                                let mut open_count = 0usize;
+                                for &u in ups {
+                                    if upstream.done_tasks[u] {
+                                        continue;
+                                    }
+                                    upstream
+                                        .task_dependents
+                                        .entry(u)
+                                        .or_default()
+                                        .push((jid, i));
+                                    open_count += 1;
+                                }
+                                if open_count > 0 {
+                                    job.gates[i] = Gate::Tasks(open_count);
+                                }
+                            } else {
+                                job.gates[i] = Gate::Job;
+                            }
+                        }
+                        // Zero-task dependents and any Job-gated task wait
+                        // for the upstream completion signal.
+                        if n == 0
+                            || job
+                                .gates
+                                .iter()
+                                .any(|g| matches!(g, Gate::Job))
+                        {
+                            upstream.barrier_dependents.push(jid);
+                            barrier_registered = true;
+                        }
+                    }
+                },
+                None => {
+                    // Validated at submit; can only mean the dependency
+                    // was itself dropped on an earlier admission failure.
+                    job.outcome = Some(Err(format!(
+                        "dependency job {dep} was never admitted"
+                    )));
+                    job.shed();
+                    self.jobs.insert(jid, job);
+                    return Vec::new();
+                }
+            }
+        }
+
+        // A zero-task job completes at admission only when it is not
+        // barriered on a still-running upstream (barrier release
+        // completes it otherwise, once the upstream lands).
+        if n == 0 && !barrier_registered {
+            job.outcome =
+                Some(Ok(self.empty_report(jid, &job.name, submitted_at)));
+        }
+        let now = Instant::now();
+        let mut ready = Vec::new();
+        for i in 0..n {
+            if matches!(job.gates[i], Gate::Open) {
+                job.eligible_at[i] = Some(now);
+                ready.push((jid, i));
+            }
+        }
+        self.jobs.insert(jid, job);
+        ready
+    }
+
+    /// Record a successful task: release task-granularity dependents,
+    /// complete the job when its last task lands, and open downstream
+    /// whole-job barriers.  Returns every `(job, task)` pair that became
+    /// dispatchable.
+    pub fn on_task_done(
+        &mut self,
+        jid: JobId,
+        idx: usize,
+        report: TaskReport,
+    ) -> Vec<(JobId, usize)> {
+        let slots = self.slots;
+        let (released, completed) = {
+            let Some(job) = self.jobs.get_mut(&jid) else {
+                return Vec::new();
+            };
+            if job.outcome.is_some()
+                || idx >= job.ntasks
+                || job.done_tasks[idx]
+            {
+                // Job over, hostile index, or stale duplicate.
+                return Vec::new();
+            }
+            job.done_tasks[idx] = true;
+            job.reports[idx] = Some(report);
+            job.remaining -= 1;
+            let released =
+                job.task_dependents.remove(&idx).unwrap_or_default();
+            let completed = job.remaining == 0;
+            complete_if_last(job, jid, completed, slots);
+            (released, completed)
+        };
+
+        // Open task-granularity gates on dependents (the overlapped path).
+        let now = Instant::now();
+        let mut ready = Vec::new();
+        for (dj, di) in released {
+            if let Some(dep_job) = self.jobs.get_mut(&dj) {
+                if dep_job.outcome.is_some() {
+                    continue;
+                }
+                if let Gate::Tasks(remaining) = &mut dep_job.gates[di] {
+                    *remaining -= 1;
+                    if *remaining == 0 {
+                        dep_job.gates[di] = Gate::Open;
+                        dep_job.eligible_at[di] = Some(now);
+                        ready.push((dj, di));
+                    }
+                }
+            }
+        }
+
+        if completed {
+            self.open_barriers(jid, &mut ready);
+        }
+        ready
+    }
+
+    /// Open whole-job barriers downstream of `jid`, transitively
+    /// completing degenerate zero-task dependents; extends `ready` with
+    /// barrier-released tasks.
+    fn open_barriers(&mut self, jid: JobId, ready: &mut Vec<(JobId, usize)>) {
+        let mut done_stack = vec![jid];
+        while let Some(id) = done_stack.pop() {
+            let dependents = self
+                .jobs
+                .get_mut(&id)
+                .map(|j| std::mem::take(&mut j.barrier_dependents))
+                .unwrap_or_default();
+            for dj in dependents {
+                let mut newly_done = false;
+                let slots = self.slots;
+                if let Some(d) = self.jobs.get_mut(&dj) {
+                    if d.outcome.is_some() {
+                        continue;
+                    }
+                    let now = Instant::now();
+                    for di in 0..d.gates.len() {
+                        if matches!(d.gates[di], Gate::Job) {
+                            d.gates[di] = Gate::Open;
+                            d.eligible_at[di] = Some(now);
+                            ready.push((dj, di));
+                        }
+                    }
+                    if d.ntasks == 0 {
+                        d.outcome = Some(Ok(JobReport {
+                            job_id: dj.0,
+                            name: d.name.clone(),
+                            makespan: d.submitted_at.elapsed(),
+                            slots,
+                            tasks: Vec::new(),
+                        }));
+                        d.shed();
+                        newly_done = true;
+                    }
+                }
+                if newly_done {
+                    done_stack.push(dj);
+                }
+            }
+        }
+    }
+
+    /// Jobs admitted but not yet decided (the remote coordinator fails
+    /// them all when the whole worker fleet is lost).
+    pub fn live_jobs(&self) -> Vec<JobId> {
+        self.jobs
+            .iter()
+            .filter(|(_, j)| j.outcome.is_none())
+            .map(|(id, _)| *id)
+            .collect()
+    }
+
+    /// Fail `jid` and cascade the failure through every dependent job.
+    pub fn fail_job(&mut self, jid: JobId, msg: String) {
+        let mut stack = vec![(jid, msg)];
+        while let Some((id, m)) = stack.pop() {
+            let dependents: Vec<JobId> = {
+                let Some(job) = self.jobs.get_mut(&id) else { continue };
+                if job.outcome.is_some() {
+                    continue;
+                }
+                job.outcome = Some(Err(m.clone()));
+                job.shed();
+                let mut deps: Vec<JobId> =
+                    std::mem::take(&mut job.barrier_dependents);
+                for (_, edges) in std::mem::take(&mut job.task_dependents) {
+                    deps.extend(edges.into_iter().map(|(dj, _)| dj));
+                }
+                deps.sort_unstable();
+                deps.dedup();
+                deps
+            };
+            for dj in dependents {
+                stack.push((dj, format!("dependency job {id} failed: {m}")));
+            }
+        }
+    }
+}
+
+/// Completion arm of [`JobTable::on_task_done`]: assemble the report once
+/// the last task landed.  Split out so the borrow of `job` ends before
+/// the dependent-release pass.
+fn complete_if_last(job: &mut Job, jid: JobId, completed: bool, slots: usize) {
+    if !completed {
+        return;
+    }
+    let tasks: Vec<TaskReport> = job
+        .reports
+        .iter_mut()
+        .map(|r| r.take().expect("every task reported"))
+        .collect();
+    job.outcome = Some(Ok(JobReport {
+        job_id: jid.0,
+        name: job.name.clone(),
+        makespan: job.submitted_at.elapsed(),
+        slots,
+        tasks,
+    }));
+    job.shed();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::TaskWork;
+    use std::time::Duration;
+
+    fn synth_tasks(n: usize) -> Vec<TaskSpec> {
+        (0..n)
+            .map(|i| TaskSpec {
+                task_id: i + 1,
+                work: TaskWork::Synthetic {
+                    startup: Duration::ZERO,
+                    per_item: Duration::ZERO,
+                    items: 1,
+                    launches: 1,
+                },
+            })
+            .collect()
+    }
+
+    fn done(table: &mut JobTable, jid: JobId, idx: usize) -> Vec<(JobId, usize)> {
+        table.on_task_done(
+            jid,
+            idx,
+            TaskReport {
+                task_id: idx + 1,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn admit_opens_independent_tasks() {
+        let mut t = JobTable::new(2);
+        let ready =
+            t.admit(JobId(1), JobSpec::new("a", synth_tasks(3)), Instant::now());
+        assert_eq!(ready, vec![(JobId(1), 0), (JobId(1), 1), (JobId(1), 2)]);
+        assert!(t.is_live(JobId(1)));
+    }
+
+    #[test]
+    fn barrier_holds_until_upstream_completes() {
+        let mut t = JobTable::new(1);
+        t.admit(JobId(1), JobSpec::new("map", synth_tasks(2)), Instant::now());
+        let ready = t.admit(
+            JobId(2),
+            JobSpec::new("red", synth_tasks(1)).after(JobId(1)),
+            Instant::now(),
+        );
+        assert!(ready.is_empty(), "barriered task is not dispatchable");
+        assert!(done(&mut t, JobId(1), 0).is_empty());
+        let released = done(&mut t, JobId(1), 1);
+        assert_eq!(released, vec![(JobId(2), 0)]);
+        assert!(matches!(t.outcome(JobId(1)), Outcome::Done(_)));
+    }
+
+    #[test]
+    fn task_edges_release_eagerly() {
+        let mut t = JobTable::new(1);
+        t.admit(JobId(1), JobSpec::new("map", synth_tasks(2)), Instant::now());
+        let ready = t.admit(
+            JobId(2),
+            JobSpec::new("partial", synth_tasks(2))
+                .after_tasks(JobId(1), vec![(0, 0), (1, 1)]),
+            Instant::now(),
+        );
+        assert!(ready.is_empty());
+        // Task 1 of the upstream releases dependent task 1 only.
+        let released = done(&mut t, JobId(1), 1);
+        assert_eq!(released, vec![(JobId(2), 1)]);
+    }
+
+    #[test]
+    fn failure_cascades_to_dependents() {
+        let mut t = JobTable::new(1);
+        t.admit(JobId(1), JobSpec::new("map", synth_tasks(1)), Instant::now());
+        t.admit(
+            JobId(2),
+            JobSpec::new("red", synth_tasks(1)).after(JobId(1)),
+            Instant::now(),
+        );
+        t.fail_job(JobId(1), "boom".into());
+        match t.outcome(JobId(2)) {
+            Outcome::Failed(m) => assert!(m.contains("dependency")),
+            _ => panic!("dependent must fail"),
+        }
+    }
+
+    #[test]
+    fn zero_task_job_completes_immediately_without_dependency() {
+        let mut t = JobTable::new(4);
+        t.admit(JobId(1), JobSpec::new("empty", vec![]), Instant::now());
+        match t.outcome(JobId(1)) {
+            Outcome::Done(r) => assert_eq!(r.slots, 4),
+            _ => panic!("zero-task job completes at admission"),
+        }
+    }
+
+    #[test]
+    fn stale_duplicate_completion_is_ignored() {
+        let mut t = JobTable::new(1);
+        t.admit(JobId(1), JobSpec::new("a", synth_tasks(2)), Instant::now());
+        assert!(done(&mut t, JobId(1), 0).is_empty());
+        // Duplicate (a reassigned task that raced its first completion).
+        assert!(done(&mut t, JobId(1), 0).is_empty());
+        assert!(t.is_live(JobId(1)), "double count must not complete");
+        done(&mut t, JobId(1), 1);
+        assert!(matches!(t.outcome(JobId(1)), Outcome::Done(_)));
+    }
+
+    #[test]
+    fn view_and_attempts() {
+        let mut t = JobTable::new(1);
+        t.admit(JobId(1), JobSpec::new("a", synth_tasks(1)), Instant::now());
+        assert_eq!(t.view(JobId(1), 0).unwrap().attempt, 0);
+        assert!(t.bump_attempt(JobId(1), 0));
+        assert_eq!(t.view(JobId(1), 0).unwrap().attempt, 1);
+        done(&mut t, JobId(1), 0);
+        assert!(t.view(JobId(1), 0).is_none(), "no view of finished jobs");
+        assert!(!t.bump_attempt(JobId(1), 0));
+    }
+}

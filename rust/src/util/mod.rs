@@ -5,6 +5,29 @@ pub mod json;
 pub mod rng;
 pub mod toml;
 
+/// Absolutize a relative path against `base` (no-op for absolute
+/// paths; `base = None` leaves relative paths untouched).  Used by the
+/// remote engine, which ships paths to workers that share the
+/// filesystem but not necessarily the working directory.
+pub fn absolutize_in(
+    base: Option<&std::path::Path>,
+    path: &std::path::Path,
+) -> std::path::PathBuf {
+    if path.is_absolute() {
+        return path.to_path_buf();
+    }
+    match base {
+        Some(b) => b.join(path),
+        None => path.to_path_buf(),
+    }
+}
+
+/// [`absolutize_in`] against the current working directory.
+pub fn absolutize(path: &std::path::Path) -> std::path::PathBuf {
+    let cwd = std::env::current_dir().ok();
+    absolutize_in(cwd.as_deref(), path)
+}
+
 /// Format a duration in engineering units (ns/µs/ms/s).
 pub fn fmt_duration(d: std::time::Duration) -> String {
     let ns = d.as_nanos();

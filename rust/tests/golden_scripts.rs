@@ -207,6 +207,69 @@ fn golden_limits_differ_between_dialects() {
     assert!(plan(&files, &rescued, slurm.as_ref()).is_ok());
 }
 
+/// Dependent-reducer submission script, byte for byte, per dialect —
+/// the Fig 1 step 3 job ("the reduce task will wait until all the
+/// mapper tasks are completed by setting a job dependency").
+///
+/// Audit note (remote-engine PR): the coordinator's job-level ordering
+/// contract is *success-gated* — a dependent job starts only after its
+/// dependency completes, and a failed dependency cascades
+/// (`scheduler::table::JobTable::fail_job`), identically on
+/// `--engine=local|sim|remote`.  SLURM's `afterok:` and LSF's `done()`
+/// encode exactly that gate.  Grid Engine's `-hold_jid` — the only
+/// dependency primitive the paper's Fig 8 stack has — releases on *any*
+/// completion, success or failure; on a real GE cluster the failure
+/// then surfaces through the reducer seeing missing outputs rather
+/// than through the scheduler.  The difference is deliberate and
+/// pinned here so a future dialect edit cannot drift silently.
+#[test]
+fn golden_dependent_reducer_script_per_dialect() {
+    let extra: Vec<String> = vec![];
+    let req = |_: SchedulerKind| SubmitRequest {
+        job_name: "ReduceWordFreqCmd.sh",
+        tasks: 1,
+        mapred_dir: ".MAPRED.1120",
+        exclusive: false,
+        depends_on: Some(42),
+        extra_options: &extra,
+    };
+
+    let ge = dialect_for(SchedulerKind::GridEngine)
+        .submission_script(&req(SchedulerKind::GridEngine));
+    assert_eq!(
+        ge,
+        "#!/bin/bash\n\
+         #$ -terse -cwd -V -j y -N ReduceWordFreqCmd.sh\n\
+         #$ -l excl=false -t 1-1\n\
+         #$ -o .MAPRED.1120/llmap.log-$JOB_ID-$TASK_ID\n\
+         #$ -hold_jid 42\n\
+         ./.MAPRED.1120/run_llmap_$SGE_TASK_ID\n"
+    );
+
+    let slurm = dialect_for(SchedulerKind::Slurm)
+        .submission_script(&req(SchedulerKind::Slurm));
+    assert_eq!(
+        slurm,
+        "#!/bin/bash\n\
+         #SBATCH --job-name=ReduceWordFreqCmd.sh\n\
+         #SBATCH --array=1-1\n\
+         #SBATCH --output=.MAPRED.1120/llmap.log-%A-%a\n\
+         #SBATCH --dependency=afterok:42\n\
+         ./.MAPRED.1120/run_llmap_$SLURM_ARRAY_TASK_ID\n"
+    );
+
+    let lsf = dialect_for(SchedulerKind::Lsf)
+        .submission_script(&req(SchedulerKind::Lsf));
+    assert_eq!(
+        lsf,
+        "#!/bin/bash\n\
+         #BSUB -J \"ReduceWordFreqCmd.sh[1-1]\"\n\
+         #BSUB -o .MAPRED.1120/llmap.log-%J-%I\n\
+         #BSUB -w \"done(42)\"\n\
+         ./.MAPRED.1120/run_llmap_$LSB_JOBINDEX\n"
+    );
+}
+
 #[test]
 fn golden_reduce_script_contract() {
     let s = llmapreduce::workdir::scripts::reduce_run_script(

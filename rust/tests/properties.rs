@@ -404,3 +404,135 @@ fn prop_json_roundtrip() {
         assert_eq!(doc, pretty);
     });
 }
+
+// ---------------------------------------------------------------------------
+// Remote wire-protocol invariants (scheduler::remote::protocol)
+// ---------------------------------------------------------------------------
+
+use llmapreduce::error::Error;
+use llmapreduce::scheduler::remote::protocol::{
+    Message, WireOutcome, WireWork, PROTOCOL_VERSION,
+};
+
+/// Random path-ish / name-ish string exercising every escape class the
+/// JSON layer handles: spaces, quotes, backslashes, newlines, tabs,
+/// control chars, multi-byte UTF-8.
+fn random_wire_string(rng: &mut Rng) -> String {
+    const ALPHABET: &[&str] = &[
+        "a", "Z", "0", "/", ".", "-", "_", " ", "\"", "\\", "\n", "\t",
+        "\r", "\u{1}", "é", "日", "😀", ":", "{", "}", "[", "]", ",",
+    ];
+    (0..rng.range(0, 24))
+        .map(|_| ALPHABET[rng.range(0, ALPHABET.len() - 1)])
+        .collect()
+}
+
+fn random_wire_work(rng: &mut Rng) -> WireWork {
+    match rng.next_below(4) {
+        0 => WireWork::Map {
+            mapper: random_wire_string(rng),
+            pairs: (0..rng.range(0, 6))
+                .map(|_| {
+                    (random_wire_string(rng), random_wire_string(rng))
+                })
+                .collect(),
+            mimo: rng.next_below(2) == 0,
+        },
+        1 => WireWork::Reduce {
+            reducer: random_wire_string(rng),
+            input_dir: random_wire_string(rng),
+            out_file: random_wire_string(rng),
+        },
+        2 => WireWork::ReducePartial {
+            reducer: random_wire_string(rng),
+            files: (0..rng.range(0, 6))
+                .map(|_| random_wire_string(rng))
+                .collect(),
+            out_file: random_wire_string(rng),
+        },
+        _ => WireWork::Synthetic {
+            startup_us: rng.next_below(10_000_000),
+            per_item_us: rng.next_below(10_000_000),
+            items: rng.range(0, 100_000),
+            launches: rng.range(0, 100_000),
+        },
+    }
+}
+
+fn random_message(rng: &mut Rng) -> Message {
+    match rng.next_below(7) {
+        0 => Message::Register {
+            name: random_wire_string(rng),
+            slots: rng.range(0, 1 << 20),
+            version: PROTOCOL_VERSION,
+        },
+        1 => Message::Registered {
+            worker_id: rng.next_below(1 << 40),
+        },
+        2 => Message::Heartbeat {
+            worker_id: rng.next_below(1 << 40),
+        },
+        3 => Message::Assign {
+            job: rng.next_below(1 << 40),
+            task_idx: rng.range(0, 100_000),
+            task_id: rng.range(0, 100_000),
+            work: random_wire_work(rng),
+        },
+        4 => Message::Complete {
+            job: rng.next_below(1 << 40),
+            task_idx: rng.range(0, 100_000),
+            outcome: WireOutcome {
+                startup_us: rng.next_below(1 << 40),
+                compute_us: rng.next_below(1 << 40),
+                launches: rng.range(0, 100_000),
+                items: rng.range(0, 100_000),
+            },
+        },
+        5 => Message::Failed {
+            job: rng.next_below(1 << 40),
+            task_idx: rng.range(0, 100_000),
+            msg: random_wire_string(rng),
+        },
+        _ => Message::Shutdown,
+    }
+}
+
+/// Satellite invariant: every protocol message survives the
+/// encode→decode trip bit-identically, whatever strings it carries.
+#[test]
+fn prop_wire_messages_roundtrip() {
+    forall("wire-roundtrip", |rng| {
+        let msg = random_message(rng);
+        let line = msg.encode();
+        let back = Message::decode(&line)
+            .unwrap_or_else(|e| panic!("decode failed: {e}\n{line}"));
+        assert_eq!(back, msg, "frame: {line}");
+    });
+}
+
+/// Mangled frames must come back as `Error::Format` — never a panic,
+/// never a silently-wrong message.
+#[test]
+fn prop_malformed_frames_fail_cleanly() {
+    forall("wire-malformed", |rng| {
+        let line = random_message(rng).encode();
+        // Truncate mid-frame (always invalid: dropping at least the
+        // closing brace and newline leaves unterminated JSON).
+        let nchars = line.chars().count();
+        let cut = rng.range(0, nchars.saturating_sub(2));
+        let truncated: String = line.chars().take(cut).collect();
+        match Message::decode(&truncated) {
+            Err(Error::Format { kind: "wire", .. }) => {}
+            Err(other) => panic!("wrong error kind: {other}"),
+            Ok(m) => panic!("truncated frame decoded as {m:?}"),
+        }
+        // Random byte soup.
+        let soup = random_wire_string(rng);
+        if let Err(e) = Message::decode(&soup) {
+            assert!(
+                matches!(e, Error::Format { kind: "wire", .. }),
+                "soup error kind: {e}"
+            );
+        }
+    });
+}

@@ -1,0 +1,586 @@
+//! Integration tests of the distributed coordinator/worker engine.
+//!
+//! Worker daemons are hosted on plain threads via the library entry
+//! point (`run_worker`) against a coordinator bound to an ephemeral
+//! localhost port — real TCP, real serialization, no mocks.  The
+//! acceptance bar throughout: the wordcount pipeline must produce
+//! byte-identical output on `LocalEngine` and on a coordinator with
+//! several workers, including the `--overlap` and nested-multilevel
+//! paths, and losing a worker mid-job must not lose the job.
+
+use std::fs;
+use std::path::PathBuf;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use llmapreduce::error::Result;
+use llmapreduce::mapreduce::multilevel::run_nested;
+use llmapreduce::mapreduce::{run, Apps};
+use llmapreduce::options::Options;
+use llmapreduce::prelude::{
+    run_worker, CoordinatorConfig, Engine, LocalEngine, RemoteCoordinator,
+    WorkerConfig,
+};
+use llmapreduce::scheduler::{JobSpec, TaskSpec, TaskWork};
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("llmr-remote-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Deterministic corpus: overlapping word multisets across files.
+fn write_corpus(input: &PathBuf, nfiles: usize) {
+    fs::create_dir_all(input).unwrap();
+    let vocab = ["alpha", "beta", "gamma", "delta", "epsilon"];
+    for i in 0..nfiles {
+        let mut text = String::new();
+        for (w, word) in vocab.iter().enumerate() {
+            for _ in 0..(i + w) % 4 + 1 {
+                text.push_str(word);
+                text.push(' ');
+            }
+        }
+        fs::write(input.join(format!("doc{i:02}.txt")), text).unwrap();
+    }
+}
+
+fn bind_coordinator(heartbeat_ms: u64) -> RemoteCoordinator {
+    RemoteCoordinator::bind(
+        "127.0.0.1:0",
+        CoordinatorConfig {
+            heartbeat_timeout: Duration::from_millis(heartbeat_ms),
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+/// Host `n` single-slot workers on threads against `coordinator`.
+fn spawn_workers(
+    coordinator: &RemoteCoordinator,
+    n: usize,
+) -> Vec<JoinHandle<Result<()>>> {
+    let addr = coordinator.local_addr().to_string();
+    (0..n)
+        .map(|i| {
+            let config = WorkerConfig::new(addr.clone())
+                .name(format!("w{i}"))
+                .slots(1);
+            std::thread::spawn(move || run_worker(config))
+        })
+        .collect()
+}
+
+fn synth_tasks(n: usize) -> Vec<TaskSpec> {
+    (0..n)
+        .map(|i| TaskSpec {
+            task_id: i + 1,
+            work: TaskWork::Synthetic {
+                startup: Duration::from_micros(200),
+                per_item: Duration::from_micros(100),
+                items: 2,
+                launches: 1,
+            },
+        })
+        .collect()
+}
+
+fn wordcount_opts(input: &PathBuf, output: &PathBuf, pid: u32) -> Options {
+    Options::new(input, output, "wordcount")
+        .np(4)
+        .reducer("wordcount-reducer")
+        .pid(pid)
+}
+
+fn wordcount_apps() -> Apps {
+    Apps {
+        mapper: llmapreduce::apps::registry::resolve_mapper("wordcount")
+            .unwrap(),
+        reducer: Some(
+            llmapreduce::apps::registry::resolve_reducer(
+                "wordcount-reducer",
+            )
+            .unwrap(),
+        ),
+    }
+}
+
+#[test]
+fn remote_engine_runs_jobs_with_worker_attribution() {
+    let coordinator = bind_coordinator(3000);
+    let workers = spawn_workers(&coordinator, 2);
+    coordinator
+        .wait_for_workers(2, Duration::from_secs(10))
+        .unwrap();
+    let report = coordinator
+        .run(JobSpec::new("synthetic", synth_tasks(6)))
+        .unwrap();
+    assert_eq!(report.tasks.len(), 6);
+    assert_eq!(report.slots, 2, "width = sum of worker slots");
+    for t in &report.tasks {
+        let w = t.worker.as_deref().expect("remote tasks name a worker");
+        assert!(w == "w0" || w == "w1", "{w}");
+        assert_eq!(t.reassigned, 0);
+    }
+    // Both single-slot workers really shared the job.
+    let names: std::collections::HashSet<_> = report
+        .tasks
+        .iter()
+        .map(|t| t.worker.clone().unwrap())
+        .collect();
+    assert_eq!(names.len(), 2, "placement spreads over equal workers");
+    drop(coordinator);
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+}
+
+#[test]
+fn wordcount_byte_identical_local_vs_remote() {
+    let root = tmp("wc");
+    let input = root.join("input");
+    write_corpus(&input, 8);
+
+    let local_out = root.join("out-local");
+    let eng = LocalEngine::new(2);
+    let local = run(
+        &wordcount_opts(&input, &local_out, 92001).workdir(&root),
+        &wordcount_apps(),
+        &eng,
+    )
+    .unwrap();
+
+    let remote_out = root.join("out-remote");
+    let coordinator = bind_coordinator(3000);
+    let workers = spawn_workers(&coordinator, 2);
+    coordinator
+        .wait_for_workers(2, Duration::from_secs(10))
+        .unwrap();
+    let remote = run(
+        &wordcount_opts(&input, &remote_out, 92002).workdir(&root),
+        &wordcount_apps(),
+        &coordinator,
+    )
+    .unwrap();
+
+    let local_bytes =
+        fs::read(local.redout_path.as_ref().unwrap()).unwrap();
+    let remote_bytes =
+        fs::read(remote.redout_path.as_ref().unwrap()).unwrap();
+    assert!(!local_bytes.is_empty());
+    assert_eq!(
+        local_bytes, remote_bytes,
+        "remote wordcount must be byte-identical to local"
+    );
+    drop(coordinator);
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+}
+
+#[test]
+fn overlapped_wordcount_byte_identical_local_vs_remote() {
+    let root = tmp("overlap");
+    let input = root.join("input");
+    write_corpus(&input, 8);
+
+    let eng = LocalEngine::new(2);
+    let local = run(
+        &wordcount_opts(&input, &root.join("out-local"), 92011)
+            .overlap(true)
+            .workdir(&root),
+        &wordcount_apps(),
+        &eng,
+    )
+    .unwrap();
+    assert!(local.overlapped, "wordcount reducer supports partials");
+
+    let coordinator = bind_coordinator(3000);
+    let workers = spawn_workers(&coordinator, 3);
+    coordinator
+        .wait_for_workers(3, Duration::from_secs(10))
+        .unwrap();
+    let remote = run(
+        &wordcount_opts(&input, &root.join("out-remote"), 92012)
+            .overlap(true)
+            .workdir(&root),
+        &wordcount_apps(),
+        &coordinator,
+    )
+    .unwrap();
+    assert!(remote.overlapped);
+    assert_eq!(
+        remote.partials.as_ref().unwrap().tasks.len(),
+        4,
+        "one shipped partial-reduce per mapper task"
+    );
+    assert_eq!(
+        fs::read(local.redout_path.as_ref().unwrap()).unwrap(),
+        fs::read(remote.redout_path.as_ref().unwrap()).unwrap(),
+        "overlapped remote output must match overlapped local output"
+    );
+    drop(coordinator);
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+}
+
+#[test]
+fn nested_multilevel_byte_identical_local_vs_remote() {
+    let root = tmp("nested");
+    let input = root.join("input");
+    for b in 0..3 {
+        let d = input.join(format!("branch-{b}"));
+        write_corpus(&d, 3 + b);
+    }
+
+    let mk_opts = |out: &str, pid: u32| {
+        Options::new(&input, root.join(out), "wordcount")
+            .np(2)
+            .reducer("wordcount-reducer")
+            .workdir(&root)
+            .pid(pid)
+    };
+    let outer = llmapreduce::apps::registry::resolve_reducer(
+        "wordcount-reducer",
+    )
+    .unwrap();
+
+    let eng = LocalEngine::new(3);
+    let local = run_nested(
+        &mk_opts("out-local", 92021),
+        &wordcount_apps(),
+        Some(outer.clone()),
+        &eng,
+    )
+    .unwrap();
+
+    let coordinator = bind_coordinator(3000);
+    let workers = spawn_workers(&coordinator, 3);
+    coordinator
+        .wait_for_workers(3, Duration::from_secs(10))
+        .unwrap();
+    let remote = run_nested(
+        &mk_opts("out-remote", 92022),
+        &wordcount_apps(),
+        Some(outer),
+        &coordinator,
+    )
+    .unwrap();
+
+    let local_out = local.final_out.expect("outer reducer ran");
+    let remote_out = remote.final_out.expect("outer reducer ran");
+    assert_eq!(
+        fs::read(&local_out).unwrap(),
+        fs::read(&remote_out).unwrap(),
+        "multilevel fan-out over the network must merge identically"
+    );
+    drop(coordinator);
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+}
+
+/// Satellite: kill one of three workers mid-job; the pipeline still
+/// completes with correct output and the report shows the reassignment.
+/// Deterministic: the doomed worker drops its connection cold upon
+/// receiving its first assignment (which it never executes), and with
+/// three idle single-slot workers the least-loaded placement guarantees
+/// it receives one of the first three tasks.
+#[test]
+fn killing_a_worker_mid_job_reassigns_its_tasks() {
+    let root = tmp("kill");
+    let input = root.join("input");
+    write_corpus(&input, 12);
+
+    let coordinator = bind_coordinator(3000);
+    let addr = coordinator.local_addr().to_string();
+    let survivors = spawn_workers(&coordinator, 2); // w0, w1
+    let doomed = {
+        let config = WorkerConfig::new(addr)
+            .name("doomed")
+            .slots(1)
+            .fail_after(1);
+        std::thread::spawn(move || run_worker(config))
+    };
+    coordinator
+        .wait_for_workers(3, Duration::from_secs(10))
+        .unwrap();
+
+    let opts = Options::new(&input, root.join("out"), "wordcount")
+        .np(6)
+        .reducer("wordcount-reducer")
+        .workdir(&root)
+        .pid(92031);
+    let remote = run(&opts, &wordcount_apps(), &coordinator).unwrap();
+
+    // Correctness: identical to a local run of the same options.
+    let eng = LocalEngine::new(2);
+    let local = run(
+        &Options::new(&input, root.join("out-local"), "wordcount")
+            .np(6)
+            .reducer("wordcount-reducer")
+            .workdir(&root)
+            .pid(92032),
+        &wordcount_apps(),
+        &eng,
+    )
+    .unwrap();
+    assert_eq!(
+        fs::read(local.redout_path.as_ref().unwrap()).unwrap(),
+        fs::read(remote.redout_path.as_ref().unwrap()).unwrap(),
+        "output must survive the worker loss unchanged"
+    );
+
+    // The report shows the reassignment: the doomed worker completed
+    // nothing, and at least one task records its extra trip.
+    let reassigned: usize =
+        remote.map.tasks.iter().map(|t| t.reassigned).sum();
+    assert!(reassigned >= 1, "one task was shipped to the dead worker");
+    for t in &remote.map.tasks {
+        assert_ne!(
+            t.worker.as_deref(),
+            Some("doomed"),
+            "dead workers complete nothing"
+        );
+    }
+
+    doomed.join().unwrap().unwrap();
+    drop(coordinator);
+    for w in survivors {
+        w.join().unwrap().unwrap();
+    }
+}
+
+/// A worker that registers but never heartbeats (a wedged machine, not
+/// a dropped connection) is declared dead after the lapse and its task
+/// reassigned to a surviving worker.
+#[test]
+fn heartbeat_lapse_triggers_reassignment() {
+    use llmapreduce::scheduler::remote::protocol::{
+        Message, PROTOCOL_VERSION,
+    };
+    use llmapreduce::scheduler::remote::transport::split;
+
+    // Lapse tight enough to keep the test fast, loose enough that the
+    // zombie cannot be swept before the job is even submitted.
+    let coordinator = bind_coordinator(1000);
+    let addr = coordinator.local_addr();
+
+    // Hand-rolled zombie: registers with one slot, then goes silent.
+    let stream = std::net::TcpStream::connect(addr).unwrap();
+    let (mut reader, mut writer) = split(stream).unwrap();
+    writer
+        .send(&Message::Register {
+            name: "zombie".into(),
+            slots: 1,
+            version: PROTOCOL_VERSION,
+        })
+        .unwrap();
+    assert!(matches!(
+        reader.recv().unwrap(),
+        Some(Message::Registered { .. })
+    ));
+
+    // The real worker beacons well under the lapse so only the zombie
+    // gets swept.
+    let workers = vec![{
+        let mut config = WorkerConfig::new(
+            coordinator.local_addr().to_string(),
+        )
+        .name("w0")
+        .slots(1);
+        config.heartbeat_interval = Duration::from_millis(50);
+        std::thread::spawn(move || run_worker(config))
+    }];
+    coordinator
+        .wait_for_workers(2, Duration::from_secs(10))
+        .unwrap();
+
+    // Two tasks: spread gives the zombie one; it never runs it.
+    let report = coordinator
+        .run(JobSpec::new("lapse", synth_tasks(2)))
+        .unwrap();
+    assert_eq!(report.tasks.len(), 2);
+    let reassigned: usize =
+        report.tasks.iter().map(|t| t.reassigned).sum();
+    assert!(reassigned >= 1, "zombie's task must be reassigned");
+    for t in &report.tasks {
+        assert_eq!(t.worker.as_deref(), Some("w0"));
+    }
+    drop(coordinator);
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+}
+
+/// Losing the entire fleet must fail the job with a clear error, not
+/// hang `wait()` forever on capacity that never returns.
+#[test]
+fn losing_every_worker_fails_live_jobs_instead_of_hanging() {
+    let coordinator = bind_coordinator(3000);
+    let addr = coordinator.local_addr().to_string();
+    let doomed = {
+        let config = WorkerConfig::new(addr)
+            .name("only-and-doomed")
+            .slots(1)
+            .fail_after(1);
+        std::thread::spawn(move || run_worker(config))
+    };
+    coordinator
+        .wait_for_workers(1, Duration::from_secs(10))
+        .unwrap();
+    let err = coordinator
+        .run(JobSpec::new("stranded", synth_tasks(3)))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("all workers lost"), "{err}");
+    doomed.join().unwrap().unwrap();
+}
+
+/// `--exclusive` gives a task a whole worker, like the simulator's
+/// whole-node charge: a 2-slot worker runs exclusive tasks one at a
+/// time.
+#[test]
+fn exclusive_tasks_occupy_a_whole_worker() {
+    let coordinator = bind_coordinator(3000);
+    let addr = coordinator.local_addr().to_string();
+    let worker = {
+        let config =
+            WorkerConfig::new(addr).name("wide").slots(2);
+        std::thread::spawn(move || run_worker(config))
+    };
+    coordinator
+        .wait_for_workers(1, Duration::from_secs(10))
+        .unwrap();
+    let report = coordinator
+        .run(JobSpec::new("excl", synth_tasks(4)).exclusive(true))
+        .unwrap();
+    assert_eq!(report.tasks.len(), 4);
+    // Whole-worker charge serializes the tasks: no two overlap.
+    let mut intervals: Vec<_> = report
+        .tasks
+        .iter()
+        .map(|t| (t.started_at, t.finished_at))
+        .collect();
+    intervals.sort();
+    for w in intervals.windows(2) {
+        assert!(
+            w[0].1 <= w[1].0 + Duration::from_millis(5),
+            "exclusive tasks must not share the worker: {intervals:?}"
+        );
+    }
+    drop(coordinator);
+    worker.join().unwrap().unwrap();
+}
+
+#[test]
+fn unresolvable_app_fails_the_job_cleanly() {
+    let root = tmp("unresolvable");
+    let input = root.join("input");
+    write_corpus(&input, 2);
+    let coordinator = bind_coordinator(3000);
+    let workers = spawn_workers(&coordinator, 1);
+    coordinator
+        .wait_for_workers(1, Duration::from_secs(10))
+        .unwrap();
+    let opts = Options::new(
+        &input,
+        root.join("out"),
+        "definitely-not-a-real-binary-xyz",
+    )
+    .workdir(&root)
+    .pid(92041);
+    let err = run(&opts, &wordcount_apps_with_broken_mapper(), &coordinator)
+        .unwrap_err()
+        .to_string();
+    assert!(
+        err.contains("definitely-not-a-real-binary-xyz")
+            || err.contains("spawn failed"),
+        "{err}"
+    );
+    drop(coordinator);
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+}
+
+fn wordcount_apps_with_broken_mapper() -> Apps {
+    Apps {
+        mapper: llmapreduce::apps::registry::resolve_mapper(
+            "definitely-not-a-real-binary-xyz",
+        )
+        .unwrap(),
+        reducer: None,
+    }
+}
+
+/// Process-level smoke: real `llmapreduce worker` subprocesses against
+/// an in-process coordinator, one of them dying mid-job via the chaos
+/// knob — the closest thing to `kill -9` CI allows deterministically.
+#[test]
+fn worker_processes_end_to_end_with_one_killed() {
+    let bin = env!("CARGO_BIN_EXE_llmapreduce");
+    let root = tmp("procs");
+    let input = root.join("input");
+    write_corpus(&input, 10);
+
+    let coordinator = bind_coordinator(3000);
+    let addr = coordinator.local_addr().to_string();
+    let mut children = vec![
+        std::process::Command::new(bin)
+            .args(["worker", &format!("--connect={addr}"), "--name=p0"])
+            .spawn()
+            .unwrap(),
+        std::process::Command::new(bin)
+            .args(["worker", &format!("--connect={addr}"), "--name=p1"])
+            .spawn()
+            .unwrap(),
+        std::process::Command::new(bin)
+            .args([
+                "worker",
+                &format!("--connect={addr}"),
+                "--name=p-doomed",
+                "--fail-after=1",
+            ])
+            .spawn()
+            .unwrap(),
+    ];
+    coordinator
+        .wait_for_workers(3, Duration::from_secs(30))
+        .unwrap();
+
+    let opts = Options::new(&input, root.join("out"), "wordcount")
+        .np(5)
+        .reducer("wordcount-reducer")
+        .workdir(&root)
+        .pid(92051);
+    let remote = run(&opts, &wordcount_apps(), &coordinator).unwrap();
+    let reassigned: usize =
+        remote.map.tasks.iter().map(|t| t.reassigned).sum();
+    assert!(reassigned >= 1, "the doomed process dropped one task");
+    let merged =
+        fs::read_to_string(remote.redout_path.as_ref().unwrap()).unwrap();
+    assert!(merged.contains("alpha"), "{merged}");
+
+    // Coordinator shutdown tells the survivors to exit; reap everyone.
+    drop(coordinator);
+    for child in &mut children {
+        let deadline =
+            std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            match child.try_wait().unwrap() {
+                Some(_) => break,
+                None if std::time::Instant::now() > deadline => {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    break;
+                }
+                None => std::thread::sleep(Duration::from_millis(50)),
+            }
+        }
+    }
+}
