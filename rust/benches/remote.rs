@@ -7,6 +7,11 @@
 //! overhead — assignment round-trip minus worker-measured execution —
 //! next to compute time.  Every remote run must stay byte-identical to
 //! the local baseline; the bench is also a correctness gate.
+//!
+//! A trailing SPMD section re-runs the job batch-packed (per-task N=1
+//! vs ganged N=8) over a two-worker fleet: fewer, larger assignments
+//! amortize shipping the same way ganged launches amortize app
+//! start-up, and the merged output must stay byte-identical.
 
 use std::fs;
 use std::path::PathBuf;
@@ -135,6 +140,57 @@ fn main() -> Result<()> {
             w.join().expect("worker thread").expect("worker clean exit");
         }
     }
+
+    // SPMD ganging over the fleet: the same job batch-packed at N=1
+    // (per-task) and N=8 (ganged) on two workers.  The planner ships
+    // spmd-mode tasks over the wire; the rows join the byte-identity
+    // gate below like every other configuration.
+    {
+        let coordinator = RemoteCoordinator::bind(
+            "127.0.0.1:0",
+            CoordinatorConfig::default(),
+        )?;
+        let addr = coordinator.local_addr().to_string();
+        let workers: Vec<_> = (0..2)
+            .map(|i| {
+                let config = WorkerConfig::new(addr.clone())
+                    .name(format!("g{i}"))
+                    .slots(1);
+                std::thread::spawn(move || run_worker(config))
+            })
+            .collect();
+        coordinator.wait_for_workers(2, Duration::from_secs(30))?;
+        for (label, n) in [
+            ("remote spmd per-task (2 workers)", 1usize),
+            ("remote spmd ganged N=8 (2 workers)", 8),
+        ] {
+            let t0 = Instant::now();
+            let report = run(
+                &opts(
+                    &input,
+                    root.join(format!("out-ganged-{n}")),
+                    84200 + n as u32,
+                )
+                .items_per_task(n)
+                .workdir(&root),
+                &apps()?,
+                &coordinator,
+            )?;
+            let elapsed = t0.elapsed();
+            let launches: usize =
+                report.map.tasks.iter().map(|t| t.launches).sum();
+            println!(
+                "{label}: {launches} launches over {} map tasks",
+                report.map.tasks.len()
+            );
+            rows.push(summarize(label, elapsed, &report));
+        }
+        drop(coordinator);
+        for w in workers {
+            w.join().expect("worker thread").expect("worker clean exit");
+        }
+    }
+    println!();
 
     let baseline = rows[0].bytes.clone();
     for r in &rows {

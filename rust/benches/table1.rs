@@ -5,10 +5,19 @@
 //! word-count app (spin = JVM boot) over 21 files / 3 tasks.  BLOCK vs
 //! MIMO speed-up is the reported number; the paper's values are 2.41x
 //! (MATLAB) and 2.85x (Java).
+//!
+//! The trailing SPMD section is the launch-overhead-amortization
+//! comparison (per-task vs ganged at N ∈ {1, 4, 16, 64}): virtual-time
+//! numbers are written to `BENCH_spmd.json` at the repo root, with a
+//! measured wall-clock sweep printed alongside.
 
 use std::time::Duration;
 
-use llmapreduce::bench::experiments::{table1_java, table1_matlab};
+use llmapreduce::apps::CostHint;
+use llmapreduce::bench::experiments::{
+    spmd_amortization_measured, spmd_amortization_virtual,
+    spmd_bench_json, table1_java, table1_matlab,
+};
 use llmapreduce::prelude::*;
 use llmapreduce::workload::images::generate_images;
 
@@ -57,4 +66,53 @@ fn main() {
             r.block.elapsed, r.mimo.elapsed, r.speedup()
         );
     }
+
+    println!("\nSPMD — launch-overhead amortization, per-task vs ganged\n");
+    let gangs = [1usize, 4, 16, 64];
+    // Fixed virtual costs keep the committed artifact byte-reproducible.
+    let hint = CostHint {
+        startup: Duration::from_millis(128),
+        per_item: Duration::from_millis(10),
+    };
+    let virt = spmd_amortization_virtual(64, hint, &gangs).unwrap();
+    let measured = spmd_amortization_measured(
+        &tmp("spmd"),
+        Duration::from_millis(5),
+        &gangs,
+    )
+    .unwrap();
+    for (v, m) in virt.iter().zip(&measured) {
+        println!(
+            "{:>8}  N={:<3} launches={:<3} per-item overhead: \
+             virtual {:>9?}  measured {:>9?}",
+            v.mode,
+            v.items_per_task,
+            v.launches,
+            v.per_item_launch_overhead,
+            m.per_item_launch_overhead
+        );
+    }
+    assert!(
+        virt.windows(2).all(|w| {
+            w[1].per_item_launch_overhead < w[0].per_item_launch_overhead
+        }),
+        "per-item launch overhead must fall as the gang grows"
+    );
+    let doc = spmd_bench_json("sim-virtual", 64, hint, &virt);
+    let path = bench_output_path("BENCH_spmd.json");
+    std::fs::write(&path, doc.to_string_pretty()).unwrap();
+    println!("\nBENCH_spmd.json -> {}", path.display());
+}
+
+/// Write the artifact at the repo root when running inside the checkout
+/// (ROADMAP.md marks it); fall back to the current directory.
+fn bench_output_path(name: &str) -> std::path::PathBuf {
+    let cwd = std::env::current_dir()
+        .unwrap_or_else(|_| std::path::PathBuf::from("."));
+    for dir in cwd.ancestors() {
+        if dir.join("ROADMAP.md").is_file() {
+            return dir.join(name);
+        }
+    }
+    cwd.join(name)
 }

@@ -123,6 +123,15 @@ impl MapApp for CommandMimoApp {
         &self.argv[0]
     }
 
+    /// `mimo:`-prefixed argv (cf. [`CommandStreamApp::wire_spec`]): the
+    /// default would be the bare program name, which a worker daemon
+    /// resolves to a per-item [`CommandApp`] — wrong launch protocol
+    /// *and* dropped arguments.  The registry resolves the prefix back
+    /// to a `CommandMimoApp` with a worker-local list directory.
+    fn wire_spec(&self) -> String {
+        format!("mimo:{}", self.argv.join(" "))
+    }
+
     fn startup(&self) -> Result<Box<dyn MapInstance>> {
         Ok(Box::new(CommandMimoInstance {
             argv: self.argv.clone(),
@@ -185,6 +194,166 @@ impl Drop for CommandMimoInstance {
     fn drop(&mut self) {
         if let Err(e) = self.flush() {
             eprintln!("command mimo flush failed: {e}");
+        }
+    }
+}
+
+/// SPMD external mapper: the program is spawned **once per batch** and
+/// consumes tab-separated `input<TAB>output` lines on **stdin** until
+/// EOF — the item-stream protocol (`--spmd`, DESIGN.md §7).  The spawn
+/// happens in [`MapApp::startup`] so the launch cost lands where every
+/// engine measures it, and the persistent child then eats the whole
+/// batch in one [`MapInstance::run_batch`] call.  Exit status 0 means
+/// every item succeeded; anything else fails the batch (and the task),
+/// which is exactly the per-item path's failure granularity after
+/// reassignment re-runs the batch.
+pub struct CommandStreamApp {
+    argv: Vec<String>,
+}
+
+impl CommandStreamApp {
+    /// `argv`: program + fixed leading arguments.  The program must loop
+    /// `while read -r input output; do ...; done` over stdin (or the
+    /// equivalent), exiting non-zero on the first failed item.
+    pub fn new(argv: Vec<String>) -> Result<Arc<Self>> {
+        if argv.is_empty() {
+            return Err(Error::opt("command app needs a program"));
+        }
+        Ok(Arc::new(CommandStreamApp { argv }))
+    }
+}
+
+fn spawn_stream(argv: &[String]) -> Result<std::process::Child> {
+    let (prog, args) = argv.split_first().ok_or_else(|| Error::App {
+        app: "command-stream".into(),
+        input: PathBuf::new(),
+        reason: "empty argv".into(),
+    })?;
+    Command::new(prog)
+        .args(args)
+        .stdin(std::process::Stdio::piped())
+        .spawn()
+        .map_err(|e| Error::App {
+            app: prog.clone(),
+            input: PathBuf::new(),
+            reason: format!("spawn failed: {e}"),
+        })
+}
+
+impl MapApp for CommandStreamApp {
+    fn name(&self) -> &str {
+        &self.argv[0]
+    }
+
+    /// `stream:`-prefixed argv so a worker daemon resolves the *same*
+    /// launch protocol: a bare argv would round-trip to a per-item
+    /// [`CommandApp`] and silently change the app identity of a ganged
+    /// remote job (see [`crate::apps::registry::resolve_mapper`]).
+    fn wire_spec(&self) -> String {
+        format!("stream:{}", self.argv.join(" "))
+    }
+
+    fn startup(&self) -> Result<Box<dyn MapInstance>> {
+        // Spawn here: the child process launch is the startup cost the
+        // SPMD morph amortizes, so it must be timed as startup.
+        Ok(Box::new(CommandStreamInstance {
+            argv: self.argv.clone(),
+            child: Some(spawn_stream(&self.argv)?),
+        }))
+    }
+}
+
+/// One spawned stream consumer.  The pre-spawned child serves the first
+/// batch (or first per-item call); later calls spawn fresh — instances
+/// normally live for exactly one batch, so the respawn path only runs
+/// when a caller drives the instance beyond the task contract.
+struct CommandStreamInstance {
+    argv: Vec<String>,
+    child: Option<std::process::Child>,
+}
+
+impl CommandStreamInstance {
+    fn stream(&mut self, pairs: &[(PathBuf, PathBuf)]) -> Result<()> {
+        if pairs.is_empty() {
+            return Ok(());
+        }
+        let mut child = match self.child.take() {
+            Some(c) => c,
+            None => spawn_stream(&self.argv)?,
+        };
+        let prog = self.argv[0].clone();
+        let write_items = |child: &mut std::process::Child| -> Result<()> {
+            use std::io::Write;
+            let mut stdin =
+                std::io::BufWriter::new(child.stdin.take().ok_or_else(
+                    || Error::App {
+                        app: prog.clone(),
+                        input: PathBuf::new(),
+                        reason: "child stdin unavailable".into(),
+                    },
+                )?);
+            for (input, output) in pairs {
+                writeln!(
+                    stdin,
+                    "{}\t{}",
+                    input.display(),
+                    output.display()
+                )
+                .map_err(|e| Error::App {
+                    app: prog.clone(),
+                    input: input.clone(),
+                    reason: format!("item stream write: {e}"),
+                })?;
+            }
+            stdin.flush().map_err(|e| Error::App {
+                app: prog.clone(),
+                input: PathBuf::new(),
+                reason: format!("item stream flush: {e}"),
+            })?;
+            Ok(())
+        };
+        let written = write_items(&mut child);
+        // stdin dropped above => EOF => a well-behaved consumer exits.
+        let status = child.wait().map_err(|e| Error::App {
+            app: prog.clone(),
+            input: PathBuf::new(),
+            reason: format!("wait failed: {e}"),
+        })?;
+        // A failing child both exits non-zero *and* breaks the pipe the
+        // writer is still filling; the exit status is the root cause, so
+        // report it ahead of any (broken-pipe) write error.
+        if !status.success() {
+            return Err(Error::App {
+                app: prog,
+                input: PathBuf::new(),
+                reason: format!("exit status {status}"),
+            });
+        }
+        written
+    }
+}
+
+impl MapInstance for CommandStreamInstance {
+    /// Per-item fallback: stream a one-item batch.  Unmodified per-item
+    /// binaries should use [`CommandApp`] instead; this keeps a
+    /// stream-protocol program correct even when something drives the
+    /// instance item by item.
+    fn process(&mut self, input: &Path, output: &Path) -> Result<()> {
+        self.stream(&[(input.to_path_buf(), output.to_path_buf())])
+    }
+
+    fn run_batch(&mut self, pairs: &[(PathBuf, PathBuf)]) -> Result<()> {
+        self.stream(pairs)
+    }
+}
+
+impl Drop for CommandStreamInstance {
+    fn drop(&mut self) {
+        // A pre-spawned child that never saw a batch: close its stdin
+        // (EOF) and reap it so nothing leaks.
+        if let Some(mut child) = self.child.take() {
+            drop(child.stdin.take());
+            let _ = child.wait();
         }
     }
 }
@@ -329,6 +498,128 @@ mod tests {
         // Spawned exactly once.
         let inv = fs::read_to_string(d.join("invocations")).unwrap();
         assert_eq!(inv.lines().count(), 1);
+    }
+
+    /// A stream mapper honouring the stdin item-stream protocol: one
+    /// `input<TAB>output` line per item, EOF ends the batch.  Logs every
+    /// spawn so tests can count launches.
+    fn write_stream_script(dir: &Path) -> PathBuf {
+        let p = dir.join("stream.sh");
+        fs::write(
+            &p,
+            format!(
+                "#!/bin/sh\necho run >> {}/stream-invocations\n\
+                 while read -r i o; do\n\
+                 cp \"$i\" \"$o\" || exit 1\n\
+                 done\n",
+                dir.display()
+            ),
+        )
+        .unwrap();
+        make_exec(&p);
+        p
+    }
+
+    #[test]
+    fn stream_command_consumes_batch_in_one_spawn() {
+        let d = tmp("stream");
+        let script = write_stream_script(&d);
+        let app =
+            CommandStreamApp::new(vec![script.display().to_string()])
+                .unwrap();
+        let pairs: Vec<_> = (0..4)
+            .map(|i| {
+                let inp = d.join(format!("s{i}.txt"));
+                fs::write(&inp, format!("item-{i}")).unwrap();
+                (inp, d.join(format!("s{i}.txt.out")))
+            })
+            .collect();
+        let mut inst = app.startup().unwrap();
+        inst.run_batch(&pairs).unwrap();
+        for (i, o) in &pairs {
+            assert_eq!(
+                fs::read_to_string(o).unwrap(),
+                fs::read_to_string(i).unwrap()
+            );
+        }
+        let inv =
+            fs::read_to_string(d.join("stream-invocations")).unwrap();
+        assert_eq!(inv.lines().count(), 1, "one spawn for the batch");
+    }
+
+    #[test]
+    fn stream_command_per_item_fallback_still_works() {
+        let d = tmp("stream-item");
+        let script = write_stream_script(&d);
+        let app =
+            CommandStreamApp::new(vec![script.display().to_string()])
+                .unwrap();
+        let inp = d.join("one.txt");
+        fs::write(&inp, "solo").unwrap();
+        let out = d.join("one.txt.out");
+        let mut inst = app.startup().unwrap();
+        inst.process(&inp, &out).unwrap();
+        assert_eq!(fs::read_to_string(&out).unwrap(), "solo");
+        // A second per-item call respawns (the instance outlived its
+        // batch contract) and still works.
+        let inp2 = d.join("two.txt");
+        fs::write(&inp2, "again").unwrap();
+        let out2 = d.join("two.txt.out");
+        inst.process(&inp2, &out2).unwrap();
+        assert_eq!(fs::read_to_string(&out2).unwrap(), "again");
+    }
+
+    #[test]
+    fn stream_command_failure_fails_the_batch() {
+        let d = tmp("stream-fail");
+        let p = d.join("failing.sh");
+        fs::write(&p, "#!/bin/sh\nread -r line\nexit 7\n").unwrap();
+        make_exec(&p);
+        let app =
+            CommandStreamApp::new(vec![p.display().to_string()]).unwrap();
+        let pairs = vec![
+            (d.join("a"), d.join("a.out")),
+            (d.join("b"), d.join("b.out")),
+        ];
+        let mut inst = app.startup().unwrap();
+        let err = inst.run_batch(&pairs).unwrap_err().to_string();
+        assert!(err.contains("exit status"), "{err}");
+    }
+
+    #[test]
+    fn stream_empty_batch_is_noop_and_drop_reaps_child() {
+        let d = tmp("stream-empty");
+        let script = write_stream_script(&d);
+        let app =
+            CommandStreamApp::new(vec![script.display().to_string()])
+                .unwrap();
+        {
+            let mut inst = app.startup().unwrap();
+            inst.run_batch(&[]).unwrap();
+        } // drop closes stdin; child exits on EOF and is reaped
+        assert!(
+            fs::read_to_string(d.join("stream-invocations"))
+                .unwrap()
+                .lines()
+                .count()
+                == 1
+        );
+    }
+
+    #[test]
+    fn batched_wire_specs_carry_protocol_prefix() {
+        let s = CommandStreamApp::new(vec![
+            "prog".into(),
+            "ref.txt".into(),
+        ])
+        .unwrap();
+        assert_eq!(s.wire_spec(), "stream:prog ref.txt");
+        let m = CommandMimoApp::new(
+            vec!["prog".into(), "ref.txt".into()],
+            tmp("wire-lists"),
+        )
+        .unwrap();
+        assert_eq!(m.wire_spec(), "mimo:prog ref.txt");
     }
 
     #[test]

@@ -26,6 +26,7 @@ use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use crate::error::Result;
+use crate::options::AppType;
 
 /// Cost hints for the discrete-event simulator, used when a study runs in
 /// pure-timing mode (no real data).  Values come from calibration runs on
@@ -84,6 +85,26 @@ pub trait MapApp: Send + Sync {
 pub trait MapInstance {
     /// Process one (input, output) pair — the body of the paper's mapper.
     fn process(&mut self, input: &Path, output: &Path) -> Result<()>;
+
+    /// Consume a whole packed batch through this one persistent instance
+    /// — the SPMD morph's streaming entry point (`--spmd`).  The default
+    /// simply drives [`MapInstance::process`] per pair, so every app is
+    /// batch-capable for free and ganged execution is observationally
+    /// identical to per-item execution.  Apps with a cheaper bulk path
+    /// (a child process consuming an item stream on stdin, a shared
+    /// decode buffer) override for true instance reuse; overrides must
+    /// process pairs **in order** and fail the whole batch on the first
+    /// error, exactly like the default, so retries and byte-identity
+    /// guarantees hold on every engine.
+    fn run_batch(
+        &mut self,
+        pairs: &[(PathBuf, PathBuf)],
+    ) -> Result<()> {
+        for (input, output) in pairs {
+            self.process(input, output)?;
+        }
+        Ok(())
+    }
 }
 
 /// A reduce application: merges the map output directory into one file
@@ -142,39 +163,58 @@ pub trait ReduceApp: Send + Sync {
     }
 }
 
-/// Blanket helper: run a full SISO or MIMO task over an instance-producing
-/// app, returning (startup_total, compute_total, launches).
-/// Shared by the local engine and the executing simulator.
+/// Blanket helper: run a full SISO, MIMO, or SPMD task over an
+/// instance-producing app, returning (startup_total, compute_total,
+/// launches).  Shared by the local engine, the executing simulator, and
+/// the remote worker daemon.
 pub fn run_map_task(
     app: &dyn MapApp,
     pairs: &[(std::path::PathBuf, std::path::PathBuf)],
-    mimo: bool,
+    mode: AppType,
 ) -> Result<(Duration, Duration, usize)> {
     let mut startup_total = Duration::ZERO;
     let mut compute_total = Duration::ZERO;
     let mut launches = 0usize;
 
-    if mimo {
-        if pairs.is_empty() {
-            return Ok((Duration::ZERO, Duration::ZERO, 0));
+    match mode {
+        AppType::Siso => {
+            for (input, output) in pairs {
+                let t0 = std::time::Instant::now();
+                let mut inst = app.startup()?;
+                startup_total += t0.elapsed();
+                launches += 1;
+                let t1 = std::time::Instant::now();
+                inst.process(input, output)?;
+                compute_total += t1.elapsed();
+            }
         }
-        let t0 = std::time::Instant::now();
-        let mut inst = app.startup()?;
-        startup_total += t0.elapsed();
-        launches += 1;
-        for (input, output) in pairs {
-            let t1 = std::time::Instant::now();
-            inst.process(input, output)?;
-            compute_total += t1.elapsed();
+        AppType::Mimo => {
+            if pairs.is_empty() {
+                return Ok((Duration::ZERO, Duration::ZERO, 0));
+            }
+            let t0 = std::time::Instant::now();
+            let mut inst = app.startup()?;
+            startup_total += t0.elapsed();
+            launches += 1;
+            for (input, output) in pairs {
+                let t1 = std::time::Instant::now();
+                inst.process(input, output)?;
+                compute_total += t1.elapsed();
+            }
         }
-    } else {
-        for (input, output) in pairs {
+        AppType::Spmd => {
+            // One persistent instance consumes the whole batch through
+            // the streaming entry point; the single `run_batch` call is
+            // the task's compute span.
+            if pairs.is_empty() {
+                return Ok((Duration::ZERO, Duration::ZERO, 0));
+            }
             let t0 = std::time::Instant::now();
             let mut inst = app.startup()?;
             startup_total += t0.elapsed();
             launches += 1;
             let t1 = std::time::Instant::now();
-            inst.process(input, output)?;
+            inst.run_batch(pairs)?;
             compute_total += t1.elapsed();
         }
     }
@@ -194,6 +234,8 @@ pub(crate) mod testutil {
     pub struct CountingApp {
         pub startups: Arc<AtomicUsize>,
         pub processed: Arc<AtomicUsize>,
+        /// `run_batch` invocations (SPMD path instrumentation).
+        pub batches: Arc<AtomicUsize>,
         /// Optional synthetic startup work to make timing visible.
         pub startup_spin: Duration,
         /// Fail processing of files whose name contains this marker.
@@ -205,6 +247,7 @@ pub(crate) mod testutil {
             CountingApp {
                 startups: Arc::new(AtomicUsize::new(0)),
                 processed: Arc::new(AtomicUsize::new(0)),
+                batches: Arc::new(AtomicUsize::new(0)),
                 startup_spin: Duration::ZERO,
                 poison: None,
             }
@@ -213,6 +256,7 @@ pub(crate) mod testutil {
 
     pub struct CountingInstance {
         processed: Arc<AtomicUsize>,
+        batches: Arc<AtomicUsize>,
         poison: Option<String>,
     }
 
@@ -231,6 +275,7 @@ pub(crate) mod testutil {
             self.startups.fetch_add(1, Ordering::SeqCst);
             Ok(Box::new(CountingInstance {
                 processed: self.processed.clone(),
+                batches: self.batches.clone(),
                 poison: self.poison.clone(),
             }))
         }
@@ -252,6 +297,20 @@ pub(crate) mod testutil {
                 |e| crate::error::Error::io(output.to_path_buf(), e),
             )?;
             self.processed.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        }
+
+        // Count batch entries, then defer to the per-item default — the
+        // instrumentation proves the SPMD path was taken without
+        // changing what gets written.
+        fn run_batch(
+            &mut self,
+            pairs: &[(PathBuf, PathBuf)],
+        ) -> Result<()> {
+            self.batches.fetch_add(1, Ordering::SeqCst);
+            for (input, output) in pairs {
+                self.process(input, output)?;
+            }
             Ok(())
         }
     }
@@ -318,7 +377,7 @@ mod tests {
         let d = tmp("siso");
         let app = CountingApp::new();
         let pairs = mk_pairs(&d, 5);
-        let (_s, _c, launches) = run_map_task(&app, &pairs, false).unwrap();
+        let (_s, _c, launches) = run_map_task(&app, &pairs, AppType::Siso).unwrap();
         assert_eq!(launches, 5);
         assert_eq!(app.startups.load(Ordering::SeqCst), 5);
         assert_eq!(app.processed.load(Ordering::SeqCst), 5);
@@ -329,16 +388,77 @@ mod tests {
         let d = tmp("mimo");
         let app = CountingApp::new();
         let pairs = mk_pairs(&d, 5);
-        let (_s, _c, launches) = run_map_task(&app, &pairs, true).unwrap();
+        let (_s, _c, launches) = run_map_task(&app, &pairs, AppType::Mimo).unwrap();
         assert_eq!(launches, 1);
         assert_eq!(app.startups.load(Ordering::SeqCst), 1);
         assert_eq!(app.processed.load(Ordering::SeqCst), 5);
     }
 
     #[test]
+    fn spmd_starts_once_and_takes_the_batch_path() {
+        let d = tmp("spmd");
+        let app = CountingApp::new();
+        let pairs = mk_pairs(&d, 5);
+        let (_s, _c, launches) =
+            run_map_task(&app, &pairs, AppType::Spmd).unwrap();
+        assert_eq!(launches, 1);
+        assert_eq!(app.startups.load(Ordering::SeqCst), 1);
+        assert_eq!(app.processed.load(Ordering::SeqCst), 5);
+        assert_eq!(
+            app.batches.load(Ordering::SeqCst),
+            1,
+            "spmd mode must go through run_batch"
+        );
+        for (_, out) in &pairs {
+            assert!(fs::read_to_string(out).unwrap().ends_with("#mapped\n"));
+        }
+    }
+
+    #[test]
+    fn spmd_empty_task_never_launches() {
+        let app = CountingApp::new();
+        let (_s, _c, launches) =
+            run_map_task(&app, &[], AppType::Spmd).unwrap();
+        assert_eq!(launches, 0);
+        assert_eq!(app.startups.load(Ordering::SeqCst), 0);
+        assert_eq!(app.batches.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn default_run_batch_matches_per_item_path() {
+        // An instance that never overrides run_batch still processes the
+        // whole batch, in order, via the default.
+        struct Plain(Vec<String>);
+        impl MapInstance for Plain {
+            fn process(&mut self, input: &Path, output: &Path) -> Result<()> {
+                self.0.push(input.display().to_string());
+                std::fs::write(output, b"x").map_err(|e| {
+                    crate::error::Error::io(output.to_path_buf(), e)
+                })
+            }
+        }
+        let d = tmp("default-batch");
+        let pairs: Vec<(PathBuf, PathBuf)> = (0..4)
+            .map(|i| {
+                let inp = d.join(format!("in{i}"));
+                fs::write(&inp, "d").unwrap();
+                (inp, d.join(format!("out{i}")))
+            })
+            .collect();
+        let mut inst = Plain(Vec::new());
+        inst.run_batch(&pairs).unwrap();
+        let order: Vec<String> =
+            pairs.iter().map(|(i, _)| i.display().to_string()).collect();
+        assert_eq!(inst.0, order, "default preserves item order");
+        for (_, out) in &pairs {
+            assert!(out.exists());
+        }
+    }
+
+    #[test]
     fn mimo_empty_task_never_launches() {
         let app = CountingApp::new();
-        let (_s, _c, launches) = run_map_task(&app, &[], true).unwrap();
+        let (_s, _c, launches) = run_map_task(&app, &[], AppType::Mimo).unwrap();
         assert_eq!(launches, 0);
         assert_eq!(app.startups.load(Ordering::SeqCst), 0);
     }
@@ -348,7 +468,7 @@ mod tests {
         let d = tmp("outputs");
         let app = CountingApp::new();
         let pairs = mk_pairs(&d, 3);
-        run_map_task(&app, &pairs, true).unwrap();
+        run_map_task(&app, &pairs, AppType::Mimo).unwrap();
         for (_, out) in &pairs {
             let text = fs::read_to_string(out).unwrap();
             assert!(text.ends_with("#mapped\n"));
@@ -361,8 +481,8 @@ mod tests {
         let mut app = CountingApp::new();
         app.startup_spin = Duration::from_millis(3);
         let pairs = mk_pairs(&d, 4);
-        let (siso_startup, _, _) = run_map_task(&app, &pairs, false).unwrap();
-        let (mimo_startup, _, _) = run_map_task(&app, &pairs, true).unwrap();
+        let (siso_startup, _, _) = run_map_task(&app, &pairs, AppType::Siso).unwrap();
+        let (mimo_startup, _, _) = run_map_task(&app, &pairs, AppType::Mimo).unwrap();
         // 4 launches vs 1: SISO startup must be several times larger.
         assert!(
             siso_startup > mimo_startup * 2,
@@ -376,7 +496,7 @@ mod tests {
         let mut app = CountingApp::new();
         app.poison = Some("f1".into());
         let pairs = mk_pairs(&d, 3);
-        let err = run_map_task(&app, &pairs, false).unwrap_err();
+        let err = run_map_task(&app, &pairs, AppType::Siso).unwrap_err();
         assert!(err.to_string().contains("poisoned"));
     }
 

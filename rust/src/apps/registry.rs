@@ -13,7 +13,9 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use crate::apps::command::{CommandApp, CommandReducer};
+use crate::apps::command::{
+    CommandApp, CommandMimoApp, CommandReducer, CommandStreamApp,
+};
 use crate::apps::image::ImageConvertApp;
 use crate::apps::matmul::{FrobeniusSumReducer, MatmulChainApp};
 use crate::apps::wordcount::{WordCountApp, WordCountReducer};
@@ -24,9 +26,26 @@ use crate::runtime::Manifest;
 /// Resolve a mapper spec: built-ins first, external command otherwise.
 ///
 /// Built-ins: `imageconvert`, `imagepipeline`, `matmulchain`,
-/// `wordcount[:ignorefile]`.  Anything else is split on whitespace and
-/// launched as an external command per file.
+/// `wordcount[:ignorefile]`.  Batched command protocols carry an
+/// explicit prefix so they survive the wire round-trip: `stream:<argv>`
+/// resolves to the stdin item-stream app and `mimo:<argv>` to the
+/// list-file app (the worker supplies a local list directory).  Anything
+/// else is split on whitespace and launched as an external command per
+/// file.
 pub fn resolve_mapper(spec: &str) -> Result<Arc<dyn MapApp>> {
+    if let Some(rest) = spec.strip_prefix("stream:") {
+        return Ok(CommandStreamApp::new(
+            rest.split_whitespace().map(str::to_string).collect(),
+        )? as Arc<dyn MapApp>);
+    }
+    if let Some(rest) = spec.strip_prefix("mimo:") {
+        let list_dir = std::env::temp_dir()
+            .join(format!("llmr-mimo-lists-{}", std::process::id()));
+        return Ok(CommandMimoApp::new(
+            rest.split_whitespace().map(str::to_string).collect(),
+            list_dir,
+        )? as Arc<dyn MapApp>);
+    }
     if spec == "imageconvert" {
         let m = Manifest::discover()?;
         return Ok(ImageConvertApp::new(&m)? as Arc<dyn MapApp>);
@@ -121,5 +140,26 @@ mod tests {
             let again = resolve_mapper(&app.wire_spec()).unwrap();
             assert_eq!(app.wire_spec(), again.wire_spec(), "{spec}");
         }
+    }
+
+    #[test]
+    fn batched_wire_specs_resolve_back_to_equivalent_apps() {
+        // SPMD ganging ships `stream:`/`mimo:` specs; the worker must
+        // land on the same protocol with the argv (incl. bound reference
+        // files) intact.
+        for spec in ["stream:./mapper.sh ref.txt", "mimo:cat"] {
+            let app = resolve_mapper(spec).unwrap();
+            assert_eq!(app.wire_spec(), spec, "argv survives in the spec");
+            let again = resolve_mapper(&app.wire_spec()).unwrap();
+            assert_eq!(app.wire_spec(), again.wire_spec(), "{spec}");
+        }
+    }
+
+    #[test]
+    fn stream_prefixed_command_name_is_not_misparsed() {
+        // A program literally named "streamer" stays a plain per-item
+        // command; only the "stream:" protocol prefix opts in.
+        let app = resolve_mapper("streamer").unwrap();
+        assert_eq!(app.wire_spec(), "streamer");
     }
 }

@@ -123,6 +123,7 @@ pub fn table2(params: TraceParams) -> Result<SpeedupResult> {
             match apptype {
                 AppType::Siso => "BLOCK",
                 AppType::Mimo => "MIMO",
+                AppType::Spmd => "SPMD",
             },
             params.ntasks,
             &report,
@@ -315,6 +316,160 @@ pub fn ablation_distribution(
     Ok(cells)
 }
 
+// ---------------------------------------------------------------------------
+// SPMD ganging: Table-1-style launch-overhead amortization
+// (persistent per-worker app instances over batch-packed tasks;
+// DESIGN.md §7).  Emitted as BENCH_spmd.json.
+// ---------------------------------------------------------------------------
+
+/// One cell of the SPMD amortization table.
+#[derive(Debug, Clone)]
+pub struct SpmdPoint {
+    /// `"per-task"` for the one-item-per-launch baseline (N=1),
+    /// `"ganged"` otherwise.
+    pub mode: String,
+    pub items_per_task: usize,
+    /// Total app launches across the job (= number of batches).
+    pub launches: usize,
+    pub makespan: Duration,
+    /// Launch cost charged to each item: launches × startup / items.
+    pub per_item_launch_overhead: Duration,
+}
+
+impl SpmdPoint {
+    fn label(items_per_task: usize) -> String {
+        if items_per_task == 1 { "per-task" } else { "ganged" }.to_string()
+    }
+}
+
+/// Virtual-time amortization sweep: `items` files batch-packed at each
+/// gang size, run serially on the pure-timing simulator with zero
+/// dispatch latency and zero jitter, so the makespan is exactly
+/// `launches × startup + items × per_item` and the emitted artifact is
+/// reproducible bit-for-bit on any machine.
+pub fn spmd_amortization_virtual(
+    items: usize,
+    hint: CostHint,
+    gang_sizes: &[usize],
+) -> Result<Vec<SpmdPoint>> {
+    let mut points = Vec::new();
+    for &n in gang_sizes {
+        let tasks: Vec<TaskSpec> =
+            crate::mapreduce::planner::pack_batches(items, n)
+                .iter()
+                .enumerate()
+                .map(|(t, b)| TaskSpec {
+                    task_id: t + 1,
+                    work: TaskWork::Synthetic {
+                        startup: hint.startup,
+                        per_item: hint.per_item,
+                        items: b.len(),
+                        launches: usize::from(!b.is_empty()),
+                    },
+                })
+                .collect();
+        let launches: usize =
+            tasks.iter().map(|t| t.work.launches()).sum();
+        let eng = SimEngine::new(ClusterConfig {
+            dispatch_latency: Duration::ZERO,
+            ..ClusterConfig::with_width(1)
+        });
+        let report = eng.run(JobSpec::new(format!("spmd-n{n}"), tasks))?;
+        points.push(SpmdPoint {
+            mode: SpmdPoint::label(n),
+            items_per_task: n,
+            launches,
+            makespan: report.makespan,
+            per_item_launch_overhead: hint.startup * launches as u32
+                / items.max(1) as u32,
+        });
+    }
+    Ok(points)
+}
+
+/// Measured wall-clock variant: real word-count jobs (startup spin
+/// modelling a heavy interpreter) through the full planner → engine
+/// path, per-task vs ganged at each gang size.
+pub fn spmd_amortization_measured(
+    workdir: &Path,
+    startup_spin: Duration,
+    gang_sizes: &[usize],
+) -> Result<Vec<SpmdPoint>> {
+    let input = workdir.join("input");
+    let (docs, ignore) = generate_corpus(&input, 16, 500, 100, 0x59D)?;
+    let items = docs.len();
+    let mapper = WordCountApp::with_startup_spin(Some(ignore), startup_spin);
+    let mut points = Vec::new();
+    for &n in gang_sizes {
+        let output = workdir.join(format!("output-n{n}"));
+        let opts = Options::new(&input, &output, "wordcount")
+            .items_per_task(n)
+            .pid(82000 + n as u32);
+        let apps = Apps {
+            mapper: mapper.clone(),
+            reducer: None,
+        };
+        let engine = crate::scheduler::local::LocalEngine::new(2);
+        let report = run(&opts, &apps, &engine)?;
+        let m = Measurement::from_report(SpmdPoint::label(n), n, &report.map);
+        points.push(SpmdPoint {
+            mode: m.option,
+            items_per_task: n,
+            launches: m.launches,
+            makespan: m.elapsed,
+            per_item_launch_overhead: m.total_startup
+                / items.max(1) as u32,
+        });
+    }
+    Ok(points)
+}
+
+/// Serialize an amortization sweep as the `BENCH_spmd.json` document.
+/// Schema (asserted by `tests/spmd.rs`): top-level `bench`, `source`,
+/// `items`, `startup_us`, `per_item_us`, and a `points` array whose
+/// rows carry `mode`, `items_per_task`, `launches`, `makespan_us`, and
+/// `per_item_launch_overhead_us`.
+pub fn spmd_bench_json(
+    source: &str,
+    items: usize,
+    hint: CostHint,
+    points: &[SpmdPoint],
+) -> crate::util::json::Json {
+    use crate::util::json::{obj, Json};
+    obj(vec![
+        ("bench", "spmd-amortization".into()),
+        ("source", source.into()),
+        ("items", items.into()),
+        ("startup_us", (hint.startup.as_micros() as usize).into()),
+        ("per_item_us", (hint.per_item.as_micros() as usize).into()),
+        (
+            "points",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        obj(vec![
+                            ("mode", p.mode.as_str().into()),
+                            ("items_per_task", p.items_per_task.into()),
+                            ("launches", p.launches.into()),
+                            (
+                                "makespan_us",
+                                (p.makespan.as_micros() as usize).into(),
+                            ),
+                            (
+                                "per_item_launch_overhead_us",
+                                (p.per_item_launch_overhead.as_micros()
+                                    as usize)
+                                    .into(),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -400,6 +555,76 @@ mod tests {
             bs.as_secs_f64() > cs.as_secs_f64() * 1.2,
             "sorted: block {bs:?} should trail cyclic {cs:?}"
         );
+    }
+
+    #[test]
+    fn spmd_virtual_amortization_is_exact_and_monotone() {
+        // 64 items, 128ms startup, 10ms/item — integer-exact arithmetic.
+        let pts = spmd_amortization_virtual(
+            64,
+            hint(128, 10),
+            &[1, 4, 16, 64],
+        )
+        .unwrap();
+        assert_eq!(pts.len(), 4);
+        assert_eq!(pts[0].mode, "per-task");
+        assert_eq!(pts[0].launches, 64);
+        assert_eq!(
+            pts[0].per_item_launch_overhead,
+            Duration::from_millis(128)
+        );
+        assert_eq!(pts[3].mode, "ganged");
+        assert_eq!(pts[3].launches, 1);
+        assert_eq!(
+            pts[3].per_item_launch_overhead,
+            Duration::from_millis(2)
+        );
+        // Makespan = launches×startup + items×per_item exactly.
+        assert_eq!(
+            pts[0].makespan,
+            Duration::from_millis(64 * 128 + 64 * 10)
+        );
+        assert_eq!(
+            pts[3].makespan,
+            Duration::from_millis(128 + 64 * 10)
+        );
+        // Overhead decreases monotonically as the gang grows.
+        for w in pts.windows(2) {
+            assert!(
+                w[1].per_item_launch_overhead
+                    < w[0].per_item_launch_overhead,
+                "{:?} then {:?}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+
+    #[test]
+    fn spmd_bench_json_schema() {
+        let h = hint(128, 10);
+        let pts =
+            spmd_amortization_virtual(64, h, &[1, 4, 16, 64]).unwrap();
+        let doc = spmd_bench_json("sim-virtual", 64, h, &pts);
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("spmd-amortization"));
+        assert_eq!(doc.get("items").unwrap().as_usize(), Some(64));
+        assert_eq!(doc.get("startup_us").unwrap().as_usize(), Some(128_000));
+        let points = doc.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(points.len(), 4);
+        for p in points {
+            assert!(p.get("mode").unwrap().as_str().is_some());
+            assert!(p.get("items_per_task").unwrap().as_usize().is_some());
+            assert!(
+                p.get("per_item_launch_overhead_us")
+                    .unwrap()
+                    .as_usize()
+                    .is_some()
+            );
+        }
+        // The document round-trips through the parser.
+        let text = doc.to_string_pretty();
+        let back = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(back, doc);
     }
 
     #[test]

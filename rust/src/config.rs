@@ -23,6 +23,10 @@
 //! apptype = "mimo"
 //! scheduler = "slurm"
 //! options = ["-l mem=8G"]
+//!
+//! [spmd]                      # SPMD ganging defaults
+//! enabled = true
+//! items_per_task = 16
 //! ```
 
 use std::path::{Path, PathBuf};
@@ -105,6 +109,10 @@ pub struct JobDefaults {
     pub exclusive: Option<bool>,
     pub keep: Option<bool>,
     pub scheduler_options: Vec<String>,
+    /// `[spmd] enabled`: gang items into persistent-instance batches.
+    pub spmd: Option<bool>,
+    /// `[spmd] items_per_task`: batch size for ganged tasks.
+    pub items_per_task: Option<usize>,
 }
 
 impl Config {
@@ -224,6 +232,18 @@ impl Config {
         if let Some(v) = doc.get("job.keep") {
             j.keep = v.as_bool();
         }
+        // [spmd]
+        if let Some(v) = doc.get("spmd.enabled") {
+            j.spmd = v.as_bool();
+        }
+        if let Some(n) = usize_key(&doc, "spmd.items_per_task")? {
+            if n == 0 {
+                return Err(Error::Config(
+                    "spmd.items_per_task must be at least 1".into(),
+                ));
+            }
+            j.items_per_task = Some(n);
+        }
         if let Some(v) = doc.get("job.options") {
             j.scheduler_options = v
                 .as_str_array()
@@ -269,6 +289,22 @@ impl Config {
         if let Some(v) = get("LLMR_MIN_WORKERS") {
             if let Ok(n) = v.parse::<usize>() {
                 self.remote.min_workers = n;
+            }
+        }
+        if let Some(v) = get("LLMR_SPMD") {
+            match v.to_ascii_lowercase().as_str() {
+                "1" | "true" | "yes" => self.job_defaults.spmd = Some(true),
+                "0" | "false" | "no" => {
+                    self.job_defaults.spmd = Some(false);
+                }
+                _ => {}
+            }
+        }
+        if let Some(v) = get("LLMR_ITEMS_PER_TASK") {
+            if let Ok(n) = v.parse::<usize>() {
+                if n > 0 {
+                    self.job_defaults.items_per_task = Some(n);
+                }
             }
         }
     }
@@ -317,6 +353,12 @@ impl Config {
             if !opts.scheduler_options.contains(o) {
                 opts.scheduler_options.push(o.clone());
             }
+        }
+        if let Some(s) = j.spmd {
+            opts.spmd = opts.spmd || s;
+        }
+        if opts.items_per_task.is_none() {
+            opts.items_per_task = j.items_per_task;
         }
     }
 
@@ -454,6 +496,43 @@ options = ["-l mem=8G"]
         assert_eq!(c.cluster.nodes, 32);
         assert_eq!(c.cluster.dispatch_latency, Duration::from_millis(5));
         assert_eq!(c.cluster.seed, 7);
+    }
+
+    #[test]
+    fn spmd_section_and_env_overrides() {
+        let c = Config::parse(
+            "[spmd]\nenabled = true\nitems_per_task = 8\n",
+        )
+        .unwrap();
+        assert_eq!(c.job_defaults.spmd, Some(true));
+        assert_eq!(c.job_defaults.items_per_task, Some(8));
+
+        let mut opts = Options::new("/in", "/out", "m");
+        c.apply_job_defaults(&mut opts);
+        assert!(opts.spmd);
+        assert_eq!(opts.items_per_task, Some(8));
+        assert!(opts.spmd_enabled());
+
+        // CLI-provided batch size wins over config.
+        let mut explicit =
+            Options::new("/in", "/out", "m").items_per_task(32);
+        c.apply_job_defaults(&mut explicit);
+        assert_eq!(explicit.items_per_task, Some(32));
+
+        // Env sits between config and CLI.
+        let mut e = Config::parse("[spmd]\nitems_per_task = 8\n").unwrap();
+        e.apply_env_overrides(|k| match k {
+            "LLMR_SPMD" => Some("true".into()),
+            "LLMR_ITEMS_PER_TASK" => Some("4".into()),
+            _ => None,
+        });
+        assert_eq!(e.job_defaults.spmd, Some(true));
+        assert_eq!(e.job_defaults.items_per_task, Some(4));
+
+        assert!(
+            Config::parse("[spmd]\nitems_per_task = 0\n").is_err(),
+            "zero batch size rejected at parse time"
+        );
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! ```text
 //! llmapreduce run --mapper=imageconvert --input=in --output=out [Fig 2 opts]
 //! llmapreduce gen-data images|corpus|matrices --dir=... [--count=N]
-//! llmapreduce bench table1|table2|fig18|fig19|all
+//! llmapreduce bench table1|table2|fig18|fig19|spmd|all
 //! llmapreduce inspect            # artifact manifest + environment
 //! ```
 
@@ -17,7 +17,8 @@ use llmapreduce::apps::image::ImageConvertApp;
 use llmapreduce::apps::matmul::MatmulChainApp;
 use llmapreduce::apps::registry::{resolve_mapper, resolve_reducer};
 use llmapreduce::bench::experiments::{
-    fig18_19_sweep, table1_java, table1_matlab, table2, PAPER_WIDTHS,
+    fig18_19_sweep, spmd_amortization_virtual, spmd_bench_json,
+    table1_java, table1_matlab, table2, PAPER_WIDTHS,
 };
 use llmapreduce::error::{Error, Result};
 use llmapreduce::mapreduce::{run, Apps};
@@ -48,7 +49,7 @@ RUN OPTIONS (Fig 2 of the paper):
   --np=N --ndata=K --input=DIR --output=DIR --mapper=APP [--reducer=APP]
   --redout=FILE --distribution=block|cyclic --subdir=true|false
   --ext=EXT --delimeter=D --exclusive=true|false --keep=true|false
-  --apptype=mimo|siso --options=<raw scheduler directives>
+  --apptype=mimo|siso|spmd --options=<raw scheduler directives>
   --scheduler=gridengine|slurm|lsf
   plus: --slots=N (engine width, default np)
         --engine=local|sim|sim-exec|remote (execution substrate)
@@ -59,6 +60,10 @@ RUN OPTIONS (Fig 2 of the paper):
         --overlap=true|false (overlapped map->reduce: the reducer
           consumes each mapper task's output as it completes instead
           of barriering on the whole map array job; see DESIGN.md)
+        --spmd[=BOOL] (gang items into batches run by one persistent
+          app instance per task; see DESIGN.md §7)
+        --items-per-task=N (batch size for --spmd, default 16;
+          implies --spmd)
 
 WORKER (the daemon side of --engine=remote; spawn one per node):
   llmapreduce worker --connect=HOST:PORT [--slots=N] [--name=S]
@@ -75,7 +80,8 @@ GEN-DATA:
   matrices --dir=D [--count=512] MATLIST chain files
 
 BENCH:
-  table1 | table2 | fig18 | fig19 | all";
+  table1 | table2 | fig18 | fig19 | spmd | all
+  (spmd writes BENCH_spmd.json at the repo root)";
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -320,7 +326,8 @@ fn cmd_bench(args: &[String]) -> Result<()> {
     let run_t2 = which == "table2" || which == "all";
     let run_f18 = which == "fig18" || which == "all";
     let run_f19 = which == "fig19" || which == "all";
-    if !(run_t1 || run_t2 || run_f18 || run_f19) {
+    let run_spmd = which == "spmd" || which == "all";
+    if !(run_t1 || run_t2 || run_f18 || run_f19 || run_spmd) {
         return Err(Error::opt(format!("unknown experiment '{which}'")));
     }
 
@@ -391,7 +398,45 @@ fn cmd_bench(args: &[String]) -> Result<()> {
             .map_err(|e| Error::io(csv_path.clone(), e))?;
         println!("csv: {}", csv_path.display());
     }
+
+    if run_spmd {
+        println!("== SPMD: launch-overhead amortization ==\n");
+        // Fixed virtual costs so the artifact is byte-reproducible:
+        // 64 items, 128ms startup, 10ms/item (see DESIGN.md §7).
+        let hint = llmapreduce::apps::CostHint {
+            startup: Duration::from_millis(128),
+            per_item: Duration::from_millis(10),
+        };
+        let pts = spmd_amortization_virtual(64, hint, &[1, 4, 16, 64])?;
+        for p in &pts {
+            println!(
+                "  {:>8}  N={:<3} launches={:<3} per-item launch overhead {}",
+                p.mode,
+                p.items_per_task,
+                p.launches,
+                llmapreduce::util::fmt_duration(p.per_item_launch_overhead)
+            );
+        }
+        let doc = spmd_bench_json("sim-virtual", 64, hint, &pts);
+        let path = bench_output_path("BENCH_spmd.json");
+        std::fs::write(&path, doc.to_string_pretty())
+            .map_err(|e| Error::io(path.clone(), e))?;
+        println!("\njson: {}", path.display());
+    }
     Ok(())
+}
+
+/// Place a bench artifact at the repo root when running inside the
+/// checkout (ROADMAP.md marks it); fall back to the current directory.
+fn bench_output_path(name: &str) -> PathBuf {
+    let cwd =
+        std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    for dir in cwd.ancestors() {
+        if dir.join("ROADMAP.md").is_file() {
+            return dir.join(name);
+        }
+    }
+    cwd.join(name)
 }
 
 /// Calibrate the Fig 18/19 cost model against the real matmul app when

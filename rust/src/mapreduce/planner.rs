@@ -49,7 +49,7 @@ impl Plan {
     pub fn total_launches(&self) -> usize {
         match self.apptype {
             AppType::Siso => self.nfiles,
-            AppType::Mimo => {
+            AppType::Mimo | AppType::Spmd => {
                 self.tasks.iter().filter(|t| !t.pairs.is_empty()).count()
             }
         }
@@ -113,6 +113,24 @@ pub fn task_count(
     Ok(requested)
 }
 
+/// Pack `nitems` items into contiguous batches of `items_per_task` —
+/// the SPMD morph's ganging step (`--spmd` / `--items-per-task`).  The
+/// returned ranges index the input list in order: concatenated they
+/// cover `0..nitems` exactly once with no gaps, overlaps, or
+/// reordering, every range but possibly the last holds exactly
+/// `items_per_task` items, and the last holds the (non-empty) tail.
+/// A zero `items_per_task` is treated as 1 so arbitrary caller input
+/// cannot produce unbounded batches.
+pub fn pack_batches(
+    nitems: usize,
+    items_per_task: usize,
+) -> Vec<std::ops::Range<usize>> {
+    let step = items_per_task.max(1);
+    (0..nitems.div_ceil(step))
+        .map(|b| b * step..((b + 1) * step).min(nitems))
+        .collect()
+}
+
 /// Build the output path for one input file.
 ///
 /// With `--subdir` the input's relative directory is replicated below the
@@ -161,7 +179,6 @@ pub fn plan(
     opts: &Options,
     dialect: &dyn Dialect,
 ) -> Result<Plan> {
-    let ntasks = task_count(files.len(), opts, dialect)?;
     let pair_of = |i: usize| {
         let input = &files[i];
         (
@@ -169,6 +186,44 @@ pub fn plan(
             output_path(opts, &opts.output, input),
         )
     };
+    // SPMD morph: ignore --np/--ndata task shaping and pack contiguous
+    // batches of --items-per-task items, one persistent-instance task
+    // per batch.  Batches are always contiguous (order is part of the
+    // byte-identity contract), so --distribution does not apply.
+    if opts.spmd_enabled() {
+        let batches =
+            pack_batches(files.len(), opts.effective_items_per_task());
+        let limit = dialect.max_array_tasks();
+        if batches.len() > limit {
+            return Err(Error::ArrayLimit {
+                requested: batches.len(),
+                limit,
+                dialect: dialect.kind().as_str().to_string(),
+            });
+        }
+        let tasks = if batches.is_empty() {
+            // Keep the non-spmd invariant of at least one (empty) task.
+            vec![PlannedTask {
+                task_id: 1,
+                pairs: Vec::new(),
+            }]
+        } else {
+            batches
+                .into_iter()
+                .enumerate()
+                .map(|(t, range)| PlannedTask {
+                    task_id: t + 1,
+                    pairs: range.map(pair_of).collect(),
+                })
+                .collect()
+        };
+        return Ok(Plan {
+            tasks,
+            apptype: AppType::Spmd,
+            nfiles: files.len(),
+        });
+    }
+    let ntasks = task_count(files.len(), opts, dialect)?;
     // Block assignments are contiguous ranges — build them directly and
     // skip materializing the index vectors (perf: see EXPERIMENTS.md
     // §Perf iteration 2).
@@ -356,6 +411,70 @@ mod tests {
         assert_eq!(outs.len(), 2, "6 files over 3 block tasks");
         assert_eq!(outs[0], PathBuf::from("/out/f0000.dat.out"));
         assert!(p.task_outputs(99).is_empty(), "out of range is empty");
+    }
+
+    #[test]
+    fn pack_batches_covers_exactly_once_in_order() {
+        assert_eq!(pack_batches(0, 4), Vec::<std::ops::Range<usize>>::new());
+        assert_eq!(pack_batches(10, 4), vec![0..4, 4..8, 8..10]);
+        assert_eq!(pack_batches(4, 4), vec![0..4]);
+        assert_eq!(pack_batches(3, 100), vec![0..3], "N > items: one batch");
+        assert_eq!(
+            pack_batches(3, 1),
+            vec![0..1, 1..2, 2..3],
+            "N=1 degenerates to per-item tasks"
+        );
+        assert_eq!(pack_batches(5, 0), pack_batches(5, 1), "0 clamps to 1");
+    }
+
+    #[test]
+    fn spmd_plan_packs_batches_and_sets_mode() {
+        let opts = Options::new("/in", "/out", "m").items_per_task(4);
+        let p = plan(&files(10), &opts, ge().as_ref()).unwrap();
+        assert_eq!(p.apptype, AppType::Spmd);
+        assert_eq!(p.tasks.len(), 3, "ceil(10/4)");
+        assert_eq!(p.tasks[0].pairs.len(), 4);
+        assert_eq!(p.tasks[2].pairs.len(), 2, "uneven tail");
+        assert_eq!(p.total_launches(), 3, "one launch per batch");
+        // Item order preserved across batches.
+        let inputs: Vec<_> = p
+            .tasks
+            .iter()
+            .flat_map(|t| t.pairs.iter().map(|(i, _)| i.clone()))
+            .collect();
+        let expected: Vec<_> =
+            files(10).iter().map(|f| f.path.clone()).collect();
+        assert_eq!(inputs, expected);
+    }
+
+    #[test]
+    fn spmd_overrides_np_and_apptype() {
+        // --np and --apptype shape nothing once ganging is on; the batch
+        // size is the only knob.
+        let opts = Options::new("/in", "/out", "m")
+            .np(2)
+            .apptype(AppType::Mimo)
+            .spmd(true); // default batch size 16
+        let p = plan(&files(40), &opts, ge().as_ref()).unwrap();
+        assert_eq!(p.apptype, AppType::Spmd);
+        assert_eq!(p.tasks.len(), 3, "ceil(40/16), not --np=2");
+    }
+
+    #[test]
+    fn spmd_plan_with_no_files_keeps_one_empty_task() {
+        let opts = Options::new("/in", "/out", "m").spmd(true);
+        let p = plan(&files(0), &opts, ge().as_ref()).unwrap();
+        assert_eq!(p.tasks.len(), 1);
+        assert!(p.tasks[0].pairs.is_empty());
+        assert_eq!(p.total_launches(), 0, "empty batch never launches");
+    }
+
+    #[test]
+    fn spmd_respects_array_limit() {
+        let d = dialect_for(SchedulerKind::Slurm);
+        let opts = Options::new("/in", "/out", "m").items_per_task(1);
+        let err = plan(&files(5_000), &opts, d.as_ref()).unwrap_err();
+        assert!(matches!(err, Error::ArrayLimit { .. }));
     }
 
     #[test]

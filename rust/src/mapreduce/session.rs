@@ -151,7 +151,10 @@ impl<'e> Session<'e> {
         write_all(&wd, &the_plan, opts, dialect.as_ref())?;
         replicate_output_tree(&the_plan)?;
 
-        // Step 2: the mapper array job.
+        // Step 2: the mapper array job.  The plan's apptype, not the raw
+        // option, is the execution mode: under `--spmd` the planner
+        // packed batches and switched the plan to `AppType::Spmd`, so
+        // every engine (and the wire) sees the ganged mode transparently.
         let map_tasks: Vec<TaskSpec> = the_plan
             .tasks
             .iter()
@@ -160,7 +163,7 @@ impl<'e> Session<'e> {
                 work: TaskWork::Map {
                     app: apps.mapper.clone(),
                     pairs: t.pairs.clone(),
-                    mode: opts.apptype,
+                    mode: the_plan.apptype,
                 },
             })
             .collect();

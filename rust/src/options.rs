@@ -56,9 +56,16 @@ pub enum AppType {
     #[default]
     Siso,
     /// Multiple-input-multiple-output: one launch per array task, fed a
-    /// generated list of input/output pairs — the SPMD morph that gives
-    /// the paper its 10x headline.
+    /// generated list of input/output pairs (Fig 11/17).
     Mimo,
+    /// The SPMD morph that gives the paper its 10x headline: one
+    /// *persistent* application instance per task consumes a packed
+    /// batch of items through [`crate::apps::MapInstance::run_batch`]
+    /// (command apps stream `input\toutput` lines over stdin), so the
+    /// launch cost is paid once per batch instead of once per item.
+    /// Selected by `--spmd` / `--items-per-task` rather than
+    /// `--apptype` — Fig 2's surface stays verbatim.
+    Spmd,
 }
 
 impl AppType {
@@ -66,8 +73,9 @@ impl AppType {
         match s.to_ascii_lowercase().as_str() {
             "siso" => Ok(AppType::Siso),
             "mimo" => Ok(AppType::Mimo),
+            "spmd" => Ok(AppType::Spmd),
             other => Err(Error::opt(format!(
-                "--apptype must be mimo|siso, got '{other}'"
+                "--apptype must be mimo|siso|spmd, got '{other}'"
             ))),
         }
     }
@@ -76,6 +84,7 @@ impl AppType {
         match self {
             AppType::Siso => "siso",
             AppType::Mimo => "mimo",
+            AppType::Spmd => "spmd",
         }
     }
 }
@@ -156,6 +165,16 @@ pub struct Options {
     /// level of the output dir; overlap must not change the reduced file
     /// set).
     pub overlap: bool,
+    /// `--spmd`: gang items into persistent app instances (reproduction
+    /// extra; the SPMD morph of §II-B).  Overrides `--apptype` for
+    /// execution: tasks run in [`AppType::Spmd`] mode, paying launch
+    /// cost once per batch of [`Options::effective_items_per_task`]
+    /// items instead of once per item.
+    pub spmd: bool,
+    /// `--items-per-task`: batch size for the SPMD morph.  Setting it
+    /// implies `--spmd`; `--spmd` without it defaults to 16 items per
+    /// batch.
+    pub items_per_task: Option<usize>,
     /// `--options`: extra raw scheduler directives, passed through into the
     /// generated submission script.
     pub scheduler_options: Vec<String>,
@@ -187,6 +206,8 @@ impl Default for Options {
             keep: false,
             apptype: AppType::Siso,
             overlap: false,
+            spmd: false,
+            items_per_task: None,
             scheduler_options: Vec::new(),
             scheduler: SchedulerKind::GridEngine,
             pid: None,
@@ -261,6 +282,14 @@ impl Options {
         self.overlap = on;
         self
     }
+    pub fn spmd(mut self, on: bool) -> Self {
+        self.spmd = on;
+        self
+    }
+    pub fn items_per_task(mut self, n: usize) -> Self {
+        self.items_per_task = Some(n);
+        self
+    }
     pub fn scheduler(mut self, s: SchedulerKind) -> Self {
         self.scheduler = s;
         self
@@ -327,6 +356,26 @@ impl Options {
                 "--keep" => opts.keep = parse_bool(&key, &take()?)?,
                 "--apptype" => opts.apptype = AppType::parse(&take()?)?,
                 "--overlap" => opts.overlap = parse_bool(&key, &take()?)?,
+                // `--spmd` works bare (a plain switch), as `--spmd=BOOL`,
+                // and as `--spmd BOOL` — the bench scripts use the bare
+                // form, the config/env layers the explicit one.
+                "--spmd" => {
+                    opts.spmd = match inline_val.clone() {
+                        Some(v) => parse_bool(&key, &v)?,
+                        None => match argv.get(i + 1).map(|s| s.as_str()) {
+                            Some(
+                                "true" | "false" | "1" | "0" | "yes" | "no",
+                            ) => {
+                                i += 1;
+                                parse_bool(&key, &argv[i])?
+                            }
+                            _ => true,
+                        },
+                    }
+                }
+                "--items-per-task" => {
+                    opts.items_per_task = Some(parse_count(&key, &take()?)?)
+                }
                 "--options" => opts.scheduler_options.push(take()?),
                 "--scheduler" => {
                     opts.scheduler = SchedulerKind::parse(&take()?)?
@@ -365,7 +414,25 @@ impl Options {
         if self.redout.is_empty() {
             return Err(Error::opt("--redout must be non-empty"));
         }
+        if self.items_per_task == Some(0) {
+            return Err(Error::opt("--items-per-task must be > 0"));
+        }
         Ok(())
+    }
+
+    /// Whether the SPMD morph is on: `--spmd` was given, or
+    /// `--items-per-task` was given (an explicit batch size implies
+    /// ganging).
+    pub fn spmd_enabled(&self) -> bool {
+        self.spmd || self.items_per_task.is_some()
+    }
+
+    /// Batch size for the SPMD morph: explicit `--items-per-task`, else
+    /// 16 items per persistent instance (enough to amortize the launch
+    /// cost by an order of magnitude on the Table 1 workloads without
+    /// starving narrow fleets of parallelism).
+    pub fn effective_items_per_task(&self) -> usize {
+        self.items_per_task.unwrap_or(16)
     }
 
     /// The output file name for one input file: `<name><delim><ext>`
@@ -618,6 +685,67 @@ mod tests {
         args.push("--overlap=sideways");
         assert!(Options::parse_args(args).is_err());
         assert!(Options::new("i", "o", "m").overlap(true).overlap);
+    }
+
+    #[test]
+    fn spmd_flags_parse_and_default_off() {
+        let o = Options::parse_args(base()).unwrap();
+        assert!(!o.spmd, "spmd is opt-in");
+        assert_eq!(o.items_per_task, None);
+        assert!(!o.spmd_enabled());
+        assert_eq!(o.effective_items_per_task(), 16, "documented default");
+
+        // Bare switch, = form, and space form all work.
+        let mut args = base();
+        args.push("--spmd");
+        let o = Options::parse_args(args).unwrap();
+        assert!(o.spmd && o.spmd_enabled());
+
+        let mut args = base();
+        args.push("--spmd=true");
+        assert!(Options::parse_args(args).unwrap().spmd);
+
+        let o = Options::parse_args([
+            "--input=in", "--output=out", "--mapper=m", "--spmd", "false",
+        ])
+        .unwrap();
+        assert!(!o.spmd);
+
+        // Bare --spmd followed by another flag must not eat the flag.
+        let o = Options::parse_args([
+            "--input=in", "--output=out", "--spmd", "--mapper=m",
+        ])
+        .unwrap();
+        assert!(o.spmd);
+        assert_eq!(o.mapper, "m");
+    }
+
+    #[test]
+    fn items_per_task_implies_spmd_and_rejects_zero() {
+        let mut args = base();
+        args.push("--items-per-task=8");
+        let o = Options::parse_args(args).unwrap();
+        assert!(!o.spmd, "flag itself untouched");
+        assert!(o.spmd_enabled(), "explicit batch size implies ganging");
+        assert_eq!(o.effective_items_per_task(), 8);
+
+        let mut args = base();
+        args.push("--items-per-task=0");
+        assert!(Options::parse_args(args).is_err());
+
+        let o = Options::new("i", "o", "m").spmd(true).items_per_task(4);
+        assert!(o.spmd_enabled());
+        assert_eq!(o.effective_items_per_task(), 4);
+    }
+
+    #[test]
+    fn apptype_spmd_parses() {
+        assert_eq!(AppType::parse("spmd").unwrap(), AppType::Spmd);
+        assert_eq!(AppType::Spmd.as_str(), "spmd");
+        let mut args = base();
+        args.push("--apptype=spmd");
+        let o = Options::parse_args(args).unwrap();
+        assert_eq!(o.apptype, AppType::Spmd);
     }
 
     #[test]

@@ -24,7 +24,7 @@ pub fn execute(work: &TaskWork) -> Result<ExecOutcome> {
     match work {
         TaskWork::Map { app, pairs, mode } => {
             let (startup, compute, launches) =
-                run_map_task(app.as_ref(), pairs, *mode == AppType::Mimo)?;
+                run_map_task(app.as_ref(), pairs, *mode)?;
             Ok(ExecOutcome {
                 startup,
                 compute,
@@ -110,7 +110,9 @@ pub fn virtual_cost(work: &TaskWork) -> ExecOutcome {
             let hint = app.cost_hint();
             let launches = match mode {
                 AppType::Siso => pairs.len(),
-                AppType::Mimo => usize::from(!pairs.is_empty()),
+                AppType::Mimo | AppType::Spmd => {
+                    usize::from(!pairs.is_empty())
+                }
             };
             ExecOutcome {
                 startup: hint.startup * launches as u32,
@@ -200,5 +202,11 @@ mod tests {
         assert_eq!(mimo.launches, 1);
         assert_eq!(siso.compute, mimo.compute);
         assert_eq!(siso.startup, mimo.startup * 10);
+        // The ganged morph costs the same as MIMO on the virtual clock:
+        // one launch, per-item compute.
+        let spmd = virtual_cost(&mk(AppType::Spmd));
+        assert_eq!(spmd.launches, 1);
+        assert_eq!(spmd.startup, mimo.startup);
+        assert_eq!(spmd.compute, mimo.compute);
     }
 }

@@ -50,7 +50,11 @@ pub enum TaskWork {
     /// * `AppType::Siso`: one application start-up **per pair** (the
     ///   paper's DEFAULT / BLOCK behaviour — repeated launches).
     /// * `AppType::Mimo`: one start-up for the whole task, then stream
-    ///   the pairs (the paper's SPMD morph).
+    ///   the pairs.
+    /// * `AppType::Spmd`: one start-up for the whole task; the
+    ///   persistent instance consumes the entire batch through
+    ///   [`crate::apps::MapInstance::run_batch`] (the ganged morph —
+    ///   batches are packed by the planner under `--spmd`).
     Map {
         app: Arc<dyn MapApp>,
         pairs: Vec<(PathBuf, PathBuf)>,
@@ -118,7 +122,9 @@ impl TaskWork {
         match self {
             TaskWork::Map { pairs, mode, .. } => match mode {
                 AppType::Siso => pairs.len(),
-                AppType::Mimo => usize::from(!pairs.is_empty()),
+                AppType::Mimo | AppType::Spmd => {
+                    usize::from(!pairs.is_empty())
+                }
             },
             TaskWork::Reduce { .. } => 1,
             TaskWork::ReducePartial { .. } => 1,

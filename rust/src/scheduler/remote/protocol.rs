@@ -39,11 +39,14 @@ pub(crate) fn frame_err(reason: impl Into<String>) -> Error {
 /// Serializable task payload: [`TaskWork`] minus the in-process `Arc`s.
 #[derive(Debug, Clone, PartialEq)]
 pub enum WireWork {
-    /// A map task; `mimo` mirrors `AppType::Mimo`.
+    /// A map task; `mode` is the [`crate::options::AppType`] spelling
+    /// (`"siso"`, `"mimo"`, or `"spmd"`), so batched SPMD tasks gang on
+    /// the worker exactly as they would locally.  Decoding accepts the
+    /// protocol-v1 boolean `mimo` field as a fallback.
     Map {
         mapper: String,
         pairs: Vec<(String, String)>,
-        mimo: bool,
+        mode: String,
     },
     /// The final reduce over a directory.
     Reduce {
@@ -89,7 +92,7 @@ impl WireWork {
                     .iter()
                     .map(|(i, o)| (s(i), s(o)))
                     .collect(),
-                mimo: *mode == crate::options::AppType::Mimo,
+                mode: mode.as_str().to_string(),
             },
             TaskWork::Reduce {
                 app,
@@ -128,7 +131,7 @@ impl WireWork {
             WireWork::Map {
                 mapper,
                 pairs,
-                mimo,
+                mode,
             } => obj(vec![
                 ("kind", "map".into()),
                 ("mapper", mapper.as_str().into()),
@@ -146,7 +149,7 @@ impl WireWork {
                             .collect(),
                     ),
                 ),
-                ("mimo", (*mimo).into()),
+                ("mode", mode.as_str().into()),
             ]),
             WireWork::Reduce {
                 reducer,
@@ -208,7 +211,17 @@ impl WireWork {
                         }
                     })
                     .collect::<Result<_>>()?,
-                mimo: bool_field(v, "mimo")?,
+                // Protocol v1 peers send a boolean `mimo`; newer peers
+                // send the AppType spelling in `mode`.
+                mode: match str_field(v, "mode") {
+                    Ok(m) => m.to_string(),
+                    Err(_) => if bool_field(v, "mimo")? {
+                        "mimo"
+                    } else {
+                        "siso"
+                    }
+                    .to_string(),
+                },
             }),
             "reduce" => Ok(WireWork::Reduce {
                 reducer: str_field(v, "reducer")?.to_string(),
@@ -495,7 +508,17 @@ mod tests {
             work: WireWork::Map {
                 mapper: "wordcount:ign.txt".into(),
                 pairs: vec![("in/a.txt".into(), "out/a.txt.out".into())],
-                mimo: true,
+                mode: "mimo".into(),
+            },
+        });
+        roundtrip(Message::Assign {
+            job: 3,
+            task_idx: 1,
+            task_id: 2,
+            work: WireWork::Map {
+                mapper: "stream:./mapper.sh ref.txt".into(),
+                pairs: vec![("in/b.txt".into(), "out/b.txt.out".into())],
+                mode: "spmd".into(),
             },
         });
         roundtrip(Message::Assign {
@@ -559,9 +582,35 @@ mod tests {
                     "in/sp ace/\"quoted\".txt".into(),
                     "out/uni-é😀.out".into(),
                 )],
-                mimo: false,
+                mode: "siso".into(),
             },
         });
+    }
+
+    #[test]
+    fn legacy_mimo_bool_frames_still_decode() {
+        // A protocol-v1 coordinator sends `mimo` instead of `mode`.
+        for (legacy, expect) in [("true", "mimo"), ("false", "siso")] {
+            let line = format!(
+                r#"{{"type":"assign","job":1,"task_idx":0,"task_id":1,"work":{{"kind":"map","mapper":"cat","pairs":[["a","b"]],"mimo":{legacy}}}}}"#
+            );
+            let Message::Assign { work, .. } =
+                Message::decode(&line).unwrap()
+            else {
+                panic!("assign stays assign");
+            };
+            assert_eq!(
+                work,
+                WireWork::Map {
+                    mapper: "cat".into(),
+                    pairs: vec![("a".into(), "b".into())],
+                    mode: expect.into(),
+                }
+            );
+        }
+        // A map frame with neither field is malformed.
+        let bad = r#"{"type":"assign","job":1,"task_idx":0,"task_id":1,"work":{"kind":"map","mapper":"cat","pairs":[]}}"#;
+        assert!(Message::decode(bad).is_err());
     }
 
     #[test]
@@ -608,9 +657,21 @@ mod tests {
             WireWork::Map {
                 mapper: "wordcount:/refs/ign.txt".into(),
                 pairs: vec![("/data/a".into(), "/data/a.out".into())],
-                mimo: true,
+                mode: "mimo".into(),
             }
         );
+        let spmd = TaskWork::Map {
+            app: crate::apps::wordcount::WordCountApp::new(None),
+            pairs: vec![(
+                PathBuf::from("/data/b"),
+                PathBuf::from("/data/b.out"),
+            )],
+            mode: AppType::Spmd,
+        };
+        let WireWork::Map { mode, .. } = WireWork::from_work(&spmd) else {
+            panic!("map stays map");
+        };
+        assert_eq!(mode, "spmd");
         let red = TaskWork::Reduce {
             app: Arc::new(crate::apps::wordcount::WordCountReducer),
             input_dir: PathBuf::from("/data/out"),

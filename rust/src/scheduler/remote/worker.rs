@@ -85,14 +85,14 @@ fn materialize(work: &WireWork) -> Result<TaskWork> {
         WireWork::Map {
             mapper,
             pairs,
-            mimo,
+            mode,
         } => Ok(TaskWork::Map {
             app: resolve_mapper(mapper)?,
             pairs: pairs
                 .iter()
                 .map(|(i, o)| (i.into(), o.into()))
                 .collect(),
-            mode: if *mimo { AppType::Mimo } else { AppType::Siso },
+            mode: AppType::parse(mode)?,
         }),
         WireWork::Reduce {
             reducer,
@@ -347,7 +347,7 @@ mod tests {
         let w = materialize(&WireWork::Map {
             mapper: "wordcount".into(),
             pairs: vec![("a".into(), "a.out".into())],
-            mimo: true,
+            mode: "mimo".into(),
         })
         .unwrap();
         match w {
@@ -358,6 +358,27 @@ mod tests {
             }
             other => panic!("wrong work: {other:?}"),
         }
+        // Ganged map tasks keep their mode across the wire, and an
+        // unknown mode is an error, not a silent SISO downgrade.
+        let g = materialize(&WireWork::Map {
+            mapper: "stream:cat".into(),
+            pairs: vec![("a".into(), "a.out".into())],
+            mode: "spmd".into(),
+        })
+        .unwrap();
+        match g {
+            TaskWork::Map { app, mode, .. } => {
+                assert_eq!(app.wire_spec(), "stream:cat");
+                assert_eq!(mode, AppType::Spmd);
+            }
+            other => panic!("wrong work: {other:?}"),
+        }
+        assert!(materialize(&WireWork::Map {
+            mapper: "cat".into(),
+            pairs: vec![],
+            mode: "warp".into(),
+        })
+        .is_err());
         let s = materialize(&WireWork::Synthetic {
             startup_us: 1000,
             per_item_us: 10,

@@ -53,6 +53,31 @@ pub fn mimo_input_list(
     s
 }
 
+/// Render the run script for one SPMD task (`--spmd`): the persistent
+/// wrapper is launched once and consumes the tab-separated pair list on
+/// **stdin** — the item-stream protocol that lets unmodified per-item
+/// binaries gang via the generated wrapper while stream-aware apps read
+/// items until EOF.
+pub fn spmd_run_script(mapper: &str, input_list: &std::path::Path) -> String {
+    format!(
+        "#!/bin/bash\nexport PATH=${{PATH}}:.\n{mapper} < {}\n",
+        input_list.display()
+    )
+}
+
+/// Render the SPMD item stream (`input_<N>`): one `input<TAB>output`
+/// line per item, the frame a stream-capable app reads off stdin until
+/// EOF (tab-separated so paths containing spaces stay unambiguous).
+pub fn spmd_input_list(
+    pairs: &[(std::path::PathBuf, std::path::PathBuf)],
+) -> String {
+    let mut s = String::new();
+    for (input, output) in pairs {
+        s.push_str(&format!("{}\t{}\n", input.display(), output.display()));
+    }
+    s
+}
+
 /// Render the run script for the reduce task: reducer gets the map output
 /// directory and the reduce output filename (§II).
 pub fn reduce_run_script(
@@ -94,7 +119,9 @@ pub fn write_all(
     let mut mimo_inputs = Vec::new();
 
     for task in &plan.tasks {
-        let script = match opts.apptype {
+        // The plan's apptype (not the raw option) decides the script
+        // shape: under --spmd the planner switched the mode itself.
+        let script = match plan.apptype {
             AppType::Siso => siso_run_script(&opts.mapper, &task.pairs),
             AppType::Mimo => {
                 let list_path = wd.mimo_input(task.task_id);
@@ -102,6 +129,13 @@ pub fn write_all(
                 wd.write(&list_name, &mimo_input_list(&task.pairs))?;
                 mimo_inputs.push(list_path.clone());
                 mimo_run_script(&opts.mapper, &list_path)
+            }
+            AppType::Spmd => {
+                let list_path = wd.mimo_input(task.task_id);
+                let list_name = format!("input_{}", task.task_id);
+                wd.write(&list_name, &spmd_input_list(&task.pairs))?;
+                mimo_inputs.push(list_path.clone());
+                spmd_run_script(&opts.mapper, &list_path)
             }
         };
         let name = format!("run_llmap_{}", task.task_id);
@@ -237,6 +271,52 @@ mod tests {
             .map(|p| fs::read_to_string(p).unwrap().lines().count())
             .sum();
         assert_eq!(total_lines, 6);
+    }
+
+    #[test]
+    fn write_all_spmd_layout() {
+        let base = tmp("spmd");
+        let wd = MapRedDir::create(&base, 3001, true).unwrap();
+        let opts = Options::new("input", "output", "StreamCmd.sh")
+            .items_per_task(4)
+            .pid(3001);
+        let d = dialect_for(SchedulerKind::GridEngine);
+        let p = plan(&fake_files(6), &opts, d.as_ref()).unwrap();
+        let gen = write_all(&wd, &p, &opts, d.as_ref()).unwrap();
+        assert_eq!(gen.mimo_inputs.len(), 2, "ceil(6/4) batches");
+        // Each run script launches the wrapper once, fed on stdin.
+        for rs in &gen.run_scripts {
+            let text = fs::read_to_string(rs).unwrap();
+            assert_eq!(text.matches("StreamCmd.sh").count(), 1);
+            assert!(text.contains("StreamCmd.sh < "), "stdin protocol");
+        }
+        // Item streams are tab-separated and cover all 6 files.
+        let mut total_lines = 0;
+        for list in &gen.mimo_inputs {
+            let text = fs::read_to_string(list).unwrap();
+            for line in text.lines() {
+                assert_eq!(line.matches('\t').count(), 1, "{line}");
+                total_lines += 1;
+            }
+        }
+        assert_eq!(total_lines, 6);
+    }
+
+    #[test]
+    fn spmd_scripts_shape() {
+        let s = spmd_run_script(
+            "WordFreqStream.sh",
+            std::path::Path::new("./.MAPRED.3001/input_1"),
+        );
+        assert_eq!(
+            s,
+            "#!/bin/bash\nexport PATH=${PATH}:.\n\
+             WordFreqStream.sh < ./.MAPRED.3001/input_1\n"
+        );
+        let pairs = vec![
+            (PathBuf::from("a b.ppm"), PathBuf::from("a b.ppm.out")),
+        ];
+        assert_eq!(spmd_input_list(&pairs), "a b.ppm\ta b.ppm.out\n");
     }
 
     #[test]

@@ -54,7 +54,9 @@ impl TraceParams {
                 let items = base + usize::from(t < rem);
                 let launches = match apptype {
                     AppType::Siso => items,
-                    AppType::Mimo => usize::from(items > 0),
+                    AppType::Mimo | AppType::Spmd => {
+                        usize::from(items > 0)
+                    }
                 };
                 TaskSpec {
                     task_id: t + 1,

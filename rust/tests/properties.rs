@@ -195,6 +195,54 @@ fn prop_mimo_launches_at_most_tasks() {
 }
 
 // ---------------------------------------------------------------------------
+// SPMD batch-packer invariants (mapreduce::planner::pack_batches)
+// ---------------------------------------------------------------------------
+
+use llmapreduce::mapreduce::planner::pack_batches;
+
+/// Satellite invariant: the packer emits every item exactly once, in
+/// order, within batch-size bounds — for arbitrary item counts and gang
+/// sizes including N=1, N > items, and uneven tails.
+#[test]
+fn prop_pack_batches_exact_cover_in_order() {
+    forall("pack-cover", |rng| {
+        let nitems = rng.range(0, 5000);
+        let n = rng.range(1, 600);
+        let batches = pack_batches(nitems, n);
+        // Flattening reproduces 0..nitems exactly: every item once, in
+        // order, within and across batches.
+        let flat: Vec<usize> = batches.iter().cloned().flatten().collect();
+        assert_eq!(flat, (0..nitems).collect::<Vec<_>>());
+        for b in &batches {
+            assert!(!b.is_empty(), "no empty batches");
+            assert!(b.len() <= n, "batch of {} exceeds N={n}", b.len());
+        }
+        // Only the tail may run short.
+        for b in batches.iter().rev().skip(1) {
+            assert_eq!(b.len(), n, "only the last batch may be uneven");
+        }
+        assert_eq!(batches.len(), nitems.div_ceil(n));
+    });
+}
+
+#[test]
+fn prop_pack_batches_edge_shapes() {
+    forall("pack-edges", |rng| {
+        let nitems = rng.range(1, 2000);
+        // N=1: one item per batch.
+        assert_eq!(pack_batches(nitems, 1).len(), nitems);
+        // N >= items: a single batch holding everything.
+        let big = pack_batches(nitems, nitems + rng.range(0, 100));
+        assert_eq!(big.len(), 1);
+        assert_eq!(big[0].len(), nitems);
+        // Zero items: nothing to pack.
+        assert!(pack_batches(0, rng.range(1, 100)).is_empty());
+        // N=0 is clamped to 1, not a panic or an infinite loop.
+        assert_eq!(pack_batches(nitems, 0).len(), nitems);
+    });
+}
+
+// ---------------------------------------------------------------------------
 // Options parsing
 // ---------------------------------------------------------------------------
 
@@ -436,7 +484,7 @@ fn random_wire_work(rng: &mut Rng) -> WireWork {
                     (random_wire_string(rng), random_wire_string(rng))
                 })
                 .collect(),
-            mimo: rng.next_below(2) == 0,
+            mode: ["siso", "mimo", "spmd"][rng.range(0, 2)].to_string(),
         },
         1 => WireWork::Reduce {
             reducer: random_wire_string(rng),

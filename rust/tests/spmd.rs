@@ -1,0 +1,596 @@
+//! SPMD ganging equivalence suite (DESIGN.md §7).
+//!
+//! The morph under test: `--items-per-task=N` packs item batches into
+//! long-running tasks executed by one persistent app instance each.
+//! The acceptance bar is *byte identity* — the merged wordcount output
+//! of a ganged run must equal the per-task run bit-for-bit on every
+//! engine (local, sim-exec, remote), through `--overlap` and nested
+//! multi-level fan-out — plus chaos coverage: losing a worker mid-batch
+//! re-runs only that worker's batch, and injected-failure retries
+//! replay identically across engines under a shared [`FailurePolicy`]
+//! seed.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use llmapreduce::apps::CostHint;
+use llmapreduce::bench::experiments::{
+    spmd_amortization_virtual, spmd_bench_json,
+};
+use llmapreduce::error::Result;
+use llmapreduce::mapreduce::multilevel::run_nested;
+use llmapreduce::mapreduce::{run, Apps, MapReduceReport};
+use llmapreduce::options::Options;
+use llmapreduce::prelude::{
+    run_worker, CoordinatorConfig, FailurePolicy, LocalEngine,
+    RemoteCoordinator, WorkerConfig,
+};
+use llmapreduce::scheduler::sim::{ClusterConfig, SimEngine};
+use llmapreduce::util::json::Json;
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("llmr-spmd-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Deterministic corpus: overlapping word multisets across files.
+fn write_corpus(input: &Path, nfiles: usize) {
+    fs::create_dir_all(input).unwrap();
+    let vocab = ["alpha", "beta", "gamma", "delta", "epsilon"];
+    for i in 0..nfiles {
+        let mut text = String::new();
+        for (w, word) in vocab.iter().enumerate() {
+            for _ in 0..(i + w) % 4 + 1 {
+                text.push_str(word);
+                text.push(' ');
+            }
+        }
+        fs::write(input.join(format!("doc{i:02}.txt")), text).unwrap();
+    }
+}
+
+fn wc_opts(input: &Path, output: PathBuf, pid: u32) -> Options {
+    Options::new(input, output, "wordcount")
+        .np(4)
+        .reducer("wordcount-reducer")
+        .pid(pid)
+}
+
+fn wc_apps() -> Apps {
+    Apps {
+        mapper: llmapreduce::apps::registry::resolve_mapper("wordcount")
+            .unwrap(),
+        reducer: Some(
+            llmapreduce::apps::registry::resolve_reducer(
+                "wordcount-reducer",
+            )
+            .unwrap(),
+        ),
+    }
+}
+
+fn redout(report: &MapReduceReport) -> Vec<u8> {
+    fs::read(report.redout_path.as_ref().expect("reduced")).unwrap()
+}
+
+fn spawn_workers(
+    coordinator: &RemoteCoordinator,
+    n: usize,
+) -> Vec<JoinHandle<Result<()>>> {
+    let addr = coordinator.local_addr().to_string();
+    (0..n)
+        .map(|i| {
+            let config = WorkerConfig::new(addr.clone())
+                .name(format!("w{i}"))
+                .slots(1);
+            std::thread::spawn(move || run_worker(config))
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Byte identity: per-task vs ganged, across engines
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ganged_wordcount_byte_identical_on_local_engine() {
+    let root = tmp("local");
+    let input = root.join("input");
+    write_corpus(&input, 10);
+
+    let eng = LocalEngine::new(2);
+    let baseline = run(
+        &wc_opts(&input, root.join("out-base"), 93001).workdir(&root),
+        &wc_apps(),
+        &eng,
+    )
+    .unwrap();
+    let base_bytes = redout(&baseline);
+    assert!(!base_bytes.is_empty());
+
+    // Gang sizes covering N=1, an uneven tail, and N > items.
+    for (i, n) in [1usize, 3, 5, 64].into_iter().enumerate() {
+        let ganged = run(
+            &wc_opts(&input, root.join(format!("out-n{n}")), 93002 + i as u32)
+                .items_per_task(n)
+                .workdir(&root),
+            &wc_apps(),
+            &eng,
+        )
+        .unwrap();
+        assert_eq!(
+            redout(&ganged),
+            base_bytes,
+            "ganged N={n} must be byte-identical to per-task"
+        );
+        // One batch per task, one persistent launch per batch.
+        assert_eq!(ganged.map.tasks.len(), 10usize.div_ceil(n));
+        for t in &ganged.map.tasks {
+            assert_eq!(t.launches, 1, "N={n}: one launch per batch");
+            assert!(t.items <= n, "N={n}: batch bound");
+        }
+    }
+}
+
+#[test]
+fn ganged_wordcount_byte_identical_on_sim_exec_engine() {
+    let root = tmp("simexec");
+    let input = root.join("input");
+    write_corpus(&input, 9);
+
+    let local = LocalEngine::new(2);
+    let baseline = run(
+        &wc_opts(&input, root.join("out-base"), 93011).workdir(&root),
+        &wc_apps(),
+        &local,
+    )
+    .unwrap();
+
+    let sim = SimEngine::new(ClusterConfig::with_width(3))
+        .execute_payloads(true);
+    let ganged = run(
+        &wc_opts(&input, root.join("out-sim"), 93012)
+            .items_per_task(4)
+            .workdir(&root),
+        &wc_apps(),
+        &sim,
+    )
+    .unwrap();
+    assert_eq!(
+        redout(&ganged),
+        redout(&baseline),
+        "sim-exec ganged output must match local per-task output"
+    );
+    assert_eq!(ganged.map.tasks.len(), 3, "9 files at N=4 pack 3 batches");
+}
+
+#[test]
+fn ganged_wordcount_byte_identical_on_remote_engine() {
+    let root = tmp("remote");
+    let input = root.join("input");
+    write_corpus(&input, 10);
+
+    let local = LocalEngine::new(2);
+    let baseline = run(
+        &wc_opts(&input, root.join("out-base"), 93021).workdir(&root),
+        &wc_apps(),
+        &local,
+    )
+    .unwrap();
+
+    let coordinator = RemoteCoordinator::bind(
+        "127.0.0.1:0",
+        CoordinatorConfig::default(),
+    )
+    .unwrap();
+    let workers = spawn_workers(&coordinator, 2);
+    coordinator
+        .wait_for_workers(2, Duration::from_secs(10))
+        .unwrap();
+    let ganged = run(
+        &wc_opts(&input, root.join("out-remote"), 93022)
+            .items_per_task(4)
+            .workdir(&root),
+        &wc_apps(),
+        &coordinator,
+    )
+    .unwrap();
+    assert_eq!(
+        redout(&ganged),
+        redout(&baseline),
+        "remote ganged output must match local per-task output"
+    );
+    // Batched tasks really shipped: 10 files at N=4 → 3 assignments.
+    assert_eq!(ganged.map.tasks.len(), 3);
+    for t in &ganged.map.tasks {
+        assert!(t.worker.is_some(), "remote tasks name their worker");
+        assert_eq!(t.launches, 1);
+    }
+    drop(coordinator);
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+}
+
+#[test]
+fn overlap_and_ganging_compose_byte_identically() {
+    let root = tmp("overlap");
+    let input = root.join("input");
+    write_corpus(&input, 8);
+
+    let eng = LocalEngine::new(2);
+    let per_task = run(
+        &wc_opts(&input, root.join("out-base"), 93031)
+            .overlap(true)
+            .workdir(&root),
+        &wc_apps(),
+        &eng,
+    )
+    .unwrap();
+    assert!(per_task.overlapped);
+
+    let ganged_local = run(
+        &wc_opts(&input, root.join("out-ganged"), 93032)
+            .overlap(true)
+            .items_per_task(3)
+            .workdir(&root),
+        &wc_apps(),
+        &eng,
+    )
+    .unwrap();
+    assert!(ganged_local.overlapped, "ganging keeps overlap available");
+    assert_eq!(
+        ganged_local.partials.as_ref().unwrap().tasks.len(),
+        3,
+        "one partial fold per batch (8 files at N=3)"
+    );
+    assert_eq!(redout(&ganged_local), redout(&per_task));
+
+    // And over the wire.
+    let coordinator = RemoteCoordinator::bind(
+        "127.0.0.1:0",
+        CoordinatorConfig::default(),
+    )
+    .unwrap();
+    let workers = spawn_workers(&coordinator, 2);
+    coordinator
+        .wait_for_workers(2, Duration::from_secs(10))
+        .unwrap();
+    let ganged_remote = run(
+        &wc_opts(&input, root.join("out-remote"), 93033)
+            .overlap(true)
+            .items_per_task(3)
+            .workdir(&root),
+        &wc_apps(),
+        &coordinator,
+    )
+    .unwrap();
+    assert!(ganged_remote.overlapped);
+    assert_eq!(redout(&ganged_remote), redout(&per_task));
+    drop(coordinator);
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+}
+
+#[test]
+fn nested_multilevel_ganging_byte_identical() {
+    let root = tmp("nested");
+    let input = root.join("input");
+    for b in 0..3 {
+        write_corpus(&input.join(format!("branch-{b}")), 3 + b);
+    }
+    let mk_opts = |out: &str, pid: u32| {
+        Options::new(&input, root.join(out), "wordcount")
+            .np(2)
+            .reducer("wordcount-reducer")
+            .workdir(&root)
+            .pid(pid)
+    };
+    let outer = llmapreduce::apps::registry::resolve_reducer(
+        "wordcount-reducer",
+    )
+    .unwrap();
+
+    let eng = LocalEngine::new(3);
+    let per_task = run_nested(
+        &mk_opts("out-base", 93041),
+        &wc_apps(),
+        Some(outer.clone()),
+        &eng,
+    )
+    .unwrap();
+    let ganged = run_nested(
+        &mk_opts("out-ganged", 93042).items_per_task(2),
+        &wc_apps(),
+        Some(outer.clone()),
+        &eng,
+    )
+    .unwrap();
+    assert_eq!(
+        fs::read(per_task.final_out.as_ref().unwrap()).unwrap(),
+        fs::read(ganged.final_out.as_ref().unwrap()).unwrap(),
+        "nested fan-out must merge identically when ganged"
+    );
+
+    let coordinator = RemoteCoordinator::bind(
+        "127.0.0.1:0",
+        CoordinatorConfig::default(),
+    )
+    .unwrap();
+    let workers = spawn_workers(&coordinator, 3);
+    coordinator
+        .wait_for_workers(3, Duration::from_secs(10))
+        .unwrap();
+    let ganged_remote = run_nested(
+        &mk_opts("out-remote", 93043).items_per_task(2),
+        &wc_apps(),
+        Some(outer),
+        &coordinator,
+    )
+    .unwrap();
+    assert_eq!(
+        fs::read(per_task.final_out.as_ref().unwrap()).unwrap(),
+        fs::read(ganged_remote.final_out.as_ref().unwrap()).unwrap(),
+        "ganged nested fan-out over the network must merge identically"
+    );
+    drop(coordinator);
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chaos: batch reassignment and deterministic retry replay
+// ---------------------------------------------------------------------------
+
+/// Kill one of three workers mid-batch (deterministic `--fail-after`):
+/// only the dead worker's incomplete batch re-runs, whole, on a
+/// survivor; the merged output is unchanged.
+#[test]
+fn killing_a_worker_mid_batch_reruns_only_its_batch() {
+    let root = tmp("chaos");
+    let input = root.join("input");
+    write_corpus(&input, 12);
+
+    // Local ganged reference for the byte-identity gate.
+    let eng = LocalEngine::new(2);
+    let reference = run(
+        &wc_opts(&input, root.join("out-ref"), 93051)
+            .items_per_task(4)
+            .workdir(&root),
+        &wc_apps(),
+        &eng,
+    )
+    .unwrap();
+
+    let coordinator = RemoteCoordinator::bind(
+        "127.0.0.1:0",
+        CoordinatorConfig::default(),
+    )
+    .unwrap();
+    let addr = coordinator.local_addr().to_string();
+    let survivors = spawn_workers(&coordinator, 2); // w0, w1
+    let doomed = {
+        let config = WorkerConfig::new(addr)
+            .name("doomed")
+            .slots(1)
+            .fail_after(1);
+        std::thread::spawn(move || run_worker(config))
+    };
+    coordinator
+        .wait_for_workers(3, Duration::from_secs(10))
+        .unwrap();
+
+    // 12 files at N=4 → 3 batches over 3 idle single-slot workers:
+    // least-loaded spread hands the doomed worker exactly one batch,
+    // which it drops on receipt.
+    let chaotic = run(
+        &wc_opts(&input, root.join("out-chaos"), 93052)
+            .items_per_task(4)
+            .workdir(&root),
+        &wc_apps(),
+        &coordinator,
+    )
+    .unwrap();
+    assert_eq!(
+        redout(&chaotic),
+        redout(&reference),
+        "output must survive the worker loss unchanged"
+    );
+
+    assert_eq!(chaotic.map.tasks.len(), 3);
+    let reassigned: Vec<_> = chaotic
+        .map
+        .tasks
+        .iter()
+        .filter(|t| t.reassigned > 0)
+        .collect();
+    assert_eq!(
+        reassigned.len(),
+        1,
+        "exactly the dead worker's batch re-runs"
+    );
+    assert_eq!(reassigned[0].reassigned, 1, "one extra trip");
+    assert_eq!(
+        reassigned[0].items, 4,
+        "the batch re-runs whole, not item-by-item"
+    );
+    for t in &chaotic.map.tasks {
+        assert_ne!(
+            t.worker.as_deref(),
+            Some("doomed"),
+            "dead workers complete nothing"
+        );
+    }
+
+    doomed.join().unwrap().unwrap();
+    drop(coordinator);
+    for w in survivors {
+        w.join().unwrap().unwrap();
+    }
+}
+
+/// Injected-failure retries are a pure function of (seed, task_id,
+/// attempt), so a ganged job replays the identical retry pattern on the
+/// local engine and the payload-executing simulator — and both match
+/// the policy's own prediction.
+#[test]
+fn ganged_retry_counts_replay_identically_across_engines() {
+    let root = tmp("retries");
+    let input = root.join("input");
+    write_corpus(&input, 10);
+    let policy = FailurePolicy {
+        failure_rate: 0.6,
+        max_retries: 4,
+        seed: 0xD1CE,
+    };
+
+    let local_eng = LocalEngine::with_policy(2, policy);
+    let local = run(
+        &wc_opts(&input, root.join("out-local"), 93061)
+            .items_per_task(3)
+            .workdir(&root),
+        &wc_apps(),
+        &local_eng,
+    )
+    .unwrap();
+
+    let sim_eng = SimEngine::new(ClusterConfig {
+        failure_rate: policy.failure_rate,
+        max_retries: policy.max_retries,
+        seed: policy.seed,
+        ..ClusterConfig::with_width(2)
+    })
+    .execute_payloads(true);
+    let sim = run(
+        &wc_opts(&input, root.join("out-sim"), 93062)
+            .items_per_task(3)
+            .workdir(&root),
+        &wc_apps(),
+        &sim_eng,
+    )
+    .unwrap();
+
+    let retries_of = |r: &MapReduceReport| -> Vec<(usize, usize)> {
+        let mut v: Vec<_> = r
+            .map
+            .tasks
+            .iter()
+            .map(|t| (t.task_id, t.retries))
+            .collect();
+        v.sort();
+        v
+    };
+    let local_retries = retries_of(&local);
+    assert_eq!(
+        local_retries,
+        retries_of(&sim),
+        "shared FailurePolicy seed must replay the same retries"
+    );
+    // Both engines also match the policy's closed-form prediction: ten
+    // files at N=3 pack four batches (task ids 1..=4), whose retry
+    // pattern at this seed is fixed and non-trivial.
+    assert_eq!(
+        local_retries,
+        (1..=4)
+            .map(|t| (t, policy.expected_retries(t)))
+            .collect::<Vec<_>>()
+    );
+    assert_eq!(
+        local_retries.iter().map(|(_, r)| r).sum::<usize>(),
+        6,
+        "seed 0xD1CE at rate 0.6 injects retries [0, 2, 1, 3]"
+    );
+    // Failures + ganging still converge to the same bytes.
+    assert_eq!(redout(&local), redout(&sim));
+}
+
+// ---------------------------------------------------------------------------
+// Bench emission: BENCH_spmd.json schema + monotonicity
+// ---------------------------------------------------------------------------
+
+fn validate_spmd_doc(doc: &Json) {
+    assert_eq!(
+        doc.get("bench").and_then(Json::as_str),
+        Some("spmd-amortization")
+    );
+    assert!(doc.get("source").and_then(Json::as_str).is_some());
+    assert!(doc.get("items").and_then(Json::as_usize).is_some());
+    assert!(doc.get("startup_us").and_then(Json::as_usize).is_some());
+    assert!(doc.get("per_item_us").and_then(Json::as_usize).is_some());
+    let points = doc.get("points").and_then(Json::as_arr).unwrap();
+    assert!(points.len() >= 2, "at least per-task and one gang size");
+    let mut last = usize::MAX;
+    let mut seen_per_task = false;
+    for p in points {
+        let mode = p.get("mode").and_then(Json::as_str).unwrap();
+        assert!(mode == "per-task" || mode == "ganged", "{mode}");
+        seen_per_task |= mode == "per-task";
+        assert!(
+            p.get("items_per_task").and_then(Json::as_usize).unwrap() >= 1
+        );
+        assert!(p.get("launches").and_then(Json::as_usize).is_some());
+        assert!(p.get("makespan_us").and_then(Json::as_usize).is_some());
+        let o = p
+            .get("per_item_launch_overhead_us")
+            .and_then(Json::as_usize)
+            .unwrap();
+        assert!(
+            o < last,
+            "per-item launch overhead must decrease monotonically \
+             as --items-per-task grows ({o} !< {last})"
+        );
+        last = o;
+    }
+    assert!(seen_per_task, "the N=1 baseline must be present");
+}
+
+#[test]
+fn bench_spmd_json_schema_fresh_and_committed() {
+    let hint = CostHint {
+        startup: Duration::from_millis(128),
+        per_item: Duration::from_millis(10),
+    };
+    let pts =
+        spmd_amortization_virtual(64, hint, &[1, 4, 16, 64]).unwrap();
+    let doc = spmd_bench_json("sim-virtual", 64, hint, &pts);
+    // The emitted text parses back through util::json and validates.
+    let fresh = Json::parse(&doc.to_string_pretty()).unwrap();
+    validate_spmd_doc(&fresh);
+    // The amortization arithmetic is exact: launches × startup / items.
+    let overheads: Vec<usize> = fresh
+        .get("points")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|p| {
+            p.get("per_item_launch_overhead_us")
+                .and_then(Json::as_usize)
+                .unwrap()
+        })
+        .collect();
+    assert_eq!(overheads, vec![128_000, 32_000, 8_000, 2_000]);
+
+    // The committed repo-root artifact stays in lockstep with the
+    // generator (same schema, same virtual-time values).
+    let committed = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap()
+        .join("BENCH_spmd.json");
+    if committed.is_file() {
+        let text = fs::read_to_string(&committed).unwrap();
+        let doc2 = Json::parse(&text).unwrap();
+        validate_spmd_doc(&doc2);
+        assert_eq!(
+            doc2, fresh,
+            "committed BENCH_spmd.json diverged from the generator; \
+             re-run `llmapreduce bench spmd` at the repo root"
+        );
+    }
+}
