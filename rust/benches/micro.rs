@@ -2,21 +2,27 @@
 //!
 //! The coordinator paths that run per-job (planner, distribution, script
 //! generation, input scanning) and per-simulated-task (DES event loop),
-//! plus the runtime compile/execute split that *is* the paper's
-//! startup-vs-compute mechanism.  The §Perf pass in EXPERIMENTS.md tracks
-//! these numbers.
+//! the crash-journal append (fsync'd vs buffered) plus the end-to-end
+//! submit→complete latency with the journal on and off, and the runtime
+//! compile/execute split that *is* the paper's startup-vs-compute
+//! mechanism.  The §Perf pass in EXPERIMENTS.md tracks these numbers,
+//! and every row is emitted machine-readably to `BENCH_micro.json` at
+//! the repo root (schema: `bench::experiments::micro_bench_json`).
 
 use std::time::Duration;
 
-use llmapreduce::bench::{bench_fn, BenchStats};
+use llmapreduce::bench::experiments::micro_bench_json;
+use llmapreduce::bench::{artifact_path, bench_fn, BenchStats};
 use llmapreduce::mapreduce::planner::plan;
 use llmapreduce::mapreduce::distribution::distribute;
 use llmapreduce::options::{Distribution, Options, SchedulerKind};
 use llmapreduce::prelude::*;
 use llmapreduce::scheduler::dialect::dialect_for;
+use llmapreduce::scheduler::journal::{Journal, Record};
 use llmapreduce::scheduler::{JobSpec, TaskSpec, TaskWork};
 use llmapreduce::util::json::Json;
 use llmapreduce::workdir::scan::InputFile;
+use llmapreduce::workload::text::generate_corpus;
 
 fn fake_files(n: usize) -> Vec<InputFile> {
     (0..n)
@@ -37,16 +43,19 @@ fn print(s: &BenchStats, items: usize, unit: &str) {
 
 fn main() {
     println!("L3 micro-benchmarks\n");
+    let mut all: Vec<BenchStats> = Vec::new();
 
     // Distribution: the paper's Table II size.
     let s = bench_fn("distribute/block/43580x256", 3, 30, || {
         std::hint::black_box(distribute(43_580, 256, Distribution::Block));
     });
     print(&s, 43_580, "files");
+    all.push(s);
     let s = bench_fn("distribute/cyclic/43580x256", 3, 30, || {
         std::hint::black_box(distribute(43_580, 256, Distribution::Cyclic));
     });
     print(&s, 43_580, "files");
+    all.push(s);
 
     // Full planning (naming + assignment) at Table II scale.
     let files = fake_files(43_580);
@@ -56,6 +65,7 @@ fn main() {
         std::hint::black_box(plan(&files, &opts, dialect.as_ref()).unwrap());
     });
     print(&s, 43_580, "files");
+    all.push(s);
 
     // Submission-script generation per dialect.
     for kind in [
@@ -82,6 +92,7 @@ fn main() {
             },
         );
         print(&s, 1, "scripts");
+        all.push(s);
     }
 
     // DES engine: events/second at Fig 18's biggest cell (512 tasks).
@@ -101,6 +112,7 @@ fn main() {
         std::hint::black_box(eng.run(JobSpec::new("bench", tasks)).unwrap());
     });
     print(&s, 512, "tasks");
+    all.push(s);
 
     // Table II trace through the sim: 256 tasks, 43,580 virtual files.
     let s = bench_fn("sim/table2-trace", 2, 20, || {
@@ -115,6 +127,7 @@ fn main() {
         );
     });
     print(&s, 43_580, "virtual files");
+    all.push(s);
 
     // JSON parser on a manifest-shaped document.
     let doc = r#"{"format":"hlo-text","entries":{"m":{"file":"m.hlo.txt",
@@ -124,6 +137,61 @@ fn main() {
         std::hint::black_box(Json::parse(doc).unwrap());
     });
     print(&s, doc.len(), "bytes");
+    all.push(s);
+
+    // Crash journal: the fsync'd append every task transition pays,
+    // against the buffered (no-fsync) write — the durability tax in
+    // isolation.
+    let jdir = std::env::temp_dir()
+        .join(format!("llmr-bench-journal-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&jdir);
+    std::fs::create_dir_all(&jdir).unwrap();
+    let rec = Record::TaskDone {
+        job: 1,
+        idx: 0,
+        task_id: 1,
+        retries: 0,
+        dead_lettered: false,
+    };
+    let fsynced = Journal::create(jdir.join("fsync.jsonl")).unwrap();
+    let s = bench_fn("journal/record-fsync", 10, 200, || {
+        fsynced.record(std::hint::black_box(&rec));
+    });
+    print(&s, 1, "records");
+    all.push(s);
+    let buffered =
+        Journal::create(jdir.join("buffered.jsonl")).unwrap().no_fsync();
+    let s = bench_fn("journal/record-no-fsync", 10, 200, || {
+        buffered.record(std::hint::black_box(&rec));
+    });
+    print(&s, 1, "records");
+    all.push(s);
+
+    // And end-to-end: submit→complete latency of a real (small)
+    // wordcount pipeline with the journal on vs off.  The delta is the
+    // whole-job cost of crash safety, not just the per-append fsync.
+    let input = jdir.join("input");
+    let _ = generate_corpus(&input, 6, 500, 100, 11).unwrap();
+    let engine = LocalEngine::new(2);
+    let apps = Apps {
+        mapper: llmapreduce::apps::registry::resolve_mapper("wordcount")
+            .unwrap(),
+        reducer: None,
+    };
+    for (name, journal_on) in
+        [("pipeline/journal-fsync", true), ("pipeline/no-journal", false)]
+    {
+        let s = bench_fn(name, 1, 5, || {
+            let opts = Options::new(&input, jdir.join("out"), "wordcount")
+                .np(2)
+                .pid(86000)
+                .journal(journal_on)
+                .workdir(&jdir);
+            std::hint::black_box(run(&opts, &apps, &engine).unwrap());
+        });
+        print(&s, 6, "files");
+        all.push(s);
+    }
 
     // Runtime: compile (startup) vs execute (per-file) — the mechanism.
     if let Ok(manifest) = Manifest::discover() {
@@ -149,7 +217,15 @@ fn main() {
             "\nstartup:execute ratio = {:.1} (the amortization MIMO exploits)",
             compile.median.as_secs_f64() / execute.median.as_secs_f64()
         );
+        all.push(compile);
+        all.push(execute);
     } else {
         println!("(xla benches skipped: no artifacts)");
     }
+
+    let doc = micro_bench_json("cargo-bench-micro", &all);
+    let path = artifact_path("BENCH_micro.json");
+    std::fs::write(&path, doc.to_string_pretty()).unwrap();
+    println!("\njson: {}", path.display());
+    let _ = std::fs::remove_dir_all(&jdir);
 }

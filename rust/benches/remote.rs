@@ -17,6 +17,8 @@ use std::fs;
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
+use llmapreduce::bench::artifact_path;
+use llmapreduce::bench::experiments::{remote_bench_json, RemotePoint};
 use llmapreduce::mapreduce::{run, Apps};
 use llmapreduce::metrics::report::{render_table, worker_attribution};
 use llmapreduce::options::Options;
@@ -235,6 +237,24 @@ fn main() -> Result<()> {
         "all {} configurations produced byte-identical wordcount output",
         rows.len()
     );
+
+    let points: Vec<RemotePoint> = rows
+        .iter()
+        .map(|r| RemotePoint {
+            label: r.label.clone(),
+            makespan: r.elapsed,
+            ship_per_task: r.ship_per_task,
+            compute_per_task: r.compute_per_task,
+            speedup_vs_local: base_elapsed.as_secs_f64()
+                / r.elapsed.as_secs_f64().max(1e-12),
+        })
+        .collect();
+    let doc = remote_bench_json("cargo-bench-remote", &points);
+    let path = artifact_path("BENCH_remote.json");
+    fs::write(&path, doc.to_string_pretty())
+        .map_err(|e| Error::io(path.clone(), e))?;
+    println!("json: {}", path.display());
+
     let _ = fs::remove_dir_all(&root);
     Ok(())
 }

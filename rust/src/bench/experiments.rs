@@ -470,6 +470,106 @@ pub fn spmd_bench_json(
     ])
 }
 
+/// One labelled engine configuration of `cargo bench --bench remote`.
+#[derive(Debug, Clone)]
+pub struct RemotePoint {
+    pub label: String,
+    pub makespan: Duration,
+    /// Mean per-task shipping overhead (assignment round-trip minus
+    /// worker-measured execution); zero for in-process engines.
+    pub ship_per_task: Duration,
+    pub compute_per_task: Duration,
+    /// Local-baseline makespan over this makespan (>1 = faster).
+    pub speedup_vs_local: f64,
+}
+
+/// Serialize `cargo bench --bench micro` stats as the
+/// `BENCH_micro.json` document.  Schema (validated in tests): top-level
+/// `bench`, `source`, and a `points` array whose rows carry `name`,
+/// `iters`, `median_ns`, `mean_ns`, `p95_ns`.  Nanoseconds, because the
+/// hot paths measured here (JSON parse, fsync'd journal appends) sit
+/// below a microsecond on warm hardware.
+pub fn micro_bench_json(
+    source: &str,
+    stats: &[crate::bench::BenchStats],
+) -> crate::util::json::Json {
+    use crate::util::json::{obj, Json};
+    obj(vec![
+        ("bench", "micro".into()),
+        ("source", source.into()),
+        (
+            "points",
+            Json::Arr(
+                stats
+                    .iter()
+                    .map(|s| {
+                        obj(vec![
+                            ("name", s.name.as_str().into()),
+                            ("iters", s.iters.into()),
+                            (
+                                "median_ns",
+                                (s.median.as_nanos() as usize).into(),
+                            ),
+                            (
+                                "mean_ns",
+                                (s.mean.as_nanos() as usize).into(),
+                            ),
+                            (
+                                "p95_ns",
+                                (s.p95.as_nanos() as usize).into(),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Serialize `cargo bench --bench remote` rows as the
+/// `BENCH_remote.json` document.  Schema (validated in tests):
+/// top-level `bench`, `source`, and a `points` array whose rows carry
+/// `label`, `makespan_us`, `ship_per_task_us`, `compute_per_task_us`,
+/// `speedup_vs_local`.
+pub fn remote_bench_json(
+    source: &str,
+    points: &[RemotePoint],
+) -> crate::util::json::Json {
+    use crate::util::json::{obj, Json};
+    obj(vec![
+        ("bench", "remote-shipping".into()),
+        ("source", source.into()),
+        (
+            "points",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        obj(vec![
+                            ("label", p.label.as_str().into()),
+                            (
+                                "makespan_us",
+                                (p.makespan.as_micros() as usize).into(),
+                            ),
+                            (
+                                "ship_per_task_us",
+                                (p.ship_per_task.as_micros() as usize)
+                                    .into(),
+                            ),
+                            (
+                                "compute_per_task_us",
+                                (p.compute_per_task.as_micros() as usize)
+                                    .into(),
+                            ),
+                            ("speedup_vs_local", p.speedup_vs_local.into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -625,6 +725,103 @@ mod tests {
         let text = doc.to_string_pretty();
         let back = crate::util::json::Json::parse(&text).unwrap();
         assert_eq!(back, doc);
+    }
+
+    #[test]
+    fn micro_bench_json_schema() {
+        let stats = vec![crate::bench::bench_fn("json/parse", 0, 3, || {})];
+        let doc = micro_bench_json("cargo-bench-micro", &stats);
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("micro"));
+        assert_eq!(
+            doc.get("source").unwrap().as_str(),
+            Some("cargo-bench-micro")
+        );
+        let points = doc.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(points.len(), 1);
+        let p = &points[0];
+        assert_eq!(p.get("name").unwrap().as_str(), Some("json/parse"));
+        assert_eq!(p.get("iters").unwrap().as_usize(), Some(3));
+        assert!(p.get("median_ns").unwrap().as_usize().is_some());
+        assert!(p.get("mean_ns").unwrap().as_usize().is_some());
+        assert!(p.get("p95_ns").unwrap().as_usize().is_some());
+        let back =
+            crate::util::json::Json::parse(&doc.to_string_pretty()).unwrap();
+        assert_eq!(back, doc);
+    }
+
+    #[test]
+    fn remote_bench_json_schema() {
+        let pts = vec![RemotePoint {
+            label: "local (4 slots)".into(),
+            makespan: Duration::from_millis(120),
+            ship_per_task: Duration::from_micros(300),
+            compute_per_task: Duration::from_millis(4),
+            speedup_vs_local: 1.0,
+        }];
+        let doc = remote_bench_json("cargo-bench-remote", &pts);
+        assert_remote_doc_valid(&doc);
+        let p = &doc.get("points").unwrap().as_arr().unwrap()[0];
+        assert_eq!(p.get("makespan_us").unwrap().as_usize(), Some(120_000));
+        assert_eq!(p.get("ship_per_task_us").unwrap().as_usize(), Some(300));
+        assert_eq!(
+            p.get("compute_per_task_us").unwrap().as_usize(),
+            Some(4_000)
+        );
+        let back =
+            crate::util::json::Json::parse(&doc.to_string_pretty()).unwrap();
+        assert_eq!(back, doc);
+    }
+
+    fn assert_remote_doc_valid(doc: &crate::util::json::Json) {
+        assert_eq!(
+            doc.get("bench").unwrap().as_str(),
+            Some("remote-shipping")
+        );
+        assert!(doc.get("source").unwrap().as_str().is_some());
+        let points = doc.get("points").unwrap().as_arr().unwrap();
+        assert!(!points.is_empty());
+        for p in points {
+            assert!(p.get("label").unwrap().as_str().is_some());
+            assert!(p.get("makespan_us").unwrap().as_usize().is_some());
+            assert!(p.get("speedup_vs_local").unwrap().as_f64().is_some());
+        }
+    }
+
+    /// The committed repo-root artifacts stay schema-compatible with
+    /// the emitters (they are wall-clock measurements, so values are
+    /// representative rather than byte-reproducible like BENCH_spmd).
+    #[test]
+    fn committed_bench_artifacts_validate() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap();
+        let micro = root.join("BENCH_micro.json");
+        if micro.is_file() {
+            let text = std::fs::read_to_string(&micro).unwrap();
+            let doc = crate::util::json::Json::parse(&text).unwrap();
+            assert_eq!(doc.get("bench").unwrap().as_str(), Some("micro"));
+            let points = doc.get("points").unwrap().as_arr().unwrap();
+            // The crash-safety tax is tracked: fsync'd journal appends
+            // and the journal-on/off pipeline pair must be present.
+            for needed in [
+                "journal/record-fsync",
+                "journal/record-no-fsync",
+                "pipeline/journal-fsync",
+                "pipeline/no-journal",
+            ] {
+                assert!(
+                    points.iter().any(|p| p
+                        .get("name")
+                        .and_then(|n| n.as_str())
+                        == Some(needed)),
+                    "BENCH_micro.json must carry the '{needed}' row"
+                );
+            }
+        }
+        let remote = root.join("BENCH_remote.json");
+        if remote.is_file() {
+            let text = std::fs::read_to_string(&remote).unwrap();
+            let doc = crate::util::json::Json::parse(&text).unwrap();
+            assert_remote_doc_valid(&doc);
+        }
     }
 
     #[test]

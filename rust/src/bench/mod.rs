@@ -11,3 +11,18 @@ pub mod experiments;
 pub mod harness;
 
 pub use harness::{bench_fn, BenchStats};
+
+/// Place a bench artifact (`BENCH_*.json`) at the repo root when
+/// running inside the checkout (ROADMAP.md marks it); fall back to the
+/// current directory.  Shared by the CLI `bench` command and the
+/// `cargo bench` targets so every artifact lands in one place.
+pub fn artifact_path(name: &str) -> std::path::PathBuf {
+    let cwd = std::env::current_dir()
+        .unwrap_or_else(|_| std::path::PathBuf::from("."));
+    for dir in cwd.ancestors() {
+        if dir.join("ROADMAP.md").is_file() {
+            return dir.join(name);
+        }
+    }
+    cwd.join(name)
+}

@@ -27,6 +27,10 @@
 //! [spmd]                      # SPMD ganging defaults
 //! enabled = true
 //! items_per_task = 16
+//!
+//! [errors]                    # failure handling (DESIGN.md §8)
+//! on_error = "dlq"            # stop | retry | dlq | skip
+//! failure_threshold = 0.25    # circuit breaker: fail job past this
 //! ```
 
 use std::path::{Path, PathBuf};
@@ -34,6 +38,7 @@ use std::time::Duration;
 
 use crate::error::{Error, IoContext, Result};
 use crate::options::{AppType, Distribution, Options, SchedulerKind};
+use crate::scheduler::journal::OnError;
 use crate::scheduler::sim::ClusterConfig;
 use crate::util::toml::TomlDoc;
 
@@ -113,6 +118,10 @@ pub struct JobDefaults {
     pub spmd: Option<bool>,
     /// `[spmd] items_per_task`: batch size for ganged tasks.
     pub items_per_task: Option<usize>,
+    /// `[errors] on_error`: verdict for a task whose execution errors.
+    pub on_error: Option<OnError>,
+    /// `[errors] failure_threshold`: circuit-breaker error fraction.
+    pub failure_threshold: Option<f64>,
 }
 
 impl Config {
@@ -244,6 +253,24 @@ impl Config {
             }
             j.items_per_task = Some(n);
         }
+        // [errors]
+        if let Some(v) = doc.get("errors.on_error") {
+            j.on_error =
+                Some(OnError::parse(v.as_str().unwrap_or_default())?);
+        }
+        if let Some(v) = doc.get("errors.failure_threshold") {
+            let f = v.as_float().ok_or_else(|| {
+                Error::Config(
+                    "errors.failure_threshold must be a number".into(),
+                )
+            })?;
+            if !(0.0..=1.0).contains(&f) {
+                return Err(Error::Config(
+                    "errors.failure_threshold must be in [0, 1]".into(),
+                ));
+            }
+            j.failure_threshold = Some(f);
+        }
         if let Some(v) = doc.get("job.options") {
             j.scheduler_options = v
                 .as_str_array()
@@ -307,6 +334,18 @@ impl Config {
                 }
             }
         }
+        if let Some(v) = get("LLMR_ON_ERROR") {
+            if let Ok(e) = OnError::parse(&v) {
+                self.job_defaults.on_error = Some(e);
+            }
+        }
+        if let Some(v) = get("LLMR_FAILURE_THRESHOLD") {
+            if let Ok(f) = v.parse::<f64>() {
+                if (0.0..=1.0).contains(&f) {
+                    self.job_defaults.failure_threshold = Some(f);
+                }
+            }
+        }
     }
 
     /// Fill unset fields of `opts` from the job defaults (CLI wins).
@@ -359,6 +398,12 @@ impl Config {
         }
         if opts.items_per_task.is_none() {
             opts.items_per_task = j.items_per_task;
+        }
+        if opts.on_error.is_none() {
+            opts.on_error = j.on_error;
+        }
+        if opts.failure_threshold.is_none() {
+            opts.failure_threshold = j.failure_threshold;
         }
     }
 
@@ -532,6 +577,45 @@ options = ["-l mem=8G"]
         assert!(
             Config::parse("[spmd]\nitems_per_task = 0\n").is_err(),
             "zero batch size rejected at parse time"
+        );
+    }
+
+    #[test]
+    fn errors_section_env_and_precedence() {
+        let c = Config::parse(
+            "[errors]\non_error = \"dlq\"\nfailure_threshold = 0.25\n",
+        )
+        .unwrap();
+        assert_eq!(c.job_defaults.on_error, Some(OnError::Dlq));
+        assert_eq!(c.job_defaults.failure_threshold, Some(0.25));
+
+        // Config fills unset options; CLI-provided values win.
+        let mut opts = Options::new("/in", "/out", "m");
+        c.apply_job_defaults(&mut opts);
+        assert_eq!(opts.on_error, Some(OnError::Dlq));
+        assert_eq!(opts.failure_threshold, Some(0.25));
+        let mut explicit = Options::new("/in", "/out", "m")
+            .on_error(OnError::Retry)
+            .failure_threshold(0.5);
+        c.apply_job_defaults(&mut explicit);
+        assert_eq!(explicit.on_error, Some(OnError::Retry));
+        assert_eq!(explicit.failure_threshold, Some(0.5));
+
+        // Env sits between config and CLI.
+        let mut e = c.clone();
+        e.apply_env_overrides(|k| match k {
+            "LLMR_ON_ERROR" => Some("skip".into()),
+            "LLMR_FAILURE_THRESHOLD" => Some("0.75".into()),
+            _ => None,
+        });
+        assert_eq!(e.job_defaults.on_error, Some(OnError::Skip));
+        assert_eq!(e.job_defaults.failure_threshold, Some(0.75));
+
+        assert!(
+            Config::parse("[errors]\non_error = \"explode\"\n").is_err()
+        );
+        assert!(
+            Config::parse("[errors]\nfailure_threshold = 1.5\n").is_err()
         );
     }
 

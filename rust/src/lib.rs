@@ -67,9 +67,10 @@ pub mod prelude {
     pub use crate::apps::{MapApp, MapInstance, ReduceApp};
     pub use crate::error::{Error, Result};
     pub use crate::mapreduce::{
-        run, run_nested, Apps, Invocation, InvocationStatus,
-        MapReduceReport, MultiLevelReport, Session,
+        dlq_reprocess, resume, run, run_nested, Apps, Invocation,
+        InvocationStatus, MapReduceReport, MultiLevelReport, Session,
     };
+    pub use crate::scheduler::journal::{ErrorPolicy, OnError};
     pub use crate::options::{AppType, Distribution, Options, SchedulerKind};
     pub use crate::runtime::Manifest;
     pub use crate::scheduler::failure::FailurePolicy;

@@ -23,7 +23,8 @@ use llmapreduce::bench::experiments::{
 use llmapreduce::error::{Error, Result};
 use llmapreduce::mapreduce::{run, Apps};
 use llmapreduce::metrics::report::{
-    overhead_series, speedup_series, sweep_csv, worker_attribution,
+    overhead_series, recovery_summary, speedup_series, sweep_csv,
+    worker_attribution,
 };
 use llmapreduce::options::{Options, WorkerOptions};
 use llmapreduce::prelude::{LocalEngine, Manifest};
@@ -39,6 +40,11 @@ llmapreduce — LLMapReduce (HPEC'16) on a Rust + JAX + Pallas stack
 
 USAGE:
   llmapreduce run [Fig 2 options]        run one map-reduce job
+  llmapreduce resume <.MAPRED.PID dir>   resume a crashed job from its
+                                         journal (re-runs only tasks
+                                         without a completion record)
+  llmapreduce dlq reprocess <.MAPRED.PID dir>
+                                         resubmit dead-lettered tasks
   llmapreduce worker --connect=H:P       join a remote coordinator
   llmapreduce gen-data <kind> [opts]     generate synthetic workloads
   llmapreduce bench <experiment>         regenerate a paper table/figure
@@ -64,6 +70,14 @@ RUN OPTIONS (Fig 2 of the paper):
           app instance per task; see DESIGN.md §7)
         --items-per-task=N (batch size for --spmd, default 16;
           implies --spmd)
+        --on-error=stop|retry|dlq|skip (what to do when a task's
+          execution errors; default stop.  dlq completes the job and
+          records the task in the workdir's dead-letter queue)
+        --failure-threshold=F (circuit breaker: fail the whole job
+          once more than fraction F of its tasks have errored;
+          0.0..=1.0, default 1.0 = never)
+  resume/dlq also accept --slots/--engine/--listen/--min-workers;
+  everything else (apps, Fig 2 options) is restored from the journal.
 
 WORKER (the daemon side of --engine=remote; spawn one per node):
   llmapreduce worker --connect=HOST:PORT [--slots=N] [--name=S]
@@ -98,6 +112,8 @@ fn main() {
 fn dispatch(args: &[String]) -> Result<()> {
     match args.first().map(String::as_str) {
         Some("run") => cmd_run(&args[1..]),
+        Some("resume") => cmd_resume(&args[1..]),
+        Some("dlq") => cmd_dlq(&args[1..]),
         Some("worker") => cmd_worker(&args[1..]),
         Some("gen-data") => cmd_gen_data(&args[1..]),
         Some("bench") => cmd_bench(&args[1..]),
@@ -153,31 +169,22 @@ fn split_engine_args(args: &[String]) -> (Vec<String>, EngineArgs) {
     (rest, ea)
 }
 
-fn cmd_run(args: &[String]) -> Result<()> {
-    let (fig2_args, engine_args) = split_engine_args(args);
-    let mut opts = Options::parse_args(&fig2_args)?;
-
-    // Config file + env defaults under explicit CLI values.
-    let mut config = llmapreduce::config::Config::discover()?;
-    config.apply_job_defaults(&mut opts);
+/// Apply the `--engine`/`--listen`/`--min-workers` overrides and build
+/// the engine (shared by `run`, `resume` and `dlq reprocess`).
+fn engine_from(
+    mut config: llmapreduce::config::Config,
+    engine_args: &EngineArgs,
+    width: usize,
+) -> Result<Box<dyn llmapreduce::scheduler::Engine>> {
     if let Some(e) = &engine_args.engine {
         config.engine = llmapreduce::config::EngineKind::parse(e)?;
     }
-    if let Some(l) = engine_args.listen {
-        config.remote.listen = l;
+    if let Some(l) = &engine_args.listen {
+        config.remote.listen = l.clone();
     }
     if let Some(n) = engine_args.min_workers {
         config.remote.min_workers = n;
     }
-
-    let mapper = resolve_mapper(&opts.mapper)?;
-    let reducer = opts
-        .reducer
-        .as_deref()
-        .map(resolve_reducer)
-        .transpose()?;
-    let apps = Apps { mapper, reducer };
-    let width = engine_args.slots.or(opts.np).unwrap_or(4);
     if config.engine == llmapreduce::config::EngineKind::Remote {
         println!(
             "coordinator binding {} — waiting for {} worker(s); spawn \
@@ -187,7 +194,26 @@ fn cmd_run(args: &[String]) -> Result<()> {
             config.remote.listen
         );
     }
-    let engine = config.build_engine(width)?;
+    config.build_engine(width)
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let (fig2_args, engine_args) = split_engine_args(args);
+    let mut opts = Options::parse_args(&fig2_args)?;
+
+    // Config file + env defaults under explicit CLI values.
+    let config = llmapreduce::config::Config::discover()?;
+    config.apply_job_defaults(&mut opts);
+
+    let mapper = resolve_mapper(&opts.mapper)?;
+    let reducer = opts
+        .reducer
+        .as_deref()
+        .map(resolve_reducer)
+        .transpose()?;
+    let apps = Apps { mapper, reducer };
+    let width = engine_args.slots.or(opts.np).unwrap_or(4);
+    let engine = engine_from(config, &engine_args, width)?;
     let report = run(&opts, &apps, engine.as_ref())?;
     println!("engine: {}", engine.name());
 
@@ -225,11 +251,101 @@ fn cmd_run(args: &[String]) -> Result<()> {
     if let Some(d) = &report.mapred_dir {
         println!("  kept workdir: {}", d.display());
     }
+    let dead = report.map.dead_lettered();
+    if dead > 0 {
+        let wd = report
+            .mapred_dir
+            .as_ref()
+            .map(|d| d.display().to_string())
+            .unwrap_or_else(|| "<workdir>".into());
+        println!(
+            "  dead-lettered: {dead} task(s) — inspect {wd}/dlq.jsonl, \
+             resubmit with `llmapreduce dlq reprocess {wd}`"
+        );
+    }
     if engine.name() == "remote" {
         println!("\nper-worker attribution (map job):");
         println!("{}", worker_attribution(&report.map));
     }
     Ok(())
+}
+
+/// Shared argument parsing for `resume` / `dlq reprocess`: one workdir
+/// positional plus the engine-selection flags.
+fn recovery_args(
+    what: &str,
+    args: &[String],
+) -> Result<(PathBuf, EngineArgs)> {
+    let (rest, engine_args) = split_engine_args(args);
+    let workdir = rest.first().ok_or_else(|| {
+        Error::opt(format!(
+            "{what} needs the crashed run's .MAPRED.<pid> directory"
+        ))
+    })?;
+    if let Some(extra) = rest.get(1) {
+        return Err(Error::opt(format!(
+            "unexpected {what} argument '{extra}'"
+        )));
+    }
+    Ok((PathBuf::from(workdir), engine_args))
+}
+
+/// `llmapreduce resume <workdir>`: reconstruct a crashed invocation
+/// from its journal and re-run only the tasks that never completed.
+fn cmd_resume(args: &[String]) -> Result<()> {
+    let (workdir, engine_args) = recovery_args("resume", args)?;
+    let config = llmapreduce::config::Config::discover()?;
+    let width = engine_args.slots.unwrap_or(4);
+    let engine = engine_from(config, &engine_args, width)?;
+    let report =
+        llmapreduce::mapreduce::resume(&workdir, engine.as_ref())?;
+    println!(
+        "resumed {}: {} task(s) already complete (skipped), {} re-run",
+        workdir.display(),
+        report.map.replayed,
+        report.plan.tasks.len() - report.map.replayed,
+    );
+    if let Some(p) = &report.redout_path {
+        println!("  reduce output: {}", p.display());
+    }
+    println!("{}", recovery_summary(&report.map));
+    Ok(())
+}
+
+/// `llmapreduce dlq reprocess <workdir>`: resubmit every dead-lettered
+/// task through the normal planner path and re-reduce.
+fn cmd_dlq(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        Some("reprocess") => {
+            let (workdir, engine_args) =
+                recovery_args("dlq reprocess", &args[1..])?;
+            let config = llmapreduce::config::Config::discover()?;
+            let width = engine_args.slots.unwrap_or(4);
+            let engine = engine_from(config, &engine_args, width)?;
+            let report = llmapreduce::mapreduce::dlq_reprocess(
+                &workdir,
+                engine.as_ref(),
+            )?;
+            println!(
+                "reprocessed {} dead-lettered task(s) from {}",
+                report.map.tasks.len(),
+                workdir.display(),
+            );
+            let dead = report.map.dead_lettered();
+            if dead > 0 {
+                println!(
+                    "  {dead} task(s) failed again and were re-enqueued"
+                );
+            }
+            if let Some(p) = &report.redout_path {
+                println!("  reduce output: {}", p.display());
+            }
+            Ok(())
+        }
+        _ => Err(Error::opt(
+            "usage: llmapreduce dlq reprocess <.MAPRED.PID dir>",
+        )),
+    }
 }
 
 /// `llmapreduce worker`: the daemon side of `--engine=remote`.  Blocks
@@ -418,25 +534,12 @@ fn cmd_bench(args: &[String]) -> Result<()> {
             );
         }
         let doc = spmd_bench_json("sim-virtual", 64, hint, &pts);
-        let path = bench_output_path("BENCH_spmd.json");
+        let path = llmapreduce::bench::artifact_path("BENCH_spmd.json");
         std::fs::write(&path, doc.to_string_pretty())
             .map_err(|e| Error::io(path.clone(), e))?;
         println!("\njson: {}", path.display());
     }
     Ok(())
-}
-
-/// Place a bench artifact at the repo root when running inside the
-/// checkout (ROADMAP.md marks it); fall back to the current directory.
-fn bench_output_path(name: &str) -> PathBuf {
-    let cwd =
-        std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
-    for dir in cwd.ancestors() {
-        if dir.join("ROADMAP.md").is_file() {
-            return dir.join(name);
-        }
-    }
-    cwd.join(name)
 }
 
 /// Calibrate the Fig 18/19 cost model against the real matmul app when

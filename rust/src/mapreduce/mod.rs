@@ -8,6 +8,9 @@
 //! * [`pipeline`] — the Fig 1 flow (scan → array job → dependent
 //!   reducer) as a blocking submit-and-wait wrapper over [`session`];
 //! * [`mimo`] — the SISO→MIMO morph that gives the paper its headline;
+//! * [`resume`] — crash recovery: fold the append-only journal back
+//!   into per-task state, re-run only what never finished, drain the
+//!   dead-letter queue;
 //! * [`subdir`] — `--subdir` output-tree replication;
 //! * [`multilevel`] — nested LLMapReduce over directory hierarchies,
 //!   fanning every subdirectory pipeline out concurrently.
@@ -17,10 +20,12 @@ pub mod mimo;
 pub mod multilevel;
 pub mod pipeline;
 pub mod planner;
+pub mod resume;
 pub mod session;
 pub mod subdir;
 
 pub use multilevel::{run_nested, run_nested_depth, MultiLevelReport};
 pub use pipeline::{run, Apps, MapReduceReport};
 pub use planner::{plan, Plan, PlannedTask};
+pub use resume::{dlq_reprocess, resume};
 pub use session::{Invocation, InvocationStatus, Session};

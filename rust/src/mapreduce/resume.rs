@@ -1,0 +1,418 @@
+//! Crash recovery: `llmapreduce resume` and `llmapreduce dlq
+//! reprocess` (DESIGN.md §8).
+//!
+//! A crashed coordinator leaves its `.MAPRED.<pid>` directory behind
+//! (SIGKILL skips [`MapRedDir`]'s drop), and inside it the fsync'd
+//! journal of every table transition the run made.  [`resume`] folds
+//! that journal back into per-task completion state, re-plans the
+//! invocation from the recorded options (planning is deterministic:
+//! same input scan + same options → same task ids), and resubmits
+//! **only the tasks without a `done` record** under the original task
+//! ids — finished work is never repeated, and SPMD batches re-run
+//! whole because the batch *is* the task.  The reduce step always
+//! re-runs barriered over the full output directory: mapper outputs
+//! from before and after the crash are indistinguishable there, which
+//! is what makes resumed output byte-identical to an uninterrupted
+//! run (overlap is not resumed — partials staged by the crashed run
+//! are untrusted scratch).
+//!
+//! [`dlq_reprocess`] drains the per-job dead-letter queue instead: it
+//! re-plans the same way, but resubmits exactly the dead-lettered
+//! task ids.  The queue file is consumed at submission — a
+//! reprocessed task that fails again is dead-lettered anew by the
+//! normal policy path, so entries re-enqueue rather than duplicate.
+
+use std::collections::HashSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::apps::registry::{resolve_mapper, resolve_reducer};
+use crate::error::{Error, IoContext, Result};
+use crate::mapreduce::pipeline::{Apps, MapReduceReport};
+use crate::mapreduce::planner::{plan, Plan};
+use crate::mapreduce::subdir::replicate_output_tree;
+use crate::options::Options;
+use crate::scheduler::dialect::dialect_for;
+use crate::scheduler::journal::{
+    DeadLetter, Journal, Record, Replay, DLQ_FILE, JOURNAL_FILE,
+};
+use crate::scheduler::{Engine, JobSpec, TaskSpec, TaskWork};
+use crate::workdir::scan::scan_input;
+use crate::workdir::MapRedDir;
+
+/// Everything reconstructed from a crashed run's journal header.
+struct Recovered {
+    opts: Options,
+    apps: Apps,
+    replay: Replay,
+    journal_path: PathBuf,
+}
+
+/// Load the journal under `workdir` and rebuild options + apps from
+/// its invocation header.
+fn recover(workdir: &Path) -> Result<Recovered> {
+    let journal_path = workdir.join(JOURNAL_FILE);
+    let replay = Replay::load(&journal_path)?;
+    let inv = replay.invocation.clone().ok_or_else(|| Error::Format {
+        kind: "journal",
+        path: journal_path.clone(),
+        reason: "journal has no invocation header record".into(),
+    })?;
+    let mut opts = Options::from_json(&inv.options)?;
+    // Pin the crashed run's pid so scratch naming lines up.
+    opts.pid = Some(inv.pid);
+    let mapper = resolve_mapper(&inv.mapper)?;
+    let reducer = match &inv.reducer {
+        Some(spec) => Some(resolve_reducer(spec)?),
+        None => None,
+    };
+    Ok(Recovered {
+        opts,
+        apps: Apps { mapper, reducer },
+        replay,
+        journal_path,
+    })
+}
+
+/// Re-plan the recovered invocation.  Planning is deterministic, so
+/// this reproduces the crashed run's task ids; the recorded task
+/// count is the sanity check that the input set did not change
+/// underneath the journal.
+fn replan(opts: &Options) -> Result<Plan> {
+    let dialect = dialect_for(opts.scheduler);
+    let files = scan_input(&opts.input, opts.subdir)?;
+    plan(&files, opts, dialect.as_ref())
+}
+
+/// Check the re-plan against the journaled task count.
+fn check_ntasks(
+    the_plan: &Plan,
+    recorded: usize,
+    journal_path: &Path,
+) -> Result<()> {
+    if the_plan.tasks.len() != recorded {
+        return Err(Error::Format {
+            kind: "journal",
+            path: journal_path.to_path_buf(),
+            reason: format!(
+                "input changed since the crashed run: re-plan produced \
+                 {} tasks but the journal recorded {recorded}",
+                the_plan.tasks.len()
+            ),
+        });
+    }
+    Ok(())
+}
+
+/// Submit the selected mapper tasks plus the barriered reduce, wait
+/// the chain out reduce-first, and assemble the report.  Shared by
+/// [`resume`] and [`dlq_reprocess`] — both are "re-run this subset of
+/// the planned tasks, then re-reduce everything".
+fn run_subset(
+    engine: &dyn Engine,
+    opts: &Options,
+    apps: &Apps,
+    the_plan: Plan,
+    select: &HashSet<usize>,
+    journal: Option<Arc<Journal>>,
+    replayed: usize,
+) -> Result<MapReduceReport> {
+    replicate_output_tree(&the_plan)?;
+    let map_tasks: Vec<TaskSpec> = the_plan
+        .tasks
+        .iter()
+        .filter(|t| select.contains(&t.task_id))
+        .map(|t| TaskSpec {
+            task_id: t.task_id,
+            work: TaskWork::Map {
+                app: apps.mapper.clone(),
+                pairs: t.pairs.clone(),
+                mode: the_plan.apptype,
+            },
+        })
+        .collect();
+    let mut map_spec = JobSpec::new(apps.mapper.name(), map_tasks)
+        .exclusive(opts.exclusive)
+        .error_policy(opts.effective_error_policy());
+    if let Some(j) = &journal {
+        map_spec = map_spec.journal(j.clone());
+    }
+    let map_id = engine.submit(map_spec)?;
+
+    let (reduce_id, redout_path) = match &apps.reducer {
+        Some(reducer) => {
+            let redout = opts.output.join(&opts.redout);
+            let mut spec = JobSpec::new(
+                reducer.name(),
+                vec![TaskSpec {
+                    task_id: 1,
+                    work: TaskWork::Reduce {
+                        app: reducer.clone(),
+                        input_dir: opts.output.clone(),
+                        out_file: redout.clone(),
+                    },
+                }],
+            )
+            .after(map_id);
+            if let Some(j) = &journal {
+                spec = spec.journal(j.clone());
+            }
+            (Some(engine.submit(spec)?), Some(redout))
+        }
+        None => (None, None),
+    };
+
+    // Reduce-first, like `Invocation::wait_jobs`: a dependency failure
+    // surfaces as the downstream error the caller sees.
+    let reduce_report = match reduce_id {
+        Some(rid) => Some(engine.wait(rid)?),
+        None => None,
+    };
+    let mut map_report = engine.wait(map_id)?;
+    map_report.replayed = replayed;
+
+    let reduce_makespan = reduce_report
+        .as_ref()
+        .map(|r| r.makespan)
+        .unwrap_or(Duration::ZERO);
+    let total_elapsed = if engine.virtual_time() {
+        map_report.makespan + reduce_makespan
+    } else {
+        map_report.makespan.max(reduce_makespan)
+    };
+
+    Ok(MapReduceReport {
+        map: map_report,
+        partials: None,
+        reduce: reduce_report,
+        plan: the_plan,
+        redout_path,
+        mapred_dir: None,
+        overlapped: false,
+        total_elapsed,
+    })
+}
+
+/// On a clean finish the crashed run's scratch is no longer needed:
+/// adopt and drop `.MAPRED.<pid>` (unless `--keep`), exactly like the
+/// normal path's end-of-invocation cleanup.  Failure paths never get
+/// here, so the journal stays on disk for another `resume`.
+fn finish_workdir(workdir: &Path, keep: bool) -> Option<PathBuf> {
+    if keep {
+        return Some(workdir.to_path_buf());
+    }
+    if let Ok(wd) = MapRedDir::adopt(workdir, false) {
+        drop(wd);
+    }
+    None
+}
+
+/// Resume a crashed invocation from its `.MAPRED.<pid>` directory.
+///
+/// Re-runs only mapper tasks without a journaled `done` record (under
+/// their original task ids), then re-reduces the full output
+/// directory; the merged output is byte-identical to an uninterrupted
+/// run.  Returns the report with [`crate::scheduler::JobReport::replayed`]
+/// set to the number of tasks skipped as already complete.
+pub fn resume(
+    workdir: &Path,
+    engine: &dyn Engine,
+) -> Result<MapReduceReport> {
+    let Recovered {
+        opts,
+        apps,
+        replay,
+        journal_path,
+    } = recover(workdir)?;
+    let recorded = replay.invocation.as_ref().map_or(0, |i| i.ntasks);
+    let the_plan = replan(&opts)?;
+    check_ntasks(&the_plan, recorded, &journal_path)?;
+
+    let done = replay.done_task_ids(apps.mapper.name());
+    let pending: HashSet<usize> = the_plan
+        .tasks
+        .iter()
+        .map(|t| t.task_id)
+        .filter(|id| !done.contains(id))
+        .collect();
+
+    // Continue the same journal (append — the history before the crash
+    // is what makes resume-of-resume work).
+    let journal = if opts.journal {
+        let j = Arc::new(Journal::open_append(&journal_path)?);
+        j.record(&Record::Resumed {
+            done: done.len(),
+            total: the_plan.tasks.len(),
+        });
+        Some(j)
+    } else {
+        None
+    };
+
+    let mut report = run_subset(
+        engine,
+        &opts,
+        &apps,
+        the_plan,
+        &pending,
+        journal,
+        done.len(),
+    )?;
+    report.mapred_dir = finish_workdir(workdir, opts.keep);
+    Ok(report)
+}
+
+/// Re-drive the dead-letter queue of a crashed-or-finished run: every
+/// dead-lettered task is resubmitted through the normal planner path,
+/// then the reduce re-runs over the full output directory.  The queue
+/// file is consumed up front; tasks that fail again re-enqueue via
+/// the normal policy path.
+pub fn dlq_reprocess(
+    workdir: &Path,
+    engine: &dyn Engine,
+) -> Result<MapReduceReport> {
+    let Recovered {
+        opts,
+        apps,
+        replay,
+        journal_path,
+    } = recover(workdir)?;
+    let dlq_path = workdir.join(DLQ_FILE);
+    let text = fs::read_to_string(&dlq_path).at(&dlq_path)?;
+    let mut entries: Vec<DeadLetter> = Vec::new();
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        entries.push(DeadLetter::decode(line, &dlq_path)?);
+    }
+    if entries.is_empty() {
+        return Err(Error::opt(format!(
+            "dead-letter queue is empty: {}",
+            dlq_path.display()
+        )));
+    }
+
+    let recorded = replay.invocation.as_ref().map_or(0, |i| i.ntasks);
+    let the_plan = replan(&opts)?;
+    check_ntasks(&the_plan, recorded, &journal_path)?;
+    let select: HashSet<usize> =
+        entries.iter().map(|e| e.task_id).collect();
+
+    // Consume the queue: reprocessing owns these entries now; a task
+    // that fails again is re-enqueued by the policy path, not left as
+    // a stale duplicate.
+    fs::remove_file(&dlq_path).at(&dlq_path)?;
+
+    let journal = if opts.journal {
+        let j = Arc::new(Journal::open_append(&journal_path)?);
+        j.record(&Record::Resumed {
+            done: the_plan.tasks.len() - select.len(),
+            total: the_plan.tasks.len(),
+        });
+        Some(j)
+    } else {
+        None
+    };
+
+    run_subset(engine, &opts, &apps, the_plan, &select, journal, 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::local::LocalEngine;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("llmr-resume-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn seed_inputs(dir: &Path, n: usize) {
+        for i in 0..n {
+            fs::write(
+                dir.join(format!("f{i:02}.txt")),
+                format!("alpha beta x{i}\n"),
+            )
+            .unwrap();
+        }
+    }
+
+    /// Registry-resolvable apps (resume rebuilds apps from the
+    /// journaled wire specs, so test apps must round-trip through
+    /// `resolve_mapper`/`resolve_reducer`).
+    fn wordcount_apps() -> Apps {
+        Apps {
+            mapper: resolve_mapper("wordcount").unwrap(),
+            reducer: Some(resolve_reducer("wordcount-reducer").unwrap()),
+        }
+    }
+
+    #[test]
+    fn resume_without_a_journal_is_a_clean_error() {
+        let wd = tmp("nojournal");
+        let engine = LocalEngine::new(2);
+        assert!(resume(&wd, &engine).is_err());
+    }
+
+    #[test]
+    fn resume_after_clean_submit_reruns_nothing_and_keeps() {
+        let base = tmp("clean");
+        let input = base.join("in");
+        let output = base.join("out");
+        fs::create_dir_all(&input).unwrap();
+        seed_inputs(&input, 4);
+        let opts = Options::new(&input, &output, "wordcount")
+            .np(2)
+            .pid(93001)
+            .keep(true)
+            .workdir(&base);
+        let apps = wordcount_apps();
+        let engine = LocalEngine::new(2);
+        let report =
+            crate::mapreduce::pipeline::run(&opts, &apps, &engine)
+                .unwrap();
+        assert_eq!(report.map.tasks.len(), 2);
+        let wd = base.join(".MAPRED.93001");
+        assert!(wd.is_dir(), "--keep preserves workdir + journal");
+
+        // Everything is journaled done: resume re-runs zero map tasks
+        // but still re-reduces, and reports the replayed count.
+        let resumed = resume(&wd, &engine).unwrap();
+        assert_eq!(resumed.map.replayed, 2);
+        assert_eq!(resumed.map.tasks.len(), 0);
+        assert!(resumed.reduce.is_some());
+        assert!(
+            wd.is_dir(),
+            "journal recorded --keep, so resume also keeps"
+        );
+    }
+
+    #[test]
+    fn dlq_reprocess_needs_a_queue() {
+        let base = tmp("dlqempty");
+        let input = base.join("in");
+        let output = base.join("out");
+        fs::create_dir_all(&input).unwrap();
+        seed_inputs(&input, 2);
+        let opts = Options::new(&input, &output, "wordcount")
+            .np(2)
+            .pid(93002)
+            .keep(true)
+            .workdir(&base);
+        let apps = Apps {
+            mapper: resolve_mapper("wordcount").unwrap(),
+            reducer: None,
+        };
+        let engine = LocalEngine::new(2);
+        crate::mapreduce::pipeline::run(&opts, &apps, &engine).unwrap();
+        let wd = base.join(".MAPRED.93002");
+        // No task ever errored: there is no dlq.jsonl to reprocess.
+        assert!(dlq_reprocess(&wd, &engine).is_err());
+    }
+}

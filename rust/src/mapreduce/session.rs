@@ -56,7 +56,7 @@
 use std::fs;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU32, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::error::Result;
@@ -65,6 +65,7 @@ use crate::mapreduce::planner::{plan, Plan};
 use crate::mapreduce::subdir::replicate_output_tree;
 use crate::options::Options;
 use crate::scheduler::dialect::dialect_for;
+use crate::scheduler::journal::{Journal, Record, JOURNAL_FILE};
 use crate::scheduler::{Engine, JobId, JobReport, JobSpec, TaskSpec, TaskWork};
 use crate::workdir::scan::scan_input;
 use crate::workdir::scripts::{reduce_run_script, write_all};
@@ -151,6 +152,28 @@ impl<'e> Session<'e> {
         write_all(&wd, &the_plan, opts, dialect.as_ref())?;
         replicate_output_tree(&the_plan)?;
 
+        // Crash journal: every table transition of this chain is
+        // appended (fsync'd) under the workdir so `llmapreduce resume`
+        // can reconstruct in-flight state after a coordinator death.
+        // The header record carries everything resume needs to rebuild
+        // the invocation: apps by wire spec, the full option set, and
+        // the planned task count (a re-plan sanity check).
+        let journal = if opts.journal {
+            let j = Arc::new(Journal::create(
+                wd.path().join(JOURNAL_FILE),
+            )?);
+            j.record(&Record::Invocation {
+                pid,
+                mapper: apps.mapper.wire_spec(),
+                reducer: apps.reducer.as_ref().map(|r| r.wire_spec()),
+                ntasks: the_plan.tasks.len(),
+                options: opts.to_json(),
+            });
+            Some(j)
+        } else {
+            None
+        };
+
         // Step 2: the mapper array job.  The plan's apptype, not the raw
         // option, is the execution mode: under `--spmd` the planner
         // packed batches and switched the plan to `AppType::Spmd`, so
@@ -167,8 +190,12 @@ impl<'e> Session<'e> {
                 },
             })
             .collect();
-        let map_spec = JobSpec::new(apps.mapper.name(), map_tasks)
-            .exclusive(opts.exclusive);
+        let mut map_spec = JobSpec::new(apps.mapper.name(), map_tasks)
+            .exclusive(opts.exclusive)
+            .error_policy(opts.effective_error_policy());
+        if let Some(j) = &journal {
+            map_spec = map_spec.journal(j.clone());
+        }
         let map_id = engine.submit(map_spec)?;
 
         // Step 3: the dependent reduce — barriered (Fig 1) or
@@ -201,7 +228,7 @@ impl<'e> Session<'e> {
             // The (final) reduce job is identical in both modes except
             // for the directory it scans and the job it depends on.
             let reduce_spec = |input_dir: PathBuf| {
-                JobSpec::new(
+                let spec = JobSpec::new(
                     reducer.name(),
                     vec![TaskSpec {
                         task_id: 1,
@@ -211,7 +238,11 @@ impl<'e> Session<'e> {
                             out_file: redout.clone(),
                         },
                     }],
-                )
+                );
+                match &journal {
+                    Some(j) => spec.journal(j.clone()),
+                    None => spec,
+                }
             };
             if overlap {
                 // Step 3a: one partial-reduce task per mapper task, each
@@ -237,11 +268,14 @@ impl<'e> Session<'e> {
                         },
                     })
                     .collect();
-                let partial_spec = JobSpec::new(
+                let mut partial_spec = JobSpec::new(
                     format!("{}.partial", reducer.name()),
                     partial_tasks,
                 )
                 .after_tasks(map_id, the_plan.overlap_edges());
+                if let Some(j) = &journal {
+                    partial_spec = partial_spec.journal(j.clone());
+                }
                 let pid_job = engine.submit(partial_spec)?;
                 // Step 3b: the final merge over the partials directory.
                 let final_spec = reduce_spec(pdir.clone()).after(pid_job);
@@ -383,8 +417,21 @@ impl Invocation<'_> {
                 let _ = fs::remove_dir_all(pdir);
             }
         }
+        // Scratch survives --keep, a failed chain (the journal inside
+        // is what `llmapreduce resume` replays), and any run that
+        // dead-lettered tasks (the queue file lives there and
+        // `llmapreduce dlq reprocess` consumes it).
+        let keep_scratch = self.keep
+            || match &waited {
+                Ok((m, p, r)) => {
+                    m.dead_lettered() > 0
+                        || p.as_ref().is_some_and(|j| j.dead_lettered() > 0)
+                        || r.as_ref().is_some_and(|j| j.dead_lettered() > 0)
+                }
+                Err(_) => true,
+            };
         let mapred_dir = match self.workdir.take() {
-            Some(wd) if self.keep => Some(wd.persist()),
+            Some(wd) if keep_scratch => Some(wd.persist()),
             _ => None, // dropped -> deleted, the paper's default
         };
         let (map_report, partial_report, reduce_report) = waited?;

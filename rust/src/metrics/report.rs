@@ -158,6 +158,25 @@ pub fn worker_attribution(job: &crate::scheduler::JobReport) -> String {
     )
 }
 
+/// Crash-recovery summary of one job (DESIGN.md §8): how much work a
+/// resume skipped vs re-ran, and where the failure machinery engaged —
+/// retries, dead letters, reassignments off dead workers.
+pub fn recovery_summary(job: &crate::scheduler::JobReport) -> String {
+    let retries: usize = job.tasks.iter().map(|t| t.retries).sum();
+    let reassigned: usize =
+        job.tasks.iter().map(|t| t.reassigned).sum();
+    render_table(
+        &["replayed", "re-run", "retries", "dead-lettered", "reassigned"],
+        &[vec![
+            job.replayed.to_string(),
+            job.tasks.len().to_string(),
+            retries.to_string(),
+            job.dead_lettered().to_string(),
+            reassigned.to_string(),
+        ]],
+    )
+}
+
 /// Fig 18: overhead per array task, one row per np, one column per option.
 pub fn overhead_series(sweep: &Sweep) -> String {
     let options = sweep.options();
@@ -387,6 +406,31 @@ mod tests {
         let w1_row = t.lines().find(|l| l.contains("w1")).unwrap();
         assert!(w1_row.contains("| 2 "), "{w1_row}");
         assert!(w1_row.contains("12"), "{w1_row}");
+    }
+
+    #[test]
+    fn recovery_summary_counts_the_failure_machinery() {
+        use crate::scheduler::{JobReport, TaskReport};
+        let job = JobReport {
+            replayed: 3,
+            tasks: vec![
+                TaskReport {
+                    retries: 2,
+                    ..Default::default()
+                },
+                TaskReport {
+                    dead_lettered: true,
+                    reassigned: 1,
+                    ..Default::default()
+                },
+            ],
+            ..Default::default()
+        };
+        let t = recovery_summary(&job);
+        let row = t.lines().nth(3).unwrap();
+        assert!(row.contains("| 3 "), "replayed: {row}");
+        assert!(row.contains("| 2 "), "re-run + retries: {row}");
+        assert!(row.contains("| 1 "), "dlq + reassigned: {row}");
     }
 
     #[test]

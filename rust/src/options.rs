@@ -18,6 +18,8 @@
 use std::path::PathBuf;
 
 use crate::error::{Error, Result};
+use crate::scheduler::journal::OnError;
+use crate::util::json::{obj, Json};
 
 /// How input files are spread over array tasks (§II, `--distribution`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -186,6 +188,19 @@ pub struct Options {
     /// Where `.MAPRED.<PID>` is created; defaults to the current working
     /// directory (the paper's behaviour).
     pub workdir: Option<PathBuf>,
+    /// `--on-error`: what a task's terminal execution error does to the
+    /// map job — `stop` (fail the job, historic default), `retry`
+    /// (re-queue then dead-letter), `dlq` (dead-letter immediately),
+    /// `skip` (drop silently).  `None` = stop.
+    pub on_error: Option<OnError>,
+    /// `--failure-threshold`: circuit breaker — halt the job once more
+    /// than this fraction of its tasks have terminally errored.  `None`
+    /// = 1.0 (breaker off).
+    pub failure_threshold: Option<f64>,
+    /// Write the crash journal under the `.MAPRED.<PID>` workdir
+    /// (builder-only; on by default — benches flip it off to measure the
+    /// fsync cost).
+    pub journal: bool,
 }
 
 impl Default for Options {
@@ -212,6 +227,9 @@ impl Default for Options {
             scheduler: SchedulerKind::GridEngine,
             pid: None,
             workdir: None,
+            on_error: None,
+            failure_threshold: None,
+            journal: true,
         }
     }
 }
@@ -306,6 +324,18 @@ impl Options {
         self.workdir = Some(dir.into());
         self
     }
+    pub fn on_error(mut self, p: OnError) -> Self {
+        self.on_error = Some(p);
+        self
+    }
+    pub fn failure_threshold(mut self, t: f64) -> Self {
+        self.failure_threshold = Some(t);
+        self
+    }
+    pub fn journal(mut self, on: bool) -> Self {
+        self.journal = on;
+        self
+    }
 
     /// Parse from a command-line style argument vector (everything after
     /// the program name).  Accepts `--key=value` and `--key value`.
@@ -381,6 +411,13 @@ impl Options {
                     opts.scheduler = SchedulerKind::parse(&take()?)?
                 }
                 "--workdir" => opts.workdir = Some(PathBuf::from(take()?)),
+                "--on-error" => {
+                    opts.on_error = Some(OnError::parse(&take()?)?)
+                }
+                "--failure-threshold" => {
+                    opts.failure_threshold =
+                        Some(parse_fraction(&key, &take()?)?)
+                }
                 other => {
                     return Err(Error::opt(format!("unknown option '{other}'")))
                 }
@@ -417,7 +454,26 @@ impl Options {
         if self.items_per_task == Some(0) {
             return Err(Error::opt("--items-per-task must be > 0"));
         }
+        if let Some(t) = self.failure_threshold {
+            if !(0.0..=1.0).contains(&t) {
+                return Err(Error::opt(format!(
+                    "--failure-threshold must be within 0..=1, got {t}"
+                )));
+            }
+        }
         Ok(())
+    }
+
+    /// Effective error policy for the map job (submitted through
+    /// `JobSpec::error_policy` onto the engine-shared table path).
+    pub fn effective_error_policy(
+        &self,
+    ) -> crate::scheduler::journal::ErrorPolicy {
+        crate::scheduler::journal::ErrorPolicy {
+            on_error: self.on_error.unwrap_or_default(),
+            failure_threshold: self.failure_threshold.unwrap_or(1.0),
+            ..crate::scheduler::journal::ErrorPolicy::default()
+        }
     }
 
     /// Whether the SPMD morph is on: `--spmd` was given, or
@@ -445,6 +501,148 @@ impl Options {
     /// Effective pid for the `.MAPRED.<PID>` directory.
     pub fn effective_pid(&self) -> u32 {
         self.pid.unwrap_or_else(std::process::id)
+    }
+
+    /// Serialize every field `resume` needs to re-plan this invocation
+    /// identically (stored in the journal's `invocation` record).
+    pub fn to_json(&self) -> Json {
+        let opt_usize =
+            |v: Option<usize>| v.map(Json::from).unwrap_or(Json::Null);
+        obj(vec![
+            ("np", opt_usize(self.np)),
+            ("ndata", opt_usize(self.ndata)),
+            ("input", self.input.display().to_string().into()),
+            ("output", self.output.display().to_string().into()),
+            ("mapper", self.mapper.as_str().into()),
+            (
+                "reducer",
+                self.reducer
+                    .as_deref()
+                    .map(Json::from)
+                    .unwrap_or(Json::Null),
+            ),
+            ("redout", self.redout.as_str().into()),
+            ("distribution", self.distribution.as_str().into()),
+            ("subdir", self.subdir.into()),
+            ("ext", self.ext.as_str().into()),
+            ("delimiter", self.delimiter.as_str().into()),
+            ("exclusive", self.exclusive.into()),
+            ("keep", self.keep.into()),
+            ("apptype", self.apptype.as_str().into()),
+            ("overlap", self.overlap.into()),
+            ("spmd", self.spmd.into()),
+            ("items_per_task", opt_usize(self.items_per_task)),
+            (
+                "scheduler_options",
+                Json::Arr(
+                    self.scheduler_options
+                        .iter()
+                        .map(|s| s.as_str().into())
+                        .collect(),
+                ),
+            ),
+            ("scheduler", self.scheduler.as_str().into()),
+            (
+                "pid",
+                self.pid
+                    .map(|p| Json::from(p as usize))
+                    .unwrap_or(Json::Null),
+            ),
+            (
+                "workdir",
+                self.workdir
+                    .as_ref()
+                    .map(|p| Json::from(p.display().to_string()))
+                    .unwrap_or(Json::Null),
+            ),
+            (
+                "on_error",
+                self.on_error
+                    .map(|p| Json::from(p.as_str()))
+                    .unwrap_or(Json::Null),
+            ),
+            (
+                "failure_threshold",
+                self.failure_threshold
+                    .map(Json::from)
+                    .unwrap_or(Json::Null),
+            ),
+            ("journal", self.journal.into()),
+        ])
+    }
+
+    /// Rebuild an option set from [`Options::to_json`] output.  Missing
+    /// keys fall back to defaults (forward compatible with journals
+    /// written by older builds).
+    pub fn from_json(doc: &Json) -> Result<Options> {
+        let bad = |what: &str| {
+            Error::opt(format!("invalid serialized options: {what}"))
+        };
+        let s = |key: &str| -> Option<String> {
+            doc.get(key).and_then(Json::as_str).map(str::to_string)
+        };
+        let u = |key: &str| -> Option<usize> {
+            doc.get(key).and_then(Json::as_usize)
+        };
+        let b = |key: &str, dflt: bool| -> bool {
+            doc.get(key).and_then(Json::as_bool).unwrap_or(dflt)
+        };
+        let dflt = Options::default();
+        let distribution = match s("distribution") {
+            Some(d) => Distribution::parse(&d)?,
+            None => dflt.distribution,
+        };
+        let apptype = match s("apptype") {
+            Some(a) => AppType::parse(&a)?,
+            None => dflt.apptype,
+        };
+        let scheduler = match s("scheduler") {
+            Some(k) => SchedulerKind::parse(&k)?,
+            None => dflt.scheduler,
+        };
+        let on_error = match s("on_error") {
+            Some(p) => Some(OnError::parse(&p)?),
+            None => None,
+        };
+        let scheduler_options = match doc.get("scheduler_options") {
+            Some(Json::Arr(arr)) => arr
+                .iter()
+                .filter_map(|v| v.as_str().map(str::to_string))
+                .collect(),
+            _ => Vec::new(),
+        };
+        let opts = Options {
+            np: u("np"),
+            ndata: u("ndata"),
+            input: PathBuf::from(s("input").ok_or_else(|| bad("input"))?),
+            output: PathBuf::from(
+                s("output").ok_or_else(|| bad("output"))?,
+            ),
+            mapper: s("mapper").ok_or_else(|| bad("mapper"))?,
+            reducer: s("reducer"),
+            redout: s("redout").unwrap_or(dflt.redout),
+            distribution,
+            subdir: b("subdir", false),
+            ext: s("ext").unwrap_or(dflt.ext),
+            delimiter: s("delimiter").unwrap_or(dflt.delimiter),
+            exclusive: b("exclusive", false),
+            keep: b("keep", false),
+            apptype,
+            overlap: b("overlap", false),
+            spmd: b("spmd", false),
+            items_per_task: u("items_per_task"),
+            scheduler_options,
+            scheduler,
+            pid: u("pid").map(|p| p as u32),
+            workdir: s("workdir").map(PathBuf::from),
+            on_error,
+            failure_threshold: doc
+                .get("failure_threshold")
+                .and_then(Json::as_f64),
+            journal: b("journal", true),
+        };
+        opts.validate()?;
+        Ok(opts)
     }
 }
 
@@ -543,6 +741,12 @@ impl WorkerOptions {
 fn parse_count(key: &str, s: &str) -> Result<usize> {
     s.parse::<usize>()
         .map_err(|_| Error::opt(format!("{key} expects a positive integer, got '{s}'")))
+}
+
+fn parse_fraction(key: &str, s: &str) -> Result<f64> {
+    s.parse::<f64>().ok().filter(|v| v.is_finite()).ok_or_else(|| {
+        Error::opt(format!("{key} expects a number, got '{s}'"))
+    })
 }
 
 fn parse_bool(key: &str, s: &str) -> Result<bool> {
@@ -808,6 +1012,63 @@ mod tests {
             "--bogus=1"
         ])
         .is_err());
+    }
+
+    #[test]
+    fn error_policy_flags_parse_and_validate() {
+        let o = Options::parse_args(base()).unwrap();
+        assert_eq!(o.on_error, None, "stop is the default");
+        assert_eq!(o.failure_threshold, None);
+        let p = o.effective_error_policy();
+        assert_eq!(p.on_error, OnError::Stop);
+        assert_eq!(p.failure_threshold, 1.0, "breaker off by default");
+
+        let mut args = base();
+        args.push("--on-error=dlq");
+        args.push("--failure-threshold=0.25");
+        let o = Options::parse_args(args).unwrap();
+        assert_eq!(o.on_error, Some(OnError::Dlq));
+        assert_eq!(o.failure_threshold, Some(0.25));
+        assert_eq!(o.effective_error_policy().on_error, OnError::Dlq);
+
+        let mut args = base();
+        args.push("--failure-threshold=1.5");
+        assert!(Options::parse_args(args).is_err(), "out of 0..=1");
+        let mut args = base();
+        args.push("--on-error=explode");
+        assert!(Options::parse_args(args).is_err());
+    }
+
+    #[test]
+    fn options_json_roundtrip_for_resume() {
+        let o = Options::new("in", "out", "wordcount")
+            .np(4)
+            .reducer("wordcount-reducer")
+            .distribution(Distribution::Cyclic)
+            .overlap(true)
+            .spmd(true)
+            .items_per_task(8)
+            .on_error(OnError::Retry)
+            .failure_threshold(0.5)
+            .keep(true)
+            .pid(7)
+            .workdir("/tmp/w")
+            .scheduler_option("-q long");
+        let text = o.to_json().to_string_compact();
+        let back =
+            Options::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.np, Some(4));
+        assert_eq!(back.mapper, "wordcount");
+        assert_eq!(back.reducer.as_deref(), Some("wordcount-reducer"));
+        assert_eq!(back.distribution, Distribution::Cyclic);
+        assert!(back.overlap && back.spmd && back.keep);
+        assert_eq!(back.items_per_task, Some(8));
+        assert_eq!(back.on_error, Some(OnError::Retry));
+        assert_eq!(back.failure_threshold, Some(0.5));
+        assert_eq!(back.pid, Some(7));
+        assert_eq!(back.workdir, Some(PathBuf::from("/tmp/w")));
+        assert_eq!(back.scheduler_options, vec!["-q long"]);
+        assert!(back.journal, "journaling survives the roundtrip");
     }
 
     #[test]

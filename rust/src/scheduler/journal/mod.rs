@@ -1,0 +1,205 @@
+//! Crash-safe job journal (DESIGN.md §8).
+//!
+//! Every engine-shared `JobTable` transition — submit, task
+//! assign/complete/fail/reassign, retry, job done/failed — appends one
+//! fsync'd `util::json` line to `journal.jsonl` under the invocation's
+//! `.MAPRED.<PID>` workdir.  Because the workdir's `Drop` cleanup never
+//! runs when the coordinator process dies (SIGKILL, OOM, power loss),
+//! the journal survives exactly when it is needed, and
+//! `llmapreduce resume` replays it to re-run only the incomplete tasks.
+//! Clean completion removes the workdir — and the journal with it.
+//!
+//! The writer sits *inside* the table (both `LocalEngine` and
+//! `RemoteCoordinator` drive the same `JobTable`), so engines cannot
+//! diverge on what gets journaled.  Append failures after creation are
+//! deliberately swallowed: a full disk degrades crash *recovery*
+//! (resume re-runs more tasks than strictly necessary), it must never
+//! take down the live job.
+//!
+//! Sibling file `dlq.jsonl` is the per-job dead-letter queue: tasks
+//! that exhaust their error budget under `--on-error=dlq|retry` land
+//! there with full attribution instead of failing the job (see
+//! [`policy::ErrorPolicy`]).
+
+pub mod policy;
+pub mod record;
+pub mod replay;
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::error::{IoContext, Result};
+
+pub use policy::{ErrorPolicy, OnError};
+pub use record::{DeadLetter, Record};
+pub use replay::Replay;
+
+/// Default journal file name under the `.MAPRED.<PID>` workdir.
+pub const JOURNAL_FILE: &str = "journal.jsonl";
+/// Dead-letter queue file name, sibling to the journal.
+pub const DLQ_FILE: &str = "dlq.jsonl";
+
+/// Append-only, fsync'd journal writer.  Cheap to share: engines hold
+/// it as `Arc<Journal>` via `JobSpec::journal`.
+pub struct Journal {
+    path: PathBuf,
+    file: Mutex<File>,
+    /// Lazily opened on the first dead-letter (most jobs never have one).
+    dlq: Mutex<Option<File>>,
+    fsync: bool,
+}
+
+impl std::fmt::Debug for Journal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Journal")
+            .field("path", &self.path)
+            .field("fsync", &self.fsync)
+            .finish()
+    }
+}
+
+impl Journal {
+    /// Create (truncating) a fresh journal at `path`.
+    pub fn create(path: impl Into<PathBuf>) -> Result<Journal> {
+        let path = path.into();
+        let file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(&path)
+            .at(&path)?;
+        Ok(Journal {
+            path,
+            file: Mutex::new(file),
+            dlq: Mutex::new(None),
+            fsync: true,
+        })
+    }
+
+    /// Open an existing journal for appending (the `resume` path, which
+    /// continues the same file so a resume-of-a-resume still replays).
+    pub fn open_append(path: impl Into<PathBuf>) -> Result<Journal> {
+        let path = path.into();
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .at(&path)?;
+        Ok(Journal {
+            path,
+            file: Mutex::new(file),
+            dlq: Mutex::new(None),
+            fsync: true,
+        })
+    }
+
+    /// Disable the per-record fsync (bench baseline; a crash may then
+    /// lose the tail of the journal to the page cache).
+    pub fn no_fsync(mut self) -> Self {
+        self.fsync = false;
+        self
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// `dlq.jsonl` next to the journal file.
+    pub fn dlq_path(&self) -> PathBuf {
+        self.path.with_file_name(DLQ_FILE)
+    }
+
+    /// Append one record: write the compact line, flush, fsync.  Errors
+    /// after creation are swallowed (see module docs).
+    pub fn record(&self, rec: &Record) {
+        let line = rec.to_json().to_string_compact();
+        let mut f = self.file.lock().unwrap_or_else(|e| e.into_inner());
+        let _ = writeln!(f, "{line}");
+        let _ = f.flush();
+        if self.fsync {
+            let _ = f.sync_data();
+        }
+    }
+
+    /// Append one dead-letter entry to `dlq.jsonl` (fsync'd — the entry
+    /// is the only surviving account of the failed work).
+    pub fn dead_letter(&self, entry: &DeadLetter) {
+        let line = entry.to_json().to_string_compact();
+        let mut guard =
+            self.dlq.lock().unwrap_or_else(|e| e.into_inner());
+        if guard.is_none() {
+            *guard = OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(self.dlq_path())
+                .ok();
+        }
+        if let Some(f) = guard.as_mut() {
+            let _ = writeln!(f, "{line}");
+            let _ = f.flush();
+            let _ = f.sync_data();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("llmr-journal-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn appends_one_line_per_record() {
+        let dir = tmp("append");
+        let j = Journal::create(dir.join(JOURNAL_FILE)).unwrap();
+        j.record(&Record::JobDone { job: 1 });
+        j.record(&Record::JobDone { job: 2 });
+        let text =
+            std::fs::read_to_string(dir.join(JOURNAL_FILE)).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        for line in text.lines() {
+            Record::decode(line, &j.path).unwrap();
+        }
+    }
+
+    #[test]
+    fn open_append_continues_the_file() {
+        let dir = tmp("reopen");
+        let path = dir.join(JOURNAL_FILE);
+        Journal::create(&path)
+            .unwrap()
+            .record(&Record::JobDone { job: 1 });
+        Journal::open_append(&path)
+            .unwrap()
+            .record(&Record::Resumed { done: 1, total: 2 });
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2, "create truncates, append adds");
+    }
+
+    #[test]
+    fn dead_letters_land_in_sibling_file() {
+        let dir = tmp("dlq");
+        let j = Journal::create(dir.join(JOURNAL_FILE)).unwrap();
+        assert_eq!(j.dlq_path(), dir.join(DLQ_FILE));
+        j.dead_letter(&DeadLetter {
+            job: 1,
+            task_id: 3,
+            attempts: 2,
+            worker: None,
+            error: "exit status 1".into(),
+            inputs: vec!["/in/a".into()],
+        });
+        let text = std::fs::read_to_string(j.dlq_path()).unwrap();
+        let d = DeadLetter::decode(text.trim(), &j.dlq_path()).unwrap();
+        assert_eq!(d.task_id, 3);
+        assert_eq!(d.inputs, vec!["/in/a".to_string()]);
+    }
+}

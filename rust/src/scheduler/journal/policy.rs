@@ -1,0 +1,114 @@
+//! Error policy: what a task's *terminal execution error* does to its
+//! job (DESIGN.md §8).
+//!
+//! Distinct from [`crate::scheduler::failure::FailurePolicy`], which
+//! *injects* deterministic launch failures for testing: this policy
+//! governs real application errors (non-zero exit, spawn failure,
+//! panic).  The verdict runs on the engine-shared `JobTable` transition
+//! path, so local and remote engines apply identical semantics.
+
+use crate::error::{Error, Result};
+
+/// What to do when a task's execution errors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OnError {
+    /// Fail the whole job on the first task error (historic behaviour).
+    #[default]
+    Stop,
+    /// Re-queue the task up to `max_retries` times, then dead-letter it.
+    Retry,
+    /// Record the task in `dlq.jsonl` and count it complete; the job
+    /// finishes without it (resubmit later via `dlq reprocess`).
+    Dlq,
+    /// Count the task complete and move on, recording nothing.
+    Skip,
+}
+
+impl OnError {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "stop" => Ok(OnError::Stop),
+            "retry" => Ok(OnError::Retry),
+            "dlq" => Ok(OnError::Dlq),
+            "skip" => Ok(OnError::Skip),
+            other => Err(Error::opt(format!(
+                "--on-error must be dlq|retry|skip|stop, got '{other}'"
+            ))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            OnError::Stop => "stop",
+            OnError::Retry => "retry",
+            OnError::Dlq => "dlq",
+            OnError::Skip => "skip",
+        }
+    }
+}
+
+/// Per-job error policy, attached via `JobSpec::error_policy`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ErrorPolicy {
+    pub on_error: OnError,
+    /// Failure-rate circuit breaker: the job is halted once more than
+    /// this fraction of its tasks have terminally errored (dead-lettered
+    /// or skipped).  The default `1.0` can never be exceeded, so the
+    /// breaker is off unless configured.
+    pub failure_threshold: f64,
+    /// Error-retry budget per task under [`OnError::Retry`] (distinct
+    /// from the injected-failure retry budget of `FailurePolicy`).
+    pub max_retries: usize,
+}
+
+impl Default for ErrorPolicy {
+    fn default() -> Self {
+        ErrorPolicy {
+            on_error: OnError::Stop,
+            failure_threshold: 1.0,
+            max_retries: 3,
+        }
+    }
+}
+
+impl ErrorPolicy {
+    /// Has the breaker tripped with `errors` terminal errors out of
+    /// `ntasks` tasks?
+    pub fn breaker_tripped(&self, errors: usize, ntasks: usize) -> bool {
+        ntasks > 0
+            && errors as f64 / ntasks as f64 > self.failure_threshold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips() {
+        for v in
+            [OnError::Stop, OnError::Retry, OnError::Dlq, OnError::Skip]
+        {
+            assert_eq!(OnError::parse(v.as_str()).unwrap(), v);
+        }
+        assert_eq!(OnError::parse("DLQ").unwrap(), OnError::Dlq);
+        assert!(OnError::parse("explode").is_err());
+    }
+
+    #[test]
+    fn default_breaker_never_trips() {
+        let p = ErrorPolicy::default();
+        assert!(!p.breaker_tripped(8, 8), "errors never exceed ntasks");
+        assert!(!p.breaker_tripped(0, 0));
+    }
+
+    #[test]
+    fn configured_breaker_trips_past_the_fraction() {
+        let p = ErrorPolicy {
+            failure_threshold: 0.25,
+            ..ErrorPolicy::default()
+        };
+        assert!(!p.breaker_tripped(2, 8), "2/8 == threshold: not past it");
+        assert!(p.breaker_tripped(3, 8));
+    }
+}

@@ -1,0 +1,559 @@
+//! Journal record schema: one [`Record`] per engine-shared `JobTable`
+//! transition, encoded as a single compact `util::json` line.
+//!
+//! Records are self-describing (`"rec"` tags the variant) so a journal
+//! written by a newer build degrades gracefully: unknown tags decode as
+//! [`Record::Unknown`] and replay skips them instead of refusing the
+//! whole file.  Malformed lines decode to
+//! [`Error::Format`]` { kind: "journal" }` — never a panic — matching
+//! the wire protocol's discipline (DESIGN.md §6).
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json::{obj, Json};
+
+/// One journaled `JobTable` transition.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Record {
+    /// Job-zero header: everything `resume` needs to re-plan the
+    /// invocation deterministically (the serialized `Options`, the
+    /// mapper/reducer wire specs, the planned map-task count, the pid).
+    Invocation {
+        pid: u32,
+        mapper: String,
+        reducer: Option<String>,
+        ntasks: usize,
+        options: Json,
+    },
+    /// A job was admitted to the table.
+    JobSubmitted {
+        job: u64,
+        name: String,
+        ntasks: usize,
+        task_ids: Vec<usize>,
+    },
+    /// A task was claimed by / shipped to a worker.
+    TaskAssigned {
+        job: u64,
+        idx: usize,
+        task_id: usize,
+        worker: Option<String>,
+    },
+    /// A task completed (possibly as a dead-lettered placeholder).
+    TaskDone {
+        job: u64,
+        idx: usize,
+        task_id: usize,
+        retries: usize,
+        dead_lettered: bool,
+    },
+    /// A task attempt was consumed and the task re-queued.
+    TaskRetry {
+        job: u64,
+        idx: usize,
+        task_id: usize,
+        attempt: usize,
+    },
+    /// A task's execution errored (the policy verdict follows as a
+    /// retry, a dead-letter completion, or a job failure).
+    TaskFailed {
+        job: u64,
+        idx: usize,
+        task_id: usize,
+        msg: String,
+    },
+    /// A task was pulled off a dead worker and re-queued.
+    TaskReassigned {
+        job: u64,
+        idx: usize,
+        task_id: usize,
+    },
+    /// All of a job's tasks completed.
+    JobDone { job: u64 },
+    /// The job failed (scheduler error, stop policy, or breaker).
+    JobFailed { job: u64, msg: String },
+    /// The failure-rate circuit breaker tripped on this job.
+    BreakerTripped {
+        job: u64,
+        errors: usize,
+        ntasks: usize,
+        threshold: f64,
+    },
+    /// A `resume` run appended to this journal from here on.
+    Resumed { done: usize, total: usize },
+    /// Forward-compat: a tag this build does not know; replay skips it.
+    Unknown { tag: String },
+}
+
+impl Record {
+    /// Encode as a compact single-line JSON document.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Record::Invocation {
+                pid,
+                mapper,
+                reducer,
+                ntasks,
+                options,
+            } => {
+                let mut pairs = vec![
+                    ("rec", "invocation".into()),
+                    ("pid", (*pid as usize).into()),
+                    ("mapper", mapper.as_str().into()),
+                    ("ntasks", (*ntasks).into()),
+                    ("options", options.clone()),
+                ];
+                if let Some(r) = reducer {
+                    pairs.push(("reducer", r.as_str().into()));
+                }
+                obj(pairs)
+            }
+            Record::JobSubmitted {
+                job,
+                name,
+                ntasks,
+                task_ids,
+            } => obj(vec![
+                ("rec", "job".into()),
+                ("job", (*job as usize).into()),
+                ("name", name.as_str().into()),
+                ("ntasks", (*ntasks).into()),
+                (
+                    "task_ids",
+                    Json::Arr(
+                        task_ids.iter().map(|&t| t.into()).collect(),
+                    ),
+                ),
+            ]),
+            Record::TaskAssigned {
+                job,
+                idx,
+                task_id,
+                worker,
+            } => {
+                let mut pairs = vec![
+                    ("rec", "assign".into()),
+                    ("job", (*job as usize).into()),
+                    ("idx", (*idx).into()),
+                    ("task_id", (*task_id).into()),
+                ];
+                if let Some(w) = worker {
+                    pairs.push(("worker", w.as_str().into()));
+                }
+                obj(pairs)
+            }
+            Record::TaskDone {
+                job,
+                idx,
+                task_id,
+                retries,
+                dead_lettered,
+            } => obj(vec![
+                ("rec", "done".into()),
+                ("job", (*job as usize).into()),
+                ("idx", (*idx).into()),
+                ("task_id", (*task_id).into()),
+                ("retries", (*retries).into()),
+                ("dlq", (*dead_lettered).into()),
+            ]),
+            Record::TaskRetry {
+                job,
+                idx,
+                task_id,
+                attempt,
+            } => obj(vec![
+                ("rec", "retry".into()),
+                ("job", (*job as usize).into()),
+                ("idx", (*idx).into()),
+                ("task_id", (*task_id).into()),
+                ("attempt", (*attempt).into()),
+            ]),
+            Record::TaskFailed {
+                job,
+                idx,
+                task_id,
+                msg,
+            } => obj(vec![
+                ("rec", "task-failed".into()),
+                ("job", (*job as usize).into()),
+                ("idx", (*idx).into()),
+                ("task_id", (*task_id).into()),
+                ("msg", msg.as_str().into()),
+            ]),
+            Record::TaskReassigned { job, idx, task_id } => obj(vec![
+                ("rec", "reassign".into()),
+                ("job", (*job as usize).into()),
+                ("idx", (*idx).into()),
+                ("task_id", (*task_id).into()),
+            ]),
+            Record::JobDone { job } => obj(vec![
+                ("rec", "job-done".into()),
+                ("job", (*job as usize).into()),
+            ]),
+            Record::JobFailed { job, msg } => obj(vec![
+                ("rec", "job-failed".into()),
+                ("job", (*job as usize).into()),
+                ("msg", msg.as_str().into()),
+            ]),
+            Record::BreakerTripped {
+                job,
+                errors,
+                ntasks,
+                threshold,
+            } => obj(vec![
+                ("rec", "breaker".into()),
+                ("job", (*job as usize).into()),
+                ("errors", (*errors).into()),
+                ("ntasks", (*ntasks).into()),
+                ("threshold", (*threshold).into()),
+            ]),
+            Record::Resumed { done, total } => obj(vec![
+                ("rec", "resumed".into()),
+                ("done", (*done).into()),
+                ("total", (*total).into()),
+            ]),
+            Record::Unknown { tag } => {
+                obj(vec![("rec", tag.as_str().into())])
+            }
+        }
+    }
+
+    /// Decode one journal line.  Any structural problem — bad JSON,
+    /// missing fields, wrong types — is `Error::Format { kind:
+    /// "journal" }`, never a panic.
+    pub fn decode(line: &str, path: &Path) -> Result<Record> {
+        let bad = |reason: String| Error::Format {
+            kind: "journal",
+            path: path.to_path_buf(),
+            reason,
+        };
+        let doc = Json::parse(line)
+            .map_err(|e| bad(format!("unparseable record: {e}")))?;
+        let tag = doc
+            .get("rec")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("record missing 'rec' tag".into()))?
+            .to_string();
+        let u = |key: &str| -> Result<usize> {
+            doc.get(key).and_then(Json::as_usize).ok_or_else(|| {
+                bad(format!("'{tag}' record missing usize '{key}'"))
+            })
+        };
+        let s = |key: &str| -> Result<String> {
+            doc.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| {
+                    bad(format!("'{tag}' record missing string '{key}'"))
+                })
+        };
+        Ok(match tag.as_str() {
+            "invocation" => Record::Invocation {
+                pid: u("pid")? as u32,
+                mapper: s("mapper")?,
+                reducer: doc
+                    .get("reducer")
+                    .and_then(Json::as_str)
+                    .map(str::to_string),
+                ntasks: u("ntasks")?,
+                options: doc
+                    .get("options")
+                    .cloned()
+                    .ok_or_else(|| {
+                        bad("invocation record missing 'options'".into())
+                    })?,
+            },
+            "job" => Record::JobSubmitted {
+                job: u("job")? as u64,
+                name: s("name")?,
+                ntasks: u("ntasks")?,
+                task_ids: doc
+                    .get("task_ids")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| {
+                        bad("job record missing 'task_ids'".into())
+                    })?
+                    .iter()
+                    .map(|v| {
+                        v.as_usize().ok_or_else(|| {
+                            bad("non-integer task id".into())
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            },
+            "assign" => Record::TaskAssigned {
+                job: u("job")? as u64,
+                idx: u("idx")?,
+                task_id: u("task_id")?,
+                worker: doc
+                    .get("worker")
+                    .and_then(Json::as_str)
+                    .map(str::to_string),
+            },
+            "done" => Record::TaskDone {
+                job: u("job")? as u64,
+                idx: u("idx")?,
+                task_id: u("task_id")?,
+                retries: u("retries")?,
+                dead_lettered: doc
+                    .get("dlq")
+                    .and_then(Json::as_bool)
+                    .unwrap_or(false),
+            },
+            "retry" => Record::TaskRetry {
+                job: u("job")? as u64,
+                idx: u("idx")?,
+                task_id: u("task_id")?,
+                attempt: u("attempt")?,
+            },
+            "task-failed" => Record::TaskFailed {
+                job: u("job")? as u64,
+                idx: u("idx")?,
+                task_id: u("task_id")?,
+                msg: s("msg")?,
+            },
+            "reassign" => Record::TaskReassigned {
+                job: u("job")? as u64,
+                idx: u("idx")?,
+                task_id: u("task_id")?,
+            },
+            "job-done" => Record::JobDone { job: u("job")? as u64 },
+            "job-failed" => Record::JobFailed {
+                job: u("job")? as u64,
+                msg: s("msg")?,
+            },
+            "breaker" => Record::BreakerTripped {
+                job: u("job")? as u64,
+                errors: u("errors")?,
+                ntasks: u("ntasks")?,
+                threshold: doc
+                    .get("threshold")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| {
+                        bad("breaker record missing 'threshold'".into())
+                    })?,
+            },
+            "resumed" => Record::Resumed {
+                done: u("done")?,
+                total: u("total")?,
+            },
+            _ => Record::Unknown { tag },
+        })
+    }
+}
+
+/// Cap stored error text at this many trailing bytes (the "stderr
+/// tail" of the dead-letter entry) so a chatty mapper cannot bloat the
+/// queue file.
+pub const ERROR_TAIL_BYTES: usize = 1024;
+
+/// One dead-lettered task: full attribution plus the input paths needed
+/// to resubmit it through the normal planner path (`dlq reprocess`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeadLetter {
+    pub job: u64,
+    pub task_id: usize,
+    /// Error attempts consumed before landing here.
+    pub attempts: usize,
+    /// Worker attribution, when the failure came off the remote engine.
+    pub worker: Option<String>,
+    /// Tail of the task's error text (includes the command's exit
+    /// status; capped at [`ERROR_TAIL_BYTES`]).
+    pub error: String,
+    /// Input files the task owned.
+    pub inputs: Vec<String>,
+}
+
+impl DeadLetter {
+    /// Truncate `error` to its last [`ERROR_TAIL_BYTES`] bytes on a
+    /// char boundary.
+    pub fn tail(error: &str) -> String {
+        if error.len() <= ERROR_TAIL_BYTES {
+            return error.to_string();
+        }
+        let mut start = error.len() - ERROR_TAIL_BYTES;
+        while !error.is_char_boundary(start) {
+            start += 1;
+        }
+        error[start..].to_string()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("job", (self.job as usize).into()),
+            ("task_id", self.task_id.into()),
+            ("attempts", self.attempts.into()),
+            ("error", self.error.as_str().into()),
+            (
+                "inputs",
+                Json::Arr(
+                    self.inputs
+                        .iter()
+                        .map(|i| i.as_str().into())
+                        .collect(),
+                ),
+            ),
+        ];
+        if let Some(w) = &self.worker {
+            pairs.push(("worker", w.as_str().into()));
+        }
+        obj(pairs)
+    }
+
+    /// Decode one `dlq.jsonl` line (same error discipline as
+    /// [`Record::decode`]).
+    pub fn decode(line: &str, path: &Path) -> Result<DeadLetter> {
+        let bad = |reason: String| Error::Format {
+            kind: "journal",
+            path: path.to_path_buf(),
+            reason,
+        };
+        let doc = Json::parse(line)
+            .map_err(|e| bad(format!("unparseable dlq entry: {e}")))?;
+        let u = |key: &str| -> Result<usize> {
+            doc.get(key).and_then(Json::as_usize).ok_or_else(|| {
+                bad(format!("dlq entry missing usize '{key}'"))
+            })
+        };
+        Ok(DeadLetter {
+            job: u("job")? as u64,
+            task_id: u("task_id")?,
+            attempts: u("attempts")?,
+            worker: doc
+                .get("worker")
+                .and_then(Json::as_str)
+                .map(str::to_string),
+            error: doc
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
+            inputs: doc
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| bad("dlq entry missing 'inputs'".into()))?
+                .iter()
+                .map(|v| {
+                    v.as_str().map(str::to_string).ok_or_else(|| {
+                        bad("non-string dlq input path".into())
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(r: Record) {
+        let line = r.to_json().to_string_compact();
+        let back = Record::decode(&line, Path::new("/j")).unwrap();
+        assert_eq!(r, back, "{line}");
+    }
+
+    #[test]
+    fn all_variants_roundtrip() {
+        roundtrip(Record::Invocation {
+            pid: 91001,
+            mapper: "wordcount:/tmp/ign.txt".into(),
+            reducer: Some("wordcount-reducer".into()),
+            ntasks: 4,
+            options: obj(vec![("input", "/in".into())]),
+        });
+        roundtrip(Record::JobSubmitted {
+            job: 3,
+            name: "wordcount".into(),
+            ntasks: 2,
+            task_ids: vec![1, 2],
+        });
+        roundtrip(Record::TaskAssigned {
+            job: 3,
+            idx: 0,
+            task_id: 1,
+            worker: Some("w0".into()),
+        });
+        roundtrip(Record::TaskAssigned {
+            job: 3,
+            idx: 1,
+            task_id: 2,
+            worker: None,
+        });
+        roundtrip(Record::TaskDone {
+            job: 3,
+            idx: 0,
+            task_id: 1,
+            retries: 2,
+            dead_lettered: true,
+        });
+        roundtrip(Record::TaskRetry {
+            job: 3,
+            idx: 0,
+            task_id: 1,
+            attempt: 1,
+        });
+        roundtrip(Record::TaskFailed {
+            job: 3,
+            idx: 0,
+            task_id: 1,
+            msg: "exit status 1".into(),
+        });
+        roundtrip(Record::TaskReassigned { job: 3, idx: 1, task_id: 2 });
+        roundtrip(Record::JobDone { job: 3 });
+        roundtrip(Record::JobFailed { job: 3, msg: "boom".into() });
+        roundtrip(Record::BreakerTripped {
+            job: 3,
+            errors: 5,
+            ntasks: 8,
+            threshold: 0.25,
+        });
+        roundtrip(Record::Resumed { done: 2, total: 4 });
+    }
+
+    #[test]
+    fn unknown_tag_decodes_as_unknown() {
+        let r = Record::decode(
+            "{\"rec\": \"hologram\", \"x\": 1}",
+            Path::new("/j"),
+        )
+        .unwrap();
+        assert_eq!(r, Record::Unknown { tag: "hologram".into() });
+    }
+
+    #[test]
+    fn malformed_lines_are_format_errors() {
+        for line in [
+            "",
+            "not json",
+            "{\"rec\": \"done\"}",              // missing fields
+            "{\"job\": 1}",                      // missing tag
+            "{\"rec\": \"done\", \"job\": {}}", // wrong type
+        ] {
+            match Record::decode(line, Path::new("/j")) {
+                Err(Error::Format { kind: "journal", .. }) => {}
+                other => panic!("{line:?} -> {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn dead_letter_roundtrips_and_truncates() {
+        let d = DeadLetter {
+            job: 1,
+            task_id: 7,
+            attempts: 3,
+            worker: Some("w1".into()),
+            error: DeadLetter::tail("exit status 1"),
+            inputs: vec!["/in/a.txt".into(), "/in/b.txt".into()],
+        };
+        let line = d.to_json().to_string_compact();
+        let back = DeadLetter::decode(&line, Path::new("/d")).unwrap();
+        assert_eq!(d, back);
+
+        let long = "x".repeat(4 * ERROR_TAIL_BYTES);
+        assert_eq!(DeadLetter::tail(&long).len(), ERROR_TAIL_BYTES);
+        assert!(DeadLetter::decode("nope", Path::new("/d")).is_err());
+    }
+}

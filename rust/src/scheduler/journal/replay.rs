@@ -1,0 +1,336 @@
+//! Journal replay: fold a record stream back into per-job completion
+//! state (DESIGN.md §8).
+//!
+//! Replay is a pure left fold over [`Record`]s — any *prefix* of a
+//! valid journal yields a consistent [`Replay`] (the property
+//! `tests/properties.rs` checks).  The file loader tolerates a
+//! truncated or garbage *tail* (the crash may have severed the last
+//! line mid-write): decoding stops at the first undecodable line
+//! provided nothing valid follows it; garbage in the *middle* of the
+//! file, with valid records after it, is real corruption and surfaces
+//! as `Error::Format { kind: "journal" }`.
+//!
+//! Completion is keyed by **task id**, not task index: a resumed run
+//! re-submits only the incomplete tasks (with their original ids), so a
+//! resume-of-a-resume must union completions across every `job` record
+//! sharing a name.
+
+use std::collections::{BTreeMap, HashSet};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::scheduler::journal::record::Record;
+use crate::util::json::Json;
+
+/// Replayed state of one journaled job.
+#[derive(Debug, Clone, Default)]
+pub struct ReplayedJob {
+    pub name: String,
+    pub ntasks: usize,
+    /// Task ids this job was submitted with.
+    pub task_ids: Vec<usize>,
+    /// Task ids with a `done` record (includes dead-lettered ones).
+    pub done: HashSet<usize>,
+    /// Task ids completed as dead-letter placeholders.
+    pub dead_lettered: HashSet<usize>,
+    /// Retry records seen (injected + error retries).
+    pub retries: usize,
+    /// Task-error records seen.
+    pub task_errors: usize,
+    /// Reassignment records seen (remote engine only).
+    pub reassigns: usize,
+    /// A `job-done` record was seen.
+    pub completed: bool,
+    /// A `job-failed` record was seen.  Non-terminal for resume: an
+    /// in-process engine drop fails live jobs on shutdown, but the
+    /// per-task `done` set still tells resume what to skip.
+    pub failed: Option<String>,
+    /// The breaker tripped on this job.
+    pub breaker: bool,
+}
+
+/// The invocation header, when the journal has one.
+#[derive(Debug, Clone)]
+pub struct InvocationInfo {
+    pub pid: u32,
+    pub mapper: String,
+    pub reducer: Option<String>,
+    pub ntasks: usize,
+    pub options: Json,
+}
+
+/// Folded journal state.
+#[derive(Debug, Clone, Default)]
+pub struct Replay {
+    pub invocation: Option<InvocationInfo>,
+    pub jobs: BTreeMap<u64, ReplayedJob>,
+    /// Records folded (excluding skipped unknowns).
+    pub records: usize,
+    /// `resumed` markers seen (how many times this job was picked up).
+    pub resumes: usize,
+}
+
+impl Replay {
+    /// Fold one record.
+    pub fn apply(&mut self, rec: Record) {
+        match rec {
+            Record::Unknown { .. } => return,
+            Record::Invocation {
+                pid,
+                mapper,
+                reducer,
+                ntasks,
+                options,
+            } => {
+                self.invocation = Some(InvocationInfo {
+                    pid,
+                    mapper,
+                    reducer,
+                    ntasks,
+                    options,
+                });
+            }
+            Record::JobSubmitted {
+                job,
+                name,
+                ntasks,
+                task_ids,
+            } => {
+                let j = self.jobs.entry(job).or_default();
+                j.name = name;
+                j.ntasks = ntasks;
+                j.task_ids = task_ids;
+            }
+            Record::TaskAssigned { .. } => {}
+            Record::TaskDone {
+                job,
+                task_id,
+                dead_lettered,
+                ..
+            } => {
+                let j = self.jobs.entry(job).or_default();
+                j.done.insert(task_id);
+                if dead_lettered {
+                    j.dead_lettered.insert(task_id);
+                }
+            }
+            Record::TaskRetry { job, .. } => {
+                self.jobs.entry(job).or_default().retries += 1;
+            }
+            Record::TaskFailed { job, .. } => {
+                self.jobs.entry(job).or_default().task_errors += 1;
+            }
+            Record::TaskReassigned { job, .. } => {
+                self.jobs.entry(job).or_default().reassigns += 1;
+            }
+            Record::JobDone { job } => {
+                self.jobs.entry(job).or_default().completed = true;
+            }
+            Record::JobFailed { job, msg } => {
+                self.jobs.entry(job).or_default().failed = Some(msg);
+            }
+            Record::BreakerTripped { job, .. } => {
+                self.jobs.entry(job).or_default().breaker = true;
+            }
+            Record::Resumed { .. } => self.resumes += 1,
+        }
+        self.records += 1;
+    }
+
+    /// Fold journal text, tolerating a truncated/garbage tail (see
+    /// module docs).  Mid-file corruption is an error.
+    pub fn from_text(text: &str, path: &Path) -> Result<Replay> {
+        let mut replay = Replay::default();
+        let lines: Vec<&str> = text
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty())
+            .collect();
+        for (i, line) in lines.iter().enumerate() {
+            match Record::decode(line, path) {
+                Ok(rec) => replay.apply(rec),
+                Err(e) => {
+                    // A bad line is a tolerable crash artifact only if
+                    // nothing decodable follows it.
+                    let valid_follows = lines[i + 1..]
+                        .iter()
+                        .any(|l| Record::decode(l, path).is_ok());
+                    if valid_follows {
+                        return Err(Error::Format {
+                            kind: "journal",
+                            path: path.to_path_buf(),
+                            reason: format!(
+                                "corrupt record at line {} (valid \
+                                 records follow it): {e}",
+                                i + 1
+                            ),
+                        });
+                    }
+                    break;
+                }
+            }
+        }
+        Ok(replay)
+    }
+
+    /// Load and fold a journal file.
+    pub fn load(path: &Path) -> Result<Replay> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| Error::Format {
+                kind: "journal",
+                path: path.to_path_buf(),
+                reason: format!("unreadable journal: {e}"),
+            })?;
+        Replay::from_text(&text, path)
+    }
+
+    /// Union of completed task ids across every job named `name`
+    /// (resume re-submits under the original job name, so a second
+    /// resume sees both generations).
+    pub fn done_task_ids(&self, name: &str) -> HashSet<usize> {
+        self.jobs
+            .values()
+            .filter(|j| j.name == name)
+            .flat_map(|j| j.done.iter().copied())
+            .collect()
+    }
+
+    /// Union of dead-lettered task ids across every job named `name`.
+    pub fn dead_lettered_task_ids(&self, name: &str) -> HashSet<usize> {
+        self.jobs
+            .values()
+            .filter(|j| j.name == name)
+            .flat_map(|j| j.dead_lettered.iter().copied())
+            .collect()
+    }
+
+    /// Structural consistency — the invariant replay of *any* journal
+    /// prefix must satisfy (property-tested).
+    pub fn consistent(&self) -> bool {
+        self.jobs.values().all(|j| {
+            let ids: HashSet<usize> =
+                j.task_ids.iter().copied().collect();
+            // Completions stay within the submitted task-id set (when
+            // the submit record made it into the prefix), never exceed
+            // the task count, and dead letters are a subset of done.
+            let within = j.task_ids.is_empty()
+                || j.done.iter().all(|t| ids.contains(t));
+            let bounded =
+                j.task_ids.is_empty() || j.done.len() <= j.ntasks;
+            let complete_means_full = !j.completed
+                || j.task_ids.is_empty()
+                || j.done.len() == j.ntasks;
+            within
+                && bounded
+                && complete_means_full
+                && j.dead_lettered.is_subset(&j.done)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lines(recs: &[Record]) -> String {
+        recs.iter()
+            .map(|r| r.to_json().to_string_compact())
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    fn sample() -> Vec<Record> {
+        vec![
+            Record::JobSubmitted {
+                job: 1,
+                name: "wordcount".into(),
+                ntasks: 3,
+                task_ids: vec![1, 2, 3],
+            },
+            Record::TaskDone {
+                job: 1,
+                idx: 0,
+                task_id: 1,
+                retries: 0,
+                dead_lettered: false,
+            },
+            Record::TaskFailed {
+                job: 1,
+                idx: 1,
+                task_id: 2,
+                msg: "exit status 1".into(),
+            },
+            Record::TaskDone {
+                job: 1,
+                idx: 1,
+                task_id: 2,
+                retries: 0,
+                dead_lettered: true,
+            },
+            Record::TaskDone {
+                job: 1,
+                idx: 2,
+                task_id: 3,
+                retries: 1,
+                dead_lettered: false,
+            },
+            Record::JobDone { job: 1 },
+        ]
+    }
+
+    #[test]
+    fn full_replay_folds_done_sets() {
+        let r =
+            Replay::from_text(&lines(&sample()), Path::new("/j")).unwrap();
+        assert!(r.consistent());
+        let j = &r.jobs[&1];
+        assert!(j.completed);
+        assert_eq!(j.done.len(), 3);
+        assert_eq!(
+            r.dead_lettered_task_ids("wordcount"),
+            [2].into_iter().collect()
+        );
+        assert_eq!(
+            r.done_task_ids("wordcount"),
+            [1, 2, 3].into_iter().collect()
+        );
+    }
+
+    #[test]
+    fn every_prefix_is_consistent() {
+        let recs = sample();
+        for n in 0..=recs.len() {
+            let r = Replay::from_text(&lines(&recs[..n]), Path::new("/j"))
+                .unwrap();
+            assert!(r.consistent(), "prefix of {n} records");
+        }
+    }
+
+    #[test]
+    fn garbage_tail_is_tolerated() {
+        let text = lines(&sample()[..2]) + "\n{\"rec\": \"done\", \"jo";
+        let r = Replay::from_text(&text, Path::new("/j")).unwrap();
+        assert_eq!(r.records, 2, "stops at the severed line");
+        assert_eq!(r.done_task_ids("wordcount").len(), 1);
+    }
+
+    #[test]
+    fn mid_file_garbage_is_an_error() {
+        let mut all = lines(&sample());
+        let good_tail = all.split_off(all.find('\n').unwrap());
+        let text = all + "\nTOTAL GARBAGE" + &good_tail;
+        match Replay::from_text(&text, Path::new("/j")) {
+            Err(Error::Format { kind: "journal", .. }) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_records_are_skipped() {
+        let text = lines(&sample()[..1])
+            + "\n{\"rec\": \"from-the-future\", \"x\": 9}";
+        let r = Replay::from_text(&text, Path::new("/j")).unwrap();
+        assert_eq!(r.records, 1);
+        assert!(r.consistent());
+    }
+}

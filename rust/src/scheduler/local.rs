@@ -40,7 +40,7 @@ use std::time::Instant;
 use crate::error::{Error, Result};
 use crate::scheduler::exec::execute;
 use crate::scheduler::failure::FailurePolicy;
-use crate::scheduler::table::{JobTable, Outcome};
+use crate::scheduler::table::{ErrorAction, JobTable, Outcome};
 use crate::scheduler::{Engine, JobId, JobReport, JobSpec, TaskReport};
 
 /// Completion messages from workers to the dispatcher.
@@ -50,9 +50,13 @@ enum Event {
         idx: usize,
         report: TaskReport,
     },
-    /// A real (non-injected) task error: fails the job and, cascading,
-    /// every dependent job.
-    TaskFailed { job: JobId, msg: String },
+    /// A real (non-injected) task error; the job's `ErrorPolicy`
+    /// (applied on the engine-shared table path) decides its fate.
+    TaskFailed {
+        job: JobId,
+        idx: usize,
+        msg: String,
+    },
 }
 
 /// Everything behind the shared mutex.
@@ -258,8 +262,16 @@ fn dispatcher_loop(inner: &Inner) {
                     let ready = core.table.on_task_done(job, idx, report);
                     core.ready.extend(ready);
                 }
-                Event::TaskFailed { job, msg } => {
-                    core.table.fail_job(job, msg);
+                Event::TaskFailed { job, idx, msg } => {
+                    match core.table.on_task_error(job, idx, &msg, None) {
+                        ErrorAction::Requeue => {
+                            core.ready.push_back((job, idx));
+                        }
+                        ErrorAction::Completed(ready) => {
+                            core.ready.extend(ready);
+                        }
+                        ErrorAction::FailJob | ErrorAction::Ignore => {}
+                    }
                 }
             }
         }
@@ -300,6 +312,7 @@ fn worker_loop(inner: &Inner) {
         };
         // Snapshot what execution needs; skip tasks of dead jobs.
         let Some(view) = core.table.view(jid, idx) else { continue };
+        core.table.note_assigned(jid, idx, None);
         let dispatch_wait = view
             .eligible_at
             .map(|t| t.elapsed())
@@ -356,6 +369,7 @@ fn worker_loop(inner: &Inner) {
             Err(e) => {
                 core.events.push_back(Event::TaskFailed {
                     job: jid,
+                    idx,
                     msg: format!("task {} failed: {e}", task.task_id),
                 });
             }

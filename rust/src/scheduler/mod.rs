@@ -13,12 +13,17 @@
 //! * [`remote`] — a distributed coordinator/worker engine: tasks ship
 //!   over TCP to `llmapreduce worker` daemons, with heartbeat-based
 //!   death detection and fault-tolerant reassignment (DESIGN.md §6);
+//! * [`journal`] — the crash-safe job journal: every `JobTable`
+//!   transition appends an fsync'd JSON line so `llmapreduce resume`
+//!   can reconstruct in-flight state after coordinator death, plus the
+//!   dead-letter queue and failure circuit breaker (DESIGN.md §8);
 //! * [`cost`]   — the calibrated cost model bridging the engines.
 
 pub mod cost;
 pub mod dialect;
 pub mod exec;
 pub mod failure;
+pub mod journal;
 pub mod local;
 pub mod remote;
 pub mod sim;
@@ -151,7 +156,7 @@ pub struct TaskSpec {
 }
 
 /// An array job: the unit LLMapReduce submits (Fig 1 step 2).
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 pub struct JobSpec {
     /// Job name (`-N` in Fig 8) — conventionally the mapper script name.
     pub name: String,
@@ -172,6 +177,28 @@ pub struct JobSpec {
     pub task_deps: Vec<(usize, usize)>,
     /// Whole-node allocation (`--exclusive`).
     pub exclusive: bool,
+    /// Crash-safety journal to append this job's transitions to
+    /// (DESIGN.md §8).  Shared by every job of one invocation; `None`
+    /// runs unjournaled (the historic behaviour).
+    pub journal: Option<Arc<journal::Journal>>,
+    /// What a task's terminal execution error does to the job:
+    /// stop (default), retry, dead-letter, or skip — plus the
+    /// failure-rate circuit breaker.
+    pub error_policy: journal::ErrorPolicy,
+}
+
+impl std::fmt::Debug for JobSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("JobSpec")
+            .field("name", &self.name)
+            .field("tasks", &self.tasks.len())
+            .field("depends_on", &self.depends_on)
+            .field("task_deps", &self.task_deps.len())
+            .field("exclusive", &self.exclusive)
+            .field("journaled", &self.journal.is_some())
+            .field("error_policy", &self.error_policy)
+            .finish()
+    }
 }
 
 impl JobSpec {
@@ -182,6 +209,8 @@ impl JobSpec {
             depends_on: None,
             task_deps: Vec::new(),
             exclusive: false,
+            journal: None,
+            error_policy: journal::ErrorPolicy::default(),
         }
     }
 
@@ -205,6 +234,18 @@ impl JobSpec {
 
     pub fn exclusive(mut self, on: bool) -> Self {
         self.exclusive = on;
+        self
+    }
+
+    /// Attach the invocation's crash-safety journal.
+    pub fn journal(mut self, j: Arc<journal::Journal>) -> Self {
+        self.journal = Some(j);
+        self
+    }
+
+    /// Set the task-error policy (see [`journal::ErrorPolicy`]).
+    pub fn error_policy(mut self, p: journal::ErrorPolicy) -> Self {
+        self.error_policy = p;
         self
     }
 }
@@ -240,6 +281,11 @@ pub struct TaskReport {
     /// or heartbeat lapse) before completing it, forcing reassignment to
     /// a surviving worker.  Distinct from `retries` (injected failures).
     pub reassigned: usize,
+    /// True when this is a dead-letter placeholder: the task's execution
+    /// errored past its budget under `--on-error=dlq|retry` and was
+    /// counted complete with its inputs recorded in `dlq.jsonl` instead
+    /// of failing the job (DESIGN.md §8).
+    pub dead_lettered: bool,
 }
 
 impl TaskReport {
@@ -260,6 +306,9 @@ pub struct JobReport {
     pub makespan: Duration,
     /// Execution width (cluster slots / worker threads) the job ran on.
     pub slots: usize,
+    /// Tasks satisfied from the journal by a `resume` run instead of
+    /// being re-executed (zero on a fresh submission).
+    pub replayed: usize,
 }
 
 impl JobReport {
@@ -291,6 +340,12 @@ impl JobReport {
         }
         let busy = (self.total_startup() + self.total_compute()).as_secs_f64();
         (busy / (self.makespan.as_secs_f64() * self.slots as f64)).min(1.0)
+    }
+
+    /// How many tasks finished as dead-letter placeholders (their
+    /// inputs await `dlq reprocess`).
+    pub fn dead_lettered(&self) -> usize {
+        self.tasks.iter().filter(|t| t.dead_lettered).count()
     }
 
     /// Mean overhead per array task — Fig 18's metric.

@@ -54,7 +54,7 @@ use crate::scheduler::remote::protocol::{
     Message, WireWork, PROTOCOL_VERSION,
 };
 use crate::scheduler::remote::transport::{split, LineWriter};
-use crate::scheduler::table::{JobTable, Outcome};
+use crate::scheduler::table::{ErrorAction, JobTable, Outcome};
 use crate::scheduler::{Engine, JobId, JobReport, JobSpec, TaskReport};
 
 /// Tuning knobs of the coordinator (defaults suit localhost fleets).
@@ -394,6 +394,7 @@ fn try_assign(core: &mut Core, policy: &FailurePolicy) {
         let worker = core.workers.get_mut(&wid).expect("picked above");
         worker.in_flight.push((jid, idx));
         worker.used += need;
+        let worker_name = worker.name.clone();
         core.assigned.insert(
             (jid, idx),
             Assigned {
@@ -404,6 +405,7 @@ fn try_assign(core: &mut Core, policy: &FailurePolicy) {
                 need,
             },
         );
+        core.table.note_assigned(jid, idx, Some(&worker_name));
     }
 }
 
@@ -429,6 +431,7 @@ fn mark_dead(core: &mut Core, wid: u64) {
         core.assigned.remove(&key);
         if core.table.is_live(key.0) {
             *core.reassigns.entry(key).or_insert(0) += 1;
+            core.table.note_reassigned(key.0, key.1);
             core.ready.push_front(key);
         }
     }
@@ -570,14 +573,44 @@ fn serve_worker(inner: &Arc<Inner>, stream: TcpStream) {
                             {
                                 w.used = w.used.saturating_sub(need);
                             }
-                            core.table.fail_job(JobId(job), msg);
-                            // Drop queue entries / counters of dead jobs.
-                            let c: &mut Core = &mut core;
-                            let (ready, reassigns, table) =
-                                (&mut c.ready, &mut c.reassigns, &c.table);
-                            ready.retain(|(j, _)| table.is_live(*j));
-                            reassigns
-                                .retain(|(j, _), _| table.is_live(*j));
+                            // The engine-shared error policy decides
+                            // the task's fate (stop/retry/dlq/skip +
+                            // circuit breaker) — identical semantics
+                            // to the local engine.
+                            let worker_name = core
+                                .workers
+                                .get(&wid)
+                                .map(|w| w.name.clone());
+                            match core.table.on_task_error(
+                                JobId(job),
+                                task_idx,
+                                &msg,
+                                worker_name.as_deref(),
+                            ) {
+                                ErrorAction::Requeue => {
+                                    core.ready.push_back(key);
+                                }
+                                ErrorAction::Completed(ready) => {
+                                    core.ready.extend(ready);
+                                }
+                                ErrorAction::FailJob => {
+                                    // Drop queue entries / counters of
+                                    // dead jobs.
+                                    let c: &mut Core = &mut core;
+                                    let (ready, reassigns, table) = (
+                                        &mut c.ready,
+                                        &mut c.reassigns,
+                                        &c.table,
+                                    );
+                                    ready.retain(|(j, _)| {
+                                        table.is_live(*j)
+                                    });
+                                    reassigns.retain(|(j, _), _| {
+                                        table.is_live(*j)
+                                    });
+                                }
+                                ErrorAction::Ignore => {}
+                            }
                         }
                         try_assign(&mut core, &inner.config.policy);
                         drop(core);
@@ -660,6 +693,7 @@ fn on_complete(
         ),
         shipped: roundtrip.saturating_sub(exec),
         reassigned: core.reassigns.remove(&(jid, idx)).unwrap_or(0),
+        dead_lettered: false,
     };
     let ready = core.table.on_task_done(jid, idx, report);
     core.ready.extend(ready);

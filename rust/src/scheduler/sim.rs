@@ -348,6 +348,7 @@ impl SimEngine {
                 name: spec.name.clone(),
                 makespan: dur(clock.saturating_sub(job_submit)),
                 slots: self.config.total_slots(),
+                replayed: 0,
                 tasks: reports.into_iter().map(|r| r.unwrap()).collect(),
             };
             state.finished.insert(jid, report);

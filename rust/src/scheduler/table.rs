@@ -19,7 +19,12 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::scheduler::{JobId, JobReport, JobSpec, TaskReport, TaskSpec};
+use crate::scheduler::journal::{
+    DeadLetter, ErrorPolicy, Journal, OnError, Record,
+};
+use crate::scheduler::{
+    JobId, JobReport, JobSpec, TaskReport, TaskSpec, TaskWork,
+};
 
 /// Eligibility gate of one task.
 #[derive(Debug, Clone)]
@@ -45,6 +50,13 @@ struct Job {
     eligible_at: Vec<Option<Instant>>,
     /// Injected-failure attempts consumed so far, per task.
     attempts: Vec<usize>,
+    /// Real execution-error retries consumed so far, per task (kept
+    /// separate from `attempts` so error retries never perturb the
+    /// deterministic injected-failure schedule).
+    error_attempts: Vec<usize>,
+    /// Tasks terminally errored (dead-lettered or skipped) — the
+    /// numerator of the circuit breaker.
+    errors: usize,
     reports: Vec<Option<TaskReport>>,
     done_tasks: Vec<bool>,
     /// Tasks not yet successfully completed.
@@ -57,6 +69,11 @@ struct Job {
     /// engine has no nodes (one slot is one slot); the remote engine
     /// gives such tasks a whole worker.
     exclusive: bool,
+    /// Crash journal shared with every job of this invocation; `None`
+    /// when journaling is off (benches, bare engine tests).
+    journal: Option<Arc<Journal>>,
+    /// What a task's terminal execution error does to this job.
+    policy: ErrorPolicy,
     /// Completed report or failure message; `Some` means the job is over.
     outcome: Option<Result<JobReport, String>>,
 }
@@ -73,6 +90,7 @@ impl Job {
         self.gates = Vec::new();
         self.eligible_at = Vec::new();
         self.attempts = Vec::new();
+        self.error_attempts = Vec::new();
         self.reports = Vec::new();
         self.done_tasks = Vec::new();
     }
@@ -170,9 +188,48 @@ impl JobTable {
         match self.jobs.get_mut(&jid) {
             Some(job) if job.outcome.is_none() && idx < job.ntasks => {
                 job.attempts[idx] += 1;
+                if let Some(j) = &job.journal {
+                    j.record(&Record::TaskRetry {
+                        job: jid.0,
+                        idx,
+                        task_id: job.tasks[idx].task_id,
+                        attempt: job.attempts[idx],
+                    });
+                }
                 true
             }
             _ => false,
+        }
+    }
+
+    /// Journal that `(jid, idx)` was handed to a worker/slot.
+    pub fn note_assigned(&self, jid: JobId, idx: usize, worker: Option<&str>) {
+        let Some(job) = self.jobs.get(&jid) else { return };
+        if job.outcome.is_some() || idx >= job.ntasks {
+            return;
+        }
+        if let Some(j) = &job.journal {
+            j.record(&Record::TaskAssigned {
+                job: jid.0,
+                idx,
+                task_id: job.tasks[idx].task_id,
+                worker: worker.map(str::to_string),
+            });
+        }
+    }
+
+    /// Journal that `(jid, idx)` was reclaimed from a dead worker.
+    pub fn note_reassigned(&self, jid: JobId, idx: usize) {
+        let Some(job) = self.jobs.get(&jid) else { return };
+        if job.outcome.is_some() || idx >= job.ntasks {
+            return;
+        }
+        if let Some(j) = &job.journal {
+            j.record(&Record::TaskReassigned {
+                job: jid.0,
+                idx,
+                task_id: job.tasks[idx].task_id,
+            });
         }
     }
 
@@ -182,6 +239,7 @@ impl JobTable {
             name: name.to_string(),
             makespan: at.elapsed(),
             slots: self.slots,
+            replayed: 0,
             tasks: Vec::new(),
         }
     }
@@ -202,8 +260,18 @@ impl JobTable {
             depends_on,
             task_deps,
             exclusive,
+            journal,
+            error_policy,
         } = spec;
         let n = tasks.len();
+        if let Some(j) = &journal {
+            j.record(&Record::JobSubmitted {
+                job: jid.0,
+                name: name.clone(),
+                ntasks: n,
+                task_ids: tasks.iter().map(|t| t.task_id).collect(),
+            });
+        }
         let mut job = Job {
             name,
             tasks: Arc::new(tasks),
@@ -212,12 +280,16 @@ impl JobTable {
             gates: vec![Gate::Open; n],
             eligible_at: vec![None; n],
             attempts: vec![0; n],
+            error_attempts: vec![0; n],
+            errors: 0,
             reports: vec![None; n],
             done_tasks: vec![false; n],
             remaining: n,
             barrier_dependents: Vec::new(),
             task_dependents: HashMap::new(),
             exclusive,
+            journal,
+            policy: error_policy,
             outcome: None,
         };
 
@@ -234,9 +306,15 @@ impl JobTable {
                 Some(upstream) => match &upstream.outcome {
                     Some(Ok(_)) => {} // dependency satisfied: gates open
                     Some(Err(msg)) => {
-                        job.outcome = Some(Err(format!(
-                            "dependency job {dep} failed: {msg}"
-                        )));
+                        let m =
+                            format!("dependency job {dep} failed: {msg}");
+                        if let Some(j) = &job.journal {
+                            j.record(&Record::JobFailed {
+                                job: jid.0,
+                                msg: m.clone(),
+                            });
+                        }
+                        job.outcome = Some(Err(m));
                         job.shed();
                         self.jobs.insert(jid, job);
                         return Vec::new();
@@ -279,9 +357,15 @@ impl JobTable {
                 None => {
                     // Validated at submit; can only mean the dependency
                     // was itself dropped on an earlier admission failure.
-                    job.outcome = Some(Err(format!(
-                        "dependency job {dep} was never admitted"
-                    )));
+                    let m =
+                        format!("dependency job {dep} was never admitted");
+                    if let Some(j) = &job.journal {
+                        j.record(&Record::JobFailed {
+                            job: jid.0,
+                            msg: m.clone(),
+                        });
+                    }
+                    job.outcome = Some(Err(m));
                     job.shed();
                     self.jobs.insert(jid, job);
                     return Vec::new();
@@ -293,6 +377,9 @@ impl JobTable {
         // barriered on a still-running upstream (barrier release
         // completes it otherwise, once the upstream lands).
         if n == 0 && !barrier_registered {
+            if let Some(j) = &job.journal {
+                j.record(&Record::JobDone { job: jid.0 });
+            }
             job.outcome =
                 Some(Ok(self.empty_report(jid, &job.name, submitted_at)));
         }
@@ -329,6 +416,15 @@ impl JobTable {
             {
                 // Job over, hostile index, or stale duplicate.
                 return Vec::new();
+            }
+            if let Some(j) = &job.journal {
+                j.record(&Record::TaskDone {
+                    job: jid.0,
+                    idx,
+                    task_id: report.task_id,
+                    retries: report.retries,
+                    dead_lettered: report.dead_lettered,
+                });
             }
             job.done_tasks[idx] = true;
             job.reports[idx] = Some(report);
@@ -392,11 +488,15 @@ impl JobTable {
                         }
                     }
                     if d.ntasks == 0 {
+                        if let Some(j) = &d.journal {
+                            j.record(&Record::JobDone { job: dj.0 });
+                        }
                         d.outcome = Some(Ok(JobReport {
                             job_id: dj.0,
                             name: d.name.clone(),
                             makespan: d.submitted_at.elapsed(),
                             slots,
+                            replayed: 0,
                             tasks: Vec::new(),
                         }));
                         d.shed();
@@ -429,6 +529,12 @@ impl JobTable {
                 if job.outcome.is_some() {
                     continue;
                 }
+                if let Some(j) = &job.journal {
+                    j.record(&Record::JobFailed {
+                        job: id.0,
+                        msg: m.clone(),
+                    });
+                }
                 job.outcome = Some(Err(m.clone()));
                 job.shed();
                 let mut deps: Vec<JobId> =
@@ -445,6 +551,155 @@ impl JobTable {
             }
         }
     }
+
+    /// Apply the job's [`ErrorPolicy`] to a task's terminal execution
+    /// error.  This sits on the engine-shared transition path — both the
+    /// local dispatcher and the remote coordinator route real task
+    /// errors here — so `--on-error` semantics cannot diverge per
+    /// `--engine`.  Distinct from `bump_attempt`, which tracks
+    /// *injected* failures: error retries consume their own budget and
+    /// never perturb the deterministic injection schedule.
+    pub fn on_task_error(
+        &mut self,
+        jid: JobId,
+        idx: usize,
+        msg: &str,
+        worker: Option<&str>,
+    ) -> ErrorAction {
+        // Decide under the job borrow; fail/complete after it ends.
+        enum Verdict {
+            Fail(String),
+            Requeue,
+            Complete(TaskReport),
+        }
+        let verdict = {
+            let Some(job) = self.jobs.get_mut(&jid) else {
+                return ErrorAction::Ignore;
+            };
+            if job.outcome.is_some()
+                || idx >= job.ntasks
+                || job.done_tasks[idx]
+            {
+                return ErrorAction::Ignore;
+            }
+            let task_id = job.tasks[idx].task_id;
+            if let Some(j) = &job.journal {
+                j.record(&Record::TaskFailed {
+                    job: jid.0,
+                    idx,
+                    task_id,
+                    msg: msg.to_string(),
+                });
+            }
+            let policy = job.policy;
+            match policy.on_error {
+                OnError::Stop => Verdict::Fail(msg.to_string()),
+                OnError::Retry
+                    if job.error_attempts[idx] < policy.max_retries =>
+                {
+                    job.error_attempts[idx] += 1;
+                    if let Some(j) = &job.journal {
+                        j.record(&Record::TaskRetry {
+                            job: jid.0,
+                            idx,
+                            task_id,
+                            attempt: job.error_attempts[idx],
+                        });
+                    }
+                    Verdict::Requeue
+                }
+                terminal @ (OnError::Retry
+                | OnError::Dlq
+                | OnError::Skip) => {
+                    job.errors += 1;
+                    if policy.breaker_tripped(job.errors, job.ntasks) {
+                        if let Some(j) = &job.journal {
+                            j.record(&Record::BreakerTripped {
+                                job: jid.0,
+                                errors: job.errors,
+                                ntasks: job.ntasks,
+                                threshold: policy.failure_threshold,
+                            });
+                        }
+                        Verdict::Fail(format!(
+                            "circuit breaker tripped: {}/{} tasks \
+                             errored (failure threshold {}); last \
+                             error: {msg}",
+                            job.errors,
+                            job.ntasks,
+                            policy.failure_threshold
+                        ))
+                    } else {
+                        // Skip drops the work silently; dlq (and a
+                        // retry budget running dry) records it first.
+                        let dead_lettered = terminal != OnError::Skip;
+                        if dead_lettered {
+                            if let Some(j) = &job.journal {
+                                j.dead_letter(&DeadLetter {
+                                    job: jid.0,
+                                    task_id,
+                                    attempts: job.error_attempts[idx],
+                                    worker: worker.map(str::to_string),
+                                    error: DeadLetter::tail(msg),
+                                    inputs: task_inputs(&job.tasks[idx]),
+                                });
+                            }
+                        }
+                        Verdict::Complete(TaskReport {
+                            task_id,
+                            retries: job.attempts[idx],
+                            dead_lettered,
+                            worker: worker.map(str::to_string),
+                            ..Default::default()
+                        })
+                    }
+                }
+            }
+        };
+        match verdict {
+            Verdict::Fail(m) => {
+                self.fail_job(jid, m);
+                ErrorAction::FailJob
+            }
+            Verdict::Requeue => ErrorAction::Requeue,
+            Verdict::Complete(report) => {
+                ErrorAction::Completed(self.on_task_done(jid, idx, report))
+            }
+        }
+    }
+}
+
+/// Verdict of [`JobTable::on_task_error`]: what the engine does with the
+/// errored `(job, task)` pair.
+#[derive(Debug)]
+pub(crate) enum ErrorAction {
+    /// The job (and its dependents) failed — drop the task.
+    FailJob,
+    /// Retry budget left: put the task back on the ready queue.
+    Requeue,
+    /// The task was counted complete (dead-lettered or skipped); these
+    /// downstream tasks just became dispatchable.
+    Completed(Vec<(JobId, usize)>),
+    /// Stale (job already over or task already done) — drop silently.
+    Ignore,
+}
+
+/// Input paths of a task, for dead-letter attribution (what `dlq
+/// reprocess` re-plans over).
+fn task_inputs(task: &TaskSpec) -> Vec<String> {
+    match &task.work {
+        TaskWork::Map { pairs, .. } => pairs
+            .iter()
+            .map(|(input, _)| input.display().to_string())
+            .collect(),
+        TaskWork::Reduce { input_dir, .. } => {
+            vec![input_dir.display().to_string()]
+        }
+        TaskWork::ReducePartial { files, .. } => {
+            files.iter().map(|f| f.display().to_string()).collect()
+        }
+        TaskWork::Synthetic { .. } => Vec::new(),
+    }
 }
 
 /// Completion arm of [`JobTable::on_task_done`]: assemble the report once
@@ -459,11 +714,15 @@ fn complete_if_last(job: &mut Job, jid: JobId, completed: bool, slots: usize) {
         .iter_mut()
         .map(|r| r.take().expect("every task reported"))
         .collect();
+    if let Some(j) = &job.journal {
+        j.record(&Record::JobDone { job: jid.0 });
+    }
     job.outcome = Some(Ok(JobReport {
         job_id: jid.0,
         name: job.name.clone(),
         makespan: job.submitted_at.elapsed(),
         slots,
+        replayed: 0,
         tasks,
     }));
     job.shed();
@@ -577,6 +836,106 @@ mod tests {
         assert!(t.is_live(JobId(1)), "double count must not complete");
         done(&mut t, JobId(1), 1);
         assert!(matches!(t.outcome(JobId(1)), Outcome::Done(_)));
+    }
+
+    #[test]
+    fn stop_policy_fails_the_job_on_first_error() {
+        let mut t = JobTable::new(1);
+        t.admit(JobId(1), JobSpec::new("a", synth_tasks(2)), Instant::now());
+        match t.on_task_error(JobId(1), 0, "exit status 1", None) {
+            ErrorAction::FailJob => {}
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(t.outcome(JobId(1)), Outcome::Failed(_)));
+        // Post-failure error reports are stale.
+        assert!(matches!(
+            t.on_task_error(JobId(1), 1, "late", None),
+            ErrorAction::Ignore
+        ));
+    }
+
+    #[test]
+    fn retry_policy_requeues_then_dead_letters() {
+        let mut t = JobTable::new(1);
+        let policy = ErrorPolicy {
+            on_error: OnError::Retry,
+            max_retries: 2,
+            ..ErrorPolicy::default()
+        };
+        t.admit(
+            JobId(1),
+            JobSpec::new("a", synth_tasks(1)).error_policy(policy),
+            Instant::now(),
+        );
+        for _ in 0..2 {
+            assert!(matches!(
+                t.on_task_error(JobId(1), 0, "boom", None),
+                ErrorAction::Requeue
+            ));
+        }
+        // Budget exhausted: the task completes as a dead-letter
+        // placeholder and the (single-task) job finishes.
+        match t.on_task_error(JobId(1), 0, "boom", None) {
+            ErrorAction::Completed(_) => {}
+            other => panic!("{other:?}"),
+        }
+        match t.outcome(JobId(1)) {
+            Outcome::Done(r) => assert_eq!(r.dead_lettered(), 1),
+            _ => panic!("job completes without the dead task"),
+        }
+    }
+
+    #[test]
+    fn skip_policy_completes_without_dead_letter() {
+        let mut t = JobTable::new(1);
+        let policy = ErrorPolicy {
+            on_error: OnError::Skip,
+            ..ErrorPolicy::default()
+        };
+        t.admit(
+            JobId(1),
+            JobSpec::new("a", synth_tasks(1)).error_policy(policy),
+            Instant::now(),
+        );
+        assert!(matches!(
+            t.on_task_error(JobId(1), 0, "boom", None),
+            ErrorAction::Completed(_)
+        ));
+        match t.outcome(JobId(1)) {
+            Outcome::Done(r) => assert_eq!(r.dead_lettered(), 0),
+            _ => panic!("skip completes the job"),
+        }
+    }
+
+    #[test]
+    fn breaker_trips_past_the_error_fraction() {
+        let mut t = JobTable::new(1);
+        let policy = ErrorPolicy {
+            on_error: OnError::Dlq,
+            failure_threshold: 0.25,
+            ..ErrorPolicy::default()
+        };
+        t.admit(
+            JobId(1),
+            JobSpec::new("a", synth_tasks(4)).error_policy(policy),
+            Instant::now(),
+        );
+        // 1/4 == threshold: not past it yet.
+        assert!(matches!(
+            t.on_task_error(JobId(1), 0, "boom", None),
+            ErrorAction::Completed(_)
+        ));
+        // 2/4 > 0.25: tripped.
+        assert!(matches!(
+            t.on_task_error(JobId(1), 1, "boom", None),
+            ErrorAction::FailJob
+        ));
+        match t.outcome(JobId(1)) {
+            Outcome::Failed(m) => {
+                assert!(m.contains("circuit breaker"), "{m}")
+            }
+            _ => panic!("breaker fails the job"),
+        }
     }
 
     #[test]

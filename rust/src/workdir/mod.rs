@@ -30,6 +30,19 @@ impl MapRedDir {
         Ok(MapRedDir { path, keep })
     }
 
+    /// Adopt an *existing* `.MAPRED.<pid>` directory left behind by a
+    /// crashed run (used by `llmapreduce resume`): same drop semantics
+    /// as [`MapRedDir::create`], but the directory must already exist —
+    /// a resumed invocation re-uses the crashed run's artifacts and
+    /// journal rather than regenerating them.
+    pub fn adopt(path: &Path, keep: bool) -> Result<MapRedDir> {
+        fs::metadata(path).at(path)?;
+        Ok(MapRedDir {
+            path: path.to_path_buf(),
+            keep,
+        })
+    }
+
     pub fn path(&self) -> &Path {
         &self.path
     }
@@ -124,6 +137,21 @@ mod tests {
             path = wd.path().to_path_buf();
         }
         assert!(path.exists(), "--keep=true preserves the directory");
+    }
+
+    #[test]
+    fn adopt_requires_existing_dir_and_cleans_up() {
+        let base = tmp("adopt");
+        let wd = MapRedDir::create(&base, 11, true).unwrap();
+        let path = wd.path().to_path_buf();
+        drop(wd);
+        assert!(path.exists());
+        {
+            let adopted = MapRedDir::adopt(&path, false).unwrap();
+            assert_eq!(adopted.path(), path.as_path());
+        }
+        assert!(!path.exists(), "adopted dir removed on drop");
+        assert!(MapRedDir::adopt(&path, false).is_err());
     }
 
     #[test]

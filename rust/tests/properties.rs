@@ -584,3 +584,163 @@ fn prop_malformed_frames_fail_cleanly() {
         }
     });
 }
+
+// ---------------------------------------------------------------------------
+// Journal replay invariants (DESIGN.md §8)
+// ---------------------------------------------------------------------------
+
+use llmapreduce::scheduler::journal::{Record, Replay};
+
+/// Generate a structurally valid journal: one job, every task assigned
+/// and possibly retried, a random subset completed (some dead-lettered
+/// behind a task-failed record), and a terminal job-done exactly when
+/// everything completed.
+fn random_journal(rng: &mut Rng) -> Vec<Record> {
+    let ntasks = rng.range(1, 12);
+    let task_ids: Vec<usize> = (1..=ntasks).collect();
+    let mut recs = vec![
+        Record::Invocation {
+            pid: rng.range(1, 99_999) as u32,
+            mapper: "wordcount".into(),
+            reducer: Some("wordcount-reducer".into()),
+            ntasks,
+            options: obj(vec![("np", Json::from(ntasks as f64))]),
+        },
+        Record::JobSubmitted {
+            job: 1,
+            name: "wordcount".into(),
+            ntasks,
+            task_ids: task_ids.clone(),
+        },
+    ];
+    let mut done = 0;
+    for (idx, &task_id) in task_ids.iter().enumerate() {
+        recs.push(Record::TaskAssigned {
+            job: 1,
+            idx,
+            task_id,
+            worker: (rng.next_below(2) == 0)
+                .then(|| format!("w{}", rng.range(1, 4))),
+        });
+        for attempt in 1..=rng.range(0, 3) {
+            recs.push(Record::TaskRetry {
+                job: 1,
+                idx,
+                task_id,
+                attempt,
+            });
+        }
+        match rng.next_below(4) {
+            0 => {} // crashed mid-flight: assigned but never finished
+            1 => {
+                // Errored, then completed as a dead-letter placeholder.
+                recs.push(Record::TaskFailed {
+                    job: 1,
+                    idx,
+                    task_id,
+                    msg: "exit status 1".into(),
+                });
+                recs.push(Record::TaskDone {
+                    job: 1,
+                    idx,
+                    task_id,
+                    retries: 0,
+                    dead_lettered: true,
+                });
+                done += 1;
+            }
+            _ => {
+                recs.push(Record::TaskDone {
+                    job: 1,
+                    idx,
+                    task_id,
+                    retries: rng.range(0, 2),
+                    dead_lettered: false,
+                });
+                done += 1;
+            }
+        }
+    }
+    if done == ntasks {
+        recs.push(Record::JobDone { job: 1 });
+    }
+    recs
+}
+
+fn journal_text(recs: &[Record]) -> String {
+    recs.iter()
+        .map(|r| r.to_json().to_string_compact())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// Any prefix of a valid journal — a crash can cut it anywhere on a
+/// line boundary — replays to a structurally consistent state, and
+/// completions never leave the submitted task-id set.
+#[test]
+fn prop_journal_prefixes_replay_consistently() {
+    forall("journal-prefix", |rng| {
+        let recs = random_journal(rng);
+        let text = journal_text(&recs);
+        let lines: Vec<&str> = text.lines().collect();
+        let path = std::path::Path::new("journal.jsonl");
+        for cut in 0..=lines.len() {
+            let prefix = lines[..cut].join("\n");
+            let replay = Replay::from_text(&prefix, path)
+                .unwrap_or_else(|e| {
+                    panic!("valid prefix of {cut} lines rejected: {e}")
+                });
+            assert!(
+                replay.consistent(),
+                "inconsistent replay at prefix {cut}"
+            );
+            let done = replay.done_task_ids("wordcount");
+            assert!(
+                replay
+                    .dead_lettered_task_ids("wordcount")
+                    .is_subset(&done),
+                "dead letters outside done at prefix {cut}"
+            );
+        }
+    });
+}
+
+/// A torn tail — the fsync'd line a crash cut mid-write — is tolerated
+/// exactly when nothing valid follows it; garbage *between* valid
+/// records is `Error::Format`, and nothing ever panics.
+#[test]
+fn prop_journal_garbage_tail_tolerated_mid_file_rejected() {
+    forall("journal-tail", |rng| {
+        let recs = random_journal(rng);
+        let text = journal_text(&recs);
+        let full = Replay::from_text(
+            &text,
+            std::path::Path::new("journal.jsonl"),
+        )
+        .unwrap();
+
+        // Truncate the last line mid-byte: a real torn write.
+        let nchars = text.chars().count();
+        let cut = rng.range(nchars.saturating_sub(20), nchars);
+        let torn: String = text.chars().take(cut).collect();
+        let path = std::path::Path::new("journal.jsonl");
+        let replayed = Replay::from_text(&torn, path)
+            .expect("torn tail must be tolerated");
+        assert!(replayed.consistent());
+        assert!(replayed.records <= full.records);
+
+        // The same garbage mid-file (valid records follow) is corruption.
+        let glines: Vec<&str> = text.lines().collect();
+        if glines.len() >= 3 {
+            let mut bad = glines.clone();
+            bad[0] = "{\"rec\": truncated garbag";
+            match Replay::from_text(&bad.join("\n"), path) {
+                Err(Error::Format { kind: "journal", .. }) => {}
+                Err(other) => panic!("wrong error kind: {other}"),
+                Ok(_) => {
+                    panic!("mid-file corruption must not replay")
+                }
+            }
+        }
+    });
+}

@@ -1,0 +1,721 @@
+//! Crash-recovery acceptance suite (DESIGN.md §8).
+//!
+//! The bar is *byte identity*: a job whose coordinator dies mid-run —
+//! whether simulated by truncating the journal to a crash-point prefix
+//! or by SIGKILLing a real `llmapreduce` process — must, after
+//! `resume`, produce merged output bit-for-bit identical to an
+//! uninterrupted run.  Coverage: plain, `--overlap`, SPMD batches
+//! (which re-run whole), deterministic retry replay under a shared
+//! [`FailurePolicy`] seed, the real binary on the local *and* remote
+//! engines, the dead-letter queue drain, and the failure-rate circuit
+//! breaker.
+
+use std::fs;
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use llmapreduce::apps::registry::{resolve_mapper, resolve_reducer};
+use llmapreduce::mapreduce::{
+    dlq_reprocess, resume, run, Apps, MapReduceReport,
+};
+use llmapreduce::options::Options;
+use llmapreduce::prelude::{FailurePolicy, LocalEngine, OnError};
+use llmapreduce::scheduler::journal::{Replay, DLQ_FILE, JOURNAL_FILE};
+use llmapreduce::util::json::Json;
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("llmr-resume-it-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Deterministic corpus: overlapping word multisets across files.
+fn write_corpus(input: &Path, nfiles: usize) {
+    fs::create_dir_all(input).unwrap();
+    let vocab = ["alpha", "beta", "gamma", "delta", "epsilon"];
+    for i in 0..nfiles {
+        let mut text = String::new();
+        for (w, word) in vocab.iter().enumerate() {
+            for _ in 0..(i + w) % 4 + 1 {
+                text.push_str(word);
+                text.push(' ');
+            }
+        }
+        fs::write(input.join(format!("doc{i:02}.txt")), text).unwrap();
+    }
+}
+
+fn wc_opts(input: &Path, output: PathBuf, pid: u32) -> Options {
+    Options::new(input, output, "wordcount")
+        .np(4)
+        .reducer("wordcount-reducer")
+        .pid(pid)
+}
+
+fn wc_apps() -> Apps {
+    Apps {
+        mapper: resolve_mapper("wordcount").unwrap(),
+        reducer: Some(resolve_reducer("wordcount-reducer").unwrap()),
+    }
+}
+
+fn redout(report: &MapReduceReport) -> Vec<u8> {
+    fs::read(report.redout_path.as_ref().expect("reduced")).unwrap()
+}
+
+/// Simulate a coordinator crash: a dead process leaves an arbitrary
+/// prefix of its append-only journal, so truncating the file right
+/// after the `k`-th map-task `done` record *is* the crash state (plus
+/// whatever stale output files the run left behind — resume must
+/// overwrite those, exactly as it would after a real crash).
+fn truncate_journal_after_dones(wd: &Path, mapper: &str, k: usize) {
+    let path = wd.join(JOURNAL_FILE);
+    let text = fs::read_to_string(&path).unwrap();
+    let mut map_job: Option<usize> = None;
+    let mut kept: Vec<&str> = Vec::new();
+    let mut dones = 0usize;
+    for line in text.lines() {
+        let doc = Json::parse(line).unwrap();
+        let rec = doc.get("rec").and_then(Json::as_str).unwrap();
+        let job = doc.get("job").and_then(Json::as_usize);
+        if rec == "job"
+            && map_job.is_none()
+            && doc.get("name").and_then(Json::as_str) == Some(mapper)
+        {
+            map_job = job;
+        }
+        kept.push(line);
+        if rec == "done" && map_job.is_some() && job == map_job {
+            dones += 1;
+            if dones == k {
+                break;
+            }
+        }
+    }
+    assert_eq!(dones, k, "journal holds at least {k} map completions");
+    fs::write(&path, format!("{}\n", kept.join("\n"))).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Journal-truncation crashes: byte identity on the local engine
+// ---------------------------------------------------------------------------
+
+#[test]
+fn truncated_journal_resume_is_byte_identical() {
+    let root = tmp("local");
+    let input = root.join("input");
+    write_corpus(&input, 10);
+
+    let eng = LocalEngine::new(2);
+    let baseline = run(
+        &wc_opts(&input, root.join("out-base"), 94001).workdir(&root),
+        &wc_apps(),
+        &eng,
+    )
+    .unwrap();
+    let base_bytes = redout(&baseline);
+    assert!(!base_bytes.is_empty());
+
+    let crashed = run(
+        &wc_opts(&input, root.join("out-crash"), 94002)
+            .keep(true)
+            .workdir(&root),
+        &wc_apps(),
+        &eng,
+    )
+    .unwrap();
+    assert_eq!(crashed.map.tasks.len(), 4);
+    let wd = root.join(".MAPRED.94002");
+    assert!(wd.is_dir(), "--keep preserves the workdir + journal");
+    truncate_journal_after_dones(&wd, "wordcount", 2);
+
+    let done = Replay::load(&wd.join(JOURNAL_FILE))
+        .unwrap()
+        .done_task_ids("wordcount");
+    assert_eq!(done.len(), 2);
+
+    let resumed = resume(&wd, &eng).unwrap();
+    assert_eq!(resumed.map.replayed, 2, "two tasks skipped as done");
+    assert_eq!(resumed.map.tasks.len(), 2, "two tasks re-run");
+    for t in &resumed.map.tasks {
+        assert!(
+            !done.contains(&t.task_id),
+            "task {} was journaled done and must not re-run",
+            t.task_id
+        );
+    }
+    assert!(resumed.reduce.is_some(), "the reduce always re-runs");
+    assert_eq!(
+        redout(&resumed),
+        base_bytes,
+        "resumed output must match an uninterrupted run byte-for-byte"
+    );
+
+    // Resume-of-resume: the appended generation marked everything done.
+    let again = resume(&wd, &eng).unwrap();
+    assert_eq!(again.map.replayed, 4);
+    assert_eq!(again.map.tasks.len(), 0);
+    assert_eq!(redout(&again), base_bytes);
+    assert!(wd.is_dir(), "journal recorded --keep, so resume keeps too");
+}
+
+#[test]
+fn overlap_crash_resumes_to_identical_bytes() {
+    let root = tmp("overlap");
+    let input = root.join("input");
+    write_corpus(&input, 8);
+
+    let eng = LocalEngine::new(2);
+    let baseline = run(
+        &wc_opts(&input, root.join("out-base"), 94011).workdir(&root),
+        &wc_apps(),
+        &eng,
+    )
+    .unwrap();
+
+    let crashed = run(
+        &wc_opts(&input, root.join("out-crash"), 94012)
+            .overlap(true)
+            .keep(true)
+            .workdir(&root),
+        &wc_apps(),
+        &eng,
+    )
+    .unwrap();
+    assert!(crashed.overlapped);
+    let wd = root.join(".MAPRED.94012");
+    truncate_journal_after_dones(&wd, "wordcount", 1);
+
+    // Overlap is not resumed: the recovered run barriers a classic
+    // reduce over the full output dir (crashed partials are untrusted
+    // scratch) — and still merges to the same bytes.
+    let resumed = resume(&wd, &eng).unwrap();
+    assert!(!resumed.overlapped);
+    assert!(resumed.partials.is_none());
+    assert_eq!(resumed.map.replayed, 1);
+    assert_eq!(resumed.map.tasks.len(), 3);
+    assert_eq!(redout(&resumed), redout(&baseline));
+}
+
+#[test]
+fn spmd_batches_resume_whole() {
+    let root = tmp("spmd");
+    let input = root.join("input");
+    write_corpus(&input, 8);
+
+    let eng = LocalEngine::new(2);
+    let baseline = run(
+        &wc_opts(&input, root.join("out-base"), 94021).workdir(&root),
+        &wc_apps(),
+        &eng,
+    )
+    .unwrap();
+
+    let crashed = run(
+        &wc_opts(&input, root.join("out-crash"), 94022)
+            .items_per_task(3)
+            .keep(true)
+            .workdir(&root),
+        &wc_apps(),
+        &eng,
+    )
+    .unwrap();
+    assert_eq!(crashed.map.tasks.len(), 3, "8 files at N=3 → 3 batches");
+    let wd = root.join(".MAPRED.94022");
+    truncate_journal_after_dones(&wd, "wordcount", 1);
+
+    let resumed = resume(&wd, &eng).unwrap();
+    assert_eq!(resumed.map.replayed, 1, "the finished batch is skipped");
+    assert_eq!(resumed.map.tasks.len(), 2);
+    for t in &resumed.map.tasks {
+        // The batch is the unit of recovery: it re-runs whole, in one
+        // persistent app launch, never item-by-item.
+        assert_eq!(t.launches, 1, "one persistent launch per batch");
+        assert!(t.items >= 2 && t.items <= 3, "whole batch re-ran");
+    }
+    assert_eq!(redout(&resumed), redout(&baseline));
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic retry replay (journaled schedules recompute on resume)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn resumed_retries_replay_the_failure_policy() {
+    let root = tmp("retries");
+    let input = root.join("input");
+    write_corpus(&input, 10);
+    let policy = FailurePolicy {
+        failure_rate: 0.6,
+        max_retries: 4,
+        seed: 0xD1CE,
+    };
+
+    // Uninterrupted run under the policy: the retry pattern is the
+    // closed-form function of (seed, task_id, attempt).
+    let eng = LocalEngine::with_policy(2, policy);
+    let baseline = run(
+        &wc_opts(&input, root.join("out-base"), 94031)
+            .keep(true)
+            .workdir(&root),
+        &wc_apps(),
+        &eng,
+    )
+    .unwrap();
+    let base_bytes = redout(&baseline);
+    let mut base_retries: Vec<(usize, usize)> = baseline
+        .map
+        .tasks
+        .iter()
+        .map(|t| (t.task_id, t.retries))
+        .collect();
+    base_retries.sort();
+    assert_eq!(
+        base_retries,
+        (1..=4)
+            .map(|t| (t, policy.expected_retries(t)))
+            .collect::<Vec<_>>(),
+        "full run matches the policy's prediction"
+    );
+
+    // Crash after two completions, resume on a *fresh* engine with the
+    // same policy: every re-run task replays its own schedule exactly —
+    // the resumed job reports the same expected_retries per task id.
+    let wd = root.join(".MAPRED.94031");
+    truncate_journal_after_dones(&wd, "wordcount", 2);
+    let fresh = LocalEngine::with_policy(2, policy);
+    let resumed = resume(&wd, &fresh).unwrap();
+    assert_eq!(resumed.map.tasks.len(), 2);
+    for t in &resumed.map.tasks {
+        assert_eq!(
+            t.retries,
+            policy.expected_retries(t.task_id),
+            "task {} must replay its journaled retry schedule",
+            t.task_id
+        );
+    }
+    assert_eq!(redout(&resumed), base_bytes);
+}
+
+// ---------------------------------------------------------------------------
+// Dead-letter queue: drain and reprocess
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dead_letters_drain_through_dlq_reprocess() {
+    let root = tmp("dlq");
+    let input = root.join("input");
+    fs::create_dir_all(&input).unwrap();
+    for i in 0..6 {
+        let word = if i % 3 == 0 { "poison" } else { "fine" };
+        fs::write(
+            input.join(format!("f{i}.txt")),
+            format!("{word} item{i}\n"),
+        )
+        .unwrap();
+    }
+    // Mapper fails on poison inputs until the marker file appears; the
+    // reducer concatenates sorted for determinism.
+    let marker = root.join("MARKER");
+    let map_sh = root.join("map.sh");
+    fs::write(
+        &map_sh,
+        "#!/bin/sh\n\
+         if grep -q poison \"$2\" && [ ! -e \"$1\" ]; then exit 3; fi\n\
+         tr 'a-z' 'A-Z' < \"$2\" > \"$3\"\n",
+    )
+    .unwrap();
+    let red_sh = root.join("red.sh");
+    fs::write(&red_sh, "#!/bin/sh\ncat \"$1\"/*.out | sort > \"$2\"\n")
+        .unwrap();
+    let mapper_spec =
+        format!("sh {} {}", map_sh.display(), marker.display());
+    let reducer_spec = format!("sh {}", red_sh.display());
+    let apps = || Apps {
+        mapper: resolve_mapper(&mapper_spec).unwrap(),
+        reducer: Some(resolve_reducer(&reducer_spec).unwrap()),
+    };
+    let mapper_name = apps().mapper.name().to_string();
+    let mk = |out: &str, pid: u32| {
+        Options::new(&input, root.join(out), &mapper_spec)
+            .reducer(&reducer_spec)
+            .redout("merged.txt")
+            .pid(pid)
+            .workdir(&root)
+    };
+
+    // Healthy reference: marker present from the start.
+    fs::write(&marker, "").unwrap();
+    let eng = LocalEngine::new(2);
+    let reference = run(&mk("out-ref", 94041), &apps(), &eng).unwrap();
+    let ref_bytes = redout(&reference);
+
+    // Degraded run: poison tasks dead-letter, the job still completes.
+    fs::remove_file(&marker).unwrap();
+    let degraded = run(
+        &mk("out-dlq", 94042).on_error(OnError::Dlq),
+        &apps(),
+        &eng,
+    )
+    .unwrap();
+    assert_eq!(degraded.map.dead_lettered(), 2);
+    assert_ne!(redout(&degraded), ref_bytes, "poison contributions lost");
+    let wd = root.join(".MAPRED.94042");
+    assert!(
+        wd.is_dir(),
+        "dead-lettered runs keep their scratch: the journal and queue \
+         are what reprocessing needs"
+    );
+    assert!(wd.join(DLQ_FILE).is_file());
+    let replay = Replay::load(&wd.join(JOURNAL_FILE)).unwrap();
+    assert_eq!(replay.dead_lettered_task_ids(&mapper_name).len(), 2);
+
+    // Heal the environment and drain the queue.
+    fs::write(&marker, "").unwrap();
+    let reprocessed = dlq_reprocess(&wd, &eng).unwrap();
+    assert_eq!(
+        reprocessed.map.tasks.len(),
+        2,
+        "exactly the dead-lettered tasks resubmit"
+    );
+    assert_eq!(reprocessed.map.dead_lettered(), 0);
+    assert_eq!(
+        redout(&reprocessed),
+        ref_bytes,
+        "reprocessing restores the healthy run's bytes"
+    );
+    assert!(
+        !wd.join(DLQ_FILE).exists(),
+        "the queue is consumed at resubmission"
+    );
+    assert!(dlq_reprocess(&wd, &eng).is_err(), "nothing left to drain");
+}
+
+// ---------------------------------------------------------------------------
+// Circuit breaker
+// ---------------------------------------------------------------------------
+
+#[test]
+fn circuit_breaker_halts_the_job_and_keeps_the_journal() {
+    let root = tmp("breaker");
+    let input = root.join("input");
+    write_corpus(&input, 8);
+    let boom = root.join("boom.sh");
+    fs::write(&boom, "#!/bin/sh\nexit 7\n").unwrap();
+    let spec = format!("sh {}", boom.display());
+
+    let opts = Options::new(&input, root.join("out"), &spec)
+        .np(4)
+        .pid(94051)
+        .workdir(&root)
+        .on_error(OnError::Dlq)
+        .failure_threshold(0.3);
+    let apps = Apps {
+        mapper: resolve_mapper(&spec).unwrap(),
+        reducer: None,
+    };
+    let eng = LocalEngine::new(2);
+    let err = run(&opts, &apps, &eng).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("circuit breaker"), "got: {msg}");
+
+    // The failed run keeps its workdir, and the journal attributes the
+    // halt to the breaker.
+    let wd = root.join(".MAPRED.94051");
+    assert!(wd.is_dir(), "failed runs keep the journal for resume");
+    let replay = Replay::load(&wd.join(JOURNAL_FILE)).unwrap();
+    let job = replay
+        .jobs
+        .values()
+        .find(|j| j.breaker)
+        .expect("breaker trip journaled");
+    assert!(job.failed.is_some(), "the job-failed record follows");
+    assert!(replay.consistent());
+}
+
+// ---------------------------------------------------------------------------
+// Real SIGKILL through the binary: local and remote engines
+// ---------------------------------------------------------------------------
+
+const BIN: &str = env!("CARGO_BIN_EXE_llmapreduce");
+
+fn wait_exit(child: &mut Child, what: &str, limit: Duration) {
+    let start = Instant::now();
+    loop {
+        match child.try_wait().unwrap() {
+            Some(st) => {
+                assert!(st.success(), "{what} exited with {st}");
+                return;
+            }
+            None if start.elapsed() > limit => {
+                let _ = child.kill();
+                panic!("{what} did not finish within {limit:?}");
+            }
+            None => std::thread::sleep(Duration::from_millis(25)),
+        }
+    }
+}
+
+/// Find the `.MAPRED.<pid>` directory a spawned run creates (the
+/// subprocess picks its own pid).
+fn wait_for_workdir(base: &Path, limit: Duration) -> PathBuf {
+    let start = Instant::now();
+    loop {
+        if let Ok(entries) = fs::read_dir(base) {
+            for e in entries.flatten() {
+                let name = e.file_name().to_string_lossy().to_string();
+                if name.starts_with(".MAPRED.") {
+                    return e.path();
+                }
+            }
+        }
+        assert!(
+            start.elapsed() < limit,
+            "no .MAPRED.* workdir appeared under {}",
+            base.display()
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Block until the journal records at least one task completion — the
+/// kill that follows is guaranteed to land mid-job (each mapper task
+/// sleeps long enough that several waves remain).
+fn wait_for_first_done(wd: &Path, limit: Duration) {
+    let start = Instant::now();
+    let path = wd.join(JOURNAL_FILE);
+    loop {
+        if let Ok(text) = fs::read_to_string(&path) {
+            if text.contains("\"rec\":\"done\"") {
+                return;
+            }
+        }
+        assert!(
+            start.elapsed() < limit,
+            "no task completed within {limit:?} ({})",
+            path.display()
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn wait_for_listener(port: u16, limit: Duration) {
+    let start = Instant::now();
+    let addr = format!("127.0.0.1:{port}");
+    loop {
+        // A connect-and-drop probe: the coordinator tolerates
+        // handshake-less connections (port-scanner discipline).
+        if TcpStream::connect(&addr).is_ok() {
+            return;
+        }
+        assert!(
+            start.elapsed() < limit,
+            "no listener on {addr} within {limit:?}"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// Shared scaffolding for the binary tests: input corpus, a slow
+/// mapper (guarantees the SIGKILL lands mid-job), a fast mapper for
+/// the reference run, and a deterministic concatenating reducer.
+struct BinFixture {
+    root: PathBuf,
+    input: PathBuf,
+    slow_mapper: String,
+    fast_mapper: String,
+    reducer: String,
+}
+
+fn bin_fixture(tag: &str) -> BinFixture {
+    let root = tmp(tag);
+    let input = root.join("input");
+    write_corpus(&input, 8);
+    let slow = root.join("slow-map.sh");
+    fs::write(
+        &slow,
+        "#!/bin/sh\nsleep 0.3\ntr 'a-z' 'A-Z' < \"$1\" > \"$2\"\n",
+    )
+    .unwrap();
+    let fast = root.join("fast-map.sh");
+    fs::write(&fast, "#!/bin/sh\ntr 'a-z' 'A-Z' < \"$1\" > \"$2\"\n")
+        .unwrap();
+    let red = root.join("red.sh");
+    fs::write(&red, "#!/bin/sh\ncat \"$1\"/*.out | sort > \"$2\"\n")
+        .unwrap();
+    BinFixture {
+        input,
+        slow_mapper: format!("sh {}", slow.display()),
+        fast_mapper: format!("sh {}", fast.display()),
+        reducer: format!("sh {}", red.display()),
+        root,
+    }
+}
+
+impl BinFixture {
+    /// Fig 2 argument block shared by every spawned run.
+    fn run_args(&self, out: &str, mapper: &str, base: &Path) -> Vec<String> {
+        vec![
+            "run".into(),
+            format!("--input={}", self.input.display()),
+            format!("--output={}", self.root.join(out).display()),
+            format!("--mapper={mapper}"),
+            format!("--reducer={}", self.reducer),
+            "--redout=merged.txt".into(),
+            "--np=8".into(),
+            "--keep=true".into(),
+            format!("--workdir={}", base.display()),
+        ]
+    }
+
+    /// Clean reference bytes via the same binary on the local engine.
+    fn reference_bytes(&self) -> Vec<u8> {
+        let base = self.root.join("clean");
+        fs::create_dir_all(&base).unwrap();
+        let mapper = self.fast_mapper.clone();
+        let st = Command::new(BIN)
+            .current_dir(&self.root)
+            .args(self.run_args("out-clean", &mapper, &base))
+            .arg("--slots=4")
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit())
+            .status()
+            .unwrap();
+        assert!(st.success(), "reference run failed");
+        fs::read(self.root.join("out-clean/merged.txt")).unwrap()
+    }
+}
+
+#[test]
+fn sigkilled_coordinator_resumes_via_the_binary() {
+    let fx = bin_fixture("sigkill-local");
+    let ref_bytes = fx.reference_bytes();
+
+    // Launch the slow run and SIGKILL it after the first completion:
+    // 8 tasks × 0.3s over 2 slots leave ≥3 waves outstanding, so the
+    // kill cannot race a clean finish (and --keep=true de-flakes even
+    // a pathological scheduler stall).
+    let crash_base = fx.root.join("crash");
+    fs::create_dir_all(&crash_base).unwrap();
+    let mut child = Command::new(BIN)
+        .current_dir(&fx.root)
+        .args(fx.run_args("out-crash", &fx.slow_mapper, &crash_base))
+        .arg("--slots=2")
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    let wd = wait_for_workdir(&crash_base, Duration::from_secs(60));
+    wait_for_first_done(&wd, Duration::from_secs(60));
+    child.kill().unwrap(); // SIGKILL: no Drop, no cleanup
+    let _ = child.wait();
+    assert!(
+        wd.join(JOURNAL_FILE).is_file(),
+        "SIGKILL must leave the journal behind"
+    );
+
+    let out = Command::new(BIN)
+        .current_dir(&fx.root)
+        .args([
+            "resume".to_string(),
+            wd.display().to_string(),
+            "--slots=4".to_string(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "resume failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("resumed"), "got: {text}");
+    assert_eq!(
+        fs::read(fx.root.join("out-crash/merged.txt")).unwrap(),
+        ref_bytes,
+        "post-crash merge must equal the uninterrupted run"
+    );
+}
+
+#[test]
+fn sigkilled_remote_coordinator_resumes_over_a_fresh_fleet() {
+    let fx = bin_fixture("sigkill-remote");
+    let ref_bytes = fx.reference_bytes();
+    // Two ports per test process, clear of the ephemeral range.
+    let port1 = 21000 + (std::process::id() % 39000) as u16;
+    let port2 = port1 + 1;
+
+    let crash_base = fx.root.join("crash");
+    fs::create_dir_all(&crash_base).unwrap();
+    let mut coord = Command::new(BIN)
+        .current_dir(&fx.root)
+        .args(fx.run_args("out-crash", &fx.slow_mapper, &crash_base))
+        .args([
+            "--engine=remote".to_string(),
+            format!("--listen=127.0.0.1:{port1}"),
+            "--min-workers=1".to_string(),
+        ])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    wait_for_listener(port1, Duration::from_secs(60));
+    let mut worker1 = Command::new(BIN)
+        .args([
+            "worker".to_string(),
+            format!("--connect=127.0.0.1:{port1}"),
+            "--slots=2".to_string(),
+            "--name=w1".to_string(),
+        ])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    let wd = wait_for_workdir(&crash_base, Duration::from_secs(60));
+    wait_for_first_done(&wd, Duration::from_secs(120));
+    coord.kill().unwrap();
+    let _ = coord.wait();
+    let _ = worker1.kill(); // the fleet dies with its coordinator
+    let _ = worker1.wait();
+
+    // Resume on a fresh port with a fresh worker: only the unfinished
+    // tasks ship again.
+    let mut res = Command::new(BIN)
+        .current_dir(&fx.root)
+        .args([
+            "resume".to_string(),
+            wd.display().to_string(),
+            "--engine=remote".to_string(),
+            format!("--listen=127.0.0.1:{port2}"),
+            "--min-workers=1".to_string(),
+        ])
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .unwrap();
+    wait_for_listener(port2, Duration::from_secs(60));
+    let mut worker2 = Command::new(BIN)
+        .args([
+            "worker".to_string(),
+            format!("--connect=127.0.0.1:{port2}"),
+            "--slots=2".to_string(),
+            "--name=w2".to_string(),
+        ])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    wait_exit(&mut res, "remote resume", Duration::from_secs(120));
+    let _ = worker2.kill();
+    let _ = worker2.wait();
+
+    assert_eq!(
+        fs::read(fx.root.join("out-crash/merged.txt")).unwrap(),
+        ref_bytes,
+        "remote crash + resume must merge to the reference bytes"
+    );
+}
