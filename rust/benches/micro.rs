@@ -193,6 +193,50 @@ fn main() {
         all.push(s);
     }
 
+    // Telemetry: the per-observation registry cost and one bus emit
+    // fanned out to a live Collector — the price each task transition
+    // pays while something is watching.
+    let registry = Registry::new();
+    let s = bench_fn("telemetry/histogram-record", 10, 2000, || {
+        registry.observe(
+            "llmr_task_compute_seconds",
+            &[("worker", "w1")],
+            std::hint::black_box(0.0125),
+        );
+    });
+    print(&s, 1, "observations");
+    all.push(s);
+    let bus = EventBus::new();
+    bus.subscribe(std::sync::Arc::new(Collector::new()));
+    let s = bench_fn("telemetry/event-fanout", 10, 2000, || {
+        bus.emit(std::hint::black_box(Event::TaskRetry {
+            job: 1,
+            task_id: 1,
+            attempt: 1,
+        }));
+    });
+    print(&s, 1, "events");
+    all.push(s);
+
+    // Whole-pipeline telemetry overhead: the same wordcount run with
+    // the default-on event bus + status.json writer vs --telemetry=false
+    // (journal off in both so the fsync tax does not mask the delta).
+    for (name, telemetry_on) in
+        [("pipeline/telemetry-on", true), ("pipeline/telemetry-off", false)]
+    {
+        let s = bench_fn(name, 1, 5, || {
+            let opts = Options::new(&input, jdir.join("out"), "wordcount")
+                .np(2)
+                .pid(86001)
+                .journal(false)
+                .telemetry(telemetry_on)
+                .workdir(&jdir);
+            std::hint::black_box(run(&opts, &apps, &engine).unwrap());
+        });
+        print(&s, 6, "files");
+        all.push(s);
+    }
+
     // Runtime: compile (startup) vs execute (per-file) — the mechanism.
     if let Ok(manifest) = Manifest::discover() {
         let entry = manifest.entry("matmul_pair").unwrap().clone();

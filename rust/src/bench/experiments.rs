@@ -799,13 +799,20 @@ mod tests {
             let doc = crate::util::json::Json::parse(&text).unwrap();
             assert_eq!(doc.get("bench").unwrap().as_str(), Some("micro"));
             let points = doc.get("points").unwrap().as_arr().unwrap();
-            // The crash-safety tax is tracked: fsync'd journal appends
-            // and the journal-on/off pipeline pair must be present.
+            // The crash-safety and observability taxes are tracked:
+            // fsync'd journal appends, the journal-on/off pipeline
+            // pair, the telemetry hot paths (histogram record, bus
+            // fanout) and the telemetry-on/off pipeline pair must all
+            // be present.
             for needed in [
                 "journal/record-fsync",
                 "journal/record-no-fsync",
                 "pipeline/journal-fsync",
                 "pipeline/no-journal",
+                "telemetry/histogram-record",
+                "telemetry/event-fanout",
+                "pipeline/telemetry-on",
+                "pipeline/telemetry-off",
             ] {
                 assert!(
                     points.iter().any(|p| p

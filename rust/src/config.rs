@@ -31,6 +31,10 @@
 //! [errors]                    # failure handling (DESIGN.md §8)
 //! on_error = "dlq"            # stop | retry | dlq | skip
 //! failure_threshold = 0.25    # circuit breaker: fail job past this
+//!
+//! [telemetry]                 # observability (DESIGN.md §9)
+//! enabled = true              # event bus + status.json per invocation
+//! metrics_listen = "127.0.0.1:9900"   # /metrics + /status endpoint
 //! ```
 
 use std::path::{Path, PathBuf};
@@ -100,6 +104,20 @@ pub struct Config {
     pub remote: RemoteDefaults,
     /// Job option defaults applied under explicit CLI values.
     pub job_defaults: JobDefaults,
+    /// `[telemetry]` profile: observability surfaces (DESIGN.md §9).
+    pub telemetry: TelemetryDefaults,
+}
+
+/// `[telemetry]` profile.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TelemetryDefaults {
+    /// `[telemetry] enabled`: event bus + `status.json` per invocation.
+    /// Telemetry defaults on; a config `false` switches it off for runs
+    /// that do not pass `--telemetry` explicitly.
+    pub enabled: Option<bool>,
+    /// `[telemetry] metrics_listen`: bind a `/metrics` + `/status`
+    /// endpoint on the remote coordinator (`--metrics-listen`).
+    pub metrics_listen: Option<String>,
 }
 
 /// Optional defaults for the Fig 2 surface.
@@ -271,6 +289,22 @@ impl Config {
             }
             j.failure_threshold = Some(f);
         }
+        // [telemetry]
+        if let Some(v) = doc.get("telemetry.enabled") {
+            config.telemetry.enabled = v.as_bool();
+        }
+        if let Some(v) = doc.get("telemetry.metrics_listen") {
+            config.telemetry.metrics_listen = Some(
+                v.as_str()
+                    .ok_or_else(|| {
+                        Error::Config(
+                            "telemetry.metrics_listen must be a string"
+                                .into(),
+                        )
+                    })?
+                    .to_string(),
+            );
+        }
         if let Some(v) = doc.get("job.options") {
             j.scheduler_options = v
                 .as_str_array()
@@ -346,6 +380,22 @@ impl Config {
                 }
             }
         }
+        if let Some(v) = get("LLMR_TELEMETRY") {
+            match v.to_ascii_lowercase().as_str() {
+                "1" | "true" | "yes" => {
+                    self.telemetry.enabled = Some(true);
+                }
+                "0" | "false" | "no" => {
+                    self.telemetry.enabled = Some(false);
+                }
+                _ => {}
+            }
+        }
+        if let Some(v) = get("LLMR_METRICS_LISTEN") {
+            if !v.is_empty() {
+                self.telemetry.metrics_listen = Some(v);
+            }
+        }
     }
 
     /// Fill unset fields of `opts` from the job defaults (CLI wins).
@@ -405,6 +455,12 @@ impl Config {
         if opts.failure_threshold.is_none() {
             opts.failure_threshold = j.failure_threshold;
         }
+        // Telemetry defaults on, so config can only switch it off; an
+        // explicit CLI `--telemetry` is indistinguishable from the
+        // default (same precedence quirk as apptype above).
+        if let Some(t) = self.telemetry.enabled {
+            opts.telemetry = opts.telemetry && t;
+        }
     }
 
     /// Build the configured engine.  The local and remote engines
@@ -449,6 +505,10 @@ impl Config {
                     CoordinatorConfig {
                         heartbeat_timeout: self.remote.heartbeat_timeout,
                         policy: self.cluster.failure_policy(),
+                        metrics_listen: self
+                            .telemetry
+                            .metrics_listen
+                            .clone(),
                     },
                 )?;
                 if self.remote.min_workers > 0 {
@@ -616,6 +676,49 @@ options = ["-l mem=8G"]
         );
         assert!(
             Config::parse("[errors]\nfailure_threshold = 1.5\n").is_err()
+        );
+    }
+
+    #[test]
+    fn telemetry_section_env_and_precedence() {
+        let c = Config::parse(
+            "[telemetry]\nenabled = false\n\
+             metrics_listen = \"127.0.0.1:9900\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.telemetry.enabled, Some(false));
+        assert_eq!(
+            c.telemetry.metrics_listen.as_deref(),
+            Some("127.0.0.1:9900")
+        );
+
+        // A config `false` switches the default-on flag off.
+        let mut opts = Options::new("/in", "/out", "m");
+        c.apply_job_defaults(&mut opts);
+        assert!(!opts.telemetry);
+
+        // Absent section leaves the default untouched.
+        let d = Config::parse("").unwrap();
+        assert_eq!(d.telemetry, TelemetryDefaults::default());
+        let mut opts = Options::new("/in", "/out", "m");
+        d.apply_job_defaults(&mut opts);
+        assert!(opts.telemetry);
+
+        // Env overrides the config file.
+        let mut e = c.clone();
+        e.apply_env_overrides(|k| match k {
+            "LLMR_TELEMETRY" => Some("yes".into()),
+            "LLMR_METRICS_LISTEN" => Some("0.0.0.0:9100".into()),
+            _ => None,
+        });
+        assert_eq!(e.telemetry.enabled, Some(true));
+        assert_eq!(
+            e.telemetry.metrics_listen.as_deref(),
+            Some("0.0.0.0:9100")
+        );
+
+        assert!(
+            Config::parse("[telemetry]\nmetrics_listen = 9\n").is_err()
         );
     }
 

@@ -9,7 +9,8 @@
 //!   ([`workdir`]), planning and distribution ([`mapreduce`]), scheduler
 //!   dialects plus a discrete-event cluster simulator and a threaded local
 //!   engine ([`scheduler`]), applications ([`apps`]), workload generators
-//!   ([`workload`]) and metrics ([`metrics`]).
+//!   ([`workload`]), metrics ([`metrics`]) and live telemetry
+//!   ([`telemetry`]).
 //! * **L2 (python/compile/model.py, build time)** — JAX compute graphs for
 //!   the paper's map applications, AOT-lowered to HLO text artifacts.
 //! * **L1 (python/compile/kernels/, build time)** — Pallas kernels (tiled
@@ -53,6 +54,7 @@ pub mod metrics;
 pub mod options;
 pub mod runtime;
 pub mod scheduler;
+pub mod telemetry;
 pub mod util;
 pub mod workdir;
 pub mod workload;
@@ -80,4 +82,5 @@ pub mod prelude {
     };
     pub use crate::scheduler::sim::{ClusterConfig, SimEngine};
     pub use crate::scheduler::{Engine, JobReport};
+    pub use crate::telemetry::{Collector, Event, EventBus, MetricsListener, Registry};
 }

@@ -45,6 +45,15 @@ USAGE:
                                          without a completion record)
   llmapreduce dlq reprocess <.MAPRED.PID dir>
                                          resubmit dead-lettered tasks
+  llmapreduce status <.MAPRED.PID dir> [--json]
+                                         offline progress report from a
+                                         workdir (status.json, or journal
+                                         replay after SIGKILL)
+  llmapreduce top <.MAPRED.PID dir | HOST:PORT>
+                  [--interval-ms=N] [--frames=N]
+                                         live periodic view: queue depth,
+                                         per-job and per-worker counts,
+                                         p50/p95/p99 task latency
   llmapreduce worker --connect=H:P       join a remote coordinator
   llmapreduce gen-data <kind> [opts]     generate synthetic workloads
   llmapreduce bench <experiment>         regenerate a paper table/figure
@@ -76,8 +85,15 @@ RUN OPTIONS (Fig 2 of the paper):
         --failure-threshold=F (circuit breaker: fail the whole job
           once more than fraction F of its tasks have errored;
           0.0..=1.0, default 1.0 = never)
-  resume/dlq also accept --slots/--engine/--listen/--min-workers;
-  everything else (apps, Fig 2 options) is restored from the journal.
+        --telemetry[=BOOL] (event bus + status.json in the workdir;
+          default on — pass --telemetry=false to switch it off)
+        --metrics-listen=HOST:PORT (remote engine only: serve
+          Prometheus text at /metrics and a JSON snapshot at /status
+          while the coordinator runs; scrape live or point
+          `llmapreduce top HOST:PORT` at it)
+  resume/dlq also accept --slots/--engine/--listen/--min-workers
+  /--metrics-listen; everything else (apps, Fig 2 options) is
+  restored from the journal.
 
 WORKER (the daemon side of --engine=remote; spawn one per node):
   llmapreduce worker --connect=HOST:PORT [--slots=N] [--name=S]
@@ -114,6 +130,8 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("run") => cmd_run(&args[1..]),
         Some("resume") => cmd_resume(&args[1..]),
         Some("dlq") => cmd_dlq(&args[1..]),
+        Some("status") => cmd_status(&args[1..]),
+        Some("top") => cmd_top(&args[1..]),
         Some("worker") => cmd_worker(&args[1..]),
         Some("gen-data") => cmd_gen_data(&args[1..]),
         Some("bench") => cmd_bench(&args[1..]),
@@ -137,10 +155,11 @@ struct EngineArgs {
     engine: Option<String>,
     listen: Option<String>,
     min_workers: Option<usize>,
+    metrics_listen: Option<String>,
 }
 
-/// Split `--slots` / `--engine` / `--listen` / `--min-workers` from the
-/// Fig 2 options.
+/// Split `--slots` / `--engine` / `--listen` / `--min-workers` /
+/// `--metrics-listen` from the Fig 2 options.
 fn split_engine_args(args: &[String]) -> (Vec<String>, EngineArgs) {
     let mut rest = Vec::new();
     let mut ea = EngineArgs::default();
@@ -162,6 +181,10 @@ fn split_engine_args(args: &[String]) -> (Vec<String>, EngineArgs) {
             ea.min_workers = v.parse().ok();
         } else if a == "--min-workers" {
             ea.min_workers = it.next().and_then(|v| v.parse().ok());
+        } else if let Some(v) = a.strip_prefix("--metrics-listen=") {
+            ea.metrics_listen = Some(v.to_string());
+        } else if a == "--metrics-listen" {
+            ea.metrics_listen = it.next().cloned();
         } else {
             rest.push(a.clone());
         }
@@ -185,6 +208,9 @@ fn engine_from(
     if let Some(n) = engine_args.min_workers {
         config.remote.min_workers = n;
     }
+    if let Some(m) = &engine_args.metrics_listen {
+        config.telemetry.metrics_listen = Some(m.clone());
+    }
     if config.engine == llmapreduce::config::EngineKind::Remote {
         println!(
             "coordinator binding {} — waiting for {} worker(s); spawn \
@@ -193,6 +219,12 @@ fn engine_from(
             config.remote.min_workers,
             config.remote.listen
         );
+        if let Some(m) = &config.telemetry.metrics_listen {
+            println!(
+                "metrics endpoint on {m} — /metrics (Prometheus text), \
+                 /status (JSON); watch with `llmapreduce top {m}`"
+            );
+        }
     }
     config.build_engine(width)
 }
@@ -346,6 +378,116 @@ fn cmd_dlq(args: &[String]) -> Result<()> {
             "usage: llmapreduce dlq reprocess <.MAPRED.PID dir>",
         )),
     }
+}
+
+/// `llmapreduce status <workdir>`: offline progress report.  Folds the
+/// workdir's journal when present (the same replay `resume` acts on, so
+/// the counts agree even after SIGKILL), else the last `status.json`
+/// snapshot the telemetry layer flushed.
+fn cmd_status(args: &[String]) -> Result<()> {
+    let mut workdir = None;
+    let mut json = false;
+    for a in args {
+        match a.as_str() {
+            "--json" => json = true,
+            other if !other.starts_with("--") && workdir.is_none() => {
+                workdir = Some(PathBuf::from(other));
+            }
+            other => {
+                return Err(Error::opt(format!(
+                    "unexpected status argument '{other}'"
+                )))
+            }
+        }
+    }
+    let workdir = workdir.ok_or_else(|| {
+        Error::opt("status needs a .MAPRED.<pid> directory")
+    })?;
+    let status = llmapreduce::telemetry::fold_workdir(&workdir)?;
+    if json {
+        println!("{}", status.to_string_pretty());
+    } else {
+        print!("{}", llmapreduce::telemetry::render_status(&status));
+    }
+    Ok(())
+}
+
+/// `llmapreduce top <workdir | host:port>`: periodically refreshed live
+/// view.  A `host:port` target polls a coordinator's `--metrics-listen`
+/// endpoint; a directory target re-folds the workdir each frame.
+fn cmd_top(args: &[String]) -> Result<()> {
+    let mut target = None;
+    let mut interval = Duration::from_millis(1000);
+    let mut frames: Option<u64> = None;
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(v) = a.strip_prefix("--interval-ms=") {
+            interval = Duration::from_millis(v.parse().map_err(|_| {
+                Error::opt("--interval-ms needs a millisecond count")
+            })?);
+        } else if a == "--interval-ms" {
+            let v = it.next().ok_or_else(|| {
+                Error::opt("--interval-ms needs a millisecond count")
+            })?;
+            interval = Duration::from_millis(v.parse().map_err(|_| {
+                Error::opt("--interval-ms needs a millisecond count")
+            })?);
+        } else if let Some(v) = a.strip_prefix("--frames=") {
+            frames = Some(v.parse().map_err(|_| {
+                Error::opt("--frames needs a frame count")
+            })?);
+        } else if a == "--frames" {
+            let v = it
+                .next()
+                .ok_or_else(|| Error::opt("--frames needs a count"))?;
+            frames = Some(v.parse().map_err(|_| {
+                Error::opt("--frames needs a frame count")
+            })?);
+        } else if !a.starts_with("--") && target.is_none() {
+            target = Some(a.clone());
+        } else {
+            return Err(Error::opt(format!(
+                "unexpected top argument '{a}'"
+            )));
+        }
+    }
+    let target = target.ok_or_else(|| {
+        Error::opt(
+            "top needs a .MAPRED.<pid> directory or a coordinator's \
+             --metrics-listen HOST:PORT",
+        )
+    })?;
+    // `host:port` when it is not a directory and looks like an address;
+    // everything else is treated as a workdir path.
+    let as_dir = PathBuf::from(&target);
+    let is_endpoint = !as_dir.is_dir() && target.contains(':');
+    let mut frame = 0u64;
+    loop {
+        let status = if is_endpoint {
+            let body = llmapreduce::telemetry::fetch(&target, "/status")?;
+            llmapreduce::util::json::Json::parse(&body).map_err(|e| {
+                Error::opt(format!("bad /status payload from {target}: {e}"))
+            })?
+        } else {
+            llmapreduce::telemetry::fold_workdir(&as_dir)?
+        };
+        let looping = frames != Some(1);
+        if looping {
+            // Clear screen + home, like top(1).
+            print!("\x1b[2J\x1b[H");
+        }
+        print!("{}", llmapreduce::telemetry::render_top(&status));
+        use std::io::Write as _;
+        let _ = std::io::stdout().flush();
+        frame += 1;
+        if let Some(n) = frames {
+            if frame >= n {
+                break;
+            }
+        }
+        std::thread::sleep(interval);
+    }
+    Ok(())
 }
 
 /// `llmapreduce worker`: the daemon side of `--engine=remote`.  Blocks

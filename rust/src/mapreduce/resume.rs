@@ -39,6 +39,7 @@ use crate::scheduler::journal::{
     DeadLetter, Journal, Record, Replay, DLQ_FILE, JOURNAL_FILE,
 };
 use crate::scheduler::{Engine, JobSpec, TaskSpec, TaskWork};
+use crate::telemetry::{Event, EventBus, InvocationTelemetry, STATUS_FILE};
 use crate::workdir::scan::scan_input;
 use crate::workdir::MapRedDir;
 
@@ -117,6 +118,7 @@ fn run_subset(
     the_plan: Plan,
     select: &HashSet<usize>,
     journal: Option<Arc<Journal>>,
+    telemetry: Option<&InvocationTelemetry>,
     replayed: usize,
 ) -> Result<MapReduceReport> {
     replicate_output_tree(&the_plan)?;
@@ -139,6 +141,9 @@ fn run_subset(
     if let Some(j) = &journal {
         map_spec = map_spec.journal(j.clone());
     }
+    if let Some(t) = telemetry {
+        map_spec = map_spec.telemetry(t.bus().clone());
+    }
     let map_id = engine.submit(map_spec)?;
 
     let (reduce_id, redout_path) = match &apps.reducer {
@@ -158,6 +163,9 @@ fn run_subset(
             .after(map_id);
             if let Some(j) = &journal {
                 spec = spec.journal(j.clone());
+            }
+            if let Some(t) = telemetry {
+                spec = spec.telemetry(t.bus().clone());
             }
             (Some(engine.submit(spec)?), Some(redout))
         }
@@ -250,6 +258,22 @@ pub fn resume(
     } else {
         None
     };
+    // Telemetry rides the resumed chain too: the same status.json in the
+    // same workdir, now opening with a `resumed` marker.
+    let telemetry = if opts.telemetry {
+        let bus = engine
+            .event_bus()
+            .unwrap_or_else(|| Arc::new(EventBus::new()));
+        let t =
+            InvocationTelemetry::attach(bus, workdir.join(STATUS_FILE));
+        t.bus().emit(Event::Resumed {
+            done: done.len(),
+            total: the_plan.tasks.len(),
+        });
+        Some(t)
+    } else {
+        None
+    };
 
     let mut report = run_subset(
         engine,
@@ -258,8 +282,11 @@ pub fn resume(
         the_plan,
         &pending,
         journal,
+        telemetry.as_ref(),
         done.len(),
     )?;
+    // Final status flush must land before the workdir is cleaned up.
+    drop(telemetry);
     report.mapred_dir = finish_workdir(workdir, opts.keep);
     Ok(report)
 }
@@ -316,8 +343,31 @@ pub fn dlq_reprocess(
     } else {
         None
     };
+    let telemetry = if opts.telemetry {
+        let bus = engine
+            .event_bus()
+            .unwrap_or_else(|| Arc::new(EventBus::new()));
+        let t =
+            InvocationTelemetry::attach(bus, workdir.join(STATUS_FILE));
+        t.bus().emit(Event::Resumed {
+            done: the_plan.tasks.len() - select.len(),
+            total: the_plan.tasks.len(),
+        });
+        Some(t)
+    } else {
+        None
+    };
 
-    run_subset(engine, &opts, &apps, the_plan, &select, journal, 0)
+    run_subset(
+        engine,
+        &opts,
+        &apps,
+        the_plan,
+        &select,
+        journal,
+        telemetry.as_ref(),
+        0,
+    )
 }
 
 #[cfg(test)]

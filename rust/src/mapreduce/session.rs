@@ -67,6 +67,7 @@ use crate::options::Options;
 use crate::scheduler::dialect::dialect_for;
 use crate::scheduler::journal::{Journal, Record, JOURNAL_FILE};
 use crate::scheduler::{Engine, JobId, JobReport, JobSpec, TaskSpec, TaskWork};
+use crate::telemetry::{EventBus, InvocationTelemetry, STATUS_FILE};
 use crate::workdir::scan::scan_input;
 use crate::workdir::scripts::{reduce_run_script, write_all};
 use crate::workdir::MapRedDir;
@@ -174,6 +175,23 @@ impl<'e> Session<'e> {
             None
         };
 
+        // Live telemetry: the chain publishes its transitions to the
+        // engine's bus (or a standalone one on engines without a bus),
+        // and a collector + status-writer pair mirrors them into
+        // `status.json` next to the journal so `llmapreduce status` /
+        // `top` can watch the run (DESIGN.md §9).
+        let telemetry = if opts.telemetry {
+            let bus = engine
+                .event_bus()
+                .unwrap_or_else(|| Arc::new(EventBus::new()));
+            Some(InvocationTelemetry::attach(
+                bus,
+                wd.path().join(STATUS_FILE),
+            ))
+        } else {
+            None
+        };
+
         // Step 2: the mapper array job.  The plan's apptype, not the raw
         // option, is the execution mode: under `--spmd` the planner
         // packed batches and switched the plan to `AppType::Spmd`, so
@@ -195,6 +213,9 @@ impl<'e> Session<'e> {
             .error_policy(opts.effective_error_policy());
         if let Some(j) = &journal {
             map_spec = map_spec.journal(j.clone());
+        }
+        if let Some(t) = &telemetry {
+            map_spec = map_spec.telemetry(t.bus().clone());
         }
         let map_id = engine.submit(map_spec)?;
 
@@ -239,8 +260,12 @@ impl<'e> Session<'e> {
                         },
                     }],
                 );
-                match &journal {
+                let spec = match &journal {
                     Some(j) => spec.journal(j.clone()),
+                    None => spec,
+                };
+                match &telemetry {
+                    Some(t) => spec.telemetry(t.bus().clone()),
                     None => spec,
                 }
             };
@@ -276,6 +301,9 @@ impl<'e> Session<'e> {
                 if let Some(j) = &journal {
                     partial_spec = partial_spec.journal(j.clone());
                 }
+                if let Some(t) = &telemetry {
+                    partial_spec = partial_spec.telemetry(t.bus().clone());
+                }
                 let pid_job = engine.submit(partial_spec)?;
                 // Step 3b: the final merge over the partials directory.
                 let final_spec = reduce_spec(pdir.clone()).after(pid_job);
@@ -307,6 +335,7 @@ impl<'e> Session<'e> {
             plan: Some(the_plan),
             redout_path,
             partials_dir,
+            telemetry,
             workdir: Some(wd),
             keep: opts.keep,
             overlapped: overlap,
@@ -372,6 +401,9 @@ pub struct Invocation<'e> {
     plan: Option<Plan>,
     redout_path: Option<PathBuf>,
     partials_dir: Option<PathBuf>,
+    /// Declared before `workdir` so the status writer's final flush
+    /// (on drop) lands before `.MAPRED.<pid>` is removed.
+    telemetry: Option<InvocationTelemetry>,
     workdir: Option<MapRedDir>,
     keep: bool,
     overlapped: bool,
@@ -410,6 +442,10 @@ impl Invocation<'_> {
     pub fn wait(mut self) -> Result<MapReduceReport> {
         self.finished = true;
         let waited = self.wait_jobs();
+        // Detach telemetry first: the chain has settled, and the status
+        // writer's final snapshot must land before the workdir is
+        // removed or persisted below.
+        self.telemetry = None;
         // The partials staging dir is scratch like .MAPRED.PID: clear it
         // on the failure path too, not just after a clean run.
         if !self.keep {

@@ -201,6 +201,11 @@ pub struct Options {
     /// (builder-only; on by default — benches flip it off to measure the
     /// fsync cost).
     pub journal: bool,
+    /// `--telemetry`: publish job transitions to the telemetry bus and
+    /// keep `status.json` live in the `.MAPRED.<PID>` workdir (on by
+    /// default; `--telemetry=false` opts out, like `--journal` in the
+    /// builder API).  See [`crate::telemetry`].
+    pub telemetry: bool,
 }
 
 impl Default for Options {
@@ -230,6 +235,7 @@ impl Default for Options {
             on_error: None,
             failure_threshold: None,
             journal: true,
+            telemetry: true,
         }
     }
 }
@@ -336,6 +342,10 @@ impl Options {
         self.journal = on;
         self
     }
+    pub fn telemetry(mut self, on: bool) -> Self {
+        self.telemetry = on;
+        self
+    }
 
     /// Parse from a command-line style argument vector (everything after
     /// the program name).  Accepts `--key=value` and `--key value`.
@@ -413,6 +423,23 @@ impl Options {
                 "--workdir" => opts.workdir = Some(PathBuf::from(take()?)),
                 "--on-error" => {
                     opts.on_error = Some(OnError::parse(&take()?)?)
+                }
+                // `--telemetry` mirrors `--spmd`'s three forms: bare
+                // switch (redundant — it is on by default — but
+                // harmless), `--telemetry=BOOL`, `--telemetry BOOL`.
+                "--telemetry" => {
+                    opts.telemetry = match inline_val.clone() {
+                        Some(v) => parse_bool(&key, &v)?,
+                        None => match argv.get(i + 1).map(|s| s.as_str()) {
+                            Some(
+                                "true" | "false" | "1" | "0" | "yes" | "no",
+                            ) => {
+                                i += 1;
+                                parse_bool(&key, &argv[i])?
+                            }
+                            _ => true,
+                        },
+                    }
                 }
                 "--failure-threshold" => {
                     opts.failure_threshold =
@@ -568,6 +595,7 @@ impl Options {
                     .unwrap_or(Json::Null),
             ),
             ("journal", self.journal.into()),
+            ("telemetry", self.telemetry.into()),
         ])
     }
 
@@ -640,6 +668,7 @@ impl Options {
                 .get("failure_threshold")
                 .and_then(Json::as_f64),
             journal: b("journal", true),
+            telemetry: b("telemetry", true),
         };
         opts.validate()?;
         Ok(opts)
@@ -1037,6 +1066,58 @@ mod tests {
         let mut args = base();
         args.push("--on-error=explode");
         assert!(Options::parse_args(args).is_err());
+    }
+
+    #[test]
+    fn telemetry_flag_parses_and_defaults_on() {
+        let o = Options::parse_args(base()).unwrap();
+        assert!(o.telemetry, "telemetry is on by default");
+
+        // Opt-out: = form and space form.
+        let mut args = base();
+        args.push("--telemetry=false");
+        assert!(!Options::parse_args(args).unwrap().telemetry);
+        let o = Options::parse_args([
+            "--input=in",
+            "--output=out",
+            "--mapper=m",
+            "--telemetry",
+            "false",
+        ])
+        .unwrap();
+        assert!(!o.telemetry);
+
+        // Bare --telemetry followed by another flag must not eat it.
+        let o = Options::parse_args([
+            "--input=in", "--output=out", "--telemetry", "--mapper=m",
+        ])
+        .unwrap();
+        assert!(o.telemetry);
+        assert_eq!(o.mapper, "m");
+
+        let mut args = base();
+        args.push("--telemetry=sideways");
+        assert!(Options::parse_args(args).is_err());
+
+        assert!(!Options::new("i", "o", "m").telemetry(false).telemetry);
+    }
+
+    #[test]
+    fn telemetry_survives_the_json_roundtrip() {
+        let o = Options::new("in", "out", "m").telemetry(false);
+        let text = o.to_json().to_string_compact();
+        let back =
+            Options::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert!(!back.telemetry, "explicit opt-out round-trips");
+        // Journals from builds without the key fall back to the default.
+        let old = Options::new("in", "out", "m").to_json();
+        let mut doc = match old {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        doc.remove("telemetry");
+        let back = Options::from_json(&Json::Obj(doc)).unwrap();
+        assert!(back.telemetry, "missing key means default-on");
     }
 
     #[test]

@@ -42,6 +42,7 @@ use crate::scheduler::exec::execute;
 use crate::scheduler::failure::FailurePolicy;
 use crate::scheduler::table::{ErrorAction, JobTable, Outcome};
 use crate::scheduler::{Engine, JobId, JobReport, JobSpec, TaskReport};
+use crate::telemetry::EventBus;
 
 /// Completion messages from workers to the dispatcher.
 enum Event {
@@ -82,6 +83,10 @@ struct Inner {
     done_cv: Condvar,
     policy: FailurePolicy,
     slots: usize,
+    /// Engine-scoped telemetry bus ([`Engine::event_bus`]): jobs this
+    /// engine runs publish their transitions here, plus the engine's own
+    /// queue-depth samples.  Free when nobody subscribed.
+    bus: Arc<EventBus>,
 }
 
 impl Inner {
@@ -126,6 +131,7 @@ impl LocalEngine {
             done_cv: Condvar::new(),
             policy,
             slots,
+            bus: Arc::new(EventBus::new()),
         });
         let workers = (0..slots)
             .map(|_| {
@@ -153,6 +159,10 @@ impl LocalEngine {
 impl Engine for LocalEngine {
     fn name(&self) -> &'static str {
         "local"
+    }
+
+    fn event_bus(&self) -> Option<Arc<EventBus>> {
+        Some(self.inner.bus.clone())
     }
 
     fn submit(&self, spec: JobSpec) -> Result<JobId> {
@@ -282,7 +292,11 @@ fn dispatcher_loop(inner: &Inner) {
         // (wait() callers); waking them every round is cheap, waking
         // all `slots` workers is not.
         let new_work = core.ready.len() > ready_before;
+        let depth = core.ready.len();
         drop(core);
+        inner
+            .bus
+            .emit(crate::telemetry::Event::QueueDepth { depth });
         if new_work {
             inner.work_cv.notify_all();
         }
@@ -317,7 +331,11 @@ fn worker_loop(inner: &Inner) {
             .eligible_at
             .map(|t| t.elapsed())
             .unwrap_or_default();
+        let depth = core.ready.len();
         drop(core);
+        inner
+            .bus
+            .emit(crate::telemetry::Event::QueueDepth { depth });
 
         let task = &view.tasks[idx];
 

@@ -185,6 +185,11 @@ pub struct JobSpec {
     /// stop (default), retry, dead-letter, or skip — plus the
     /// failure-rate circuit breaker.
     pub error_policy: journal::ErrorPolicy,
+    /// Telemetry bus this job's transitions are published to
+    /// (DESIGN.md §9) — the same hook points the journal rides.
+    /// `None` runs silent; publishing to a bus nobody subscribed to
+    /// costs one atomic load per transition.
+    pub telemetry: Option<Arc<crate::telemetry::EventBus>>,
 }
 
 impl std::fmt::Debug for JobSpec {
@@ -196,6 +201,7 @@ impl std::fmt::Debug for JobSpec {
             .field("task_deps", &self.task_deps.len())
             .field("exclusive", &self.exclusive)
             .field("journaled", &self.journal.is_some())
+            .field("telemetry", &self.telemetry.is_some())
             .field("error_policy", &self.error_policy)
             .finish()
     }
@@ -211,6 +217,7 @@ impl JobSpec {
             exclusive: false,
             journal: None,
             error_policy: journal::ErrorPolicy::default(),
+            telemetry: None,
         }
     }
 
@@ -246,6 +253,13 @@ impl JobSpec {
     /// Set the task-error policy (see [`journal::ErrorPolicy`]).
     pub fn error_policy(mut self, p: journal::ErrorPolicy) -> Self {
         self.error_policy = p;
+        self
+    }
+
+    /// Publish this job's transitions to a telemetry bus
+    /// (see [`crate::telemetry`]).
+    pub fn telemetry(mut self, bus: Arc<crate::telemetry::EventBus>) -> Self {
+        self.telemetry = Some(bus);
         self
     }
 }
@@ -438,6 +452,18 @@ pub trait Engine: Send + Sync {
     fn run(&self, spec: JobSpec) -> Result<JobReport> {
         let id = self.submit(spec)?;
         self.wait(id)
+    }
+
+    /// The engine's shared telemetry bus, when it has one.  Executing
+    /// engines (local, remote) create a bus at construction and emit
+    /// engine-scoped events (queue depth, worker lifecycle) on it;
+    /// sessions subscribe their collectors here and thread the same
+    /// bus into [`JobSpec::telemetry`] so table transitions land on
+    /// it too.  Virtual-time engines keep the default `None` (a
+    /// session attaches a standalone bus instead — job transitions
+    /// are still observed, engine-scoped gauges are not).
+    fn event_bus(&self) -> Option<Arc<crate::telemetry::EventBus>> {
+        None
     }
 }
 

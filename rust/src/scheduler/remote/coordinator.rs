@@ -56,6 +56,7 @@ use crate::scheduler::remote::protocol::{
 use crate::scheduler::remote::transport::{split, LineWriter};
 use crate::scheduler::table::{ErrorAction, JobTable, Outcome};
 use crate::scheduler::{Engine, JobId, JobReport, JobSpec, TaskReport};
+use crate::telemetry::{Collector, Event, EventBus, MetricsListener};
 
 /// Tuning knobs of the coordinator (defaults suit localhost fleets).
 #[derive(Debug, Clone)]
@@ -65,6 +66,10 @@ pub struct CoordinatorConfig {
     pub heartbeat_timeout: Duration,
     /// Failure injection (engine-shared semantics; see module docs).
     pub policy: FailurePolicy,
+    /// `host:port` to serve `/metrics` (Prometheus text) and `/status`
+    /// (JSON) on while the coordinator lives (`--metrics-listen`).
+    /// `None` (the default) serves nothing.
+    pub metrics_listen: Option<String>,
 }
 
 impl Default for CoordinatorConfig {
@@ -72,6 +77,7 @@ impl Default for CoordinatorConfig {
         CoordinatorConfig {
             heartbeat_timeout: Duration::from_secs(3),
             policy: FailurePolicy::default(),
+            metrics_listen: None,
         }
     }
 }
@@ -109,6 +115,12 @@ struct Core {
     reassigns: HashMap<(JobId, usize), usize>,
     next_worker_id: u64,
     shutdown: bool,
+    /// Engine-scoped telemetry bus ([`Engine::event_bus`]): jobs this
+    /// coordinator runs publish their transitions here, plus worker
+    /// lifecycle and queue-depth samples.  Free when nobody subscribed.
+    bus: Arc<EventBus>,
+    /// Last published queue depth (samples only on change).
+    last_depth: usize,
 }
 
 impl Core {
@@ -122,6 +134,16 @@ impl Core {
 
     fn alive_workers(&self) -> usize {
         self.workers.values().filter(|w| w.alive).count()
+    }
+
+    /// Publish the ready-queue depth when it changed since the last
+    /// sample (placement rounds leave it untouched most of the time).
+    fn sample_queue_depth(&mut self) {
+        let depth = self.ready.len();
+        if depth != self.last_depth {
+            self.last_depth = depth;
+            self.bus.emit(Event::QueueDepth { depth });
+        }
     }
 }
 
@@ -147,6 +169,11 @@ pub struct RemoteCoordinator {
     local_addr: SocketAddr,
     accept_thread: Option<JoinHandle<()>>,
     monitor_thread: Option<JoinHandle<()>>,
+    /// The engine's telemetry bus (shared with `Core`).
+    bus: Arc<EventBus>,
+    /// `--metrics-listen` endpoint; the collector behind it stays
+    /// subscribed to `bus` for the coordinator's lifetime.
+    metrics: Option<MetricsListener>,
 }
 
 impl RemoteCoordinator {
@@ -163,6 +190,18 @@ impl RemoteCoordinator {
         listener.set_nonblocking(true).map_err(|e| {
             Error::Scheduler(format!("coordinator nonblocking: {e}"))
         })?;
+        let bus = Arc::new(EventBus::new());
+        // `--metrics-listen`: a collector folds the bus into a registry
+        // the endpoint serves.  Bound before any worker can register so
+        // no lifecycle event is missed.
+        let metrics = match &config.metrics_listen {
+            Some(listen) => {
+                let collector = Arc::new(Collector::new());
+                bus.subscribe(collector.clone());
+                Some(MetricsListener::bind(listen, collector)?)
+            }
+            None => None,
+        };
         let inner = Arc::new(Inner {
             state: Mutex::new(Core {
                 table: JobTable::new(1),
@@ -172,6 +211,8 @@ impl RemoteCoordinator {
                 reassigns: HashMap::new(),
                 next_worker_id: 1,
                 shutdown: false,
+                bus: bus.clone(),
+                last_depth: 0,
             }),
             done_cv: Condvar::new(),
             workers_cv: Condvar::new(),
@@ -191,12 +232,20 @@ impl RemoteCoordinator {
             local_addr,
             accept_thread,
             monitor_thread,
+            bus,
+            metrics,
         })
     }
 
     /// The bound address (useful with an ephemeral `:0` bind).
     pub fn local_addr(&self) -> SocketAddr {
         self.local_addr
+    }
+
+    /// Where `/metrics` and `/status` are served, when
+    /// [`CoordinatorConfig::metrics_listen`] was set.
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.metrics.as_ref().map(|m| m.local_addr())
     }
 
     /// Currently-alive worker count.
@@ -242,6 +291,10 @@ impl Engine for RemoteCoordinator {
         "remote"
     }
 
+    fn event_bus(&self) -> Option<Arc<EventBus>> {
+        Some(self.bus.clone())
+    }
+
     fn submit(&self, spec: JobSpec) -> Result<JobId> {
         let mut core = self.inner.lock();
         crate::scheduler::validate_submit(&spec, |dep| {
@@ -251,6 +304,7 @@ impl Engine for RemoteCoordinator {
         let ready = core.table.admit(id, spec, Instant::now());
         core.ready.extend(ready);
         try_assign(&mut core, &self.inner.config.policy);
+        core.sample_queue_depth();
         drop(core);
         // Admission may complete zero-task jobs outright.
         self.inner.done_cv.notify_all();
@@ -422,6 +476,11 @@ fn mark_dead(core: &mut Core, wid: u64) {
     worker.writer.shutdown();
     let name = worker.name.clone();
     let orphans = std::mem::take(&mut worker.in_flight);
+    if core.bus.active() {
+        core.bus.emit(Event::WorkerDead {
+            worker: name.clone(),
+        });
+    }
     for key in orphans {
         // Only requeue tasks this worker still owns (a reassignment may
         // already have moved one).
@@ -506,6 +565,12 @@ fn serve_worker(inner: &Arc<Inner>, stream: TcpStream) {
         if writer.send(&Message::Registered { worker_id: wid }).is_err() {
             return;
         }
+        if core.bus.active() {
+            core.bus.emit(Event::WorkerRegistered {
+                worker: name.clone(),
+                slots,
+            });
+        }
         core.workers.insert(
             wid,
             WorkerState {
@@ -520,6 +585,7 @@ fn serve_worker(inner: &Arc<Inner>, stream: TcpStream) {
         );
         core.table.set_slots(core.alive_slots().max(1));
         try_assign(&mut core, &inner.config.policy);
+        core.sample_queue_depth();
         wid
     };
     inner.workers_cv.notify_all();
@@ -535,7 +601,15 @@ fn serve_worker(inner: &Arc<Inner>, stream: TcpStream) {
                     w.last_seen = Instant::now();
                 }
                 match msg {
-                    Message::Heartbeat { .. } => {}
+                    Message::Heartbeat { .. } => {
+                        if core.bus.active() {
+                            if let Some(w) = core.workers.get(&wid) {
+                                core.bus.emit(Event::WorkerHeartbeat {
+                                    worker: w.name.clone(),
+                                });
+                            }
+                        }
+                    }
                     Message::Complete {
                         job,
                         task_idx,
@@ -545,6 +619,7 @@ fn serve_worker(inner: &Arc<Inner>, stream: TcpStream) {
                             &mut core, wid, JobId(job), task_idx, outcome,
                         );
                         try_assign(&mut core, &inner.config.policy);
+                        core.sample_queue_depth();
                         drop(core);
                         inner.done_cv.notify_all();
                     }
@@ -613,6 +688,7 @@ fn serve_worker(inner: &Arc<Inner>, stream: TcpStream) {
                             }
                         }
                         try_assign(&mut core, &inner.config.policy);
+                        core.sample_queue_depth();
                         drop(core);
                         inner.done_cv.notify_all();
                     }
@@ -628,6 +704,7 @@ fn serve_worker(inner: &Arc<Inner>, stream: TcpStream) {
                 if !core.shutdown {
                     mark_dead(&mut core, wid);
                     try_assign(&mut core, &inner.config.policy);
+                    core.sample_queue_depth();
                 }
                 drop(core);
                 inner.done_cv.notify_all();
@@ -725,6 +802,7 @@ fn monitor_loop(inner: &Arc<Inner>) {
                 mark_dead(&mut core, *wid);
             }
             try_assign(&mut core, &inner.config.policy);
+            core.sample_queue_depth();
             inner.done_cv.notify_all();
         }
         // Sleep on the condvar so coordinator shutdown wakes us

@@ -25,6 +25,7 @@ use crate::scheduler::journal::{
 use crate::scheduler::{
     JobId, JobReport, JobSpec, TaskReport, TaskSpec, TaskWork,
 };
+use crate::telemetry::{Event, EventBus};
 
 /// Eligibility gate of one task.
 #[derive(Debug, Clone)]
@@ -72,6 +73,9 @@ struct Job {
     /// Crash journal shared with every job of this invocation; `None`
     /// when journaling is off (benches, bare engine tests).
     journal: Option<Arc<Journal>>,
+    /// Telemetry bus this job's transitions are published to — rides
+    /// the exact same hook points as the journal (DESIGN.md §9).
+    telemetry: Option<Arc<EventBus>>,
     /// What a task's terminal execution error does to this job.
     policy: ErrorPolicy,
     /// Completed report or failure message; `Some` means the job is over.
@@ -93,6 +97,13 @@ impl Job {
         self.error_attempts = Vec::new();
         self.reports = Vec::new();
         self.done_tasks = Vec::new();
+    }
+
+    /// The job's bus, only when someone is listening — call sites that
+    /// clone strings to *build* an event gate on this, so silent runs
+    /// pay one atomic load per transition.
+    fn bus(&self) -> Option<&Arc<EventBus>> {
+        self.telemetry.as_ref().filter(|b| b.active())
     }
 }
 
@@ -196,6 +207,13 @@ impl JobTable {
                         attempt: job.attempts[idx],
                     });
                 }
+                if let Some(bus) = job.bus() {
+                    bus.emit(Event::TaskRetry {
+                        job: jid.0,
+                        task_id: job.tasks[idx].task_id,
+                        attempt: job.attempts[idx],
+                    });
+                }
                 true
             }
             _ => false,
@@ -216,6 +234,13 @@ impl JobTable {
                 worker: worker.map(str::to_string),
             });
         }
+        if let Some(bus) = job.bus() {
+            bus.emit(Event::TaskAssigned {
+                job: jid.0,
+                task_id: job.tasks[idx].task_id,
+                worker: worker.map(str::to_string),
+            });
+        }
     }
 
     /// Journal that `(jid, idx)` was reclaimed from a dead worker.
@@ -228,6 +253,12 @@ impl JobTable {
             j.record(&Record::TaskReassigned {
                 job: jid.0,
                 idx,
+                task_id: job.tasks[idx].task_id,
+            });
+        }
+        if let Some(bus) = job.bus() {
+            bus.emit(Event::TaskReassigned {
+                job: jid.0,
                 task_id: job.tasks[idx].task_id,
             });
         }
@@ -262,6 +293,7 @@ impl JobTable {
             exclusive,
             journal,
             error_policy,
+            telemetry,
         } = spec;
         let n = tasks.len();
         if let Some(j) = &journal {
@@ -270,6 +302,13 @@ impl JobTable {
                 name: name.clone(),
                 ntasks: n,
                 task_ids: tasks.iter().map(|t| t.task_id).collect(),
+            });
+        }
+        if let Some(bus) = telemetry.as_ref().filter(|b| b.active()) {
+            bus.emit(Event::JobSubmitted {
+                job: jid.0,
+                name: name.clone(),
+                ntasks: n,
             });
         }
         let mut job = Job {
@@ -289,6 +328,7 @@ impl JobTable {
             task_dependents: HashMap::new(),
             exclusive,
             journal,
+            telemetry,
             policy: error_policy,
             outcome: None,
         };
@@ -310,6 +350,12 @@ impl JobTable {
                             format!("dependency job {dep} failed: {msg}");
                         if let Some(j) = &job.journal {
                             j.record(&Record::JobFailed {
+                                job: jid.0,
+                                msg: m.clone(),
+                            });
+                        }
+                        if let Some(bus) = job.bus() {
+                            bus.emit(Event::JobFailed {
                                 job: jid.0,
                                 msg: m.clone(),
                             });
@@ -365,6 +411,12 @@ impl JobTable {
                             msg: m.clone(),
                         });
                     }
+                    if let Some(bus) = job.bus() {
+                        bus.emit(Event::JobFailed {
+                            job: jid.0,
+                            msg: m.clone(),
+                        });
+                    }
                     job.outcome = Some(Err(m));
                     job.shed();
                     self.jobs.insert(jid, job);
@@ -379,6 +431,9 @@ impl JobTable {
         if n == 0 && !barrier_registered {
             if let Some(j) = &job.journal {
                 j.record(&Record::JobDone { job: jid.0 });
+            }
+            if let Some(bus) = job.bus() {
+                bus.emit(Event::JobDone { job: jid.0 });
             }
             job.outcome =
                 Some(Ok(self.empty_report(jid, &job.name, submitted_at)));
@@ -422,6 +477,18 @@ impl JobTable {
                     job: jid.0,
                     idx,
                     task_id: report.task_id,
+                    retries: report.retries,
+                    dead_lettered: report.dead_lettered,
+                });
+            }
+            if let Some(bus) = job.bus() {
+                bus.emit(Event::TaskDone {
+                    job: jid.0,
+                    task_id: report.task_id,
+                    worker: report.worker.clone(),
+                    dispatch_wait: report.dispatch_wait,
+                    startup: report.startup,
+                    compute: report.compute,
                     retries: report.retries,
                     dead_lettered: report.dead_lettered,
                 });
@@ -491,6 +558,9 @@ impl JobTable {
                         if let Some(j) = &d.journal {
                             j.record(&Record::JobDone { job: dj.0 });
                         }
+                        if let Some(bus) = d.bus() {
+                            bus.emit(Event::JobDone { job: dj.0 });
+                        }
                         d.outcome = Some(Ok(JobReport {
                             job_id: dj.0,
                             name: d.name.clone(),
@@ -531,6 +601,12 @@ impl JobTable {
                 }
                 if let Some(j) = &job.journal {
                     j.record(&Record::JobFailed {
+                        job: id.0,
+                        msg: m.clone(),
+                    });
+                }
+                if let Some(bus) = job.bus() {
+                    bus.emit(Event::JobFailed {
                         job: id.0,
                         msg: m.clone(),
                     });
@@ -591,6 +667,13 @@ impl JobTable {
                     msg: msg.to_string(),
                 });
             }
+            if let Some(bus) = job.bus() {
+                bus.emit(Event::TaskFailed {
+                    job: jid.0,
+                    task_id,
+                    msg: msg.to_string(),
+                });
+            }
             let policy = job.policy;
             match policy.on_error {
                 OnError::Stop => Verdict::Fail(msg.to_string()),
@@ -602,6 +685,13 @@ impl JobTable {
                         j.record(&Record::TaskRetry {
                             job: jid.0,
                             idx,
+                            task_id,
+                            attempt: job.error_attempts[idx],
+                        });
+                    }
+                    if let Some(bus) = job.bus() {
+                        bus.emit(Event::TaskRetry {
+                            job: jid.0,
                             task_id,
                             attempt: job.error_attempts[idx],
                         });
@@ -619,6 +709,13 @@ impl JobTable {
                                 errors: job.errors,
                                 ntasks: job.ntasks,
                                 threshold: policy.failure_threshold,
+                            });
+                        }
+                        if let Some(bus) = job.bus() {
+                            bus.emit(Event::BreakerTripped {
+                                job: jid.0,
+                                errors: job.errors,
+                                ntasks: job.ntasks,
                             });
                         }
                         Verdict::Fail(format!(
@@ -716,6 +813,9 @@ fn complete_if_last(job: &mut Job, jid: JobId, completed: bool, slots: usize) {
         .collect();
     if let Some(j) = &job.journal {
         j.record(&Record::JobDone { job: jid.0 });
+    }
+    if let Some(bus) = job.bus() {
+        bus.emit(Event::JobDone { job: jid.0 });
     }
     job.outcome = Some(Ok(JobReport {
         job_id: jid.0,

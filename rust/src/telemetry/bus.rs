@@ -1,0 +1,194 @@
+//! The engine-shared event bus.
+//!
+//! One [`EventBus`] lives inside each engine (and can be created
+//! standalone for engines that predate telemetry).  Emitters are the
+//! scheduler's transition points; subscribers are folds like
+//! [`crate::telemetry::Collector`].
+//!
+//! Design constraints (DESIGN.md §9):
+//!
+//! * **Lock-cheap on the dispatch path.**  `emit` with zero
+//!   subscribers is one relaxed atomic load — engines emit
+//!   unconditionally and pay nothing when nobody is watching.
+//!   Call sites that would have to *build* an event (clone a worker
+//!   name, format an error) guard on [`EventBus::active`] first.
+//! * **Deterministic observed order.**  Fan-out happens synchronously
+//!   under the subscriber lock, so every subscriber sees events in
+//!   exactly `seq` order — the property `tests/properties.rs` pins.
+//!   The flip side is a contract: subscribers must not block.  The
+//!   built-in subscribers only touch their own short mutexes and hand
+//!   file/socket IO to dedicated threads.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::event::{Event, Stamped};
+
+/// Opaque handle returned by [`EventBus::subscribe`]; pass it back to
+/// [`EventBus::unsubscribe`] so long-lived engines do not accumulate
+/// dead subscribers across invocations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubscriptionId(u64);
+
+/// A sink for stamped events.  Implementations must be cheap and
+/// non-blocking: they run synchronously on the emitting thread, which
+/// may hold engine locks.
+pub trait Subscriber: Send + Sync {
+    /// Observe one event.  Called in strict `seq` order.
+    fn on_event(&self, ev: &Stamped);
+}
+
+/// Multi-subscriber fan-out point with monotonic stamping.
+pub struct EventBus {
+    origin: Instant,
+    seq: AtomicU64,
+    next_sub: AtomicU64,
+    /// Mirrors `subs.len()` so `active()` never locks.
+    nsubs: AtomicUsize,
+    subs: Mutex<Vec<(u64, Arc<dyn Subscriber>)>>,
+}
+
+impl Default for EventBus {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EventBus {
+    /// A fresh bus; its creation instant is the origin all event
+    /// timestamps offset from.
+    pub fn new() -> Self {
+        EventBus {
+            origin: Instant::now(),
+            seq: AtomicU64::new(0),
+            next_sub: AtomicU64::new(0),
+            nsubs: AtomicUsize::new(0),
+            subs: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The instant event offsets are measured from.
+    pub fn origin(&self) -> Instant {
+        self.origin
+    }
+
+    /// True when at least one subscriber is attached.  Emitters that
+    /// would allocate to *construct* an event check this first; plain
+    /// `emit` already no-ops for free without it.
+    pub fn active(&self) -> bool {
+        self.nsubs.load(Ordering::Relaxed) > 0
+    }
+
+    /// Attach a subscriber; it sees every event emitted from now on.
+    pub fn subscribe(&self, sub: Arc<dyn Subscriber>) -> SubscriptionId {
+        let id = self.next_sub.fetch_add(1, Ordering::Relaxed);
+        let mut subs = self.subs.lock().unwrap_or_else(|p| p.into_inner());
+        subs.push((id, sub));
+        self.nsubs.store(subs.len(), Ordering::Relaxed);
+        SubscriptionId(id)
+    }
+
+    /// Detach a subscriber.  Unknown ids are ignored (double
+    /// unsubscribe is harmless).
+    pub fn unsubscribe(&self, id: SubscriptionId) {
+        let mut subs = self.subs.lock().unwrap_or_else(|p| p.into_inner());
+        subs.retain(|(sid, _)| *sid != id.0);
+        self.nsubs.store(subs.len(), Ordering::Relaxed);
+    }
+
+    /// Stamp and fan out one event.  Free when nobody subscribed.
+    pub fn emit(&self, event: Event) {
+        if self.nsubs.load(Ordering::Relaxed) == 0 {
+            return;
+        }
+        let subs = self.subs.lock().unwrap_or_else(|p| p.into_inner());
+        if subs.is_empty() {
+            return;
+        }
+        // Stamp under the lock so observed order == seq order.
+        let stamped = Stamped {
+            seq: self.seq.fetch_add(1, Ordering::Relaxed),
+            at: self.origin.elapsed(),
+            event,
+        };
+        for (_, sub) in subs.iter() {
+            sub.on_event(&stamped);
+        }
+    }
+}
+
+impl std::fmt::Debug for EventBus {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EventBus")
+            .field("seq", &self.seq.load(Ordering::Relaxed))
+            .field("subscribers", &self.nsubs.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Rec(Mutex<Vec<Stamped>>);
+    impl Subscriber for Rec {
+        fn on_event(&self, ev: &Stamped) {
+            self.0.lock().unwrap().push(ev.clone());
+        }
+    }
+
+    #[test]
+    fn fan_out_stamps_in_order_and_unsubscribe_stops_delivery() {
+        let bus = EventBus::new();
+        assert!(!bus.active());
+        let rec = Arc::new(Rec(Mutex::new(Vec::new())));
+        let id = bus.subscribe(rec.clone());
+        assert!(bus.active());
+        bus.emit(Event::QueueDepth { depth: 1 });
+        bus.emit(Event::JobDone { job: 7 });
+        bus.unsubscribe(id);
+        assert!(!bus.active());
+        bus.emit(Event::QueueDepth { depth: 0 });
+        let got = rec.0.lock().unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].seq, 0);
+        assert_eq!(got[1].seq, 1);
+        assert!(got[0].at <= got[1].at);
+        assert_eq!(got[1].event, Event::JobDone { job: 7 });
+    }
+
+    #[test]
+    fn emit_without_subscribers_is_a_noop_and_consumes_no_seq() {
+        let bus = EventBus::new();
+        bus.emit(Event::QueueDepth { depth: 3 });
+        let rec = Arc::new(Rec(Mutex::new(Vec::new())));
+        bus.subscribe(rec.clone());
+        bus.emit(Event::QueueDepth { depth: 4 });
+        assert_eq!(rec.0.lock().unwrap()[0].seq, 0);
+    }
+
+    #[test]
+    fn concurrent_emitters_never_duplicate_or_skip_seq() {
+        let bus = Arc::new(EventBus::new());
+        let rec = Arc::new(Rec(Mutex::new(Vec::new())));
+        bus.subscribe(rec.clone());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let bus = bus.clone();
+            handles.push(std::thread::spawn(move || {
+                for d in 0..50 {
+                    bus.emit(Event::QueueDepth { depth: d });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let got = rec.0.lock().unwrap();
+        assert_eq!(got.len(), 200);
+        for (i, ev) in got.iter().enumerate() {
+            assert_eq!(ev.seq, i as u64);
+        }
+    }
+}

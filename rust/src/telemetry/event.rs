@@ -1,0 +1,114 @@
+//! The typed event taxonomy (DESIGN.md §9).
+//!
+//! One [`Event`] per observable transition, emitted at exactly the hook
+//! points the crash journal rides (`scheduler::table`) plus the remote
+//! coordinator's worker lifecycle.  Events carry *data*, not
+//! interpretation: the metrics registry, the `status.json` writer and
+//! any future subscriber fold the same stream their own way.
+//!
+//! Timestamps are **monotonic offsets** from the owning
+//! [`crate::telemetry::EventBus`]'s creation instant, not wall-clock:
+//! subscribers sequence and difference them safely across clock steps,
+//! and snapshots stay comparable within one process lifetime.
+
+use std::time::Duration;
+
+/// One observable transition.  Field names mirror the journal's record
+/// schema where the two overlap, so a journal replay and an event fold
+/// agree on vocabulary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// A job was admitted to the engine-shared table.
+    JobSubmitted {
+        job: u64,
+        name: String,
+        ntasks: usize,
+    },
+    /// A task was handed to a worker thread/daemon.
+    TaskAssigned {
+        job: u64,
+        task_id: usize,
+        /// Daemon name on the remote engine; `None` in-process.
+        worker: Option<String>,
+    },
+    /// A task completed successfully (or as a dead-letter placeholder).
+    TaskDone {
+        job: u64,
+        task_id: usize,
+        worker: Option<String>,
+        dispatch_wait: Duration,
+        startup: Duration,
+        compute: Duration,
+        retries: usize,
+        dead_lettered: bool,
+    },
+    /// A task consumed one retry (injected failure or error budget).
+    TaskRetry {
+        job: u64,
+        task_id: usize,
+        attempt: usize,
+    },
+    /// A task reported a terminal execution error.
+    TaskFailed {
+        job: u64,
+        task_id: usize,
+        msg: String,
+    },
+    /// A task was reclaimed from a dead worker and requeued.
+    TaskReassigned { job: u64, task_id: usize },
+    /// A job completed (all tasks landed).
+    JobDone { job: u64 },
+    /// A job failed (directly or via dependency cascade).
+    JobFailed { job: u64, msg: String },
+    /// The failure-rate circuit breaker tripped on a job.
+    BreakerTripped {
+        job: u64,
+        errors: usize,
+        ntasks: usize,
+    },
+    /// A crashed invocation was picked up by `llmapreduce resume`:
+    /// `done` of `total` tasks were satisfied from the journal.
+    Resumed { done: usize, total: usize },
+    /// A worker daemon registered with the coordinator.
+    WorkerRegistered { worker: String, slots: usize },
+    /// A liveness beacon arrived from a worker.
+    WorkerHeartbeat { worker: String },
+    /// A worker was declared dead (connection drop or heartbeat lapse).
+    WorkerDead { worker: String },
+    /// The engine's ready-queue depth changed.
+    QueueDepth { depth: usize },
+}
+
+impl Event {
+    /// The job this event belongs to, when it is job-scoped (worker
+    /// lifecycle and queue-depth events are engine-scoped).
+    pub fn job(&self) -> Option<u64> {
+        match self {
+            Event::JobSubmitted { job, .. }
+            | Event::TaskAssigned { job, .. }
+            | Event::TaskDone { job, .. }
+            | Event::TaskRetry { job, .. }
+            | Event::TaskFailed { job, .. }
+            | Event::TaskReassigned { job, .. }
+            | Event::JobDone { job }
+            | Event::JobFailed { job, .. }
+            | Event::BreakerTripped { job, .. } => Some(*job),
+            Event::Resumed { .. }
+            | Event::WorkerRegistered { .. }
+            | Event::WorkerHeartbeat { .. }
+            | Event::WorkerDead { .. }
+            | Event::QueueDepth { .. } => None,
+        }
+    }
+}
+
+/// An [`Event`] as delivered to subscribers: stamped with a bus-unique
+/// sequence number and a monotonic offset from the bus's creation.
+#[derive(Debug, Clone)]
+pub struct Stamped {
+    /// Strictly increasing per bus; gaps never occur.
+    pub seq: u64,
+    /// Monotonic offset from the bus's creation instant.
+    pub at: Duration,
+    pub event: Event,
+}

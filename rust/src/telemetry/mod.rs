@@ -1,0 +1,38 @@
+//! Live telemetry (DESIGN.md §9): an engine-shared event bus, a
+//! zero-dependency metrics registry, and the surfaces that render them.
+//!
+//! The layer is three decoupled pieces:
+//!
+//! 1. **Events** ([`Event`], [`EventBus`]) — every `JobTable`
+//!    transition (the same hook points the crash journal rides) plus
+//!    the remote coordinator's worker lifecycle emits a typed event
+//!    with a monotonic timestamp.  Emission is free when nobody
+//!    subscribed, so engines emit unconditionally.
+//! 2. **Registry** ([`Registry`], [`Histogram`]) — counters, gauges
+//!    and fixed-bucket latency histograms with per-job / per-worker
+//!    labels, rendered as Prometheus text exposition or
+//!    `util::json`.
+//! 3. **Surfaces** ([`Collector`], [`StatusWriter`],
+//!    [`MetricsListener`]) — a bus subscriber folds events into the
+//!    registry and a live job/worker snapshot; a dedicated thread
+//!    atomically rewrites `status.json` in the `.MAPRED.<pid>`
+//!    workdir; an optional `--metrics-listen host:port` endpoint
+//!    serves `/metrics` and `/status`; and the `llmapreduce status` /
+//!    `llmapreduce top` subcommands fold the same data offline
+//!    ([`fold_workdir`]) or live ([`fetch`]).
+//!
+//! Enabled by default on the CLI (`--telemetry=false` opts out) and
+//! opt-in per `JobSpec` from the library, exactly like the journal.
+
+pub mod bus;
+pub mod event;
+pub mod registry;
+pub mod surface;
+
+pub use bus::{EventBus, Subscriber, SubscriptionId};
+pub use event::{Event, Stamped};
+pub use registry::{Histogram, Registry, LATENCY_BOUNDS_SECS};
+pub use surface::{
+    fetch, fold_workdir, render_status, render_top, Collector,
+    InvocationTelemetry, MetricsListener, StatusWriter, STATUS_FILE,
+};

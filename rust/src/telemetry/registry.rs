@@ -1,0 +1,481 @@
+//! Zero-dependency metrics registry: counters, gauges and fixed-bucket
+//! latency histograms, keyed by `(name, sorted labels)`.
+//!
+//! The registry knows nothing about events — it is a passive store fed
+//! by [`crate::telemetry::Collector`] (or anything else) and rendered
+//! in two encodings:
+//!
+//! * Prometheus text exposition (`# TYPE` lines, `_bucket{le=...}` /
+//!   `_sum` / `_count` histogram series) for scraping `/metrics`;
+//! * [`crate::util::json::Json`] for `status.json` and `/status`.
+//!
+//! Both encodings are canonical (BTreeMap ordering) so tests can
+//! compare strings.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::json::{obj, Json};
+
+/// Upper bucket bounds (seconds) shared by all latency histograms:
+/// exponential from 1ms to 30s, plus the implicit `+Inf` bucket.
+/// Fixed bounds keep `record` allocation-free and make histograms from
+/// different runs mergeable bucket-by-bucket.
+pub const LATENCY_BOUNDS_SECS: [f64; 14] = [
+    0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0,
+];
+
+/// A fixed-bucket histogram (Prometheus semantics: per-bucket counts
+/// are non-cumulative internally, cumulative in the exposition).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    /// One count per bound, plus the final `+Inf` overflow bucket.
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+impl Histogram {
+    /// A histogram over the given ascending upper bounds.
+    pub fn new(bounds: &[f64]) -> Histogram {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]));
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            sum: 0.0,
+            count: 0,
+        }
+    }
+
+    /// A histogram over [`LATENCY_BOUNDS_SECS`].
+    pub fn latency() -> Histogram {
+        Histogram::new(&LATENCY_BOUNDS_SECS)
+    }
+
+    /// Record one observation.
+    pub fn record(&mut self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|b| v <= *b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all observations.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// The upper bounds (without the implicit `+Inf`).
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Per-bucket (non-cumulative) counts; last entry is the `+Inf`
+    /// overflow bucket.
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Cumulative counts per bucket, Prometheus `_bucket` style; the
+    /// last entry always equals [`Histogram::count`].
+    pub fn cumulative(&self) -> Vec<u64> {
+        let mut acc = 0u64;
+        self.counts
+            .iter()
+            .map(|c| {
+                acc += c;
+                acc
+            })
+            .collect()
+    }
+
+    /// Estimate the `q`-quantile (q in [0, 1]) by linear interpolation
+    /// within the containing bucket — the `histogram_quantile` rule.
+    /// Returns `None` on an empty histogram.  Estimates are clamped to
+    /// the containing bucket's bounds; observations past the last
+    /// finite bound report that bound (the estimate cannot exceed what
+    /// the buckets resolve).
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = q * self.count as f64;
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            let prev = cum;
+            cum += c;
+            if (cum as f64) >= rank && *c > 0 {
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                if i >= self.bounds.len() {
+                    // +Inf bucket: no finite upper edge to interpolate
+                    // toward; report the last finite bound.
+                    return Some(*self.bounds.last().unwrap_or(&lo));
+                }
+                let hi = self.bounds[i];
+                let frac = ((rank - prev as f64) / *c as f64).clamp(0.0, 1.0);
+                return Some(lo + (hi - lo) * frac);
+            }
+        }
+        Some(*self.bounds.last().unwrap_or(&0.0))
+    }
+
+    /// Canonical JSON summary: count/sum, p50/p95/p99 estimates, and
+    /// cumulative buckets (`le: null` is the `+Inf` bucket).
+    pub fn to_json(&self) -> Json {
+        let mut buckets: Vec<Json> = Vec::with_capacity(self.counts.len());
+        let cum = self.cumulative();
+        for (i, c) in cum.iter().enumerate() {
+            let le = match self.bounds.get(i) {
+                Some(b) => Json::Num(*b),
+                None => Json::Null, // +Inf
+            };
+            buckets.push(obj(vec![("le", le), ("count", Json::Num(*c as f64))]));
+        }
+        let q = |p: f64| match self.quantile(p) {
+            Some(v) => Json::Num(v),
+            None => Json::Null,
+        };
+        obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("sum", Json::Num(self.sum)),
+            ("p50", q(0.50)),
+            ("p95", q(0.95)),
+            ("p99", q(0.99)),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+}
+
+/// `(metric name, sorted label pairs)` — the identity of one series.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+struct SeriesKey {
+    name: String,
+    labels: Vec<(String, String)>,
+}
+
+fn key(name: &str, labels: &[(&str, &str)]) -> SeriesKey {
+    let mut labels: Vec<(String, String)> = labels
+        .iter()
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect();
+    labels.sort();
+    SeriesKey {
+        name: name.to_string(),
+        labels,
+    }
+}
+
+#[derive(Default)]
+struct State {
+    counters: BTreeMap<SeriesKey, u64>,
+    gauges: BTreeMap<SeriesKey, f64>,
+    histograms: BTreeMap<SeriesKey, Histogram>,
+}
+
+/// Thread-safe metric store.  All mutation goes through one short
+/// mutex; readers snapshot under the same lock.
+#[derive(Default)]
+pub struct Registry {
+    state: Mutex<State>,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Add `by` to a counter series (created at zero on first touch).
+    pub fn inc(&self, name: &str, labels: &[(&str, &str)], by: u64) {
+        *self.lock().counters.entry(key(name, labels)).or_insert(0) += by;
+    }
+
+    /// Set a gauge series to `v`.
+    pub fn set_gauge(&self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.lock().gauges.insert(key(name, labels), v);
+    }
+
+    /// Record `v` into a latency histogram series (created with
+    /// [`LATENCY_BOUNDS_SECS`] on first touch).
+    pub fn observe(&self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.lock()
+            .histograms
+            .entry(key(name, labels))
+            .or_insert_with(Histogram::latency)
+            .record(v);
+    }
+
+    /// Current value of a counter series (0 if never touched).
+    pub fn counter_value(&self, name: &str, labels: &[(&str, &str)]) -> u64 {
+        self.lock()
+            .counters
+            .get(&key(name, labels))
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Sum of a counter across all label combinations.
+    pub fn counter_total(&self, name: &str) -> u64 {
+        self.lock()
+            .counters
+            .iter()
+            .filter(|(k, _)| k.name == name)
+            .map(|(_, v)| *v)
+            .sum()
+    }
+
+    /// Current value of a gauge series, if set.
+    pub fn gauge_value(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        self.lock().gauges.get(&key(name, labels)).copied()
+    }
+
+    /// Clone of a histogram series, if it exists.
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Option<Histogram> {
+        self.lock().histograms.get(&key(name, labels)).cloned()
+    }
+
+    /// A merged clone of all histogram series sharing `name`
+    /// (bucket-by-bucket sum across label combinations), if any exist.
+    pub fn histogram_merged(&self, name: &str) -> Option<Histogram> {
+        let state = self.lock();
+        let mut merged: Option<Histogram> = None;
+        for (k, h) in state.histograms.iter() {
+            if k.name != name {
+                continue;
+            }
+            match &mut merged {
+                None => merged = Some(h.clone()),
+                Some(m) => {
+                    for (dst, src) in m.counts.iter_mut().zip(h.counts.iter()) {
+                        *dst += src;
+                    }
+                    m.sum += h.sum;
+                    m.count += h.count;
+                }
+            }
+        }
+        merged
+    }
+
+    /// Prometheus text exposition of every series, canonically ordered.
+    pub fn render_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let state = self.lock();
+        let mut out = String::new();
+        let mut last_type: Option<(String, &str)> = None;
+        let mut type_line = |out: &mut String, name: &str, kind: &str| {
+            if last_type.as_ref().map(|(n, k)| (n.as_str(), *k)) != Some((name, kind)) {
+                let _ = writeln!(out, "# TYPE {name} {kind}");
+                last_type = Some((name.to_string(), kind));
+            }
+        };
+        for (k, v) in state.counters.iter() {
+            type_line(&mut out, &k.name, "counter");
+            let _ = writeln!(out, "{}{} {}", k.name, render_labels(&k.labels, None), v);
+        }
+        for (k, v) in state.gauges.iter() {
+            type_line(&mut out, &k.name, "gauge");
+            let _ = writeln!(
+                out,
+                "{}{} {}",
+                k.name,
+                render_labels(&k.labels, None),
+                fmt_f64(*v)
+            );
+        }
+        for (k, h) in state.histograms.iter() {
+            type_line(&mut out, &k.name, "histogram");
+            let cum = h.cumulative();
+            for (i, c) in cum.iter().enumerate() {
+                let le = match h.bounds.get(i) {
+                    Some(b) => fmt_f64(*b),
+                    None => "+Inf".to_string(),
+                };
+                let _ = writeln!(
+                    out,
+                    "{}_bucket{} {}",
+                    k.name,
+                    render_labels(&k.labels, Some(&le)),
+                    c
+                );
+            }
+            let _ = writeln!(
+                out,
+                "{}_sum{} {}",
+                k.name,
+                render_labels(&k.labels, None),
+                fmt_f64(h.sum)
+            );
+            let _ = writeln!(
+                out,
+                "{}_count{} {}",
+                k.name,
+                render_labels(&k.labels, None),
+                h.count
+            );
+        }
+        out
+    }
+
+    /// The whole registry as canonical JSON:
+    /// `{"counters": [...], "gauges": [...], "histograms": [...]}`.
+    pub fn to_json(&self) -> Json {
+        let state = self.lock();
+        let labels_json = |labels: &[(String, String)]| {
+            Json::Obj(
+                labels
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                    .collect(),
+            )
+        };
+        let counters = state
+            .counters
+            .iter()
+            .map(|(k, v)| {
+                obj(vec![
+                    ("name", Json::Str(k.name.clone())),
+                    ("labels", labels_json(&k.labels)),
+                    ("value", Json::Num(*v as f64)),
+                ])
+            })
+            .collect();
+        let gauges = state
+            .gauges
+            .iter()
+            .map(|(k, v)| {
+                obj(vec![
+                    ("name", Json::Str(k.name.clone())),
+                    ("labels", labels_json(&k.labels)),
+                    ("value", Json::Num(*v)),
+                ])
+            })
+            .collect();
+        let histograms = state
+            .histograms
+            .iter()
+            .map(|(k, h)| {
+                let mut o = h.to_json();
+                if let Json::Obj(map) = &mut o {
+                    map.insert("name".to_string(), Json::Str(k.name.clone()));
+                    map.insert("labels".to_string(), labels_json(&k.labels));
+                }
+                o
+            })
+            .collect();
+        obj(vec![
+            ("counters", Json::Arr(counters)),
+            ("gauges", Json::Arr(gauges)),
+            ("histograms", Json::Arr(histograms)),
+        ])
+    }
+}
+
+impl std::fmt::Debug for Registry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let state = self.lock();
+        f.debug_struct("Registry")
+            .field("counters", &state.counters.len())
+            .field("gauges", &state.gauges.len())
+            .field("histograms", &state.histograms.len())
+            .finish()
+    }
+}
+
+/// `{a="x",b="y"}` with Prometheus escaping, empty string for no
+/// labels; `le` (when given) is appended last like promtool renders.
+fn render_labels(labels: &[(String, String)], le: Option<&str>) -> String {
+    if labels.is_empty() && le.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    if let Some(le) = le {
+        parts.push(format!("le=\"{le}\""));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Render without the `1e-3` exponent form promtool tolerates but
+/// humans squint at; integral values drop the fraction.
+fn fmt_f64(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let mut h = Histogram::new(&[0.1, 1.0, 10.0]);
+        assert_eq!(h.quantile(0.5), None);
+        for v in [0.05, 0.5, 0.5, 5.0] {
+            h.record(v);
+        }
+        h.record(100.0); // +Inf bucket
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.bucket_counts(), &[1, 2, 1, 1]);
+        assert_eq!(h.cumulative(), vec![1, 3, 4, 5]);
+        let p50 = h.quantile(0.5).unwrap();
+        assert!((0.1..=1.0).contains(&p50), "p50={p50}");
+        // Everything past the last finite bound reports that bound.
+        assert_eq!(h.quantile(1.0), Some(10.0));
+        assert!((h.sum() - 106.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn registry_exposition_covers_all_kinds() {
+        let r = Registry::new();
+        r.inc("llmr_tasks_done_total", &[("worker", "w0"), ("job", "1")], 3);
+        r.set_gauge("llmr_queue_depth", &[], 2.0);
+        r.observe("llmr_task_compute_seconds", &[("worker", "w0")], 0.02);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE llmr_tasks_done_total counter"));
+        assert!(text.contains("llmr_tasks_done_total{job=\"1\",worker=\"w0\"} 3"));
+        assert!(text.contains("# TYPE llmr_queue_depth gauge"));
+        assert!(text.contains("llmr_queue_depth 2"));
+        assert!(text.contains("llmr_task_compute_seconds_bucket{worker=\"w0\",le=\"0.025\"} 1"));
+        assert!(text.contains("llmr_task_compute_seconds_bucket{worker=\"w0\",le=\"+Inf\"} 1"));
+        assert!(text.contains("llmr_task_compute_seconds_count{worker=\"w0\"} 1"));
+        // JSON side round-trips through the parser.
+        let parsed = crate::util::json::Json::parse(&r.to_json().to_string_compact()).unwrap();
+        assert_eq!(parsed.get("counters").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(r.counter_total("llmr_tasks_done_total"), 3);
+    }
+
+    #[test]
+    fn merged_histogram_sums_across_labels() {
+        let r = Registry::new();
+        r.observe("h", &[("worker", "a")], 0.002);
+        r.observe("h", &[("worker", "b")], 0.002);
+        let m = r.histogram_merged("h").unwrap();
+        assert_eq!(m.count(), 2);
+        assert!(r.histogram_merged("missing").is_none());
+    }
+}

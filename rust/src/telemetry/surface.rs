@@ -1,0 +1,1094 @@
+//! Live surfaces over the event stream (DESIGN.md §9): the
+//! [`Collector`] fold, the atomic `status.json` writer, the
+//! `--metrics-listen` endpoint, and the offline folds behind
+//! `llmapreduce status` / `llmapreduce top`.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::scheduler::journal::{Replay, JOURNAL_FILE};
+use crate::util::json::{obj, Json};
+
+use super::bus::{EventBus, Subscriber, SubscriptionId};
+use super::event::{Event, Stamped};
+use super::registry::{Histogram, Registry};
+
+/// Snapshot file name under the `.MAPRED.<pid>` workdir.
+pub const STATUS_FILE: &str = "status.json";
+
+// ---------------------------------------------------------------------------
+// Collector: the one fold every surface reads
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct JobLive {
+    name: String,
+    ntasks: usize,
+    done: usize,
+    /// Tasks completed as dead-letter placeholders.
+    errors: usize,
+    /// Terminal task-error events (pre-policy).
+    task_errors: usize,
+    retries: usize,
+    reassigned: usize,
+    /// Assigned-minus-landed estimate; clamped at render time.
+    running: i64,
+    completed: bool,
+    failed: Option<String>,
+}
+
+#[derive(Default)]
+struct WorkerLive {
+    slots: usize,
+    alive: bool,
+    done: usize,
+}
+
+#[derive(Default)]
+struct Live {
+    jobs: BTreeMap<u64, JobLive>,
+    workers: BTreeMap<String, WorkerLive>,
+    queue_depth: usize,
+    resumed: Option<(usize, usize)>,
+    last_seq: u64,
+    last_at: Duration,
+}
+
+/// Bus subscriber that folds events into a [`Registry`] plus a
+/// job/worker snapshot — the single source every live surface
+/// (`status.json`, `/metrics`, `/status`, `top`) renders from.
+#[derive(Default)]
+pub struct Collector {
+    registry: Registry,
+    live: Mutex<Live>,
+}
+
+impl Collector {
+    /// A fresh, empty collector.
+    pub fn new() -> Collector {
+        Collector::default()
+    }
+
+    /// The metric store this collector feeds.
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Prometheus text exposition of the collected metrics.
+    pub fn render_prometheus(&self) -> String {
+        self.registry.render_prometheus()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Live> {
+        self.live.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// The full live snapshot as canonical JSON — the `status.json`
+    /// body and the `/status` response.
+    pub fn snapshot(&self) -> Json {
+        let live = self.lock();
+        let mut jobs = BTreeMap::new();
+        let mut t_submitted = 0usize;
+        let mut t_done = 0usize;
+        let mut t_errors = 0usize;
+        let mut t_retries = 0usize;
+        let mut t_running = 0usize;
+        let mut jobs_failed = 0usize;
+        for (id, j) in live.jobs.iter() {
+            let running = j.running.max(0) as usize;
+            t_submitted += j.ntasks;
+            t_done += j.done;
+            t_errors += j.errors;
+            t_retries += j.retries;
+            t_running += running;
+            let state = if j.failed.is_some() {
+                jobs_failed += 1;
+                "failed"
+            } else if j.completed {
+                "done"
+            } else {
+                "running"
+            };
+            jobs.insert(
+                id.to_string(),
+                obj(vec![
+                    ("name", Json::Str(j.name.clone())),
+                    ("ntasks", Json::Num(j.ntasks as f64)),
+                    ("done", Json::Num(j.done as f64)),
+                    ("running", Json::Num(running as f64)),
+                    ("errors", Json::Num(j.errors as f64)),
+                    ("task_errors", Json::Num(j.task_errors as f64)),
+                    ("retries", Json::Num(j.retries as f64)),
+                    ("reassigned", Json::Num(j.reassigned as f64)),
+                    ("state", Json::Str(state.to_string())),
+                    (
+                        "failed",
+                        match &j.failed {
+                            Some(m) => Json::Str(m.clone()),
+                            None => Json::Null,
+                        },
+                    ),
+                ]),
+            );
+        }
+        let workers: BTreeMap<String, Json> = live
+            .workers
+            .iter()
+            .map(|(name, w)| {
+                (
+                    name.clone(),
+                    obj(vec![
+                        ("slots", Json::Num(w.slots as f64)),
+                        ("alive", Json::Bool(w.alive)),
+                        ("done", Json::Num(w.done as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        let latency = |metric: &str| match self.registry.histogram_merged(metric) {
+            Some(h) => h.to_json(),
+            None => Json::Null,
+        };
+        let mut top = vec![
+            ("v", Json::Num(1.0)),
+            ("seq", Json::Num(live.last_seq as f64)),
+            ("at_ms", Json::Num(live.last_at.as_millis() as f64)),
+            ("queue_depth", Json::Num(live.queue_depth as f64)),
+            (
+                "totals",
+                obj(vec![
+                    ("submitted", Json::Num(t_submitted as f64)),
+                    ("done", Json::Num(t_done as f64)),
+                    ("running", Json::Num(t_running as f64)),
+                    ("errors", Json::Num(t_errors as f64)),
+                    ("retries", Json::Num(t_retries as f64)),
+                    ("failed_jobs", Json::Num(jobs_failed as f64)),
+                ]),
+            ),
+            ("jobs", Json::Obj(jobs)),
+            ("workers", Json::Obj(workers)),
+            (
+                "latency",
+                obj(vec![
+                    ("startup", latency("llmr_task_startup_seconds")),
+                    ("compute", latency("llmr_task_compute_seconds")),
+                    ("dispatch", latency("llmr_task_dispatch_seconds")),
+                ]),
+            ),
+            ("metrics", self.registry.to_json()),
+        ];
+        if let Some((done, total)) = live.resumed {
+            top.push((
+                "resumed",
+                obj(vec![
+                    ("done", Json::Num(done as f64)),
+                    ("total", Json::Num(total as f64)),
+                ]),
+            ));
+        }
+        obj(top)
+    }
+}
+
+fn worker_label(worker: &Option<String>) -> &str {
+    worker.as_deref().unwrap_or("local")
+}
+
+impl Subscriber for Collector {
+    fn on_event(&self, ev: &Stamped) {
+        let mut live = self.lock();
+        live.last_seq = ev.seq;
+        live.last_at = ev.at;
+        // Job-scoped events label metrics by job *name* (stable across
+        // resume generations); fall back to the id for events that
+        // outran their submit record.
+        let job_name = |live: &Live, id: u64| {
+            live.jobs
+                .get(&id)
+                .map(|j| j.name.clone())
+                .unwrap_or_else(|| id.to_string())
+        };
+        match &ev.event {
+            Event::JobSubmitted { job, name, ntasks } => {
+                let j = live.jobs.entry(*job).or_default();
+                j.name = name.clone();
+                j.ntasks = *ntasks;
+                self.registry.inc(
+                    "llmr_tasks_submitted_total",
+                    &[("job", name)],
+                    *ntasks as u64,
+                );
+            }
+            Event::TaskAssigned { job, worker, .. } => {
+                let name = job_name(&live, *job);
+                if let Some(j) = live.jobs.get_mut(job) {
+                    j.running += 1;
+                }
+                self.registry.inc(
+                    "llmr_tasks_assigned_total",
+                    &[("job", &name), ("worker", worker_label(worker))],
+                    1,
+                );
+            }
+            Event::TaskDone {
+                job,
+                worker,
+                dispatch_wait,
+                startup,
+                compute,
+                dead_lettered,
+                ..
+            } => {
+                let name = job_name(&live, *job);
+                if let Some(j) = live.jobs.get_mut(job) {
+                    j.done += 1;
+                    j.running -= 1;
+                    if *dead_lettered {
+                        j.errors += 1;
+                    }
+                }
+                if let Some(w) = worker {
+                    live.workers.entry(w.clone()).or_default().done += 1;
+                }
+                let wl = worker_label(worker);
+                self.registry.inc(
+                    "llmr_tasks_done_total",
+                    &[("job", &name), ("worker", wl)],
+                    1,
+                );
+                if *dead_lettered {
+                    self.registry.inc(
+                        "llmr_tasks_dead_lettered_total",
+                        &[("job", &name)],
+                        1,
+                    );
+                }
+                let w = [("worker", wl)];
+                self.registry.observe(
+                    "llmr_task_dispatch_seconds",
+                    &w,
+                    dispatch_wait.as_secs_f64(),
+                );
+                self.registry
+                    .observe("llmr_task_startup_seconds", &w, startup.as_secs_f64());
+                self.registry
+                    .observe("llmr_task_compute_seconds", &w, compute.as_secs_f64());
+            }
+            Event::TaskRetry { job, .. } => {
+                let name = job_name(&live, *job);
+                if let Some(j) = live.jobs.get_mut(job) {
+                    j.retries += 1;
+                    // The attempt goes back to the queue; it is not
+                    // running until reassigned.
+                    j.running -= 1;
+                }
+                self.registry
+                    .inc("llmr_task_retries_total", &[("job", &name)], 1);
+            }
+            Event::TaskFailed { job, .. } => {
+                let name = job_name(&live, *job);
+                if let Some(j) = live.jobs.get_mut(job) {
+                    j.task_errors += 1;
+                    j.running -= 1;
+                }
+                self.registry
+                    .inc("llmr_tasks_failed_total", &[("job", &name)], 1);
+            }
+            Event::TaskReassigned { job, .. } => {
+                let name = job_name(&live, *job);
+                if let Some(j) = live.jobs.get_mut(job) {
+                    j.reassigned += 1;
+                    j.running -= 1;
+                }
+                self.registry
+                    .inc("llmr_tasks_reassigned_total", &[("job", &name)], 1);
+            }
+            Event::JobDone { job } => {
+                if let Some(j) = live.jobs.get_mut(job) {
+                    j.completed = true;
+                    j.running = 0;
+                }
+                self.registry.inc("llmr_jobs_done_total", &[], 1);
+            }
+            Event::JobFailed { job, msg } => {
+                if let Some(j) = live.jobs.get_mut(job) {
+                    j.failed = Some(msg.clone());
+                    j.running = 0;
+                }
+                self.registry.inc("llmr_jobs_failed_total", &[], 1);
+            }
+            Event::BreakerTripped { job, .. } => {
+                let name = job_name(&live, *job);
+                self.registry
+                    .inc("llmr_breaker_tripped_total", &[("job", &name)], 1);
+            }
+            Event::Resumed { done, total } => {
+                live.resumed = Some((*done, *total));
+                self.registry
+                    .inc("llmr_tasks_replayed_total", &[], *done as u64);
+            }
+            Event::WorkerRegistered { worker, slots } => {
+                let w = live.workers.entry(worker.clone()).or_default();
+                w.slots = *slots;
+                w.alive = true;
+                let alive = live.workers.values().filter(|w| w.alive).count();
+                self.registry
+                    .set_gauge("llmr_worker_slots", &[("worker", worker)], *slots as f64);
+                self.registry
+                    .set_gauge("llmr_workers_alive", &[], alive as f64);
+            }
+            Event::WorkerHeartbeat { worker } => {
+                self.registry.inc(
+                    "llmr_worker_heartbeats_total",
+                    &[("worker", worker)],
+                    1,
+                );
+            }
+            Event::WorkerDead { worker } => {
+                live.workers.entry(worker.clone()).or_default().alive = false;
+                let alive = live.workers.values().filter(|w| w.alive).count();
+                self.registry
+                    .inc("llmr_workers_dead_total", &[("worker", worker)], 1);
+                self.registry
+                    .set_gauge("llmr_workers_alive", &[], alive as f64);
+            }
+            Event::QueueDepth { depth } => {
+                live.queue_depth = *depth;
+                self.registry
+                    .set_gauge("llmr_queue_depth", &[], *depth as f64);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// StatusWriter: atomic status.json snapshots off the dispatch path
+// ---------------------------------------------------------------------------
+
+struct WriterFlags {
+    dirty: bool,
+    stop: bool,
+}
+
+struct WriterShared {
+    collector: Arc<Collector>,
+    path: PathBuf,
+    flags: Mutex<WriterFlags>,
+    cv: Condvar,
+}
+
+impl WriterShared {
+    /// Serialize a snapshot and atomically swap it into place
+    /// (temp-file + rename — readers of `status.json` never observe a
+    /// torn write, unlike plain `fs::write`).  IO errors are swallowed
+    /// like journal appends: telemetry must never take down the job.
+    fn write_now(&self) {
+        let body = self.collector.snapshot().to_string_compact();
+        let tmp = self.path.with_file_name(".status.json.tmp");
+        if std::fs::write(&tmp, body).is_ok() {
+            let _ = std::fs::rename(&tmp, &self.path);
+        }
+    }
+}
+
+/// The bus subscriber half of [`StatusWriter`]: marks the snapshot
+/// dirty and wakes the writer thread — nothing else, so emitters never
+/// wait on file IO.
+struct StatusNotifier(Arc<WriterShared>);
+
+impl Subscriber for StatusNotifier {
+    fn on_event(&self, _ev: &Stamped) {
+        let mut flags = self.0.flags.lock().unwrap_or_else(|p| p.into_inner());
+        flags.dirty = true;
+        self.0.cv.notify_one();
+    }
+}
+
+/// Dedicated thread that rewrites `status.json` whenever events have
+/// arrived since the last write.  Writes coalesce naturally: every
+/// transition *batch* lands as one snapshot, not one write per event.
+/// Dropping the writer flushes a final snapshot and joins the thread.
+pub struct StatusWriter {
+    shared: Arc<WriterShared>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl StatusWriter {
+    /// Start the writer thread; it owns `path` until drop.
+    pub fn spawn(collector: Arc<Collector>, path: PathBuf) -> StatusWriter {
+        let shared = Arc::new(WriterShared {
+            collector,
+            path,
+            flags: Mutex::new(WriterFlags {
+                dirty: false,
+                stop: false,
+            }),
+            cv: Condvar::new(),
+        });
+        let thread_shared = shared.clone();
+        let handle = std::thread::Builder::new()
+            .name("llmr-status-writer".into())
+            .spawn(move || {
+                let mut flags = thread_shared
+                    .flags
+                    .lock()
+                    .unwrap_or_else(|p| p.into_inner());
+                loop {
+                    while !flags.dirty && !flags.stop {
+                        flags = thread_shared
+                            .cv
+                            .wait(flags)
+                            .unwrap_or_else(|p| p.into_inner());
+                    }
+                    if flags.dirty {
+                        flags.dirty = false;
+                        drop(flags);
+                        thread_shared.write_now();
+                        flags = thread_shared
+                            .flags
+                            .lock()
+                            .unwrap_or_else(|p| p.into_inner());
+                        continue;
+                    }
+                    break; // stop && !dirty
+                }
+                drop(flags);
+                // Final snapshot so the on-disk file reflects the last
+                // transition even if no write raced it in.
+                thread_shared.write_now();
+            })
+            .expect("spawn status writer thread");
+        StatusWriter {
+            shared,
+            handle: Some(handle),
+        }
+    }
+
+    /// The subscriber to attach to the bus.
+    pub fn notifier(&self) -> Arc<dyn Subscriber> {
+        Arc::new(StatusNotifier(self.shared.clone()))
+    }
+
+    /// Where snapshots land.
+    pub fn path(&self) -> &Path {
+        &self.shared.path
+    }
+}
+
+impl Drop for StatusWriter {
+    fn drop(&mut self) {
+        {
+            let mut flags =
+                self.shared.flags.lock().unwrap_or_else(|p| p.into_inner());
+            flags.stop = true;
+            self.shared.cv.notify_one();
+        }
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// InvocationTelemetry: the bundle a Session/resume wires up
+// ---------------------------------------------------------------------------
+
+/// One invocation's telemetry plumbing: a [`Collector`] and a
+/// [`StatusWriter`] subscribed to an engine's bus.  Dropping it
+/// unsubscribes both and flushes the final `status.json` — do that
+/// *before* the workdir is removed.
+pub struct InvocationTelemetry {
+    bus: Arc<EventBus>,
+    collector: Arc<Collector>,
+    subs: Vec<SubscriptionId>,
+    writer: Option<StatusWriter>,
+}
+
+impl InvocationTelemetry {
+    /// Subscribe a fresh collector + status writer to `bus`, writing
+    /// snapshots at `status_path`.
+    pub fn attach(bus: Arc<EventBus>, status_path: PathBuf) -> InvocationTelemetry {
+        let collector = Arc::new(Collector::new());
+        let writer = StatusWriter::spawn(collector.clone(), status_path);
+        let subs = vec![
+            bus.subscribe(collector.clone()),
+            bus.subscribe(writer.notifier()),
+        ];
+        InvocationTelemetry {
+            bus,
+            collector,
+            subs,
+            writer: Some(writer),
+        }
+    }
+
+    /// The bus this bundle is subscribed to (thread it into
+    /// `JobSpec::telemetry`).
+    pub fn bus(&self) -> &Arc<EventBus> {
+        &self.bus
+    }
+
+    /// The invocation's collector (for tests and live endpoints).
+    pub fn collector(&self) -> &Arc<Collector> {
+        &self.collector
+    }
+}
+
+impl Drop for InvocationTelemetry {
+    fn drop(&mut self) {
+        for id in self.subs.drain(..) {
+            self.bus.unsubscribe(id);
+        }
+        // Joins the writer thread, which flushes the final snapshot.
+        self.writer.take();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MetricsListener: the --metrics-listen endpoint
+// ---------------------------------------------------------------------------
+
+/// TCP endpoint serving `/metrics` (Prometheus text) and `/status`
+/// (snapshot JSON) from a [`Collector`].  Speaks both the repo's raw
+/// line protocol (`printf '/metrics\n' | nc`) and minimal HTTP GET
+/// (`curl http://host:port/metrics`), because scrapers expect HTTP but
+/// everything else in `scheduler::remote` is line-framed.
+pub struct MetricsListener {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsListener {
+    /// Bind `addr` and serve until drop.
+    pub fn bind(addr: &str, collector: Arc<Collector>) -> Result<MetricsListener> {
+        let listener = TcpListener::bind(addr).map_err(|e| {
+            Error::Scheduler(format!("metrics listener bind {addr}: {e}"))
+        })?;
+        let local = listener.local_addr().map_err(|e| {
+            Error::Scheduler(format!("metrics listener addr: {e}"))
+        })?;
+        listener.set_nonblocking(true).map_err(|e| {
+            Error::Scheduler(format!("metrics listener nonblocking: {e}"))
+        })?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread_stop = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("llmr-metrics-listener".into())
+            .spawn(move || {
+                while !thread_stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((conn, _)) => {
+                            // Serve inline: responses are small and
+                            // bounded by socket timeouts, so a slow
+                            // client cannot wedge the accept loop long.
+                            let _ = serve_conn(conn, &collector);
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(25));
+                        }
+                        Err(_) => {
+                            std::thread::sleep(Duration::from_millis(25));
+                        }
+                    }
+                }
+            })
+            .expect("spawn metrics listener thread");
+        Ok(MetricsListener {
+            addr: local,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound address (useful with port 0 in tests).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for MetricsListener {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_conn(conn: TcpStream, collector: &Collector) -> std::io::Result<()> {
+    conn.set_nonblocking(false)?;
+    conn.set_read_timeout(Some(Duration::from_secs(2)))?;
+    conn.set_write_timeout(Some(Duration::from_secs(2)))?;
+    let mut reader = BufReader::new(conn.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let line = line.trim();
+    // "GET /metrics HTTP/1.1" or bare "/metrics".
+    let (http, path) = match line.strip_prefix("GET ") {
+        Some(rest) => (true, rest.split_whitespace().next().unwrap_or("")),
+        None => (false, line),
+    };
+    let (status, ctype, body) = match path {
+        "/metrics" => (
+            "200 OK",
+            "text/plain; version=0.0.4",
+            collector.render_prometheus(),
+        ),
+        "/status" => {
+            let mut body = collector.snapshot().to_string_compact();
+            body.push('\n');
+            ("200 OK", "application/json", body)
+        }
+        _ => (
+            "404 Not Found",
+            "text/plain",
+            format!("unknown path {path:?}; try /metrics or /status\n"),
+        ),
+    };
+    let mut out = conn;
+    if http {
+        write!(
+            out,
+            "HTTP/1.0 {status}\r\nContent-Type: {ctype}\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n",
+            body.len()
+        )?;
+    }
+    out.write_all(body.as_bytes())?;
+    out.flush()?;
+    Ok(())
+}
+
+/// Line-protocol client for `top` and tests: send one request line to
+/// a [`MetricsListener`] and read the raw response body.
+pub fn fetch(addr: &str, path: &str) -> Result<String> {
+    let stream = TcpStream::connect(addr).map_err(|e| {
+        Error::Scheduler(format!("connect to metrics endpoint {addr}: {e}"))
+    })?;
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .and_then(|()| stream.set_write_timeout(Some(Duration::from_secs(5))))
+        .map_err(|e| Error::Scheduler(format!("metrics socket setup: {e}")))?;
+    let mut stream = stream;
+    stream
+        .write_all(format!("{path}\n").as_bytes())
+        .and_then(|()| stream.flush())
+        .and_then(|()| stream.shutdown(Shutdown::Write))
+        .map_err(|e| Error::Scheduler(format!("metrics request: {e}")))?;
+    let mut body = String::new();
+    stream
+        .read_to_string(&mut body)
+        .map_err(|e| Error::Scheduler(format!("metrics response: {e}")))?;
+    Ok(body)
+}
+
+// ---------------------------------------------------------------------------
+// Offline folds + rendering for `llmapreduce status` / `top`
+// ---------------------------------------------------------------------------
+
+/// Fold a (possibly crashed) workdir into status JSON.
+///
+/// The journal, when present, is **authoritative** for done/error
+/// counts: it is fsync'd per transition and is exactly what a
+/// subsequent `resume` acts on, while `status.json` batches and may
+/// trail by a write.  `status.json` enriches the fold with what the
+/// journal cannot know (latency quantiles, worker attribution, queue
+/// depth); on journal-less runs (`--journal=false`) it stands alone.
+pub fn fold_workdir(workdir: &Path) -> Result<Json> {
+    let journal_path = workdir.join(JOURNAL_FILE);
+    let status_path = workdir.join(STATUS_FILE);
+    let status_json = std::fs::read_to_string(&status_path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok());
+    if !journal_path.is_file() {
+        return match status_json {
+            Some(Json::Obj(mut map)) => {
+                map.insert("source".into(), Json::Str("status.json".into()));
+                Ok(Json::Obj(map))
+            }
+            _ => Err(Error::opt(format!(
+                "no {JOURNAL_FILE} or {STATUS_FILE} under {} — nothing to report",
+                workdir.display()
+            ))),
+        };
+    }
+
+    let replay = Replay::load(&journal_path)?;
+    let mut jobs = BTreeMap::new();
+    for (id, j) in replay.jobs.iter() {
+        let state = if j.failed.is_some() {
+            "failed"
+        } else if j.completed {
+            "done"
+        } else {
+            "interrupted"
+        };
+        jobs.insert(
+            id.to_string(),
+            obj(vec![
+                ("name", Json::Str(j.name.clone())),
+                ("ntasks", Json::Num(j.ntasks as f64)),
+                ("done", Json::Num(j.done.len() as f64)),
+                ("errors", Json::Num(j.dead_lettered.len() as f64)),
+                ("task_errors", Json::Num(j.task_errors as f64)),
+                ("retries", Json::Num(j.retries as f64)),
+                ("reassigned", Json::Num(j.reassigns as f64)),
+                ("breaker", Json::Bool(j.breaker)),
+                ("state", Json::Str(state.to_string())),
+                (
+                    "failed",
+                    match &j.failed {
+                        Some(m) => Json::Str(m.clone()),
+                        None => Json::Null,
+                    },
+                ),
+            ]),
+        );
+    }
+
+    let mut top = vec![
+        ("v", Json::Num(1.0)),
+        ("source", Json::Str("journal".into())),
+        ("records", Json::Num(replay.records as f64)),
+        ("resumes", Json::Num(replay.resumes as f64)),
+        ("jobs", Json::Obj(jobs)),
+    ];
+
+    // The counts a `resume` of this workdir would act on: completion
+    // unioned across generations of the *mapper* job, by task id.
+    if let Some(inv) = &replay.invocation {
+        let map_name = crate::apps::registry::resolve_mapper(&inv.mapper)
+            .map(|m| m.name().to_string())
+            .unwrap_or_else(|_| inv.mapper.clone());
+        let done = replay.done_task_ids(&map_name);
+        let errors = replay.dead_lettered_task_ids(&map_name);
+        top.push((
+            "map",
+            obj(vec![
+                ("name", Json::Str(map_name)),
+                ("ntasks", Json::Num(inv.ntasks as f64)),
+                ("done", Json::Num(done.len() as f64)),
+                ("errors", Json::Num(errors.len() as f64)),
+                (
+                    "pending",
+                    Json::Num(inv.ntasks.saturating_sub(done.len()) as f64),
+                ),
+            ]),
+        ));
+    }
+
+    // Enrichment the journal cannot provide.
+    if let Some(s) = &status_json {
+        for key in ["latency", "workers", "queue_depth"] {
+            if let Some(v) = s.get(key) {
+                top.push((key, v.clone()));
+            }
+        }
+    }
+    Ok(obj(top))
+}
+
+fn num(j: Option<&Json>) -> usize {
+    j.and_then(|v| v.as_usize()).unwrap_or(0)
+}
+
+fn jstr(j: Option<&Json>) -> String {
+    j.and_then(|v| v.as_str()).unwrap_or("-").to_string()
+}
+
+fn latency_rows(status: &Json) -> Vec<Vec<String>> {
+    let ms = |j: Option<&Json>| match j.and_then(|v| v.as_f64()) {
+        Some(v) => format!("{:.1}ms", v * 1e3),
+        None => "-".to_string(),
+    };
+    let mut rows = Vec::new();
+    if let Some(lat) = status.get("latency") {
+        for phase in ["dispatch", "startup", "compute"] {
+            let h = match lat.get(phase) {
+                Some(h) if !matches!(h, Json::Null) => h,
+                _ => continue,
+            };
+            rows.push(vec![
+                phase.to_string(),
+                ms(h.get("p50")),
+                ms(h.get("p95")),
+                ms(h.get("p99")),
+                num(h.get("count")).to_string(),
+            ]);
+        }
+    }
+    rows
+}
+
+fn jobs_rows(status: &Json) -> Vec<Vec<String>> {
+    let mut rows = Vec::new();
+    if let Some(jobs) = status.get("jobs").and_then(|j| j.as_obj()) {
+        for (id, j) in jobs {
+            rows.push(vec![
+                id.clone(),
+                jstr(j.get("name")),
+                format!("{}/{}", num(j.get("done")), num(j.get("ntasks"))),
+                num(j.get("running")).to_string(),
+                num(j.get("errors")).to_string(),
+                num(j.get("retries")).to_string(),
+                num(j.get("reassigned")).to_string(),
+                jstr(j.get("state")),
+            ]);
+        }
+    }
+    rows
+}
+
+/// Render a [`fold_workdir`] result (or a live snapshot — the shapes
+/// share their table-backing keys) as the `llmapreduce status` report.
+pub fn render_status(status: &Json) -> String {
+    use crate::metrics::report::render_table;
+    let mut out = String::new();
+    let source = jstr(status.get("source"));
+    if source != "-" {
+        out.push_str(&format!("source: {source}"));
+        let resumes = num(status.get("resumes"));
+        if resumes > 0 {
+            out.push_str(&format!(" (resumed {resumes}x)"));
+        }
+        out.push('\n');
+    }
+    if let Some(map) = status.get("map") {
+        out.push_str(&format!(
+            "map {}: {}/{} done, {} dead-lettered, {} pending re-run\n",
+            jstr(map.get("name")),
+            num(map.get("done")),
+            num(map.get("ntasks")),
+            num(map.get("errors")),
+            num(map.get("pending")),
+        ));
+    }
+    let jobs = jobs_rows(status);
+    if !jobs.is_empty() {
+        out.push_str(&render_table(
+            &[
+                "job", "name", "done", "running", "errors", "retries", "reassigned",
+                "state",
+            ],
+            &jobs,
+        ));
+    }
+    let lat = latency_rows(status);
+    if !lat.is_empty() {
+        out.push_str(&render_table(
+            &["phase", "p50", "p95", "p99", "count"],
+            &lat,
+        ));
+    }
+    out
+}
+
+/// Render one `top` frame from a live snapshot (the `/status` body or
+/// `status.json`).
+pub fn render_top(status: &Json) -> String {
+    use crate::metrics::report::render_table;
+    let totals = status.get("totals");
+    let header = format!(
+        "queue {} | running {} | done {} | errors {} | retries {} | t+{}ms\n",
+        num(status.get("queue_depth")),
+        num(totals.and_then(|t| t.get("running"))),
+        num(totals.and_then(|t| t.get("done"))),
+        num(totals.and_then(|t| t.get("errors"))),
+        num(totals.and_then(|t| t.get("retries"))),
+        num(status.get("at_ms")),
+    );
+    let mut out = header;
+    let jobs = jobs_rows(status);
+    if !jobs.is_empty() {
+        out.push_str(&render_table(
+            &[
+                "job", "name", "done", "running", "errors", "retries", "reassigned",
+                "state",
+            ],
+            &jobs,
+        ));
+    }
+    if let Some(workers) = status.get("workers").and_then(|w| w.as_obj()) {
+        if !workers.is_empty() {
+            let rows: Vec<Vec<String>> = workers
+                .iter()
+                .map(|(name, w)| {
+                    vec![
+                        name.clone(),
+                        num(w.get("slots")).to_string(),
+                        if w.get("alive").and_then(|a| a.as_bool()).unwrap_or(false) {
+                            "yes".to_string()
+                        } else {
+                            "no".to_string()
+                        },
+                        num(w.get("done")).to_string(),
+                    ]
+                })
+                .collect();
+            out.push_str(&render_table(&["worker", "slots", "alive", "done"], &rows));
+        }
+    }
+    let lat = latency_rows(status);
+    if !lat.is_empty() {
+        out.push_str(&render_table(
+            &["phase", "p50", "p95", "p99", "count"],
+            &lat,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stamped(seq: u64, event: Event) -> Stamped {
+        Stamped {
+            seq,
+            at: Duration::from_millis(seq),
+            event,
+        }
+    }
+
+    fn feed(collector: &Collector, events: Vec<Event>) {
+        for (i, ev) in events.into_iter().enumerate() {
+            collector.on_event(&stamped(i as u64, ev));
+        }
+    }
+
+    #[test]
+    fn collector_folds_a_job_lifecycle() {
+        let c = Collector::new();
+        feed(
+            &c,
+            vec![
+                Event::JobSubmitted {
+                    job: 1,
+                    name: "wordcount".into(),
+                    ntasks: 2,
+                },
+                Event::QueueDepth { depth: 2 },
+                Event::TaskAssigned {
+                    job: 1,
+                    task_id: 1,
+                    worker: Some("w0".into()),
+                },
+                Event::TaskDone {
+                    job: 1,
+                    task_id: 1,
+                    worker: Some("w0".into()),
+                    dispatch_wait: Duration::from_millis(2),
+                    startup: Duration::from_millis(3),
+                    compute: Duration::from_millis(40),
+                    retries: 0,
+                    dead_lettered: false,
+                },
+                Event::TaskAssigned {
+                    job: 1,
+                    task_id: 2,
+                    worker: Some("w1".into()),
+                },
+                Event::TaskDone {
+                    job: 1,
+                    task_id: 2,
+                    worker: Some("w1".into()),
+                    dispatch_wait: Duration::from_millis(1),
+                    startup: Duration::from_millis(2),
+                    compute: Duration::from_millis(30),
+                    retries: 0,
+                    dead_lettered: true,
+                },
+                Event::JobDone { job: 1 },
+                Event::QueueDepth { depth: 0 },
+            ],
+        );
+        let r = c.registry();
+        assert_eq!(r.counter_total("llmr_tasks_done_total"), 2);
+        assert_eq!(
+            r.counter_value(
+                "llmr_tasks_done_total",
+                &[("job", "wordcount"), ("worker", "w0")]
+            ),
+            1
+        );
+        assert_eq!(r.counter_total("llmr_tasks_dead_lettered_total"), 1);
+        assert_eq!(r.gauge_value("llmr_queue_depth", &[]), Some(0.0));
+        assert_eq!(
+            r.histogram_merged("llmr_task_compute_seconds").unwrap().count(),
+            2
+        );
+
+        let snap = c.snapshot();
+        let job = snap.get("jobs").unwrap().get("1").unwrap();
+        assert_eq!(job.get("done").unwrap().as_usize(), Some(2));
+        assert_eq!(job.get("errors").unwrap().as_usize(), Some(1));
+        assert_eq!(job.get("state").unwrap().as_str(), Some("done"));
+        let totals = snap.get("totals").unwrap();
+        assert_eq!(totals.get("done").unwrap().as_usize(), Some(2));
+        // Renderers accept the snapshot shape.
+        let frame = render_top(&snap);
+        assert!(frame.contains("wordcount"));
+        assert!(frame.starts_with("queue 0 | running 0 | done 2"));
+    }
+
+    #[test]
+    fn status_writer_snapshots_atomically_and_flushes_on_drop() {
+        let dir = std::env::temp_dir()
+            .join(format!("llmr-statuswriter-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let bus = Arc::new(EventBus::new());
+        let tele =
+            InvocationTelemetry::attach(bus.clone(), dir.join(STATUS_FILE));
+        bus.emit(Event::JobSubmitted {
+            job: 1,
+            name: "j".into(),
+            ntasks: 1,
+        });
+        bus.emit(Event::JobDone { job: 1 });
+        drop(tele);
+        assert!(!bus.active(), "drop unsubscribes");
+        let text = std::fs::read_to_string(dir.join(STATUS_FILE)).unwrap();
+        let snap = Json::parse(&text).unwrap();
+        assert_eq!(
+            snap.get("jobs").unwrap().get("1").unwrap().get("state").unwrap(),
+            &Json::Str("done".into())
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn metrics_listener_serves_line_protocol_and_http() {
+        let collector = Arc::new(Collector::new());
+        collector.on_event(&stamped(
+            0,
+            Event::QueueDepth { depth: 5 },
+        ));
+        let listener =
+            MetricsListener::bind("127.0.0.1:0", collector.clone()).unwrap();
+        let addr = listener.local_addr().to_string();
+        let text = fetch(&addr, "/metrics").unwrap();
+        assert!(text.contains("llmr_queue_depth 5"));
+        let status = fetch(&addr, "/status").unwrap();
+        let snap = Json::parse(status.trim()).unwrap();
+        assert_eq!(snap.get("queue_depth").unwrap().as_usize(), Some(5));
+        // HTTP GET framing on the same port.
+        let mut conn = TcpStream::connect(&addr).unwrap();
+        conn.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        conn.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.0 200 OK"));
+        assert!(resp.contains("llmr_queue_depth 5"));
+        // Unknown paths are a 404, not a hang.
+        let notfound = fetch(&addr, "/nope").unwrap();
+        assert!(notfound.contains("unknown path"));
+    }
+}

@@ -705,6 +705,157 @@ fn prop_journal_prefixes_replay_consistently() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// Telemetry invariants (DESIGN.md §9)
+// ---------------------------------------------------------------------------
+
+use std::sync::{Arc, Mutex};
+
+use llmapreduce::telemetry::{
+    Event, EventBus, Histogram, Stamped, Subscriber, LATENCY_BOUNDS_SECS,
+};
+
+/// Histogram bucket math under random observations: every value lands
+/// in exactly one bucket, cumulative counts are monotone and end at the
+/// total, sum/count agree with the inputs, and quantile estimates are
+/// monotone in `q` and confined to their containing bucket's bounds.
+#[test]
+fn prop_histogram_bucket_math() {
+    forall("histogram", |rng| {
+        assert!(Histogram::latency().quantile(0.5).is_none());
+        let mut h = Histogram::latency();
+        let n = rng.range(1, 300);
+        let mut sum = 0.0;
+        for _ in 0..n {
+            // 0..40s spans below the first bound through past the last
+            // finite bound (the +Inf overflow bucket).
+            let v = (rng.next_below(40_000_000) as f64) / 1_000_000.0;
+            sum += v;
+            h.record(v);
+        }
+        assert_eq!(h.count(), n as u64);
+        assert!((h.sum() - sum).abs() <= 1e-6 * sum.max(1.0));
+        let cum = h.cumulative();
+        assert!(cum.windows(2).all(|w| w[0] <= w[1]), "monotone buckets");
+        assert_eq!(*cum.last().unwrap(), h.count());
+        assert_eq!(
+            h.bucket_counts().iter().sum::<u64>(),
+            h.count(),
+            "each observation in exactly one bucket"
+        );
+        let mut prev = 0.0f64;
+        for q in [0.0, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0] {
+            let est = h.quantile(q).unwrap();
+            assert!(est >= prev - 1e-12, "quantile monotone in q");
+            prev = est;
+            // The estimate stays inside the bucket containing rank
+            // q*count (the +Inf bucket reports the last finite bound).
+            let rank = q * h.count() as f64;
+            let i = cum
+                .iter()
+                .zip(h.bucket_counts())
+                .position(|(c, n)| (*c as f64) >= rank && *n > 0)
+                .unwrap_or(cum.len() - 1);
+            let lo = if i == 0 { 0.0 } else { LATENCY_BOUNDS_SECS[i - 1] };
+            let hi = *LATENCY_BOUNDS_SECS
+                .get(i)
+                .unwrap_or(LATENCY_BOUNDS_SECS.last().unwrap());
+            assert!(
+                (lo..=hi).contains(&est),
+                "q={q}: estimate {est} outside bucket [{lo}, {hi}]"
+            );
+        }
+    });
+}
+
+struct Recorder(Mutex<Vec<Stamped>>);
+
+impl Subscriber for Recorder {
+    fn on_event(&self, ev: &Stamped) {
+        self.0.lock().unwrap().push(ev.clone());
+    }
+}
+
+/// Bus ordering: events are stamped and fanned out under one lock, so
+/// every subscriber observes (a) globally strictly-increasing sequence
+/// numbers and (b) each job's events in exactly its emission order —
+/// even when many jobs emit concurrently from separate threads.
+#[test]
+fn prop_event_bus_preserves_per_job_order() {
+    forall("bus-order", |rng| {
+        let bus = Arc::new(EventBus::new());
+        let rec = Arc::new(Recorder(Mutex::new(Vec::new())));
+        bus.subscribe(rec.clone());
+        let njobs = rng.range(1, 6);
+        let ntasks = rng.range(1, 20);
+        let emit_job = |job: u64| {
+            bus.emit(Event::JobSubmitted {
+                job,
+                name: format!("j{job}"),
+                ntasks,
+            });
+            for t in 1..=ntasks {
+                bus.emit(Event::TaskAssigned {
+                    job,
+                    task_id: t,
+                    worker: None,
+                });
+                bus.emit(Event::TaskDone {
+                    job,
+                    task_id: t,
+                    worker: None,
+                    dispatch_wait: Duration::ZERO,
+                    startup: Duration::ZERO,
+                    compute: Duration::ZERO,
+                    retries: 0,
+                    dead_lettered: false,
+                });
+            }
+            bus.emit(Event::JobDone { job });
+        };
+        std::thread::scope(|s| {
+            let emit_job = &emit_job;
+            for job in 1..=njobs as u64 {
+                s.spawn(move || emit_job(job));
+            }
+        });
+        let seen = rec.0.lock().unwrap();
+        assert_eq!(seen.len(), njobs * (2 * ntasks + 2));
+        assert!(
+            seen.windows(2).all(|w| w[0].seq < w[1].seq),
+            "sequence numbers observed strictly increasing"
+        );
+        for job in 1..=njobs as u64 {
+            let mine: Vec<&Event> = seen
+                .iter()
+                .filter(|s| s.event.job() == Some(job))
+                .map(|s| &s.event)
+                .collect();
+            assert!(
+                matches!(mine.first(), Some(Event::JobSubmitted { .. })),
+                "job {job} starts with its submission"
+            );
+            assert!(
+                matches!(mine.last(), Some(Event::JobDone { .. })),
+                "job {job} ends with its completion"
+            );
+            for (k, pair) in mine[1..mine.len() - 1].chunks(2).enumerate() {
+                let t = k + 1;
+                assert!(
+                    matches!(pair[0],
+                        Event::TaskAssigned { task_id, .. } if *task_id == t),
+                    "job {job}: transition {k} out of order"
+                );
+                assert!(
+                    matches!(pair[1],
+                        Event::TaskDone { task_id, .. } if *task_id == t),
+                    "job {job}: completion {k} out of order"
+                );
+            }
+        }
+    });
+}
+
 /// A torn tail — the fsync'd line a crash cut mid-write — is tolerated
 /// exactly when nothing valid follows it; garbage *between* valid
 /// records is `Error::Format`, and nothing ever panics.

@@ -634,6 +634,16 @@ fn sigkilled_coordinator_resumes_via_the_binary() {
     );
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("resumed"), "got: {text}");
+    // The recovery summary (metrics::report::recovery_summary) must be
+    // surfaced on resume stdout, not just computed: its header row names
+    // the replayed/re-run split the operator acts on.
+    for col in ["replayed", "re-run", "retries", "dead-lettered"] {
+        assert!(
+            text.contains(col),
+            "resume stdout must print the recovery summary \
+             (missing '{col}'): {text}"
+        );
+    }
     assert_eq!(
         fs::read(fx.root.join("out-crash/merged.txt")).unwrap(),
         ref_bytes,

@@ -1,0 +1,470 @@
+//! Telemetry acceptance suite (DESIGN.md §9).
+//!
+//! The bar: the live surfaces must agree with the ground truth the
+//! engine reports.  `status.json` totals equal the final `JobReport`
+//! on the local *and* remote engines; the remote coordinator's
+//! `--metrics-listen` endpoint exposes task counters with per-worker
+//! labels that sum to the same totals; and after a real SIGKILL,
+//! `llmapreduce status` folds the journal to exactly the done/pending
+//! split a subsequent `resume` acts on.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use llmapreduce::error::Result;
+use llmapreduce::mapreduce::{run, Apps};
+use llmapreduce::options::Options;
+use llmapreduce::prelude::{
+    run_worker, CoordinatorConfig, LocalEngine, RemoteCoordinator,
+    WorkerConfig,
+};
+use llmapreduce::scheduler::journal::JOURNAL_FILE;
+use llmapreduce::telemetry::{fetch, fold_workdir, STATUS_FILE};
+use llmapreduce::util::json::Json;
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("llmr-telemetry-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Deterministic corpus: overlapping word multisets across files.
+fn write_corpus(input: &Path, nfiles: usize) {
+    fs::create_dir_all(input).unwrap();
+    let vocab = ["alpha", "beta", "gamma", "delta", "epsilon"];
+    for i in 0..nfiles {
+        let mut text = String::new();
+        for (w, word) in vocab.iter().enumerate() {
+            for _ in 0..(i + w) % 4 + 1 {
+                text.push_str(word);
+                text.push(' ');
+            }
+        }
+        fs::write(input.join(format!("doc{i:02}.txt")), text).unwrap();
+    }
+}
+
+fn wc_opts(input: &Path, output: PathBuf, pid: u32) -> Options {
+    Options::new(input, output, "wordcount")
+        .np(4)
+        .reducer("wordcount-reducer")
+        .pid(pid)
+}
+
+fn wc_apps() -> Apps {
+    Apps {
+        mapper: llmapreduce::apps::registry::resolve_mapper("wordcount")
+            .unwrap(),
+        reducer: Some(
+            llmapreduce::apps::registry::resolve_reducer(
+                "wordcount-reducer",
+            )
+            .unwrap(),
+        ),
+    }
+}
+
+fn num(j: Option<&Json>) -> usize {
+    j.and_then(Json::as_usize).unwrap_or(usize::MAX)
+}
+
+// ---------------------------------------------------------------------------
+// status.json totals == final JobReport (local engine)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn local_status_json_totals_match_the_job_report() {
+    let root = tmp("local");
+    let input = root.join("input");
+    write_corpus(&input, 10);
+
+    let eng = LocalEngine::new(2);
+    let report = run(
+        &wc_opts(&input, root.join("out"), 95001)
+            .keep(true)
+            .workdir(&root),
+        &wc_apps(),
+        &eng,
+    )
+    .unwrap();
+    let map_tasks = report.map.tasks.len();
+    assert_eq!(map_tasks, 4);
+
+    // The invocation drop flushed a final snapshot before `run`
+    // returned, so status.json is the completed picture.
+    let wd = root.join(".MAPRED.95001");
+    let status =
+        Json::parse(&fs::read_to_string(wd.join(STATUS_FILE)).unwrap())
+            .unwrap();
+    assert_eq!(num(status.get("v")), 1);
+
+    // Totals aggregate the map job and the reduce job (one task).
+    let totals = status.get("totals").expect("totals");
+    let all_tasks = map_tasks + 1;
+    assert_eq!(num(totals.get("submitted")), all_tasks);
+    assert_eq!(num(totals.get("done")), all_tasks);
+    assert_eq!(num(totals.get("running")), 0);
+    assert_eq!(num(totals.get("errors")), report.map.dead_lettered());
+    assert_eq!(num(totals.get("failed_jobs")), 0);
+    let retries: usize = report.map.tasks.iter().map(|t| t.retries).sum();
+    assert_eq!(num(totals.get("retries")), retries);
+
+    // Per-job rows carry the same counts and terminal states.
+    let jobs = status.get("jobs").and_then(Json::as_obj).unwrap();
+    assert_eq!(jobs.len(), 2, "map + reduce jobs");
+    for j in jobs.values() {
+        assert_eq!(
+            j.get("state").and_then(Json::as_str),
+            Some("done"),
+            "every job completed: {j:?}"
+        );
+        assert_eq!(num(j.get("done")), num(j.get("ntasks")));
+        assert_eq!(num(j.get("running")), 0);
+    }
+    let map_job = jobs
+        .values()
+        .find(|j| j.get("name").and_then(Json::as_str) == Some("wordcount"))
+        .expect("map job present");
+    assert_eq!(num(map_job.get("ntasks")), map_tasks);
+
+    // Each completion recorded one observation per latency phase.
+    let latency = status.get("latency").expect("latency");
+    for phase in ["dispatch", "startup", "compute"] {
+        let h = latency.get(phase).expect(phase);
+        assert_eq!(num(h.get("count")), all_tasks, "{phase} count");
+    }
+
+    // The offline fold prefers the journal and reports the same
+    // done/pending split; both renderers accept either shape.
+    let fold = fold_workdir(&wd).unwrap();
+    assert_eq!(fold.get("source").and_then(Json::as_str), Some("journal"));
+    let map = fold.get("map").expect("map summary");
+    assert_eq!(num(map.get("done")), map_tasks);
+    assert_eq!(num(map.get("pending")), 0);
+    let rendered = llmapreduce::telemetry::render_status(&fold);
+    assert!(rendered.contains("wordcount"), "got: {rendered}");
+    assert!(
+        !llmapreduce::telemetry::render_top(&status).is_empty(),
+        "live snapshot renders as a top frame"
+    );
+}
+
+#[test]
+fn telemetry_off_writes_no_status_file() {
+    let root = tmp("off");
+    let input = root.join("input");
+    write_corpus(&input, 6);
+    let eng = LocalEngine::new(2);
+    run(
+        &wc_opts(&input, root.join("out"), 95002)
+            .telemetry(false)
+            .keep(true)
+            .workdir(&root),
+        &wc_apps(),
+        &eng,
+    )
+    .unwrap();
+    let wd = root.join(".MAPRED.95002");
+    assert!(wd.join(JOURNAL_FILE).is_file(), "journal unaffected");
+    assert!(
+        !wd.join(STATUS_FILE).exists(),
+        "--telemetry=false must not write status.json"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Remote engine: /metrics + /status agree with the JobReport
+// ---------------------------------------------------------------------------
+
+fn spawn_workers(
+    coordinator: &RemoteCoordinator,
+    n: usize,
+) -> Vec<JoinHandle<Result<()>>> {
+    let addr = coordinator.local_addr().to_string();
+    (0..n)
+        .map(|i| {
+            let config = WorkerConfig::new(addr.clone())
+                .name(format!("w{i}"))
+                .slots(1);
+            std::thread::spawn(move || run_worker(config))
+        })
+        .collect()
+}
+
+/// Sum every series of a counter family in a Prometheus exposition,
+/// returning the per-line label blocks seen along the way.
+fn prometheus_counter(text: &str, family: &str) -> (usize, Vec<String>) {
+    let mut total = 0usize;
+    let mut labels = Vec::new();
+    for line in text.lines() {
+        let Some(rest) = line.strip_prefix(family) else {
+            continue;
+        };
+        let Some((block, value)) = rest.rsplit_once(' ') else {
+            continue;
+        };
+        // Skip longer family names sharing the prefix (e.g. _bucket).
+        if !block.is_empty() && !block.starts_with('{') {
+            continue;
+        }
+        total += value.parse::<usize>().unwrap_or(0);
+        labels.push(block.to_string());
+    }
+    (total, labels)
+}
+
+#[test]
+fn remote_metrics_endpoint_matches_the_job_report() {
+    let root = tmp("remote");
+    let input = root.join("input");
+    write_corpus(&input, 10);
+
+    let coordinator = RemoteCoordinator::bind(
+        "127.0.0.1:0",
+        CoordinatorConfig {
+            metrics_listen: Some("127.0.0.1:0".to_string()),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let metrics_addr = coordinator
+        .metrics_addr()
+        .expect("metrics listener bound")
+        .to_string();
+    let workers = spawn_workers(&coordinator, 2);
+    coordinator
+        .wait_for_workers(2, Duration::from_secs(10))
+        .unwrap();
+
+    let report = run(
+        &wc_opts(&input, root.join("out"), 95003)
+            .keep(true)
+            .workdir(&root),
+        &wc_apps(),
+        &coordinator,
+    )
+    .unwrap();
+    let map_tasks = report.map.tasks.len();
+    let all_tasks = map_tasks + 1;
+
+    // Prometheus text: completed-task counters carry per-worker labels
+    // and sum to the report's task count.
+    let text = fetch(&metrics_addr, "/metrics").unwrap();
+    assert!(text.contains("# TYPE llmr_tasks_done_total counter"));
+    let (done, label_blocks) =
+        prometheus_counter(&text, "llmr_tasks_done_total");
+    assert_eq!(done, all_tasks, "exposition:\n{text}");
+    let attributed: Vec<&String> = label_blocks
+        .iter()
+        .filter(|b| b.contains("worker=\"w0\"") || b.contains("worker=\"w1\""))
+        .collect();
+    assert!(
+        !attributed.is_empty(),
+        "done counters must be worker-labelled: {label_blocks:?}"
+    );
+    for t in &report.map.tasks {
+        let w = t.worker.as_deref().expect("remote tasks attributed");
+        assert!(
+            label_blocks.iter().any(|b| b.contains(&format!(
+                "worker=\"{w}\""
+            ))),
+            "worker {w} missing from exposition"
+        );
+    }
+    let (submitted, _) =
+        prometheus_counter(&text, "llmr_tasks_submitted_total");
+    assert_eq!(submitted, all_tasks);
+    assert!(
+        text.contains("# TYPE llmr_task_compute_seconds histogram"),
+        "latency histograms exposed"
+    );
+    assert!(text.contains("llmr_worker_slots{worker=\"w0\"}"));
+
+    // JSON snapshot: same totals, per-worker attribution sums to the
+    // task count, every registered worker present.
+    let status =
+        Json::parse(&fetch(&metrics_addr, "/status").unwrap()).unwrap();
+    let totals = status.get("totals").expect("totals");
+    assert_eq!(num(totals.get("done")), all_tasks);
+    assert_eq!(num(totals.get("running")), 0);
+    let snap_workers = status.get("workers").and_then(Json::as_obj).unwrap();
+    assert_eq!(snap_workers.len(), 2, "both workers in the snapshot");
+    let attributed: usize =
+        snap_workers.values().map(|w| num(w.get("done"))).sum();
+    assert_eq!(attributed, all_tasks, "every task attributed to a worker");
+
+    // status.json in the workdir folds the *same* event stream.
+    let wd = root.join(".MAPRED.95003");
+    let file =
+        Json::parse(&fs::read_to_string(wd.join(STATUS_FILE)).unwrap())
+            .unwrap();
+    assert_eq!(
+        num(file.get("totals").and_then(|t| t.get("done"))),
+        all_tasks
+    );
+
+    drop(coordinator);
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SIGKILL + offline `status`: the fold a later `resume` acts on
+// ---------------------------------------------------------------------------
+
+const BIN: &str = env!("CARGO_BIN_EXE_llmapreduce");
+
+fn wait_for_workdir(base: &Path, limit: Duration) -> PathBuf {
+    let start = Instant::now();
+    loop {
+        if let Ok(entries) = fs::read_dir(base) {
+            for e in entries.flatten() {
+                let name = e.file_name().to_string_lossy().to_string();
+                if name.starts_with(".MAPRED.") {
+                    return e.path();
+                }
+            }
+        }
+        assert!(
+            start.elapsed() < limit,
+            "no .MAPRED.* workdir appeared under {}",
+            base.display()
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn wait_for_first_done(wd: &Path, limit: Duration) {
+    let start = Instant::now();
+    let path = wd.join(JOURNAL_FILE);
+    loop {
+        if let Ok(text) = fs::read_to_string(&path) {
+            if text.contains("\"rec\":\"done\"") {
+                return;
+            }
+        }
+        assert!(
+            start.elapsed() < limit,
+            "no task completed within {limit:?} ({})",
+            path.display()
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn sigkilled_run_status_fold_matches_what_resume_replays() {
+    let root = tmp("sigkill");
+    let input = root.join("input");
+    write_corpus(&input, 8);
+    let slow = root.join("slow-map.sh");
+    fs::write(
+        &slow,
+        "#!/bin/sh\nsleep 0.3\ntr 'a-z' 'A-Z' < \"$1\" > \"$2\"\n",
+    )
+    .unwrap();
+    let mapper = format!("sh {}", slow.display());
+
+    let crash_base = root.join("crash");
+    fs::create_dir_all(&crash_base).unwrap();
+    let mut child = Command::new(BIN)
+        .current_dir(&root)
+        .arg("run")
+        .args([
+            format!("--input={}", input.display()),
+            format!("--output={}", root.join("out").display()),
+            format!("--mapper={mapper}"),
+            "--np=8".to_string(),
+            "--keep=true".to_string(),
+            format!("--workdir={}", crash_base.display()),
+            "--slots=2".to_string(),
+        ])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    let wd = wait_for_workdir(&crash_base, Duration::from_secs(60));
+    wait_for_first_done(&wd, Duration::from_secs(60));
+    child.kill().unwrap(); // SIGKILL: no final status flush, no cleanup
+    let _ = child.wait();
+
+    // `status --json`: the journal fold is authoritative even though
+    // the SIGKILL may have left status.json a batch behind (or absent).
+    let out = Command::new(BIN)
+        .args([
+            "status".to_string(),
+            wd.display().to_string(),
+            "--json".to_string(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "status failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let fold =
+        Json::parse(&String::from_utf8_lossy(&out.stdout)).unwrap();
+    assert_eq!(fold.get("source").and_then(Json::as_str), Some("journal"));
+    let map = fold.get("map").expect("map summary");
+    let done = num(map.get("done"));
+    let pending = num(map.get("pending"));
+    assert_eq!(num(map.get("ntasks")), 8);
+    assert_eq!(done + pending, 8);
+    assert!(done >= 1, "killed after the first completion");
+    assert!(pending >= 1, "killed mid-job");
+
+    // The human rendering reports the same split.
+    let out = Command::new(BIN)
+        .args(["status".to_string(), wd.display().to_string()])
+        .output()
+        .unwrap();
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        text.contains(&format!("{done}/8 done")) &&
+            text.contains(&format!("{pending} pending re-run")),
+        "got: {text}"
+    );
+
+    // One `top` frame folds the same workdir offline.
+    let out = Command::new(BIN)
+        .args([
+            "top".to_string(),
+            wd.display().to_string(),
+            "--frames=1".to_string(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let frame = String::from_utf8_lossy(&out.stdout);
+    assert!(frame.contains("queue "), "got: {frame}");
+
+    // `resume` must act on exactly the counts `status` reported.
+    let out = Command::new(BIN)
+        .current_dir(&root)
+        .args([
+            "resume".to_string(),
+            wd.display().to_string(),
+            "--slots=4".to_string(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "resume failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        text.contains(&format!(
+            "{done} task(s) already complete (skipped), {pending} re-run"
+        )),
+        "status said {done} done/{pending} pending, resume said: {text}"
+    );
+}
