@@ -18,8 +18,9 @@ use llmapreduce::mapreduce::distribution::distribute;
 use llmapreduce::options::{Distribution, Options, SchedulerKind};
 use llmapreduce::prelude::*;
 use llmapreduce::scheduler::dialect::dialect_for;
-use llmapreduce::scheduler::journal::{Journal, Record};
-use llmapreduce::scheduler::{JobSpec, TaskSpec, TaskWork};
+use llmapreduce::scheduler::journal::{Journal, Record, Replay};
+use llmapreduce::scheduler::{JobSpec, TaskSpec, TaskTiming, TaskWork};
+use llmapreduce::telemetry::{chrome_trace, Trace};
 use llmapreduce::util::json::Json;
 use llmapreduce::workdir::scan::InputFile;
 use llmapreduce::workload::text::generate_corpus;
@@ -152,6 +153,7 @@ fn main() {
         task_id: 1,
         retries: 0,
         dead_lettered: false,
+        timing: None,
     };
     let fsynced = Journal::create(jdir.join("fsync.jsonl")).unwrap();
     let s = bench_fn("journal/record-fsync", 10, 200, || {
@@ -230,6 +232,67 @@ fn main() {
                 .pid(86001)
                 .journal(false)
                 .telemetry(telemetry_on)
+                .workdir(&jdir);
+            std::hint::black_box(run(&opts, &apps, &engine).unwrap());
+        });
+        print(&s, 6, "files");
+        all.push(s);
+    }
+
+    // Tracing: assemble a 256-task trace from a journal replay, then
+    // export it as Chrome trace-event text — the whole offline cost of
+    // `llmapreduce trace` minus the file I/O (DESIGN.md §12).
+    let mut replay = Replay::default();
+    replay.apply(Record::JobSubmitted {
+        job: 1,
+        name: "bench".into(),
+        ntasks: 256,
+        task_ids: (1..=256).collect(),
+    });
+    for i in 0..256usize {
+        replay.apply(Record::TaskDone {
+            job: 1,
+            idx: i,
+            task_id: i + 1,
+            retries: 0,
+            dead_lettered: false,
+            timing: Some(TaskTiming {
+                started_us: (i as u64 % 8) * 10_000,
+                finished_us: (i as u64 % 8) * 10_000 + 120_000,
+                dispatch_us: 300,
+                startup_us: 30_000,
+                compute_us: 85_000,
+                shipped_us: 4_000,
+                ship_out_us: Some(1_800),
+                items: 1,
+                worker: Some(format!("w{}", i % 4)),
+            }),
+        });
+    }
+    let s = bench_fn("trace/assemble-256-tasks", 5, 500, || {
+        std::hint::black_box(Trace::from_replay(&replay));
+    });
+    print(&s, 256, "tasks");
+    all.push(s);
+    let trace = Trace::from_replay(&replay);
+    let s = bench_fn("trace/chrome-export-256-tasks", 5, 200, || {
+        std::hint::black_box(chrome_trace(&trace).to_string_compact());
+    });
+    print(&s, 256, "tasks");
+    all.push(s);
+
+    // Whole-pipeline tracing overhead: journal on in both (the spans
+    // ride its done records), telemetry off so the bus does not mask
+    // the delta — trace on vs off is the span-persistence tax.
+    for (name, trace_on) in
+        [("pipeline/trace-on", true), ("pipeline/trace-off", false)]
+    {
+        let s = bench_fn(name, 1, 5, || {
+            let opts = Options::new(&input, jdir.join("out"), "wordcount")
+                .np(2)
+                .pid(86002)
+                .telemetry(false)
+                .trace(trace_on)
                 .workdir(&jdir);
             std::hint::black_box(run(&opts, &apps, &engine).unwrap());
         });

@@ -802,8 +802,9 @@ mod tests {
             // The crash-safety and observability taxes are tracked:
             // fsync'd journal appends, the journal-on/off pipeline
             // pair, the telemetry hot paths (histogram record, bus
-            // fanout) and the telemetry-on/off pipeline pair must all
-            // be present.
+            // fanout), the telemetry-on/off pipeline pair, and the
+            // tracing costs (trace assembly, Chrome export, the
+            // trace-on/off pipeline pair) must all be present.
             for needed in [
                 "journal/record-fsync",
                 "journal/record-no-fsync",
@@ -813,6 +814,10 @@ mod tests {
                 "telemetry/event-fanout",
                 "pipeline/telemetry-on",
                 "pipeline/telemetry-off",
+                "trace/assemble-256-tasks",
+                "trace/chrome-export-256-tasks",
+                "pipeline/trace-on",
+                "pipeline/trace-off",
             ] {
                 assert!(
                     points.iter().any(|p| p

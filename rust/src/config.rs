@@ -35,6 +35,7 @@
 //! [telemetry]                 # observability (DESIGN.md §9)
 //! enabled = true              # event bus + status.json per invocation
 //! metrics_listen = "127.0.0.1:9900"   # /metrics + /status endpoint
+//! trace = true                # per-task span timings (DESIGN.md §12)
 //! ```
 
 use std::path::{Path, PathBuf};
@@ -118,6 +119,10 @@ pub struct TelemetryDefaults {
     /// `[telemetry] metrics_listen`: bind a `/metrics` + `/status`
     /// endpoint on the remote coordinator (`--metrics-listen`).
     pub metrics_listen: Option<String>,
+    /// `[telemetry] trace`: per-task span timings on journal done
+    /// records (DESIGN.md §12).  Tracing defaults on; a config `false`
+    /// switches it off for runs that do not pass `--trace` explicitly.
+    pub trace: Option<bool>,
 }
 
 /// Optional defaults for the Fig 2 surface.
@@ -305,6 +310,9 @@ impl Config {
                     .to_string(),
             );
         }
+        if let Some(v) = doc.get("telemetry.trace") {
+            config.telemetry.trace = v.as_bool();
+        }
         if let Some(v) = doc.get("job.options") {
             j.scheduler_options = v
                 .as_str_array()
@@ -396,6 +404,17 @@ impl Config {
                 self.telemetry.metrics_listen = Some(v);
             }
         }
+        if let Some(v) = get("LLMR_TRACE") {
+            match v.to_ascii_lowercase().as_str() {
+                "1" | "true" | "yes" => {
+                    self.telemetry.trace = Some(true);
+                }
+                "0" | "false" | "no" => {
+                    self.telemetry.trace = Some(false);
+                }
+                _ => {}
+            }
+        }
     }
 
     /// Fill unset fields of `opts` from the job defaults (CLI wins).
@@ -460,6 +479,10 @@ impl Config {
         // default (same precedence quirk as apptype above).
         if let Some(t) = self.telemetry.enabled {
             opts.telemetry = opts.telemetry && t;
+        }
+        // Same rule for span tracing.
+        if let Some(t) = self.telemetry.trace {
+            opts.trace = opts.trace && t;
         }
     }
 
@@ -720,6 +743,33 @@ options = ["-l mem=8G"]
         assert!(
             Config::parse("[telemetry]\nmetrics_listen = 9\n").is_err()
         );
+    }
+
+    #[test]
+    fn trace_knob_config_env_and_precedence() {
+        let c = Config::parse("[telemetry]\ntrace = false\n").unwrap();
+        assert_eq!(c.telemetry.trace, Some(false));
+
+        // A config `false` switches the default-on flag off.
+        let mut opts = Options::new("/in", "/out", "m");
+        c.apply_job_defaults(&mut opts);
+        assert!(!opts.trace);
+        assert!(opts.telemetry, "trace knob leaves telemetry alone");
+
+        // Absent key leaves the default-on flag untouched.
+        let d = Config::parse("").unwrap();
+        assert_eq!(d.telemetry.trace, None);
+        let mut opts = Options::new("/in", "/out", "m");
+        d.apply_job_defaults(&mut opts);
+        assert!(opts.trace);
+
+        // Env overrides the config file.
+        let mut e = c.clone();
+        e.apply_env_overrides(|k| match k {
+            "LLMR_TRACE" => Some("yes".into()),
+            _ => None,
+        });
+        assert_eq!(e.telemetry.trace, Some(true));
     }
 
     #[test]

@@ -54,6 +54,12 @@ USAGE:
                                          live periodic view: queue depth,
                                          per-job and per-worker counts,
                                          p50/p95/p99 task latency
+  llmapreduce trace <.MAPRED.PID dir> [--out=FILE] [--format=chrome|json]
+                                         per-task span timelines from the
+                                         journal: critical-path report on
+                                         stdout + a Chrome trace-event file
+                                         (default <dir>/trace.json; open in
+                                         Perfetto or chrome://tracing)
   llmapreduce worker --connect=H:P       join a remote coordinator
   llmapreduce gen-data <kind> [opts]     generate synthetic workloads
   llmapreduce bench <experiment>         regenerate a paper table/figure
@@ -87,6 +93,9 @@ RUN OPTIONS (Fig 2 of the paper):
           0.0..=1.0, default 1.0 = never)
         --telemetry[=BOOL] (event bus + status.json in the workdir;
           default on — pass --telemetry=false to switch it off)
+        --trace[=BOOL] (persist per-task span timings on the journal's
+          done records for `llmapreduce trace`; default on — pass
+          --trace=false to shrink journal records)
         --metrics-listen=HOST:PORT (remote engine only: serve
           Prometheus text at /metrics and a JSON snapshot at /status
           while the coordinator runs; scrape live or point
@@ -132,6 +141,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("dlq") => cmd_dlq(&args[1..]),
         Some("status") => cmd_status(&args[1..]),
         Some("top") => cmd_top(&args[1..]),
+        Some("trace") => cmd_trace(&args[1..]),
         Some("worker") => cmd_worker(&args[1..]),
         Some("gen-data") => cmd_gen_data(&args[1..]),
         Some("bench") => cmd_bench(&args[1..]),
@@ -487,6 +497,66 @@ fn cmd_top(args: &[String]) -> Result<()> {
         }
         std::thread::sleep(interval);
     }
+    Ok(())
+}
+
+/// `llmapreduce trace <workdir>`: assemble per-task span timelines
+/// from the journal (works after SIGKILL, like `status`), print the
+/// critical-path report, and export a Chrome trace-event file.
+fn cmd_trace(args: &[String]) -> Result<()> {
+    let mut workdir = None;
+    let mut out: Option<PathBuf> = None;
+    let mut format = String::from("chrome");
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(v) = a.strip_prefix("--out=") {
+            out = Some(PathBuf::from(v));
+        } else if a == "--out" {
+            let v = it.next().ok_or_else(|| {
+                Error::opt("--out needs a file path")
+            })?;
+            out = Some(PathBuf::from(v));
+        } else if let Some(v) = a.strip_prefix("--format=") {
+            format = v.to_string();
+        } else if a == "--format" {
+            let v = it.next().ok_or_else(|| {
+                Error::opt("--format needs chrome or json")
+            })?;
+            format = v.clone();
+        } else if !a.starts_with("--") && workdir.is_none() {
+            workdir = Some(PathBuf::from(a));
+        } else {
+            return Err(Error::opt(format!(
+                "unexpected trace argument '{a}'"
+            )));
+        }
+    }
+    let workdir = workdir.ok_or_else(|| {
+        Error::opt("trace needs a .MAPRED.<pid> directory")
+    })?;
+    let trace = llmapreduce::telemetry::trace_workdir(&workdir)?;
+    let doc = match format.as_str() {
+        "chrome" => llmapreduce::telemetry::chrome_trace(&trace),
+        "json" => llmapreduce::telemetry::trace_json(&trace),
+        other => {
+            return Err(Error::opt(format!(
+                "unknown trace format '{other}' (chrome or json)"
+            )))
+        }
+    };
+    let out = out.unwrap_or_else(|| workdir.join("trace.json"));
+    std::fs::write(&out, doc.to_string_compact())
+        .map_err(|e| Error::io(out.clone(), e))?;
+    print!("{}", llmapreduce::telemetry::render_trace_report(&trace));
+    println!(
+        "\nwrote {} ({format} format{})",
+        out.display(),
+        if format == "chrome" {
+            " — open in Perfetto or chrome://tracing"
+        } else {
+            ""
+        }
+    );
     Ok(())
 }
 

@@ -210,7 +210,8 @@ impl<'e> Session<'e> {
             .collect();
         let mut map_spec = JobSpec::new(apps.mapper.name(), map_tasks)
             .exclusive(opts.exclusive)
-            .error_policy(opts.effective_error_policy());
+            .error_policy(opts.effective_error_policy())
+            .trace(opts.trace);
         if let Some(j) = &journal {
             map_spec = map_spec.journal(j.clone());
         }
@@ -259,7 +260,8 @@ impl<'e> Session<'e> {
                             out_file: redout.clone(),
                         },
                     }],
-                );
+                )
+                .trace(opts.trace);
                 let spec = match &journal {
                     Some(j) => spec.journal(j.clone()),
                     None => spec,
@@ -297,7 +299,8 @@ impl<'e> Session<'e> {
                     format!("{}.partial", reducer.name()),
                     partial_tasks,
                 )
-                .after_tasks(map_id, the_plan.overlap_edges());
+                .after_tasks(map_id, the_plan.overlap_edges())
+                .trace(opts.trace);
                 if let Some(j) = &journal {
                     partial_spec = partial_spec.journal(j.clone());
                 }

@@ -206,6 +206,12 @@ pub struct Options {
     /// default; `--telemetry=false` opts out, like `--journal` in the
     /// builder API).  See [`crate::telemetry`].
     pub telemetry: bool,
+    /// `--trace`: persist per-task span timings on the journal's done
+    /// records so `llmapreduce trace <workdir>` can rebuild the job
+    /// timeline offline (on by default; `--trace=false` trims the
+    /// journal back to the pre-trace shape).  No effect when the
+    /// journal is off.  See [`crate::telemetry::trace`].
+    pub trace: bool,
 }
 
 impl Default for Options {
@@ -236,6 +242,7 @@ impl Default for Options {
             failure_threshold: None,
             journal: true,
             telemetry: true,
+            trace: true,
         }
     }
 }
@@ -346,6 +353,10 @@ impl Options {
         self.telemetry = on;
         self
     }
+    pub fn trace(mut self, on: bool) -> Self {
+        self.trace = on;
+        self
+    }
 
     /// Parse from a command-line style argument vector (everything after
     /// the program name).  Accepts `--key=value` and `--key value`.
@@ -429,6 +440,21 @@ impl Options {
                 // harmless), `--telemetry=BOOL`, `--telemetry BOOL`.
                 "--telemetry" => {
                     opts.telemetry = match inline_val.clone() {
+                        Some(v) => parse_bool(&key, &v)?,
+                        None => match argv.get(i + 1).map(|s| s.as_str()) {
+                            Some(
+                                "true" | "false" | "1" | "0" | "yes" | "no",
+                            ) => {
+                                i += 1;
+                                parse_bool(&key, &argv[i])?
+                            }
+                            _ => true,
+                        },
+                    }
+                }
+                // `--trace` takes the same three forms as `--telemetry`.
+                "--trace" => {
+                    opts.trace = match inline_val.clone() {
                         Some(v) => parse_bool(&key, &v)?,
                         None => match argv.get(i + 1).map(|s| s.as_str()) {
                             Some(
@@ -596,6 +622,7 @@ impl Options {
             ),
             ("journal", self.journal.into()),
             ("telemetry", self.telemetry.into()),
+            ("trace", self.trace.into()),
         ])
     }
 
@@ -669,6 +696,7 @@ impl Options {
                 .and_then(Json::as_f64),
             journal: b("journal", true),
             telemetry: b("telemetry", true),
+            trace: b("trace", true),
         };
         opts.validate()?;
         Ok(opts)
@@ -1118,6 +1146,59 @@ mod tests {
         doc.remove("telemetry");
         let back = Options::from_json(&Json::Obj(doc)).unwrap();
         assert!(back.telemetry, "missing key means default-on");
+    }
+
+    #[test]
+    fn trace_flag_parses_and_defaults_on() {
+        let o = Options::parse_args(base()).unwrap();
+        assert!(o.trace, "tracing is on by default");
+
+        // Opt-out: = form and space form.
+        let mut args = base();
+        args.push("--trace=false");
+        assert!(!Options::parse_args(args).unwrap().trace);
+        let o = Options::parse_args([
+            "--input=in",
+            "--output=out",
+            "--mapper=m",
+            "--trace",
+            "false",
+        ])
+        .unwrap();
+        assert!(!o.trace);
+
+        // Bare --trace followed by another flag must not eat it.
+        let o = Options::parse_args([
+            "--input=in", "--output=out", "--trace", "--mapper=m",
+        ])
+        .unwrap();
+        assert!(o.trace);
+        assert_eq!(o.mapper, "m");
+
+        let mut args = base();
+        args.push("--trace=sideways");
+        assert!(Options::parse_args(args).is_err());
+
+        assert!(!Options::new("i", "o", "m").trace(false).trace);
+    }
+
+    #[test]
+    fn trace_survives_the_json_roundtrip() {
+        let o = Options::new("in", "out", "m").trace(false);
+        let text = o.to_json().to_string_compact();
+        let back =
+            Options::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert!(!back.trace, "explicit opt-out round-trips");
+
+        // Journals from builds without the key fall back to the default.
+        let old = Options::new("in", "out", "m").to_json();
+        let mut doc = match old {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        doc.remove("trace");
+        let back = Options::from_json(&Json::Obj(doc)).unwrap();
+        assert!(back.trace, "missing key means default-on");
     }
 
     #[test]

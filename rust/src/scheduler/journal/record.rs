@@ -47,6 +47,10 @@ pub enum Record {
         task_id: usize,
         retries: usize,
         dead_lettered: bool,
+        /// Span decomposition for `llmapreduce trace`, nested as a
+        /// compact `"t"` object.  Absent under `--trace=false` and on
+        /// pre-PR-9 journals; replay tolerates both.
+        timing: Option<crate::scheduler::TaskTiming>,
     },
     /// A task attempt was consumed and the task re-queued.
     TaskRetry {
@@ -149,14 +153,36 @@ impl Record {
                 task_id,
                 retries,
                 dead_lettered,
-            } => obj(vec![
-                ("rec", "done".into()),
-                ("job", (*job as usize).into()),
-                ("idx", (*idx).into()),
-                ("task_id", (*task_id).into()),
-                ("retries", (*retries).into()),
-                ("dlq", (*dead_lettered).into()),
-            ]),
+                timing,
+            } => {
+                let mut pairs = vec![
+                    ("rec", "done".into()),
+                    ("job", (*job as usize).into()),
+                    ("idx", (*idx).into()),
+                    ("task_id", (*task_id).into()),
+                    ("retries", (*retries).into()),
+                    ("dlq", (*dead_lettered).into()),
+                ];
+                if let Some(t) = timing {
+                    let mut tf = vec![
+                        ("start", (t.started_us as usize).into()),
+                        ("finish", (t.finished_us as usize).into()),
+                        ("dispatch", (t.dispatch_us as usize).into()),
+                        ("startup", (t.startup_us as usize).into()),
+                        ("compute", (t.compute_us as usize).into()),
+                        ("shipped", (t.shipped_us as usize).into()),
+                        ("items", t.items.into()),
+                    ];
+                    if let Some(so) = t.ship_out_us {
+                        tf.push(("ship_out", (so as usize).into()));
+                    }
+                    if let Some(w) = &t.worker {
+                        tf.push(("worker", w.as_str().into()));
+                    }
+                    pairs.push(("t", obj(tf)));
+                }
+                obj(pairs)
+            }
             Record::TaskRetry {
                 job,
                 idx,
@@ -300,6 +326,37 @@ impl Record {
                     .get("dlq")
                     .and_then(Json::as_bool)
                     .unwrap_or(false),
+                // Optional span object; a malformed one is dropped
+                // rather than failing the record — replay must survive
+                // any journal that PR-8 replay survived.
+                timing: doc.get("t").map(|t| {
+                    let tu = |key: &str| -> u64 {
+                        t.get(key)
+                            .and_then(Json::as_usize)
+                            .unwrap_or_default()
+                            as u64
+                    };
+                    crate::scheduler::TaskTiming {
+                        started_us: tu("start"),
+                        finished_us: tu("finish"),
+                        dispatch_us: tu("dispatch"),
+                        startup_us: tu("startup"),
+                        compute_us: tu("compute"),
+                        shipped_us: tu("shipped"),
+                        ship_out_us: t
+                            .get("ship_out")
+                            .and_then(Json::as_usize)
+                            .map(|n| n as u64),
+                        items: t
+                            .get("items")
+                            .and_then(Json::as_usize)
+                            .unwrap_or_default(),
+                        worker: t
+                            .get("worker")
+                            .and_then(Json::as_str)
+                            .map(str::to_string),
+                    }
+                }),
             },
             "retry" => Record::TaskRetry {
                 job: u("job")? as u64,
@@ -487,6 +544,37 @@ mod tests {
             task_id: 1,
             retries: 2,
             dead_lettered: true,
+            timing: None,
+        });
+        roundtrip(Record::TaskDone {
+            job: 3,
+            idx: 1,
+            task_id: 2,
+            retries: 0,
+            dead_lettered: false,
+            timing: Some(crate::scheduler::TaskTiming {
+                started_us: 1000,
+                finished_us: 9000,
+                dispatch_us: 200,
+                startup_us: 700,
+                compute_us: 6500,
+                shipped_us: 600,
+                ship_out_us: Some(250),
+                items: 3,
+                worker: Some("w0".into()),
+            }),
+        });
+        roundtrip(Record::TaskDone {
+            job: 3,
+            idx: 2,
+            task_id: 3,
+            retries: 0,
+            dead_lettered: false,
+            timing: Some(crate::scheduler::TaskTiming {
+                started_us: 1000,
+                finished_us: 9000,
+                ..Default::default()
+            }),
         });
         roundtrip(Record::TaskRetry {
             job: 3,
@@ -510,6 +598,27 @@ mod tests {
             threshold: 0.25,
         });
         roundtrip(Record::Resumed { done: 2, total: 4 });
+    }
+
+    #[test]
+    fn pre_pr9_done_lines_decode_without_timing() {
+        // The exact shape PR-7/8 builds wrote: no "t" object.
+        let r = Record::decode(
+            r#"{"rec":"done","job":1,"idx":0,"task_id":1,"retries":0,"dlq":false}"#,
+            Path::new("/j"),
+        )
+        .unwrap();
+        assert_eq!(
+            r,
+            Record::TaskDone {
+                job: 1,
+                idx: 0,
+                task_id: 1,
+                retries: 0,
+                dead_lettered: false,
+                timing: None,
+            }
+        );
     }
 
     #[test]

@@ -47,6 +47,12 @@ pub struct ReplayedJob {
     pub failed: Option<String>,
     /// The breaker tripped on this job.
     pub breaker: bool,
+    /// Span timings off traced done records, keyed by task id with the
+    /// record's retry count alongside — what `llmapreduce trace`
+    /// rebuilds its offline timeline from.  Empty under `--trace=false`
+    /// and on pre-PR-9 journals.  Last record wins per task id (a
+    /// resume generation may re-complete a task).
+    pub timings: BTreeMap<usize, (usize, crate::scheduler::TaskTiming)>,
 }
 
 /// The invocation header, when the journal has one.
@@ -106,12 +112,17 @@ impl Replay {
                 job,
                 task_id,
                 dead_lettered,
+                retries,
+                timing,
                 ..
             } => {
                 let j = self.jobs.entry(job).or_default();
                 j.done.insert(task_id);
                 if dead_lettered {
                     j.dead_lettered.insert(task_id);
+                }
+                if let Some(t) = timing {
+                    j.timings.insert(task_id, (retries, t));
                 }
             }
             Record::TaskRetry { job, .. } => {
@@ -253,6 +264,12 @@ mod tests {
                 task_id: 1,
                 retries: 0,
                 dead_lettered: false,
+                timing: Some(crate::scheduler::TaskTiming {
+                    started_us: 100,
+                    finished_us: 5100,
+                    compute_us: 4000,
+                    ..Default::default()
+                }),
             },
             Record::TaskFailed {
                 job: 1,
@@ -266,6 +283,7 @@ mod tests {
                 task_id: 2,
                 retries: 0,
                 dead_lettered: true,
+                timing: None,
             },
             Record::TaskDone {
                 job: 1,
@@ -273,6 +291,7 @@ mod tests {
                 task_id: 3,
                 retries: 1,
                 dead_lettered: false,
+                timing: None,
             },
             Record::JobDone { job: 1 },
         ]
@@ -286,6 +305,9 @@ mod tests {
         let j = &r.jobs[&1];
         assert!(j.completed);
         assert_eq!(j.done.len(), 3);
+        // Timings fold only off traced done records.
+        assert_eq!(j.timings.len(), 1);
+        assert_eq!(j.timings[&1].1.finished_us, 5100);
         assert_eq!(
             r.dead_lettered_task_ids("wordcount"),
             [2].into_iter().collect()

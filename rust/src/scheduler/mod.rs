@@ -190,6 +190,11 @@ pub struct JobSpec {
     /// `None` runs silent; publishing to a bus nobody subscribed to
     /// costs one atomic load per transition.
     pub telemetry: Option<Arc<crate::telemetry::EventBus>>,
+    /// Record per-task span timings in the journal so `llmapreduce
+    /// trace` can rebuild the job's timeline offline (DESIGN.md §12).
+    /// On by default; `--trace=false` trims the journal back to the
+    /// PR-8 shape.  No effect when the job is unjournaled.
+    pub trace: bool,
 }
 
 impl std::fmt::Debug for JobSpec {
@@ -202,6 +207,7 @@ impl std::fmt::Debug for JobSpec {
             .field("exclusive", &self.exclusive)
             .field("journaled", &self.journal.is_some())
             .field("telemetry", &self.telemetry.is_some())
+            .field("trace", &self.trace)
             .field("error_policy", &self.error_policy)
             .finish()
     }
@@ -218,6 +224,7 @@ impl JobSpec {
             journal: None,
             error_policy: journal::ErrorPolicy::default(),
             telemetry: None,
+            trace: true,
         }
     }
 
@@ -262,6 +269,13 @@ impl JobSpec {
         self.telemetry = Some(bus);
         self
     }
+
+    /// Toggle per-task span timings in the journal (see
+    /// [`JobSpec::trace`]; on by default).
+    pub fn trace(mut self, on: bool) -> Self {
+        self.trace = on;
+        self
+    }
 }
 
 /// Timing decomposition for one finished task.
@@ -291,6 +305,12 @@ pub struct TaskReport {
     /// minus the worker-measured execution time (serialization, network,
     /// and worker-side queueing).  Zero on in-process engines.
     pub shipped: Duration,
+    /// Outbound slice of `shipped` — dispatch-send to worker-receive —
+    /// resolved via the worker's clock-offset estimate.  `None` when
+    /// the worker didn't stamp its completion frame (pre-PR-9 workers,
+    /// in-process engines); the tracing layer then splits `shipped`
+    /// symmetrically.
+    pub ship_out: Option<Duration>,
     /// Times the task was shipped to a worker that died (connection drop
     /// or heartbeat lapse) before completing it, forcing reassignment to
     /// a surviving worker.  Distinct from `retries` (injected failures).
@@ -307,6 +327,51 @@ impl TaskReport {
     /// of Fig 18 ("computational overhead cost ... per array task").
     pub fn overhead(&self) -> Duration {
         self.dispatch_wait + self.startup
+    }
+}
+
+/// Integer-µs span decomposition of one finished task, derived from its
+/// [`TaskReport`].  This is the persistent form: written to the journal
+/// (the `"t"` object on done records) and carried on
+/// [`crate::telemetry::Event::TaskDone`], so live event folds and
+/// offline journal replays feed [`crate::telemetry::trace`] identical
+/// numbers (DESIGN.md §12).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct TaskTiming {
+    /// Task start, µs after job submission.
+    pub started_us: u64,
+    /// Task end, µs after job submission.
+    pub finished_us: u64,
+    /// Eligibility→dispatch wait.
+    pub dispatch_us: u64,
+    /// Application start-up time.
+    pub startup_us: u64,
+    /// Per-item compute time.
+    pub compute_us: u64,
+    /// Wire-shipping overhead (remote engine; 0 in-process).
+    pub shipped_us: u64,
+    /// Outbound slice of `shipped_us`, when the worker stamped its
+    /// completion frame (see [`TaskReport::ship_out`]).
+    pub ship_out_us: Option<u64>,
+    /// Data items processed.
+    pub items: usize,
+    /// Worker daemon that ran the successful attempt, if remote.
+    pub worker: Option<String>,
+}
+
+impl TaskTiming {
+    pub fn from_report(r: &TaskReport) -> TaskTiming {
+        TaskTiming {
+            started_us: r.started_at.as_micros() as u64,
+            finished_us: r.finished_at.as_micros() as u64,
+            dispatch_us: r.dispatch_wait.as_micros() as u64,
+            startup_us: r.startup.as_micros() as u64,
+            compute_us: r.compute.as_micros() as u64,
+            shipped_us: r.shipped.as_micros() as u64,
+            ship_out_us: r.ship_out.map(|d| d.as_micros() as u64),
+            items: r.items,
+            worker: r.worker.clone(),
+        }
     }
 }
 

@@ -104,6 +104,14 @@ struct WorkerState {
     used: usize,
     last_seen: Instant,
     alive: bool,
+    /// NTP-style clock-offset estimate: add this to a worker-clock
+    /// stamp (µs since the worker's connection epoch) to land on the
+    /// coordinator's epoch timeline.  Refined from heartbeat RTTs with
+    /// a min-RTT filter (least queuing noise wins); `None` until the
+    /// first stamped beacon arrives (pre-PR-9 workers never stamp).
+    offset_us: Option<i64>,
+    /// Smallest heartbeat round-trip seen, the filter for `offset_us`.
+    min_rtt_us: u64,
 }
 
 struct Core {
@@ -115,6 +123,9 @@ struct Core {
     reassigns: HashMap<(JobId, usize), usize>,
     next_worker_id: u64,
     shutdown: bool,
+    /// Zero point of the coordinator's µs timeline; worker stamps are
+    /// aligned onto it via each worker's `offset_us`.
+    epoch: Instant,
     /// Engine-scoped telemetry bus ([`Engine::event_bus`]): jobs this
     /// coordinator runs publish their transitions here, plus worker
     /// lifecycle and queue-depth samples.  Free when nobody subscribed.
@@ -211,6 +222,7 @@ impl RemoteCoordinator {
                 reassigns: HashMap::new(),
                 next_worker_id: 1,
                 shutdown: false,
+                epoch: Instant::now(),
                 bus: bus.clone(),
                 last_depth: 0,
             }),
@@ -581,6 +593,8 @@ fn serve_worker(inner: &Arc<Inner>, stream: TcpStream) {
                 used: 0,
                 last_seen: Instant::now(),
                 alive: true,
+                offset_us: None,
+                min_rtt_us: u64::MAX,
             },
         );
         core.table.set_slots(core.alive_slots().max(1));
@@ -601,7 +615,50 @@ fn serve_worker(inner: &Arc<Inner>, stream: TcpStream) {
                     w.last_seen = Instant::now();
                 }
                 match msg {
-                    Message::Heartbeat { .. } => {
+                    Message::Heartbeat {
+                        sent_us, rtt_us, ..
+                    } => {
+                        if let Some(s) = sent_us {
+                            let now_us =
+                                core.epoch.elapsed().as_micros() as u64;
+                            if let Some(w) = core.workers.get_mut(&wid) {
+                                // NTP-style midpoint: the beacon left
+                                // the worker ~rtt/2 before we read it,
+                                // so its stamp maps to `now − rtt/2` on
+                                // our timeline.  Keep the estimate from
+                                // the smallest round trip seen — least
+                                // queuing noise (DESIGN.md §12).
+                                match rtt_us {
+                                    Some(rtt) if rtt <= w.min_rtt_us => {
+                                        w.min_rtt_us = rtt;
+                                        w.offset_us = Some(
+                                            now_us as i64
+                                                - (rtt / 2) as i64
+                                                - s as i64,
+                                        );
+                                    }
+                                    // First beacons carry no RTT (no
+                                    // ack echoed yet): seed with a
+                                    // zero-delay estimate so traces
+                                    // align even on short jobs.
+                                    None if w.offset_us.is_none() => {
+                                        w.offset_us =
+                                            Some(now_us as i64 - s as i64);
+                                    }
+                                    _ => {}
+                                }
+                                // Echo so the worker can measure the
+                                // round trip.  Gated on `sent_us`: an
+                                // unknown frame type breaks a pre-PR-9
+                                // worker's read loop, and stamping its
+                                // beacons is how a worker advertises it
+                                // understands acks.  A failed send is
+                                // ignored — the reader notices death.
+                                let _ = w.writer.send(
+                                    &Message::HeartbeatAck { echo_us: s },
+                                );
+                            }
+                        }
                         if core.bus.active() {
                             if let Some(w) = core.workers.get(&wid) {
                                 core.bus.emit(Event::WorkerHeartbeat {
@@ -752,6 +809,34 @@ fn on_complete(
     };
     let exec = outcome.startup() + outcome.compute();
     let roundtrip = now.saturating_duration_since(sent_at);
+    let shipped = roundtrip.saturating_sub(exec);
+    // Outbound wire time, resolvable only when the worker stamped its
+    // frame.  Preferred path: map the worker's `recv_us` onto our
+    // timeline via the heartbeat-derived clock offset and subtract the
+    // send instant.  Fallback (offset not yet estimated): split the
+    // total wire time symmetrically, like the offset estimator itself
+    // assumes.  Clamped into the shipped budget either way, so span
+    // tiling stays consistent under clock-estimate error.
+    let ship_out = outcome.recv_us.map(|recv| {
+        let offset =
+            core.workers.get(&wid).and_then(|w| w.offset_us);
+        let out_us = match offset {
+            Some(off) => {
+                let sent_at_us = sent_at
+                    .saturating_duration_since(core.epoch)
+                    .as_micros() as i64;
+                (recv as i64 + off - sent_at_us).max(0) as u64
+            }
+            None => {
+                let hold = outcome
+                    .exec_end_us
+                    .unwrap_or(recv)
+                    .saturating_sub(recv);
+                (roundtrip.as_micros() as u64).saturating_sub(hold) / 2
+            }
+        };
+        Duration::from_micros(out_us).min(shipped)
+    });
     let report = TaskReport {
         task_id,
         dispatch_wait,
@@ -768,7 +853,8 @@ fn on_complete(
                 .map(|w| w.name.clone())
                 .unwrap_or_else(|| format!("worker-{wid}")),
         ),
-        shipped: roundtrip.saturating_sub(exec),
+        shipped,
+        ship_out,
         reassigned: core.reassigns.remove(&(jid, idx)).unwrap_or(0),
         dead_lettered: false,
     };

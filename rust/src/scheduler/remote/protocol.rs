@@ -253,12 +253,29 @@ impl WireWork {
 
 /// Worker-measured execution outcome, mirrored from
 /// [`crate::scheduler::exec::ExecOutcome`] in integer microseconds.
+///
+/// The three `*_us` timestamps are worker-side monotonic readings
+/// relative to the worker's *connection epoch* (the instant it dialed
+/// the coordinator): when the assignment was read off the socket, when
+/// execution started, and when it finished.  They exist so the tracing
+/// layer can split the coordinator-observed round trip into ship-out /
+/// queue / execute / ship-back segments on one timeline (DESIGN.md
+/// §12).  They are optional on the wire — pre-PR-9 peers omit them and
+/// both sides still interoperate.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct WireOutcome {
     pub startup_us: u64,
     pub compute_us: u64,
     pub launches: usize,
     pub items: usize,
+    /// Worker clock (µs since its connection epoch) when the assign
+    /// frame was received.
+    pub recv_us: Option<u64>,
+    /// Worker clock when a slot picked the task up and began executing.
+    pub exec_start_us: Option<u64>,
+    /// Worker clock when execution finished, just before the complete
+    /// frame was written.
+    pub exec_end_us: Option<u64>,
 }
 
 impl WireOutcome {
@@ -283,8 +300,22 @@ pub enum Message {
     /// Coordinator → worker, the registration reply.
     Registered { worker_id: u64 },
     /// Worker → coordinator liveness beacon; a lapse triggers
-    /// reassignment of the worker's in-flight tasks.
-    Heartbeat { worker_id: u64 },
+    /// reassignment of the worker's in-flight tasks.  Newer workers
+    /// also stamp the beacon with their monotonic send time (µs since
+    /// connection epoch) and the round-trip they measured off the last
+    /// [`Message::HeartbeatAck`], which is what the coordinator's
+    /// clock-offset estimator consumes; both fields are absent from
+    /// pre-PR-9 beacons.
+    Heartbeat {
+        worker_id: u64,
+        sent_us: Option<u64>,
+        rtt_us: Option<u64>,
+    },
+    /// Coordinator → worker: echo of a heartbeat's `sent_us`, letting
+    /// the worker measure the round trip.  Sent *only* to workers whose
+    /// beacons carry `sent_us` — an unknown frame type breaks an old
+    /// worker's read loop, so the capability is advertised first.
+    HeartbeatAck { echo_us: u64 },
     /// Coordinator → worker: run this task.
     Assign {
         job: u64,
@@ -341,9 +372,26 @@ impl Message {
                 ("type", "registered".into()),
                 ("worker_id", (*worker_id as usize).into()),
             ]),
-            Message::Heartbeat { worker_id } => obj(vec![
-                ("type", "heartbeat".into()),
-                ("worker_id", (*worker_id as usize).into()),
+            Message::Heartbeat {
+                worker_id,
+                sent_us,
+                rtt_us,
+            } => {
+                let mut f = vec![
+                    ("type", "heartbeat".into()),
+                    ("worker_id", (*worker_id as usize).into()),
+                ];
+                if let Some(us) = sent_us {
+                    f.push(("sent_us", (*us as usize).into()));
+                }
+                if let Some(us) = rtt_us {
+                    f.push(("rtt_us", (*us as usize).into()));
+                }
+                obj(f)
+            }
+            Message::HeartbeatAck { echo_us } => obj(vec![
+                ("type", "heartbeat_ack".into()),
+                ("echo_us", (*echo_us as usize).into()),
             ]),
             Message::Assign {
                 job,
@@ -378,7 +426,20 @@ impl Message {
                         ),
                         ("launches", outcome.launches.into()),
                         ("items", outcome.items.into()),
-                    ]),
+                    ]
+                    .into_iter()
+                    .chain(
+                        [
+                            ("recv_us", outcome.recv_us),
+                            ("exec_start_us", outcome.exec_start_us),
+                            ("exec_end_us", outcome.exec_end_us),
+                        ]
+                        .into_iter()
+                        .filter_map(|(k, us)| {
+                            us.map(|us| (k, (us as usize).into()))
+                        }),
+                    )
+                    .collect()),
                 ),
             ]),
             Message::Failed {
@@ -407,6 +468,11 @@ impl Message {
             }),
             "heartbeat" => Ok(Message::Heartbeat {
                 worker_id: usize_field(v, "worker_id")? as u64,
+                sent_us: opt_us_field(v, "sent_us"),
+                rtt_us: opt_us_field(v, "rtt_us"),
+            }),
+            "heartbeat_ack" => Ok(Message::HeartbeatAck {
+                echo_us: usize_field(v, "echo_us")? as u64,
             }),
             "assign" => Ok(Message::Assign {
                 job: usize_field(v, "job")? as u64,
@@ -429,6 +495,11 @@ impl Message {
                         compute_us: usize_field(o, "compute_us")? as u64,
                         launches: usize_field(o, "launches")?,
                         items: usize_field(o, "items")?,
+                        // Optional on the wire: pre-PR-9 workers don't
+                        // stamp their frames.
+                        recv_us: opt_us_field(o, "recv_us"),
+                        exec_start_us: opt_us_field(o, "exec_start_us"),
+                        exec_end_us: opt_us_field(o, "exec_end_us"),
                     },
                 })
             }
@@ -468,6 +539,12 @@ fn usize_field(v: &Json, key: &str) -> Result<usize> {
         })
 }
 
+/// An optional microsecond field: `None` when absent or non-numeric
+/// (older peers simply omit these keys).
+fn opt_us_field(v: &Json, key: &str) -> Option<u64> {
+    v.as_obj()?.get(key).and_then(Json::as_usize).map(|n| n as u64)
+}
+
 fn bool_field(v: &Json, key: &str) -> Result<bool> {
     fields(v)?
         .get(key)
@@ -500,7 +577,17 @@ mod tests {
             version: PROTOCOL_VERSION,
         });
         roundtrip(Message::Registered { worker_id: 7 });
-        roundtrip(Message::Heartbeat { worker_id: 7 });
+        roundtrip(Message::Heartbeat {
+            worker_id: 7,
+            sent_us: None,
+            rtt_us: None,
+        });
+        roundtrip(Message::Heartbeat {
+            worker_id: 7,
+            sent_us: Some(1_000_123),
+            rtt_us: Some(850),
+        });
+        roundtrip(Message::HeartbeatAck { echo_us: 1_000_123 });
         roundtrip(Message::Assign {
             job: 3,
             task_idx: 0,
@@ -560,6 +647,22 @@ mod tests {
                 compute_us: 3400,
                 launches: 1,
                 items: 5,
+                recv_us: None,
+                exec_start_us: None,
+                exec_end_us: None,
+            },
+        });
+        roundtrip(Message::Complete {
+            job: 3,
+            task_idx: 1,
+            outcome: WireOutcome {
+                startup_us: 1200,
+                compute_us: 3400,
+                launches: 1,
+                items: 5,
+                recv_us: Some(50_000),
+                exec_start_us: Some(50_400),
+                exec_end_us: Some(55_000),
             },
         });
         roundtrip(Message::Failed {
@@ -611,6 +714,81 @@ mod tests {
         // A map frame with neither field is malformed.
         let bad = r#"{"type":"assign","job":1,"task_idx":0,"task_id":1,"work":{"kind":"map","mapper":"cat","pairs":[]}}"#;
         assert!(Message::decode(bad).is_err());
+    }
+
+    #[test]
+    fn worker_timestamps_roundtrip_across_every_presence_combination() {
+        // Property-style sweep: each of the three optional stamps is
+        // independently present or absent and the frame must survive a
+        // roundtrip either way (workers may be upgraded piecemeal, so
+        // no coordinator/worker version lockstep).
+        for bits in 0u8..8 {
+            let some = |b: u8, v: u64| (bits & b != 0).then_some(v);
+            roundtrip(Message::Complete {
+                job: 9,
+                task_idx: bits as usize,
+                outcome: WireOutcome {
+                    startup_us: 10,
+                    compute_us: 20,
+                    launches: 1,
+                    items: 2,
+                    recv_us: some(1, 111),
+                    exec_start_us: some(2, 222),
+                    exec_end_us: some(4, 333),
+                },
+            });
+        }
+        for bits in 0u8..4 {
+            let some = |b: u8, v: u64| (bits & b != 0).then_some(v);
+            roundtrip(Message::Heartbeat {
+                worker_id: bits as u64,
+                sent_us: some(1, 444),
+                rtt_us: some(2, 555),
+            });
+        }
+    }
+
+    #[test]
+    fn pre_pr9_frames_without_timestamps_still_decode() {
+        // Raw frames as a pre-PR-9 peer would emit them: no sent_us /
+        // rtt_us on heartbeats, no worker stamps in the outcome.
+        let hb = r#"{"type":"heartbeat","worker_id":3}"#;
+        assert_eq!(
+            Message::decode(hb).unwrap(),
+            Message::Heartbeat {
+                worker_id: 3,
+                sent_us: None,
+                rtt_us: None,
+            }
+        );
+        let done = r#"{"type":"complete","job":2,"task_idx":4,"outcome":{"startup_us":900,"compute_us":8100,"launches":1,"items":3}}"#;
+        assert_eq!(
+            Message::decode(done).unwrap(),
+            Message::Complete {
+                job: 2,
+                task_idx: 4,
+                outcome: WireOutcome {
+                    startup_us: 900,
+                    compute_us: 8100,
+                    launches: 1,
+                    items: 3,
+                    recv_us: None,
+                    exec_start_us: None,
+                    exec_end_us: None,
+                },
+            }
+        );
+        // And the other direction: a stamped frame from a new worker
+        // decodes on this side with every stamp intact.
+        let stamped = r#"{"type":"complete","job":2,"task_idx":4,"outcome":{"startup_us":900,"compute_us":8100,"launches":1,"items":3,"recv_us":70,"exec_start_us":80,"exec_end_us":9000}}"#;
+        let Message::Complete { outcome, .. } =
+            Message::decode(stamped).unwrap()
+        else {
+            panic!("complete stays complete");
+        };
+        assert_eq!(outcome.recv_us, Some(70));
+        assert_eq!(outcome.exec_start_us, Some(80));
+        assert_eq!(outcome.exec_end_us, Some(9000));
     }
 
     #[test]

@@ -158,7 +158,12 @@ mod tests {
         let sender = std::thread::spawn(move || {
             let stream = TcpStream::connect(addr).unwrap();
             let (_r, mut w) = split(stream).unwrap();
-            w.send(&Message::Heartbeat { worker_id: 1 }).unwrap();
+            w.send(&Message::Heartbeat {
+                worker_id: 1,
+                sent_us: None,
+                rtt_us: None,
+            })
+            .unwrap();
             w.send(&Message::Complete {
                 job: 2,
                 task_idx: 0,
@@ -167,6 +172,7 @@ mod tests {
                     compute_us: 20,
                     launches: 1,
                     items: 2,
+                    ..Default::default()
                 },
             })
             .unwrap();
@@ -176,7 +182,11 @@ mod tests {
         let (mut r, _w) = split(stream).unwrap();
         assert_eq!(
             r.recv().unwrap(),
-            Some(Message::Heartbeat { worker_id: 1 })
+            Some(Message::Heartbeat {
+                worker_id: 1,
+                sent_us: None,
+                rtt_us: None,
+            })
         );
         assert!(matches!(
             r.recv().unwrap(),

@@ -18,9 +18,9 @@
 
 use std::collections::VecDeque;
 use std::net::TcpStream;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::apps::registry::{resolve_mapper, resolve_reducer};
 use crate::error::{Error, Result};
@@ -126,14 +126,19 @@ fn materialize(work: &WireWork) -> Result<TaskWork> {
     }
 }
 
+/// One queued assignment: job, task index, payload, and the worker
+/// clock (µs since connection epoch) when the frame was read off the
+/// socket — the tracing layer's `recv_us` stamp.
+type Assignment = (u64, usize, WireWork, u64);
+
 /// Executor-pool feed: assignments queued by the read loop.
 struct Queue {
-    tasks: Mutex<(VecDeque<(u64, usize, WireWork)>, bool)>,
+    tasks: Mutex<(VecDeque<Assignment>, bool)>,
     cv: Condvar,
 }
 
 impl Queue {
-    fn push(&self, item: (u64, usize, WireWork)) {
+    fn push(&self, item: Assignment) {
         let mut q = self.tasks.lock().unwrap_or_else(|e| e.into_inner());
         q.0.push_back(item);
         drop(q);
@@ -155,7 +160,7 @@ impl Queue {
         self.cv.notify_all();
     }
 
-    fn pop(&self) -> Option<(u64, usize, WireWork)> {
+    fn pop(&self) -> Option<Assignment> {
         let mut q = self.tasks.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if let Some(item) = q.0.pop_front() {
@@ -174,10 +179,13 @@ impl Queue {
 /// notices independently.
 fn execute_assignment(
     writer: &Mutex<LineWriter>,
+    epoch: Instant,
     job: u64,
     task_idx: usize,
     work: &WireWork,
+    recv_us: u64,
 ) {
+    let exec_start_us = epoch.elapsed().as_micros() as u64;
     let result = materialize(work).and_then(|w| {
         std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             execute(&w)
@@ -196,6 +204,9 @@ fn execute_assignment(
                 compute_us: out.compute.as_micros() as u64,
                 launches: out.launches,
                 items: out.items,
+                recv_us: Some(recv_us),
+                exec_start_us: Some(exec_start_us),
+                exec_end_us: Some(epoch.elapsed().as_micros() as u64),
             },
         },
         Err(e) => Message::Failed {
@@ -236,6 +247,12 @@ fn connect_with_retry(addr: &str) -> Result<TcpStream> {
 /// host it on a thread for in-process fleets.
 pub fn run_worker(config: WorkerConfig) -> Result<()> {
     let stream = connect_with_retry(&config.connect)?;
+    // Connection epoch: the zero point of every monotonic stamp this
+    // worker puts on the wire (heartbeat `sent_us`, outcome `recv_us` /
+    // `exec_start_us` / `exec_end_us`).  The coordinator aligns them to
+    // its own clock via the heartbeat-RTT offset estimate (DESIGN.md
+    // §12).
+    let epoch = Instant::now();
     let (mut reader, writer) = split(stream)?;
     let writer = Arc::new(Mutex::new(writer));
 
@@ -257,11 +274,15 @@ pub fn run_worker(config: WorkerConfig) -> Result<()> {
         }
     };
 
-    // Heartbeat thread.
+    // Heartbeat thread.  Each beacon carries its own send time and the
+    // round-trip measured off the last ack (0 = none seen yet, sent as
+    // absent); the read loop updates `rtt_us` when acks arrive.
     let stop = Arc::new(AtomicBool::new(false));
+    let rtt_us = Arc::new(AtomicU64::new(0));
     let beat = {
         let writer = writer.clone();
         let stop = stop.clone();
+        let rtt_us = rtt_us.clone();
         let interval = config.heartbeat_interval;
         std::thread::spawn(move || {
             while !stop.load(Ordering::Relaxed) {
@@ -269,10 +290,15 @@ pub fn run_worker(config: WorkerConfig) -> Result<()> {
                 if stop.load(Ordering::Relaxed) {
                     break;
                 }
+                let rtt = rtt_us.load(Ordering::Relaxed);
                 let sent = writer
                     .lock()
                     .unwrap_or_else(|e| e.into_inner())
-                    .send(&Message::Heartbeat { worker_id });
+                    .send(&Message::Heartbeat {
+                        worker_id,
+                        sent_us: Some(epoch.elapsed().as_micros() as u64),
+                        rtt_us: (rtt > 0).then_some(rtt),
+                    });
                 if sent.is_err() {
                     break; // coordinator gone; read loop exits too
                 }
@@ -290,8 +316,12 @@ pub fn run_worker(config: WorkerConfig) -> Result<()> {
             let queue = queue.clone();
             let writer = writer.clone();
             std::thread::spawn(move || {
-                while let Some((job, task_idx, work)) = queue.pop() {
-                    execute_assignment(&writer, job, task_idx, &work);
+                while let Some((job, task_idx, work, recv_us)) =
+                    queue.pop()
+                {
+                    execute_assignment(
+                        &writer, epoch, job, task_idx, &work, recv_us,
+                    );
                 }
             })
         })
@@ -307,6 +337,7 @@ pub fn run_worker(config: WorkerConfig) -> Result<()> {
                 work,
                 ..
             })) => {
+                let recv_us = epoch.elapsed().as_micros() as u64;
                 received += 1;
                 if config.fail_after.is_some_and(|n| received >= n) {
                     // Chaos: vanish without executing this assignment
@@ -319,7 +350,16 @@ pub fn run_worker(config: WorkerConfig) -> Result<()> {
                         .shutdown();
                     break Ok(());
                 }
-                queue.push((job, task_idx, work));
+                queue.push((job, task_idx, work, recv_us));
+            }
+            Ok(Some(Message::HeartbeatAck { echo_us })) => {
+                // Round trip = now minus the beacon's send stamp; the
+                // next heartbeat reports it to the offset estimator.
+                let now_us = epoch.elapsed().as_micros() as u64;
+                rtt_us.store(
+                    now_us.saturating_sub(echo_us).max(1),
+                    Ordering::Relaxed,
+                );
             }
             Ok(Some(Message::Shutdown)) | Ok(None) => break Ok(()),
             Ok(Some(_)) => {} // nothing else is worker-bound; ignore

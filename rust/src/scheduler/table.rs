@@ -76,6 +76,9 @@ struct Job {
     /// Telemetry bus this job's transitions are published to — rides
     /// the exact same hook points as the journal (DESIGN.md §9).
     telemetry: Option<Arc<EventBus>>,
+    /// Persist per-task span timings on done records (`--trace`,
+    /// DESIGN.md §12).  The event bus always carries them.
+    trace: bool,
     /// What a task's terminal execution error does to this job.
     policy: ErrorPolicy,
     /// Completed report or failure message; `Some` means the job is over.
@@ -294,6 +297,7 @@ impl JobTable {
             journal,
             error_policy,
             telemetry,
+            trace,
         } = spec;
         let n = tasks.len();
         if let Some(j) = &journal {
@@ -329,6 +333,7 @@ impl JobTable {
             exclusive,
             journal,
             telemetry,
+            trace,
             policy: error_policy,
             outcome: None,
         };
@@ -472,6 +477,10 @@ impl JobTable {
                 // Job over, hostile index, or stale duplicate.
                 return Vec::new();
             }
+            // One µs decomposition feeds both sinks, so an offline
+            // journal replay and a live event fold build identical
+            // traces.  `--trace=false` trims the journal record only.
+            let timing = crate::scheduler::TaskTiming::from_report(&report);
             if let Some(j) = &job.journal {
                 j.record(&Record::TaskDone {
                     job: jid.0,
@@ -479,6 +488,7 @@ impl JobTable {
                     task_id: report.task_id,
                     retries: report.retries,
                     dead_lettered: report.dead_lettered,
+                    timing: job.trace.then(|| timing.clone()),
                 });
             }
             if let Some(bus) = job.bus() {
@@ -491,6 +501,7 @@ impl JobTable {
                     compute: report.compute,
                     retries: report.retries,
                     dead_lettered: report.dead_lettered,
+                    timing: Some(timing),
                 });
             }
             job.done_tasks[idx] = true;

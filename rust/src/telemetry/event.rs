@@ -41,6 +41,11 @@ pub enum Event {
         compute: Duration,
         retries: usize,
         dead_lettered: bool,
+        /// Full span decomposition for the tracing layer — the same
+        /// numbers the journal's done record persists, so live and
+        /// offline traces agree.  `None` when the job runs with
+        /// `--trace=false`.
+        timing: Option<crate::scheduler::TaskTiming>,
     },
     /// A task consumed one retry (injected failure or error budget).
     TaskRetry {

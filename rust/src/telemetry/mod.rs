@@ -23,11 +23,19 @@
 //!
 //! Enabled by default on the CLI (`--telemetry=false` opts out) and
 //! opt-in per `JobSpec` from the library, exactly like the journal.
+//!
+//! PR 9 adds a fourth piece on top of the same event stream: the
+//! **tracing layer** ([`trace`]) assembles per-task span timelines
+//! (`queued → dispatched → ship-out → startup → compute → result`),
+//! exports Chrome trace-event JSON for Perfetto / `chrome://tracing`,
+//! and reconstructs the critical path — live via [`TraceCollector`]
+//! or offline from the journal via [`trace_workdir`] (DESIGN.md §12).
 
 pub mod bus;
 pub mod event;
 pub mod registry;
 pub mod surface;
+pub mod trace;
 
 pub use bus::{EventBus, Subscriber, SubscriptionId};
 pub use event::{Event, Stamped};
@@ -35,4 +43,10 @@ pub use registry::{Histogram, Registry, LATENCY_BOUNDS_SECS};
 pub use surface::{
     fetch, fold_workdir, render_status, render_top, Collector,
     InvocationTelemetry, MetricsListener, StatusWriter, STATUS_FILE,
+};
+pub use trace::{
+    chrome_trace, critical_path, render_trace_report, stragglers,
+    trace_json, trace_workdir, utilization_gaps, CriticalLink,
+    CriticalPath, JobTrace, Phase, Span, Straggler, TaskTrace, Trace,
+    TraceCollector, STRAGGLER_FACTOR,
 };

@@ -670,9 +670,29 @@ fn serve_conn(conn: TcpStream, collector: &Collector) -> std::io::Result<()> {
 /// Line-protocol client for `top` and tests: send one request line to
 /// a [`MetricsListener`] and read the raw response body.
 pub fn fetch(addr: &str, path: &str) -> Result<String> {
-    let stream = TcpStream::connect(addr).map_err(|e| {
-        Error::Scheduler(format!("connect to metrics endpoint {addr}: {e}"))
-    })?;
+    use std::net::ToSocketAddrs;
+    // Resolve + connect with a bounded timeout so `top` against a
+    // dead or firewalled endpoint fails fast instead of hanging on
+    // the OS connect deadline.
+    let sa = addr
+        .to_socket_addrs()
+        .map_err(|e| {
+            Error::Scheduler(format!(
+                "metrics endpoint {addr} does not resolve: {e}"
+            ))
+        })?
+        .next()
+        .ok_or_else(|| {
+            Error::Scheduler(format!(
+                "metrics endpoint {addr} resolves to no address"
+            ))
+        })?;
+    let stream = TcpStream::connect_timeout(&sa, Duration::from_secs(2))
+        .map_err(|e| {
+            Error::Scheduler(format!(
+                "connect to metrics endpoint {addr}: {e}"
+            ))
+        })?;
     stream
         .set_read_timeout(Some(Duration::from_secs(5)))
         .and_then(|()| stream.set_write_timeout(Some(Duration::from_secs(5))))
@@ -990,6 +1010,7 @@ mod tests {
                     compute: Duration::from_millis(40),
                     retries: 0,
                     dead_lettered: false,
+                    timing: None,
                 },
                 Event::TaskAssigned {
                     job: 1,
@@ -1005,6 +1026,7 @@ mod tests {
                     compute: Duration::from_millis(30),
                     retries: 0,
                     dead_lettered: true,
+                    timing: None,
                 },
                 Event::JobDone { job: 1 },
                 Event::QueueDepth { depth: 0 },

@@ -1,0 +1,1142 @@
+//! Distributed tracing (DESIGN.md §12): per-task span timelines,
+//! Chrome trace-event export, and critical-path analysis.
+//!
+//! The tracing layer is a *fold* over the same facts every other
+//! surface consumes — the journal's traced done records offline, or
+//! [`crate::telemetry::Event::TaskDone`] timings live — so a trace
+//! assembled after SIGKILL from `journal.jsonl` agrees byte-for-byte
+//! with one folded from the event stream of an uninterrupted run.
+//!
+//! **Span model.**  Each finished task attempt is tiled into at most
+//! six contiguous phases on a µs timeline relative to job submission:
+//!
+//! ```text
+//! queued → dispatched → ship-out → startup → compute → result
+//! [0 ............................................. finished_us]
+//! ```
+//!
+//! The tiling is *exact by construction*: phase boundaries are clamped
+//! monotone (`queued` ends at `started − dispatch`, `dispatched` at
+//! `started`, then ship-out/startup/compute consume their measured
+//! durations capped by the time remaining, and `result` absorbs the
+//! remainder up to `finished`).  Zero-width phases are dropped.  The
+//! sum of a task's span durations therefore equals `finished_us`
+//! exactly, which is what makes the critical-path report's per-phase
+//! totals sum to the makespan.
+//!
+//! `ship-out` is the outbound half of the remote engine's shipping
+//! overhead.  When the worker stamped its completion frame
+//! (PR 9 workers report recv/exec-start/exec-end on their own
+//! monotonic clock, aligned via the heartbeat-RTT clock-offset
+//! estimate — DESIGN.md §12), the coordinator resolves it exactly;
+//! legacy frames fall back to splitting `shipped` symmetrically.
+//!
+//! **Critical path.**  Tasks carry no explicit dependency edges in the
+//! journal, so the chain is reconstructed from the timeline: start at
+//! the task that determines the makespan, then repeatedly link to the
+//! latest-finishing task that completed before the current link became
+//! eligible (its `queued → dispatched` boundary).  Within a Session
+//! chain the jobs are submitted together, so a reduce task's queue
+//! wait is exactly the upstream map's runtime and the walk recovers
+//! the map → partial → reduce dependency order.  Each link's spans are
+//! trimmed to start where the previous link finished, so the chain
+//! tiles `[0, makespan]` with no gaps or overlaps.
+
+use std::collections::{BTreeMap, HashSet};
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::scheduler::journal::{Replay, JOURNAL_FILE};
+use crate::scheduler::TaskTiming;
+use crate::util::json::{obj, Json};
+
+use super::bus::Subscriber;
+use super::event::{Event, Stamped};
+
+/// One phase of a task attempt's timeline, in execution order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Phase {
+    /// Waiting for eligibility + a free slot (includes upstream jobs).
+    Queued,
+    /// Dispatch latency: picked by the scheduler, not yet running.
+    Dispatched,
+    /// Outbound wire shipping (remote engine; absent in-process).
+    ShipOut,
+    /// Application start-up inside the task.
+    Startup,
+    /// Per-item compute.
+    Compute,
+    /// Result return: ship-back + completion bookkeeping remainder.
+    Result,
+}
+
+impl Phase {
+    /// All phases, in timeline order.
+    pub const ALL: [Phase; 6] = [
+        Phase::Queued,
+        Phase::Dispatched,
+        Phase::ShipOut,
+        Phase::Startup,
+        Phase::Compute,
+        Phase::Result,
+    ];
+
+    /// Stable lower-case name (Chrome trace slice names, report rows).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Queued => "queued",
+            Phase::Dispatched => "dispatched",
+            Phase::ShipOut => "ship-out",
+            Phase::Startup => "startup",
+            Phase::Compute => "compute",
+            Phase::Result => "result",
+        }
+    }
+}
+
+/// One phase interval on the job-submission-relative µs timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub phase: Phase,
+    pub start_us: u64,
+    pub end_us: u64,
+}
+
+impl Span {
+    pub fn dur_us(&self) -> u64 {
+        self.end_us - self.start_us
+    }
+}
+
+/// The assembled timeline of one task's successful attempt.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskTrace {
+    pub job: u64,
+    pub task_id: usize,
+    /// Retries consumed before this (successful) attempt.
+    pub attempt: usize,
+    /// The persisted decomposition the spans were tiled from.
+    pub timing: TaskTiming,
+    /// Contiguous, clamped-monotone phase tiling of
+    /// `[0, timing.finished_us]`; zero-width phases omitted.
+    pub spans: Vec<Span>,
+}
+
+impl TaskTrace {
+    /// Assemble a task trace by tiling `timing` (see module docs).
+    pub fn new(
+        job: u64,
+        task_id: usize,
+        attempt: usize,
+        timing: TaskTiming,
+    ) -> TaskTrace {
+        let spans = tile(&timing);
+        TaskTrace {
+            job,
+            task_id,
+            attempt,
+            timing,
+            spans,
+        }
+    }
+
+    /// When the task became dispatchable (its `queued` phase ended).
+    pub fn eligible_us(&self) -> u64 {
+        self.timing
+            .started_us
+            .min(self.timing.finished_us)
+            .saturating_sub(self.timing.dispatch_us)
+    }
+
+    pub fn finished_us(&self) -> u64 {
+        self.timing.finished_us.max(self.timing.started_us)
+    }
+}
+
+/// Tile a timing decomposition into contiguous spans covering
+/// `[0, finished]` exactly (module docs).  Defensive about
+/// inconsistent inputs: every boundary is clamped so the tiling is
+/// monotone regardless of what a corrupt journal reports.
+fn tile(t: &TaskTiming) -> Vec<Span> {
+    let finished = t.finished_us.max(t.started_us);
+    let started = t.started_us.min(finished);
+    let q_end = started.saturating_sub(t.dispatch_us);
+    let mut spans = Vec::with_capacity(Phase::ALL.len());
+    let mut push = |phase: Phase, a: u64, b: u64| {
+        if b > a {
+            spans.push(Span {
+                phase,
+                start_us: a,
+                end_us: b,
+            });
+        }
+    };
+    push(Phase::Queued, 0, q_end);
+    push(Phase::Dispatched, q_end, started);
+    let mut cur = started;
+    // The worker-resolved outbound slice when present, else half the
+    // round-trip shipping overhead; always bounded by time remaining.
+    let ship_out = t
+        .ship_out_us
+        .unwrap_or(t.shipped_us / 2)
+        .min(finished - cur);
+    push(Phase::ShipOut, cur, cur + ship_out);
+    cur += ship_out;
+    let startup = t.startup_us.min(finished - cur);
+    push(Phase::Startup, cur, cur + startup);
+    cur += startup;
+    let compute = t.compute_us.min(finished - cur);
+    push(Phase::Compute, cur, cur + compute);
+    cur += compute;
+    push(Phase::Result, cur, finished);
+    spans
+}
+
+/// One job's assembled task traces.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct JobTrace {
+    pub name: String,
+    pub ntasks: usize,
+    /// Keyed by task id; one entry per *completed* task with timings.
+    pub tasks: BTreeMap<usize, TaskTrace>,
+}
+
+/// A whole invocation's trace: every job's task timelines on one
+/// µs axis.  Jobs of a Session chain are submitted together, so their
+/// per-job-submission-relative timelines are mutually comparable
+/// (module docs).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    pub jobs: BTreeMap<u64, JobTrace>,
+    /// `resumed` journal markers folded in (offline assembly only).
+    pub resumes: usize,
+}
+
+impl Trace {
+    /// Assemble from a journal replay — the offline path behind
+    /// `llmapreduce trace`, which works after SIGKILL exactly like
+    /// `status` (both fold the same fsync'd records).
+    pub fn from_replay(replay: &Replay) -> Trace {
+        let mut trace = Trace {
+            resumes: replay.resumes,
+            ..Trace::default()
+        };
+        for (id, j) in replay.jobs.iter() {
+            if j.timings.is_empty() {
+                continue;
+            }
+            let name = if j.name.is_empty() {
+                format!("job-{id}")
+            } else {
+                j.name.clone()
+            };
+            let jt = trace.jobs.entry(*id).or_default();
+            jt.name = name;
+            jt.ntasks = j.ntasks;
+            for (task_id, (retries, timing)) in j.timings.iter() {
+                jt.tasks.insert(
+                    *task_id,
+                    TaskTrace::new(*id, *task_id, *retries, timing.clone()),
+                );
+            }
+        }
+        trace
+    }
+
+    /// Every assembled task across all jobs.
+    pub fn tasks(&self) -> impl Iterator<Item = &TaskTrace> {
+        self.jobs.values().flat_map(|j| j.tasks.values())
+    }
+
+    /// The latest task completion — the measured makespan, µs.
+    pub fn makespan_us(&self) -> u64 {
+        self.tasks().map(|t| t.finished_us()).max().unwrap_or(0)
+    }
+}
+
+/// Bus subscriber that assembles a [`Trace`] live — the in-process
+/// twin of [`Trace::from_replay`] (both fold the same `TaskTiming`
+/// values, so the results agree).
+#[derive(Default)]
+pub struct TraceCollector {
+    trace: Mutex<Trace>,
+}
+
+impl TraceCollector {
+    pub fn new() -> TraceCollector {
+        TraceCollector::default()
+    }
+
+    /// The trace assembled so far.
+    pub fn snapshot(&self) -> Trace {
+        self.trace.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+}
+
+impl Subscriber for TraceCollector {
+    fn on_event(&self, ev: &Stamped) {
+        let mut trace =
+            self.trace.lock().unwrap_or_else(|p| p.into_inner());
+        match &ev.event {
+            Event::JobSubmitted { job, name, ntasks } => {
+                let jt = trace.jobs.entry(*job).or_default();
+                jt.name = name.clone();
+                jt.ntasks = *ntasks;
+            }
+            Event::TaskDone {
+                job,
+                task_id,
+                retries,
+                timing: Some(t),
+                ..
+            } => {
+                let jt = trace.jobs.entry(*job).or_default();
+                if jt.name.is_empty() {
+                    jt.name = format!("job-{job}");
+                }
+                jt.tasks.insert(
+                    *task_id,
+                    TaskTrace::new(*job, *task_id, *retries, t.clone()),
+                );
+            }
+            Event::Resumed { .. } => trace.resumes += 1,
+            _ => {}
+        }
+    }
+}
+
+/// Assemble an offline trace from a (possibly crashed) workdir's
+/// journal.
+pub fn trace_workdir(workdir: &Path) -> Result<Trace> {
+    let journal_path = workdir.join(JOURNAL_FILE);
+    if !journal_path.is_file() {
+        return Err(Error::opt(format!(
+            "no {JOURNAL_FILE} under {} — tracing needs a journaled \
+             run (--journal=true, the default)",
+            workdir.display()
+        )));
+    }
+    let replay = Replay::load(&journal_path)?;
+    let trace = Trace::from_replay(&replay);
+    if trace.jobs.is_empty() {
+        return Err(Error::opt(format!(
+            "journal under {} has no span timings — the run used \
+             --trace=false, or predates tracing, or no task completed",
+            workdir.display()
+        )));
+    }
+    Ok(trace)
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event export
+// ---------------------------------------------------------------------------
+
+/// Render a trace as Chrome trace-event JSON (the `{"traceEvents":
+/// [...]}` object form), loadable in Perfetto / `chrome://tracing`.
+///
+/// Mapping (DESIGN.md §12): one *process* per job (`pid` = job id,
+/// named via a `process_name` metadata event), one *thread* per task
+/// (`tid` = task id), one complete (`ph:"X"`) slice per phase span
+/// plus an umbrella `task N` slice covering `[0, finished_us]` so
+/// phase slices nest inside their task's bounds.  Timestamps are µs,
+/// the format's native unit.  Every slice carries task / worker /
+/// attempt / batch attribution in `args`.
+pub fn chrome_trace(trace: &Trace) -> Json {
+    let mut events = Vec::new();
+    for (job_id, job) in trace.jobs.iter() {
+        let pid = *job_id as usize;
+        events.push(obj(vec![
+            ("name", "process_name".into()),
+            ("ph", "M".into()),
+            ("pid", pid.into()),
+            (
+                "args",
+                obj(vec![("name", Json::Str(job.name.clone()))]),
+            ),
+        ]));
+        for task in job.tasks.values() {
+            let tid = task.task_id;
+            let attribution = || {
+                obj(vec![
+                    ("task", tid.into()),
+                    (
+                        "worker",
+                        match &task.timing.worker {
+                            Some(w) => Json::Str(w.clone()),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("attempt", task.attempt.into()),
+                    ("items", task.timing.items.into()),
+                ])
+            };
+            events.push(obj(vec![
+                ("name", "thread_name".into()),
+                ("ph", "M".into()),
+                ("pid", pid.into()),
+                ("tid", tid.into()),
+                (
+                    "args",
+                    obj(vec![(
+                        "name",
+                        Json::Str(format!("task {tid}")),
+                    )]),
+                ),
+            ]));
+            // Umbrella slice: phase slices nest inside it (Chrome
+            // trace nests same-tid "X" events by containment).
+            events.push(obj(vec![
+                ("name", Json::Str(format!("task {tid}"))),
+                ("cat", "task".into()),
+                ("ph", "X".into()),
+                ("pid", pid.into()),
+                ("tid", tid.into()),
+                ("ts", 0usize.into()),
+                ("dur", (task.finished_us() as usize).into()),
+                ("args", attribution()),
+            ]));
+            for span in &task.spans {
+                events.push(obj(vec![
+                    ("name", span.phase.name().into()),
+                    ("cat", "phase".into()),
+                    ("ph", "X".into()),
+                    ("pid", pid.into()),
+                    ("tid", tid.into()),
+                    ("ts", (span.start_us as usize).into()),
+                    ("dur", (span.dur_us() as usize).into()),
+                    ("args", attribution()),
+                ]));
+            }
+        }
+    }
+    obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", "ms".into()),
+    ])
+}
+
+/// Render a trace as the raw span-tree JSON (`--format=json`): the
+/// assembled structure itself, for tooling that wants the tiling
+/// without the Chrome event encoding.
+pub fn trace_json(trace: &Trace) -> Json {
+    let jobs: BTreeMap<String, Json> = trace
+        .jobs
+        .iter()
+        .map(|(id, job)| {
+            let tasks: BTreeMap<String, Json> = job
+                .tasks
+                .iter()
+                .map(|(tid, t)| {
+                    let spans: Vec<Json> = t
+                        .spans
+                        .iter()
+                        .map(|s| {
+                            obj(vec![
+                                ("phase", s.phase.name().into()),
+                                (
+                                    "start_us",
+                                    (s.start_us as usize).into(),
+                                ),
+                                ("end_us", (s.end_us as usize).into()),
+                            ])
+                        })
+                        .collect();
+                    (
+                        tid.to_string(),
+                        obj(vec![
+                            ("attempt", t.attempt.into()),
+                            (
+                                "worker",
+                                match &t.timing.worker {
+                                    Some(w) => Json::Str(w.clone()),
+                                    None => Json::Null,
+                                },
+                            ),
+                            ("items", t.timing.items.into()),
+                            (
+                                "finished_us",
+                                (t.finished_us() as usize).into(),
+                            ),
+                            ("spans", Json::Arr(spans)),
+                        ]),
+                    )
+                })
+                .collect();
+            (
+                id.to_string(),
+                obj(vec![
+                    ("name", Json::Str(job.name.clone())),
+                    ("ntasks", job.ntasks.into()),
+                    ("tasks", Json::Obj(tasks)),
+                ]),
+            )
+        })
+        .collect();
+    obj(vec![
+        ("v", 1usize.into()),
+        ("resumes", trace.resumes.into()),
+        ("makespan_us", (trace.makespan_us() as usize).into()),
+        ("jobs", Json::Obj(jobs)),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Critical-path analysis
+// ---------------------------------------------------------------------------
+
+/// One link of the critical path: a task and the slice of its spans
+/// that lies on the path (trimmed to start where the previous link
+/// finished).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CriticalLink {
+    pub job: u64,
+    pub task_id: usize,
+    pub spans: Vec<Span>,
+}
+
+/// The longest dependency-ordered chain of spans (module docs): its
+/// links tile `[0, makespan_us]` exactly, so `phase_totals_us` sums to
+/// `makespan_us`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CriticalPath {
+    pub links: Vec<CriticalLink>,
+    pub makespan_us: u64,
+    /// Total path time per phase, in [`Phase::ALL`] order.
+    pub phase_totals_us: [u64; 6],
+}
+
+impl CriticalPath {
+    /// Invariant check: the per-phase totals tile the makespan.
+    pub fn totals_cover_makespan(&self) -> bool {
+        self.phase_totals_us.iter().sum::<u64>() == self.makespan_us
+    }
+}
+
+/// Reconstruct the critical path of a trace (None when it has no
+/// tasks).  See the module docs for the chain heuristic.
+pub fn critical_path(trace: &Trace) -> Option<CriticalPath> {
+    let all: Vec<&TaskTrace> = trace.tasks().collect();
+    let mut cur = *all.iter().max_by_key(|t| t.finished_us())?;
+    let mut visited: HashSet<(u64, usize)> = HashSet::new();
+    visited.insert((cur.job, cur.task_id));
+    let mut chain = vec![cur];
+    loop {
+        // The latest-finishing task that completed before `cur` became
+        // eligible is its most plausible release dependency.
+        let window = cur.eligible_us();
+        let pred = all
+            .iter()
+            .copied()
+            .filter(|t| {
+                let fin = t.finished_us();
+                fin > 0
+                    && fin <= window
+                    && !visited.contains(&(t.job, t.task_id))
+            })
+            .max_by_key(|t| t.finished_us());
+        match pred {
+            Some(p) => {
+                visited.insert((p.job, p.task_id));
+                chain.push(p);
+                cur = p;
+            }
+            None => break,
+        }
+    }
+    chain.reverse();
+    // Trim each link's tiling to start where the previous one ended.
+    // Every task's spans tile [0, finished], and each link's start
+    // cursor (the previous finish) lies inside the next link's queued
+    // span, so the trimmed links tile [0, makespan] gaplessly.
+    let mut cursor = 0u64;
+    let mut links = Vec::with_capacity(chain.len());
+    let mut phase_totals_us = [0u64; 6];
+    for t in chain {
+        let mut spans = Vec::new();
+        for s in &t.spans {
+            let start = s.start_us.max(cursor);
+            if s.end_us > start {
+                spans.push(Span {
+                    phase: s.phase,
+                    start_us: start,
+                    end_us: s.end_us,
+                });
+                phase_totals_us[s.phase as usize] += s.end_us - start;
+            }
+        }
+        cursor = cursor.max(t.finished_us());
+        links.push(CriticalLink {
+            job: t.job,
+            task_id: t.task_id,
+            spans,
+        });
+    }
+    Some(CriticalPath {
+        links,
+        makespan_us: cursor,
+        phase_totals_us,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Stragglers + utilization gaps
+// ---------------------------------------------------------------------------
+
+/// Default straggler threshold: compute > 2x the job's median.
+pub const STRAGGLER_FACTOR: f64 = 2.0;
+
+/// A task whose compute time stands out against its job's median.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Straggler {
+    pub job: u64,
+    pub task_id: usize,
+    pub worker: Option<String>,
+    pub compute_us: u64,
+    /// The job's median task compute time.
+    pub median_us: u64,
+}
+
+/// Tasks whose compute exceeds `factor` x their job's median compute
+/// (jobs need at least two completed tasks and a nonzero median to
+/// yield a meaningful baseline).
+pub fn stragglers(trace: &Trace, factor: f64) -> Vec<Straggler> {
+    let mut out = Vec::new();
+    for (job_id, job) in trace.jobs.iter() {
+        if job.tasks.len() < 2 {
+            continue;
+        }
+        let mut computes: Vec<u64> =
+            job.tasks.values().map(|t| t.timing.compute_us).collect();
+        computes.sort_unstable();
+        let mid = computes.len() / 2;
+        let median_us = if computes.len() % 2 == 1 {
+            computes[mid]
+        } else {
+            (computes[mid - 1] + computes[mid]) / 2
+        };
+        if median_us == 0 {
+            continue;
+        }
+        for t in job.tasks.values() {
+            if t.timing.compute_us as f64 > factor * median_us as f64 {
+                out.push(Straggler {
+                    job: *job_id,
+                    task_id: t.task_id,
+                    worker: t.timing.worker.clone(),
+                    compute_us: t.timing.compute_us,
+                    median_us,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Intervals within `[0, makespan]` where *no* task was executing
+/// (`started..finished`): dead time the schedule could reclaim.  The
+/// leading gap (before the first task starts) covers dispatch of the
+/// first wave.
+pub fn utilization_gaps(trace: &Trace) -> Vec<(u64, u64)> {
+    let mut busy: Vec<(u64, u64)> = trace
+        .tasks()
+        .map(|t| {
+            (t.timing.started_us.min(t.finished_us()), t.finished_us())
+        })
+        .filter(|(s, f)| f > s)
+        .collect();
+    busy.sort_unstable();
+    let mut gaps = Vec::new();
+    let mut cursor = 0u64;
+    for (s, f) in busy {
+        if s > cursor {
+            gaps.push((cursor, s));
+        }
+        cursor = cursor.max(f);
+    }
+    gaps
+}
+
+// ---------------------------------------------------------------------------
+// Terminal report
+// ---------------------------------------------------------------------------
+
+fn fmt_us(us: u64) -> String {
+    crate::util::fmt_duration(Duration::from_micros(us))
+}
+
+/// Render the terminal critical-path report: the chain, per-phase
+/// totals (which sum to the makespan — the tiling invariant), top
+/// utilization gaps, and stragglers.
+pub fn render_trace_report(trace: &Trace) -> String {
+    use crate::metrics::report::render_table;
+    let ntasks: usize = trace.jobs.values().map(|j| j.tasks.len()).sum();
+    let mut out = format!(
+        "trace: {} job(s), {} traced task(s), makespan {}\n",
+        trace.jobs.len(),
+        ntasks,
+        fmt_us(trace.makespan_us()),
+    );
+    if trace.resumes > 0 {
+        out.push_str(&format!("  (resumed {}x)\n", trace.resumes));
+    }
+    let Some(path) = critical_path(trace) else {
+        out.push_str("no completed tasks to analyze\n");
+        return out;
+    };
+
+    out.push_str(&format!(
+        "\ncritical path ({} link(s)):\n",
+        path.links.len()
+    ));
+    let rows: Vec<Vec<String>> = path
+        .links
+        .iter()
+        .map(|l| {
+            let name = trace
+                .jobs
+                .get(&l.job)
+                .map(|j| j.name.clone())
+                .unwrap_or_else(|| l.job.to_string());
+            let on_path: u64 = l.spans.iter().map(Span::dur_us).sum();
+            let dominant = l
+                .spans
+                .iter()
+                .max_by_key(|s| s.dur_us())
+                .map(|s| s.phase.name())
+                .unwrap_or("-");
+            vec![
+                name,
+                l.task_id.to_string(),
+                fmt_us(on_path),
+                dominant.to_string(),
+            ]
+        })
+        .collect();
+    out.push_str(&render_table(
+        &["job", "task", "on-path", "dominant phase"],
+        &rows,
+    ));
+
+    out.push_str("\nper-phase totals on the critical path:\n");
+    let total: u64 = path.phase_totals_us.iter().sum();
+    let rows: Vec<Vec<String>> = Phase::ALL
+        .iter()
+        .map(|p| {
+            let us = path.phase_totals_us[*p as usize];
+            let pct = if total > 0 {
+                format!("{:.1}%", us as f64 / total as f64 * 100.0)
+            } else {
+                "-".to_string()
+            };
+            vec![p.name().to_string(), fmt_us(us), pct]
+        })
+        .collect();
+    out.push_str(&render_table(&["phase", "total", "share"], &rows));
+    out.push_str(&format!(
+        "  sum {} == makespan {}\n",
+        fmt_us(total),
+        fmt_us(path.makespan_us)
+    ));
+
+    let gaps = utilization_gaps(trace);
+    let gap_total: u64 = gaps.iter().map(|(s, f)| f - s).sum();
+    if gaps.is_empty() {
+        out.push_str("\nutilization gaps: none\n");
+    } else {
+        let (ls, lf) = gaps
+            .iter()
+            .copied()
+            .max_by_key(|(s, f)| f - s)
+            .expect("nonempty gaps");
+        out.push_str(&format!(
+            "\nutilization gaps: {} across {} gap(s); \
+             largest {} at t+{}\n",
+            fmt_us(gap_total),
+            gaps.len(),
+            fmt_us(lf - ls),
+            fmt_us(ls),
+        ));
+    }
+
+    let slow = stragglers(trace, STRAGGLER_FACTOR);
+    if slow.is_empty() {
+        out.push_str(&format!(
+            "stragglers (> {STRAGGLER_FACTOR}x median compute): none\n"
+        ));
+    } else {
+        out.push_str(&format!(
+            "stragglers (> {STRAGGLER_FACTOR}x median compute):\n"
+        ));
+        let rows: Vec<Vec<String>> = slow
+            .iter()
+            .map(|s| {
+                let name = trace
+                    .jobs
+                    .get(&s.job)
+                    .map(|j| j.name.clone())
+                    .unwrap_or_else(|| s.job.to_string());
+                vec![
+                    name,
+                    s.task_id.to_string(),
+                    s.worker.clone().unwrap_or_else(|| "-".into()),
+                    fmt_us(s.compute_us),
+                    fmt_us(s.median_us),
+                ]
+            })
+            .collect();
+        out.push_str(&render_table(
+            &["job", "task", "worker", "compute", "job median"],
+            &rows,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn timing(
+        started_ms: u64,
+        finished_ms: u64,
+        dispatch_ms: u64,
+        startup_ms: u64,
+        compute_ms: u64,
+    ) -> TaskTiming {
+        TaskTiming {
+            started_us: started_ms * 1000,
+            finished_us: finished_ms * 1000,
+            dispatch_us: dispatch_ms * 1000,
+            startup_us: startup_ms * 1000,
+            compute_us: compute_ms * 1000,
+            ..Default::default()
+        }
+    }
+
+    fn task(
+        job: u64,
+        id: usize,
+        started_ms: u64,
+        finished_ms: u64,
+        compute_ms: u64,
+    ) -> TaskTrace {
+        TaskTrace::new(
+            job,
+            id,
+            0,
+            timing(started_ms, finished_ms, 1, 1, compute_ms),
+        )
+    }
+
+    fn trace_of(tasks: Vec<TaskTrace>) -> Trace {
+        let mut trace = Trace::default();
+        for t in tasks {
+            let jt = trace.jobs.entry(t.job).or_default();
+            jt.name = format!("job-{}", t.job);
+            jt.ntasks += 1;
+            jt.tasks.insert(t.task_id, t);
+        }
+        trace
+    }
+
+    #[test]
+    fn tiling_is_contiguous_and_covers_exactly() {
+        let t = TaskTiming {
+            started_us: 5_000,
+            finished_us: 40_000,
+            dispatch_us: 2_000,
+            startup_us: 3_000,
+            compute_us: 25_000,
+            shipped_us: 8_000,
+            ship_out_us: Some(3_000),
+            ..Default::default()
+        };
+        let spans = tile(&t);
+        // Contiguous from 0 to finished, in phase order.
+        assert_eq!(spans[0].start_us, 0);
+        for w in spans.windows(2) {
+            assert_eq!(w[0].end_us, w[1].start_us);
+            assert!(w[0].phase < w[1].phase);
+        }
+        assert_eq!(spans.last().unwrap().end_us, 40_000);
+        let total: u64 = spans.iter().map(Span::dur_us).sum();
+        assert_eq!(total, 40_000);
+        // The resolved outbound slice is used verbatim.
+        let ship = spans
+            .iter()
+            .find(|s| s.phase == Phase::ShipOut)
+            .unwrap();
+        assert_eq!(ship.dur_us(), 3_000);
+    }
+
+    #[test]
+    fn tiling_without_worker_stamps_splits_shipped_symmetrically() {
+        let t = TaskTiming {
+            started_us: 0,
+            finished_us: 20_000,
+            compute_us: 10_000,
+            shipped_us: 6_000,
+            ship_out_us: None,
+            ..Default::default()
+        };
+        let spans = tile(&t);
+        let ship = spans
+            .iter()
+            .find(|s| s.phase == Phase::ShipOut)
+            .unwrap();
+        assert_eq!(ship.dur_us(), 3_000);
+        // The inbound half lands in the `result` remainder.
+        let result = spans
+            .iter()
+            .find(|s| s.phase == Phase::Result)
+            .unwrap();
+        assert_eq!(result.dur_us(), 7_000);
+    }
+
+    #[test]
+    fn tiling_clamps_inconsistent_inputs() {
+        // Claims more compute than the task's wall window.
+        let t = TaskTiming {
+            started_us: 10_000,
+            finished_us: 12_000,
+            dispatch_us: 50_000,
+            startup_us: 5_000,
+            compute_us: 50_000,
+            ..Default::default()
+        };
+        let spans = tile(&t);
+        assert_eq!(spans.last().unwrap().end_us, 12_000);
+        let total: u64 = spans.iter().map(Span::dur_us).sum();
+        assert_eq!(total, 12_000, "clamped tiling still covers exactly");
+        for w in spans.windows(2) {
+            assert_eq!(w[0].end_us, w[1].start_us);
+        }
+    }
+
+    #[test]
+    fn critical_path_chains_across_jobs_and_tiles_makespan() {
+        // Map job 1: three tasks; reduce job 2: one task queued behind
+        // the map (eligible 1ms after task 3 — the last mapper — ends).
+        let reduce = TaskTrace::new(
+            2,
+            1,
+            0,
+            timing(62, 80, 1, 1, 15),
+        );
+        let trace = trace_of(vec![
+            task(1, 1, 2, 30, 25),
+            task(1, 2, 2, 40, 35),
+            task(1, 3, 2, 60, 55),
+            reduce,
+        ]);
+        let path = critical_path(&trace).unwrap();
+        assert_eq!(path.makespan_us, 80_000);
+        assert!(path.totals_cover_makespan());
+        // Chain: mapper task 3 (finishes at 60ms, inside the reduce's
+        // 60ms queued window) then the reduce.
+        let ids: Vec<(u64, usize)> =
+            path.links.iter().map(|l| (l.job, l.task_id)).collect();
+        assert_eq!(ids, vec![(1, 3), (2, 1)]);
+        // The reduce link's queued span is trimmed to the residual
+        // wait after the mapper finished.
+        let reduce_link = &path.links[1];
+        let q = reduce_link
+            .spans
+            .iter()
+            .find(|s| s.phase == Phase::Queued)
+            .unwrap();
+        assert_eq!(q.start_us, 60_000);
+        // Links tile [0, makespan] with no gaps or overlaps.
+        let mut all: Vec<Span> = path
+            .links
+            .iter()
+            .flat_map(|l| l.spans.iter().copied())
+            .collect();
+        all.sort_by_key(|s| s.start_us);
+        assert_eq!(all[0].start_us, 0);
+        for w in all.windows(2) {
+            assert_eq!(w[0].end_us, w[1].start_us);
+        }
+        assert_eq!(all.last().unwrap().end_us, 80_000);
+    }
+
+    #[test]
+    fn critical_path_of_single_task_is_its_own_tiling() {
+        let trace = trace_of(vec![task(1, 1, 5, 50, 40)]);
+        let path = critical_path(&trace).unwrap();
+        assert_eq!(path.links.len(), 1);
+        assert!(path.totals_cover_makespan());
+        assert_eq!(path.makespan_us, 50_000);
+    }
+
+    #[test]
+    fn empty_trace_has_no_critical_path() {
+        assert!(critical_path(&Trace::default()).is_none());
+        assert_eq!(Trace::default().makespan_us(), 0);
+    }
+
+    #[test]
+    fn stragglers_flag_tasks_past_factor_times_median() {
+        let trace = trace_of(vec![
+            task(1, 1, 0, 10, 10),
+            task(1, 2, 0, 11, 11),
+            task(1, 3, 0, 12, 12),
+            task(1, 4, 0, 50, 50),
+        ]);
+        let slow = stragglers(&trace, 2.0);
+        assert_eq!(slow.len(), 1);
+        assert_eq!(slow[0].task_id, 4);
+        assert_eq!(slow[0].median_us, 11_500);
+        // A lone task is never a straggler (no baseline).
+        let lone = trace_of(vec![task(2, 1, 0, 50, 50)]);
+        assert!(stragglers(&lone, 2.0).is_empty());
+    }
+
+    #[test]
+    fn utilization_gaps_are_the_complement_of_busy_time() {
+        let trace = trace_of(vec![
+            task(1, 1, 5, 20, 10),
+            task(1, 2, 10, 30, 15),
+            task(1, 3, 50, 60, 8),
+        ]);
+        let gaps = utilization_gaps(&trace);
+        assert_eq!(gaps, vec![(0, 5_000), (30_000, 50_000)]);
+    }
+
+    #[test]
+    fn chrome_export_nests_spans_inside_task_bounds() {
+        let trace = trace_of(vec![task(1, 1, 2, 30, 25), task(1, 2, 2, 45, 40)]);
+        let doc = chrome_trace(&trace);
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // Per task: umbrella finish bound, keyed (pid, tid).
+        let mut bounds: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+        for e in events {
+            if e.get("name").unwrap().as_str() == Some("process_name") {
+                continue;
+            }
+            let pid = e.get("pid").unwrap().as_usize().unwrap();
+            let tid = e.get("tid").unwrap().as_usize().unwrap();
+            if e.get("ph").unwrap().as_str() == Some("M") {
+                continue;
+            }
+            let ts = e.get("ts").unwrap().as_usize().unwrap();
+            let dur = e.get("dur").unwrap().as_usize().unwrap();
+            let name = e.get("name").unwrap().as_str().unwrap();
+            if name.starts_with("task ") {
+                bounds.insert((pid, tid), ts + dur);
+                assert_eq!(ts, 0);
+            } else {
+                let end = bounds
+                    .get(&(pid, tid))
+                    .expect("umbrella precedes phases");
+                assert!(ts + dur <= *end, "{name} escapes its task");
+                // Attribution rides every span.
+                let args = e.get("args").unwrap();
+                assert_eq!(
+                    args.get("task").unwrap().as_usize().unwrap(),
+                    tid
+                );
+                assert!(args.get("attempt").is_some());
+                assert!(args.get("worker").is_some());
+                assert!(args.get("items").is_some());
+            }
+        }
+        assert_eq!(bounds.len(), 2);
+        // The export is valid JSON end to end.
+        let text = doc.to_string_compact();
+        assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn trace_json_dump_roundtrips_structurally() {
+        let trace = trace_of(vec![task(1, 1, 2, 30, 25)]);
+        let doc = trace_json(&trace);
+        assert_eq!(doc.get("v").unwrap().as_usize(), Some(1));
+        assert_eq!(
+            doc.get("makespan_us").unwrap().as_usize(),
+            Some(30_000)
+        );
+        let spans = doc
+            .get("jobs")
+            .and_then(|j| j.get("1"))
+            .and_then(|j| j.get("tasks"))
+            .and_then(|t| t.get("1"))
+            .and_then(|t| t.get("spans"))
+            .and_then(|s| s.as_arr())
+            .unwrap();
+        assert!(!spans.is_empty());
+        assert!(Json::parse(&doc.to_string_compact()).is_ok());
+    }
+
+    #[test]
+    fn live_collector_agrees_with_replay_assembly() {
+        use crate::telemetry::EventBus;
+        use std::sync::Arc;
+
+        let t1 = timing(2, 30, 1, 1, 25);
+        let t2 = timing(2, 45, 1, 1, 40);
+        // Live: fold events through a TraceCollector.
+        let bus = EventBus::new();
+        let collector = Arc::new(TraceCollector::new());
+        bus.subscribe(collector.clone());
+        bus.emit(Event::JobSubmitted {
+            job: 1,
+            name: "wordcount".into(),
+            ntasks: 2,
+        });
+        for (id, t) in [(1usize, &t1), (2, &t2)] {
+            bus.emit(Event::TaskDone {
+                job: 1,
+                task_id: id,
+                worker: None,
+                dispatch_wait: Duration::ZERO,
+                startup: Duration::ZERO,
+                compute: Duration::ZERO,
+                retries: 0,
+                dead_lettered: false,
+                timing: Some(t.clone()),
+            });
+        }
+        let live = collector.snapshot();
+
+        // Offline: fold the same timings through a journal replay.
+        let mut replay = Replay::default();
+        replay.apply(crate::scheduler::journal::Record::JobSubmitted {
+            job: 1,
+            name: "wordcount".into(),
+            ntasks: 2,
+            task_ids: vec![1, 2],
+        });
+        for (idx, (id, t)) in [(1usize, t1), (2, t2)].into_iter().enumerate()
+        {
+            replay.apply(crate::scheduler::journal::Record::TaskDone {
+                job: 1,
+                idx,
+                task_id: id,
+                retries: 0,
+                dead_lettered: false,
+                timing: Some(t),
+            });
+        }
+        let offline = Trace::from_replay(&replay);
+        assert_eq!(live, offline);
+    }
+
+    #[test]
+    fn report_renders_every_section() {
+        let trace = trace_of(vec![
+            task(1, 1, 2, 30, 25),
+            task(1, 2, 2, 31, 26),
+            task(1, 3, 40, 200, 155),
+        ]);
+        let r = render_trace_report(&trace);
+        assert!(r.contains("critical path"), "{r}");
+        assert!(r.contains("per-phase totals"), "{r}");
+        assert!(r.contains("compute"), "{r}");
+        assert!(r.contains("stragglers"), "{r}");
+        assert!(r.contains("utilization gaps"), "{r}");
+    }
+}

@@ -507,8 +507,14 @@ fn random_wire_work(rng: &mut Rng) -> WireWork {
     }
 }
 
+/// Independently present-or-absent worker timestamp, as sent by a
+/// mixed-version fleet (PR 9 stamps are optional on the wire).
+fn random_opt_us(rng: &mut Rng) -> Option<u64> {
+    (rng.next_below(2) == 1).then(|| rng.next_below(1 << 40))
+}
+
 fn random_message(rng: &mut Rng) -> Message {
-    match rng.next_below(7) {
+    match rng.next_below(8) {
         0 => Message::Register {
             name: random_wire_string(rng),
             slots: rng.range(0, 1 << 20),
@@ -519,6 +525,8 @@ fn random_message(rng: &mut Rng) -> Message {
         },
         2 => Message::Heartbeat {
             worker_id: rng.next_below(1 << 40),
+            sent_us: random_opt_us(rng),
+            rtt_us: random_opt_us(rng),
         },
         3 => Message::Assign {
             job: rng.next_below(1 << 40),
@@ -534,6 +542,9 @@ fn random_message(rng: &mut Rng) -> Message {
                 compute_us: rng.next_below(1 << 40),
                 launches: rng.range(0, 100_000),
                 items: rng.range(0, 100_000),
+                recv_us: random_opt_us(rng),
+                exec_start_us: random_opt_us(rng),
+                exec_end_us: random_opt_us(rng),
             },
         },
         5 => Message::Failed {
@@ -541,8 +552,57 @@ fn random_message(rng: &mut Rng) -> Message {
             task_idx: rng.range(0, 100_000),
             msg: random_wire_string(rng),
         },
+        6 => Message::HeartbeatAck {
+            echo_us: rng.next_below(1 << 40),
+        },
         _ => Message::Shutdown,
     }
+}
+
+/// Satellite invariant (PR 9): frames from a pre-PR-9 peer — no
+/// `sent_us`/`rtt_us` on heartbeats, no worker stamps in outcomes —
+/// decode on a current build with the optional fields `None`, whatever
+/// the required fields hold.  No coordinator/worker version lockstep.
+#[test]
+fn prop_legacy_frames_decode_without_timestamps() {
+    forall("wire-legacy", |rng| {
+        let (wid, job) =
+            (rng.next_below(1 << 40), rng.next_below(1 << 40));
+        let (su, cu) = (rng.next_below(1 << 40), rng.next_below(1 << 40));
+        let (tidx, launches, items) = (
+            rng.range(0, 100_000),
+            rng.range(0, 100_000),
+            rng.range(0, 100_000),
+        );
+        let hb = format!(r#"{{"type":"heartbeat","worker_id":{wid}}}"#);
+        assert_eq!(
+            Message::decode(&hb).unwrap(),
+            Message::Heartbeat {
+                worker_id: wid,
+                sent_us: None,
+                rtt_us: None,
+            }
+        );
+        let done = format!(
+            r#"{{"type":"complete","job":{job},"task_idx":{tidx},"outcome":{{"startup_us":{su},"compute_us":{cu},"launches":{launches},"items":{items}}}}}"#
+        );
+        assert_eq!(
+            Message::decode(&done).unwrap(),
+            Message::Complete {
+                job,
+                task_idx: tidx,
+                outcome: WireOutcome {
+                    startup_us: su,
+                    compute_us: cu,
+                    launches,
+                    items,
+                    recv_us: None,
+                    exec_start_us: None,
+                    exec_end_us: None,
+                },
+            }
+        );
+    });
 }
 
 /// Satellite invariant: every protocol message survives the
@@ -646,6 +706,7 @@ fn random_journal(rng: &mut Rng) -> Vec<Record> {
                     task_id,
                     retries: 0,
                     dead_lettered: true,
+                    timing: None,
                 });
                 done += 1;
             }
@@ -656,6 +717,14 @@ fn random_journal(rng: &mut Rng) -> Vec<Record> {
                     task_id,
                     retries: rng.range(0, 2),
                     dead_lettered: false,
+                    timing: (rng.next_below(2) == 1).then(|| {
+                        llmapreduce::scheduler::TaskTiming {
+                            started_us: rng.next_below(1 << 20),
+                            finished_us: rng.next_below(1 << 22),
+                            compute_us: rng.next_below(1 << 20),
+                            ..Default::default()
+                        }
+                    }),
                 });
                 done += 1;
             }
@@ -809,6 +878,7 @@ fn prop_event_bus_preserves_per_job_order() {
                     compute: Duration::ZERO,
                     retries: 0,
                     dead_lettered: false,
+                    timing: None,
                 });
             }
             bus.emit(Event::JobDone { job });

@@ -468,3 +468,154 @@ fn sigkilled_run_status_fold_matches_what_resume_replays() {
         "status said {done} done/{pending} pending, resume said: {text}"
     );
 }
+
+// ---------------------------------------------------------------------------
+// `top` failure modes: no journal / unreachable endpoint
+// ---------------------------------------------------------------------------
+
+#[test]
+fn top_on_a_workdir_without_a_journal_fails_with_one_line() {
+    let root = tmp("top-empty");
+    // A directory with neither journal.jsonl nor status.json.
+    let out = Command::new(BIN)
+        .args([
+            "top".to_string(),
+            root.display().to_string(),
+            "--frames=1".to_string(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        !out.status.success(),
+        "top must exit nonzero on an empty workdir"
+    );
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    let lines: Vec<&str> =
+        stderr.lines().filter(|l| !l.trim().is_empty()).collect();
+    assert_eq!(lines.len(), 1, "one-line error, got: {stderr}");
+    assert!(
+        lines[0].starts_with("error:")
+            && lines[0].contains("nothing to report"),
+        "got: {stderr}"
+    );
+}
+
+#[test]
+fn top_on_an_unreachable_endpoint_fails_fast_with_one_line() {
+    // Port 1 is reserved and nothing listens on it; the connect must
+    // be refused (or time out at the 2s connect deadline), never hang.
+    let start = Instant::now();
+    let out = Command::new(BIN)
+        .args([
+            "top".to_string(),
+            "127.0.0.1:1".to_string(),
+            "--frames=1".to_string(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        !out.status.success(),
+        "top must exit nonzero on an unreachable endpoint"
+    );
+    assert!(
+        start.elapsed() < Duration::from_secs(30),
+        "top hung instead of failing fast ({:?})",
+        start.elapsed()
+    );
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    let lines: Vec<&str> =
+        stderr.lines().filter(|l| !l.trim().is_empty()).collect();
+    assert_eq!(lines.len(), 1, "one-line error, got: {stderr}");
+    assert!(
+        lines[0].starts_with("error:") && lines[0].contains("127.0.0.1:1"),
+        "the error names the endpoint, got: {stderr}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Golden schema: the status.json / /status field names are a contract
+// ---------------------------------------------------------------------------
+
+/// Pin the snapshot schema documented in docs/telemetry.md.  Renaming
+/// or dropping a field is a breaking change for every scraper pointed
+/// at status.json or a `--metrics-listen` /status endpoint — this test
+/// is the tripwire.
+#[test]
+fn status_snapshot_schema_field_names_are_pinned() {
+    let root = tmp("golden");
+    let input = root.join("input");
+    write_corpus(&input, 6);
+    let eng = LocalEngine::new(2);
+    run(
+        &wc_opts(&input, root.join("out"), 95004)
+            .keep(true)
+            .workdir(&root),
+        &wc_apps(),
+        &eng,
+    )
+    .unwrap();
+    let wd = root.join(".MAPRED.95004");
+    let status =
+        Json::parse(&fs::read_to_string(wd.join(STATUS_FILE)).unwrap())
+            .unwrap();
+
+    let keys = |j: &Json| -> Vec<String> {
+        j.as_obj()
+            .expect("object")
+            .keys()
+            .cloned()
+            .collect()
+    };
+    // Top level (sorted — the writer emits objects in key order).
+    // `resumed` only appears on resumed invocations.
+    assert_eq!(
+        keys(&status),
+        [
+            "at_ms",
+            "jobs",
+            "latency",
+            "metrics",
+            "queue_depth",
+            "seq",
+            "totals",
+            "v",
+            "workers"
+        ],
+        "top-level status.json schema changed"
+    );
+    assert_eq!(num(status.get("v")), 1, "schema version");
+    assert_eq!(
+        keys(status.get("totals").unwrap()),
+        ["done", "errors", "failed_jobs", "retries", "running", "submitted"],
+        "totals schema changed"
+    );
+    let jobs = status.get("jobs").and_then(Json::as_obj).unwrap();
+    assert!(!jobs.is_empty());
+    for j in jobs.values() {
+        assert_eq!(
+            keys(j),
+            [
+                "done",
+                "errors",
+                "failed",
+                "name",
+                "ntasks",
+                "reassigned",
+                "retries",
+                "running",
+                "state",
+                "task_errors"
+            ],
+            "per-job schema changed"
+        );
+    }
+    assert_eq!(
+        keys(status.get("latency").unwrap()),
+        ["compute", "dispatch", "startup"],
+        "latency schema changed"
+    );
+    // Worker rows only exist on the remote engine; the key itself is
+    // part of the contract either way.
+    assert!(status.get("workers").and_then(Json::as_obj).is_some());
+    assert!(status.get("metrics").is_some());
+}

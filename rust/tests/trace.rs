@@ -1,0 +1,443 @@
+//! Tracing acceptance suite (DESIGN.md §12).
+//!
+//! The bar: `llmapreduce trace` assembles per-task span timelines
+//! whose durations agree with the journal the `status` fold reads —
+//! on the local *and* remote engines, and after a real SIGKILL +
+//! resume.  The exported Chrome trace must be structurally loadable
+//! (every phase slice nests inside its task's umbrella slice), and
+//! the critical-path report's per-phase totals must sum to within 5%
+//! of the measured makespan (the tiling makes them exact).
+
+use std::fs;
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use llmapreduce::mapreduce::{run, Apps};
+use llmapreduce::options::Options;
+use llmapreduce::prelude::LocalEngine;
+use llmapreduce::scheduler::journal::{Replay, JOURNAL_FILE};
+use llmapreduce::telemetry::{critical_path, trace_workdir, Trace};
+use llmapreduce::util::json::Json;
+
+const BIN: &str = env!("CARGO_BIN_EXE_llmapreduce");
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("llmr-trace-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn write_corpus(input: &Path, nfiles: usize) {
+    fs::create_dir_all(input).unwrap();
+    let vocab = ["alpha", "beta", "gamma", "delta", "epsilon"];
+    for i in 0..nfiles {
+        let mut text = String::new();
+        for (w, word) in vocab.iter().enumerate() {
+            for _ in 0..(i + w) % 4 + 1 {
+                text.push_str(word);
+                text.push(' ');
+            }
+        }
+        fs::write(input.join(format!("doc{i:02}.txt")), text).unwrap();
+    }
+}
+
+fn wc_apps() -> Apps {
+    Apps {
+        mapper: llmapreduce::apps::registry::resolve_mapper("wordcount")
+            .unwrap(),
+        reducer: Some(
+            llmapreduce::apps::registry::resolve_reducer(
+                "wordcount-reducer",
+            )
+            .unwrap(),
+        ),
+    }
+}
+
+/// The two acceptance invariants on an assembled trace:
+///
+/// 1. every task's span durations sum to its journal-recorded
+///    `finished_us` (the trace agrees with the `status`/replay fold);
+/// 2. the critical path's per-phase totals sum to within 5% of the
+///    makespan (exact, by the tiling construction).
+fn assert_trace_invariants(trace: &Trace, replay: &Replay) {
+    let traced: usize = trace.jobs.values().map(|j| j.tasks.len()).sum();
+    let journaled: usize =
+        replay.jobs.values().map(|j| j.timings.len()).sum();
+    assert_eq!(traced, journaled, "one task trace per journaled timing");
+    assert!(traced > 0, "nothing was traced");
+    for (id, job) in trace.jobs.iter() {
+        let folded = &replay.jobs[id];
+        for (task_id, t) in job.tasks.iter() {
+            let (retries, timing) = &folded.timings[task_id];
+            assert_eq!(t.attempt, *retries);
+            assert_eq!(&t.timing, timing, "trace re-reads the journal");
+            let span_sum: u64 = t.spans.iter().map(|s| s.dur_us()).sum();
+            assert_eq!(
+                span_sum,
+                t.finished_us(),
+                "job {id} task {task_id}: spans must tile the task"
+            );
+        }
+    }
+    let path = critical_path(trace).expect("completed tasks exist");
+    let sum: u64 = path.phase_totals_us.iter().sum();
+    assert_eq!(path.makespan_us, trace.makespan_us());
+    assert!(
+        sum.abs_diff(path.makespan_us) as f64
+            <= 0.05 * path.makespan_us as f64,
+        "phase totals {sum}us vs makespan {}us drift past 5%",
+        path.makespan_us
+    );
+}
+
+/// Structural Perfetto-loadability: valid JSON, a `traceEvents` array,
+/// and every phase slice nested inside its task's umbrella bounds.
+fn assert_chrome_trace_nests(doc: &Json, expected_tasks: usize) {
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    let mut umbrellas = 0usize;
+    let mut bounds = std::collections::BTreeMap::new();
+    for e in events {
+        if e.get("ph").and_then(Json::as_str) != Some("X") {
+            continue;
+        }
+        let pid = e.get("pid").and_then(Json::as_usize).unwrap();
+        let tid = e.get("tid").and_then(Json::as_usize).unwrap();
+        let ts = e.get("ts").and_then(Json::as_usize).unwrap();
+        let dur = e.get("dur").and_then(Json::as_usize).unwrap();
+        let name = e.get("name").and_then(Json::as_str).unwrap();
+        if name.starts_with("task ") {
+            umbrellas += 1;
+            bounds.insert((pid, tid), ts + dur);
+        } else {
+            let end = bounds
+                .get(&(pid, tid))
+                .expect("umbrella slice precedes its phases");
+            assert!(
+                ts + dur <= *end,
+                "phase '{name}' escapes task ({pid},{tid})"
+            );
+        }
+    }
+    assert_eq!(umbrellas, expected_tasks, "one umbrella slice per task");
+}
+
+// ---------------------------------------------------------------------------
+// Local engine
+// ---------------------------------------------------------------------------
+
+#[test]
+fn local_engine_trace_agrees_with_the_journal_fold() {
+    let root = tmp("local");
+    let input = root.join("input");
+    write_corpus(&input, 10);
+    let eng = LocalEngine::new(2);
+    run(
+        &Options::new(&input, root.join("out"), "wordcount")
+            .np(4)
+            .reducer("wordcount-reducer")
+            .pid(96001)
+            .keep(true)
+            .workdir(&root),
+        &wc_apps(),
+        &eng,
+    )
+    .unwrap();
+    let wd = root.join(".MAPRED.96001");
+
+    let trace = trace_workdir(&wd).unwrap();
+    let replay = Replay::load(&wd.join(JOURNAL_FILE)).unwrap();
+    assert_trace_invariants(&trace, &replay);
+    let traced: usize = trace.jobs.values().map(|j| j.tasks.len()).sum();
+    assert_eq!(traced, 5, "4 map tasks + 1 reduce task");
+
+    // The subcommand: report on stdout, Chrome export in the workdir.
+    let out = Command::new(BIN)
+        .args(["trace".to_string(), wd.display().to_string()])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "trace failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    for section in
+        ["critical path", "per-phase totals", "stragglers", "wrote"]
+    {
+        assert!(text.contains(section), "missing '{section}': {text}");
+    }
+    let doc = Json::parse(
+        &fs::read_to_string(wd.join("trace.json")).unwrap(),
+    )
+    .unwrap();
+    assert_chrome_trace_nests(&doc, traced);
+
+    // The raw-JSON format round-trips the assembled structure.
+    let raw = root.join("raw.json");
+    let out = Command::new(BIN)
+        .args([
+            "trace".to_string(),
+            wd.display().to_string(),
+            "--format=json".to_string(),
+            format!("--out={}", raw.display()),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let doc = Json::parse(&fs::read_to_string(&raw).unwrap()).unwrap();
+    assert_eq!(
+        doc.get("makespan_us").and_then(Json::as_usize),
+        Some(trace.makespan_us() as usize)
+    );
+}
+
+#[test]
+fn trace_on_a_journalless_workdir_fails_with_one_line() {
+    let root = tmp("nojournal");
+    let out = Command::new(BIN)
+        .args(["trace".to_string(), root.display().to_string()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    let lines: Vec<&str> =
+        stderr.lines().filter(|l| !l.trim().is_empty()).collect();
+    assert_eq!(lines.len(), 1, "one-line error, got: {stderr}");
+    assert!(lines[0].contains("tracing needs a journaled run"));
+}
+
+#[test]
+fn trace_off_runs_leave_nothing_to_trace() {
+    let root = tmp("off");
+    let input = root.join("input");
+    write_corpus(&input, 6);
+    let eng = LocalEngine::new(2);
+    run(
+        &Options::new(&input, root.join("out"), "wordcount")
+            .np(2)
+            .pid(96002)
+            .trace(false)
+            .keep(true)
+            .workdir(&root),
+        &wc_apps(),
+        &eng,
+    )
+    .unwrap();
+    let wd = root.join(".MAPRED.96002");
+    assert!(wd.join(JOURNAL_FILE).is_file(), "journal unaffected");
+    let err = trace_workdir(&wd).unwrap_err();
+    assert!(
+        format!("{err}").contains("no span timings"),
+        "got: {err}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Remote engine, SIGKILL mid-job, resume, then trace offline
+// ---------------------------------------------------------------------------
+
+fn wait_for_workdir(base: &Path, limit: Duration) -> PathBuf {
+    let start = Instant::now();
+    loop {
+        if let Ok(entries) = fs::read_dir(base) {
+            for e in entries.flatten() {
+                let name = e.file_name().to_string_lossy().to_string();
+                if name.starts_with(".MAPRED.") {
+                    return e.path();
+                }
+            }
+        }
+        assert!(
+            start.elapsed() < limit,
+            "no .MAPRED.* workdir appeared under {}",
+            base.display()
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn wait_for_first_done(wd: &Path, limit: Duration) {
+    let start = Instant::now();
+    let path = wd.join(JOURNAL_FILE);
+    loop {
+        if let Ok(text) = fs::read_to_string(&path) {
+            if text.contains("\"rec\":\"done\"") {
+                return;
+            }
+        }
+        assert!(
+            start.elapsed() < limit,
+            "no task completed within {limit:?} ({})",
+            path.display()
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn wait_for_listener(port: u16, limit: Duration) {
+    let start = Instant::now();
+    let addr = format!("127.0.0.1:{port}");
+    loop {
+        if TcpStream::connect(&addr).is_ok() {
+            return;
+        }
+        assert!(
+            start.elapsed() < limit,
+            "no listener on {addr} within {limit:?}"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+fn wait_exit(child: &mut Child, what: &str, limit: Duration) {
+    let start = Instant::now();
+    loop {
+        match child.try_wait().unwrap() {
+            Some(st) => {
+                assert!(st.success(), "{what} exited with {st}");
+                return;
+            }
+            None if start.elapsed() > limit => {
+                let _ = child.kill();
+                panic!("{what} did not finish within {limit:?}");
+            }
+            None => std::thread::sleep(Duration::from_millis(25)),
+        }
+    }
+}
+
+fn spawn_worker(port: u16, name: &str) -> Child {
+    Command::new(BIN)
+        .args([
+            "worker".to_string(),
+            format!("--connect=127.0.0.1:{port}"),
+            "--slots=2".to_string(),
+            format!("--name={name}"),
+        ])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap()
+}
+
+#[test]
+fn sigkilled_remote_job_traces_after_resume() {
+    let root = tmp("sigkill-remote");
+    let input = root.join("input");
+    write_corpus(&input, 8);
+    let slow = root.join("slow-map.sh");
+    fs::write(
+        &slow,
+        "#!/bin/sh\nsleep 0.3\ntr 'a-z' 'A-Z' < \"$1\" > \"$2\"\n",
+    )
+    .unwrap();
+    let mapper = format!("sh {}", slow.display());
+    // Two ports per test process, clear of the ephemeral range (the
+    // resume.rs tests offset by +0/+1 from the same base; stay clear).
+    let port1 = 21000 + ((std::process::id() + 7) % 39000) as u16;
+    let port2 = port1 + 1;
+
+    let crash_base = root.join("crash");
+    fs::create_dir_all(&crash_base).unwrap();
+    let mut coord = Command::new(BIN)
+        .current_dir(&root)
+        .args([
+            "run".to_string(),
+            format!("--input={}", input.display()),
+            format!("--output={}", root.join("out").display()),
+            format!("--mapper={mapper}"),
+            "--np=8".to_string(),
+            "--keep=true".to_string(),
+            format!("--workdir={}", crash_base.display()),
+            "--engine=remote".to_string(),
+            format!("--listen=127.0.0.1:{port1}"),
+            "--min-workers=1".to_string(),
+        ])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    wait_for_listener(port1, Duration::from_secs(60));
+    let mut worker1 = spawn_worker(port1, "w1");
+    let wd = wait_for_workdir(&crash_base, Duration::from_secs(60));
+    wait_for_first_done(&wd, Duration::from_secs(120));
+    coord.kill().unwrap(); // SIGKILL: no final flush, no cleanup
+    let _ = coord.wait();
+    let _ = worker1.kill(); // the fleet dies with its coordinator
+    let _ = worker1.wait();
+
+    // The torn journal already traces: the tasks that completed before
+    // the kill carry their span timings.
+    let partial = trace_workdir(&wd).unwrap();
+    let partial_replay = Replay::load(&wd.join(JOURNAL_FILE)).unwrap();
+    assert_trace_invariants(&partial, &partial_replay);
+
+    // Resume on a fresh port with a fresh worker, then trace the
+    // merged journal offline.
+    let mut res = Command::new(BIN)
+        .current_dir(&root)
+        .args([
+            "resume".to_string(),
+            wd.display().to_string(),
+            "--engine=remote".to_string(),
+            format!("--listen=127.0.0.1:{port2}"),
+            "--min-workers=1".to_string(),
+        ])
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .unwrap();
+    wait_for_listener(port2, Duration::from_secs(60));
+    let mut worker2 = spawn_worker(port2, "w2");
+    wait_exit(&mut res, "remote resume", Duration::from_secs(120));
+    let _ = worker2.kill();
+    let _ = worker2.wait();
+
+    let trace = trace_workdir(&wd).unwrap();
+    let replay = Replay::load(&wd.join(JOURNAL_FILE)).unwrap();
+    assert!(trace.resumes >= 1, "the resume marker is folded in");
+    assert_trace_invariants(&trace, &replay);
+    // Every one of the 8 map tasks is traced: pre-kill completions from
+    // the first coordinator's records, the rest from the resumed run.
+    let map_job = trace
+        .jobs
+        .values()
+        .find(|j| j.ntasks == 8)
+        .expect("map job traced");
+    assert_eq!(map_job.tasks.len(), 8, "all map tasks carry spans");
+    // Remote tasks are worker-attributed in their spans' source timing.
+    assert!(
+        map_job
+            .tasks
+            .values()
+            .all(|t| t.timing.worker.is_some()),
+        "remote task timings carry worker attribution"
+    );
+
+    let out = Command::new(BIN)
+        .args(["trace".to_string(), wd.display().to_string()])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "trace failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("resumed"), "report notes the resume: {text}");
+    let doc = Json::parse(
+        &fs::read_to_string(wd.join("trace.json")).unwrap(),
+    )
+    .unwrap();
+    let traced: usize = trace.jobs.values().map(|j| j.tasks.len()).sum();
+    assert_chrome_trace_nests(&doc, traced);
+}
