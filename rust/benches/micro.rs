@@ -19,6 +19,7 @@ use llmapreduce::options::{Distribution, Options, SchedulerKind};
 use llmapreduce::prelude::*;
 use llmapreduce::scheduler::dialect::dialect_for;
 use llmapreduce::scheduler::journal::{Journal, Record, Replay};
+use llmapreduce::scheduler::remote::protocol::Message;
 use llmapreduce::scheduler::{JobSpec, TaskSpec, TaskTiming, TaskWork};
 use llmapreduce::telemetry::{chrome_trace, Trace};
 use llmapreduce::util::json::Json;
@@ -297,6 +298,60 @@ fn main() {
             std::hint::black_box(run(&opts, &apps, &engine).unwrap());
         });
         print(&s, 6, "files");
+        all.push(s);
+    }
+
+    // Wire codec: the per-frame cost the remote dispatch hot path pays
+    // for every assignment — single-task frames vs a 64-task batch, in
+    // both framings.  Batch rows count 64 tasks, so the tasks/s column
+    // shows the amortization directly (DESIGN.md §13).
+    let assign = |i: usize| llmapreduce::scheduler::remote::protocol::TaskAssign {
+        job: 7,
+        task_idx: i,
+        task_id: i + 1,
+        work: llmapreduce::scheduler::remote::protocol::WireWork::Synthetic {
+            startup_us: 1_000,
+            per_item_us: 250,
+            items: 4,
+            launches: 1,
+        },
+    };
+    let single = {
+        let a = assign(0);
+        Message::Assign {
+            job: a.job,
+            task_idx: a.task_idx,
+            task_id: a.task_id,
+            work: a.work,
+        }
+    };
+    let batch = Message::AssignBatch {
+        tasks: (0..64).map(assign).collect(),
+    };
+    for (label, msg, tasks) in
+        [("single", &single, 1usize), ("batch64", &batch, 64)]
+    {
+        let line = msg.encode();
+        let bytes = msg.encode_binary();
+        let s = bench_fn(format!("wire/json-encode-{label}"), 10, 2000, || {
+            std::hint::black_box(msg.encode());
+        });
+        print(&s, tasks, "tasks");
+        all.push(s);
+        let s = bench_fn(format!("wire/json-decode-{label}"), 10, 2000, || {
+            std::hint::black_box(Message::decode(&line).unwrap());
+        });
+        print(&s, tasks, "tasks");
+        all.push(s);
+        let s = bench_fn(format!("wire/bin-encode-{label}"), 10, 2000, || {
+            std::hint::black_box(msg.encode_binary());
+        });
+        print(&s, tasks, "tasks");
+        all.push(s);
+        let s = bench_fn(format!("wire/bin-decode-{label}"), 10, 2000, || {
+            std::hint::black_box(Message::decode_binary(&bytes).unwrap());
+        });
+        print(&s, tasks, "tasks");
         all.push(s);
     }
 

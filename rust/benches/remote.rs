@@ -12,6 +12,12 @@
 //! vs ganged N=8) over a two-worker fleet: fewer, larger assignments
 //! amortize shipping the same way ganged launches amortize app
 //! start-up, and the merged output must stay byte-identical.
+//!
+//! The final section is the small-task sweep: 1,000 × ~1ms synthetic
+//! tasks on a two-worker fleet, once over the legacy frame-per-task
+//! line-JSON wire and once with batched binary framing.  Per-task
+//! shipping must drop at least 2x — the acceptance gate for the PR-10
+//! dispatch hot path.
 
 use std::fs;
 use std::path::PathBuf;
@@ -23,6 +29,8 @@ use llmapreduce::mapreduce::{run, Apps};
 use llmapreduce::metrics::report::{render_table, worker_attribution};
 use llmapreduce::options::Options;
 use llmapreduce::prelude::*;
+use llmapreduce::scheduler::remote::WireMode;
+use llmapreduce::scheduler::{JobReport, JobSpec, TaskSpec, TaskWork};
 use llmapreduce::util::fmt_duration;
 use llmapreduce::workload::text::generate_corpus;
 
@@ -70,6 +78,107 @@ fn summarize(
         bytes: fs::read(report.redout_path.as_ref().expect("reduced"))
             .expect("redout readable"),
     }
+}
+
+/// Timing-only row for the small-task sweep (no redout to compare).
+struct SweepRow {
+    label: String,
+    elapsed: Duration,
+    ship_per_task: Duration,
+    compute_per_task: Duration,
+}
+
+/// 1,000 tasks of ~1ms of real (spinning) compute each: the shape where
+/// per-frame wire cost dominates and the PR-10 hot path has to win.
+fn sweep_job() -> JobSpec {
+    let tasks: Vec<TaskSpec> = (0..1_000)
+        .map(|i| TaskSpec {
+            task_id: i + 1,
+            work: TaskWork::Synthetic {
+                startup: Duration::ZERO,
+                per_item: Duration::from_millis(1),
+                items: 1,
+                launches: 1,
+            },
+        })
+        .collect();
+    JobSpec::new("small-task-sweep", tasks)
+}
+
+fn sweep_summarize(
+    label: impl Into<String>,
+    elapsed: Duration,
+    report: &JobReport,
+) -> SweepRow {
+    let n = report.tasks.len().max(1) as u32;
+    let ship: Duration = report.tasks.iter().map(|t| t.shipped).sum();
+    let compute: Duration = report.tasks.iter().map(|t| t.compute).sum();
+    SweepRow {
+        label: label.into(),
+        elapsed,
+        ship_per_task: ship / n,
+        compute_per_task: compute / n,
+    }
+}
+
+/// Run the small-task sweep: local reference, legacy line-JSON
+/// frame-per-task fleet, and batched-binary fleet (two workers × two
+/// slots each).  Returns the three rows in that order.
+fn small_task_sweep() -> Result<Vec<SweepRow>> {
+    let mut out = Vec::new();
+    {
+        let engine = LocalEngine::new(4);
+        let t0 = Instant::now();
+        let report = engine.run(sweep_job())?;
+        out.push(sweep_summarize(
+            "sweep local (4 slots)",
+            t0.elapsed(),
+            &report,
+        ));
+    }
+    for (label, legacy) in [
+        ("sweep json frame-per-task (2 workers)", true),
+        ("sweep batched binary (2 workers)", false),
+    ] {
+        // The baseline pins the pre-PR-10 wire end to end: legacy
+        // workers never advertise a framing, and the coordinator knobs
+        // are off so every task ships as its own line-JSON frame.  The
+        // contender is the PR-10 default: negotiated binary framing,
+        // batch drain, affinity and stealing all on.
+        let config = if legacy {
+            CoordinatorConfig {
+                batch_frames: false,
+                steal: false,
+                ..CoordinatorConfig::default()
+            }
+        } else {
+            CoordinatorConfig::default()
+        };
+        let coordinator = RemoteCoordinator::bind("127.0.0.1:0", config)?;
+        let addr = coordinator.local_addr().to_string();
+        let workers: Vec<_> = (0..2)
+            .map(|i| {
+                let mut config = WorkerConfig::new(addr.clone())
+                    .name(format!("s{i}"))
+                    .slots(2);
+                config = if legacy {
+                    config.legacy()
+                } else {
+                    config.wire(WireMode::Binary)
+                };
+                std::thread::spawn(move || run_worker(config))
+            })
+            .collect();
+        coordinator.wait_for_workers(2, Duration::from_secs(30))?;
+        let t0 = Instant::now();
+        let report = coordinator.run(sweep_job())?;
+        out.push(sweep_summarize(label, t0.elapsed(), &report));
+        drop(coordinator);
+        for w in workers {
+            w.join().expect("worker thread").expect("worker clean exit");
+        }
+    }
+    Ok(out)
 }
 
 fn main() -> Result<()> {
@@ -238,6 +347,55 @@ fn main() -> Result<()> {
         rows.len()
     );
 
+    // Small-task sweep: the dispatch hot path, measured.  1k × ~1ms
+    // synthetic tasks; the batched-binary wire must ship each task at
+    // least 2x cheaper than the legacy frame-per-task line-JSON wire.
+    println!("\n== small-task sweep (1,000 × ~1ms synthetic tasks) ==\n");
+    let sweep = small_task_sweep()?;
+    let sweep_base = sweep[0].elapsed;
+    let sweep_table: Vec<Vec<String>> = sweep
+        .iter()
+        .map(|r| {
+            vec![
+                r.label.clone(),
+                fmt_duration(r.elapsed),
+                fmt_duration(r.ship_per_task),
+                fmt_duration(r.compute_per_task),
+                format!(
+                    "{:.2}",
+                    sweep_base.as_secs_f64()
+                        / r.elapsed.as_secs_f64().max(1e-12)
+                ),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(
+            &[
+                "engine",
+                "makespan",
+                "ship/task",
+                "compute/task",
+                "vs local"
+            ],
+            &sweep_table
+        )
+    );
+    let json_ship = sweep[1].ship_per_task;
+    let bin_ship = sweep[2].ship_per_task;
+    assert!(
+        bin_ship * 2 <= json_ship,
+        "batched binary framing must ship small tasks at least 2x \
+         cheaper than line-JSON per-task: json={json_ship:?} \
+         binary={bin_ship:?}"
+    );
+    println!(
+        "batched binary ships {:.1}x cheaper per task than \
+         json-per-task",
+        json_ship.as_secs_f64() / bin_ship.as_secs_f64().max(1e-12)
+    );
+
     let points: Vec<RemotePoint> = rows
         .iter()
         .map(|r| RemotePoint {
@@ -249,6 +407,15 @@ fn main() -> Result<()> {
                 / r.elapsed.as_secs_f64().max(1e-12),
         })
         .collect();
+    let mut points = points;
+    points.extend(sweep.iter().map(|r| RemotePoint {
+        label: r.label.clone(),
+        makespan: r.elapsed,
+        ship_per_task: r.ship_per_task,
+        compute_per_task: r.compute_per_task,
+        speedup_vs_local: sweep_base.as_secs_f64()
+            / r.elapsed.as_secs_f64().max(1e-12),
+    }));
     let doc = remote_bench_json("cargo-bench-remote", &points);
     let path = artifact_path("BENCH_remote.json");
     fs::write(&path, doc.to_string_pretty())

@@ -818,6 +818,14 @@ mod tests {
                 "trace/chrome-export-256-tasks",
                 "pipeline/trace-on",
                 "pipeline/trace-off",
+                "wire/json-encode-single",
+                "wire/json-decode-single",
+                "wire/bin-encode-single",
+                "wire/bin-decode-single",
+                "wire/json-encode-batch64",
+                "wire/json-decode-batch64",
+                "wire/bin-encode-batch64",
+                "wire/bin-decode-batch64",
             ] {
                 assert!(
                     points.iter().any(|p| p
@@ -833,6 +841,35 @@ mod tests {
             let text = std::fs::read_to_string(&remote).unwrap();
             let doc = crate::util::json::Json::parse(&text).unwrap();
             assert_remote_doc_valid(&doc);
+            // The small-task sweep is the PR-10 acceptance gate: the
+            // batched-binary row must ship each task at least 2x
+            // cheaper than the line-JSON frame-per-task row.
+            let points = doc.get("points").unwrap().as_arr().unwrap();
+            let ship = |label: &str| -> usize {
+                points
+                    .iter()
+                    .find(|p| {
+                        p.get("label").and_then(|l| l.as_str())
+                            == Some(label)
+                    })
+                    .unwrap_or_else(|| {
+                        panic!(
+                            "BENCH_remote.json must carry the \
+                             '{label}' sweep row"
+                        )
+                    })
+                    .get("ship_per_task_us")
+                    .unwrap()
+                    .as_usize()
+                    .unwrap()
+            };
+            let json = ship("sweep json frame-per-task (2 workers)");
+            let bin = ship("sweep batched binary (2 workers)");
+            assert!(
+                bin * 2 <= json,
+                "sweep: batched binary must ship >=2x cheaper \
+                 (json={json}us binary={bin}us)"
+            );
         }
     }
 

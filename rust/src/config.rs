@@ -84,6 +84,12 @@ pub struct RemoteDefaults {
     /// Silence threshold after which a worker is declared dead and its
     /// in-flight tasks reassigned.
     pub heartbeat_timeout: Duration,
+    /// Drain all ready tasks for a worker into one `AssignBatch` frame
+    /// and overcommit its queue (`--batch-frames`, DESIGN.md §13).
+    pub batch_frames: bool,
+    /// Idle workers pull queued tasks from the most-backlogged peer
+    /// when the central queue is dry (`--steal`).
+    pub steal: bool,
 }
 
 impl Default for RemoteDefaults {
@@ -92,6 +98,8 @@ impl Default for RemoteDefaults {
             listen: "127.0.0.1:7171".to_string(),
             min_workers: 1,
             heartbeat_timeout: Duration::from_secs(3),
+            batch_frames: true,
+            steal: true,
         }
     }
 }
@@ -236,6 +244,15 @@ impl Config {
             config.remote.heartbeat_timeout =
                 Duration::from_millis(ms as u64);
         }
+        if let Some(b) =
+            doc.get("remote.batch_frames").and_then(|v| v.as_bool())
+        {
+            config.remote.batch_frames = b;
+        }
+        if let Some(b) = doc.get("remote.steal").and_then(|v| v.as_bool())
+        {
+            config.remote.steal = b;
+        }
 
         // [job]
         let j = &mut config.job_defaults;
@@ -358,6 +375,20 @@ impl Config {
         if let Some(v) = get("LLMR_MIN_WORKERS") {
             if let Ok(n) = v.parse::<usize>() {
                 self.remote.min_workers = n;
+            }
+        }
+        if let Some(v) = get("LLMR_BATCH_FRAMES") {
+            match v.to_ascii_lowercase().as_str() {
+                "1" | "true" | "yes" => self.remote.batch_frames = true,
+                "0" | "false" | "no" => self.remote.batch_frames = false,
+                _ => {}
+            }
+        }
+        if let Some(v) = get("LLMR_STEAL") {
+            match v.to_ascii_lowercase().as_str() {
+                "1" | "true" | "yes" => self.remote.steal = true,
+                "0" | "false" | "no" => self.remote.steal = false,
+                _ => {}
             }
         }
         if let Some(v) = get("LLMR_SPMD") {
@@ -532,6 +563,8 @@ impl Config {
                             .telemetry
                             .metrics_listen
                             .clone(),
+                        batch_frames: self.remote.batch_frames,
+                        steal: self.remote.steal,
                     },
                 )?;
                 if self.remote.min_workers > 0 {
@@ -624,6 +657,30 @@ options = ["-l mem=8G"]
         assert_eq!(c.cluster.nodes, 32);
         assert_eq!(c.cluster.dispatch_latency, Duration::from_millis(5));
         assert_eq!(c.cluster.seed, 7);
+    }
+
+    #[test]
+    fn remote_wire_knobs_parse_and_env_override() {
+        let c = Config::parse(
+            "[remote]\nbatch_frames = false\nsteal = false\n",
+        )
+        .unwrap();
+        assert!(!c.remote.batch_frames);
+        assert!(!c.remote.steal);
+
+        // Defaults are on: batching is the whole point of the hot path.
+        let d = Config::parse("").unwrap();
+        assert!(d.remote.batch_frames);
+        assert!(d.remote.steal);
+
+        let mut c = Config::parse("").unwrap();
+        c.apply_env_overrides(|k| match k {
+            "LLMR_BATCH_FRAMES" => Some("no".into()),
+            "LLMR_STEAL" => Some("0".into()),
+            _ => None,
+        });
+        assert!(!c.remote.batch_frames);
+        assert!(!c.remote.steal);
     }
 
     #[test]

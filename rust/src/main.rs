@@ -100,13 +100,20 @@ RUN OPTIONS (Fig 2 of the paper):
           Prometheus text at /metrics and a JSON snapshot at /status
           while the coordinator runs; scrape live or point
           `llmapreduce top HOST:PORT` at it)
+        --batch-frames[=BOOL] (remote: drain all ready tasks for a
+          worker into one AssignBatch frame and overcommit its queue;
+          default on — legacy workers always get frame-per-task)
+        --steal[=BOOL] (remote: idle workers pull queued tasks from
+          the most-backlogged peer when the central queue is dry;
+          default on)
   resume/dlq also accept --slots/--engine/--listen/--min-workers
-  /--metrics-listen; everything else (apps, Fig 2 options) is
-  restored from the journal.
+  /--metrics-listen/--batch-frames/--steal; everything else (apps,
+  Fig 2 options) is restored from the journal.
 
 WORKER (the daemon side of --engine=remote; spawn one per node):
   llmapreduce worker --connect=HOST:PORT [--slots=N] [--name=S]
                      [--heartbeat-ms=N] [--fail-after=N]
+                     [--wire=json|binary]
 
   Built-in mappers: imageconvert, imagepipeline, matmulchain,
                     wordcount[:ignorefile]
@@ -166,10 +173,13 @@ struct EngineArgs {
     listen: Option<String>,
     min_workers: Option<usize>,
     metrics_listen: Option<String>,
+    batch_frames: Option<bool>,
+    steal: Option<bool>,
 }
 
 /// Split `--slots` / `--engine` / `--listen` / `--min-workers` /
-/// `--metrics-listen` from the Fig 2 options.
+/// `--metrics-listen` / `--batch-frames` / `--steal` from the Fig 2
+/// options.
 fn split_engine_args(args: &[String]) -> (Vec<String>, EngineArgs) {
     let mut rest = Vec::new();
     let mut ea = EngineArgs::default();
@@ -195,6 +205,14 @@ fn split_engine_args(args: &[String]) -> (Vec<String>, EngineArgs) {
             ea.metrics_listen = Some(v.to_string());
         } else if a == "--metrics-listen" {
             ea.metrics_listen = it.next().cloned();
+        } else if let Some(v) = a.strip_prefix("--batch-frames=") {
+            ea.batch_frames = v.parse().ok();
+        } else if a == "--batch-frames" {
+            ea.batch_frames = Some(true);
+        } else if let Some(v) = a.strip_prefix("--steal=") {
+            ea.steal = v.parse().ok();
+        } else if a == "--steal" {
+            ea.steal = Some(true);
         } else {
             rest.push(a.clone());
         }
@@ -220,6 +238,12 @@ fn engine_from(
     }
     if let Some(m) = &engine_args.metrics_listen {
         config.telemetry.metrics_listen = Some(m.clone());
+    }
+    if let Some(b) = engine_args.batch_frames {
+        config.remote.batch_frames = b;
+    }
+    if let Some(s) = engine_args.steal {
+        config.remote.steal = s;
     }
     if config.engine == llmapreduce::config::EngineKind::Remote {
         println!(
@@ -570,9 +594,13 @@ fn cmd_worker(args: &[String]) -> Result<()> {
     }
     config.heartbeat_interval = Duration::from_millis(w.heartbeat_ms);
     config.fail_after = w.fail_after;
+    config = config.wire(w.wire);
     println!(
-        "worker '{}' joining {} with {} slot(s)",
-        config.name, config.connect, config.slots
+        "worker '{}' joining {} with {} slot(s), preferring {} framing",
+        config.name,
+        config.connect,
+        config.slots,
+        config.wire.as_str()
     );
     run_worker(config)?;
     println!("worker done (coordinator shut down)");

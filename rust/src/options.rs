@@ -718,6 +718,10 @@ pub struct WorkerOptions {
     /// `--fail-after=N`: chaos knob — drop the connection cold upon
     /// receiving the Nth assignment (fault-tolerance testing).
     pub fail_after: Option<usize>,
+    /// `--wire=json|binary`: preferred post-handshake framing,
+    /// negotiated with the coordinator (default json — interoperates
+    /// with any coordinator, and stays greppable on the wire).
+    pub wire: crate::scheduler::remote::protocol::WireMode,
 }
 
 impl WorkerOptions {
@@ -733,6 +737,7 @@ impl WorkerOptions {
         let mut name = None;
         let mut heartbeat_ms = 500u64;
         let mut fail_after = None;
+        let mut wire = crate::scheduler::remote::protocol::WireMode::Json;
         let argv: Vec<String> =
             args.into_iter().map(|s| s.as_ref().to_string()).collect();
         let mut i = 0;
@@ -761,6 +766,11 @@ impl WorkerOptions {
                 }
                 "--fail-after" => {
                     fail_after = Some(parse_count(&key, &take()?)?)
+                }
+                "--wire" => {
+                    wire = crate::scheduler::remote::protocol::WireMode::parse(
+                        &take()?,
+                    )?
                 }
                 other => {
                     return Err(Error::opt(format!(
@@ -791,6 +801,7 @@ impl WorkerOptions {
             name,
             heartbeat_ms,
             fail_after,
+            wire,
         })
     }
 }
@@ -1038,17 +1049,27 @@ mod tests {
         assert_eq!(w.name.as_deref(), Some("w1"));
         assert_eq!(w.heartbeat_ms, 500, "default beacon period");
         assert_eq!(w.fail_after, None);
+        assert_eq!(
+            w.wire,
+            crate::scheduler::remote::protocol::WireMode::Json,
+            "line JSON stays the default framing"
+        );
 
         let w = WorkerOptions::parse_args([
             "--connect", "host:9000",
             "--heartbeat-ms", "250",
             "--fail-after", "2",
+            "--wire", "binary",
         ])
         .unwrap();
         assert_eq!(w.connect, "host:9000");
         assert_eq!(w.slots, 1, "default one slot");
         assert_eq!(w.heartbeat_ms, 250);
         assert_eq!(w.fail_after, Some(2));
+        assert_eq!(
+            w.wire,
+            crate::scheduler::remote::protocol::WireMode::Binary
+        );
     }
 
     #[test]
@@ -1069,6 +1090,11 @@ mod tests {
             "--bogus=1"
         ])
         .is_err());
+        assert!(
+            WorkerOptions::parse_args(["--connect=h:1", "--wire=zstd"])
+                .is_err(),
+            "--wire is strict: a typo must not silently fall back"
+        );
     }
 
     #[test]

@@ -302,8 +302,12 @@ pub struct TaskReport {
     /// (`None` on in-process engines — local, sim).
     pub worker: Option<String>,
     /// Wire-shipping overhead on the remote engine: assignment round-trip
-    /// minus the worker-measured execution time (serialization, network,
-    /// and worker-side queueing).  Zero on in-process engines.
+    /// minus the time the worker held the task (receive to execution end,
+    /// or just the measured execution for pre-PR-10 workers that don't
+    /// stamp receive times).  Covers serialization, network, and
+    /// coordinator-side dispatch; deliberately excludes worker-queue wait
+    /// so batch-shipped tasks aren't charged for sitting behind their
+    /// batch siblings.  Zero on in-process engines.
     pub shipped: Duration,
     /// Outbound slice of `shipped` — dispatch-send to worker-receive —
     /// resolved via the worker's clock-offset estimate.  `None` when

@@ -12,11 +12,19 @@
 //!
 //! Dependency semantics live in the engine-shared
 //! `scheduler::table::JobTable`; this module adds placement:
-//! eligible tasks queue in `ready`, and `try_assign` ships them to the
-//! alive worker with the most free slots (least-loaded first, lowest id
-//! on ties, so independent single-slot workers each take one task before
-//! any takes two).  Failure injection runs **coordinator-side** against
-//! the engine-shared [`FailurePolicy`] *before* a task ships, so per-task
+//! eligible tasks queue in `ready`, and each `try_assign` round drains
+//! them into per-worker buffers — least-loaded worker first (lowest id
+//! on ties), with an affinity bonus for a worker already holding the
+//! task's job siblings or input shard — then flushes each worker's
+//! buffer as one `AssignBatch` frame (one write+flush per worker per
+//! round instead of per task; DESIGN.md §13 has the drain rule).
+//! Batch-capable workers are intentionally overcommitted, so when the
+//! central queue runs dry an idle worker *steals* queued-but-unstarted
+//! tasks back from the most-backlogged peer (the victim gets a
+//! `Revoke` per stolen task).  Legacy workers that never advertised
+//! the capability keep the one-line-JSON-frame-per-task protocol.
+//! Failure injection runs **coordinator-side** against the
+//! engine-shared [`FailurePolicy`] *before* a task ships, so per-task
 //! retry counts replay identically across `--engine=local|sim|remote`.
 //!
 //! # Fault tolerance
@@ -41,7 +49,7 @@
 //! declared dead).  Fine for the localhost fleets this targets; a
 //! per-worker outbox thread is the fix if WAN-scale workers arrive.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
@@ -51,10 +59,10 @@ use std::time::{Duration, Instant};
 use crate::error::{Error, Result};
 use crate::scheduler::failure::FailurePolicy;
 use crate::scheduler::remote::protocol::{
-    Message, WireWork, PROTOCOL_VERSION,
+    Message, TaskAssign, WireMode, WireWork, PROTOCOL_VERSION,
 };
 use crate::scheduler::remote::transport::{split, LineWriter};
-use crate::scheduler::table::{ErrorAction, JobTable, Outcome};
+use crate::scheduler::table::{ErrorAction, JobTable, Outcome, TaskView};
 use crate::scheduler::{Engine, JobId, JobReport, JobSpec, TaskReport};
 use crate::telemetry::{Collector, Event, EventBus, MetricsListener};
 
@@ -70,6 +78,14 @@ pub struct CoordinatorConfig {
     /// (JSON) on while the coordinator lives (`--metrics-listen`).
     /// `None` (the default) serves nothing.
     pub metrics_listen: Option<String>,
+    /// Ship multiple ready tasks to a batch-capable worker in one
+    /// `AssignBatch` frame, overcommitting its queue (`--batch-frames`).
+    /// Off, every worker gets one frame per task and never more tasks
+    /// than slots.
+    pub batch_frames: bool,
+    /// Let an idle worker pull queued-but-unstarted tasks from the
+    /// most-backlogged peer when the central queue is dry (`--steal`).
+    pub steal: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -78,6 +94,8 @@ impl Default for CoordinatorConfig {
             heartbeat_timeout: Duration::from_secs(3),
             policy: FailurePolicy::default(),
             metrics_listen: None,
+            batch_frames: true,
+            steal: true,
         }
     }
 }
@@ -99,9 +117,20 @@ struct WorkerState {
     slots: usize,
     writer: LineWriter,
     in_flight: Vec<(JobId, usize)>,
-    /// Slots currently charged (≥ `in_flight.len()`; exclusive tasks
-    /// charge the whole worker).
+    /// Slots currently charged.  Exclusive tasks charge the whole
+    /// worker; batch shipping overcommits capable workers, so this can
+    /// exceed `slots` (the excess is the worker-local backlog).
     used: usize,
+    /// Peer advertised `Register.wire` — understands `AssignBatch`,
+    /// `CompleteBatch` and `Revoke`.  Legacy peers stay frame-per-task.
+    capable: bool,
+    /// An exclusive task is in flight: the node is reserved whole, no
+    /// other work may be co-resident until it finishes.
+    reserved: bool,
+    /// Recently assigned affinity keys (job + input shard), bounded;
+    /// placement prefers a near-least-loaded worker that already holds
+    /// a task's key (warm per-task app instances, warm input shards).
+    affinity: Vec<u64>,
     last_seen: Instant,
     alive: bool,
     /// NTP-style clock-offset estimate: add this to a worker-clock
@@ -315,7 +344,7 @@ impl Engine for RemoteCoordinator {
         let id = JobId(self.next_id.fetch_add(1, Ordering::Relaxed));
         let ready = core.table.admit(id, spec, Instant::now());
         core.ready.extend(ready);
-        try_assign(&mut core, &self.inner.config.policy);
+        try_assign(&mut core, &self.inner.config);
         core.sample_queue_depth();
         drop(core);
         // Admission may complete zero-task jobs outright.
@@ -387,91 +416,302 @@ impl Drop for RemoteCoordinator {
 // Placement
 // ---------------------------------------------------------------------------
 
-/// Ship ready tasks to free capacity until one side runs dry.  Runs
-/// under the core lock (writers live inside it; sends are small frames
-/// with a bounded write timeout).
-fn try_assign(core: &mut Core, policy: &FailurePolicy) {
-    loop {
-        let Some((jid, idx)) = core.ready.pop_front() else { return };
-        // Stale queue entries (job already failed/completed) drop here.
-        let Some(view) = core.table.view(jid, idx) else { continue };
-        let task = &view.tasks[idx];
+/// Affinity keys of a task: the job it belongs to (SPMD gang siblings
+/// warm the same persistent per-task app instances) and, when the work
+/// names input files, the input shard they live in (directory
+/// locality).  Keys are opaque u64s matched for equality only.
+fn affinity_keys(jid: JobId, view: &TaskView, idx: usize) -> Vec<u64> {
+    // Golden-ratio spread so small job ids don't collide with the
+    // FNV-space shard hashes.
+    let mut keys = vec![jid.0.wrapping_mul(0x9E37_79B9_7F4A_7C15)];
+    if let Some(k) = view.shard_key(idx) {
+        keys.push(k);
+    }
+    keys
+}
 
-        // Engine-shared failure injection: the attempt "crashes at
-        // launch" before it ever ships — consumed a retry, re-enters the
-        // queue; identical (seed, task, attempt) accounting to the local
-        // engine and the simulator.
-        if policy.should_fail(task.task_id, view.attempt) {
-            if core.table.bump_attempt(jid, idx) {
-                core.ready.push_back((jid, idx));
+/// Remember keys a worker now holds (bounded, oldest evicted first).
+fn note_affinity(worker: &mut WorkerState, keys: &[u64]) {
+    const CAP: usize = 128;
+    for &k in keys {
+        if !worker.affinity.contains(&k) {
+            if worker.affinity.len() >= CAP {
+                worker.affinity.remove(0);
             }
-            continue;
+            worker.affinity.push(k);
+        }
+    }
+}
+
+/// Pick a worker for one task: among eligible workers whose load is
+/// within one task of the minimum, prefer an affinity hit, then least
+/// loaded, then lowest id (deterministic spread across equal workers).
+/// Returns `(worker_id, slots_to_charge)`.
+///
+/// Eligibility: exclusive tasks need an idle, unreserved worker and
+/// charge all of its slots (the whole-node `--exclusive` semantics the
+/// simulator models).  Plain tasks need a free slot — unless batch
+/// framing is on and the peer is batch-capable, in which case it may be
+/// overcommitted (the excess queues worker-side and is steal-able).
+fn pick_worker(
+    core: &Core,
+    exclusive: bool,
+    keys: &[u64],
+    batching: bool,
+) -> Option<(u64, usize)> {
+    let eligible = |w: &WorkerState| {
+        w.alive
+            && !w.reserved
+            && if exclusive {
+                w.used == 0
+            } else {
+                (batching && w.capable) || w.used < w.slots
+            }
+    };
+    let min_used = core
+        .workers
+        .values()
+        .filter(|w| eligible(w))
+        .map(|w| w.used)
+        .min()?;
+    core.workers
+        .iter()
+        .filter(|(_, w)| eligible(w) && w.used <= min_used + 1)
+        .min_by_key(|(id, w)| {
+            let hit = keys.iter().any(|k| w.affinity.contains(k));
+            (!hit, w.used, **id)
+        })
+        .map(|(id, w)| (*id, if exclusive { w.slots } else { 1 }))
+}
+
+/// Ship ready tasks to free capacity until one side runs dry.  Runs
+/// under the core lock (writers live inside it; sends are bounded by
+/// the transport's write timeout).
+///
+/// Each round has three phases: (1) drain the ready queue into
+/// per-worker buffers, registering coordinator state immediately; (2)
+/// if the queue ran dry, let idle workers steal from backlogged peers;
+/// (3) flush each worker's buffer — one `AssignBatch` frame for a
+/// batch-capable worker (one write+flush instead of N), frame-per-task
+/// for legacy peers.  A send failure marks that worker dead, which
+/// requeues everything it held (buffered tasks included, since state
+/// was registered up front), and the round restarts.
+fn try_assign(core: &mut Core, config: &CoordinatorConfig) {
+    let policy = &config.policy;
+    loop {
+        let mut pending: BTreeMap<u64, Vec<TaskAssign>> = BTreeMap::new();
+        let mut revokes: Vec<(u64, u64, usize)> = Vec::new();
+
+        // Phase 1: drain.
+        loop {
+            let Some((jid, idx)) = core.ready.pop_front() else { break };
+            // Stale entries (job already failed/completed) drop here.
+            let Some(view) = core.table.view(jid, idx) else { continue };
+            let task = &view.tasks[idx];
+
+            // Engine-shared failure injection: the attempt "crashes at
+            // launch" before it ever ships — consumed a retry,
+            // re-enters the queue; identical (seed, task, attempt)
+            // accounting to the local engine and the simulator.
+            if policy.should_fail(task.task_id, view.attempt) {
+                if core.table.bump_attempt(jid, idx) {
+                    core.ready.push_back((jid, idx));
+                }
+                continue;
+            }
+
+            let keys = affinity_keys(jid, &view, idx);
+            let picked =
+                pick_worker(core, view.exclusive, &keys, config.batch_frames);
+            let Some((wid, need)) = picked else {
+                // No capacity for the queue head: put it back and wait
+                // for a completion, a registration, or a death sweep
+                // (FIFO, like a cluster array job).
+                core.ready.push_front((jid, idx));
+                break;
+            };
+
+            let now = Instant::now();
+            let dispatch_wait = view
+                .eligible_at
+                .map(|t| now.saturating_duration_since(t))
+                .unwrap_or_default();
+            let worker = core.workers.get_mut(&wid).expect("picked above");
+            worker.in_flight.push((jid, idx));
+            worker.used += need;
+            if view.exclusive {
+                worker.reserved = true;
+            }
+            note_affinity(worker, &keys);
+            let worker_name = worker.name.clone();
+            pending.entry(wid).or_default().push(TaskAssign {
+                job: jid.0,
+                task_idx: idx,
+                task_id: task.task_id,
+                work: WireWork::from_work(&task.work),
+            });
+            core.assigned.insert(
+                (jid, idx),
+                Assigned {
+                    worker: wid,
+                    sent_at: now,
+                    dispatch_wait,
+                    attempt: view.attempt,
+                    need,
+                },
+            );
+            core.table.note_assigned(jid, idx, Some(&worker_name));
         }
 
-        // Least-loaded alive worker with room; lowest id on ties
-        // (deterministic spread across equal workers).  Exclusive tasks
-        // need an idle worker and charge all of its slots — the
-        // whole-node `--exclusive` semantics the simulator models.
-        let target = core
+        // Phase 2: steal (only when there is nothing central left).
+        if config.steal && core.ready.is_empty() {
+            steal_backlog(core, &mut pending, &mut revokes);
+        }
+
+        if pending.is_empty() && revokes.is_empty() {
+            return;
+        }
+
+        // Phase 3: flush.
+        let mut dead: Vec<u64> = Vec::new();
+        for &(vid, job, task_idx) in &revokes {
+            if let Some(w) = core.workers.get_mut(&vid) {
+                if w.alive
+                    && w.writer.send(&Message::Revoke { job, task_idx }).is_err()
+                {
+                    dead.push(vid);
+                }
+            }
+        }
+        for (wid, tasks) in pending {
+            let Some(w) = core.workers.get_mut(&wid) else { continue };
+            if !w.alive {
+                continue; // died during revoke flush; mark_dead requeues
+            }
+            let batched =
+                w.capable && config.batch_frames && tasks.len() > 1;
+            let failed = if batched {
+                w.writer.send(&Message::AssignBatch { tasks }).is_err()
+            } else {
+                tasks.into_iter().any(|t| {
+                    w.writer
+                        .send(&Message::Assign {
+                            job: t.job,
+                            task_idx: t.task_idx,
+                            task_id: t.task_id,
+                            work: t.work,
+                        })
+                        .is_err()
+                })
+            };
+            if failed {
+                dead.push(wid);
+            }
+        }
+        if dead.is_empty() {
+            return;
+        }
+        dead.dedup();
+        for wid in dead {
+            // Send failure = dead worker; everything it held (including
+            // tasks buffered this round — state was registered in phase
+            // 1) goes back to the queue front, and the round restarts.
+            mark_dead(core, wid);
+        }
+    }
+}
+
+/// Rebalance a dry queue: an idle worker pulls queued-but-unstarted
+/// tasks from the most-backlogged peer (batch shipping overcommits
+/// workers, so a straggler's local backlog would otherwise pin the
+/// makespan while other workers idle).  Steals from the *end* of the
+/// victim's in-flight list — newest-queued, least likely to have
+/// started — and buffers a `Revoke` per stolen task; a revoke that
+/// loses the race to the victim's executor is harmless (the completion
+/// ownership gate keeps exactly one result).  Stolen tasks are *moves*,
+/// not failures: [`TaskReport::reassigned`] stays untouched.
+fn steal_backlog(
+    core: &mut Core,
+    pending: &mut BTreeMap<u64, Vec<TaskAssign>>,
+    revokes: &mut Vec<(u64, u64, usize)>,
+) {
+    loop {
+        let thief = core
             .workers
             .iter()
-            .filter(|(_, w)| {
-                w.alive
-                    && if view.exclusive {
-                        w.used == 0
-                    } else {
-                        w.used < w.slots
-                    }
-            })
+            .filter(|(_, w)| w.alive && !w.reserved && w.used < w.slots)
             .min_by_key(|(id, w)| (w.used, **id))
-            .map(|(id, w)| {
-                (*id, if view.exclusive { w.slots } else { 1 })
+            .map(|(id, _)| *id);
+        let Some(tid) = thief else { return };
+        let victim = core
+            .workers
+            .iter()
+            .filter(|(id, w)| {
+                // Never steal from a worker with unflushed buffered
+                // tasks this round — the frame hasn't even been sent.
+                **id != tid
+                    && w.alive
+                    && w.in_flight.len() > w.slots
+                    && !pending.contains_key(*id)
+            })
+            .max_by_key(|(id, w)| {
+                (w.in_flight.len() - w.slots, std::cmp::Reverse(**id))
+            })
+            .map(|(id, _)| *id);
+        let Some(vid) = victim else { return };
+        let (free, backlog) = {
+            let t = &core.workers[&tid];
+            let v = &core.workers[&vid];
+            (t.slots - t.used, v.in_flight.len() - v.slots)
+        };
+        // Half the backlog, but never more than the thief can *run*:
+        // stealing into a fresh backlog would just ping-pong tasks.
+        let take = free.min(backlog.div_ceil(2)).max(1);
+        let mut moved = 0usize;
+        for _ in 0..take {
+            let Some(key) =
+                core.workers.get_mut(&vid).and_then(|v| v.in_flight.pop())
+            else {
+                break;
+            };
+            let (jid, idx) = key;
+            // Only move tasks the victim still owns; anything else is a
+            // stale entry and just gets dropped from its list.
+            if core.assigned.get(&key).map(|a| a.worker) != Some(vid) {
+                continue;
+            }
+            let v = core.workers.get_mut(&vid).expect("victim exists");
+            v.used = v.used.saturating_sub(1);
+            let live = core.table.is_live(jid);
+            let view = if live { core.table.view(jid, idx) } else { None };
+            let Some(view) = view else {
+                core.assigned.remove(&key);
+                continue;
+            };
+            let keys = affinity_keys(jid, &view, idx);
+            let now = Instant::now();
+            let t = core.workers.get_mut(&tid).expect("thief exists");
+            t.in_flight.push(key);
+            t.used += 1;
+            note_affinity(t, &keys);
+            let thief_name = t.name.clone();
+            pending.entry(tid).or_default().push(TaskAssign {
+                job: jid.0,
+                task_idx: idx,
+                task_id: view.tasks[idx].task_id,
+                work: WireWork::from_work(&view.tasks[idx].work),
             });
-        let Some((wid, need)) = target else {
-            // No capacity for the queue head: put it back and wait for
-            // a completion, a registration, or a death sweep (FIFO,
-            // like a cluster array job).
-            core.ready.push_front((jid, idx));
-            return;
-        };
-
-        let msg = Message::Assign {
-            job: jid.0,
-            task_idx: idx,
-            task_id: task.task_id,
-            work: WireWork::from_work(&task.work),
-        };
-        let now = Instant::now();
-        let dispatch_wait = view
-            .eligible_at
-            .map(|t| now.saturating_duration_since(t))
-            .unwrap_or_default();
-        let send_failed = {
-            let worker =
-                core.workers.get_mut(&wid).expect("picked above");
-            worker.writer.send(&msg).is_err()
-        };
-        if send_failed {
-            // Send failure = dead worker; requeue and retry placement.
-            core.ready.push_front((jid, idx));
-            mark_dead(core, wid);
-            continue;
+            revokes.push((vid, jid.0, idx));
+            if let Some(a) = core.assigned.get_mut(&key) {
+                a.worker = tid;
+                a.sent_at = now;
+            }
+            core.table.note_assigned(jid, idx, Some(&thief_name));
+            moved += 1;
         }
-        let worker = core.workers.get_mut(&wid).expect("picked above");
-        worker.in_flight.push((jid, idx));
-        worker.used += need;
-        let worker_name = worker.name.clone();
-        core.assigned.insert(
-            (jid, idx),
-            Assigned {
-                worker: wid,
-                sent_at: now,
-                dispatch_wait,
-                attempt: view.attempt,
-                need,
-            },
-        );
-        core.table.note_assigned(jid, idx, Some(&worker_name));
+        if moved == 0 {
+            return;
+        }
     }
 }
 
@@ -485,6 +725,8 @@ fn mark_dead(core: &mut Core, wid: u64) {
     }
     worker.alive = false;
     worker.used = 0;
+    worker.reserved = false;
+    worker.affinity.clear();
     worker.writer.shutdown();
     let name = worker.name.clone();
     let orphans = std::mem::take(&mut worker.in_flight);
@@ -558,15 +800,23 @@ fn serve_worker(inner: &Arc<Inner>, stream: TcpStream) {
     // arrive promptly — a silent connection (port scanner, stray
     // client) must not pin this thread and socket forever.
     reader.set_read_timeout(Some(Duration::from_secs(10)));
-    let (name, slots) = match reader.recv() {
+    let (name, slots, advertised) = match reader.recv() {
         Ok(Some(Message::Register {
             name,
             slots,
             version,
-        })) if version == PROTOCOL_VERSION => (name, slots.max(1)),
+            wire,
+        })) if version == PROTOCOL_VERSION => (name, slots.max(1), wire),
         _ => return, // wrong/late first frame or version: drop it
     };
     reader.set_read_timeout(None);
+    // `wire` present = a PR-10 peer that understands batch/revoke
+    // frames and may ask for binary framing; absent = legacy peer that
+    // must keep getting one line-JSON frame per task.  The handshake
+    // itself is always line-JSON; the negotiated framing starts with
+    // the first post-`Registered` frame in each direction.
+    let capable = advertised.is_some();
+    let mode = advertised.unwrap_or(WireMode::Json);
     let wid = {
         let mut core = inner.lock();
         if core.shutdown {
@@ -574,8 +824,17 @@ fn serve_worker(inner: &Arc<Inner>, stream: TcpStream) {
         }
         let wid = core.next_worker_id;
         core.next_worker_id += 1;
-        if writer.send(&Message::Registered { worker_id: wid }).is_err() {
+        let reply = Message::Registered {
+            worker_id: wid,
+            wire: capable.then_some(mode),
+        };
+        if writer.send(&reply).is_err() {
             return;
+        }
+        // Switch the writer *before* it is parked in WorkerState —
+        // `try_assign` below may ship frames immediately.
+        if mode == WireMode::Binary {
+            writer.set_mode(WireMode::Binary);
         }
         if core.bus.active() {
             core.bus.emit(Event::WorkerRegistered {
@@ -591,6 +850,9 @@ fn serve_worker(inner: &Arc<Inner>, stream: TcpStream) {
                 writer,
                 in_flight: Vec::new(),
                 used: 0,
+                capable,
+                reserved: false,
+                affinity: Vec::new(),
                 last_seen: Instant::now(),
                 alive: true,
                 offset_us: None,
@@ -598,10 +860,13 @@ fn serve_worker(inner: &Arc<Inner>, stream: TcpStream) {
             },
         );
         core.table.set_slots(core.alive_slots().max(1));
-        try_assign(&mut core, &inner.config.policy);
+        try_assign(&mut core, &inner.config);
         core.sample_queue_depth();
         wid
     };
+    if mode == WireMode::Binary {
+        reader.set_mode(WireMode::Binary);
+    }
     inner.workers_cv.notify_all();
 
     loop {
@@ -675,7 +940,24 @@ fn serve_worker(inner: &Arc<Inner>, stream: TcpStream) {
                         on_complete(
                             &mut core, wid, JobId(job), task_idx, outcome,
                         );
-                        try_assign(&mut core, &inner.config.policy);
+                        try_assign(&mut core, &inner.config);
+                        core.sample_queue_depth();
+                        drop(core);
+                        inner.done_cv.notify_all();
+                    }
+                    Message::CompleteBatch { done } => {
+                        // Coalesced replies: fold every completion, then
+                        // run one placement round for the freed slots.
+                        for c in done {
+                            on_complete(
+                                &mut core,
+                                wid,
+                                JobId(c.job),
+                                c.task_idx,
+                                c.outcome,
+                            );
+                        }
+                        try_assign(&mut core, &inner.config);
                         core.sample_queue_depth();
                         drop(core);
                         inner.done_cv.notify_all();
@@ -704,6 +986,11 @@ fn serve_worker(inner: &Arc<Inner>, stream: TcpStream) {
                             if let Some(w) = core.workers.get_mut(&wid)
                             {
                                 w.used = w.used.saturating_sub(need);
+                                if need > 1 {
+                                    // Exclusive attempt over: release
+                                    // the whole-node reservation.
+                                    w.reserved = false;
+                                }
                             }
                             // The engine-shared error policy decides
                             // the task's fate (stop/retry/dlq/skip +
@@ -744,7 +1031,7 @@ fn serve_worker(inner: &Arc<Inner>, stream: TcpStream) {
                                 ErrorAction::Ignore => {}
                             }
                         }
-                        try_assign(&mut core, &inner.config.policy);
+                        try_assign(&mut core, &inner.config);
                         core.sample_queue_depth();
                         drop(core);
                         inner.done_cv.notify_all();
@@ -760,7 +1047,7 @@ fn serve_worker(inner: &Arc<Inner>, stream: TcpStream) {
                 let mut core = inner.lock();
                 if !core.shutdown {
                     mark_dead(&mut core, wid);
-                    try_assign(&mut core, &inner.config.policy);
+                    try_assign(&mut core, &inner.config);
                     core.sample_queue_depth();
                 }
                 drop(core);
@@ -796,6 +1083,11 @@ fn on_complete(
         w.in_flight.retain(|k| *k != (jid, idx));
         if let Some(a) = &assignment {
             w.used = w.used.saturating_sub(a.need);
+            if a.need > 1 {
+                // Exclusive task over: release the whole-node
+                // reservation.
+                w.reserved = false;
+            }
         }
     }
     let Some(view) = core.table.view(jid, idx) else {
@@ -809,7 +1101,19 @@ fn on_complete(
     };
     let exec = outcome.startup() + outcome.compute();
     let roundtrip = now.saturating_duration_since(sent_at);
-    let shipped = roundtrip.saturating_sub(exec);
+    // Wire overhead = round trip minus the *hold*: the span the worker
+    // measured between receiving the frame and finishing execution.
+    // The hold subsumes worker-local queue wait, so a batch-shipped
+    // task that sat in a worker's backlog doesn't book that wait as
+    // shipping cost.  Legacy unstamped frames fall back to subtracting
+    // bare execution time (hold floor), matching pre-batching math.
+    let hold = match (outcome.recv_us, outcome.exec_end_us) {
+        (Some(r), Some(e)) => {
+            Duration::from_micros(e.saturating_sub(r)).max(exec)
+        }
+        _ => exec,
+    };
+    let shipped = roundtrip.saturating_sub(hold);
     // Outbound wire time, resolvable only when the worker stamped its
     // frame.  Preferred path: map the worker's `recv_us` onto our
     // timeline via the heartbeat-derived clock offset and subtract the
@@ -887,7 +1191,7 @@ fn monitor_loop(inner: &Arc<Inner>) {
             for wid in &lapsed {
                 mark_dead(&mut core, *wid);
             }
-            try_assign(&mut core, &inner.config.policy);
+            try_assign(&mut core, &inner.config);
             core.sample_queue_depth();
             inner.done_cv.notify_all();
         }

@@ -33,4 +33,5 @@ pub mod transport;
 pub mod worker;
 
 pub use coordinator::{CoordinatorConfig, RemoteCoordinator};
+pub use protocol::WireMode;
 pub use worker::{run_worker, WorkerConfig};

@@ -1,10 +1,14 @@
 //! The coordinator↔worker wire protocol.
 //!
-//! One [`Message`] per line, encoded as a compact JSON object over
-//! [`crate::util::json`] — no external dependencies, human-readable in a
-//! packet capture, and trivially framed: a `BufRead::read_line` loop is
-//! the whole parser (DESIGN.md §6 discusses why line-delimited JSON over
-//! a binary format).  Malformed frames surface as [`Error::Format`] with
+//! One [`Message`] per frame.  The default framing is one compact JSON
+//! object per line, over [`crate::util::json`] — no external
+//! dependencies, human-readable in a packet capture, and trivially
+//! framed: a `BufRead::read_line` loop is the whole parser (DESIGN.md
+//! §6 discusses why line-delimited JSON over a binary format).  For
+//! many-small-task hot paths a length-prefixed binary framing can be
+//! negotiated per connection ([`WireMode`], DESIGN.md §13); the
+//! handshake itself always stays line-JSON so legacy peers
+//! interoperate.  Malformed frames surface as [`Error::Format`] with
 //! `kind = "wire"`, never a panic — a coordinator must survive a
 //! garbage-spewing peer.
 //!
@@ -25,6 +29,71 @@ use crate::util::json::{obj, Json};
 
 /// Protocol revision, checked at registration.
 pub const PROTOCOL_VERSION: usize = 1;
+
+/// Framing for post-handshake traffic, negotiated at registration: a
+/// worker advertises its preference in [`Message::Register`] and the
+/// coordinator answers in kind in [`Message::Registered`].  The
+/// handshake itself is always line-JSON, so legacy peers (which never
+/// send or see the `wire` field) interoperate unchanged.  Line-JSON
+/// stays the default: it is debuggable in a packet capture, and the
+/// binary framing only pays off on many-small-task hot paths
+/// (DESIGN.md §13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WireMode {
+    /// One compact-JSON object per `\n`-terminated line (the default).
+    #[default]
+    Json,
+    /// 4-byte big-endian length prefix + tag-based binary payload.
+    Binary,
+}
+
+impl WireMode {
+    /// Strict parse for option surfaces (`--wire=json|binary`).
+    pub fn parse(s: &str) -> Result<WireMode> {
+        match s {
+            "json" => Ok(WireMode::Json),
+            "binary" => Ok(WireMode::Binary),
+            other => Err(crate::error::Error::opt(format!(
+                "--wire must be json|binary, got '{other}'"
+            ))),
+        }
+    }
+
+    /// Lenient decode for wire frames: an unknown advertisement from a
+    /// future peer degrades to JSON instead of failing registration.
+    fn lenient(s: &str) -> WireMode {
+        if s == "binary" {
+            WireMode::Binary
+        } else {
+            WireMode::Json
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            WireMode::Json => "json",
+            WireMode::Binary => "binary",
+        }
+    }
+}
+
+/// One task inside an [`Message::AssignBatch`] frame (the same fields
+/// as a standalone [`Message::Assign`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskAssign {
+    pub job: u64,
+    pub task_idx: usize,
+    pub task_id: usize,
+    pub work: WireWork,
+}
+
+/// One completion inside a [`Message::CompleteBatch`] frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskComplete {
+    pub job: u64,
+    pub task_idx: usize,
+    pub outcome: WireOutcome,
+}
 
 /// A malformed-frame error (the only error shape this module emits;
 /// the transport layer reuses it for oversize / non-UTF8 frames).
@@ -291,14 +360,25 @@ impl WireOutcome {
 /// Everything that crosses the wire, in both directions.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
-    /// Worker → coordinator, first frame of a connection.
+    /// Worker → coordinator, first frame of a connection.  `wire` is
+    /// the PR-10 capability advertisement: its *presence* marks a peer
+    /// that understands batch frames and [`Message::Revoke`], its value
+    /// is the preferred post-handshake framing.  Legacy workers omit
+    /// it and keep the per-task line-JSON protocol.
     Register {
         name: String,
         slots: usize,
         version: usize,
+        wire: Option<WireMode>,
     },
-    /// Coordinator → worker, the registration reply.
-    Registered { worker_id: u64 },
+    /// Coordinator → worker, the registration reply.  `wire` answers
+    /// the advertisement in kind (absent from legacy coordinators, so
+    /// a new worker talking to an old coordinator stays on per-task
+    /// line-JSON).
+    Registered {
+        worker_id: u64,
+        wire: Option<WireMode>,
+    },
     /// Worker → coordinator liveness beacon; a lapse triggers
     /// reassignment of the worker's in-flight tasks.  Newer workers
     /// also stamp the beacon with their monotonic send time (µs since
@@ -323,12 +403,25 @@ pub enum Message {
         task_id: usize,
         work: WireWork,
     },
+    /// Coordinator → worker: run all of these tasks — one write+flush
+    /// for a whole dispatch round instead of one frame per task.  Only
+    /// sent to workers whose `Register` advertised the capability.
+    AssignBatch { tasks: Vec<TaskAssign> },
+    /// Coordinator → worker: forget this task if it is still queued
+    /// (it was stolen by an idle peer).  Racing with execution is
+    /// benign — the coordinator's ownership gate drops the losing
+    /// completion.
+    Revoke { job: u64, task_idx: usize },
     /// Worker → coordinator: the task succeeded.
     Complete {
         job: u64,
         task_idx: usize,
         outcome: WireOutcome,
     },
+    /// Worker → coordinator: several tasks finished close together and
+    /// their completions coalesced into one frame.  Only sent when the
+    /// coordinator's `Registered` reply carried a `wire` answer.
+    CompleteBatch { done: Vec<TaskComplete> },
     /// Worker → coordinator: the task raised a real (non-injected)
     /// error; the coordinator fails the job and cascades.
     Failed {
@@ -362,16 +455,29 @@ impl Message {
                 name,
                 slots,
                 version,
-            } => obj(vec![
-                ("type", "register".into()),
-                ("name", name.as_str().into()),
-                ("slots", (*slots).into()),
-                ("version", (*version).into()),
-            ]),
-            Message::Registered { worker_id } => obj(vec![
-                ("type", "registered".into()),
-                ("worker_id", (*worker_id as usize).into()),
-            ]),
+                wire,
+            } => {
+                let mut f = vec![
+                    ("type", "register".into()),
+                    ("name", name.as_str().into()),
+                    ("slots", (*slots).into()),
+                    ("version", (*version).into()),
+                ];
+                if let Some(w) = wire {
+                    f.push(("wire", w.as_str().into()));
+                }
+                obj(f)
+            }
+            Message::Registered { worker_id, wire } => {
+                let mut f = vec![
+                    ("type", "registered".into()),
+                    ("worker_id", (*worker_id as usize).into()),
+                ];
+                if let Some(w) = wire {
+                    f.push(("wire", w.as_str().into()));
+                }
+                obj(f)
+            }
             Message::Heartbeat {
                 worker_id,
                 sent_us,
@@ -405,6 +511,20 @@ impl Message {
                 ("task_id", (*task_id).into()),
                 ("work", work.to_json()),
             ]),
+            Message::AssignBatch { tasks } => obj(vec![
+                ("type", "assign_batch".into()),
+                (
+                    "tasks",
+                    Json::Arr(
+                        tasks.iter().map(assign_to_json).collect(),
+                    ),
+                ),
+            ]),
+            Message::Revoke { job, task_idx } => obj(vec![
+                ("type", "revoke".into()),
+                ("job", (*job as usize).into()),
+                ("task_idx", (*task_idx).into()),
+            ]),
             Message::Complete {
                 job,
                 task_idx,
@@ -413,33 +533,26 @@ impl Message {
                 ("type", "complete".into()),
                 ("job", (*job as usize).into()),
                 ("task_idx", (*task_idx).into()),
+                ("outcome", outcome_to_json(outcome)),
+            ]),
+            Message::CompleteBatch { done } => obj(vec![
+                ("type", "complete_batch".into()),
                 (
-                    "outcome",
-                    obj(vec![
-                        (
-                            "startup_us",
-                            (outcome.startup_us as usize).into(),
-                        ),
-                        (
-                            "compute_us",
-                            (outcome.compute_us as usize).into(),
-                        ),
-                        ("launches", outcome.launches.into()),
-                        ("items", outcome.items.into()),
-                    ]
-                    .into_iter()
-                    .chain(
-                        [
-                            ("recv_us", outcome.recv_us),
-                            ("exec_start_us", outcome.exec_start_us),
-                            ("exec_end_us", outcome.exec_end_us),
-                        ]
-                        .into_iter()
-                        .filter_map(|(k, us)| {
-                            us.map(|us| (k, (us as usize).into()))
-                        }),
-                    )
-                    .collect()),
+                    "done",
+                    Json::Arr(
+                        done.iter()
+                            .map(|c| {
+                                obj(vec![
+                                    ("job", (c.job as usize).into()),
+                                    ("task_idx", c.task_idx.into()),
+                                    (
+                                        "outcome",
+                                        outcome_to_json(&c.outcome),
+                                    ),
+                                ])
+                            })
+                            .collect(),
+                    ),
                 ),
             ]),
             Message::Failed {
@@ -462,9 +575,11 @@ impl Message {
                 name: str_field(v, "name")?.to_string(),
                 slots: usize_field(v, "slots")?,
                 version: usize_field(v, "version")?,
+                wire: opt_wire_field(v),
             }),
             "registered" => Ok(Message::Registered {
                 worker_id: usize_field(v, "worker_id")? as u64,
+                wire: opt_wire_field(v),
             }),
             "heartbeat" => Ok(Message::Heartbeat {
                 worker_id: usize_field(v, "worker_id")? as u64,
@@ -474,35 +589,42 @@ impl Message {
             "heartbeat_ack" => Ok(Message::HeartbeatAck {
                 echo_us: usize_field(v, "echo_us")? as u64,
             }),
-            "assign" => Ok(Message::Assign {
-                job: usize_field(v, "job")? as u64,
-                task_idx: usize_field(v, "task_idx")?,
-                task_id: usize_field(v, "task_id")?,
-                work: WireWork::from_json(
-                    v.get("work")
-                        .ok_or_else(|| frame_err("assign without work"))?,
-                )?,
-            }),
-            "complete" => {
-                let o = v
-                    .get("outcome")
-                    .ok_or_else(|| frame_err("complete without outcome"))?;
-                Ok(Message::Complete {
-                    job: usize_field(v, "job")? as u64,
-                    task_idx: usize_field(v, "task_idx")?,
-                    outcome: WireOutcome {
-                        startup_us: usize_field(o, "startup_us")? as u64,
-                        compute_us: usize_field(o, "compute_us")? as u64,
-                        launches: usize_field(o, "launches")?,
-                        items: usize_field(o, "items")?,
-                        // Optional on the wire: pre-PR-9 workers don't
-                        // stamp their frames.
-                        recv_us: opt_us_field(o, "recv_us"),
-                        exec_start_us: opt_us_field(o, "exec_start_us"),
-                        exec_end_us: opt_us_field(o, "exec_end_us"),
-                    },
+            "assign" => {
+                let t = assign_from_json(v)?;
+                Ok(Message::Assign {
+                    job: t.job,
+                    task_idx: t.task_idx,
+                    task_id: t.task_id,
+                    work: t.work,
                 })
             }
+            "assign_batch" => Ok(Message::AssignBatch {
+                tasks: arr_field(v, "tasks")?
+                    .iter()
+                    .map(assign_from_json)
+                    .collect::<Result<_>>()?,
+            }),
+            "revoke" => Ok(Message::Revoke {
+                job: usize_field(v, "job")? as u64,
+                task_idx: usize_field(v, "task_idx")?,
+            }),
+            "complete" => Ok(Message::Complete {
+                job: usize_field(v, "job")? as u64,
+                task_idx: usize_field(v, "task_idx")?,
+                outcome: outcome_from_json(v)?,
+            }),
+            "complete_batch" => Ok(Message::CompleteBatch {
+                done: arr_field(v, "done")?
+                    .iter()
+                    .map(|c| {
+                        Ok(TaskComplete {
+                            job: usize_field(c, "job")? as u64,
+                            task_idx: usize_field(c, "task_idx")?,
+                            outcome: outcome_from_json(c)?,
+                        })
+                    })
+                    .collect::<Result<_>>()?,
+            }),
             "failed" => Ok(Message::Failed {
                 job: usize_field(v, "job")? as u64,
                 task_idx: usize_field(v, "task_idx")?,
@@ -514,6 +636,66 @@ impl Message {
             }
         }
     }
+}
+
+// -- shared (de)serializers for single and batched frames ------------------
+
+fn assign_to_json(t: &TaskAssign) -> Json {
+    obj(vec![
+        ("job", (t.job as usize).into()),
+        ("task_idx", t.task_idx.into()),
+        ("task_id", t.task_id.into()),
+        ("work", t.work.to_json()),
+    ])
+}
+
+fn assign_from_json(v: &Json) -> Result<TaskAssign> {
+    Ok(TaskAssign {
+        job: usize_field(v, "job")? as u64,
+        task_idx: usize_field(v, "task_idx")?,
+        task_id: usize_field(v, "task_id")?,
+        work: WireWork::from_json(
+            v.get("work")
+                .ok_or_else(|| frame_err("assign without work"))?,
+        )?,
+    })
+}
+
+fn outcome_to_json(outcome: &WireOutcome) -> Json {
+    let mut f: Vec<(&str, Json)> = vec![
+        ("startup_us", (outcome.startup_us as usize).into()),
+        ("compute_us", (outcome.compute_us as usize).into()),
+        ("launches", outcome.launches.into()),
+        ("items", outcome.items.into()),
+    ];
+    for (k, us) in [
+        ("recv_us", outcome.recv_us),
+        ("exec_start_us", outcome.exec_start_us),
+        ("exec_end_us", outcome.exec_end_us),
+    ] {
+        if let Some(us) = us {
+            f.push((k, (us as usize).into()));
+        }
+    }
+    obj(f)
+}
+
+/// Decode the `outcome` object of a complete frame (or batch entry).
+fn outcome_from_json(v: &Json) -> Result<WireOutcome> {
+    let o = v
+        .get("outcome")
+        .ok_or_else(|| frame_err("complete without outcome"))?;
+    Ok(WireOutcome {
+        startup_us: usize_field(o, "startup_us")? as u64,
+        compute_us: usize_field(o, "compute_us")? as u64,
+        launches: usize_field(o, "launches")?,
+        items: usize_field(o, "items")?,
+        // Optional on the wire: pre-PR-9 workers don't stamp their
+        // frames.
+        recv_us: opt_us_field(o, "recv_us"),
+        exec_start_us: opt_us_field(o, "exec_start_us"),
+        exec_end_us: opt_us_field(o, "exec_end_us"),
+    })
 }
 
 // -- field accessors that turn shape errors into Error::Format ------------
@@ -545,6 +727,16 @@ fn opt_us_field(v: &Json, key: &str) -> Option<u64> {
     v.as_obj()?.get(key).and_then(Json::as_usize).map(|n| n as u64)
 }
 
+/// The optional `wire` capability field: `None` when absent (a legacy
+/// peer), lenient on unknown values (a future peer's preference we
+/// don't know degrades to JSON rather than failing registration).
+fn opt_wire_field(v: &Json) -> Option<WireMode> {
+    v.as_obj()?
+        .get("wire")
+        .and_then(Json::as_str)
+        .map(WireMode::lenient)
+}
+
 fn bool_field(v: &Json, key: &str) -> Result<bool> {
     fields(v)?
         .get(key)
@@ -559,6 +751,449 @@ fn arr_field<'a>(v: &'a Json, key: &str) -> Result<&'a [Json]> {
         .ok_or_else(|| frame_err(format!("missing array field '{key}'")))
 }
 
+// -- binary codec ----------------------------------------------------------
+//
+// Payload encoding for the negotiated `--wire=binary` framing: one tag
+// byte, then the variant's fields in order.  Integers are LEB128
+// varints, strings are varint-length-prefixed UTF-8, options carry a
+// presence byte.  The transport adds the 4-byte big-endian frame
+// length (DESIGN.md §13 documents the full grammar).  Decoding is
+// bounds-checked at every read — truncation, trailing garbage, and
+// unknown tags all surface as [`Error::Format`], never a panic.
+
+const TAG_REGISTER: u8 = 1;
+const TAG_REGISTERED: u8 = 2;
+const TAG_HEARTBEAT: u8 = 3;
+const TAG_HEARTBEAT_ACK: u8 = 4;
+const TAG_ASSIGN: u8 = 5;
+const TAG_COMPLETE: u8 = 6;
+const TAG_FAILED: u8 = 7;
+const TAG_SHUTDOWN: u8 = 8;
+const TAG_ASSIGN_BATCH: u8 = 9;
+const TAG_COMPLETE_BATCH: u8 = 10;
+const TAG_REVOKE: u8 = 11;
+
+const WORK_MAP: u8 = 0;
+const WORK_REDUCE: u8 = 1;
+const WORK_REDUCE_PARTIAL: u8 = 2;
+const WORK_SYNTHETIC: u8 = 3;
+
+fn put_u64(b: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            b.push(byte);
+            return;
+        }
+        b.push(byte | 0x80);
+    }
+}
+
+fn put_str(b: &mut Vec<u8>, s: &str) {
+    put_u64(b, s.len() as u64);
+    b.extend_from_slice(s.as_bytes());
+}
+
+fn put_opt_u64(b: &mut Vec<u8>, v: Option<u64>) {
+    match v {
+        None => b.push(0),
+        Some(v) => {
+            b.push(1);
+            put_u64(b, v);
+        }
+    }
+}
+
+fn put_assign(b: &mut Vec<u8>, t: &TaskAssign) {
+    put_u64(b, t.job);
+    put_u64(b, t.task_idx as u64);
+    put_u64(b, t.task_id as u64);
+    put_work(b, &t.work);
+}
+
+fn put_work(b: &mut Vec<u8>, w: &WireWork) {
+    match w {
+        WireWork::Map {
+            mapper,
+            pairs,
+            mode,
+        } => {
+            b.push(WORK_MAP);
+            put_str(b, mapper);
+            put_u64(b, pairs.len() as u64);
+            for (i, o) in pairs {
+                put_str(b, i);
+                put_str(b, o);
+            }
+            put_str(b, mode);
+        }
+        WireWork::Reduce {
+            reducer,
+            input_dir,
+            out_file,
+        } => {
+            b.push(WORK_REDUCE);
+            put_str(b, reducer);
+            put_str(b, input_dir);
+            put_str(b, out_file);
+        }
+        WireWork::ReducePartial {
+            reducer,
+            files,
+            out_file,
+        } => {
+            b.push(WORK_REDUCE_PARTIAL);
+            put_str(b, reducer);
+            put_u64(b, files.len() as u64);
+            for f in files {
+                put_str(b, f);
+            }
+            put_str(b, out_file);
+        }
+        WireWork::Synthetic {
+            startup_us,
+            per_item_us,
+            items,
+            launches,
+        } => {
+            b.push(WORK_SYNTHETIC);
+            put_u64(b, *startup_us);
+            put_u64(b, *per_item_us);
+            put_u64(b, *items as u64);
+            put_u64(b, *launches as u64);
+        }
+    }
+}
+
+fn put_outcome(b: &mut Vec<u8>, o: &WireOutcome) {
+    put_u64(b, o.startup_us);
+    put_u64(b, o.compute_us);
+    put_u64(b, o.launches as u64);
+    put_u64(b, o.items as u64);
+    put_opt_u64(b, o.recv_us);
+    put_opt_u64(b, o.exec_start_us);
+    put_opt_u64(b, o.exec_end_us);
+}
+
+/// Bounds-checked cursor over a binary frame payload.
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        let v = *self
+            .b
+            .get(self.i)
+            .ok_or_else(|| frame_err("binary frame truncated"))?;
+        self.i += 1;
+        Ok(v)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let mut v = 0u64;
+        for shift in (0..64).step_by(7) {
+            let byte = self.u8()?;
+            v |= u64::from(byte & 0x7f) << shift;
+            if byte & 0x80 == 0 {
+                return Ok(v);
+            }
+        }
+        Err(frame_err("varint too long"))
+    }
+
+    fn count(&mut self) -> Result<usize> {
+        let n = self.u64()? as usize;
+        // Every element consumes at least one byte, so a count larger
+        // than the remaining payload is hostile — reject it before
+        // reserving anything.
+        if n > self.remaining() {
+            return Err(frame_err("binary frame truncated"));
+        }
+        Ok(n)
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.count()?;
+        let bytes = &self.b[self.i..self.i + n];
+        self.i += n;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| frame_err("binary frame is not valid UTF-8"))
+    }
+
+    fn opt_u64(&mut self) -> Result<Option<u64>> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.u64()?)),
+            _ => Err(frame_err("bad option discriminant")),
+        }
+    }
+
+    fn assign(&mut self) -> Result<TaskAssign> {
+        Ok(TaskAssign {
+            job: self.u64()?,
+            task_idx: self.u64()? as usize,
+            task_id: self.u64()? as usize,
+            work: self.work()?,
+        })
+    }
+
+    fn work(&mut self) -> Result<WireWork> {
+        match self.u8()? {
+            WORK_MAP => {
+                let mapper = self.str()?;
+                let n = self.count()?;
+                let mut pairs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    pairs.push((self.str()?, self.str()?));
+                }
+                Ok(WireWork::Map {
+                    mapper,
+                    pairs,
+                    mode: self.str()?,
+                })
+            }
+            WORK_REDUCE => Ok(WireWork::Reduce {
+                reducer: self.str()?,
+                input_dir: self.str()?,
+                out_file: self.str()?,
+            }),
+            WORK_REDUCE_PARTIAL => {
+                let reducer = self.str()?;
+                let n = self.count()?;
+                let mut files = Vec::with_capacity(n);
+                for _ in 0..n {
+                    files.push(self.str()?);
+                }
+                Ok(WireWork::ReducePartial {
+                    reducer,
+                    files,
+                    out_file: self.str()?,
+                })
+            }
+            WORK_SYNTHETIC => Ok(WireWork::Synthetic {
+                startup_us: self.u64()?,
+                per_item_us: self.u64()?,
+                items: self.u64()? as usize,
+                launches: self.u64()? as usize,
+            }),
+            other => {
+                Err(frame_err(format!("unknown work tag {other}")))
+            }
+        }
+    }
+
+    fn outcome(&mut self) -> Result<WireOutcome> {
+        Ok(WireOutcome {
+            startup_us: self.u64()?,
+            compute_us: self.u64()?,
+            launches: self.u64()? as usize,
+            items: self.u64()? as usize,
+            recv_us: self.opt_u64()?,
+            exec_start_us: self.opt_u64()?,
+            exec_end_us: self.opt_u64()?,
+        })
+    }
+}
+
+impl Message {
+    /// Binary frame payload (the transport prepends the 4-byte
+    /// big-endian length).
+    pub fn encode_binary(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(64);
+        match self {
+            Message::Register {
+                name,
+                slots,
+                version,
+                wire,
+            } => {
+                b.push(TAG_REGISTER);
+                put_str(&mut b, name);
+                put_u64(&mut b, *slots as u64);
+                put_u64(&mut b, *version as u64);
+                b.push(match wire {
+                    None => 0,
+                    Some(WireMode::Json) => 1,
+                    Some(WireMode::Binary) => 2,
+                });
+            }
+            Message::Registered { worker_id, wire } => {
+                b.push(TAG_REGISTERED);
+                put_u64(&mut b, *worker_id);
+                b.push(match wire {
+                    None => 0,
+                    Some(WireMode::Json) => 1,
+                    Some(WireMode::Binary) => 2,
+                });
+            }
+            Message::Heartbeat {
+                worker_id,
+                sent_us,
+                rtt_us,
+            } => {
+                b.push(TAG_HEARTBEAT);
+                put_u64(&mut b, *worker_id);
+                put_opt_u64(&mut b, *sent_us);
+                put_opt_u64(&mut b, *rtt_us);
+            }
+            Message::HeartbeatAck { echo_us } => {
+                b.push(TAG_HEARTBEAT_ACK);
+                put_u64(&mut b, *echo_us);
+            }
+            Message::Assign {
+                job,
+                task_idx,
+                task_id,
+                work,
+            } => {
+                b.push(TAG_ASSIGN);
+                put_u64(&mut b, *job);
+                put_u64(&mut b, *task_idx as u64);
+                put_u64(&mut b, *task_id as u64);
+                put_work(&mut b, work);
+            }
+            Message::AssignBatch { tasks } => {
+                b.push(TAG_ASSIGN_BATCH);
+                put_u64(&mut b, tasks.len() as u64);
+                for t in tasks {
+                    put_assign(&mut b, t);
+                }
+            }
+            Message::Revoke { job, task_idx } => {
+                b.push(TAG_REVOKE);
+                put_u64(&mut b, *job);
+                put_u64(&mut b, *task_idx as u64);
+            }
+            Message::Complete {
+                job,
+                task_idx,
+                outcome,
+            } => {
+                b.push(TAG_COMPLETE);
+                put_u64(&mut b, *job);
+                put_u64(&mut b, *task_idx as u64);
+                put_outcome(&mut b, outcome);
+            }
+            Message::CompleteBatch { done } => {
+                b.push(TAG_COMPLETE_BATCH);
+                put_u64(&mut b, done.len() as u64);
+                for c in done {
+                    put_u64(&mut b, c.job);
+                    put_u64(&mut b, c.task_idx as u64);
+                    put_outcome(&mut b, &c.outcome);
+                }
+            }
+            Message::Failed {
+                job,
+                task_idx,
+                msg,
+            } => {
+                b.push(TAG_FAILED);
+                put_u64(&mut b, *job);
+                put_u64(&mut b, *task_idx as u64);
+                put_str(&mut b, msg);
+            }
+            Message::Shutdown => b.push(TAG_SHUTDOWN),
+        }
+        b
+    }
+
+    /// Parse one binary frame payload.  All failure modes — truncation,
+    /// unknown tags, trailing bytes, bad UTF-8 — return
+    /// [`Error::Format`]; none panic.
+    pub fn decode_binary(bytes: &[u8]) -> Result<Message> {
+        let mut c = Cur { b: bytes, i: 0 };
+        let opt_wire = |c: &mut Cur| -> Result<Option<WireMode>> {
+            match c.u8()? {
+                0 => Ok(None),
+                1 => Ok(Some(WireMode::Json)),
+                2 => Ok(Some(WireMode::Binary)),
+                _ => Err(frame_err("bad wire discriminant")),
+            }
+        };
+        let msg = match c.u8()? {
+            TAG_REGISTER => Message::Register {
+                name: c.str()?,
+                slots: c.u64()? as usize,
+                version: c.u64()? as usize,
+                wire: opt_wire(&mut c)?,
+            },
+            TAG_REGISTERED => Message::Registered {
+                worker_id: c.u64()?,
+                wire: opt_wire(&mut c)?,
+            },
+            TAG_HEARTBEAT => Message::Heartbeat {
+                worker_id: c.u64()?,
+                sent_us: c.opt_u64()?,
+                rtt_us: c.opt_u64()?,
+            },
+            TAG_HEARTBEAT_ACK => {
+                Message::HeartbeatAck { echo_us: c.u64()? }
+            }
+            TAG_ASSIGN => {
+                let t = c.assign()?;
+                Message::Assign {
+                    job: t.job,
+                    task_idx: t.task_idx,
+                    task_id: t.task_id,
+                    work: t.work,
+                }
+            }
+            TAG_ASSIGN_BATCH => {
+                let n = c.count()?;
+                let mut tasks = Vec::with_capacity(n);
+                for _ in 0..n {
+                    tasks.push(c.assign()?);
+                }
+                Message::AssignBatch { tasks }
+            }
+            TAG_REVOKE => Message::Revoke {
+                job: c.u64()?,
+                task_idx: c.u64()? as usize,
+            },
+            TAG_COMPLETE => Message::Complete {
+                job: c.u64()?,
+                task_idx: c.u64()? as usize,
+                outcome: c.outcome()?,
+            },
+            TAG_COMPLETE_BATCH => {
+                let n = c.count()?;
+                let mut done = Vec::with_capacity(n);
+                for _ in 0..n {
+                    done.push(TaskComplete {
+                        job: c.u64()?,
+                        task_idx: c.u64()? as usize,
+                        outcome: c.outcome()?,
+                    });
+                }
+                Message::CompleteBatch { done }
+            }
+            TAG_FAILED => Message::Failed {
+                job: c.u64()?,
+                task_idx: c.u64()? as usize,
+                msg: c.str()?,
+            },
+            TAG_SHUTDOWN => Message::Shutdown,
+            other => {
+                return Err(frame_err(format!(
+                    "unknown binary message tag {other}"
+                )))
+            }
+        };
+        if c.remaining() != 0 {
+            return Err(frame_err("trailing bytes after binary frame"));
+        }
+        Ok(msg)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -567,6 +1202,9 @@ mod tests {
         let line = msg.encode();
         assert!(line.ends_with('\n'), "framed");
         assert_eq!(Message::decode(&line).unwrap(), msg, "{line}");
+        // Every message must survive the binary codec identically.
+        let bin = msg.encode_binary();
+        assert_eq!(Message::decode_binary(&bin).unwrap(), msg, "{line}");
     }
 
     #[test]
@@ -575,8 +1213,28 @@ mod tests {
             name: "worker-1".into(),
             slots: 4,
             version: PROTOCOL_VERSION,
+            wire: None,
         });
-        roundtrip(Message::Registered { worker_id: 7 });
+        roundtrip(Message::Register {
+            name: "worker-2".into(),
+            slots: 2,
+            version: PROTOCOL_VERSION,
+            wire: Some(WireMode::Binary),
+        });
+        roundtrip(Message::Register {
+            name: "worker-3".into(),
+            slots: 2,
+            version: PROTOCOL_VERSION,
+            wire: Some(WireMode::Json),
+        });
+        roundtrip(Message::Registered {
+            worker_id: 7,
+            wire: None,
+        });
+        roundtrip(Message::Registered {
+            worker_id: 7,
+            wire: Some(WireMode::Binary),
+        });
         roundtrip(Message::Heartbeat {
             worker_id: 7,
             sent_us: None,
@@ -670,7 +1328,113 @@ mod tests {
             task_idx: 1,
             msg: "app 'x' failed on in/a.txt: poisoned".into(),
         });
+        roundtrip(Message::Revoke { job: 3, task_idx: 7 });
         roundtrip(Message::Shutdown);
+    }
+
+    fn synth_assign(i: usize) -> TaskAssign {
+        TaskAssign {
+            job: 9,
+            task_idx: i,
+            task_id: i + 1,
+            work: WireWork::Synthetic {
+                startup_us: 100,
+                per_item_us: 10,
+                items: i,
+                launches: 1,
+            },
+        }
+    }
+
+    #[test]
+    fn batch_frames_roundtrip_with_zero_one_and_many_entries() {
+        for n in [0usize, 1, 37] {
+            roundtrip(Message::AssignBatch {
+                tasks: (0..n).map(synth_assign).collect(),
+            });
+            roundtrip(Message::CompleteBatch {
+                done: (0..n)
+                    .map(|i| TaskComplete {
+                        job: 9,
+                        task_idx: i,
+                        outcome: WireOutcome {
+                            startup_us: 5,
+                            compute_us: 17,
+                            launches: 1,
+                            items: i,
+                            recv_us: (i % 2 == 0).then_some(40),
+                            exec_start_us: None,
+                            exec_end_us: (i % 2 == 0).then_some(90),
+                        },
+                    })
+                    .collect(),
+            });
+        }
+    }
+
+    #[test]
+    fn pre_pr10_register_frames_decode_as_legacy() {
+        // A pre-PR-10 worker registers without the `wire` field; the
+        // decoded capability must be None so the coordinator keeps
+        // speaking per-task line-JSON to it.
+        let line = r#"{"type":"register","name":"w0","slots":2,"version":1}"#;
+        assert_eq!(
+            Message::decode(line).unwrap(),
+            Message::Register {
+                name: "w0".into(),
+                slots: 2,
+                version: 1,
+                wire: None,
+            }
+        );
+        // Same for a legacy coordinator's reply.
+        let line = r#"{"type":"registered","worker_id":4}"#;
+        assert_eq!(
+            Message::decode(line).unwrap(),
+            Message::Registered {
+                worker_id: 4,
+                wire: None,
+            }
+        );
+        // A future peer's unknown preference degrades to json instead
+        // of failing the handshake.
+        let line = r#"{"type":"register","name":"w0","slots":2,"version":1,"wire":"zstd"}"#;
+        let Message::Register { wire, .. } =
+            Message::decode(line).unwrap()
+        else {
+            panic!("register stays register");
+        };
+        assert_eq!(wire, Some(WireMode::Json));
+    }
+
+    #[test]
+    fn malformed_binary_frames_are_format_errors_not_panics() {
+        // Truncations of a real frame at every split point, plus raw
+        // garbage, must all fail cleanly.
+        let full = Message::AssignBatch {
+            tasks: (0..3).map(synth_assign).collect(),
+        }
+        .encode_binary();
+        for cut in 0..full.len() {
+            let err = Message::decode_binary(&full[..cut]).unwrap_err();
+            assert!(
+                matches!(err, Error::Format { kind: "wire", .. }),
+                "cut at {cut} -> {err}"
+            );
+        }
+        for bad in [
+            &[0xffu8][..],              // unknown tag
+            &[TAG_SHUTDOWN, 0x01],      // trailing bytes
+            &[TAG_HEARTBEAT_ACK, 0x80], // dangling varint
+            &[TAG_REGISTER, 0x02, b'h'], // truncated string
+            &[TAG_HEARTBEAT, 0x01, 0x03, 0x02], // bad option byte
+        ] {
+            let err = Message::decode_binary(bad).unwrap_err();
+            assert!(
+                matches!(err, Error::Format { kind: "wire", .. }),
+                "{bad:?} -> {err}"
+            );
+        }
     }
 
     #[test]

@@ -1,18 +1,21 @@
-//! Line-framed message transport over TCP.
+//! Framed message transport over TCP.
 //!
 //! A connection is split into an owned reader half and an owned writer
 //! half ([`split`]) so the coordinator can park the writer inside its
 //! state mutex while a dedicated thread blocks on the reader — the two
-//! halves are `TcpStream` clones of one socket.  Framing is one
+//! halves are `TcpStream` clones of one socket.  Framing starts as one
 //! [`Message`] per `\n`-terminated line (see
-//! [`crate::scheduler::remote::protocol`]).
+//! [`crate::scheduler::remote::protocol`]); after a successful
+//! handshake both halves can be switched to the negotiated
+//! length-prefixed binary framing with [`LineReader::set_mode`] /
+//! [`LineWriter::set_mode`] (DESIGN.md §13).
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::time::Duration;
 
 use crate::error::{Error, Result};
-use crate::scheduler::remote::protocol::{frame_err, Message};
+use crate::scheduler::remote::protocol::{frame_err, Message, WireMode};
 
 /// Frames too long to be legitimate traffic (a runaway or hostile peer);
 /// `recv` aborts the connection instead of buffering without bound.
@@ -26,6 +29,7 @@ fn wire_err(context: &str, e: std::io::Error) -> Error {
 /// Reading half of a connection.
 pub struct LineReader {
     inner: BufReader<TcpStream>,
+    mode: WireMode,
 }
 
 impl LineReader {
@@ -37,12 +41,48 @@ impl LineReader {
         let _ = self.inner.get_ref().set_read_timeout(timeout);
     }
 
+    /// Switch framing after the (always line-JSON) handshake.
+    pub fn set_mode(&mut self, mode: WireMode) {
+        self.mode = mode;
+    }
+
     /// Block for the next frame.  `Ok(None)` on clean EOF (peer gone);
     /// protocol errors are [`Error::Format`], transport errors
     /// [`Error::Scheduler`].  Each read is capped by the frame budget,
-    /// so a newline-less byte flood errors out instead of buffering
-    /// without bound.
+    /// so a newline-less byte flood (or an over-long binary length
+    /// prefix) errors out instead of buffering without bound.
     pub fn recv(&mut self) -> Result<Option<Message>> {
+        match self.mode {
+            WireMode::Json => self.recv_line(),
+            WireMode::Binary => self.recv_binary(),
+        }
+    }
+
+    /// Binary framing: a 4-byte big-endian payload length, then the
+    /// payload.  EOF before or inside a frame means the peer is gone
+    /// (`Ok(None)`, matching the line framing's mid-frame EOF rule).
+    fn recv_binary(&mut self) -> Result<Option<Message>> {
+        let mut prefix = [0u8; 4];
+        match read_exact_or_eof(&mut self.inner, &mut prefix)? {
+            false => return Ok(None),
+            true => {}
+        }
+        let len = u32::from_be_bytes(prefix) as usize;
+        if len > MAX_FRAME_BYTES {
+            return Err(frame_err("frame exceeds size limit"));
+        }
+        if len == 0 {
+            return Err(frame_err("empty binary frame"));
+        }
+        let mut payload = vec![0u8; len];
+        match read_exact_or_eof(&mut self.inner, &mut payload)? {
+            false => return Ok(None),
+            true => {}
+        }
+        Message::decode_binary(&payload).map(Some)
+    }
+
+    fn recv_line(&mut self) -> Result<Option<Message>> {
         let mut bytes: Vec<u8> = Vec::new();
         loop {
             // Budget + 1 so an overflowing frame is detected (below)
@@ -85,18 +125,60 @@ impl LineReader {
     }
 }
 
+/// Fill `buf` completely.  `Ok(false)` on EOF — clean between frames,
+/// or mid-frame (peer death); either way the peer is gone, matching
+/// the line framing's EOF handling.
+fn read_exact_or_eof(
+    r: &mut impl Read,
+    buf: &mut [u8],
+) -> Result<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => return Ok(false),
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(wire_err("read failed", e)),
+        }
+    }
+    Ok(true)
+}
+
 /// Writing half of a connection.
 pub struct LineWriter {
     inner: TcpStream,
+    mode: WireMode,
 }
 
 impl LineWriter {
+    /// Switch framing after the (always line-JSON) handshake.
+    pub fn set_mode(&mut self, mode: WireMode) {
+        self.mode = mode;
+    }
+
     /// Send one frame (write + flush; the stream has `TCP_NODELAY` set,
     /// so small frames leave immediately).
     pub fn send(&mut self, msg: &Message) -> Result<()> {
-        self.inner
-            .write_all(msg.encode().as_bytes())
-            .map_err(|e| wire_err("send failed", e))
+        match self.mode {
+            WireMode::Json => self
+                .inner
+                .write_all(msg.encode().as_bytes())
+                .map_err(|e| wire_err("send failed", e)),
+            WireMode::Binary => {
+                // One write_all for prefix + payload so a frame is a
+                // single syscall on the hot path.
+                let payload = msg.encode_binary();
+                let mut frame =
+                    Vec::with_capacity(4 + payload.len());
+                frame.extend_from_slice(
+                    &(payload.len() as u32).to_be_bytes(),
+                );
+                frame.extend_from_slice(&payload);
+                self.inner
+                    .write_all(&frame)
+                    .map_err(|e| wire_err("send failed", e))
+            }
+        }
     }
 
     /// Hard-close both halves of the connection (used by the worker's
@@ -140,8 +222,12 @@ pub fn split(stream: TcpStream) -> Result<(LineReader, LineWriter)> {
     Ok((
         LineReader {
             inner: BufReader::new(stream),
+            mode: WireMode::Json,
         },
-        LineWriter { inner: writer },
+        LineWriter {
+            inner: writer,
+            mode: WireMode::Json,
+        },
     ))
 }
 
@@ -217,5 +303,79 @@ mod tests {
         // The framing survives a bad line: the next frame still parses.
         assert_eq!(r.recv().unwrap(), Some(Message::Shutdown));
         sender.join().unwrap();
+    }
+
+    #[test]
+    fn binary_frames_roundtrip_after_mode_switch() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let sender = std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            let (_r, mut w) = split(stream).unwrap();
+            w.set_mode(WireMode::Binary);
+            w.send(&Message::Heartbeat {
+                worker_id: 9,
+                sent_us: Some(123),
+                rtt_us: None,
+            })
+            .unwrap();
+            w.send(&Message::Shutdown).unwrap();
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let (mut r, _w) = split(stream).unwrap();
+        r.set_mode(WireMode::Binary);
+        assert_eq!(
+            r.recv().unwrap(),
+            Some(Message::Heartbeat {
+                worker_id: 9,
+                sent_us: Some(123),
+                rtt_us: None,
+            })
+        );
+        assert_eq!(r.recv().unwrap(), Some(Message::Shutdown));
+        assert_eq!(r.recv().unwrap(), None, "clean EOF");
+        sender.join().unwrap();
+    }
+
+    #[test]
+    fn overlong_binary_length_prefix_is_a_format_error() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let sender = std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            // Claims a 4GiB-1 frame: over the budget, so the reader
+            // must refuse it without trying to buffer.
+            stream.write_all(&u32::MAX.to_be_bytes()).unwrap();
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let (mut r, _w) = split(stream).unwrap();
+        r.set_mode(WireMode::Binary);
+        let err = r.recv().unwrap_err();
+        assert!(
+            matches!(err, Error::Format { kind: "wire", .. }),
+            "{err}"
+        );
+        sender.join().unwrap();
+    }
+
+    #[test]
+    fn truncated_binary_prefix_or_payload_is_peer_death_not_panic() {
+        for partial in [
+            vec![0x00u8],                    // 1 of 4 prefix bytes
+            vec![0x00, 0x00, 0x00, 0x08, 1], // payload cut short
+        ] {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let sender = std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                stream.write_all(&partial).unwrap();
+                // Dropping the stream closes it mid-frame.
+            });
+            let (stream, _) = listener.accept().unwrap();
+            let (mut r, _w) = split(stream).unwrap();
+            r.set_mode(WireMode::Binary);
+            assert_eq!(r.recv().unwrap(), None, "mid-frame EOF");
+            sender.join().unwrap();
+        }
     }
 }

@@ -1,13 +1,16 @@
 //! The worker daemon: `llmapreduce worker --connect host:port --slots N`.
 //!
-//! A worker dials the coordinator, registers its slot count, and then
-//! executes whatever [`Message::Assign`] frames arrive: the shipped
-//! [`WireWork`] is materialized back into a real
+//! A worker dials the coordinator, registers its slot count (plus its
+//! preferred wire framing, see [`WireMode`]), and then executes
+//! whatever [`Message::Assign`] / [`Message::AssignBatch`] frames
+//! arrive: the shipped [`WireWork`] is materialized back into a real
 //! [`crate::scheduler::TaskWork`] via [`crate::apps::registry`] and run
 //! through the same [`crate::scheduler::exec::execute`] path the local
 //! engine uses — one execution substrate, reached over two transports.
-//! Completions stream back as they land; a heartbeat thread beacons
-//! liveness in between.
+//! Completions stream back through an outbox that coalesces whatever
+//! finished while the previous frame was being written into one
+//! [`Message::CompleteBatch`]; a heartbeat thread beacons liveness on
+//! an absolute-deadline grid in between.
 //!
 //! [`run_worker`] is a library function so tests and benches can host
 //! workers on plain threads; the CLI subcommand is a thin wrapper.  The
@@ -27,9 +30,10 @@ use crate::error::{Error, Result};
 use crate::options::AppType;
 use crate::scheduler::exec::execute;
 use crate::scheduler::remote::protocol::{
-    Message, WireOutcome, WireWork, PROTOCOL_VERSION,
+    Message, TaskAssign, TaskComplete, WireMode, WireOutcome, WireWork,
+    PROTOCOL_VERSION,
 };
-use crate::scheduler::remote::transport::{split, LineWriter};
+use crate::scheduler::remote::transport::split;
 use crate::scheduler::TaskWork;
 
 /// Everything a worker daemon needs to start.
@@ -46,8 +50,16 @@ pub struct WorkerConfig {
     pub heartbeat_interval: Duration,
     /// Chaos knob: drop the connection cold upon receiving the Nth
     /// assignment (1-based), which is then never executed — a
-    /// deterministic stand-in for `kill -9` mid-job.
+    /// deterministic stand-in for `kill -9` mid-job.  Assignments
+    /// arriving inside a batch frame count individually.
     pub fail_after: Option<usize>,
+    /// Preferred post-handshake framing, advertised at registration;
+    /// the coordinator answers in kind (`--wire=json|binary`).
+    pub wire: WireMode,
+    /// Compatibility knob (tests): behave like a pre-PR-10 worker —
+    /// no capability advertisement, so the coordinator sends one
+    /// line-JSON frame per task and never batches or revokes.
+    pub legacy: bool,
 }
 
 impl WorkerConfig {
@@ -58,6 +70,8 @@ impl WorkerConfig {
             name: format!("worker-{}", std::process::id()),
             heartbeat_interval: Duration::from_millis(500),
             fail_after: None,
+            wire: WireMode::Json,
+            legacy: false,
         }
     }
 
@@ -73,6 +87,16 @@ impl WorkerConfig {
 
     pub fn fail_after(mut self, n: usize) -> Self {
         self.fail_after = Some(n);
+        self
+    }
+
+    pub fn wire(mut self, mode: WireMode) -> Self {
+        self.wire = mode;
+        self
+    }
+
+    pub fn legacy(mut self) -> Self {
+        self.legacy = true;
         self
     }
 }
@@ -172,13 +196,115 @@ impl Queue {
             q = self.cv.wait(q).unwrap_or_else(|e| e.into_inner());
         }
     }
+
+    /// Drop a queued-but-unstarted assignment (an idle peer stole it
+    /// and the coordinator revoked our copy); a no-op if a slot
+    /// already picked it up — the coordinator's ownership gate drops
+    /// whichever completion loses the race.
+    fn remove(&self, job: u64, task_idx: usize) {
+        let mut q = self.tasks.lock().unwrap_or_else(|e| e.into_inner());
+        q.0.retain(|(j, t, _, _)| !(*j == job && *t == task_idx));
+    }
 }
 
-/// Execute one assignment and stream the result back.  Send failures
-/// are ignored — they mean the coordinator is gone, and the read loop
-/// notices independently.
+/// Result outbox: executors park replies here and a dedicated sender
+/// thread flushes them.  Whatever accumulated while the previous frame
+/// was on the wire goes out as one [`Message::CompleteBatch`] (when
+/// the coordinator negotiated the capability) — natural coalescing
+/// under load with zero added latency when idle, since a lone result
+/// is sent the moment it lands.
+struct Outbox {
+    items: Mutex<(Vec<Message>, bool)>,
+    cv: Condvar,
+}
+
+impl Outbox {
+    fn push(&self, m: Message) {
+        let mut o = self.items.lock().unwrap_or_else(|e| e.into_inner());
+        o.0.push(m);
+        drop(o);
+        self.cv.notify_one();
+    }
+
+    fn close(&self) {
+        self.items.lock().unwrap_or_else(|e| e.into_inner()).1 = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until something is pending; `None` once closed and empty.
+    fn drain(&self) -> Option<Vec<Message>> {
+        let mut o = self.items.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if !o.0.is_empty() {
+                return Some(std::mem::take(&mut o.0));
+            }
+            if o.1 {
+                return None;
+            }
+            o = self.cv.wait(o).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// Fold one outbox flush: completions collapse into a single batch
+/// frame when the coordinator understands them; failures (and lone
+/// completions) always travel as their own frame.
+fn coalesce(flush: Vec<Message>, batching: bool) -> Vec<Message> {
+    if !batching || flush.len() < 2 {
+        return flush;
+    }
+    let mut out = Vec::new();
+    let mut done: Vec<TaskComplete> = Vec::new();
+    for m in flush {
+        match m {
+            Message::Complete {
+                job,
+                task_idx,
+                outcome,
+            } => done.push(TaskComplete {
+                job,
+                task_idx,
+                outcome,
+            }),
+            other => out.push(other),
+        }
+    }
+    match done.len() {
+        0 => {}
+        1 => {
+            let c = done.remove(0);
+            out.push(Message::Complete {
+                job: c.job,
+                task_idx: c.task_idx,
+                outcome: c.outcome,
+            });
+        }
+        _ => out.push(Message::CompleteBatch { done }),
+    }
+    out
+}
+
+/// Next beacon deadline on the absolute grid anchored at the previous
+/// one.  Work and lock waits inside a tick no longer stretch the
+/// period (the old `sleep(interval)`-after-work loop drifted past the
+/// configured rate under load), and a stall that blows through several
+/// deadlines skips the missed ticks instead of bursting to catch up.
+fn next_tick(
+    prev: Instant,
+    interval: Duration,
+    now: Instant,
+) -> Instant {
+    let mut next = prev + interval;
+    while next <= now {
+        next += interval;
+    }
+    next
+}
+
+/// Execute one assignment and park the result in the outbox for the
+/// sender thread to ship (batched with whatever else finished).
 fn execute_assignment(
-    writer: &Mutex<LineWriter>,
+    outbox: &Outbox,
     epoch: Instant,
     job: u64,
     task_idx: usize,
@@ -215,10 +341,7 @@ fn execute_assignment(
             msg: e.to_string(),
         },
     };
-    let _ = writer
-        .lock()
-        .unwrap_or_else(|e| e.into_inner())
-        .send(&reply);
+    outbox.push(reply);
 }
 
 /// Dial the coordinator, retrying for a grace period — workers and the
@@ -256,7 +379,10 @@ pub fn run_worker(config: WorkerConfig) -> Result<()> {
     let (mut reader, writer) = split(stream)?;
     let writer = Arc::new(Mutex::new(writer));
 
-    // Handshake.
+    // Handshake — always line-JSON.  A non-legacy worker advertises
+    // its preferred framing; the framing actually used is whatever the
+    // coordinator echoes back (an old coordinator echoes nothing, so
+    // we stay on per-task line-JSON and it never batches to us).
     writer
         .lock()
         .unwrap_or_else(|e| e.into_inner())
@@ -264,19 +390,35 @@ pub fn run_worker(config: WorkerConfig) -> Result<()> {
             name: config.name.clone(),
             slots: config.slots,
             version: PROTOCOL_VERSION,
+            wire: (!config.legacy).then_some(config.wire),
         })?;
-    let worker_id = match reader.recv()? {
-        Some(Message::Registered { worker_id }) => worker_id,
+    let (worker_id, granted) = match reader.recv()? {
+        Some(Message::Registered { worker_id, wire }) => {
+            (worker_id, wire)
+        }
         other => {
             return Err(Error::Scheduler(format!(
                 "worker handshake: expected registered, got {other:?}"
             )))
         }
     };
+    // A `wire` answer marks a batch-capable coordinator: completions
+    // may coalesce into CompleteBatch frames.
+    let batching = granted.is_some();
+    if granted == Some(WireMode::Binary) {
+        reader.set_mode(WireMode::Binary);
+        writer
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .set_mode(WireMode::Binary);
+    }
 
     // Heartbeat thread.  Each beacon carries its own send time and the
     // round-trip measured off the last ack (0 = none seen yet, sent as
     // absent); the read loop updates `rtt_us` when acks arrive.
+    // Beacons tick on an absolute-deadline grid (`next_tick`) so send
+    // and lock time cannot stretch the effective period past the
+    // configured interval.
     let stop = Arc::new(AtomicBool::new(false));
     let rtt_us = Arc::new(AtomicU64::new(0));
     let beat = {
@@ -285,11 +427,17 @@ pub fn run_worker(config: WorkerConfig) -> Result<()> {
         let rtt_us = rtt_us.clone();
         let interval = config.heartbeat_interval;
         std::thread::spawn(move || {
-            while !stop.load(Ordering::Relaxed) {
-                std::thread::sleep(interval);
+            let mut deadline = Instant::now() + interval;
+            loop {
+                let now = Instant::now();
+                if now < deadline {
+                    std::thread::sleep(deadline - now);
+                }
                 if stop.load(Ordering::Relaxed) {
                     break;
                 }
+                deadline =
+                    next_tick(deadline, interval, Instant::now());
                 let rtt = rtt_us.load(Ordering::Relaxed);
                 let sent = writer
                     .lock()
@@ -306,51 +454,95 @@ pub fn run_worker(config: WorkerConfig) -> Result<()> {
         })
     };
 
-    // Executor pool.
+    // Executor pool + result outbox/sender.
     let queue = Arc::new(Queue {
         tasks: Mutex::new((VecDeque::new(), false)),
+        cv: Condvar::new(),
+    });
+    let outbox = Arc::new(Outbox {
+        items: Mutex::new((Vec::new(), false)),
         cv: Condvar::new(),
     });
     let executors: Vec<_> = (0..config.slots.max(1))
         .map(|_| {
             let queue = queue.clone();
-            let writer = writer.clone();
+            let outbox = outbox.clone();
             std::thread::spawn(move || {
                 while let Some((job, task_idx, work, recv_us)) =
                     queue.pop()
                 {
                     execute_assignment(
-                        &writer, epoch, job, task_idx, &work, recv_us,
+                        &outbox, epoch, job, task_idx, &work, recv_us,
                     );
                 }
             })
         })
         .collect();
+    let sender = {
+        let outbox = outbox.clone();
+        let writer = writer.clone();
+        std::thread::spawn(move || {
+            while let Some(flush) = outbox.drain() {
+                for msg in coalesce(flush, batching) {
+                    let sent = writer
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .send(&msg);
+                    if sent.is_err() {
+                        return; // coordinator gone; read loop notices
+                    }
+                }
+            }
+        })
+    };
 
-    // Read loop.
+    // Read loop.  Chaos + enqueue for one or many assignments; returns
+    // true when the fail_after knob tripped and the connection dropped.
     let mut received = 0usize;
+    let enqueue = |tasks: Vec<TaskAssign>, received: &mut usize| {
+        let recv_us = epoch.elapsed().as_micros() as u64;
+        for t in tasks {
+            *received += 1;
+            if config.fail_after.is_some_and(|n| *received >= n) {
+                // Chaos: vanish without executing this assignment (or
+                // anything still queued).  The coordinator sees the
+                // socket drop and reassigns.
+                queue.abort();
+                writer
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .shutdown();
+                return true;
+            }
+            queue.push((t.job, t.task_idx, t.work, recv_us));
+        }
+        false
+    };
     let outcome = loop {
         match reader.recv() {
             Ok(Some(Message::Assign {
                 job,
                 task_idx,
+                task_id,
                 work,
-                ..
             })) => {
-                let recv_us = epoch.elapsed().as_micros() as u64;
-                received += 1;
-                if config.fail_after.is_some_and(|n| received >= n) {
-                    // Chaos: vanish without executing this assignment
-                    // (or anything still queued).  The coordinator sees
-                    // the socket drop and reassigns.
-                    queue.abort();
-                    writer
-                        .lock()
-                        .unwrap_or_else(|e| e.into_inner())
-                        .shutdown();
+                let one = vec![TaskAssign {
+                    job,
+                    task_idx,
+                    task_id,
+                    work,
+                }];
+                if enqueue(one, &mut received) {
                     break Ok(());
                 }
-                queue.push((job, task_idx, work, recv_us));
+            }
+            Ok(Some(Message::AssignBatch { tasks })) => {
+                if enqueue(tasks, &mut received) {
+                    break Ok(());
+                }
+            }
+            Ok(Some(Message::Revoke { job, task_idx })) => {
+                queue.remove(job, task_idx);
             }
             Ok(Some(Message::HeartbeatAck { echo_us })) => {
                 // Round trip = now minus the beacon's send stamp; the
@@ -367,12 +559,15 @@ pub fn run_worker(config: WorkerConfig) -> Result<()> {
         }
     };
 
-    // Wind down: stop the beacon, drain executors, close the socket.
+    // Wind down: stop the beacon, drain executors, flush the outbox,
+    // close the socket.
     stop.store(true, Ordering::Relaxed);
     queue.close();
     for h in executors {
         let _ = h.join();
     }
+    outbox.close();
+    let _ = sender.join();
     writer.lock().unwrap_or_else(|e| e.into_inner()).shutdown();
     let _ = beat.join();
     outcome
@@ -453,9 +648,93 @@ mod tests {
         let c = WorkerConfig::new("127.0.0.1:7171")
             .slots(0)
             .name("w0")
-            .fail_after(2);
+            .fail_after(2)
+            .wire(WireMode::Binary);
         assert_eq!(c.slots, 1, "slots clamp to >= 1");
         assert_eq!(c.name, "w0");
         assert_eq!(c.fail_after, Some(2));
+        assert_eq!(c.wire, WireMode::Binary);
+        assert!(!c.legacy);
+        assert!(WorkerConfig::new("x").legacy().legacy);
+    }
+
+    #[test]
+    fn heartbeat_deadlines_stay_on_the_absolute_grid() {
+        let t0 = Instant::now();
+        let iv = Duration::from_millis(500);
+        // Work inside a tick does not stretch the period: the next
+        // deadline is still exactly one interval past the previous
+        // one, not one interval past "now".
+        assert_eq!(
+            next_tick(t0, iv, t0 + Duration::from_millis(137)),
+            t0 + iv
+        );
+        // No cumulative drift either: after N busy ticks the deadline
+        // sits exactly N intervals from the anchor.
+        let mut d = t0;
+        for k in 1..=10u32 {
+            d = next_tick(d, iv, d + Duration::from_millis(320));
+            assert_eq!(d, t0 + iv * k);
+        }
+        // A stall that blows through several deadlines skips the
+        // missed ticks (stays on the grid) instead of bursting.
+        assert_eq!(
+            next_tick(t0, iv, t0 + Duration::from_millis(1730)),
+            t0 + iv * 4
+        );
+    }
+
+    fn done(job: u64, task_idx: usize) -> Message {
+        Message::Complete {
+            job,
+            task_idx,
+            outcome: WireOutcome::default(),
+        }
+    }
+
+    #[test]
+    fn outbox_flushes_coalesce_completions_only_when_negotiated() {
+        let failed = Message::Failed {
+            job: 1,
+            task_idx: 2,
+            msg: "x".into(),
+        };
+        // Capability on: several completions fold into one batch
+        // frame; failures still travel alone.
+        let out = coalesce(
+            vec![done(1, 0), failed.clone(), done(1, 1)],
+            true,
+        );
+        assert_eq!(
+            out,
+            vec![
+                failed.clone(),
+                Message::CompleteBatch {
+                    done: vec![
+                        TaskComplete {
+                            job: 1,
+                            task_idx: 0,
+                            outcome: WireOutcome::default(),
+                        },
+                        TaskComplete {
+                            job: 1,
+                            task_idx: 1,
+                            outcome: WireOutcome::default(),
+                        },
+                    ],
+                },
+            ]
+        );
+        // A lone completion never pays the batch envelope.
+        assert_eq!(
+            coalesce(vec![done(1, 0), failed.clone()], true),
+            vec![failed.clone(), done(1, 0)]
+        );
+        // Capability off (legacy coordinator): frames pass through
+        // untouched, in order.
+        assert_eq!(
+            coalesce(vec![done(1, 0), done(1, 1)], false),
+            vec![done(1, 0), done(1, 1)]
+        );
     }
 }

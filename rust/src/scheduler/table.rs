@@ -135,6 +135,35 @@ pub(crate) struct TaskView {
     pub exclusive: bool,
 }
 
+impl TaskView {
+    /// Placement-affinity key of the task's input shard: a hash of the
+    /// directory its first input file lives in, so tasks reading the
+    /// same shard score toward the same worker (warm page cache /
+    /// shared filesystem locality).  `None` for work without file
+    /// inputs (reduce output fan-in hashes its input dir too; synthetic
+    /// timing payloads have no locality to exploit).
+    pub fn shard_key(&self, idx: usize) -> Option<u64> {
+        let dir = match &self.tasks.get(idx)?.work {
+            TaskWork::Map { pairs, .. } => {
+                pairs.first().and_then(|(inp, _)| inp.parent())
+            }
+            TaskWork::Reduce { input_dir, .. } => Some(input_dir.as_path()),
+            TaskWork::ReducePartial { files, .. } => {
+                files.first().and_then(|f| f.parent())
+            }
+            TaskWork::Synthetic { .. } => None,
+        }?;
+        // FNV-1a over the path bytes: cheap, deterministic, and the
+        // coordinator only ever compares keys for equality.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in dir.as_os_str().as_encoded_bytes() {
+            h ^= u64::from(*b);
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        Some(h)
+    }
+}
+
 /// The shared dependency/completion state machine (module docs).
 pub(crate) struct JobTable {
     jobs: HashMap<JobId, Job>,

@@ -459,7 +459,8 @@ fn prop_json_roundtrip() {
 
 use llmapreduce::error::Error;
 use llmapreduce::scheduler::remote::protocol::{
-    Message, WireOutcome, WireWork, PROTOCOL_VERSION,
+    Message, TaskAssign, TaskComplete, WireMode, WireOutcome, WireWork,
+    PROTOCOL_VERSION,
 };
 
 /// Random path-ish / name-ish string exercising every escape class the
@@ -513,15 +514,48 @@ fn random_opt_us(rng: &mut Rng) -> Option<u64> {
     (rng.next_below(2) == 1).then(|| rng.next_below(1 << 40))
 }
 
+/// Independently absent / json / binary wire preference, as advertised
+/// (or not, by pre-PR-10 peers) in registration frames.
+fn random_wire_mode(rng: &mut Rng) -> Option<WireMode> {
+    match rng.next_below(3) {
+        0 => None,
+        1 => Some(WireMode::Json),
+        _ => Some(WireMode::Binary),
+    }
+}
+
+fn random_outcome(rng: &mut Rng) -> WireOutcome {
+    WireOutcome {
+        startup_us: rng.next_below(1 << 40),
+        compute_us: rng.next_below(1 << 40),
+        launches: rng.range(0, 100_000),
+        items: rng.range(0, 100_000),
+        recv_us: random_opt_us(rng),
+        exec_start_us: random_opt_us(rng),
+        exec_end_us: random_opt_us(rng),
+    }
+}
+
+fn random_assign(rng: &mut Rng) -> TaskAssign {
+    TaskAssign {
+        job: rng.next_below(1 << 40),
+        task_idx: rng.range(0, 100_000),
+        task_id: rng.range(0, 100_000),
+        work: random_wire_work(rng),
+    }
+}
+
 fn random_message(rng: &mut Rng) -> Message {
-    match rng.next_below(8) {
+    match rng.next_below(11) {
         0 => Message::Register {
             name: random_wire_string(rng),
             slots: rng.range(0, 1 << 20),
             version: PROTOCOL_VERSION,
+            wire: random_wire_mode(rng),
         },
         1 => Message::Registered {
             worker_id: rng.next_below(1 << 40),
+            wire: random_wire_mode(rng),
         },
         2 => Message::Heartbeat {
             worker_id: rng.next_below(1 << 40),
@@ -537,15 +571,7 @@ fn random_message(rng: &mut Rng) -> Message {
         4 => Message::Complete {
             job: rng.next_below(1 << 40),
             task_idx: rng.range(0, 100_000),
-            outcome: WireOutcome {
-                startup_us: rng.next_below(1 << 40),
-                compute_us: rng.next_below(1 << 40),
-                launches: rng.range(0, 100_000),
-                items: rng.range(0, 100_000),
-                recv_us: random_opt_us(rng),
-                exec_start_us: random_opt_us(rng),
-                exec_end_us: random_opt_us(rng),
-            },
+            outcome: random_outcome(rng),
         },
         5 => Message::Failed {
             job: rng.next_below(1 << 40),
@@ -554,6 +580,24 @@ fn random_message(rng: &mut Rng) -> Message {
         },
         6 => Message::HeartbeatAck {
             echo_us: rng.next_below(1 << 40),
+        },
+        7 => Message::AssignBatch {
+            tasks: (0..rng.range(0, 5))
+                .map(|_| random_assign(rng))
+                .collect(),
+        },
+        8 => Message::CompleteBatch {
+            done: (0..rng.range(0, 5))
+                .map(|_| TaskComplete {
+                    job: rng.next_below(1 << 40),
+                    task_idx: rng.range(0, 100_000),
+                    outcome: random_outcome(rng),
+                })
+                .collect(),
+        },
+        9 => Message::Revoke {
+            job: rng.next_below(1 << 40),
+            task_idx: rng.range(0, 100_000),
         },
         _ => Message::Shutdown,
     }
@@ -641,6 +685,122 @@ fn prop_malformed_frames_fail_cleanly() {
                 matches!(e, Error::Format { kind: "wire", .. }),
                 "soup error kind: {e}"
             );
+        }
+    });
+}
+
+/// Satellite invariant (PR 10): the binary codec round-trips every
+/// message bit-identically — and agrees with the JSON codec, which
+/// round-trips the same value (the two framings are interchangeable
+/// encodings of one `Message`, so a fleet can mix them per worker).
+#[test]
+fn prop_binary_frames_roundtrip_and_agree_with_json() {
+    forall("wire-binary-roundtrip", |rng| {
+        let msg = random_message(rng);
+        let bytes = msg.encode_binary();
+        let back = Message::decode_binary(&bytes)
+            .unwrap_or_else(|e| panic!("binary decode failed: {e}"));
+        assert_eq!(back, msg, "binary trip changed the message");
+        let via_json = Message::decode(&msg.encode()).unwrap();
+        assert_eq!(via_json, back, "framings disagree");
+    });
+}
+
+/// Batch frames survive both framings at every size that matters:
+/// empty (a flush that raced to nothing), singleton, and many.
+#[test]
+fn prop_batch_frames_roundtrip_any_size() {
+    forall("wire-batch-sizes", |rng| {
+        for n in [0, 1, rng.range(2, 40)] {
+            let assigns = Message::AssignBatch {
+                tasks: (0..n).map(|_| random_assign(rng)).collect(),
+            };
+            let dones = Message::CompleteBatch {
+                done: (0..n)
+                    .map(|_| TaskComplete {
+                        job: rng.next_below(1 << 40),
+                        task_idx: rng.range(0, 100_000),
+                        outcome: random_outcome(rng),
+                    })
+                    .collect(),
+            };
+            for msg in [assigns, dones] {
+                assert_eq!(Message::decode(&msg.encode()).unwrap(), msg);
+                assert_eq!(
+                    Message::decode_binary(&msg.encode_binary()).unwrap(),
+                    msg
+                );
+            }
+        }
+    });
+}
+
+/// Mangled binary payloads — truncated at any byte, or arbitrary
+/// garbage — must come back as `Error::Format`, never a panic and
+/// never a silently-wrong message.  (The transport layer separately
+/// rejects over-long and truncated *length prefixes*; see the unit
+/// tests in `scheduler::remote::transport`.)
+#[test]
+fn prop_malformed_binary_frames_fail_cleanly() {
+    forall("wire-binary-malformed", |rng| {
+        let bytes = random_message(rng).encode_binary();
+        // Truncate mid-payload (dropping at least one byte).
+        let cut = rng.range(0, bytes.len() - 1);
+        match Message::decode_binary(&bytes[..cut]) {
+            Err(Error::Format { kind: "wire", .. }) => {}
+            Err(other) => panic!("wrong error kind: {other}"),
+            // A prefix that happens to parse must at least not be the
+            // original message grown shorter — the length prefix makes
+            // this unreachable in practice, but never panic here.
+            Ok(m) => panic!("truncated frame decoded as {m:?}"),
+        }
+        // Garbage bytes: random soup never panics, and only ever fails
+        // as a wire-format error.
+        let soup: Vec<u8> = (0..rng.range(1, 64))
+            .map(|_| rng.next_below(256) as u8)
+            .collect();
+        if let Err(e) = Message::decode_binary(&soup) {
+            assert!(
+                matches!(e, Error::Format { kind: "wire", .. }),
+                "soup error kind: {e}"
+            );
+        }
+    });
+}
+
+/// Satellite invariant (PR 10): raw frames captured from a pre-PR-10
+/// peer — registration without a `wire` field, assignments that are
+/// single `assign` lines — decode on a current build exactly as the
+/// legacy protocol meant them: no capability, frame-per-task.
+#[test]
+fn prop_pre_pr10_frames_decode_as_legacy() {
+    forall("wire-pre-pr10", |rng| {
+        let name = format!("w{}", rng.range(0, 1 << 20));
+        let slots = rng.range(1, 64);
+        let line = format!(
+            "{{\"type\":\"register\",\"name\":\"{name}\",\"slots\":{slots},\"version\":{PROTOCOL_VERSION}}}\n",
+        );
+        match Message::decode(&line).unwrap() {
+            Message::Register {
+                name: n,
+                slots: s,
+                wire,
+                ..
+            } => {
+                assert_eq!((n, s), (name.clone(), slots));
+                assert_eq!(wire, None, "legacy register grew a capability");
+            }
+            other => panic!("decoded as {other:?}"),
+        }
+        let wid = rng.next_below(1 << 40);
+        let line =
+            format!("{{\"type\":\"registered\",\"worker_id\":{wid}}}\n");
+        match Message::decode(&line).unwrap() {
+            Message::Registered { worker_id, wire } => {
+                assert_eq!(worker_id, wid);
+                assert_eq!(wire, None);
+            }
+            other => panic!("decoded as {other:?}"),
         }
     });
 }

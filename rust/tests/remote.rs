@@ -378,6 +378,9 @@ fn heartbeat_lapse_triggers_reassignment() {
             name: "zombie".into(),
             slots: 1,
             version: PROTOCOL_VERSION,
+            // Legacy-shaped registration: no wire capability, so the
+            // coordinator must keep speaking frame-per-task line JSON.
+            wire: None,
         })
         .unwrap();
     assert!(matches!(
@@ -583,4 +586,205 @@ fn worker_processes_end_to_end_with_one_killed() {
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// PR 10: wire framing, batch shipping, and work stealing
+// ---------------------------------------------------------------------------
+
+use llmapreduce::scheduler::remote::WireMode;
+
+/// Tentpole acceptance (PR 10): a mixed-version fleet — one worker
+/// behaving like a pre-PR-10 build (no wire capability advertised, so
+/// it must receive one line-JSON frame per task and never a batch or
+/// revoke frame) next to a binary-framing worker — completes a job
+/// byte-identically to a local run, with both workers contributing.
+#[test]
+fn mixed_version_fleet_wordcount_byte_identical() {
+    let root = tmp("mixed");
+    let input = root.join("input");
+    write_corpus(&input, 12);
+
+    let eng = LocalEngine::new(2);
+    let local = run(
+        &wordcount_opts(&input, &root.join("out-local"), 92061)
+            .workdir(&root),
+        &wordcount_apps(),
+        &eng,
+    )
+    .unwrap();
+
+    let coordinator = bind_coordinator(3000);
+    let addr = coordinator.local_addr().to_string();
+    let legacy = {
+        let config = WorkerConfig::new(addr.clone())
+            .name("old-timer")
+            .slots(1)
+            .legacy();
+        std::thread::spawn(move || run_worker(config))
+    };
+    let modern = {
+        let config = WorkerConfig::new(addr)
+            .name("modern")
+            .slots(1)
+            .wire(WireMode::Binary);
+        std::thread::spawn(move || run_worker(config))
+    };
+    coordinator
+        .wait_for_workers(2, Duration::from_secs(10))
+        .unwrap();
+
+    let remote = run(
+        &wordcount_opts(&input, &root.join("out-remote"), 92062)
+            .workdir(&root),
+        &wordcount_apps(),
+        &coordinator,
+    )
+    .unwrap();
+
+    assert_eq!(
+        fs::read(local.redout_path.as_ref().unwrap()).unwrap(),
+        fs::read(remote.redout_path.as_ref().unwrap()).unwrap(),
+        "mixed-version fleet must produce byte-identical output"
+    );
+    let names: std::collections::HashSet<_> = remote
+        .map
+        .tasks
+        .iter()
+        .map(|t| t.worker.clone().unwrap())
+        .collect();
+    assert!(
+        names.contains("old-timer") && names.contains("modern"),
+        "both protocol generations completed work: {names:?}"
+    );
+    drop(coordinator);
+    legacy.join().unwrap().unwrap();
+    modern.join().unwrap().unwrap();
+}
+
+/// Batched binary framing end to end: a fleet that negotiated binary
+/// frames and batch shipping produces output byte-identical to local,
+/// and the steal/overcommit machinery never books a reassignment (a
+/// stolen task is a move, not a failure).
+#[test]
+fn binary_batched_fleet_wordcount_byte_identical() {
+    let root = tmp("binwire");
+    let input = root.join("input");
+    write_corpus(&input, 10);
+
+    let eng = LocalEngine::new(2);
+    let local = run(
+        &wordcount_opts(&input, &root.join("out-local"), 92071)
+            .np(8)
+            .workdir(&root),
+        &wordcount_apps(),
+        &eng,
+    )
+    .unwrap();
+
+    let coordinator = bind_coordinator(3000);
+    let addr = coordinator.local_addr().to_string();
+    let workers: Vec<_> = (0..2)
+        .map(|i| {
+            let config = WorkerConfig::new(addr.clone())
+                .name(format!("bw{i}"))
+                .slots(1)
+                .wire(WireMode::Binary);
+            std::thread::spawn(move || run_worker(config))
+        })
+        .collect();
+    coordinator
+        .wait_for_workers(2, Duration::from_secs(10))
+        .unwrap();
+
+    let remote = run(
+        &wordcount_opts(&input, &root.join("out-remote"), 92072)
+            .np(8)
+            .workdir(&root),
+        &wordcount_apps(),
+        &coordinator,
+    )
+    .unwrap();
+
+    assert_eq!(
+        fs::read(local.redout_path.as_ref().unwrap()).unwrap(),
+        fs::read(remote.redout_path.as_ref().unwrap()).unwrap(),
+        "binary-framed fleet must produce byte-identical output"
+    );
+    for t in &remote.map.tasks {
+        assert_eq!(t.reassigned, 0, "steals are moves, not failures");
+    }
+    drop(coordinator);
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+}
+
+/// Work stealing: submit a backlog to a lone worker, then attach a
+/// second one.  The latecomer's registration finds the central queue
+/// empty and pulls queued-but-unstarted tasks out of the first
+/// worker's backlog (each revoked from the victim), so both workers
+/// contribute — and no task books a reassignment, because a steal is
+/// a move, not a death.
+#[test]
+fn idle_worker_steals_from_a_backlogged_peer() {
+    let coordinator = bind_coordinator(3000);
+    let addr = coordinator.local_addr().to_string();
+    let first = {
+        let config = WorkerConfig::new(addr.clone())
+            .name("busy")
+            .slots(1)
+            .wire(WireMode::Binary);
+        std::thread::spawn(move || run_worker(config))
+    };
+    coordinator
+        .wait_for_workers(1, Duration::from_secs(10))
+        .unwrap();
+
+    // Eight ~100ms tasks: batch shipping overcommits all of them onto
+    // the lone worker, which works through the backlog one at a time.
+    let tasks: Vec<TaskSpec> = (0..8)
+        .map(|i| TaskSpec {
+            task_id: i + 1,
+            work: TaskWork::Synthetic {
+                startup: Duration::from_millis(10),
+                per_item: Duration::from_millis(45),
+                items: 2,
+                launches: 1,
+            },
+        })
+        .collect();
+    let id = coordinator.submit(JobSpec::new("backlog", tasks)).unwrap();
+
+    // Now attach the thief; its registration triggers a placement
+    // round that finds the ready queue dry and steals from the busy
+    // worker's backlog (still ~700ms deep at this point).
+    let thief = {
+        let config = WorkerConfig::new(addr)
+            .name("thief")
+            .slots(1)
+            .wire(WireMode::Binary);
+        std::thread::spawn(move || run_worker(config))
+    };
+    coordinator
+        .wait_for_workers(2, Duration::from_secs(10))
+        .unwrap();
+
+    let report = coordinator.wait(id).unwrap();
+    assert_eq!(report.tasks.len(), 8);
+    let names: std::collections::HashSet<_> = report
+        .tasks
+        .iter()
+        .map(|t| t.worker.clone().unwrap())
+        .collect();
+    assert!(
+        names.contains("thief"),
+        "latecomer must have stolen work: {names:?}"
+    );
+    for t in &report.tasks {
+        assert_eq!(t.reassigned, 0, "steals must not book reassignments");
+    }
+    drop(coordinator);
+    first.join().unwrap().unwrap();
+    thief.join().unwrap().unwrap();
 }
